@@ -1,0 +1,144 @@
+//! Plug-and-play scheduling: implement your own scheduler against the
+//! `Scheduler` trait and run it inside the framework — "the framework
+//! enables a plug-and-play interface ... developers can implement their
+//! own algorithms and integrate them easily" (paper §2).
+//!
+//! The example implements a *queue-aware MET* hybrid: pick the fastest
+//! class, but spill to the second-fastest class whenever the fastest
+//! one's shortest queue exceeds a threshold.
+//!
+//! ```sh
+//! cargo run --release --example custom_scheduler
+//! ```
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sched::{Assignment, ReadyTask, SchedContext, Scheduler};
+use ds3r::sim::Simulation;
+use ds3r::util::plot;
+
+/// MET that spills to slower classes when the fast class queues up.
+struct SpillingMet {
+    spill_threshold: usize,
+    spills: u64,
+}
+
+impl Scheduler for SpillingMet {
+    fn name(&self) -> &str {
+        "spilling-met"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        let mut out = Vec::with_capacity(ready.len());
+        let mut queue_len: Vec<usize> =
+            ctx.pes().iter().map(|p| p.queue_len).collect();
+        for rt in ready {
+            // Rank supporting PEs by (exec, queue length).
+            let mut cands: Vec<(f64, usize, usize)> = ctx
+                .pes()
+                .iter()
+                .filter_map(|p| {
+                    ctx.exec_us(rt, p.id)
+                        .map(|e| (e, queue_len[p.id], p.id))
+                })
+                .collect();
+            if cands.is_empty() {
+                continue;
+            }
+            cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let fastest = cands[0].0;
+            // Shortest queue among fastest-class PEs.
+            let best_fast = cands
+                .iter()
+                .filter(|c| c.0 == fastest)
+                .min_by_key(|c| c.1)
+                .copied()
+                .unwrap();
+            let pick = if best_fast.1 > self.spill_threshold {
+                // Spill: best finish-ish among remaining classes.
+                self.spills += 1;
+                cands
+                    .iter()
+                    .copied()
+                    .min_by(|a, b| {
+                        let fa = a.0 * (a.1 as f64 + 1.0);
+                        let fb = b.0 * (b.1 as f64 + 1.0);
+                        fa.partial_cmp(&fb).unwrap()
+                    })
+                    .unwrap()
+            } else {
+                best_fast
+            };
+            queue_len[pick.2] += 1;
+            out.push(Assignment { job: rt.job, task: rt.task, pe: pick.2 });
+        }
+        out
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!("spilling-met: {} spills", self.spills)]
+    }
+}
+
+fn main() {
+    let platform = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+
+    println!("custom scheduler vs built-ins at 6 jobs/ms:\n");
+    let mut rows = Vec::new();
+
+    // Built-ins through the registry...
+    for name in ["met", "etf"] {
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = name.into();
+        cfg.injection_rate_per_ms = 6.0;
+        cfg.max_jobs = 600;
+        cfg.warmup_jobs = 60;
+        cfg.max_sim_us = 4_000_000.0;
+        let r = Simulation::build(&platform, &apps, &cfg).unwrap().run();
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}", r.avg_job_latency_us()),
+            format!("{:.1}", r.latency_summary().p95),
+        ]);
+    }
+
+    // ...and the custom one through the plug-in hook.
+    let mut cfg = SimConfig::default();
+    cfg.injection_rate_per_ms = 6.0;
+    cfg.max_jobs = 600;
+    cfg.warmup_jobs = 60;
+    cfg.max_sim_us = 4_000_000.0;
+    let custom = SpillingMet { spill_threshold: 2, spills: 0 };
+    let r = Simulation::build_with_scheduler(
+        &platform,
+        &apps,
+        &cfg,
+        Box::new(custom),
+    )
+    .unwrap()
+    .run();
+    rows.push(vec![
+        "spilling-met (custom)".into(),
+        format!("{:.1}", r.avg_job_latency_us()),
+        format!("{:.1}", r.latency_summary().p95),
+    ]);
+    for line in &r.scheduler_report {
+        println!("  {line}");
+    }
+
+    println!(
+        "{}",
+        plot::ascii_table(&["scheduler", "avg us", "p95 us"], &rows)
+    );
+    println!(
+        "The custom hybrid fixes MET's instance pinning while keeping\n\
+         its O(1) decision cost — implemented entirely outside the\n\
+         framework through the Scheduler trait."
+    );
+}

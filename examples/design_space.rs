@@ -1,0 +1,132 @@
+//! DSSoC design-space exploration: sweep the accelerator provisioning of
+//! the SoC (how many FFT engines? how many scrambler engines?) under a
+//! mixed wireless workload — the paper's headline use case: "rapid ...
+//! exploration of DSSoCs" / "sweeping the configuration space to
+//! determine the most suitable scheduling algorithm for a given SoC
+//! architecture".
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::{
+    Cluster, NocParams, Pe, Platform, ThermalFloorplan,
+};
+use ds3r::sim::Simulation;
+use ds3r::util::plot;
+
+/// Build a Table-2-style SoC with a configurable accelerator mix.
+fn custom_soc(n_fft: usize, n_scr: usize) -> Platform {
+    let base = Platform::table2_soc();
+    let classes = base.classes.clone();
+    let fp = ThermalFloorplan {
+        node_names: base.floorplan.node_names.clone(),
+        capacitance: base.floorplan.capacitance.clone(),
+        g_amb: base.floorplan.g_amb.clone(),
+        couplings: base.floorplan.couplings.clone(),
+    };
+    // Lay PEs on a mesh big enough for the largest config.
+    let mesh = NocParams { mesh_x: 6, mesh_y: 4, ..NocParams::default() };
+    let mut pes = Vec::new();
+    let mut clusters = Vec::new();
+    let mut place = |name: &str,
+                     class: usize,
+                     node: usize,
+                     count: usize,
+                     row: usize,
+                     pes: &mut Vec<Pe>,
+                     clusters: &mut Vec<Cluster>| {
+        let id = clusters.len();
+        let mut pe_ids = Vec::new();
+        for i in 0..count {
+            let pe_id = pes.len();
+            pes.push(Pe {
+                id: pe_id,
+                class,
+                cluster: id,
+                name: format!("{name}-{i}"),
+                x: i % 6,
+                y: row - i / 6, // wrap to the row below if > 6 wide
+            });
+            pe_ids.push(pe_id);
+        }
+        clusters.push(Cluster {
+            id,
+            name: name.into(),
+            class,
+            pe_ids,
+            thermal_node: node,
+        });
+    };
+    place("A15", 0, 0, 4, 3, &mut pes, &mut clusters);
+    place("A7", 1, 1, 4, 2, &mut pes, &mut clusters);
+    place("ACC_SCR", 2, 2, n_scr, 1, &mut pes, &mut clusters);
+    place("ACC_FFT", 3, 3, n_fft, 0, &mut pes, &mut clusters);
+    Platform::new(
+        format!("dse-{n_fft}fft-{n_scr}scr"),
+        classes,
+        pes,
+        clusters,
+        mesh,
+        fp,
+    )
+    .expect("custom SoC valid")
+}
+
+fn main() {
+    let apps = vec![
+        suite::wifi_tx(WifiParams::default()),
+        suite::wifi_rx(WifiParams { symbols: 4 }),
+    ];
+
+    println!("Design-space exploration: FFT-engine provisioning under a");
+    println!("WiFi TX+RX mix at 4 jobs/ms (ETF scheduler)\n");
+
+    let mut rows = Vec::new();
+    let mut latency = plot::Series::new("avg latency us");
+    for n_fft in [1, 2, 3, 4, 6] {
+        let platform = custom_soc(n_fft, 2);
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = "etf".into();
+        cfg.injection_rate_per_ms = 4.0;
+        cfg.max_jobs = 600;
+        cfg.warmup_jobs = 60;
+        cfg.max_sim_us = 4_000_000.0;
+        let r = Simulation::build(&platform, &apps, &cfg)
+            .expect("valid")
+            .run();
+        rows.push(vec![
+            format!("{n_fft}"),
+            format!("{:.1}", r.avg_job_latency_us()),
+            format!("{:.3}", r.throughput_jobs_per_ms()),
+            format!("{:.2}", r.energy_per_job_mj()),
+            format!("{:.1}", r.peak_temp_c),
+        ]);
+        latency.push(n_fft as f64, r.avg_job_latency_us());
+    }
+    println!(
+        "{}",
+        plot::ascii_table(
+            &["# FFT acc", "avg us", "thru/ms", "mJ/job", "peak C"],
+            &rows
+        )
+    );
+    println!(
+        "{}",
+        plot::ascii_chart(
+            "latency vs FFT-engine count",
+            "# FFT engines",
+            "us",
+            &[latency],
+            60,
+            14
+        )
+    );
+    println!(
+        "The knee identifies the smallest accelerator budget that meets\n\
+         the latency target — the DSSoC provisioning decision the paper's\n\
+         framework is built to answer."
+    );
+}

@@ -1,0 +1,113 @@
+//! DTPM design-space exploration: compare DVFS governors and thermal
+//! policies on a radar workload, reporting the latency / energy /
+//! temperature trade-off — the framework capability the paper motivates
+//! beyond scheduling ("evaluating both scheduling and dynamic
+//! thermal-power management algorithms").
+//!
+//! Set `DS3R_ARTIFACTS` (or run from the repo root after
+//! `make artifacts`) to step the thermal model through the AOT
+//! JAX/Pallas artifact via PJRT; otherwise the native path is used.
+//!
+//! ```sh
+//! cargo run --release --example dtpm_exploration
+//! ```
+
+use ds3r::app::suite::{self, RadarParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+use ds3r::util::plot;
+
+fn main() {
+    let platform = Platform::table2_soc();
+    let apps = vec![
+        suite::pulse_doppler(RadarParams::default()),
+        suite::range_detection(RadarParams::default()),
+    ];
+
+    let use_xla = ds3r::runtime::artifacts_available(
+        &ds3r::runtime::default_artifacts_dir(),
+    );
+    if use_xla {
+        println!("thermal model: AOT JAX/Pallas artifact via PJRT\n");
+    } else {
+        println!("thermal model: native rust path (run `make artifacts` \
+                  to use the PJRT artifact)\n");
+    }
+
+    let mut rows = Vec::new();
+    for (governor, throttle) in [
+        ("performance", false),
+        ("performance", true),
+        ("ondemand", false),
+        ("ondemand", true),
+        ("powersave", false),
+    ] {
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = "etf".into();
+        cfg.injection_rate_per_ms = 1.2;
+        cfg.max_jobs = 800;
+        cfg.warmup_jobs = 80;
+        cfg.dtpm.governor = governor.into();
+        cfg.dtpm.thermal_throttle = throttle;
+        cfg.dtpm.throttle_temp_c = 70.0;
+        cfg.capture_traces = true;
+        cfg.use_xla_thermal = use_xla;
+
+        let r = Simulation::build(&platform, &apps, &cfg)
+            .expect("valid config")
+            .run();
+        rows.push(vec![
+            format!(
+                "{governor}{}",
+                if throttle { "+throttle@70C" } else { "" }
+            ),
+            format!("{:.1}", r.avg_job_latency_us()),
+            format!("{:.2}", r.avg_power_w),
+            format!("{:.2}", r.energy_per_job_mj()),
+            format!("{:.1}", r.peak_temp_c),
+            format!("{}", r.throttle_engagements),
+        ]);
+    }
+    println!(
+        "{}",
+        plot::ascii_table(
+            &[
+                "policy",
+                "avg latency us",
+                "avg power W",
+                "mJ/job",
+                "peak temp C",
+                "throttles"
+            ],
+            &rows
+        )
+    );
+
+    // Temperature trace for the ondemand run (illustrates the RC model).
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = "etf".into();
+    cfg.injection_rate_per_ms = 1.2;
+    cfg.max_jobs = 400;
+    cfg.warmup_jobs = 0;
+    cfg.dtpm.governor = "ondemand".into();
+    cfg.capture_traces = true;
+    let r = Simulation::build(&platform, &apps, &cfg).unwrap().run();
+    let mut big = plot::Series::new("big-cluster C");
+    let mut mhz = plot::Series::new("big MHz/100");
+    for tr in &r.trace {
+        big.push(tr.t_us / 1000.0, tr.temps_c[0]);
+        mhz.push(tr.t_us / 1000.0, tr.cluster_mhz[0] / 100.0);
+    }
+    println!(
+        "{}",
+        plot::ascii_chart(
+            "ondemand: big-cluster temperature + frequency over time",
+            "ms",
+            "C / (MHz/100)",
+            &[big, mhz],
+            72,
+            16
+        )
+    );
+}

@@ -1,0 +1,33 @@
+//! Export the built-in Table-2 platform and a Figure-3 experiment point
+//! as JSON config files (written to `configs/`): the starting point for
+//! defining your own DSSoC candidates without recompiling.
+//!
+//! ```sh
+//! cargo run --release --example export_configs
+//! ds3r run --platform configs/table2_platform.json \
+//!          --config configs/fig3_point.json
+//! ```
+
+fn main() {
+    std::fs::create_dir_all("configs").expect("mkdir configs");
+
+    let p = ds3r::platform::Platform::table2_soc();
+    std::fs::write(
+        "configs/table2_platform.json",
+        p.to_json().to_string_pretty(),
+    )
+    .expect("write platform");
+
+    let mut cfg = ds3r::config::SimConfig::default();
+    cfg.scheduler = "etf".into();
+    cfg.injection_rate_per_ms = 5.0;
+    cfg.max_jobs = 1000;
+    cfg.warmup_jobs = 100;
+    cfg.dtpm.governor = "ondemand".into();
+    cfg.save(std::path::Path::new("configs/fig3_point.json"))
+        .expect("write experiment config");
+
+    println!(
+        "wrote configs/table2_platform.json and configs/fig3_point.json"
+    );
+}

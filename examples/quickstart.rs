@@ -1,0 +1,40 @@
+//! Quickstart: simulate WiFi-TX jobs on the paper's Table-2 SoC and
+//! print the standard report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+
+fn main() {
+    // 1. A platform from the resource database: 4x A15 + 4x A7 +
+    //    2x scrambler accelerator + 4x FFT accelerator (paper Table 2).
+    let platform = Platform::table2_soc();
+
+    // 2. A workload: the WiFi transmitter of Figure 2, profiled with the
+    //    Table-1 execution times.
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+
+    // 3. Simulation parameters: ETF scheduler, Poisson arrivals at
+    //    3 jobs/ms, 1000 jobs.
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = "etf".into();
+    cfg.injection_rate_per_ms = 3.0;
+    cfg.max_jobs = 1000;
+    cfg.warmup_jobs = 100;
+    cfg.capture_gantt = true;
+
+    // 4. Run and report.
+    let report = Simulation::build(&platform, &apps, &cfg)
+        .expect("valid configuration")
+        .run();
+    println!("{}", report.summary());
+    println!(
+        "{}",
+        report.gantt_ascii(&platform, &apps, (0.0, 1500.0), 100)
+    );
+}

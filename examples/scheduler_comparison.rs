@@ -1,0 +1,67 @@
+//! Scheduler comparison — the paper's Figure-3 experiment as a library
+//! program: sweep MET / ETF / ILP-table (plus HEFT as an extension)
+//! across job injection rates and plot average job execution time.
+//!
+//! ```sh
+//! cargo run --release --example scheduler_comparison
+//! ```
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::coordinator::{self};
+use ds3r::platform::Platform;
+use ds3r::util::plot;
+
+fn main() {
+    let platform = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+
+    let mut base = SimConfig::default();
+    base.max_jobs = 600;
+    base.warmup_jobs = 60;
+    base.max_sim_us = 5_000_000.0;
+
+    let schedulers = ["met", "etf", "ilp", "heft"];
+    let rates: Vec<f64> =
+        (1..=10).map(|r| r as f64).collect();
+    let points =
+        coordinator::fig3_points(&schedulers, &rates, base.seed);
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let results =
+        coordinator::run_sweep(&platform, &apps, &base, &points, threads)
+            .expect("sweep runs");
+
+    let mut rows = Vec::new();
+    for r in &results {
+        rows.push(vec![
+            r.point.scheduler.clone(),
+            format!("{:.0}", r.point.rate_per_ms),
+            format!("{:.1}", r.avg_latency_us),
+            format!("{:.1}", r.p95_latency_us),
+            format!("{:.2}", r.energy_per_job_mj),
+        ]);
+    }
+    println!(
+        "{}",
+        plot::ascii_table(
+            &["scheduler", "jobs/ms", "avg us", "p95 us", "mJ/job"],
+            &rows
+        )
+    );
+    let series = coordinator::latency_series(&results);
+    println!(
+        "{}",
+        plot::ascii_chart(
+            "Figure 3: avg job execution time vs injection rate",
+            "jobs/ms",
+            "us",
+            &series,
+            72,
+            22
+        )
+    );
+    println!("{}", ds3r::cli::fig3_shape_analysis(&results, &rates));
+}

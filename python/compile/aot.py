@@ -1,0 +1,168 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the HLO text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  dtpm_step.hlo.txt   the batched power/thermal epoch update
+  etf_matrix.hlo.txt  the ETF finish-time matrix
+  manifest.json       shapes + sha256 of each artifact (rust sanity-checks
+                      at load time so a stale artifact fails loudly)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.etf import I, J
+from compile.kernels.thermal import K, N, P
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_dtpm_step() -> str:
+    args = (
+        f32(K, N),            # t
+        f32(N, N),            # a
+        f32(N, P),            # b
+        f32(K, P),            # pd
+        f32(K, P),            # v
+        f32(1, P),            # k1
+        f32(1, P),            # k2
+        f32(P, N),            # pe_node
+    )
+    return to_hlo_text(jax.jit(model.dtpm_step_model).lower(*args))
+
+
+def lower_etf() -> str:
+    args = (f32(1, J), f32(I, J), f32(I, J))
+    return to_hlo_text(jax.jit(model.etf_model).lower(*args))
+
+
+ARTIFACTS = {
+    "dtpm_step.hlo.txt": (
+        lower_dtpm_step,
+        {"K": K, "N": N, "P": P,
+         "inputs": ["t[K,N]", "a[N,N]", "b[N,P]", "pd[K,P]", "v[K,P]",
+                    "k1[1,P]", "k2[1,P]", "pe_node[P,N]"],
+         "outputs": ["t_next[K,N]", "p_leak[K,P]", "p_total[K,P]",
+                     "p_sum[K,1]"]},
+    ),
+    "etf_matrix.hlo.txt": (
+        lower_etf,
+        {"I": I, "J": J,
+         "inputs": ["avail[1,J]", "ready[I,J]", "exec[I,J]"],
+         "outputs": ["finish[I,J]", "best_pe[I,1]", "best_finish[I,1]"]},
+    ),
+}
+
+
+def write_goldens(out_dir: str) -> None:
+    """Deterministic input/output vectors for the rust runtime tests.
+
+    rust/tests/integration_runtime.rs executes the HLO artifacts via the
+    xla crate and asserts bit-close agreement with these values, which are
+    computed by the pure-jnp oracle (kernels/ref.py) — closing the
+    python->HLO->rust loop end to end.
+    """
+    import numpy as np
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(42)
+
+    # --- dtpm_step golden ---
+    t = rng.uniform(0, 60, (K, N)).astype(np.float32)
+    a = (np.eye(N) * 0.95 + rng.uniform(0, 0.05 / N, (N, N))).astype(
+        np.float32)
+    b = rng.uniform(0, 0.1, (N, P)).astype(np.float32)
+    pd = rng.uniform(0, 3, (K, P)).astype(np.float32)
+    v = rng.uniform(0.9, 1.3, (K, P)).astype(np.float32)
+    k1 = rng.uniform(0.01, 0.1, (1, P)).astype(np.float32)
+    k2 = rng.uniform(0.005, 0.02, (1, P)).astype(np.float32)
+    pe_node = np.zeros((P, N), np.float32)
+    for p in range(P):
+        pe_node[p, rng.integers(0, N)] = 1.0
+    t_next, p_leak, p_tot = ref.dtpm_step_ref(t, a, b, pd, v, k1, k2,
+                                              pe_node)
+    t_next = np.clip(np.asarray(t_next), 0.0, 105.0)
+    p_sum = np.asarray(p_tot).sum(axis=1, keepdims=True)
+    golden = {
+        "inputs": {kk: vv.flatten().tolist() for kk, vv in
+                   [("t", t), ("a", a), ("b", b), ("pd", pd), ("v", v),
+                    ("k1", k1), ("k2", k2), ("pe_node", pe_node)]},
+        "outputs": {"t_next": np.asarray(t_next).flatten().tolist(),
+                    "p_leak": np.asarray(p_leak).flatten().tolist(),
+                    "p_total": np.asarray(p_tot).flatten().tolist(),
+                    "p_sum": p_sum.flatten().tolist()},
+    }
+    with open(os.path.join(out_dir, "golden_dtpm.json"), "w") as f:
+        json.dump(golden, f)
+
+    # --- etf golden ---
+    avail = rng.uniform(0, 1e4, (1, J)).astype(np.float32)
+    ready = rng.uniform(0, 1e4, (I, J)).astype(np.float32)
+    exe = rng.uniform(1, 500, (I, J)).astype(np.float32)
+    exe[40:, :] = 1e30  # rust pads with a large finite sentinel, not inf,
+    exe[:, 14:] = 1e30  # to keep the JSON portable
+    fin, best_pe, best_fin = ref.etf_matrix_ref(avail, ready, exe)
+    golden = {
+        "inputs": {kk: vv.flatten().tolist() for kk, vv in
+                   [("avail", avail), ("ready", ready), ("exec", exe)]},
+        "outputs": {"finish": np.asarray(fin).flatten().tolist(),
+                    "best_pe": np.asarray(best_pe).flatten().tolist(),
+                    "best_finish": np.asarray(best_fin).flatten().tolist()},
+    }
+    with open(os.path.join(out_dir, "golden_etf.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"wrote goldens to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (lower_fn, meta) in ARTIFACTS.items():
+        text = lower_fn()
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()
+        manifest[name] = dict(meta, sha256=digest, bytes=len(text))
+        print(f"wrote {path}: {len(text)} chars sha256={digest[:12]}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+    write_goldens(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: ETF earliest-finish-time matrix.
+
+The ETF scheduler (Blythe et al., the paper's best performer in Fig. 3)
+evaluates, for every (ready task i, PE j) pair,
+
+    finish[i, j] = max(avail[j], ready[i, j]) + exec[i, j]
+
+and picks the global minimum.  For large ready lists this I×J sweep is the
+scheduling hot-spot; DS3R offers an XLA-accelerated variant (`etf-xla`)
+that evaluates the whole matrix plus the per-task argmin reduction in one
+AOT-compiled call.
+
+Fixed AOT contract (DESIGN.md §5): I = 64 ready-task slots, J = 16 PE
+slots; rust pads unsupported (task, PE) pairs with +inf exec so they never
+win the argmin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I = 64  # max ready tasks per scheduler invocation (padded)
+J = 16  # max PEs (padded; Table-2 platform uses 14)
+
+
+def _etf_kernel(avail_ref, ready_ref, exec_ref, fin_ref, best_pe_ref,
+                best_fin_ref):
+    avail = avail_ref[...]          # [1, J]
+    ready = ready_ref[...]          # [I, J]
+    exe = exec_ref[...]             # [I, J]
+
+    fin = jnp.maximum(avail, ready) + exe          # [I, J] broadcast on rows
+    fin_ref[...] = fin
+
+    # Per-task argmin over PEs. Keep everything 2-D: Mosaic vectorizes
+    # lane-dimension reductions; iota over the lane dim gives the index.
+    best = jnp.min(fin, axis=1, keepdims=True)                    # [I, 1]
+    idx = jax.lax.broadcasted_iota(jnp.float32, (I, J), 1)        # [I, J]
+    # First PE achieving the min (ties -> lowest index, matching rust ETF).
+    masked = jnp.where(fin <= best, idx, jnp.float32(J))
+    best_pe_ref[...] = jnp.min(masked, axis=1, keepdims=True)     # [I, 1]
+    best_fin_ref[...] = best
+
+
+@functools.partial(jax.jit, static_argnames=())
+def etf_matrix(avail, ready, exec_):
+    """Earliest-finish-time matrix + per-task best PE.
+
+    Args:
+      avail: [1, J] earliest time each PE becomes free (µs).
+      ready: [I, J] time task i's input data is available at PE j (µs).
+      exec_: [I, J] execution latency of task i on PE j (µs; +inf if
+        task i cannot run on PE j).
+
+    Returns:
+      (finish [I, J], best_pe [I, 1] (f32 index), best_finish [I, 1])
+    """
+    out_shapes = (
+        jax.ShapeDtypeStruct((I, J), jnp.float32),
+        jax.ShapeDtypeStruct((I, 1), jnp.float32),
+        jax.ShapeDtypeStruct((I, 1), jnp.float32),
+    )
+    return pl.pallas_call(
+        _etf_kernel,
+        out_shape=out_shapes,
+        interpret=True,
+    )(avail, ready, exec_)

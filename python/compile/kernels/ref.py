@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+These are the straight-line definitions of the math, with no Pallas, no
+blocking, no fusion tricks.  pytest (python/tests/) asserts the kernels
+match these to float32 tolerance across shape/value sweeps (hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dtpm_step_ref(t, a, b, pd, v, k1, k2, pe_node):
+    """Reference batched DTPM thermal/power step. See thermal.dtpm_step."""
+    t_pe = t @ pe_node.T
+    p_leak = k1 * v * jnp.exp(k2 * t_pe)
+    p_tot = pd + p_leak
+    t_next = t @ a.T + p_tot @ b.T
+    return t_next, p_leak, p_tot
+
+
+def etf_matrix_ref(avail, ready, exec_):
+    """Reference ETF finish-time matrix. See etf.etf_matrix."""
+    fin = jnp.maximum(avail, ready) + exec_
+    best = jnp.min(fin, axis=1, keepdims=True)
+    j = fin.shape[1]
+    idx = jnp.broadcast_to(jnp.arange(j, dtype=jnp.float32), fin.shape)
+    masked = jnp.where(fin <= best, idx, jnp.float32(j))
+    best_pe = jnp.min(masked, axis=1, keepdims=True)
+    return fin, best_pe, best

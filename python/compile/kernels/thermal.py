@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: batched RC thermal-network step for DTPM exploration.
+
+The DS3R framework advances an RC thermal network every DTPM epoch and,
+during design-space exploration, evaluates K candidate DVFS settings at
+once.  The hot-spot is the batched affine state update
+
+    T_next = T @ A^T + P @ B^T
+
+with a temperature-dependent leakage correction folded into P:
+
+    P_leak[k, p] = k1[p] * V[k, p] * exp(k2[p] * T_pe[k, p])
+    P_total      = P_dyn + P_leak
+
+Hardware adaptation (paper targets embedded SoCs, we target TPU-style
+execution; see DESIGN.md §Hardware-Adaptation): the HotSpot-style sparse
+stencil is recast as dense MXU-shaped matmuls over a K-batch so a single
+kernel invocation fills the systolic array instead of K tiny matvecs.
+
+Shapes are the fixed AOT contract (DESIGN.md §5):
+    K = 16 candidate settings, N = 32 thermal nodes, P = 16 PEs.
+All operands fit in VMEM simultaneously (< 24 KiB), so the BlockSpec is
+whole-operand with a single grid step; interpret=True for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT contract dimensions (DESIGN.md §5).
+K = 16  # candidate DVFS settings evaluated per call (batch)
+N = 32  # thermal nodes (padded; real platform uses 18)
+P = 16  # PEs (padded; Table-2 platform uses 14)
+
+
+def _dtpm_kernel(t_ref, a_ref, b_ref, pd_ref, v_ref, k1_ref, k2_ref,
+                 pe_node_ref, t_out_ref, pleak_out_ref, ptot_out_ref):
+    """Fused leakage + power-injection + RC update.
+
+    All refs are whole-operand VMEM blocks.  The two matmuls are the MXU
+    work; the leakage exponential is VPU elementwise work fused in the
+    same kernel so P_total never round-trips through HBM.
+    """
+    t = t_ref[...]                      # [K, N]
+    a = a_ref[...]                      # [N, N]
+    b = b_ref[...]                      # [N, P]
+    pd = pd_ref[...]                    # [K, P]
+    v = v_ref[...]                      # [K, P]
+    k1 = k1_ref[...]                    # [1, P]
+    k2 = k2_ref[...]                    # [1, P]
+    pe_node = pe_node_ref[...]          # [P, N] one-hot: PE -> thermal node
+
+    # Temperature seen by each PE: gather via one-hot matmul (MXU-friendly,
+    # avoids dynamic gather which Mosaic lowers poorly).
+    t_pe = t @ pe_node.T                # [K, P]
+
+    # Leakage: k1 * V * exp(k2 * T) (subthreshold model, [Bhat 2018]).
+    p_leak = k1 * v * jnp.exp(k2 * t_pe)
+    p_tot = pd + p_leak
+
+    # RC state update. A is I + dt*G/C (discretized), B is dt/C injection.
+    t_next = t @ a.T + p_tot @ b.T
+
+    t_out_ref[...] = t_next
+    pleak_out_ref[...] = p_leak
+    ptot_out_ref[...] = p_tot
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dtpm_step(t, a, b, pd, v, k1, k2, pe_node):
+    """Batched DTPM thermal/power step via the Pallas kernel.
+
+    Args:
+      t:  [K, N] node temperatures (°C above ambient).
+      a:  [N, N] discretized thermal system matrix.
+      b:  [N, P] discretized power-injection matrix.
+      pd: [K, P] dynamic power per PE (W).
+      v:  [K, P] PE voltages (V).
+      k1: [1, P] leakage linear coefficient.
+      k2: [1, P] leakage exponential coefficient (1/°C).
+      pe_node: [P, N] one-hot mapping PE -> thermal node.
+
+    Returns:
+      (t_next [K, N], p_leak [K, P], p_total [K, P])
+    """
+    out_shapes = (
+        jax.ShapeDtypeStruct((K, N), jnp.float32),
+        jax.ShapeDtypeStruct((K, P), jnp.float32),
+        jax.ShapeDtypeStruct((K, P), jnp.float32),
+    )
+    # Whole-operand blocks: total VMEM footprint is
+    #   K*N + N*N + N*P + 4*K*P + 2*P + P*N  floats ≈ 5.9 K f32 ≈ 24 KiB,
+    # comfortably inside VMEM; a single grid step keeps the HBM<->VMEM
+    # schedule to one load/store per operand.
+    return pl.pallas_call(
+        _dtpm_kernel,
+        out_shape=out_shapes,
+        interpret=True,  # CPU-PJRT execution path; real TPU would drop this
+    )(t, a, b, pd, v, k1, k2, pe_node)

@@ -1,0 +1,48 @@
+"""L2: JAX compute graphs the rust coordinator executes via PJRT.
+
+Two exported entry points, both jitted and AOT-lowered by aot.py into
+fixed-shape HLO-text artifacts (contracts in DESIGN.md §5):
+
+  * ``dtpm_step_model``  — the per-epoch power/thermal update, batched over
+    K candidate DVFS settings.  Wraps the L1 Pallas kernel
+    (kernels.thermal) and adds the model-level plumbing the framework
+    needs around it: clamping to the physical temperature range and a
+    per-candidate total-power reduction used by the power-cap governor.
+  * ``etf_model``        — the ETF finish-time matrix (kernels.etf).
+
+Python runs ONCE at build time (``make artifacts``); the rust hot loop
+only ever touches the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import etf as etf_kernel
+from compile.kernels import thermal as thermal_kernel
+
+# Physical clamp range for node temperatures, °C above ambient.  The RC
+# discretization is stable for the time steps we use, but a scheduler
+# exploring aggressive DVFS candidates can inject transient power spikes;
+# clamping mirrors what the firmware thermal driver reports.
+T_MIN = 0.0
+T_MAX = 105.0
+
+
+def dtpm_step_model(t, a, b, pd, v, k1, k2, pe_node):
+    """Per-epoch DTPM update over K candidate DVFS settings.
+
+    Returns (t_next [K,N], p_leak [K,P], p_total [K,P], p_sum [K, 1]).
+    ``p_sum`` is the SoC-level power per candidate, consumed by the
+    power-cap governor without a second device round-trip.
+    """
+    t_next, p_leak, p_tot = thermal_kernel.dtpm_step(
+        t, a, b, pd, v, k1, k2, pe_node)
+    t_next = jnp.clip(t_next, T_MIN, T_MAX)
+    p_sum = jnp.sum(p_tot, axis=1, keepdims=True)
+    return t_next, p_leak, p_tot, p_sum
+
+
+def etf_model(avail, ready, exec_):
+    """ETF finish-time matrix + per-task best PE (see kernels.etf)."""
+    return etf_kernel.etf_matrix(avail, ready, exec_)

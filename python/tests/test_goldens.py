@@ -1,0 +1,94 @@
+"""Golden-vector self-consistency: the JSON files the rust integration
+tests consume must round-trip through JSON and agree with the oracle."""
+
+import hashlib
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels import ref
+from compile.kernels.etf import I, J
+from compile.kernels.thermal import K, N, P
+
+
+@pytest.fixture(scope="module")
+def golden_dir():
+    with tempfile.TemporaryDirectory() as d:
+        aot.write_goldens(d)
+        yield d
+
+
+def test_dtpm_golden_matches_oracle(golden_dir):
+    with open(os.path.join(golden_dir, "golden_dtpm.json")) as f:
+        g = json.load(f)
+    ins = {k: np.asarray(v, np.float32) for k, v in g["inputs"].items()}
+    t = ins["t"].reshape(K, N)
+    a = ins["a"].reshape(N, N)
+    b = ins["b"].reshape(N, P)
+    pd = ins["pd"].reshape(K, P)
+    v = ins["v"].reshape(K, P)
+    k1 = ins["k1"].reshape(1, P)
+    k2 = ins["k2"].reshape(1, P)
+    pe_node = ins["pe_node"].reshape(P, N)
+    t_next, p_leak, p_tot = ref.dtpm_step_ref(t, a, b, pd, v, k1, k2,
+                                              pe_node)
+    t_next = np.clip(np.asarray(t_next), 0.0, 105.0)
+    np.testing.assert_allclose(
+        np.asarray(g["outputs"]["t_next"]).reshape(K, N), t_next,
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(g["outputs"]["p_leak"]).reshape(K, P),
+        np.asarray(p_leak), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(g["outputs"]["p_sum"]).reshape(K, 1),
+        np.asarray(p_tot).sum(axis=1, keepdims=True), rtol=1e-5)
+
+
+def test_etf_golden_matches_oracle(golden_dir):
+    with open(os.path.join(golden_dir, "golden_etf.json")) as f:
+        g = json.load(f)
+    avail = np.asarray(g["inputs"]["avail"], np.float32).reshape(1, J)
+    ready = np.asarray(g["inputs"]["ready"], np.float32).reshape(I, J)
+    exe = np.asarray(g["inputs"]["exec"], np.float32).reshape(I, J)
+    fin, best_pe, best_fin = ref.etf_matrix_ref(avail, ready, exe)
+    np.testing.assert_allclose(
+        np.asarray(g["outputs"]["finish"]).reshape(I, J),
+        np.asarray(fin), rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(g["outputs"]["best_pe"]).reshape(I, 1),
+        np.asarray(best_pe))
+
+
+def test_goldens_deterministic(golden_dir):
+    """write_goldens must be reproducible (fixed seed 42)."""
+    with tempfile.TemporaryDirectory() as d2:
+        aot.write_goldens(d2)
+        for name in ["golden_dtpm.json", "golden_etf.json"]:
+            h1 = hashlib.sha256(
+                open(os.path.join(golden_dir, name), "rb").read()
+            ).hexdigest()
+            h2 = hashlib.sha256(
+                open(os.path.join(d2, name), "rb").read()
+            ).hexdigest()
+            assert h1 == h2, f"{name} not deterministic"
+
+
+def test_manifest_digests_match_artifacts():
+    """If artifacts/ exists, its manifest must describe its files."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("run `make artifacts` first")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    for name, meta in manifest.items():
+        path = os.path.join(art, name)
+        assert os.path.exists(path), f"{name} missing"
+        digest = hashlib.sha256(open(path, "rb").read()).hexdigest()
+        assert digest == meta["sha256"], (
+            f"{name} stale: rerun `make artifacts`")
+        assert meta["bytes"] == os.path.getsize(path)

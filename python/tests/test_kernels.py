@@ -1,0 +1,152 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Each Pallas kernel is checked against the pure-jnp reference in
+kernels/ref.py, both on the fixed AOT shapes and under hypothesis-driven
+value sweeps (shapes are fixed by the AOT contract; values, scales, and
+padding patterns are swept).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import etf, ref, thermal
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def make_thermal_inputs(rng, t_scale=50.0, p_scale=3.0):
+    K, N, P = thermal.K, thermal.N, thermal.P
+    t = jnp.asarray(rng.uniform(0, t_scale, (K, N)), jnp.float32)
+    # Discretized stable system matrix: diagonally dominant, spectral
+    # radius < 1 (I - dt*G/C form).
+    a = np.eye(N) * 0.95 + rng.uniform(0, 0.05 / N, (N, N))
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(rng.uniform(0, 0.1, (N, P)), jnp.float32)
+    pd = jnp.asarray(rng.uniform(0, p_scale, (K, P)), jnp.float32)
+    v = jnp.asarray(rng.uniform(0.9, 1.3, (K, P)), jnp.float32)
+    k1 = jnp.asarray(rng.uniform(0.01, 0.1, (1, P)), jnp.float32)
+    k2 = jnp.asarray(rng.uniform(0.005, 0.02, (1, P)), jnp.float32)
+    pe_node = np.zeros((P, N), np.float32)
+    for p in range(P):
+        pe_node[p, rng.integers(0, N)] = 1.0
+    return t, a, b, pd, v, k1, k2, jnp.asarray(pe_node)
+
+
+class TestThermalKernel:
+    def test_matches_ref_fixed_seed(self):
+        rng = np.random.default_rng(0)
+        args = make_thermal_inputs(rng)
+        got = thermal.dtpm_step(*args)
+        want = ref.dtpm_step_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+    def test_output_shapes(self):
+        rng = np.random.default_rng(1)
+        t_next, p_leak, p_tot = thermal.dtpm_step(*make_thermal_inputs(rng))
+        assert t_next.shape == (thermal.K, thermal.N)
+        assert p_leak.shape == (thermal.K, thermal.P)
+        assert p_tot.shape == (thermal.K, thermal.P)
+
+    def test_zero_power_decays(self):
+        """With zero power and contraction A, temperatures must not grow."""
+        rng = np.random.default_rng(2)
+        t, a, b, _, v, k1, k2, pe_node = make_thermal_inputs(rng)
+        zero = jnp.zeros((thermal.K, thermal.P), jnp.float32)
+        t_next, p_leak, p_tot = thermal.dtpm_step(
+            t, a, b, zero, v, jnp.zeros_like(k1), k2, pe_node)
+        assert np.all(np.asarray(p_leak) == 0)
+        assert np.all(np.asarray(p_tot) == 0)
+        assert float(jnp.max(t_next)) <= float(jnp.max(t)) * 1.01
+
+    def test_leakage_monotone_in_temperature(self):
+        """Leakage must increase with temperature (exp model)."""
+        rng = np.random.default_rng(3)
+        t, a, b, pd, v, k1, k2, pe_node = make_thermal_inputs(rng)
+        _, leak_cold, _ = thermal.dtpm_step(
+            jnp.zeros_like(t), a, b, pd, v, k1, k2, pe_node)
+        _, leak_hot, _ = thermal.dtpm_step(
+            jnp.full_like(t, 80.0), a, b, pd, v, k1, k2, pe_node)
+        assert np.all(np.asarray(leak_hot) >= np.asarray(leak_cold))
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                      t_scale=st.floats(0.0, 100.0),
+                      p_scale=st.floats(0.0, 10.0))
+    def test_matches_ref_hypothesis(self, seed, t_scale, p_scale):
+        rng = np.random.default_rng(seed)
+        args = make_thermal_inputs(rng, t_scale, p_scale)
+        got = thermal.dtpm_step(*args)
+        want = ref.dtpm_step_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+def make_etf_inputs(rng, n_valid_tasks=None, n_valid_pes=None):
+    I, J = etf.I, etf.J
+    nv_i = I if n_valid_tasks is None else n_valid_tasks
+    nv_j = J if n_valid_pes is None else n_valid_pes
+    avail = rng.uniform(0, 1e4, (1, J)).astype(np.float32)
+    ready = rng.uniform(0, 1e4, (I, J)).astype(np.float32)
+    exe = rng.uniform(1, 500, (I, J)).astype(np.float32)
+    # Pad unused rows/cols the way rust does: +inf exec.
+    exe[nv_i:, :] = np.inf
+    exe[:, nv_j:] = np.inf
+    return jnp.asarray(avail), jnp.asarray(ready), jnp.asarray(exe)
+
+
+class TestEtfKernel:
+    def test_matches_ref_fixed_seed(self):
+        rng = np.random.default_rng(0)
+        args = make_etf_inputs(rng)
+        got = etf.etf_matrix(*args)
+        want = ref.etf_matrix_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-6)
+
+    def test_argmin_matches_numpy(self):
+        rng = np.random.default_rng(7)
+        avail, ready, exe = make_etf_inputs(rng, n_valid_tasks=20,
+                                            n_valid_pes=14)
+        fin, best_pe, best_fin = etf.etf_matrix(avail, ready, exe)
+        fin_np = np.maximum(np.asarray(avail), np.asarray(ready)) \
+            + np.asarray(exe)
+        # Valid region only (padded rows are all-inf).
+        np.testing.assert_array_equal(
+            np.asarray(best_pe)[:20, 0].astype(int),
+            np.argmin(fin_np[:20], axis=1))
+        np.testing.assert_allclose(
+            np.asarray(best_fin)[:20, 0], np.min(fin_np[:20], axis=1))
+
+    def test_padded_pes_never_selected(self):
+        rng = np.random.default_rng(11)
+        avail, ready, exe = make_etf_inputs(rng, n_valid_pes=14)
+        _, best_pe, _ = etf.etf_matrix(avail, ready, exe)
+        assert np.all(np.asarray(best_pe)[:, 0] < 14)
+
+    def test_tie_break_lowest_index(self):
+        I, J = etf.I, etf.J
+        avail = jnp.zeros((1, J), jnp.float32)
+        ready = jnp.zeros((I, J), jnp.float32)
+        exe = jnp.ones((I, J), jnp.float32)  # all finish times equal
+        _, best_pe, _ = etf.etf_matrix(avail, ready, exe)
+        assert np.all(np.asarray(best_pe) == 0)
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                      nv_i=st.integers(1, 64), nv_j=st.integers(1, 16))
+    def test_matches_ref_hypothesis(self, seed, nv_i, nv_j):
+        rng = np.random.default_rng(seed)
+        args = make_etf_inputs(rng, nv_i, nv_j)
+        got = etf.etf_matrix(*args)
+        want = ref.etf_matrix_ref(*args)
+        for g, w in zip(got, want):
+            g, w = np.asarray(g), np.asarray(w)
+            mask = np.isfinite(w)
+            np.testing.assert_allclose(g[mask], w[mask], rtol=1e-5)
+            assert np.array_equal(np.isinf(g), np.isinf(w))

@@ -1,0 +1,188 @@
+//! Ablation benches for the design decisions called out in DESIGN.md:
+//!
+//! * MET tie-breaking (naive pinning vs least-loaded) — how much of the
+//!   Figure-3 collapse is instance pinning.
+//! * NoC model on/off/congestion — what interconnect awareness buys.
+//! * Serial vs parallel WiFi-TX frame — DAG-width sensitivity.
+//! * Scheduler window (`max_ready`) sizing.
+//! * ETF host vs ETF-XLA (AOT artifact) decision cost.
+//!
+//! Run: `cargo bench --bench ablations`
+
+mod bench_util;
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::app::AppGraph;
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+use ds3r::util::plot;
+
+fn run(
+    platform: &Platform,
+    apps: &[AppGraph],
+    f: impl FnOnce(&mut SimConfig),
+) -> ds3r::stats::SimReport {
+    let mut cfg = SimConfig::default();
+    cfg.max_jobs = 400;
+    cfg.warmup_jobs = 40;
+    cfg.injection_rate_per_ms = 6.0;
+    cfg.max_sim_us = 4_000_000.0;
+    f(&mut cfg);
+    Simulation::build(platform, apps, &cfg).unwrap().run()
+}
+
+fn main() {
+    let platform = Platform::table2_soc();
+    let serial = vec![suite::wifi_tx(WifiParams::default())];
+    let parallel = vec![suite::wifi_tx_parallel(WifiParams::default())];
+
+    // ----- 1. MET tie-breaking -----
+    println!("=== ablation: MET instance tie-breaking (6 jobs/ms) ===");
+    let met = run(&platform, &serial, |c| c.scheduler = "met".into());
+    let met_lb =
+        run(&platform, &serial, |c| c.scheduler = "met-lb".into());
+    let etf = run(&platform, &serial, |c| c.scheduler = "etf".into());
+    println!(
+        "{}",
+        plot::ascii_table(
+            &["variant", "avg us", "p95 us"],
+            &[
+                vec![
+                    "met (paper/DS3: pin to first)".into(),
+                    format!("{:.1}", met.avg_job_latency_us()),
+                    format!("{:.1}", met.latency_summary().p95)
+                ],
+                vec![
+                    "met-lb (least-loaded ties)".into(),
+                    format!("{:.1}", met_lb.avg_job_latency_us()),
+                    format!("{:.1}", met_lb.latency_summary().p95)
+                ],
+                vec![
+                    "etf (reference)".into(),
+                    format!("{:.1}", etf.avg_job_latency_us()),
+                    format!("{:.1}", etf.latency_summary().p95)
+                ],
+            ]
+        )
+    );
+
+    // ----- 2. NoC model -----
+    println!("=== ablation: interconnect model (etf, 6 jobs/ms) ===");
+    let base = run(&platform, &serial, |c| c.scheduler = "etf".into());
+    let congested = run(&platform, &serial, |c| {
+        c.scheduler = "etf".into();
+        c.noc_congestion = true;
+    });
+    let mut free_noc_platform = platform.clone();
+    free_noc_platform.noc.hop_latency_us = 0.0;
+    free_noc_platform.noc.mem_latency_us = 0.0;
+    let free = run(&free_noc_platform, &serial, |c| {
+        c.scheduler = "etf".into()
+    });
+    println!(
+        "{}",
+        plot::ascii_table(
+            &["NoC model", "avg us"],
+            &[
+                vec![
+                    "analytical (default)".into(),
+                    format!("{:.1}", base.avg_job_latency_us())
+                ],
+                vec![
+                    "analytical + congestion".into(),
+                    format!("{:.1}", congested.avg_job_latency_us())
+                ],
+                vec![
+                    "free interconnect".into(),
+                    format!("{:.1}", free.avg_job_latency_us())
+                ],
+            ]
+        )
+    );
+
+    // ----- 3. DAG width -----
+    println!("=== ablation: frame structure (etf) ===");
+    let ser = run(&platform, &serial, |c| c.scheduler = "etf".into());
+    let par = run(&platform, &parallel, |c| c.scheduler = "etf".into());
+    println!(
+        "{}",
+        plot::ascii_table(
+            &["wifi-tx frame", "avg us", "width"],
+            &[
+                vec![
+                    "serial pipeline (paper Fig 2)".into(),
+                    format!("{:.1}", ser.avg_job_latency_us()),
+                    "1".into()
+                ],
+                vec![
+                    "parallel symbol fan-out".into(),
+                    format!("{:.1}", par.avg_job_latency_us()),
+                    format!("{}", WifiParams::default().symbols)
+                ],
+            ]
+        )
+    );
+
+    // ----- 4. scheduler window -----
+    println!("=== ablation: max_ready window (etf, 9 jobs/ms) ===");
+    let mut rows = Vec::new();
+    for w in [4usize, 16, 64, 256] {
+        let r = run(&platform, &serial, |c| {
+            c.scheduler = "etf".into();
+            c.injection_rate_per_ms = 9.0;
+            c.max_ready = w;
+        });
+        rows.push(vec![
+            format!("{w}"),
+            format!("{:.1}", r.avg_job_latency_us()),
+            format!("{:.2}", r.sched_overhead_us()),
+        ]);
+    }
+    println!(
+        "{}",
+        plot::ascii_table(
+            &["window", "avg us", "sched us/epoch"],
+            &rows
+        )
+    );
+
+    // ----- 5. ETF host vs XLA artifact -----
+    println!("=== ablation: ETF host vs AOT-XLA finish matrix ===");
+    let dir = ds3r::runtime::default_artifacts_dir();
+    if ds3r::runtime::artifacts_available(&dir) {
+        let host = run(&platform, &serial, |c| {
+            c.scheduler = "etf".into();
+            c.injection_rate_per_ms = 8.0;
+        });
+        let xla = run(&platform, &serial, |c| {
+            c.scheduler = "etf-xla".into();
+            c.injection_rate_per_ms = 8.0;
+        });
+        println!(
+            "{}",
+            plot::ascii_table(
+                &["variant", "avg us", "sched us/epoch"],
+                &[
+                    vec![
+                        "etf (host)".into(),
+                        format!("{:.1}", host.avg_job_latency_us()),
+                        format!("{:.2}", host.sched_overhead_us())
+                    ],
+                    vec![
+                        "etf-xla (PJRT artifact)".into(),
+                        format!("{:.1}", xla.avg_job_latency_us()),
+                        format!("{:.2}", xla.sched_overhead_us())
+                    ],
+                ]
+            )
+        );
+        println!(
+            "note: at Table-2 scale (14 PEs) the per-call PJRT overhead \
+             dominates;\nthe artifact path pays off only for much wider \
+             ready lists / PE counts\n(see EXPERIMENTS.md §Perf)."
+        );
+    } else {
+        println!("(skipped: run `make artifacts` first)");
+    }
+}

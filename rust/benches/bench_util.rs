@@ -1,0 +1,38 @@
+//! Tiny shared timing harness for the `harness = false` benches (the
+//! offline build has no criterion).  Reports median / mean / min over
+//! repeated runs with a measured-overhead warmup.
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations, returning ns/iter statistics.
+pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    println!(
+        "{name:<48} {median:>12.1} ns/iter   (min {:.1}, max {:.1}, {iters} iters x5)",
+        samples[0],
+        samples[samples.len() - 1]
+    );
+    median
+}
+
+/// Time a single long-running closure, printing seconds.
+pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let s = t0.elapsed().as_secs_f64();
+    println!("{name:<48} {:>12.3} s", s);
+    (out, s)
+}

@@ -1,0 +1,53 @@
+//! Figure 2 bench: regenerates the WiFi-TX application DAG and measures
+//! graph-model operations over the whole benchmark suite (construction,
+//! topological sort, critical-path analysis, JSON round-trip).
+//!
+//! Run: `cargo bench --bench fig2_dag`
+
+mod bench_util;
+
+use ds3r::app::suite::{self, RadarParams, WifiParams};
+use ds3r::app::AppGraph;
+
+fn main() {
+    println!("=== Figure 2 regeneration ===\n");
+    println!("{}", ds3r::cli::reproduce_fig2());
+
+    println!("--- DAG-model microbenchmarks ---");
+    bench_util::bench("wifi_tx build+validate (50 tasks)", 20_000, || {
+        std::hint::black_box(suite::wifi_tx(WifiParams::default()));
+    });
+    bench_util::bench("wifi_rx build+validate (large)", 5_000, || {
+        std::hint::black_box(suite::wifi_rx(WifiParams::default()));
+    });
+    bench_util::bench("pulse_doppler build+validate", 10_000, || {
+        std::hint::black_box(suite::pulse_doppler(RadarParams::default()));
+    });
+
+    let g = suite::wifi_tx(WifiParams::default());
+    bench_util::bench("critical_path_us (50 tasks)", 200_000, || {
+        std::hint::black_box(g.critical_path_us());
+    });
+    bench_util::bench("max_width (50 tasks)", 200_000, || {
+        std::hint::black_box(g.max_width());
+    });
+    let j = g.to_json();
+    bench_util::bench("DAG JSON serialize", 20_000, || {
+        std::hint::black_box(g.to_json());
+    });
+    bench_util::bench("DAG JSON parse+validate", 10_000, || {
+        std::hint::black_box(AppGraph::from_json(&j).unwrap());
+    });
+
+    println!("\n--- suite inventory (all five reference applications) ---");
+    for app in suite::all_default() {
+        println!(
+            "  {:<16} {:>4} tasks  width {:>3}  critical path {:>8.1} us  total work {:>9.1} us",
+            app.name,
+            app.len(),
+            app.max_width(),
+            app.critical_path_us(),
+            app.total_work_us()
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! Figure 3 end-to-end bench: regenerates the paper's scheduling case
+//! study (avg job execution time vs injection rate for MET / ETF /
+//! ILP-table, WiFi-TX workload on the Table-2 SoC) and reports the
+//! simulation cost of every sweep point.
+//!
+//! Run: `cargo bench --bench fig3_schedulers`
+
+mod bench_util;
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::coordinator;
+use ds3r::platform::Platform;
+use ds3r::util::plot;
+
+fn main() {
+    let platform = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut base = SimConfig::default();
+    base.max_jobs = 600;
+    base.warmup_jobs = 60;
+    base.max_sim_us = 5_000_000.0;
+
+    let rates: Vec<f64> = (1..=10).map(|r| r as f64).collect();
+    let scheds = ["met", "etf", "ilp"];
+    println!("=== Figure 3 regeneration bench ===\n");
+
+    let points = coordinator::fig3_points(&scheds, &rates, base.seed);
+    let (results, total_s) = bench_util::bench_once(
+        &format!("fig3 sweep ({} points, parallel)", points.len()),
+        || {
+            coordinator::run_sweep(
+                &platform,
+                &apps,
+                &base,
+                &points,
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4),
+            )
+            .expect("sweep")
+        },
+    );
+    println!(
+        "{:>48} {:>12.1} ms/point\n",
+        "",
+        total_s * 1000.0 / points.len() as f64
+    );
+
+    // The paper's figure.
+    let series = coordinator::latency_series(&results);
+    println!(
+        "{}",
+        plot::ascii_chart(
+            "Figure 3: avg job execution time vs injection rate",
+            "jobs/ms",
+            "us",
+            &series,
+            72,
+            20
+        )
+    );
+    let mut rows = Vec::new();
+    for r in &results {
+        rows.push(vec![
+            r.point.scheduler.clone(),
+            format!("{:.0}", r.point.rate_per_ms),
+            format!("{:.1}", r.avg_latency_us),
+            format!("{:.3}", r.throughput_jobs_per_ms),
+            format!("{:.2}", r.sched_overhead_us),
+        ]);
+    }
+    println!(
+        "{}",
+        plot::ascii_table(
+            &["scheduler", "jobs/ms", "avg us", "thru/ms", "sched us/epoch"],
+            &rows
+        )
+    );
+    println!("{}", ds3r::cli::fig3_shape_analysis(&results, &rates));
+
+    // Per-scheduler single-point simulation cost (the framework's own
+    // speed — events/sec at a loaded operating point).
+    println!("--- simulation kernel cost at 6 jobs/ms ---");
+    for s in scheds {
+        let mut cfg = base.clone();
+        cfg.scheduler = s.into();
+        cfg.injection_rate_per_ms = 6.0;
+        let (report, secs) = bench_util::bench_once(
+            &format!("simulate 600 jobs [{s}]"),
+            || {
+                ds3r::sim::Simulation::build(&platform, &apps, &cfg)
+                    .unwrap()
+                    .run()
+            },
+        );
+        println!(
+            "{:>48} {:>12.0} events/s\n",
+            "",
+            report.events_processed as f64 / secs
+        );
+    }
+}

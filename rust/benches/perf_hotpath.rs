@@ -1,0 +1,180 @@
+//! Whole-stack hot-path benchmarks — the §Perf numbers in
+//! EXPERIMENTS.md come from this harness.
+//!
+//! * simulation kernel: events/second on a saturating Figure-3 workload
+//! * scheduler decision cost per epoch for every built-in
+//! * event-queue push/pop throughput
+//! * thermal RC step (native) and the DTPM epoch
+//! * PJRT artifact call overhead (when artifacts are present)
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+mod bench_util;
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::queue::{Event, EventQueue};
+use ds3r::sim::Simulation;
+use ds3r::thermal::RcModel;
+
+fn main() {
+    let platform = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+
+    println!("=== L3 hot path: simulation kernel ===");
+    for (sched, rate) in
+        [("etf", 9.0), ("met", 9.0), ("ilp", 9.0), ("heft", 9.0)]
+    {
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = sched.into();
+        cfg.injection_rate_per_ms = rate;
+        cfg.max_jobs = 2000;
+        cfg.warmup_jobs = 100;
+        cfg.max_sim_us = 30_000_000.0;
+        let (r, secs) = bench_util::bench_once(
+            &format!("2000 jobs @ {rate}/ms [{sched}]"),
+            || Simulation::build(&platform, &apps, &cfg).unwrap().run(),
+        );
+        println!(
+            "{:>48} {:>12.0} events/s  |  {:.2} us/sched-epoch  |  {} tasks\n",
+            "",
+            r.events_processed as f64 / secs,
+            r.sched_overhead_us(),
+            r.tasks_executed
+        );
+    }
+
+    println!("=== event queue ===");
+    let mut q = EventQueue::new();
+    let mut t = 0.0;
+    bench_util::bench("event queue push+pop (depth ~1k)", 1_000_000, || {
+        t += 1.0;
+        q.push(t, Event::DtpmEpoch);
+        if q.len() > 1000 {
+            std::hint::black_box(q.pop());
+        }
+    });
+
+    println!("\n=== thermal model ===");
+    let rc = RcModel::new(&platform, 10_000.0);
+    let theta = vec![10.0; rc.n];
+    let p = vec![1.0; rc.n_pes];
+    let mut out = vec![0.0; rc.n];
+    bench_util::bench("RC step (native, 6 nodes x 14 PEs)", 1_000_000, || {
+        rc.step_into(&theta, &p, &mut out);
+    });
+    bench_util::bench("RC steady-state solve", 100_000, || {
+        std::hint::black_box(rc.steady_state(&p));
+    });
+
+    let dir = ds3r::runtime::default_artifacts_dir();
+    if ds3r::runtime::artifacts_available(&dir) {
+        println!("\n=== PJRT artifact overhead ===");
+        use ds3r::runtime::{DtpmArtifact, EtfArtifact};
+        let mut art = DtpmArtifact::load(&dir).unwrap();
+        let (k1, k2): (Vec<f64>, Vec<f64>) = platform
+            .pes
+            .iter()
+            .map(|pe| {
+                let c = &platform.classes[pe.class];
+                (rc.leak_k1_effective(c.leak_k1, c.leak_k2), c.leak_k2)
+            })
+            .unzip();
+        art.set_model(&rc, &k1, &k2).unwrap();
+        let cand = vec![(vec![1.0; rc.n_pes], vec![1.1; rc.n_pes])];
+        bench_util::bench("dtpm_step artifact (K=1 row used)", 2_000, || {
+            std::hint::black_box(art.step(&theta, &cand).unwrap());
+        });
+        let cands16: Vec<_> = (0..16)
+            .map(|_| (vec![1.0; rc.n_pes], vec![1.1; rc.n_pes]))
+            .collect();
+        bench_util::bench("dtpm_step artifact (K=16 batch)", 2_000, || {
+            std::hint::black_box(art.step(&theta, &cands16).unwrap());
+        });
+
+        let mut etf_art = EtfArtifact::load(&dir).unwrap();
+        let m = platform.n_pes();
+        let avail = vec![0.0; m];
+        let ready = vec![0.0; 64 * m];
+        let exec: Vec<f64> =
+            (0..64 * m).map(|i| 1.0 + (i % 7) as f64).collect();
+        bench_util::bench("etf finish-matrix artifact (64x14)", 2_000, || {
+            std::hint::black_box(
+                etf_art.finish_matrix(&avail, &ready, &exec, 64, m).unwrap(),
+            );
+        });
+        // Host equivalent for comparison.
+        let mut fin = vec![0.0f64; 64 * m];
+        bench_util::bench("etf finish-matrix host (64x14)", 200_000, || {
+            for i in 0..64 {
+                for j in 0..m {
+                    fin[i * m + j] =
+                        avail[j].max(ready[i * m + j]) + exec[i * m + j];
+                }
+            }
+            std::hint::black_box(&fin);
+        });
+    } else {
+        println!("\n(PJRT benches skipped: run `make artifacts`)");
+    }
+
+    println!("\n=== scheduler decision cost vs ready-list width ===");
+    // Isolated ETF cost: synthetic context with W ready tasks.
+    use ds3r::sched::{PeSnapshot, ReadyTask, SchedContext, Scheduler};
+    struct SynthCtx {
+        pes: Vec<PeSnapshot>,
+        exec: f64,
+    }
+    impl SchedContext for SynthCtx {
+        fn now_us(&self) -> f64 {
+            0.0
+        }
+        fn pes(&self) -> &[PeSnapshot] {
+            &self.pes
+        }
+        fn exec_us(&self, rt: &ReadyTask, pe: usize) -> Option<f64> {
+            Some(self.exec + (rt.task * 7 + pe) as f64 % 13.0)
+        }
+        fn data_ready_us(&self, _rt: &ReadyTask, _pe: usize) -> f64 {
+            0.0
+        }
+        fn task_name(&self, _rt: &ReadyTask) -> &str {
+            "synthetic"
+        }
+        fn app_name(&self, _rt: &ReadyTask) -> &str {
+            "synthetic"
+        }
+    }
+    let ctx = SynthCtx {
+        pes: (0..14)
+            .map(|id| PeSnapshot {
+                id,
+                class: 0,
+                cluster: 0,
+                avail_us: 0.0,
+                queue_len: 0,
+            })
+            .collect(),
+        exec: 10.0,
+    };
+    for w in [8usize, 16, 32, 64] {
+        let ready: Vec<ReadyTask> = (0..w)
+            .map(|t| ReadyTask {
+                job: 0,
+                task: t,
+                app: 0,
+                arrival_us: 0.0,
+                ready_us: 0.0,
+            })
+            .collect();
+        let mut etf = ds3r::sched::etf::Etf::new();
+        bench_util::bench(
+            &format!("ETF decision, {w} ready x 14 PEs"),
+            20_000,
+            || {
+                std::hint::black_box(etf.schedule(&ready, &ctx));
+            },
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! Table 1 bench: regenerates the WiFi-TX execution-profile table from
+//! the resource database and measures profile-lookup cost (the
+//! operation every scheduling decision performs).
+//!
+//! Run: `cargo bench --bench table1_profiles`
+
+mod bench_util;
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::platform::Platform;
+use ds3r::sched::ilp::ExecTable;
+
+fn main() {
+    println!("=== Table 1 regeneration ===\n");
+    println!("{}", ds3r::cli::reproduce_table1());
+
+    let platform = Platform::table2_soc();
+    let app = suite::wifi_tx(WifiParams::default());
+    let exec = ExecTable::new(&app, &platform);
+
+    println!("--- resource-database microbenchmarks ---");
+    bench_util::bench("ExecTable::new (50-task app, 14 PEs)", 20_000, || {
+        std::hint::black_box(ExecTable::new(&app, &platform));
+    });
+
+    let mut acc = 0.0f64;
+    let n_tasks = app.len();
+    let n_pes = platform.n_pes();
+    bench_util::bench("profile lookup (task, pe) -> us", 1_000_000, || {
+        // Touch a pseudo-random entry to defeat caching of one cell.
+        let t = (acc as usize * 7 + 3) % n_tasks;
+        let p = (acc as usize * 13 + 1) % n_pes;
+        acc += exec.us(t, p).min(1.0);
+    });
+    std::hint::black_box(acc);
+
+    // Latency scaling at a DVFS point: the full per-decision cost.
+    let class = &platform.classes[0];
+    let opp = class.opps[3];
+    bench_util::bench("DVFS-scaled latency (mul + div)", 1_000_000, || {
+        let base = exec.us(5 % n_tasks, 0);
+        std::hint::black_box(base * class.nominal_mhz / opp.freq_mhz);
+    });
+
+    // Verify against the paper's values once more, loudly.
+    let t1 = [
+        ("scrambler-encoder", Some(8.0), 22.0, 10.0),
+        ("interleaver-0", None, 10.0, 4.0),
+        ("qpsk-0", None, 15.0, 8.0),
+        ("pilot-0", None, 5.0, 3.0),
+        ("ifft-0", Some(16.0), 296.0, 118.0),
+        ("crc", None, 5.0, 3.0),
+    ];
+    let mut ok = true;
+    for (name, acc_us, a7, a15) in t1 {
+        let task = app.tasks.iter().find(|t| t.name == name).unwrap();
+        let got_acc = task
+            .exec_us
+            .get("ACC_SCR")
+            .or_else(|| task.exec_us.get("ACC_FFT"))
+            .copied();
+        if got_acc != acc_us
+            || task.exec_us["A7"] != a7
+            || task.exec_us["A15"] != a15
+        {
+            ok = false;
+            println!("MISMATCH vs paper Table 1 at {name}");
+        }
+    }
+    println!(
+        "\nTable 1 values vs paper: {}",
+        if ok { "EXACT MATCH" } else { "MISMATCH (see above)" }
+    );
+}

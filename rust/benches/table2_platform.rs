@@ -1,0 +1,64 @@
+//! Table 2 bench: regenerates the scheduling-case-study SoC
+//! configuration and measures platform-model operations (construction,
+//! validation, NoC precomputation, PE snapshotting).
+//!
+//! Run: `cargo bench --bench table2_platform`
+
+mod bench_util;
+
+use ds3r::noc::NocModel;
+use ds3r::platform::Platform;
+
+fn main() {
+    println!("=== Table 2 regeneration ===\n");
+    println!("{}", ds3r::cli::reproduce_table2());
+
+    println!("--- platform-model microbenchmarks ---");
+    bench_util::bench("Platform::table2_soc (build + validate)", 50_000, || {
+        std::hint::black_box(Platform::table2_soc());
+    });
+
+    let p = Platform::table2_soc();
+    bench_util::bench("NocModel::new (hop-table precompute)", 100_000, || {
+        std::hint::black_box(NocModel::new(&p, false));
+    });
+
+    let noc = NocModel::new(&p, false);
+    let mut acc = 0.0;
+    bench_util::bench("NoC transfer latency query", 1_000_000, || {
+        acc += noc.transfer_us(0, 9, 512);
+    });
+    std::hint::black_box(acc);
+
+    bench_util::bench("inventory() (Table-2 rows)", 200_000, || {
+        std::hint::black_box(p.inventory());
+    });
+
+    let zcu = ds3r::platform::presets::zcu102_soc();
+    println!(
+        "\nvalidation platform: {} with {} PEs ({} FFT engines)",
+        zcu.name,
+        zcu.n_pes(),
+        zcu.inventory()
+            .iter()
+            .find(|(n, _, _)| n == "ACC_FFT")
+            .map(|x| x.2)
+            .unwrap_or(0)
+    );
+
+    // Cross-check against the paper's Table 2 numbers, loudly.
+    let inv: std::collections::BTreeMap<String, usize> = p
+        .inventory()
+        .into_iter()
+        .map(|(n, _, c)| (n, c))
+        .collect();
+    let ok = inv["A15"] == 4
+        && inv["A7"] == 4
+        && inv["ACC_SCR"] == 2
+        && inv["ACC_FFT"] == 4
+        && p.n_pes() == 14;
+    println!(
+        "Table 2 values vs paper: {}",
+        if ok { "EXACT MATCH" } else { "MISMATCH" }
+    );
+}

@@ -1,0 +1,436 @@
+//! Application model: DAG-based programs (Figure 2 of the paper).
+//!
+//! An application is a directed acyclic graph of tasks.  Each task carries
+//! its *execution-time profile*: expected latency (µs, at the class's
+//! nominal frequency) on every PE class that supports it — the per-task
+//! rows of Table 1.  Jobs are instances of an [`AppGraph`] injected by the
+//! job generator.
+//!
+//! The paper's five-application benchmark suite (WiFi TX/RX, low-power
+//! single-carrier TX/RX, range detection, pulse Doppler) lives in
+//! [`suite`].
+
+pub mod suite;
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// One task in an application DAG.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Task name, unique within the app (e.g. "interleaver-3").
+    pub name: String,
+    /// Expected execution latency per supporting PE class:
+    /// `class name -> µs at nominal frequency` (a Table-1 row).
+    pub exec_us: BTreeMap<String, f64>,
+    /// Indices of predecessor tasks within the same [`AppGraph`].
+    pub preds: Vec<usize>,
+    /// Output payload size (bytes) shipped to each successor over the NoC.
+    pub out_bytes: u64,
+}
+
+impl TaskSpec {
+    /// Minimum execution time over all supporting classes (µs).
+    pub fn min_exec_us(&self) -> f64 {
+        self.exec_us
+            .values()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Mean execution time over supporting classes (HEFT's rank metric).
+    pub fn mean_exec_us(&self) -> f64 {
+        if self.exec_us.is_empty() {
+            return 0.0;
+        }
+        self.exec_us.values().sum::<f64>() / self.exec_us.len() as f64
+    }
+}
+
+/// A validated application DAG.
+#[derive(Debug, Clone)]
+pub struct AppGraph {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+    /// Successor lists (derived from `preds` at construction).
+    succs: Vec<Vec<usize>>,
+    /// A topological order of task indices.
+    topo: Vec<usize>,
+}
+
+impl AppGraph {
+    /// Build and validate: predecessor indices in range, graph acyclic,
+    /// every task runnable somewhere, names unique.
+    pub fn new(name: impl Into<String>, tasks: Vec<TaskSpec>) -> Result<Self> {
+        let name = name.into();
+        let n = tasks.len();
+        if n == 0 {
+            return Err(Error::App(format!("app '{name}' has no tasks")));
+        }
+        let mut names = std::collections::BTreeSet::new();
+        for (i, t) in tasks.iter().enumerate() {
+            if !names.insert(t.name.clone()) {
+                return Err(Error::App(format!(
+                    "app '{name}': duplicate task name '{}'",
+                    t.name
+                )));
+            }
+            if t.exec_us.is_empty() {
+                return Err(Error::App(format!(
+                    "app '{name}': task '{}' supports no PE class",
+                    t.name
+                )));
+            }
+            for (cls, &us) in t.exec_us.iter() {
+                if !(us > 0.0) || !us.is_finite() {
+                    return Err(Error::App(format!(
+                        "app '{name}': task '{}' class '{cls}' latency {us}",
+                        t.name
+                    )));
+                }
+            }
+            for &p in &t.preds {
+                if p >= n {
+                    return Err(Error::App(format!(
+                        "app '{name}': task {i} pred {p} out of range"
+                    )));
+                }
+                if p == i {
+                    return Err(Error::App(format!(
+                        "app '{name}': task {i} depends on itself"
+                    )));
+                }
+            }
+        }
+
+        // Kahn's algorithm: topological order + cycle detection.
+        let mut succs = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (i, t) in tasks.iter().enumerate() {
+            indeg[i] = t.preds.len();
+            for &p in &t.preds {
+                succs[p].push(i);
+            }
+        }
+        let mut queue: Vec<usize> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            topo.push(u);
+            for &v in &succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if topo.len() != n {
+            return Err(Error::App(format!("app '{name}' contains a cycle")));
+        }
+        Ok(AppGraph { name, tasks, succs, topo })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn succs(&self, task: usize) -> &[usize] {
+        &self.succs[task]
+    }
+
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// Tasks with no predecessors (job entry points).
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&i| self.tasks[i].preds.is_empty())
+            .collect()
+    }
+
+    /// Tasks with no successors (job completion requires all of them).
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.succs[i].is_empty()).collect()
+    }
+
+    /// Length of the critical path assuming every task runs at its
+    /// minimum latency and communication is free: the best possible job
+    /// execution time on an unloaded, infinitely wide platform.
+    pub fn critical_path_us(&self) -> f64 {
+        let mut dist = vec![0.0f64; self.len()];
+        for &u in &self.topo {
+            let t = self.tasks[u].min_exec_us();
+            let start = self.tasks[u]
+                .preds
+                .iter()
+                .map(|&p| dist[p])
+                .fold(0.0, f64::max);
+            dist[u] = start + t;
+        }
+        dist.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Total work (sum of min latencies), a lower bound on busy time.
+    pub fn total_work_us(&self) -> f64 {
+        self.tasks.iter().map(TaskSpec::min_exec_us).sum()
+    }
+
+    /// Maximum number of tasks that can be in flight simultaneously
+    /// (antichain width upper bound via level sizes).
+    pub fn max_width(&self) -> usize {
+        let mut level = vec![0usize; self.len()];
+        let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+        for &u in &self.topo {
+            let l = self.tasks[u]
+                .preds
+                .iter()
+                .map(|&p| level[p] + 1)
+                .max()
+                .unwrap_or(0);
+            level[u] = l;
+            *counts.entry(l).or_insert(0) += 1;
+        }
+        counts.values().copied().max().unwrap_or(0)
+    }
+
+    // ---- JSON (config-driven custom applications) -----------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut tasks = Vec::new();
+        for t in &self.tasks {
+            let mut jt = Json::obj();
+            jt.set("name", Json::Str(t.name.clone()));
+            let mut exec = Json::obj();
+            for (k, v) in &t.exec_us {
+                exec.set(k, Json::Num(*v));
+            }
+            jt.set("exec_us", exec);
+            jt.set(
+                "preds",
+                Json::Arr(
+                    t.preds.iter().map(|&p| Json::Num(p as f64)).collect(),
+                ),
+            );
+            jt.set("out_bytes", Json::Num(t.out_bytes as f64));
+            tasks.push(jt);
+        }
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("tasks", Json::Arr(tasks));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<AppGraph> {
+        let name = j.req_str("name")?.to_string();
+        let mut tasks = Vec::new();
+        for jt in j.req_arr("tasks")? {
+            let tname = jt.req_str("name")?.to_string();
+            let mut exec_us = BTreeMap::new();
+            let exec = jt
+                .get("exec_us")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| Error::Json("missing exec_us".into()))?;
+            for (k, v) in exec {
+                exec_us.insert(
+                    k.clone(),
+                    v.as_f64().ok_or_else(|| {
+                        Error::Json(format!("bad latency for '{k}'"))
+                    })?,
+                );
+            }
+            let preds = jt
+                .req_arr("preds")?
+                .iter()
+                .map(|p| {
+                    p.as_usize().ok_or_else(|| {
+                        Error::Json("bad pred index".into())
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let out_bytes = jt
+                .get("out_bytes")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64;
+            tasks.push(TaskSpec { name: tname, exec_us, preds, out_bytes });
+        }
+        AppGraph::new(name, tasks)
+    }
+}
+
+/// Convenience builder used by the suite and by tests.
+pub struct DagBuilder {
+    name: String,
+    tasks: Vec<TaskSpec>,
+}
+
+impl DagBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        DagBuilder { name: name.into(), tasks: Vec::new() }
+    }
+
+    /// Add a task; `exec` is `[(class, µs)]`; returns its index.
+    pub fn task(
+        &mut self,
+        name: impl Into<String>,
+        exec: &[(&str, f64)],
+        preds: &[usize],
+        out_bytes: u64,
+    ) -> usize {
+        let id = self.tasks.len();
+        self.tasks.push(TaskSpec {
+            name: name.into(),
+            exec_us: exec
+                .iter()
+                .map(|&(c, us)| (c.to_string(), us))
+                .collect(),
+            preds: preds.to_vec(),
+            out_bytes,
+        });
+        id
+    }
+
+    pub fn build(self) -> Result<AppGraph> {
+        AppGraph::new(self.name, self.tasks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> AppGraph {
+        let mut b = DagBuilder::new("diamond");
+        let a = b.task("a", &[("A15", 10.0)], &[], 64);
+        let l = b.task("l", &[("A15", 5.0), ("A7", 12.0)], &[a], 64);
+        let r = b.task("r", &[("A15", 7.0)], &[a], 64);
+        let _s = b.task("s", &[("A15", 1.0)], &[l, r], 0);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let g = diamond();
+        let pos: BTreeMap<usize, usize> = g
+            .topo_order()
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (t, i))
+            .collect();
+        for (i, t) in g.tasks.iter().enumerate() {
+            for &p in &t.preds {
+                assert!(pos[&p] < pos[&i]);
+            }
+        }
+    }
+
+    #[test]
+    fn critical_path_of_diamond() {
+        let g = diamond();
+        // a(10) -> r(7) -> s(1) = 18 (left branch is 5).
+        assert!((g.critical_path_us() - 18.0).abs() < 1e-9);
+        assert!((g.total_work_us() - 23.0).abs() < 1e-9);
+        assert_eq!(g.max_width(), 2);
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let r = AppGraph::new(
+            "cyc",
+            vec![
+                TaskSpec {
+                    name: "a".into(),
+                    exec_us: [("A15".to_string(), 1.0)].into(),
+                    preds: vec![1],
+                    out_bytes: 0,
+                },
+                TaskSpec {
+                    name: "b".into(),
+                    exec_us: [("A15".to_string(), 1.0)].into(),
+                    preds: vec![0],
+                    out_bytes: 0,
+                },
+            ],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_self_loop_and_bad_index() {
+        let mk = |preds: Vec<usize>| {
+            AppGraph::new(
+                "bad",
+                vec![TaskSpec {
+                    name: "a".into(),
+                    exec_us: [("A15".to_string(), 1.0)].into(),
+                    preds,
+                    out_bytes: 0,
+                }],
+            )
+        };
+        assert!(mk(vec![0]).is_err());
+        assert!(mk(vec![5]).is_err());
+    }
+
+    #[test]
+    fn rejects_unsupported_task() {
+        let r = AppGraph::new(
+            "none",
+            vec![TaskSpec {
+                name: "a".into(),
+                exec_us: BTreeMap::new(),
+                preds: vec![],
+                out_bytes: 0,
+            }],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let t = TaskSpec {
+            name: "a".into(),
+            exec_us: [("A15".to_string(), 1.0)].into(),
+            preds: vec![],
+            out_bytes: 0,
+        };
+        assert!(AppGraph::new("dup", vec![t.clone(), t]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = diamond();
+        let j = g.to_json();
+        let g2 = AppGraph::from_json(&j).unwrap();
+        assert_eq!(g2.name, g.name);
+        assert_eq!(g2.len(), g.len());
+        for (a, b) in g.tasks.iter().zip(&g2.tasks) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.preds, b.preds);
+            assert_eq!(a.exec_us, b.exec_us);
+        }
+    }
+
+    #[test]
+    fn min_and_mean_exec() {
+        let g = diamond();
+        assert_eq!(g.tasks[1].min_exec_us(), 5.0);
+        assert!((g.tasks[1].mean_exec_us() - 8.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,478 @@
+//! The paper's five-application benchmark suite.
+//!
+//! "The framework includes five reference applications from wireless
+//! communication and radar processing domains" (§1): WiFi transmitter,
+//! WiFi receiver, low-power single-carrier TX/RX, range detection, and
+//! pulse Doppler.
+//!
+//! **Profiling provenance** (DESIGN.md §Substitutions): WiFi-TX latencies
+//! are Table 1 of the paper, verbatim (µs on HW accelerator / Odroid A7 /
+//! Odroid A15).  The remaining applications are not tabulated in the WiP
+//! paper; their profiles are synthesized to be consistent with Table 1's
+//! measured ratios (accelerator ≈ 7-18× faster than A15 for FFT-class
+//! kernels, A15 ≈ 2.5× faster than A7 for control-dominated kernels).
+//!
+//! Class names used by profiles: `A15`, `A7`, `ACC_SCR` (scrambler-
+//! encoder engine), `ACC_FFT` (FFT engine).  A task lacking an entry for
+//! a class cannot execute there (Table 1's empty cells).
+
+use super::{AppGraph, DagBuilder};
+
+/// Parameters for the WiFi transmitter/receiver frame structure.
+#[derive(Debug, Clone, Copy)]
+pub struct WifiParams {
+    /// OFDM symbols per frame.  The frame traverses the Figure-2
+    /// pipeline symbol by symbol: `scrambler-encoder` → S sequential
+    /// `interleaver→qpsk→pilot→ifft` segments → `crc` (a transmitter
+    /// processes the frame in stream order, so segments are serial
+    /// within one job; parallelism comes from job interleaving).  The
+    /// default of 12 calibrates the Table-2 platform so the MET
+    /// scheduler saturates just above 5 jobs/ms, reproducing the
+    /// Figure-3 knee position.
+    pub symbols: usize,
+}
+
+/// Same frame, but with per-symbol chains fanned out in parallel between
+/// scrambler and CRC (a batch-processing transmitter).  Used by the
+/// ablation benches to study how DAG width shifts the Figure-3 curves.
+pub fn wifi_tx_parallel(p: WifiParams) -> AppGraph {
+    let s = p.symbols.max(1);
+    let mut b = DagBuilder::new("wifi-tx-par");
+    let scr = b.task(
+        "scrambler-encoder",
+        &[("ACC_SCR", 8.0), ("A7", 22.0), ("A15", 10.0)],
+        &[],
+        1024,
+    );
+    let mut ifft_ids = Vec::with_capacity(s);
+    for i in 0..s {
+        let il = b.task(
+            format!("interleaver-{i}"),
+            &[("A7", 10.0), ("A15", 4.0)],
+            &[scr],
+            192,
+        );
+        let q = b.task(
+            format!("qpsk-{i}"),
+            &[("A7", 15.0), ("A15", 8.0)],
+            &[il],
+            384,
+        );
+        let pi = b.task(
+            format!("pilot-{i}"),
+            &[("A7", 5.0), ("A15", 3.0)],
+            &[q],
+            512,
+        );
+        let f = b.task(
+            format!("ifft-{i}"),
+            &[("ACC_FFT", 16.0), ("A7", 296.0), ("A15", 118.0)],
+            &[pi],
+            512,
+        );
+        ifft_ids.push(f);
+    }
+    b.task("crc", &[("A7", 5.0), ("A15", 3.0)], &ifft_ids, 64);
+    b.build().expect("wifi-tx-par DAG is valid")
+}
+
+impl Default for WifiParams {
+    fn default() -> Self {
+        WifiParams { symbols: 12 }
+    }
+}
+
+/// WiFi transmitter (Figure 2 + Table 1).
+///
+/// DAG: `scrambler-encoder` → sequential per-symbol segments
+/// (`interleaver_i` → `qpsk_i` → `pilot_i` → `ifft_i`) → `crc`,
+/// i.e. the Figure-2 pipeline traversed symbol by symbol.
+pub fn wifi_tx(p: WifiParams) -> AppGraph {
+    let s = p.symbols.max(1);
+    let mut b = DagBuilder::new("wifi-tx");
+    // Table 1, row "Scrambler Enc.": 8 / 22 / 10 µs.
+    let scr = b.task(
+        "scrambler-encoder",
+        &[("ACC_SCR", 8.0), ("A7", 22.0), ("A15", 10.0)],
+        &[],
+        1024,
+    );
+    let mut prev = scr;
+    for i in 0..s {
+        // Table 1: Interleaver 10/4, QPSK 15/8, Pilot 5/3, IFFT 16/296/118.
+        let il = b.task(
+            format!("interleaver-{i}"),
+            &[("A7", 10.0), ("A15", 4.0)],
+            &[prev],
+            192,
+        );
+        let q = b.task(
+            format!("qpsk-{i}"),
+            &[("A7", 15.0), ("A15", 8.0)],
+            &[il],
+            384,
+        );
+        let pi = b.task(
+            format!("pilot-{i}"),
+            &[("A7", 5.0), ("A15", 3.0)],
+            &[q],
+            512,
+        );
+        prev = b.task(
+            format!("ifft-{i}"),
+            &[("ACC_FFT", 16.0), ("A7", 296.0), ("A15", 118.0)],
+            &[pi],
+            512,
+        );
+    }
+    // Table 1, row "CRC": 5 / 3 µs.
+    b.task("crc", &[("A7", 5.0), ("A15", 3.0)], &[prev], 64);
+    b.build().expect("wifi-tx DAG is valid")
+}
+
+/// WiFi receiver: the inverse pipeline plus a Viterbi decoder, the
+/// dominant compute stage (decoder is core-only on the Table-2 SoC).
+pub fn wifi_rx(p: WifiParams) -> AppGraph {
+    let s = p.symbols.max(1);
+    let mut b = DagBuilder::new("wifi-rx");
+    let mf = b.task(
+        "match-filter",
+        &[("A7", 80.0), ("A15", 32.0)],
+        &[],
+        2048,
+    );
+    let pay = b.task(
+        "payload-extract",
+        &[("A7", 12.0), ("A15", 5.0)],
+        &[mf],
+        2048,
+    );
+    let mut dec_ids = Vec::with_capacity(s);
+    for i in 0..s {
+        let fft = b.task(
+            format!("fft-{i}"),
+            &[("ACC_FFT", 16.0), ("A7", 296.0), ("A15", 118.0)],
+            &[pay],
+            512,
+        );
+        let pe = b.task(
+            format!("pilot-extract-{i}"),
+            &[("A7", 7.0), ("A15", 3.0)],
+            &[fft],
+            448,
+        );
+        let dq = b.task(
+            format!("qpsk-demod-{i}"),
+            &[("A7", 18.0), ("A15", 9.0)],
+            &[pe],
+            384,
+        );
+        let di = b.task(
+            format!("deinterleaver-{i}"),
+            &[("A7", 11.0), ("A15", 5.0)],
+            &[dq],
+            192,
+        );
+        let vd = b.task(
+            format!("viterbi-{i}"),
+            &[("A7", 570.0), ("A15", 190.0)],
+            &[di],
+            96,
+        );
+        dec_ids.push(vd);
+    }
+    let desc = b.task(
+        "descrambler",
+        &[("ACC_SCR", 8.0), ("A7", 22.0), ("A15", 10.0)],
+        &dec_ids,
+        1024,
+    );
+    b.task("crc-check", &[("A7", 5.0), ("A15", 3.0)], &[desc], 16);
+    b.build().expect("wifi-rx DAG is valid")
+}
+
+/// Low-power single-carrier transmitter: short control-dominated chain
+/// (the paper's "low-power single-carrier" reference application).
+pub fn single_carrier_tx() -> AppGraph {
+    let mut b = DagBuilder::new("sc-tx");
+    let scr = b.task(
+        "scrambler",
+        &[("ACC_SCR", 8.0), ("A7", 22.0), ("A15", 10.0)],
+        &[],
+        256,
+    );
+    let m = b.task(
+        "bpsk-mod",
+        &[("A7", 14.0), ("A15", 6.0)],
+        &[scr],
+        512,
+    );
+    let ps = b.task(
+        "pulse-shape-fir",
+        &[("A7", 90.0), ("A15", 35.0)],
+        &[m],
+        1024,
+    );
+    b.task("crc", &[("A7", 5.0), ("A15", 3.0)], &[ps], 64);
+    b.build().expect("sc-tx DAG is valid")
+}
+
+/// Low-power single-carrier receiver.
+pub fn single_carrier_rx() -> AppGraph {
+    let mut b = DagBuilder::new("sc-rx");
+    let mf = b.task(
+        "match-filter",
+        &[("A7", 105.0), ("A15", 40.0)],
+        &[],
+        1024,
+    );
+    let d = b.task(
+        "bpsk-demod",
+        &[("A7", 18.0), ("A15", 8.0)],
+        &[mf],
+        512,
+    );
+    let ds = b.task(
+        "descrambler",
+        &[("ACC_SCR", 8.0), ("A7", 22.0), ("A15", 10.0)],
+        &[d],
+        256,
+    );
+    b.task("crc-check", &[("A7", 5.0), ("A15", 3.0)], &[ds], 16);
+    b.build().expect("sc-rx DAG is valid")
+}
+
+/// Parameters for the radar applications.
+#[derive(Debug, Clone, Copy)]
+pub struct RadarParams {
+    /// Pulses per coherent processing interval (pulse Doppler) or
+    /// chirp segments (range detection).
+    pub pulses: usize,
+}
+
+impl Default for RadarParams {
+    fn default() -> Self {
+        RadarParams { pulses: 16 }
+    }
+}
+
+/// Range detection: pulse compression by FFT → conjugate multiply with
+/// the reference chirp → IFFT → magnitude → peak detection.
+pub fn range_detection(p: RadarParams) -> AppGraph {
+    let seg = p.pulses.max(1);
+    let mut b = DagBuilder::new("range-detection");
+    let src = b.task(
+        "adc-capture",
+        &[("A7", 9.0), ("A15", 4.0)],
+        &[],
+        4096,
+    );
+    let mut peaks = Vec::with_capacity(seg);
+    for i in 0..seg {
+        let f = b.task(
+            format!("fft-{i}"),
+            &[("ACC_FFT", 16.0), ("A7", 296.0), ("A15", 118.0)],
+            &[src],
+            512,
+        );
+        let m = b.task(
+            format!("ref-multiply-{i}"),
+            &[("A7", 30.0), ("A15", 12.0)],
+            &[f],
+            512,
+        );
+        let inv = b.task(
+            format!("ifft-{i}"),
+            &[("ACC_FFT", 16.0), ("A7", 296.0), ("A15", 118.0)],
+            &[m],
+            512,
+        );
+        let a = b.task(
+            format!("magnitude-{i}"),
+            &[("A7", 20.0), ("A15", 8.0)],
+            &[inv],
+            256,
+        );
+        peaks.push(a);
+    }
+    b.task(
+        "peak-detect",
+        &[("A7", 26.0), ("A15", 10.0)],
+        &peaks,
+        32,
+    );
+    b.build().expect("range-detection DAG is valid")
+}
+
+/// Pulse Doppler: per-pulse range FFTs, corner turn, per-bin Doppler
+/// FFTs, then CFAR detection — the FFT-heaviest app in the suite.
+pub fn pulse_doppler(p: RadarParams) -> AppGraph {
+    let pulses = p.pulses.max(1);
+    let doppler_bins = (pulses / 2).max(1);
+    let mut b = DagBuilder::new("pulse-doppler");
+    let src = b.task(
+        "adc-capture",
+        &[("A7", 9.0), ("A15", 4.0)],
+        &[],
+        8192,
+    );
+    let mut range_ffts = Vec::with_capacity(pulses);
+    for i in 0..pulses {
+        let f = b.task(
+            format!("range-fft-{i}"),
+            &[("ACC_FFT", 16.0), ("A7", 296.0), ("A15", 118.0)],
+            &[src],
+            512,
+        );
+        range_ffts.push(f);
+    }
+    let ct = b.task(
+        "corner-turn",
+        &[("A7", 46.0), ("A15", 18.0)],
+        &range_ffts,
+        8192,
+    );
+    let mut dops = Vec::with_capacity(doppler_bins);
+    for i in 0..doppler_bins {
+        let f = b.task(
+            format!("doppler-fft-{i}"),
+            &[("ACC_FFT", 16.0), ("A7", 296.0), ("A15", 118.0)],
+            &[ct],
+            512,
+        );
+        dops.push(f);
+    }
+    b.task(
+        "cfar-detect",
+        &[("A7", 120.0), ("A15", 45.0)],
+        &dops,
+        64,
+    );
+    b.build().expect("pulse-doppler DAG is valid")
+}
+
+/// All five reference applications at their default parameters.
+pub fn all_default() -> Vec<AppGraph> {
+    vec![
+        wifi_tx(WifiParams::default()),
+        wifi_rx(WifiParams::default()),
+        single_carrier_tx(),
+        single_carrier_rx(),
+        range_detection(RadarParams::default()),
+        pulse_doppler(RadarParams::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wifi_tx_single_symbol_is_fig2_pipeline() {
+        // With one symbol the DAG is exactly the Figure-2 chain:
+        // scrambler -> interleaver -> qpsk -> pilot -> ifft -> crc.
+        let g = wifi_tx(WifiParams { symbols: 1 });
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![5]);
+        for i in 1..6 {
+            assert_eq!(g.tasks[i].preds, vec![i - 1]);
+        }
+    }
+
+    #[test]
+    fn wifi_tx_table1_values_verbatim() {
+        let g = wifi_tx(WifiParams { symbols: 1 });
+        let by_name = |n: &str| {
+            g.tasks.iter().find(|t| t.name.starts_with(n)).unwrap()
+        };
+        let scr = by_name("scrambler-encoder");
+        assert_eq!(scr.exec_us["ACC_SCR"], 8.0);
+        assert_eq!(scr.exec_us["A7"], 22.0);
+        assert_eq!(scr.exec_us["A15"], 10.0);
+        let il = by_name("interleaver");
+        assert_eq!(il.exec_us["A7"], 10.0);
+        assert_eq!(il.exec_us["A15"], 4.0);
+        assert!(!il.exec_us.contains_key("ACC_FFT"));
+        let q = by_name("qpsk");
+        assert_eq!(q.exec_us["A7"], 15.0);
+        assert_eq!(q.exec_us["A15"], 8.0);
+        let pi = by_name("pilot");
+        assert_eq!(pi.exec_us["A7"], 5.0);
+        assert_eq!(pi.exec_us["A15"], 3.0);
+        let f = by_name("ifft");
+        assert_eq!(f.exec_us["ACC_FFT"], 16.0);
+        assert_eq!(f.exec_us["A7"], 296.0);
+        assert_eq!(f.exec_us["A15"], 118.0);
+        let crc = by_name("crc");
+        assert_eq!(crc.exec_us["A7"], 5.0);
+        assert_eq!(crc.exec_us["A15"], 3.0);
+    }
+
+    #[test]
+    fn wifi_tx_frame_structure() {
+        let s = 12;
+        let g = wifi_tx(WifiParams { symbols: s });
+        assert_eq!(g.len(), 2 + 4 * s);
+        assert_eq!(g.sources().len(), 1);
+        assert_eq!(g.sinks().len(), 1);
+        // Serial pipeline: width 1 — all schedulers coincide unloaded.
+        assert_eq!(g.max_width(), 1);
+        // Critical path: scr(8) + s*(4+8+3+16) + crc(3) = 11 + 31 s.
+        assert!(
+            (g.critical_path_us() - (11.0 + 31.0 * s as f64)).abs() < 1e-9
+        );
+        // Parallel ablation variant keeps the same work, width s.
+        let gp = wifi_tx_parallel(WifiParams { symbols: s });
+        assert_eq!(gp.max_width(), s);
+        assert!((gp.total_work_us() - g.total_work_us()).abs() < 1e-9);
+        assert!((gp.critical_path_us() - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_apps_valid_and_nontrivial() {
+        for g in all_default() {
+            assert!(g.len() >= 4, "{} too small", g.name);
+            assert!(!g.sources().is_empty());
+            assert!(!g.sinks().is_empty());
+            assert!(g.critical_path_us() > 0.0);
+            // Every task must be reachable: sum of level sizes == n is
+            // implied by construction; check total work sane instead.
+            assert!(g.total_work_us() > g.critical_path_us() * 0.5);
+        }
+    }
+
+    #[test]
+    fn accelerator_ratios_consistent_with_table1() {
+        // FFT-class tasks must keep the measured acc/A15/A7 ratios
+        // everywhere in the suite (DESIGN.md substitution rule).
+        for g in all_default() {
+            for t in &g.tasks {
+                if let Some(&acc) = t.exec_us.get("ACC_FFT") {
+                    let a15 = t.exec_us["A15"];
+                    let a7 = t.exec_us["A7"];
+                    assert!((a15 / acc - 118.0 / 16.0).abs() < 1e-9);
+                    assert!((a7 / a15 - 296.0 / 118.0).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pulse_doppler_is_fft_heavy() {
+        let g = pulse_doppler(RadarParams { pulses: 16 });
+        let ffts = g
+            .tasks
+            .iter()
+            .filter(|t| t.exec_us.contains_key("ACC_FFT"))
+            .count();
+        assert_eq!(ffts, 16 + 8);
+    }
+
+    #[test]
+    fn param_floors() {
+        // Degenerate params are clamped, not panicking.
+        assert!(wifi_tx(WifiParams { symbols: 0 }).len() >= 6);
+        assert!(range_detection(RadarParams { pulses: 0 }).len() >= 4);
+    }
+}

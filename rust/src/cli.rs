@@ -1,0 +1,736 @@
+//! Command-line interface and experiment reproduction drivers.
+//!
+//! Subcommands:
+//! * `run`        — one simulation, full report.
+//! * `sweep`      — scheduler × injection-rate grid, multithreaded.
+//! * `reproduce`  — regenerate the paper's tables/figures
+//!   (`table1`, `table2`, `fig2`, `fig3`, `all`).
+//! * `validate`   — analytical model vs fine-grained reference
+//!   (the paper's FPGA validation, simulated — DESIGN.md §Substitutions).
+//! * `list`       — available schedulers, governors, applications.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::app::{suite, AppGraph};
+use crate::config::SimConfig;
+use crate::coordinator;
+use crate::platform::Platform;
+use crate::sim::Simulation;
+use crate::util::plot;
+use crate::{Error, Result};
+
+/// Minimal argument parser: `--key value`, `--key=value`, bare `--flag`.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.values.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value flag if the next token does not look like a
+                    // flag; boolean otherwise.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.values.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(rest.to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains(key) || self.values.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key}: bad number '{v}'"))
+            }),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{key}: bad integer '{v}'"))
+            }),
+        }
+    }
+
+    /// Comma-separated list (`--scheds met,etf,ilp`).
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.values.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// Rate range `lo:hi:step` or comma list.
+    pub fn rates_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        let Some(v) = self.values.get(key) else {
+            return Ok(default.to_vec());
+        };
+        if let Some((lo, rest)) = v.split_once(':') {
+            let (hi, step) = rest.split_once(':').ok_or_else(|| {
+                Error::Config(format!("--{key}: want lo:hi:step, got '{v}'"))
+            })?;
+            let (lo, hi, step): (f64, f64, f64) = (
+                lo.parse().map_err(|_| bad_num(key, lo))?,
+                hi.parse().map_err(|_| bad_num(key, hi))?,
+                step.parse().map_err(|_| bad_num(key, step))?,
+            );
+            if step <= 0.0 || hi < lo {
+                return Err(Error::Config(format!(
+                    "--{key}: bad range {lo}:{hi}:{step}"
+                )));
+            }
+            let mut out = Vec::new();
+            let mut x = lo;
+            while x <= hi + 1e-9 {
+                out.push(x);
+                x += step;
+            }
+            Ok(out)
+        } else {
+            v.split(',')
+                .map(|s| s.trim().parse().map_err(|_| bad_num(key, s)))
+                .collect()
+        }
+    }
+}
+
+fn bad_num(key: &str, v: &str) -> Error {
+    Error::Config(format!("--{key}: bad number '{v}'"))
+}
+
+/// Resolve an application by name with optional size parameters.
+pub fn app_by_name(
+    name: &str,
+    symbols: usize,
+    pulses: usize,
+) -> Result<AppGraph> {
+    let wp = suite::WifiParams { symbols };
+    let rp = suite::RadarParams { pulses };
+    match name {
+        "wifi-tx" => Ok(suite::wifi_tx(wp)),
+        "wifi-rx" => Ok(suite::wifi_rx(wp)),
+        "sc-tx" => Ok(suite::single_carrier_tx()),
+        "sc-rx" => Ok(suite::single_carrier_rx()),
+        "range-detection" => Ok(suite::range_detection(rp)),
+        "pulse-doppler" => Ok(suite::pulse_doppler(rp)),
+        other => Err(Error::Config(format!(
+            "unknown app '{other}' (wifi-tx, wifi-rx, sc-tx, sc-rx, \
+             range-detection, pulse-doppler)"
+        ))),
+    }
+}
+
+/// Resolve a platform preset by name, or load a JSON platform file
+/// (anything containing a path separator or ending in `.json`).
+pub fn platform_by_name(name: &str) -> Result<Platform> {
+    match name {
+        "table2" => Ok(Platform::table2_soc()),
+        "zcu102" => Ok(crate::platform::presets::zcu102_soc()),
+        other if other.ends_with(".json") || other.contains('/') => {
+            Platform::from_json_file(std::path::Path::new(other))
+        }
+        other => Err(Error::Config(format!(
+            "unknown platform '{other}' (table2, zcu102, or a .json file)"
+        ))),
+    }
+}
+
+/// Build a `SimConfig` from common CLI flags.
+pub fn config_from_args(args: &Args) -> Result<SimConfig> {
+    let mut cfg = if args.has("config") {
+        SimConfig::load(std::path::Path::new(&args.str_or("config", "")))?
+    } else {
+        SimConfig::default()
+    };
+    if args.has("sched") {
+        cfg.scheduler = args.str_or("sched", "etf");
+    }
+    cfg.injection_rate_per_ms =
+        args.f64_or("rate", cfg.injection_rate_per_ms)?;
+    cfg.max_jobs = args.usize_or("jobs", cfg.max_jobs)?;
+    cfg.warmup_jobs = args.usize_or("warmup", cfg.warmup_jobs)?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    cfg.max_ready = args.usize_or("max-ready", cfg.max_ready)?;
+    cfg.exec_jitter_frac = args.f64_or("jitter", cfg.exec_jitter_frac)?;
+    if args.has("governor") {
+        cfg.dtpm.governor = args.str_or("governor", "performance");
+    }
+    cfg.dtpm.epoch_us = args.f64_or("epoch-us", cfg.dtpm.epoch_us)?;
+    if args.has("throttle") {
+        cfg.dtpm.thermal_throttle = true;
+        cfg.dtpm.throttle_temp_c =
+            args.f64_or("throttle", cfg.dtpm.throttle_temp_c)?;
+    }
+    if args.has("power-cap") {
+        cfg.dtpm.power_cap_w = Some(args.f64_or("power-cap", 5.0)?);
+    }
+    if args.has("gantt") {
+        cfg.capture_gantt = true;
+    }
+    if args.has("traces") {
+        cfg.capture_traces = true;
+    }
+    if args.has("noc-congestion") {
+        cfg.noc_congestion = true;
+    }
+    if args.has("xla-thermal") {
+        cfg.use_xla_thermal = true;
+    }
+    if args.has("trace-file") {
+        cfg.trace_file =
+            Some(std::path::PathBuf::from(args.str_or("trace-file", "")));
+    }
+    if args.has("artifacts") {
+        cfg.artifacts_dir =
+            Some(std::path::PathBuf::from(args.str_or("artifacts", "")));
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Build the workload from `--apps` / `--symbols` / `--pulses`.
+pub fn apps_from_args(args: &Args) -> Result<Vec<AppGraph>> {
+    let names = args.list_or("apps", &["wifi-tx"]);
+    let symbols = args.usize_or("symbols", 12)?;
+    let pulses = args.usize_or("pulses", 16)?;
+    names
+        .iter()
+        .map(|n| app_by_name(n, symbols, pulses))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Subcommand drivers (each returns the text it printed, for testability)
+// ---------------------------------------------------------------------------
+
+pub fn cmd_run(args: &Args) -> Result<String> {
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let apps = apps_from_args(args)?;
+    let cfg = config_from_args(args)?;
+    if args.has("record-trace") {
+        // Record the arrival stream this config would generate and exit:
+        // replay later with --trace-file for exact cross-scheduler runs.
+        let out = args.str_or("record-trace", "trace.json");
+        let trace = crate::jobgen::JobGen::new(
+            cfg.arrival,
+            cfg.injection_rate_per_ms,
+            apps.len(),
+            &cfg.app_weights,
+            cfg.max_jobs,
+            cfg.seed,
+        )
+        .record_trace();
+        std::fs::write(
+            &out,
+            crate::jobgen::JobGen::trace_to_json(&trace)
+                .to_string_pretty(),
+        )?;
+        return Ok(format!("recorded {} arrivals to {out}\n", trace.len()));
+    }
+    let report = Simulation::build(&platform, &apps, &cfg)?.run();
+    let mut out = report.summary();
+    if cfg.capture_gantt {
+        let hi = report
+            .gantt
+            .iter()
+            .map(|e| e.end_us)
+            .fold(0.0, f64::max)
+            .min(2000.0);
+        out.push_str(&report.gantt_ascii(&platform, &apps, (0.0, hi), 100));
+    }
+    if args.has("json") {
+        out.push_str(&report.to_json().to_string_pretty());
+    }
+    Ok(out)
+}
+
+pub fn cmd_sweep(args: &Args) -> Result<String> {
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let apps = apps_from_args(args)?;
+    let cfg = config_from_args(args)?;
+    let scheds = args.list_or("scheds", &["met", "etf", "ilp"]);
+    let sched_refs: Vec<&str> = scheds.iter().map(String::as_str).collect();
+    let rates =
+        args.rates_or("rates", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])?;
+    let threads = args.usize_or("threads", default_threads())?;
+
+    let points = coordinator::fig3_points(&sched_refs, &rates, cfg.seed);
+    let results =
+        coordinator::run_sweep(&platform, &apps, &cfg, &points, threads)?;
+
+    let mut rows = Vec::new();
+    for r in &results {
+        rows.push(vec![
+            r.point.scheduler.clone(),
+            format!("{:.1}", r.point.rate_per_ms),
+            format!("{:.1}", r.avg_latency_us),
+            format!("{:.1}", r.p95_latency_us),
+            format!("{:.3}", r.throughput_jobs_per_ms),
+            format!("{:.2}", r.energy_per_job_mj),
+            format!("{}/{}", r.completed_jobs, r.injected_jobs),
+        ]);
+    }
+    let mut out = plot::ascii_table(
+        &[
+            "scheduler",
+            "rate/ms",
+            "avg exec us",
+            "p95 us",
+            "thru/ms",
+            "mJ/job",
+            "done",
+        ],
+        &rows,
+    );
+    let series = coordinator::latency_series(&results);
+    out.push_str(&plot::ascii_chart(
+        "avg job execution time vs injection rate",
+        "jobs/ms",
+        "us",
+        &series,
+        72,
+        20,
+    ));
+    if args.has("csv") {
+        let path = args.str_or("csv", "sweep.csv");
+        std::fs::write(&path, plot::to_csv("rate_per_ms", &series))?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
+    Ok(out)
+}
+
+pub fn cmd_validate(args: &Args) -> Result<String> {
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let symbols = args.usize_or("symbols", 8)?;
+    let pulses = args.usize_or("pulses", 8)?;
+    let apps = vec![
+        suite::wifi_tx(suite::WifiParams { symbols }),
+        suite::single_carrier_tx(),
+        suite::single_carrier_rx(),
+        suite::range_detection(suite::RadarParams { pulses }),
+    ];
+    let jobs = args.usize_or("jobs", 200)?;
+    let rows = coordinator::validate(
+        &platform,
+        &apps,
+        &["met", "etf"],
+        jobs,
+        args.usize_or("seed", 42)? as u64,
+    )?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.app.clone(),
+                r.scheduler.clone(),
+                format!("{:.1}", r.model_us),
+                format!("{:.1}", r.reference_us),
+                format!("{:.1}%", r.error_pct),
+            ]
+        })
+        .collect();
+    Ok(plot::ascii_table(
+        &["app", "scheduler", "model us", "reference us", "error"],
+        &table,
+    ))
+}
+
+pub fn cmd_list() -> String {
+    let mut out = String::new();
+    out.push_str("schedulers: ");
+    out.push_str(&crate::sched::builtin_names().join(", "));
+    out.push_str("\ngovernors:  performance, powersave, ondemand, userspace, explore-xla\n");
+    out.push_str("platforms:  table2 (paper Table 2), zcu102, or a platform .json file\n");
+    out.push_str(
+        "apps:       wifi-tx, wifi-rx, sc-tx, sc-rx, range-detection, \
+         pulse-doppler\n",
+    );
+    out
+}
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+// ---------------------------------------------------------------------------
+// reproduce: the paper's tables and figures
+// ---------------------------------------------------------------------------
+
+/// Table 1: WiFi-TX execution profiles. Regenerated from the resource
+/// database so any drift from the paper's numbers fails visibly.
+pub fn reproduce_table1() -> String {
+    let app = suite::wifi_tx(suite::WifiParams { symbols: 1 });
+    let mut rows = Vec::new();
+    for t in &app.tasks {
+        let cell = |k: &str| {
+            t.exec_us
+                .get(k)
+                .map(|v| format!("{v:.0}"))
+                .unwrap_or_default()
+        };
+        let acc = if t.exec_us.contains_key("ACC_SCR") {
+            cell("ACC_SCR")
+        } else {
+            cell("ACC_FFT")
+        };
+        rows.push(vec![t.name.clone(), acc, cell("A7"), cell("A15")]);
+    }
+    let mut out = String::from(
+        "Table 1: Execution profiles of WiFi-TX (latency in us)\n",
+    );
+    out.push_str(&plot::ascii_table(
+        &["Task", "HW Acc.", "Odroid A7", "Odroid A15"],
+        &rows,
+    ));
+    out.push_str(
+        "paper: Scrambler 8/22/10, Interleaver -/10/4, QPSK -/15/8, \
+         Pilot -/5/3, IFFT 16/296/118, CRC -/5/3\n",
+    );
+    out
+}
+
+/// Table 2: the SoC configuration used in the scheduling case study.
+pub fn reproduce_table2() -> String {
+    let p = Platform::table2_soc();
+    let rows: Vec<Vec<String>> = p
+        .inventory()
+        .into_iter()
+        .map(|(name, ty, n)| {
+            vec![name, ty.label().to_string(), n.to_string()]
+        })
+        .collect();
+    let mut out =
+        String::from("Table 2: SoC configuration for scheduling case studies\n");
+    out.push_str(&plot::ascii_table(
+        &["Resource", "Type", "# of Instances"],
+        &rows,
+    ));
+    out.push_str(&format!(
+        "total PEs: {} (paper: 14 general purpose cores and hardware \
+         accelerators)\n",
+        p.n_pes()
+    ));
+    out
+}
+
+/// Figure 2: the WiFi-TX application DAG.
+pub fn reproduce_fig2() -> String {
+    let app = suite::wifi_tx(suite::WifiParams { symbols: 1 });
+    let mut out = String::from(
+        "Figure 2: WiFi transmitter block diagram (single-symbol chain)\n  ",
+    );
+    for (i, &t) in app.topo_order().iter().enumerate() {
+        if i > 0 {
+            out.push_str(" -> ");
+        }
+        out.push_str(&app.tasks[t].name);
+    }
+    out.push('\n');
+    let frame = suite::wifi_tx(suite::WifiParams::default());
+    out.push_str(&format!(
+        "frame DAG at default {} symbols: {} tasks, width {}, \
+         critical path {:.0} us, total work {:.0} us\n",
+        suite::WifiParams::default().symbols,
+        frame.len(),
+        frame.max_width(),
+        frame.critical_path_us(),
+        frame.total_work_us(),
+    ));
+    out
+}
+
+/// Figure 3: average job execution time vs injection rate for
+/// MET / ETF / ILP-table on the Table-2 SoC with WiFi-TX jobs.
+pub fn reproduce_fig3(args: &Args) -> Result<String> {
+    let quick = args.has("quick");
+    let platform = Platform::table2_soc();
+    let symbols = args.usize_or("symbols", 12)?;
+    let apps = vec![suite::wifi_tx(suite::WifiParams { symbols })];
+
+    let mut base = SimConfig::default();
+    base.max_jobs = args.usize_or("jobs", if quick { 200 } else { 1000 })?;
+    base.warmup_jobs = base.max_jobs / 10;
+    base.seed = args.usize_or("seed", 42)? as u64;
+    base.max_sim_us = 10_000_000.0; // cap deeply saturated points
+
+    let rates = args.rates_or(
+        "rates",
+        if quick {
+            &[1.0, 3.0, 5.0, 6.0, 7.0, 9.0]
+        } else {
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]
+        },
+    )?;
+    let scheds = args.list_or("scheds", &["met", "etf", "ilp"]);
+    let sched_refs: Vec<&str> = scheds.iter().map(String::as_str).collect();
+    let threads = args.usize_or("threads", default_threads())?;
+
+    let points = coordinator::fig3_points(&sched_refs, &rates, base.seed);
+    let results =
+        coordinator::run_sweep(&platform, &apps, &base, &points, threads)?;
+    let series = coordinator::latency_series(&results);
+
+    let mut out = String::from(
+        "Figure 3: results from different schedulers, WiFi-TX workload\n",
+    );
+    let mut rows = Vec::new();
+    for r in &results {
+        rows.push(vec![
+            r.point.scheduler.clone(),
+            format!("{:.1}", r.point.rate_per_ms),
+            format!("{:.1}", r.avg_latency_us),
+            format!("{:.3}", r.throughput_jobs_per_ms),
+            format!("{}/{}", r.completed_jobs, r.injected_jobs),
+        ]);
+    }
+    out.push_str(&plot::ascii_table(
+        &["scheduler", "jobs/ms", "avg exec us", "thru/ms", "done"],
+        &rows,
+    ));
+    out.push_str(&plot::ascii_chart(
+        "avg job execution time vs job injection rate",
+        "jobs/ms",
+        "us",
+        &series,
+        72,
+        20,
+    ));
+
+    // Shape assertions from the paper's discussion.
+    out.push_str(&fig3_shape_analysis(&results, &rates));
+
+    let csv_path = args.str_or("csv", "fig3.csv");
+    std::fs::write(&csv_path, plot::to_csv("rate_per_ms", &series))?;
+    out.push_str(&format!("wrote {csv_path}\n"));
+    Ok(out)
+}
+
+/// Check the qualitative claims of Figure 3 against sweep results.
+pub fn fig3_shape_analysis(
+    results: &[coordinator::SweepResult],
+    rates: &[f64],
+) -> String {
+    let get = |s: &str, r: f64| {
+        results
+            .iter()
+            .find(|x| {
+                x.point.scheduler == s
+                    && (x.point.rate_per_ms - r).abs() < 1e-9
+            })
+            .map(|x| x.avg_latency_us)
+    };
+    let lo = rates[0];
+    let hi = rates[rates.len() - 1];
+    let mut out = String::from("shape vs paper:\n");
+    if let (Some(m), Some(e), Some(i)) =
+        (get("met", lo), get("etf", lo), get("ilp", lo))
+    {
+        let spread = (m.max(e).max(i) - m.min(e).min(i))
+            / m.min(e).min(i).max(1e-9);
+        out.push_str(&format!(
+            "  low rate ({lo}/ms): met={m:.0} etf={e:.0} ilp={i:.0} us \
+             (spread {:.0}% — paper: 'all schedulers perform similar')\n",
+            spread * 100.0
+        ));
+    }
+    if let (Some(m), Some(e), Some(i)) =
+        (get("met", hi), get("etf", hi), get("ilp", hi))
+    {
+        let order_ok = e <= i && i <= m;
+        out.push_str(&format!(
+            "  high rate ({hi}/ms): met={m:.0} etf={e:.0} ilp={i:.0} us — \
+             ordering etf <= ilp <= met: {}\n",
+            if order_ok { "HOLDS (matches paper)" } else { "VIOLATED" }
+        ));
+    }
+    out
+}
+
+pub fn cmd_reproduce(args: &Args) -> Result<String> {
+    let what = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut out = String::new();
+    match what {
+        "table1" => out.push_str(&reproduce_table1()),
+        "table2" => out.push_str(&reproduce_table2()),
+        "fig2" => out.push_str(&reproduce_fig2()),
+        "fig3" => out.push_str(&reproduce_fig3(args)?),
+        "all" => {
+            out.push_str(&reproduce_table1());
+            out.push('\n');
+            out.push_str(&reproduce_table2());
+            out.push('\n');
+            out.push_str(&reproduce_fig2());
+            out.push('\n');
+            out.push_str(&reproduce_fig3(args)?);
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown experiment '{other}' (table1, table2, fig2, fig3, all)"
+            )))
+        }
+    }
+    Ok(out)
+}
+
+pub const USAGE: &str = "\
+ds3r — DSSoC simulation framework (DS3 reproduction)
+
+USAGE:
+  ds3r run       [--sched etf] [--rate 3.0] [--jobs 500] [--apps wifi-tx]
+                 [--symbols 12] [--governor ondemand] [--throttle 85]
+                 [--power-cap 6] [--gantt] [--traces] [--xla-thermal]
+                 [--record-trace out.json] [--trace-file in.json]
+                 [--platform table2|zcu102] [--config file.json] [--json]
+  ds3r sweep     [--scheds met,etf,ilp] [--rates 1:8:1] [--threads N]
+                 [--csv out.csv] (+ run flags)
+  ds3r reproduce [table1|table2|fig2|fig3|all] [--quick] [--jobs N]
+                 [--rates lo:hi:step] [--csv fig3.csv]
+  ds3r validate  [--jobs 200]
+  ds3r list
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = args("run --sched etf --jobs=100 --gantt --rate 2.5 pos2");
+        assert_eq!(a.positional, vec!["run", "pos2"]);
+        assert_eq!(a.str_or("sched", "x"), "etf");
+        assert_eq!(a.usize_or("jobs", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        assert!(a.has("gantt"));
+        assert!(!a.has("traces"));
+    }
+
+    #[test]
+    fn rate_range_expansion() {
+        let a = args("sweep --rates 1:3:0.5");
+        assert_eq!(
+            a.rates_or("rates", &[]).unwrap(),
+            vec![1.0, 1.5, 2.0, 2.5, 3.0]
+        );
+        let a = args("sweep --rates 1,4,9");
+        assert_eq!(a.rates_or("rates", &[]).unwrap(), vec![1.0, 4.0, 9.0]);
+        let a = args("sweep");
+        assert_eq!(a.rates_or("rates", &[7.0]).unwrap(), vec![7.0]);
+        assert!(args("x --rates 5:1:1").rates_or("rates", &[]).is_err());
+        assert!(args("x --rates a:b:c").rates_or("rates", &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args("sweep --scheds met,etf");
+        assert_eq!(a.list_or("scheds", &["x"]), vec!["met", "etf"]);
+        assert_eq!(args("sweep").list_or("scheds", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn config_from_args_applies_flags() {
+        let a = args(
+            "run --sched met --rate 4 --jobs 80 --warmup 8 --governor \
+             ondemand --throttle 80 --power-cap 5.5 --traces",
+        );
+        let c = config_from_args(&a).unwrap();
+        assert_eq!(c.scheduler, "met");
+        assert_eq!(c.injection_rate_per_ms, 4.0);
+        assert_eq!(c.max_jobs, 80);
+        assert_eq!(c.dtpm.governor, "ondemand");
+        assert!(c.dtpm.thermal_throttle);
+        assert_eq!(c.dtpm.throttle_temp_c, 80.0);
+        assert_eq!(c.dtpm.power_cap_w, Some(5.5));
+        assert!(c.capture_traces);
+    }
+
+    #[test]
+    fn app_and_platform_lookup() {
+        assert!(app_by_name("wifi-tx", 4, 4).is_ok());
+        assert!(app_by_name("pulse-doppler", 4, 4).is_ok());
+        assert!(app_by_name("tetris", 4, 4).is_err());
+        assert!(platform_by_name("table2").is_ok());
+        assert!(platform_by_name("zcu102").is_ok());
+        assert!(platform_by_name("m1-max").is_err());
+    }
+
+    #[test]
+    fn table1_matches_paper_values() {
+        let t = reproduce_table1();
+        for needle in ["scrambler-encoder", "296", "118", "16", "22"] {
+            assert!(t.contains(needle), "missing {needle} in:\n{t}");
+        }
+    }
+
+    #[test]
+    fn table2_shows_14_pes() {
+        let t = reproduce_table2();
+        assert!(t.contains("total PEs: 14"));
+        assert!(t.contains("A15"));
+        assert!(t.contains("ACC_FFT"));
+    }
+
+    #[test]
+    fn fig2_shows_pipeline() {
+        let t = reproduce_fig2();
+        assert!(t.contains("scrambler-encoder -> interleaver-0"));
+        assert!(t.contains("crc"));
+    }
+
+    #[test]
+    fn list_covers_everything() {
+        let t = cmd_list();
+        for s in ["met", "etf", "ilp", "ondemand", "wifi-tx", "zcu102"] {
+            assert!(t.contains(s));
+        }
+    }
+
+    #[test]
+    fn run_quick_smoke() {
+        let a = args("run --rate 0.5 --jobs 20 --warmup 2 --symbols 2");
+        let out = cmd_run(&a).unwrap();
+        assert!(out.contains("scheduler=etf"));
+        assert!(out.contains("completed=20"));
+    }
+}

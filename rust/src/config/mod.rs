@@ -1,0 +1,391 @@
+//! Configuration system: simulation, DTPM and workload parameters.
+//!
+//! Every knob the framework exposes lives in [`SimConfig`] and is
+//! (de)serializable as JSON so experiments are reproducible from a
+//! config file (`ds3r run --config exp.json`).  Defaults mirror the
+//! paper's scheduling case study (§3).
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Job inter-arrival process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Poisson process: exponential inter-arrival times (paper default:
+    /// "injects instances of an application ... following a given
+    /// probability distribution").
+    Poisson,
+    /// Fixed-period injection.
+    Periodic,
+    /// Uniform inter-arrival in `[0.5, 1.5] x mean`.
+    Uniform,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Result<ArrivalKind> {
+        match s {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "periodic" => Ok(ArrivalKind::Periodic),
+            "uniform" => Ok(ArrivalKind::Uniform),
+            other => Err(Error::Config(format!(
+                "unknown arrival process '{other}' \
+                 (poisson, periodic, uniform)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Periodic => "periodic",
+            ArrivalKind::Uniform => "uniform",
+        }
+    }
+}
+
+/// Dynamic thermal-power management configuration.
+#[derive(Debug, Clone)]
+pub struct DtpmConfig {
+    /// DTPM/DVFS decision epoch (µs).  Power is integrated and the
+    /// thermal model stepped at this period.
+    pub epoch_us: f64,
+    /// Governor: `performance`, `powersave`, `ondemand`, `userspace`.
+    pub governor: String,
+    /// Target frequency for the userspace governor (MHz).
+    pub userspace_mhz: f64,
+    /// Enable thermal throttling.
+    pub thermal_throttle: bool,
+    /// Throttle trip point, absolute °C.
+    pub throttle_temp_c: f64,
+    /// Optional SoC power cap (W): the power-cap policy lowers OPPs
+    /// while the last epoch's average power exceeds this.
+    pub power_cap_w: Option<f64>,
+}
+
+impl Default for DtpmConfig {
+    fn default() -> Self {
+        DtpmConfig {
+            epoch_us: 10_000.0, // 10 ms, Linux ondemand-style sampling
+            governor: "performance".into(),
+            userspace_mhz: 1000.0,
+            thermal_throttle: false,
+            throttle_temp_c: 85.0,
+            power_cap_w: None,
+        }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Scheduler name (see `sched::builtin_names`).
+    pub scheduler: String,
+    /// Mean job injection rate (jobs per millisecond) across all apps.
+    pub injection_rate_per_ms: f64,
+    pub arrival: ArrivalKind,
+    /// Total jobs to inject (0 = unbounded, stop on `max_sim_us`).
+    pub max_jobs: usize,
+    /// Jobs excluded from steady-state statistics (transient warmup).
+    pub warmup_jobs: usize,
+    pub seed: u64,
+    /// Scheduler window: max ready tasks passed per decision epoch.
+    pub max_ready: usize,
+    /// Fractional execution-time jitter (std of a truncated normal);
+    /// 0 disables. Models run-to-run hardware variance.
+    pub exec_jitter_frac: f64,
+    /// Model NoC contention.
+    pub noc_congestion: bool,
+    /// Relative injection weight per application in the workload mix
+    /// (empty = uniform).
+    pub app_weights: Vec<f64>,
+    pub dtpm: DtpmConfig,
+    /// Record a Gantt trace (first `gantt_limit` task executions).
+    pub capture_gantt: bool,
+    pub gantt_limit: usize,
+    /// Record per-epoch temperature/power traces.
+    pub capture_traces: bool,
+    /// Hard wall on simulated time (µs); guards saturated runs.
+    pub max_sim_us: f64,
+    /// Replay job arrivals from this JSON trace file instead of the
+    /// stochastic generator (see `jobgen::JobGen::from_trace_json`).
+    pub trace_file: Option<PathBuf>,
+    /// Artifacts directory override (etf-xla / XLA thermal path).
+    pub artifacts_dir: Option<PathBuf>,
+    /// Step the thermal model through the AOT PJRT artifact instead of
+    /// the native rust path (bit-compatible to ~1e-4; see DESIGN.md).
+    pub use_xla_thermal: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            scheduler: "etf".into(),
+            injection_rate_per_ms: 1.0,
+            arrival: ArrivalKind::Poisson,
+            max_jobs: 500,
+            warmup_jobs: 50,
+            seed: 42,
+            max_ready: 64,
+            exec_jitter_frac: 0.0,
+            noc_congestion: false,
+            app_weights: Vec::new(),
+            dtpm: DtpmConfig::default(),
+            capture_gantt: false,
+            gantt_limit: 10_000,
+            capture_traces: false,
+            max_sim_us: 60_000_000.0, // 60 s simulated
+            trace_file: None,
+            artifacts_dir: None,
+            use_xla_thermal: false,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.injection_rate_per_ms <= 0.0 {
+            return Err(Error::Config(
+                "injection_rate_per_ms must be > 0".into(),
+            ));
+        }
+        if self.max_ready == 0 {
+            return Err(Error::Config("max_ready must be >= 1".into()));
+        }
+        if self.warmup_jobs >= self.max_jobs && self.max_jobs > 0 {
+            return Err(Error::Config(format!(
+                "warmup_jobs ({}) must be < max_jobs ({})",
+                self.warmup_jobs, self.max_jobs
+            )));
+        }
+        if self.dtpm.epoch_us <= 0.0 {
+            return Err(Error::Config("dtpm.epoch_us must be > 0".into()));
+        }
+        if !(0.0..0.5).contains(&self.exec_jitter_frac) {
+            return Err(Error::Config(
+                "exec_jitter_frac must be in [0, 0.5)".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut d = Json::obj();
+        d.set("epoch_us", Json::Num(self.dtpm.epoch_us))
+            .set("governor", Json::Str(self.dtpm.governor.clone()))
+            .set("userspace_mhz", Json::Num(self.dtpm.userspace_mhz))
+            .set(
+                "thermal_throttle",
+                Json::Bool(self.dtpm.thermal_throttle),
+            )
+            .set("throttle_temp_c", Json::Num(self.dtpm.throttle_temp_c));
+        if let Some(cap) = self.dtpm.power_cap_w {
+            d.set("power_cap_w", Json::Num(cap));
+        }
+        let mut j = Json::obj();
+        j.set("scheduler", Json::Str(self.scheduler.clone()))
+            .set(
+                "injection_rate_per_ms",
+                Json::Num(self.injection_rate_per_ms),
+            )
+            .set("arrival", Json::Str(self.arrival.name().into()))
+            .set("max_jobs", Json::Num(self.max_jobs as f64))
+            .set("warmup_jobs", Json::Num(self.warmup_jobs as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("max_ready", Json::Num(self.max_ready as f64))
+            .set("exec_jitter_frac", Json::Num(self.exec_jitter_frac))
+            .set("noc_congestion", Json::Bool(self.noc_congestion))
+            .set(
+                "app_weights",
+                Json::Arr(
+                    self.app_weights.iter().map(|&w| Json::Num(w)).collect(),
+                ),
+            )
+            .set("dtpm", d)
+            .set("capture_gantt", Json::Bool(self.capture_gantt))
+            .set("capture_traces", Json::Bool(self.capture_traces))
+            .set("max_sim_us", Json::Num(self.max_sim_us))
+            .set("use_xla_thermal", Json::Bool(self.use_xla_thermal));
+        if let Some(tf) = &self.trace_file {
+            j.set(
+                "trace_file",
+                Json::Str(tf.to_string_lossy().into_owned()),
+            );
+        }
+        j
+    }
+
+    /// Parse from JSON; missing keys keep their defaults (so configs
+    /// only state what they change).
+    pub fn from_json(j: &Json) -> Result<SimConfig> {
+        let mut c = SimConfig::default();
+        if let Some(s) = j.get("scheduler").and_then(Json::as_str) {
+            c.scheduler = s.to_string();
+        }
+        if let Some(x) = j.get("injection_rate_per_ms").and_then(Json::as_f64)
+        {
+            c.injection_rate_per_ms = x;
+        }
+        if let Some(s) = j.get("arrival").and_then(Json::as_str) {
+            c.arrival = ArrivalKind::parse(s)?;
+        }
+        if let Some(x) = j.get("max_jobs").and_then(Json::as_usize) {
+            c.max_jobs = x;
+        }
+        if let Some(x) = j.get("warmup_jobs").and_then(Json::as_usize) {
+            c.warmup_jobs = x;
+        }
+        if let Some(x) = j.get("seed").and_then(Json::as_f64) {
+            c.seed = x as u64;
+        }
+        if let Some(x) = j.get("max_ready").and_then(Json::as_usize) {
+            c.max_ready = x;
+        }
+        if let Some(x) = j.get("exec_jitter_frac").and_then(Json::as_f64) {
+            c.exec_jitter_frac = x;
+        }
+        if let Some(b) = j.get("noc_congestion").and_then(Json::as_bool) {
+            c.noc_congestion = b;
+        }
+        if let Some(a) = j.get("app_weights").and_then(Json::as_arr) {
+            c.app_weights = a.iter().filter_map(Json::as_f64).collect();
+        }
+        if let Some(b) = j.get("capture_gantt").and_then(Json::as_bool) {
+            c.capture_gantt = b;
+        }
+        if let Some(b) = j.get("capture_traces").and_then(Json::as_bool) {
+            c.capture_traces = b;
+        }
+        if let Some(x) = j.get("max_sim_us").and_then(Json::as_f64) {
+            c.max_sim_us = x;
+        }
+        if let Some(b) = j.get("use_xla_thermal").and_then(Json::as_bool) {
+            c.use_xla_thermal = b;
+        }
+        if let Some(tf) = j.get("trace_file").and_then(Json::as_str) {
+            c.trace_file = Some(PathBuf::from(tf));
+        }
+        if let Some(d) = j.get("dtpm") {
+            if let Some(x) = d.get("epoch_us").and_then(Json::as_f64) {
+                c.dtpm.epoch_us = x;
+            }
+            if let Some(s) = d.get("governor").and_then(Json::as_str) {
+                c.dtpm.governor = s.to_string();
+            }
+            if let Some(x) = d.get("userspace_mhz").and_then(Json::as_f64) {
+                c.dtpm.userspace_mhz = x;
+            }
+            if let Some(b) =
+                d.get("thermal_throttle").and_then(Json::as_bool)
+            {
+                c.dtpm.thermal_throttle = b;
+            }
+            if let Some(x) = d.get("throttle_temp_c").and_then(Json::as_f64)
+            {
+                c.dtpm.throttle_temp_c = x;
+            }
+            if let Some(x) = d.get("power_cap_w").and_then(Json::as_f64) {
+                c.dtpm.power_cap_w = Some(x);
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SimConfig> {
+        SimConfig::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut c = SimConfig::default();
+        c.scheduler = "met".into();
+        c.injection_rate_per_ms = 7.5;
+        c.arrival = ArrivalKind::Periodic;
+        c.max_jobs = 1234;
+        c.warmup_jobs = 100;
+        c.seed = 99;
+        c.max_ready = 32;
+        c.exec_jitter_frac = 0.05;
+        c.noc_congestion = true;
+        c.app_weights = vec![2.0, 1.0];
+        c.dtpm.governor = "ondemand".into();
+        c.dtpm.epoch_us = 5000.0;
+        c.dtpm.thermal_throttle = true;
+        c.dtpm.power_cap_w = Some(6.5);
+        c.use_xla_thermal = true;
+        c.trace_file = Some(PathBuf::from("/tmp/trace.json"));
+        let j = c.to_json();
+        let c2 = SimConfig::from_json(&j).unwrap();
+        assert_eq!(c2.scheduler, "met");
+        assert_eq!(c2.injection_rate_per_ms, 7.5);
+        assert_eq!(c2.arrival, ArrivalKind::Periodic);
+        assert_eq!(c2.max_jobs, 1234);
+        assert_eq!(c2.warmup_jobs, 100);
+        assert_eq!(c2.seed, 99);
+        assert_eq!(c2.max_ready, 32);
+        assert_eq!(c2.exec_jitter_frac, 0.05);
+        assert!(c2.noc_congestion);
+        assert_eq!(c2.app_weights, vec![2.0, 1.0]);
+        assert_eq!(c2.dtpm.governor, "ondemand");
+        assert_eq!(c2.dtpm.epoch_us, 5000.0);
+        assert!(c2.dtpm.thermal_throttle);
+        assert_eq!(c2.dtpm.power_cap_w, Some(6.5));
+        assert!(c2.use_xla_thermal);
+        assert_eq!(c2.trace_file, Some(PathBuf::from("/tmp/trace.json")));
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"scheduler": "heft"}"#).unwrap();
+        let c = SimConfig::from_json(&j).unwrap();
+        assert_eq!(c.scheduler, "heft");
+        assert_eq!(c.max_jobs, SimConfig::default().max_jobs);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = SimConfig::default();
+        c.injection_rate_per_ms = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::default();
+        c.max_ready = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::default();
+        c.warmup_jobs = c.max_jobs;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::default();
+        c.exec_jitter_frac = 0.9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn arrival_parse() {
+        assert_eq!(
+            ArrivalKind::parse("poisson").unwrap(),
+            ArrivalKind::Poisson
+        );
+        assert!(ArrivalKind::parse("gaussian").is_err());
+    }
+}

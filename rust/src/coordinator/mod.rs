@@ -1,0 +1,324 @@
+//! Design-space exploration coordinator.
+//!
+//! "It allows the end user to evaluate workload scenarios exhaustively by
+//! sweeping the configuration space to determine the most suitable
+//! scheduling algorithm for a given SoC architecture" (paper §3).
+//!
+//! [`run_sweep`] fans simulation points (scheduler × injection rate ×
+//! seed) out over OS threads — each point is an independent
+//! [`Simulation`], so the sweep scales linearly with cores.  Helpers
+//! assemble the Figure-3 experiment and the hardware-validation
+//! comparison from sweep results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::app::AppGraph;
+use crate::config::SimConfig;
+use crate::platform::Platform;
+use crate::sim::Simulation;
+use crate::stats::SimReport;
+use crate::util::plot::Series;
+use crate::Result;
+
+/// One sweep point: a scheduler at an injection rate (and seed).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub scheduler: String,
+    pub rate_per_ms: f64,
+    pub seed: u64,
+}
+
+/// Condensed result of one sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub point: SweepPoint,
+    pub avg_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub throughput_jobs_per_ms: f64,
+    pub energy_per_job_mj: f64,
+    pub avg_power_w: f64,
+    pub completed_jobs: usize,
+    pub injected_jobs: usize,
+    pub sched_overhead_us: f64,
+    pub peak_temp_c: f64,
+}
+
+impl SweepResult {
+    fn from_report(point: SweepPoint, r: &SimReport) -> SweepResult {
+        let s = r.latency_summary();
+        SweepResult {
+            point,
+            avg_latency_us: s.mean,
+            p95_latency_us: s.p95,
+            throughput_jobs_per_ms: r.throughput_jobs_per_ms(),
+            energy_per_job_mj: r.energy_per_job_mj(),
+            avg_power_w: r.avg_power_w,
+            completed_jobs: r.completed_jobs,
+            injected_jobs: r.injected_jobs,
+            sched_overhead_us: r.sched_overhead_us(),
+            peak_temp_c: r.peak_temp_c,
+        }
+    }
+}
+
+/// Run every (scheduler, rate) combination, `threads`-wide.
+///
+/// The base config supplies everything except scheduler/rate/seed.
+/// Results come back in deterministic (scheduler, rate) input order.
+pub fn run_sweep(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    points: &[SweepPoint],
+    threads: usize,
+) -> Result<Vec<SweepResult>> {
+    let threads = threads.max(1);
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<SweepResult>>> =
+        Mutex::new(vec![None; points.len()]);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(points.len().max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let p = &points[i];
+                let mut cfg = base.clone();
+                cfg.scheduler = p.scheduler.clone();
+                cfg.injection_rate_per_ms = p.rate_per_ms;
+                cfg.seed = p.seed;
+                match Simulation::build(platform, apps, &cfg) {
+                    Ok(sim) => {
+                        let report = sim.run();
+                        results.lock().unwrap()[i] = Some(
+                            SweepResult::from_report(p.clone(), &report),
+                        );
+                    }
+                    Err(e) => {
+                        errors
+                            .lock()
+                            .unwrap()
+                            .push(format!("{}@{}: {e}", p.scheduler, p.rate_per_ms));
+                    }
+                }
+            });
+        }
+    });
+
+    let errs = errors.into_inner().unwrap();
+    if !errs.is_empty() {
+        return Err(crate::Error::Sim(format!(
+            "sweep failures: {}",
+            errs.join("; ")
+        )));
+    }
+    Ok(results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("all points filled"))
+        .collect())
+}
+
+/// Build the Figure-3 point grid: every scheduler at every rate.
+pub fn fig3_points(
+    schedulers: &[&str],
+    rates: &[f64],
+    seed: u64,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::with_capacity(schedulers.len() * rates.len());
+    for s in schedulers {
+        for &r in rates {
+            out.push(SweepPoint {
+                scheduler: s.to_string(),
+                rate_per_ms: r,
+                seed,
+            });
+        }
+    }
+    out
+}
+
+/// Convert sweep results into per-scheduler latency-vs-rate series
+/// (the Figure-3 plot).
+pub fn latency_series(results: &[SweepResult]) -> Vec<Series> {
+    let mut order: Vec<String> = Vec::new();
+    for r in results {
+        if !order.contains(&r.point.scheduler) {
+            order.push(r.point.scheduler.clone());
+        }
+    }
+    order
+        .into_iter()
+        .map(|name| {
+            let mut s = Series::new(name.clone());
+            for r in results.iter().filter(|r| r.point.scheduler == name) {
+                s.push(r.point.rate_per_ms, r.avg_latency_us);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Hardware-validation comparison (paper §3: "we also implemented a
+/// subset of the scheduling algorithms on the Xilinx Zynq FPGA and then
+/// compared the results ... with hardware measurements").
+///
+/// With no FPGA in this environment, the "measurement" reference is a
+/// fine-grained simulation variant — execution-time jitter from profile
+/// variance plus NoC contention — against which the deterministic
+/// analytical model is validated (DESIGN.md §Substitutions item 2).
+#[derive(Debug, Clone)]
+pub struct ValidationRow {
+    pub app: String,
+    pub scheduler: String,
+    pub model_us: f64,
+    pub reference_us: f64,
+    pub error_pct: f64,
+}
+
+pub fn validate(
+    platform: &Platform,
+    apps: &[AppGraph],
+    schedulers: &[&str],
+    jobs: usize,
+    seed: u64,
+) -> Result<Vec<ValidationRow>> {
+    let mut rows = Vec::new();
+    for (ai, app) in apps.iter().enumerate() {
+        let single = std::slice::from_ref(app);
+        for s in schedulers {
+            let mut cfg = SimConfig::default();
+            cfg.scheduler = s.to_string();
+            cfg.injection_rate_per_ms = 1.0;
+            cfg.max_jobs = jobs;
+            cfg.warmup_jobs = jobs / 10;
+            cfg.seed = seed + ai as u64;
+            let model =
+                Simulation::build(platform, single, &cfg)?.run();
+
+            let mut href = cfg.clone();
+            href.exec_jitter_frac = 0.08; // profiled run-to-run variance
+            href.noc_congestion = true;
+            let reference =
+                Simulation::build(platform, single, &href)?.run();
+
+            let m = model.avg_job_latency_us();
+            let h = reference.avg_job_latency_us();
+            rows.push(ValidationRow {
+                app: app.name.clone(),
+                scheduler: s.to_string(),
+                model_us: m,
+                reference_us: h,
+                error_pct: if h > 0.0 {
+                    (m - h).abs() / h * 100.0
+                } else {
+                    0.0
+                },
+            });
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+
+    fn small_base() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.max_jobs = 40;
+        c.warmup_jobs = 5;
+        c
+    }
+
+    #[test]
+    fn sweep_covers_grid_in_order() {
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let pts = fig3_points(&["met", "etf"], &[0.5, 1.0], 7);
+        assert_eq!(pts.len(), 4);
+        let res = run_sweep(&p, &apps, &small_base(), &pts, 4).unwrap();
+        assert_eq!(res.len(), 4);
+        for (r, pt) in res.iter().zip(&pts) {
+            assert_eq!(r.point.scheduler, pt.scheduler);
+            assert_eq!(r.point.rate_per_ms, pt.rate_per_ms);
+            assert_eq!(r.completed_jobs, 40);
+            assert!(r.avg_latency_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn sweep_parallel_matches_serial() {
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let pts = fig3_points(&["etf"], &[0.5, 2.0, 4.0], 3);
+        let serial = run_sweep(&p, &apps, &small_base(), &pts, 1).unwrap();
+        let par = run_sweep(&p, &apps, &small_base(), &pts, 8).unwrap();
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.avg_latency_us, b.avg_latency_us);
+            assert_eq!(a.completed_jobs, b.completed_jobs);
+        }
+    }
+
+    #[test]
+    fn sweep_propagates_bad_scheduler() {
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let pts = vec![SweepPoint {
+            scheduler: "bogus".into(),
+            rate_per_ms: 1.0,
+            seed: 1,
+        }];
+        assert!(run_sweep(&p, &apps, &small_base(), &pts, 2).is_err());
+    }
+
+    #[test]
+    fn series_grouping() {
+        let mk = |s: &str, r: f64, l: f64| SweepResult {
+            point: SweepPoint {
+                scheduler: s.into(),
+                rate_per_ms: r,
+                seed: 0,
+            },
+            avg_latency_us: l,
+            p95_latency_us: l,
+            throughput_jobs_per_ms: 0.0,
+            energy_per_job_mj: 0.0,
+            avg_power_w: 0.0,
+            completed_jobs: 0,
+            injected_jobs: 0,
+            sched_overhead_us: 0.0,
+            peak_temp_c: 0.0,
+        };
+        let res = vec![
+            mk("met", 1.0, 10.0),
+            mk("met", 2.0, 20.0),
+            mk("etf", 1.0, 8.0),
+        ];
+        let series = latency_series(&res);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].name, "met");
+        assert_eq!(series[0].points, vec![(1.0, 10.0), (2.0, 20.0)]);
+        assert_eq!(series[1].points, vec![(1.0, 8.0)]);
+    }
+
+    #[test]
+    fn validation_errors_are_bounded() {
+        let p = Platform::table2_soc();
+        let apps = vec![suite::single_carrier_tx()];
+        let rows = validate(&p, &apps, &["etf"], 60, 5).unwrap();
+        assert_eq!(rows.len(), 1);
+        // Model vs jittered reference should agree within ~15%.
+        assert!(
+            rows[0].error_pct < 15.0,
+            "validation error {}%",
+            rows[0].error_pct
+        );
+    }
+}

@@ -1,0 +1,411 @@
+//! Dynamic thermal-power management: DVFS governors and DTPM policies.
+//!
+//! "the proposed framework also features built-in DVFS governors deployed
+//! on commercial SoCs" (paper §1): `performance`, `powersave`,
+//! `ondemand` (Linux-style utilization ramp) and `userspace` are
+//! provided, plus two DTPM policies layered on top of the governor
+//! decision: a thermal-throttle trip (cap OPP while a trip temperature
+//! is exceeded, with hysteresis) and an SoC power cap.
+//!
+//! The per-epoch flow inside the simulation kernel:
+//!
+//! ```text
+//!   utilization -> governor -> requested OPP
+//!              -> thermal throttle / power cap -> granted OPP
+//!              -> power model -> thermal step (rust or XLA artifact)
+//! ```
+
+use crate::config::DtpmConfig;
+use crate::platform::Opp;
+#[cfg(test)]
+use crate::platform::Platform;
+use crate::{Error, Result};
+
+/// Per-cluster DVFS governor interface.
+pub trait Governor {
+    fn name(&self) -> &str;
+    /// Choose the OPP *index* for a cluster given its utilization over
+    /// the last epoch (max over member PEs, Linux-style) and the current
+    /// index.  `opps` is ascending in frequency.
+    fn decide(
+        &mut self,
+        cluster: usize,
+        utilization: f64,
+        current_idx: usize,
+        opps: &[Opp],
+    ) -> usize;
+}
+
+/// Always the highest OPP (Linux `performance`).
+#[derive(Debug, Default)]
+pub struct Performance;
+
+impl Governor for Performance {
+    fn name(&self) -> &str {
+        "performance"
+    }
+    fn decide(&mut self, _c: usize, _u: f64, _i: usize, opps: &[Opp]) -> usize {
+        opps.len() - 1
+    }
+}
+
+/// Always the lowest OPP (Linux `powersave`).
+#[derive(Debug, Default)]
+pub struct Powersave;
+
+impl Governor for Powersave {
+    fn name(&self) -> &str {
+        "powersave"
+    }
+    fn decide(&mut self, _c: usize, _u: f64, _i: usize, _o: &[Opp]) -> usize {
+        0
+    }
+}
+
+/// Linux `ondemand`: jump to max above `up_threshold`, otherwise scale
+/// frequency proportionally to utilization (then snap to the lowest OPP
+/// that covers the target).
+#[derive(Debug)]
+pub struct Ondemand {
+    pub up_threshold: f64,
+}
+
+impl Default for Ondemand {
+    fn default() -> Self {
+        Ondemand { up_threshold: 0.80 }
+    }
+}
+
+impl Governor for Ondemand {
+    fn name(&self) -> &str {
+        "ondemand"
+    }
+    fn decide(
+        &mut self,
+        _c: usize,
+        util: f64,
+        _current: usize,
+        opps: &[Opp],
+    ) -> usize {
+        if util >= self.up_threshold {
+            return opps.len() - 1;
+        }
+        // next_freq = max_freq * util / up_threshold  (kernel formula).
+        let target = opps[opps.len() - 1].freq_mhz * util / self.up_threshold;
+        opps.iter()
+            .position(|o| o.freq_mhz + 1e-9 >= target)
+            .unwrap_or(opps.len() - 1)
+    }
+}
+
+/// Fixed user-selected frequency (Linux `userspace`).
+#[derive(Debug)]
+pub struct Userspace {
+    pub target_mhz: f64,
+}
+
+impl Governor for Userspace {
+    fn name(&self) -> &str {
+        "userspace"
+    }
+    fn decide(&mut self, _c: usize, _u: f64, _i: usize, opps: &[Opp]) -> usize {
+        opps.iter()
+            .position(|o| o.freq_mhz + 1e-9 >= self.target_mhz)
+            .unwrap_or(opps.len() - 1)
+    }
+}
+
+/// Construct a governor by name.
+///
+/// `explore-xla` is resolved by the simulation kernel itself (it needs
+/// the batched PJRT artifact); the registry returns its fallback
+/// behaviour (performance) for the epochs before the artifact is ready.
+pub fn create_governor(cfg: &DtpmConfig) -> Result<Box<dyn Governor>> {
+    match cfg.governor.as_str() {
+        "performance" | "explore-xla" => Ok(Box::new(Performance)),
+        "powersave" => Ok(Box::new(Powersave)),
+        "ondemand" => Ok(Box::new(Ondemand::default())),
+        "userspace" => {
+            Ok(Box::new(Userspace { target_mhz: cfg.userspace_mhz }))
+        }
+        other => Err(Error::Config(format!(
+            "unknown governor '{other}' \
+             (performance, powersave, ondemand, userspace, explore-xla)"
+        ))),
+    }
+}
+
+/// Predictive DSE governor ("explore-xla"): every epoch, evaluate a grid
+/// of candidate (big, LITTLE) OPP pairs through the **batched** DTPM
+/// artifact (one PJRT call scores all K=16 candidates: predicted next
+/// temperature + SoC power) and pick the lowest-power candidate that
+/// (a) keeps the predicted hottest node below `t_limit_c` and (b) keeps
+/// the predicted utilization of every DVFS cluster below ~95% so
+/// throughput is not sacrificed.  This is the paper's "design space
+/// exploration of DTPM techniques" running *inside* the loop, powered by
+/// the Layer-1 Pallas kernel.
+#[derive(Debug)]
+pub struct ExploreDse {
+    pub t_limit_c: f64,
+    /// OPP-index candidates per (big, LITTLE) pair, filled at build time.
+    pub grid: Vec<(usize, usize)>,
+    pub picks: u64,
+}
+
+impl ExploreDse {
+    /// A 4x4 subsample of the (big, LITTLE) OPP ladder = K=16 candidates.
+    pub fn new(n_big_opps: usize, n_little_opps: usize, t_limit_c: f64) -> Self {
+        let pick4 = |n: usize| -> Vec<usize> {
+            if n <= 4 {
+                (0..n).collect()
+            } else {
+                vec![0, n / 3, 2 * n / 3, n - 1]
+            }
+        };
+        let mut grid = Vec::with_capacity(16);
+        for &b in &pick4(n_big_opps) {
+            for &l in &pick4(n_little_opps) {
+                grid.push((b, l));
+            }
+        }
+        grid.truncate(16);
+        ExploreDse { t_limit_c, grid, picks: 0 }
+    }
+
+    /// Choose the candidate index given per-candidate predictions.
+    /// `feasible[k]` = utilization guard; returns the feasible candidate
+    /// with minimal predicted power, falling back to the highest-
+    /// frequency candidate (last in the grid) if none is feasible.
+    pub fn choose(
+        &mut self,
+        p_sum: &[f64],
+        t_peak_next_c: &[f64],
+        feasible: &[bool],
+    ) -> usize {
+        self.picks += 1;
+        let mut best = (f64::INFINITY, usize::MAX);
+        for k in 0..self.grid.len().min(p_sum.len()) {
+            if !feasible[k] || t_peak_next_c[k] > self.t_limit_c {
+                continue;
+            }
+            if p_sum[k] < best.0 {
+                best = (p_sum[k], k);
+            }
+        }
+        if best.1 == usize::MAX {
+            self.grid.len().min(p_sum.len()) - 1
+        } else {
+            best.1
+        }
+    }
+}
+
+/// Thermal-throttle policy with hysteresis: while any PE temperature is
+/// above `trip_c`, cap the OPP index; release only below
+/// `trip_c - hysteresis_c`.
+#[derive(Debug)]
+pub struct ThermalThrottle {
+    pub trip_c: f64,
+    pub hysteresis_c: f64,
+    /// Max OPP index while throttled (0 = force minimum).
+    pub capped_idx: usize,
+    engaged: bool,
+    pub engagements: u64,
+}
+
+impl ThermalThrottle {
+    pub fn new(trip_c: f64) -> ThermalThrottle {
+        ThermalThrottle {
+            trip_c,
+            hysteresis_c: 5.0,
+            capped_idx: 0,
+            engaged: false,
+            engagements: 0,
+        }
+    }
+
+    /// Apply the policy to a requested OPP index given the hottest PE
+    /// temperature (absolute °C).
+    pub fn apply(&mut self, requested_idx: usize, t_max_c: f64) -> usize {
+        if self.engaged {
+            if t_max_c < self.trip_c - self.hysteresis_c {
+                self.engaged = false;
+            }
+        } else if t_max_c >= self.trip_c {
+            self.engaged = true;
+            self.engagements += 1;
+        }
+        if self.engaged {
+            requested_idx.min(self.capped_idx)
+        } else {
+            requested_idx
+        }
+    }
+
+    pub fn is_engaged(&self) -> bool {
+        self.engaged
+    }
+}
+
+/// SoC power cap: steps OPPs down one notch per epoch while the last
+/// epoch's average power exceeded the cap, and back up when there is
+/// at least 20% headroom.
+#[derive(Debug)]
+pub struct PowerCap {
+    pub cap_w: f64,
+    /// Current number of notches removed from the requested index.
+    backoff: usize,
+    pub violations: u64,
+}
+
+impl PowerCap {
+    pub fn new(cap_w: f64) -> PowerCap {
+        PowerCap { cap_w, backoff: 0, violations: 0 }
+    }
+
+    pub fn apply(&mut self, requested_idx: usize, last_power_w: f64) -> usize {
+        if last_power_w > self.cap_w {
+            self.backoff = (self.backoff + 1).min(16);
+            self.violations += 1;
+        } else if last_power_w < 0.8 * self.cap_w && self.backoff > 0 {
+            self.backoff -= 1;
+        }
+        requested_idx.saturating_sub(self.backoff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    fn big_opps() -> Vec<Opp> {
+        let p = Platform::table2_soc();
+        p.classes[p.class_index("A15").unwrap()].opps.clone()
+    }
+
+    #[test]
+    fn performance_always_max() {
+        let opps = big_opps();
+        let mut g = Performance;
+        for u in [0.0, 0.3, 1.0] {
+            assert_eq!(g.decide(0, u, 0, &opps), opps.len() - 1);
+        }
+    }
+
+    #[test]
+    fn powersave_always_min() {
+        let opps = big_opps();
+        let mut g = Powersave;
+        assert_eq!(g.decide(0, 1.0, 5, &opps), 0);
+    }
+
+    #[test]
+    fn ondemand_jumps_to_max_above_threshold() {
+        let opps = big_opps();
+        let mut g = Ondemand::default();
+        assert_eq!(g.decide(0, 0.85, 0, &opps), opps.len() - 1);
+        assert_eq!(g.decide(0, 1.0, 0, &opps), opps.len() - 1);
+    }
+
+    #[test]
+    fn ondemand_scales_proportionally_below_threshold() {
+        let opps = big_opps();
+        let mut g = Ondemand::default();
+        // util 0.4 / 0.8 threshold * 2000 MHz = 1000 MHz target.
+        let idx = g.decide(0, 0.4, 0, &opps);
+        assert!(opps[idx].freq_mhz >= 1000.0);
+        assert!(idx < opps.len() - 1);
+        // idle -> min.
+        assert_eq!(g.decide(0, 0.0, 3, &opps), 0);
+        // Monotone in utilization.
+        let mut last = 0;
+        for u in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7] {
+            let i = g.decide(0, u, 0, &opps);
+            assert!(i >= last, "non-monotone at {u}");
+            last = i;
+        }
+    }
+
+    #[test]
+    fn userspace_snaps_to_requested() {
+        let opps = big_opps();
+        let mut g = Userspace { target_mhz: 1000.0 };
+        let idx = g.decide(0, 0.0, 0, &opps);
+        assert_eq!(opps[idx].freq_mhz, 1000.0);
+        let mut g = Userspace { target_mhz: 999999.0 };
+        assert_eq!(g.decide(0, 0.0, 0, &opps), opps.len() - 1);
+    }
+
+    #[test]
+    fn governor_registry() {
+        let mut cfg = DtpmConfig::default();
+        for name in ["performance", "powersave", "ondemand", "userspace"] {
+            cfg.governor = name.into();
+            assert_eq!(create_governor(&cfg).unwrap().name(), name);
+        }
+        cfg.governor = "warp-speed".into();
+        assert!(create_governor(&cfg).is_err());
+    }
+
+    #[test]
+    fn throttle_engages_and_releases_with_hysteresis() {
+        let mut t = ThermalThrottle::new(85.0);
+        assert_eq!(t.apply(9, 70.0), 9);
+        assert!(!t.is_engaged());
+        // Trip.
+        assert_eq!(t.apply(9, 86.0), 0);
+        assert!(t.is_engaged());
+        // Still above release point (80): stays engaged.
+        assert_eq!(t.apply(9, 82.0), 0);
+        // Below release: free again.
+        assert_eq!(t.apply(9, 79.0), 9);
+        assert!(!t.is_engaged());
+        assert_eq!(t.engagements, 1);
+    }
+
+    #[test]
+    fn explore_grid_is_k16_for_table2() {
+        let p = Platform::table2_soc();
+        let n_big = p.classes[p.class_index("A15").unwrap()].opps.len();
+        let n_little = p.classes[p.class_index("A7").unwrap()].opps.len();
+        let e = ExploreDse::new(n_big, n_little, 85.0);
+        assert_eq!(e.grid.len(), 16);
+        // Grid spans the ladder ends.
+        assert!(e.grid.contains(&(0, 0)));
+        assert!(e.grid.contains(&(n_big - 1, n_little - 1)));
+    }
+
+    #[test]
+    fn explore_choose_prefers_lowest_feasible_power() {
+        let mut e = ExploreDse::new(10, 7, 85.0);
+        let k = e.grid.len();
+        let p_sum: Vec<f64> = (0..k).map(|i| 10.0 - i as f64 * 0.5).collect();
+        let mut t_next = vec![50.0; k];
+        let mut feasible = vec![true; k];
+        // Lowest power is the last candidate.
+        assert_eq!(e.choose(&p_sum, &t_next, &feasible), k - 1);
+        // Thermal violation knocks it out.
+        t_next[k - 1] = 90.0;
+        assert_eq!(e.choose(&p_sum, &t_next, &feasible), k - 2);
+        // Infeasible utilization knocks the next out too.
+        feasible[k - 2] = false;
+        assert_eq!(e.choose(&p_sum, &t_next, &feasible), k - 3);
+        // Nothing feasible -> fall back to max-frequency candidate.
+        let none = vec![false; k];
+        assert_eq!(e.choose(&p_sum, &vec![50.0; k], &none), k - 1);
+        assert_eq!(e.picks, 4);
+    }
+
+    #[test]
+    fn power_cap_backs_off_and_recovers() {
+        let mut c = PowerCap::new(5.0);
+        assert_eq!(c.apply(9, 4.0), 9);
+        assert_eq!(c.apply(9, 6.0), 8); // one notch
+        assert_eq!(c.apply(9, 6.0), 7); // two
+        assert_eq!(c.apply(9, 4.5), 7); // within cap but <20% headroom
+        assert_eq!(c.apply(9, 3.0), 8); // recovering
+        assert_eq!(c.apply(9, 3.0), 9);
+        assert_eq!(c.violations, 2);
+    }
+}

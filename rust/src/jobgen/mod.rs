@@ -1,0 +1,292 @@
+//! Job generator: injects application instances into the simulation.
+//!
+//! "The simulation is driven by the job generator which injects instances
+//! of an application to the simulator following a given probability
+//! distribution" (paper §2).  Supported inter-arrival processes:
+//! Poisson (exponential), periodic, and uniform; the application for each
+//! job is drawn from the configured mix weights.  A recorded trace can be
+//! replayed for exact cross-scheduler comparisons.
+
+use crate::config::ArrivalKind;
+use crate::rng::Rng;
+
+/// One planned job arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobArrival {
+    pub at_us: f64,
+    pub app: usize,
+}
+
+/// Generates the arrival stream.
+pub struct JobGen {
+    kind: ArrivalKind,
+    /// Mean inter-arrival time (µs).
+    mean_iat_us: f64,
+    weights: Vec<f64>,
+    rng: Rng,
+    next_at: f64,
+    emitted: usize,
+    max_jobs: usize,
+    /// Replay source: when set, arrivals come verbatim from this trace
+    /// (recorded by [`JobGen::record_trace`] or loaded from JSON) —
+    /// exact cross-scheduler comparisons with identical arrivals.
+    trace: Option<Vec<JobArrival>>,
+}
+
+impl JobGen {
+    /// `rate_per_ms` is the aggregate injection rate over all apps;
+    /// `weights` picks the app per job (empty = uniform over `n_apps`).
+    pub fn new(
+        kind: ArrivalKind,
+        rate_per_ms: f64,
+        n_apps: usize,
+        weights: &[f64],
+        max_jobs: usize,
+        seed: u64,
+    ) -> JobGen {
+        assert!(rate_per_ms > 0.0);
+        assert!(n_apps > 0);
+        let weights = if weights.is_empty() {
+            vec![1.0; n_apps]
+        } else {
+            assert_eq!(
+                weights.len(),
+                n_apps,
+                "app_weights length must match workload size"
+            );
+            weights.to_vec()
+        };
+        JobGen {
+            kind,
+            mean_iat_us: 1000.0 / rate_per_ms,
+            weights,
+            rng: Rng::new(seed ^ 0x10B6_E75A_17C0_FFEE),
+            next_at: 0.0,
+            emitted: 0,
+            max_jobs,
+            trace: None,
+        }
+    }
+
+    /// Replay an explicit arrival trace (`max_jobs` still truncates when
+    /// non-zero).  Arrival times must be strictly increasing.
+    pub fn from_trace(trace: Vec<JobArrival>, max_jobs: usize) -> JobGen {
+        debug_assert!(trace
+            .windows(2)
+            .all(|w| w[1].at_us > w[0].at_us));
+        JobGen {
+            kind: ArrivalKind::Periodic, // unused in replay mode
+            mean_iat_us: 0.0,
+            weights: vec![1.0],
+            rng: Rng::new(0),
+            next_at: 0.0,
+            emitted: 0,
+            max_jobs,
+            trace: Some(trace),
+        }
+    }
+
+    /// Load a trace from JSON: `{"arrivals": [{"at_us": t, "app": a}, ...]}`.
+    pub fn from_trace_json(
+        j: &crate::util::json::Json,
+        max_jobs: usize,
+    ) -> crate::Result<JobGen> {
+        let mut trace = Vec::new();
+        for a in j.req_arr("arrivals")? {
+            trace.push(JobArrival {
+                at_us: a.req_f64("at_us")?,
+                app: a.req_f64("app")? as usize,
+            });
+        }
+        if trace.windows(2).any(|w| w[1].at_us <= w[0].at_us) {
+            return Err(crate::Error::Config(
+                "trace arrivals must be strictly increasing".into(),
+            ));
+        }
+        Ok(JobGen::from_trace(trace, max_jobs))
+    }
+
+    /// Serialize a trace to JSON (the inverse of `from_trace_json`).
+    pub fn trace_to_json(trace: &[JobArrival]) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut arr = Vec::with_capacity(trace.len());
+        for a in trace {
+            let mut o = Json::obj();
+            o.set("at_us", Json::Num(a.at_us));
+            o.set("app", Json::Num(a.app as f64));
+            arr.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("arrivals", Json::Arr(arr));
+        j
+    }
+
+    /// Next arrival, or `None` when `max_jobs` have been emitted.
+    pub fn next(&mut self) -> Option<JobArrival> {
+        if self.max_jobs > 0 && self.emitted >= self.max_jobs {
+            return None;
+        }
+        if let Some(trace) = &self.trace {
+            let a = trace.get(self.emitted).copied();
+            if a.is_some() {
+                self.emitted += 1;
+            }
+            return a;
+        }
+        let iat = match self.kind {
+            ArrivalKind::Poisson => {
+                self.rng.exp(1.0 / self.mean_iat_us)
+            }
+            ArrivalKind::Periodic => self.mean_iat_us,
+            ArrivalKind::Uniform => self
+                .rng
+                .uniform(0.5 * self.mean_iat_us, 1.5 * self.mean_iat_us),
+        };
+        self.next_at += iat;
+        self.emitted += 1;
+        let app = self.rng.choose_weighted(&self.weights);
+        Some(JobArrival { at_us: self.next_at, app })
+    }
+
+    /// Drain the whole stream (trace recording).
+    pub fn record_trace(mut self) -> Vec<JobArrival> {
+        let mut out = Vec::new();
+        while let Some(a) = self.next() {
+            out.push(a);
+        }
+        out
+    }
+
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate_is_calibrated() {
+        let mut g = JobGen::new(
+            ArrivalKind::Poisson,
+            5.0, // 5 jobs/ms -> mean IAT 200 µs
+            1,
+            &[],
+            20_000,
+            7,
+        );
+        let mut last = 0.0;
+        let mut sum = 0.0;
+        let mut n = 0;
+        while let Some(a) = g.next() {
+            sum += a.at_us - last;
+            last = a.at_us;
+            n += 1;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 200.0).abs() < 5.0, "mean IAT {mean}");
+    }
+
+    #[test]
+    fn periodic_is_exact() {
+        let mut g =
+            JobGen::new(ArrivalKind::Periodic, 2.0, 1, &[], 10, 7);
+        let times: Vec<f64> =
+            std::iter::from_fn(|| g.next().map(|a| a.at_us)).collect();
+        for (i, t) in times.iter().enumerate() {
+            assert!((t - 500.0 * (i + 1) as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut g =
+            JobGen::new(ArrivalKind::Uniform, 1.0, 1, &[], 5000, 11);
+        let mut last = 0.0;
+        while let Some(a) = g.next() {
+            let iat = a.at_us - last;
+            assert!((500.0..=1500.0).contains(&iat), "iat {iat}");
+            last = a.at_us;
+        }
+    }
+
+    #[test]
+    fn respects_max_jobs() {
+        let mut g =
+            JobGen::new(ArrivalKind::Poisson, 1.0, 1, &[], 17, 1);
+        let n = std::iter::from_fn(|| g.next()).count();
+        assert_eq!(n, 17);
+        assert_eq!(g.emitted(), 17);
+    }
+
+    #[test]
+    fn app_mix_follows_weights() {
+        let mut g = JobGen::new(
+            ArrivalKind::Poisson,
+            1.0,
+            3,
+            &[1.0, 0.0, 3.0],
+            40_000,
+            13,
+        );
+        let mut counts = [0usize; 3];
+        while let Some(a) = g.next() {
+            counts[a.app] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn trace_replay_is_verbatim() {
+        let recorded = JobGen::new(ArrivalKind::Poisson, 3.0, 2, &[], 50, 9)
+            .record_trace();
+        let replayed =
+            JobGen::from_trace(recorded.clone(), 0).record_trace();
+        assert_eq!(recorded, replayed);
+        // Truncation works.
+        let short = JobGen::from_trace(recorded.clone(), 10).record_trace();
+        assert_eq!(short.len(), 10);
+        assert_eq!(short[..], recorded[..10]);
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let recorded =
+            JobGen::new(ArrivalKind::Uniform, 2.0, 3, &[], 30, 4)
+                .record_trace();
+        let j = JobGen::trace_to_json(&recorded);
+        let back = JobGen::from_trace_json(&j, 0).unwrap().record_trace();
+        assert_eq!(recorded, back);
+    }
+
+    #[test]
+    fn trace_json_rejects_unsorted() {
+        let j = crate::util::json::Json::parse(
+            r#"{"arrivals": [{"at_us": 5, "app": 0}, {"at_us": 3, "app": 0}]}"#,
+        )
+        .unwrap();
+        assert!(JobGen::from_trace_json(&j, 0).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let trace = |seed| {
+            JobGen::new(ArrivalKind::Poisson, 2.0, 2, &[], 100, seed)
+                .record_trace()
+        };
+        assert_eq!(trace(5), trace(5));
+        assert_ne!(trace(5), trace(6));
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        let trace = JobGen::new(ArrivalKind::Poisson, 10.0, 1, &[], 1000, 3)
+            .record_trace();
+        for w in trace.windows(2) {
+            assert!(w[1].at_us > w[0].at_us);
+        }
+    }
+}

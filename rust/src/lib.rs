@@ -1,0 +1,94 @@
+//! # DS3R — a simulation framework for domain-specific SoCs
+//!
+//! Rust reproduction of *"Work-in-Progress: A Simulation Framework for
+//! Domain-Specific System-on-Chips"* (Arda et al., CODES/ISSS 2019), the
+//! paper that introduced the open-source **DS3** framework.
+//!
+//! DS3R is a discrete-event simulator for heterogeneous, domain-specific
+//! SoCs.  It models:
+//!
+//! * **Applications** as DAGs of tasks with per-PE execution-time profiles
+//!   ([`app`], [`platform`]) — including the paper's five-application
+//!   benchmark suite from the wireless-communication and radar domains.
+//! * **Job injection** following configurable stochastic processes
+//!   ([`jobgen`]).
+//! * **Scheduling** through a plug-and-play [`sched::Scheduler`] trait with
+//!   the paper's three built-ins (MET, ETF, table/ILP) plus extension
+//!   baselines (HEFT, random, round-robin).
+//! * **Power, thermal, and DVFS** dynamics ([`power`], [`thermal`],
+//!   [`dtpm`]) with Linux-style governors and DTPM policies; the batched
+//!   thermal/power epoch update can run through an AOT-compiled
+//!   JAX/Pallas artifact via PJRT ([`runtime`]).
+//! * **Interconnect** latency with an analytical mesh NoC model ([`noc`]).
+//! * **Reporting** of schedules (Gantt), latency, throughput, energy and
+//!   temperature ([`stats`]), plus a multithreaded design-space sweep
+//!   coordinator ([`coordinator`]).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack; Layers 1-2
+//! (Pallas kernels + JAX models) live in `python/compile/` and are only
+//! used at build time to produce `artifacts/*.hlo.txt`.  Python is never
+//! on the simulation path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ds3r::prelude::*;
+//!
+//! let platform = Platform::table2_soc();          // Table 2 of the paper
+//! let app = ds3r::app::suite::wifi_tx(Default::default());
+//! let mut cfg = SimConfig::default();
+//! cfg.scheduler = "etf".into();
+//! cfg.injection_rate_per_ms = 3.0;
+//! cfg.max_jobs = 1000;
+//! let report = Simulation::build(&platform, &[app], &cfg).unwrap().run();
+//! println!("avg job latency = {:.1} us", report.avg_job_latency_us());
+//! ```
+
+pub mod app;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dtpm;
+pub mod jobgen;
+pub mod noc;
+pub mod platform;
+pub mod power;
+pub mod rng;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stats;
+pub mod thermal;
+pub mod util;
+
+/// Common imports for downstream users.
+pub mod prelude {
+    pub use crate::app::{AppGraph, TaskSpec};
+    pub use crate::config::SimConfig;
+    pub use crate::platform::{PeType, Platform};
+    pub use crate::sched::Scheduler;
+    pub use crate::sim::{SimReport, Simulation};
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("platform error: {0}")]
+    Platform(String),
+    #[error("application graph error: {0}")]
+    App(String),
+    #[error("scheduler error: {0}")]
+    Sched(String),
+    #[error("simulation error: {0}")]
+    Sim(String),
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

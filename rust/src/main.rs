@@ -1,0 +1,27 @@
+//! ds3r launcher: parses the subcommand and dispatches to `cli`.
+
+use ds3r::cli::{self, Args};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "run" => cli::cmd_run(&args),
+        "sweep" => cli::cmd_sweep(&args),
+        "reproduce" => cli::cmd_reproduce(&args),
+        "validate" => cli::cmd_validate(&args),
+        "list" => Ok(cli::cmd_list()),
+        "help" | "--help" | "-h" => Ok(cli::USAGE.to_string()),
+        other => Err(ds3r::Error::Config(format!(
+            "unknown command '{other}'\n\n{}",
+            cli::USAGE
+        ))),
+    };
+    match result {
+        Ok(text) => print!("{text}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Analytical interconnect and memory latency model.
+//!
+//! The paper: "the framework employs analytical latency models to
+//! estimate interconnect delays on the SoC" and "the memory access and
+//! on-chip interconnect latency are modeled by the proposed framework".
+//!
+//! DS3R models a 2-D mesh NoC with X-Y routing.  A producer→consumer
+//! transfer of `bytes` between PEs `a` and `b` costs
+//!
+//! ```text
+//!   latency = hops(a, b) * hop_latency + bytes / link_bandwidth
+//!             + mem_latency                 (shared-memory staging)
+//! ```
+//!
+//! plus an optional congestion factor that grows with tracked concurrent
+//! flows (first-order contention model, can be disabled for ablations).
+//! Same-PE transfers are free (data stays in local memory).
+
+use crate::platform::Platform;
+
+/// Interconnect model state.
+#[derive(Debug, Clone)]
+pub struct NocModel {
+    hop_latency_us: f64,
+    link_bandwidth: f64,
+    mem_latency_us: f64,
+    /// Precomputed Manhattan hop counts, `n_pes x n_pes` row-major.
+    hops: Vec<u8>,
+    n_pes: usize,
+    /// Congestion modelling (None = contention-free).
+    congestion: Option<CongestionState>,
+}
+
+#[derive(Debug, Clone)]
+struct CongestionState {
+    /// Exponential moving average of concurrent flows.
+    ema_flows: f64,
+    /// Flows currently in flight.
+    active_flows: usize,
+    /// Latency multiplier per concurrent flow beyond the first.
+    alpha: f64,
+}
+
+impl NocModel {
+    pub fn new(platform: &Platform, model_congestion: bool) -> NocModel {
+        let n = platform.n_pes();
+        let mut hops = vec![0u8; n * n];
+        for a in 0..n {
+            for b in 0..n {
+                hops[a * n + b] = platform.hops(a, b) as u8;
+            }
+        }
+        NocModel {
+            hop_latency_us: platform.noc.hop_latency_us,
+            link_bandwidth: platform.noc.link_bandwidth,
+            mem_latency_us: platform.noc.mem_latency_us,
+            hops,
+            n_pes: n,
+            congestion: model_congestion.then(|| CongestionState {
+                ema_flows: 0.0,
+                active_flows: 0,
+                alpha: 0.15,
+            }),
+        }
+    }
+
+    #[inline]
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        self.hops[a * self.n_pes + b] as usize
+    }
+
+    /// Latency (µs) to move `bytes` from PE `src` to PE `dst`.
+    #[inline]
+    pub fn transfer_us(&self, src: usize, dst: usize, bytes: u64) -> f64 {
+        if src == dst || bytes == 0 {
+            return 0.0;
+        }
+        let base = self.hops(src, dst) as f64 * self.hop_latency_us
+            + bytes as f64 / self.link_bandwidth
+            + self.mem_latency_us;
+        match &self.congestion {
+            Some(c) => {
+                let extra = (c.ema_flows - 1.0).max(0.0);
+                base * (1.0 + c.alpha * extra)
+            }
+            None => base,
+        }
+    }
+
+    /// Record the start/end of a transfer (congestion tracking).  The
+    /// simulation kernel calls these around each NoC transfer event.
+    pub fn flow_started(&mut self) {
+        if let Some(c) = &mut self.congestion {
+            c.active_flows += 1;
+            c.ema_flows =
+                0.9 * c.ema_flows + 0.1 * c.active_flows as f64;
+        }
+    }
+
+    pub fn flow_finished(&mut self) {
+        if let Some(c) = &mut self.congestion {
+            c.active_flows = c.active_flows.saturating_sub(1);
+            c.ema_flows =
+                0.9 * c.ema_flows + 0.1 * c.active_flows as f64;
+        }
+    }
+
+    pub fn models_congestion(&self) -> bool {
+        self.congestion.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    fn model() -> NocModel {
+        NocModel::new(&Platform::table2_soc(), false)
+    }
+
+    #[test]
+    fn same_pe_is_free() {
+        let m = model();
+        assert_eq!(m.transfer_us(3, 3, 100_000), 0.0);
+        assert_eq!(m.transfer_us(0, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn latency_grows_with_distance_and_bytes() {
+        let p = Platform::table2_soc();
+        let m = model();
+        // Find a far pair and a near pair.
+        let near = (0usize, 1usize);
+        let mut far = (0usize, 0usize);
+        let mut best = 0;
+        for a in 0..p.n_pes() {
+            for b in 0..p.n_pes() {
+                if p.hops(a, b) > best {
+                    best = p.hops(a, b);
+                    far = (a, b);
+                }
+            }
+        }
+        assert!(
+            m.transfer_us(far.0, far.1, 512)
+                > m.transfer_us(near.0, near.1, 512)
+        );
+        assert!(
+            m.transfer_us(0, 1, 8192) > m.transfer_us(0, 1, 64)
+        );
+    }
+
+    #[test]
+    fn hops_match_platform() {
+        let p = Platform::table2_soc();
+        let m = model();
+        for a in 0..p.n_pes() {
+            for b in 0..p.n_pes() {
+                assert_eq!(m.hops(a, b), p.hops(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn congestion_increases_latency() {
+        let mut m = NocModel::new(&Platform::table2_soc(), true);
+        let quiet = m.transfer_us(0, 5, 1024);
+        for _ in 0..50 {
+            m.flow_started();
+        }
+        let busy = m.transfer_us(0, 5, 1024);
+        assert!(busy > quiet, "busy={busy} quiet={quiet}");
+        for _ in 0..50 {
+            m.flow_finished();
+        }
+        // EMA decays back toward quiet.
+        let after = m.transfer_us(0, 5, 1024);
+        assert!(after < busy);
+    }
+
+    #[test]
+    fn contention_free_is_deterministic() {
+        let mut m = model();
+        let x = m.transfer_us(0, 9, 2048);
+        m.flow_started(); // no-op without congestion state
+        assert_eq!(m.transfer_us(0, 9, 2048), x);
+    }
+}

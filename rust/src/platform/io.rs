@@ -1,0 +1,362 @@
+//! Platform (de)serialization: define custom DSSoCs in JSON.
+//!
+//! Together with the JSON application format (`AppGraph::from_json`)
+//! this makes the whole design space file-driven: a platform file, an
+//! application file, and a `SimConfig` fully describe an experiment.
+//!
+//! ```json
+//! {
+//!   "name": "my-dssoc",
+//!   "mesh": {"x": 4, "y": 4, "hop_latency_us": 0.05,
+//!            "link_bandwidth": 8000, "mem_latency_us": 0.5},
+//!   "classes": [
+//!     {"name": "A15", "type": "big", "nominal_mhz": 2000,
+//!      "ceff": 5.5e-4, "leak_k1": 7.5e-3, "leak_k2": 0.025,
+//!      "opps": [[200, 0.9], [2000, 1.31]]}
+//!   ],
+//!   "clusters": [
+//!     {"name": "A15", "class": "A15", "thermal_node": 0,
+//!      "pes": [[0, 3], [1, 3]]}
+//!   ],
+//!   "floorplan": {
+//!     "nodes": [{"name": "big", "capacitance": 0.35, "g_amb": 0.12}],
+//!     "couplings": [[0, 1, 0.3]]
+//!   }
+//! }
+//! ```
+
+use super::{
+    Cluster, NocParams, Opp, Pe, PeClass, PeType, Platform,
+    ThermalFloorplan,
+};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+impl PeType {
+    fn parse(s: &str) -> Result<PeType> {
+        match s {
+            "big" => Ok(PeType::BigCore),
+            "LITTLE" | "little" => Ok(PeType::LittleCore),
+            "accelerator" => Ok(PeType::Accelerator),
+            other => Err(Error::Platform(format!(
+                "unknown PE type '{other}' (big, LITTLE, accelerator)"
+            ))),
+        }
+    }
+}
+
+impl Platform {
+    /// Parse a platform description (see module docs for the schema).
+    pub fn from_json(j: &Json) -> Result<Platform> {
+        let name = j.req_str("name")?.to_string();
+
+        // --- NoC ---
+        let noc = match j.get("mesh") {
+            None => NocParams::default(),
+            Some(m) => NocParams {
+                mesh_x: m.req_f64("x")? as usize,
+                mesh_y: m.req_f64("y")? as usize,
+                hop_latency_us: m
+                    .get("hop_latency_us")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(NocParams::default().hop_latency_us),
+                link_bandwidth: m
+                    .get("link_bandwidth")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(NocParams::default().link_bandwidth),
+                mem_latency_us: m
+                    .get("mem_latency_us")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(NocParams::default().mem_latency_us),
+            },
+        };
+
+        // --- classes ---
+        let mut classes = Vec::new();
+        for jc in j.req_arr("classes")? {
+            let opps = jc
+                .req_arr("opps")?
+                .iter()
+                .map(|o| {
+                    let pair = o.f64_vec()?;
+                    if pair.len() != 2 {
+                        return Err(Error::Platform(
+                            "opp must be [freq_mhz, volt]".into(),
+                        ));
+                    }
+                    Ok(Opp { freq_mhz: pair[0], volt: pair[1] })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            classes.push(PeClass {
+                name: jc.req_str("name")?.to_string(),
+                ty: PeType::parse(jc.req_str("type")?)?,
+                nominal_mhz: jc.req_f64("nominal_mhz")?,
+                opps,
+                ceff: jc.req_f64("ceff")?,
+                leak_k1: jc.req_f64("leak_k1")?,
+                leak_k2: jc.req_f64("leak_k2")?,
+            });
+        }
+        let class_idx = |n: &str| {
+            classes
+                .iter()
+                .position(|c| c.name == n)
+                .ok_or_else(|| {
+                    Error::Platform(format!("unknown class '{n}'"))
+                })
+        };
+
+        // --- floorplan ---
+        let fp = j
+            .get("floorplan")
+            .ok_or_else(|| Error::Platform("missing floorplan".into()))?;
+        let mut node_names = Vec::new();
+        let mut capacitance = Vec::new();
+        let mut g_amb = Vec::new();
+        for n in fp.req_arr("nodes")? {
+            node_names.push(n.req_str("name")?.to_string());
+            capacitance.push(n.req_f64("capacitance")?);
+            g_amb.push(n.req_f64("g_amb")?);
+        }
+        let couplings = fp
+            .req_arr("couplings")?
+            .iter()
+            .map(|c| {
+                let t = c.f64_vec()?;
+                if t.len() != 3 {
+                    return Err(Error::Platform(
+                        "coupling must be [i, j, conductance]".into(),
+                    ));
+                }
+                Ok((t[0] as usize, t[1] as usize, t[2]))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let floorplan = ThermalFloorplan {
+            node_names,
+            capacitance,
+            g_amb,
+            couplings,
+        };
+
+        // --- clusters + PEs ---
+        let mut pes: Vec<Pe> = Vec::new();
+        let mut clusters = Vec::new();
+        for (cid, jc) in j.req_arr("clusters")?.iter().enumerate() {
+            let cname = jc.req_str("name")?.to_string();
+            let class = class_idx(jc.req_str("class")?)?;
+            let thermal_node = jc.req_f64("thermal_node")? as usize;
+            let mut pe_ids = Vec::new();
+            for (i, jp) in jc.req_arr("pes")?.iter().enumerate() {
+                let xy = jp.f64_vec()?;
+                if xy.len() != 2 {
+                    return Err(Error::Platform(
+                        "pe must be [x, y]".into(),
+                    ));
+                }
+                let id = pes.len();
+                pes.push(Pe {
+                    id,
+                    class,
+                    cluster: cid,
+                    name: format!("{cname}-{i}"),
+                    x: xy[0] as usize,
+                    y: xy[1] as usize,
+                });
+                pe_ids.push(id);
+            }
+            clusters.push(Cluster {
+                id: cid,
+                name: cname,
+                class,
+                pe_ids,
+                thermal_node,
+            });
+        }
+
+        Platform::new(name, classes, pes, clusters, noc, floorplan)
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> Result<Platform> {
+        Platform::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Serialize (inverse of [`Platform::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+
+        let mut mesh = Json::obj();
+        mesh.set("x", Json::Num(self.noc.mesh_x as f64))
+            .set("y", Json::Num(self.noc.mesh_y as f64))
+            .set("hop_latency_us", Json::Num(self.noc.hop_latency_us))
+            .set("link_bandwidth", Json::Num(self.noc.link_bandwidth))
+            .set("mem_latency_us", Json::Num(self.noc.mem_latency_us));
+        j.set("mesh", mesh);
+
+        let classes = self
+            .classes
+            .iter()
+            .map(|c| {
+                let mut jc = Json::obj();
+                jc.set("name", Json::Str(c.name.clone()))
+                    .set("type", Json::Str(c.ty.label().into()))
+                    .set("nominal_mhz", Json::Num(c.nominal_mhz))
+                    .set("ceff", Json::Num(c.ceff))
+                    .set("leak_k1", Json::Num(c.leak_k1))
+                    .set("leak_k2", Json::Num(c.leak_k2))
+                    .set(
+                        "opps",
+                        Json::Arr(
+                            c.opps
+                                .iter()
+                                .map(|o| {
+                                    Json::Arr(vec![
+                                        Json::Num(o.freq_mhz),
+                                        Json::Num(o.volt),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    );
+                jc
+            })
+            .collect();
+        j.set("classes", Json::Arr(classes));
+
+        let clusters = self
+            .clusters
+            .iter()
+            .map(|cl| {
+                let mut jc = Json::obj();
+                jc.set("name", Json::Str(cl.name.clone()))
+                    .set(
+                        "class",
+                        Json::Str(self.classes[cl.class].name.clone()),
+                    )
+                    .set("thermal_node", Json::Num(cl.thermal_node as f64))
+                    .set(
+                        "pes",
+                        Json::Arr(
+                            cl.pe_ids
+                                .iter()
+                                .map(|&p| {
+                                    Json::Arr(vec![
+                                        Json::Num(self.pes[p].x as f64),
+                                        Json::Num(self.pes[p].y as f64),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    );
+                jc
+            })
+            .collect();
+        j.set("clusters", Json::Arr(clusters));
+
+        let mut fp = Json::obj();
+        let nodes = (0..self.floorplan.len())
+            .map(|i| {
+                let mut n = Json::obj();
+                n.set(
+                    "name",
+                    Json::Str(self.floorplan.node_names[i].clone()),
+                )
+                .set("capacitance", Json::Num(self.floorplan.capacitance[i]))
+                .set("g_amb", Json::Num(self.floorplan.g_amb[i]));
+                n
+            })
+            .collect();
+        fp.set("nodes", Json::Arr(nodes));
+        fp.set(
+            "couplings",
+            Json::Arr(
+                self.floorplan
+                    .couplings
+                    .iter()
+                    .map(|&(a, b, g)| {
+                        Json::Arr(vec![
+                            Json::Num(a as f64),
+                            Json::Num(b as f64),
+                            Json::Num(g),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("floorplan", fp);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_roundtrips_through_json() {
+        let p = Platform::table2_soc();
+        let j = p.to_json();
+        let p2 = Platform::from_json(&j).unwrap();
+        assert_eq!(p2.name, p.name);
+        assert_eq!(p2.n_pes(), p.n_pes());
+        assert_eq!(p2.classes.len(), p.classes.len());
+        for (a, b) in p.classes.iter().zip(&p2.classes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.ty, b.ty);
+            assert_eq!(a.opps, b.opps);
+            assert_eq!(a.ceff, b.ceff);
+        }
+        for (a, b) in p.pes.iter().zip(&p2.pes) {
+            assert_eq!((a.x, a.y, a.class, a.cluster), (b.x, b.y, b.class, b.cluster));
+        }
+        assert_eq!(p2.floorplan.couplings, p.floorplan.couplings);
+        // Round-tripped platform simulates identically.
+        use crate::app::suite::{self, WifiParams};
+        use crate::config::SimConfig;
+        use crate::sim::Simulation;
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 3 })];
+        let mut cfg = SimConfig::default();
+        cfg.max_jobs = 30;
+        cfg.warmup_jobs = 3;
+        let r1 = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        let r2 = Simulation::build(&p2, &apps, &cfg).unwrap().run();
+        assert_eq!(r1.job_latencies_us, r2.job_latencies_us);
+    }
+
+    #[test]
+    fn rejects_unknown_class_reference() {
+        let p = Platform::table2_soc();
+        let mut j = p.to_json();
+        // Point a cluster at a class that does not exist.
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(cl)) = m.get_mut("clusters") {
+                cl[0].set("class", Json::Str("WARP_CORE".into()));
+            }
+        }
+        assert!(Platform::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_opp() {
+        let text = r#"{
+          "name": "x",
+          "classes": [{"name": "c", "type": "big", "nominal_mhz": 1000,
+                       "ceff": 1e-4, "leak_k1": 0.001, "leak_k2": 0.01,
+                       "opps": [[1000]]}],
+          "clusters": [], "floorplan": {"nodes": [], "couplings": []}
+        }"#;
+        let j = Json::parse(text).unwrap();
+        assert!(Platform::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn pe_type_parse() {
+        assert_eq!(PeType::parse("big").unwrap(), PeType::BigCore);
+        assert_eq!(PeType::parse("LITTLE").unwrap(), PeType::LittleCore);
+        assert_eq!(
+            PeType::parse("accelerator").unwrap(),
+            PeType::Accelerator
+        );
+        assert!(PeType::parse("quantum").is_err());
+    }
+}

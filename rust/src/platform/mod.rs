@@ -1,0 +1,415 @@
+//! Platform model: the paper's *resource database*.
+//!
+//! A [`Platform`] describes a candidate DSSoC: processing elements (PEs)
+//! grouped into DVFS clusters, per-class operating performance points
+//! (OPPs), power-model coefficients, mesh coordinates for the NoC model,
+//! and the thermal floorplan.  Presets for the paper's evaluation SoC
+//! (Table 2: 4×Cortex-A15 + 4×Cortex-A7 + 2×Scrambler-Encoder + 4×FFT)
+//! live in [`presets`].
+
+pub mod io;
+pub mod presets;
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Category of a processing element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PeType {
+    /// General-purpose "big" core (e.g. Cortex-A15).
+    BigCore,
+    /// General-purpose "LITTLE" core (e.g. Cortex-A7).
+    LittleCore,
+    /// Fixed-function hardware accelerator.
+    Accelerator,
+}
+
+impl PeType {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PeType::BigCore => "big",
+            PeType::LittleCore => "LITTLE",
+            PeType::Accelerator => "accelerator",
+        }
+    }
+}
+
+/// An operating performance point: frequency + the voltage it requires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Opp {
+    pub freq_mhz: f64,
+    pub volt: f64,
+}
+
+/// A *class* of PE: all instances share latency profiles, OPPs and power
+/// coefficients.  Classes are what Table 1 columns refer to ("Odroid A7",
+/// "Odroid A15", "HW Acc.").
+#[derive(Debug, Clone)]
+pub struct PeClass {
+    /// Unique name, referenced by task profiles (e.g. "A15", "ACC_FFT").
+    pub name: String,
+    pub ty: PeType,
+    /// Frequency at which latency profiles were measured (MHz).
+    pub nominal_mhz: f64,
+    /// Available OPPs, ascending frequency. Accelerators have exactly one.
+    pub opps: Vec<Opp>,
+    /// Effective switched capacitance: `P_dyn = ceff * V^2 * f_mhz * util`
+    /// (W, with f in MHz) — [Bhat et al. 2018]-style model.
+    pub ceff: f64,
+    /// Leakage: `P_leak = k1 * V * exp(k2 * T)` (W, T in °C).
+    pub leak_k1: f64,
+    pub leak_k2: f64,
+}
+
+impl PeClass {
+    pub fn max_opp(&self) -> Opp {
+        *self.opps.last().expect("class has no OPPs")
+    }
+
+    pub fn min_opp(&self) -> Opp {
+        *self.opps.first().expect("class has no OPPs")
+    }
+
+    /// The OPP with the lowest frequency >= `mhz` (or the max OPP).
+    pub fn opp_at_least(&self, mhz: f64) -> Opp {
+        for opp in &self.opps {
+            if opp.freq_mhz + 1e-9 >= mhz {
+                return *opp;
+            }
+        }
+        self.max_opp()
+    }
+}
+
+/// One processing element instance.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    /// Dense id, index into `Platform::pes`.
+    pub id: usize,
+    pub class: usize,
+    pub cluster: usize,
+    /// Human-readable instance name, e.g. "A15-2".
+    pub name: String,
+    /// Mesh coordinates for the NoC latency model.
+    pub x: usize,
+    pub y: usize,
+}
+
+/// A DVFS domain: all member PEs switch OPP together (matches big.LITTLE
+/// cluster-level DVFS on the Odroid-XU3 the paper profiles).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub id: usize,
+    pub name: String,
+    pub class: usize,
+    pub pe_ids: Vec<usize>,
+    /// Thermal floorplan node index this cluster's power flows into.
+    pub thermal_node: usize,
+}
+
+/// Thermal floorplan: an RC network over named nodes.
+#[derive(Debug, Clone)]
+pub struct ThermalFloorplan {
+    pub node_names: Vec<String>,
+    /// Thermal capacitance per node (J/°C).
+    pub capacitance: Vec<f64>,
+    /// Conductance to ambient per node (W/°C).
+    pub g_amb: Vec<f64>,
+    /// Lateral couplings `(i, j, conductance W/°C)`, i < j.
+    pub couplings: Vec<(usize, usize, f64)>,
+}
+
+impl ThermalFloorplan {
+    pub fn len(&self) -> usize {
+        self.node_names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_names.is_empty()
+    }
+}
+
+/// NoC parameters for the analytical interconnect model.
+#[derive(Debug, Clone)]
+pub struct NocParams {
+    /// Mesh dimensions.
+    pub mesh_x: usize,
+    pub mesh_y: usize,
+    /// Per-hop router+link latency (µs).
+    pub hop_latency_us: f64,
+    /// Link bandwidth (bytes/µs).
+    pub link_bandwidth: f64,
+    /// Memory-access base latency (µs) for shared-memory transfers.
+    pub mem_latency_us: f64,
+}
+
+impl Default for NocParams {
+    fn default() -> Self {
+        // Calibrated to on-chip scale: ~50 ns/hop, 8 GB/s links, and a
+        // 0.5 µs shared-memory staging cost per producer→consumer move
+        // (DMA descriptor setup + cache maintenance — typical for
+        // core↔accelerator offload on a Zynq-class MPSoC).
+        NocParams {
+            mesh_x: 4,
+            mesh_y: 4,
+            hop_latency_us: 0.05,
+            link_bandwidth: 8000.0,
+            mem_latency_us: 0.5,
+        }
+    }
+}
+
+/// A complete DSSoC description (the resource database entry).
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub classes: Vec<PeClass>,
+    pub pes: Vec<Pe>,
+    pub clusters: Vec<Cluster>,
+    pub noc: NocParams,
+    pub floorplan: ThermalFloorplan,
+    /// Ambient temperature (°C).
+    pub t_ambient: f64,
+    class_by_name: BTreeMap<String, usize>,
+}
+
+impl Platform {
+    /// Assemble and validate a platform.
+    pub fn new(
+        name: impl Into<String>,
+        classes: Vec<PeClass>,
+        pes: Vec<Pe>,
+        clusters: Vec<Cluster>,
+        noc: NocParams,
+        floorplan: ThermalFloorplan,
+    ) -> Result<Platform> {
+        let mut class_by_name = BTreeMap::new();
+        for (i, c) in classes.iter().enumerate() {
+            if c.opps.is_empty() {
+                return Err(Error::Platform(format!(
+                    "class '{}' has no OPPs",
+                    c.name
+                )));
+            }
+            if class_by_name.insert(c.name.clone(), i).is_some() {
+                return Err(Error::Platform(format!(
+                    "duplicate class '{}'",
+                    c.name
+                )));
+            }
+        }
+        for (i, pe) in pes.iter().enumerate() {
+            if pe.id != i {
+                return Err(Error::Platform(format!(
+                    "pe '{}' id {} != index {i}",
+                    pe.name, pe.id
+                )));
+            }
+            if pe.class >= classes.len() {
+                return Err(Error::Platform(format!(
+                    "pe '{}' references unknown class {}",
+                    pe.name, pe.class
+                )));
+            }
+            if pe.cluster >= clusters.len() {
+                return Err(Error::Platform(format!(
+                    "pe '{}' references unknown cluster {}",
+                    pe.name, pe.cluster
+                )));
+            }
+            if pe.x >= noc.mesh_x || pe.y >= noc.mesh_y {
+                return Err(Error::Platform(format!(
+                    "pe '{}' at ({}, {}) outside {}x{} mesh",
+                    pe.name, pe.x, pe.y, noc.mesh_x, noc.mesh_y
+                )));
+            }
+        }
+        for (i, cl) in clusters.iter().enumerate() {
+            if cl.id != i {
+                return Err(Error::Platform(format!(
+                    "cluster '{}' id {} != index {i}",
+                    cl.name, cl.id
+                )));
+            }
+            if cl.thermal_node >= floorplan.len() {
+                return Err(Error::Platform(format!(
+                    "cluster '{}' thermal node {} out of range",
+                    cl.name, cl.thermal_node
+                )));
+            }
+            for &pid in &cl.pe_ids {
+                if pid >= pes.len() || pes[pid].cluster != i {
+                    return Err(Error::Platform(format!(
+                        "cluster '{}' membership inconsistent for pe {pid}",
+                        cl.name
+                    )));
+                }
+            }
+        }
+        for (i, j, g) in &floorplan.couplings {
+            if *i >= floorplan.len() || *j >= floorplan.len() || i >= j {
+                return Err(Error::Platform(format!(
+                    "bad thermal coupling ({i}, {j})"
+                )));
+            }
+            if *g < 0.0 {
+                return Err(Error::Platform(
+                    "negative thermal conductance".into(),
+                ));
+            }
+        }
+        Ok(Platform {
+            name: name.into(),
+            classes,
+            pes,
+            clusters,
+            noc,
+            floorplan,
+            t_ambient: 25.0,
+            class_by_name,
+        })
+    }
+
+    /// The Table-2 evaluation SoC (see [`presets::table2_soc`]).
+    pub fn table2_soc() -> Platform {
+        presets::table2_soc()
+    }
+
+    pub fn n_pes(&self) -> usize {
+        self.pes.len()
+    }
+
+    pub fn class_of(&self, pe_id: usize) -> &PeClass {
+        &self.classes[self.pes[pe_id].class]
+    }
+
+    pub fn class_index(&self, name: &str) -> Option<usize> {
+        self.class_by_name.get(name).copied()
+    }
+
+    pub fn cluster_of(&self, pe_id: usize) -> &Cluster {
+        &self.clusters[self.pes[pe_id].cluster]
+    }
+
+    /// Manhattan hop distance between two PEs on the mesh.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let pa = &self.pes[a];
+        let pb = &self.pes[b];
+        pa.x.abs_diff(pb.x) + pa.y.abs_diff(pb.y)
+    }
+
+    /// Instance count per class name (Table-2 style inventory).
+    pub fn inventory(&self) -> Vec<(String, PeType, usize)> {
+        self.classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                let n = self.pes.iter().filter(|p| p.class == ci).count();
+                (c.name.clone(), c.ty, n)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_inventory_matches_paper() {
+        let p = Platform::table2_soc();
+        let inv: BTreeMap<String, usize> = p
+            .inventory()
+            .into_iter()
+            .map(|(n, _, c)| (n, c))
+            .collect();
+        assert_eq!(inv["A15"], 4);
+        assert_eq!(inv["A7"], 4);
+        assert_eq!(inv["ACC_SCR"], 2);
+        assert_eq!(inv["ACC_FFT"], 4);
+        assert_eq!(p.n_pes(), 14); // "a total of 14 ... cores and accelerators"
+    }
+
+    #[test]
+    fn validation_rejects_bad_class_ref() {
+        let mut p = Platform::table2_soc();
+        let classes = p.classes.clone();
+        p.pes[0].class = 99;
+        let r = Platform::new(
+            "bad",
+            classes,
+            p.pes.clone(),
+            p.clusters.clone(),
+            p.noc.clone(),
+            p.floorplan.clone(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validation_rejects_duplicate_class() {
+        let p = Platform::table2_soc();
+        let mut classes = p.classes.clone();
+        let dup = classes[0].clone();
+        classes.push(dup);
+        // classes now has duplicate name "A15"
+        let r = Platform::new(
+            "bad",
+            classes,
+            p.pes.clone(),
+            p.clusters.clone(),
+            p.noc.clone(),
+            p.floorplan.clone(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn hops_are_manhattan() {
+        let p = Platform::table2_soc();
+        assert_eq!(p.hops(0, 0), 0);
+        let h = p.hops(0, p.n_pes() - 1);
+        assert!(h > 0 && h <= p.noc.mesh_x + p.noc.mesh_y);
+    }
+
+    #[test]
+    fn opp_lookup() {
+        let p = Platform::table2_soc();
+        let big = &p.classes[p.class_index("A15").unwrap()];
+        assert!(big.opps.len() > 1);
+        assert_eq!(
+            big.opp_at_least(big.max_opp().freq_mhz).freq_mhz,
+            big.max_opp().freq_mhz
+        );
+        assert!(big.opp_at_least(0.0).freq_mhz <= big.opps[0].freq_mhz);
+        // Monotone voltage with frequency.
+        for w in big.opps.windows(2) {
+            assert!(w[0].freq_mhz < w[1].freq_mhz);
+            assert!(w[0].volt <= w[1].volt);
+        }
+    }
+
+    #[test]
+    fn accelerators_have_single_opp() {
+        let p = Platform::table2_soc();
+        for c in &p.classes {
+            if c.ty == PeType::Accelerator {
+                assert_eq!(c.opps.len(), 1, "class {}", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn clusters_partition_pes() {
+        let p = Platform::table2_soc();
+        let mut seen = vec![false; p.n_pes()];
+        for cl in &p.clusters {
+            for &pid in &cl.pe_ids {
+                assert!(!seen[pid], "pe {pid} in two clusters");
+                seen[pid] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

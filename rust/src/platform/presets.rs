@@ -1,0 +1,351 @@
+//! Platform presets: the paper's evaluation SoCs.
+//!
+//! * [`table2_soc`] — the scheduling-case-study configuration of Table 2:
+//!   4×Cortex-A15, 4×Cortex-A7, 2×Scrambler-Encoder accelerators and
+//!   4×FFT accelerators (14 PEs total), mimicking an Odroid-XU3-class
+//!   big.LITTLE part extended with domain accelerators.
+//! * [`zcu102_soc`] — a Zynq-UltraScale-class variant (4 big cores +
+//!   programmable-logic accelerators) used by the validation flow.
+//!
+//! OPP tables follow the Exynos 5422 (Odroid-XU3) frequency/voltage
+//! ladder; power coefficients are fitted so peak powers land in the
+//! published ranges (A15 ≈ 1.8-2 W/core @ 2 GHz, A7 ≈ 0.3 W/core,
+//! accelerators ≈ 50-100 mW) — see DESIGN.md §Substitutions.
+
+use super::{
+    Cluster, NocParams, Opp, Pe, PeClass, PeType, Platform, ThermalFloorplan,
+};
+
+/// Exynos-5422-style big-core OPP ladder (MHz, V).
+fn a15_opps() -> Vec<Opp> {
+    [
+        (200.0, 0.90),
+        (400.0, 0.92),
+        (600.0, 0.95),
+        (800.0, 0.98),
+        (1000.0, 1.02),
+        (1200.0, 1.06),
+        (1400.0, 1.10),
+        (1600.0, 1.16),
+        (1800.0, 1.23),
+        (2000.0, 1.31),
+    ]
+    .iter()
+    .map(|&(f, v)| Opp { freq_mhz: f, volt: v })
+    .collect()
+}
+
+/// LITTLE-core ladder.
+fn a7_opps() -> Vec<Opp> {
+    [
+        (200.0, 0.90),
+        (400.0, 0.92),
+        (600.0, 0.95),
+        (800.0, 1.00),
+        (1000.0, 1.05),
+        (1200.0, 1.12),
+        (1400.0, 1.20),
+    ]
+    .iter()
+    .map(|&(f, v)| Opp { freq_mhz: f, volt: v })
+    .collect()
+}
+
+fn classes() -> Vec<PeClass> {
+    vec![
+        PeClass {
+            name: "A15".into(),
+            ty: PeType::BigCore,
+            nominal_mhz: 2000.0,
+            opps: a15_opps(),
+            // 2000 MHz * 1.31^2 V^2 * ceff = ~1.9 W  => ceff ≈ 5.5e-4
+            ceff: 5.5e-4,
+            leak_k1: 0.0075,
+            leak_k2: 0.025,
+        },
+        PeClass {
+            name: "A7".into(),
+            ty: PeType::LittleCore,
+            nominal_mhz: 1400.0,
+            opps: a7_opps(),
+            // 1400 MHz * 1.2^2 * ceff = ~0.3 W => ceff ≈ 1.5e-4
+            ceff: 1.5e-4,
+            leak_k1: 0.0020,
+            leak_k2: 0.020,
+        },
+        PeClass {
+            name: "ACC_SCR".into(),
+            ty: PeType::Accelerator,
+            nominal_mhz: 600.0,
+            opps: vec![Opp { freq_mhz: 600.0, volt: 0.85 }],
+            // 600 MHz * 0.85^2 * ceff = ~60 mW => ceff ≈ 1.4e-4
+            ceff: 1.4e-4,
+            leak_k1: 0.0005,
+            leak_k2: 0.015,
+        },
+        PeClass {
+            name: "ACC_FFT".into(),
+            ty: PeType::Accelerator,
+            nominal_mhz: 600.0,
+            opps: vec![Opp { freq_mhz: 600.0, volt: 0.85 }],
+            // FFT engines are larger: ~100 mW peak.
+            ceff: 2.3e-4,
+            leak_k1: 0.0008,
+            leak_k2: 0.015,
+        },
+    ]
+}
+
+/// Thermal floorplan shared by both presets: one node per power island
+/// plus interconnect and a memory-controller node.
+fn floorplan() -> ThermalFloorplan {
+    // Nodes: 0=big cluster, 1=LITTLE cluster, 2=scrambler island,
+    //        3=FFT island, 4=NoC, 5=memory controller.
+    let names = ["big", "LITTLE", "scr_island", "fft_island", "noc", "mem"];
+    ThermalFloorplan {
+        node_names: names.iter().map(|s| s.to_string()).collect(),
+        // J/°C — silicon islands are small; big cluster has the largest
+        // area hence the largest capacitance.
+        capacitance: vec![0.35, 0.20, 0.06, 0.12, 0.08, 0.15],
+        // W/°C to ambient through package/heat-spreader.
+        g_amb: vec![0.12, 0.08, 0.02, 0.04, 0.03, 0.05],
+        couplings: vec![
+            (0, 1, 0.30), // big <-> LITTLE share the die centre
+            (0, 4, 0.15),
+            (1, 4, 0.12),
+            (2, 4, 0.08),
+            (3, 4, 0.10),
+            (2, 3, 0.06),
+            (4, 5, 0.10),
+            (0, 3, 0.08), // big sits next to the FFT island
+            (1, 2, 0.05),
+        ],
+    }
+}
+
+/// The Table-2 scheduling-case-study SoC: 14 PEs on a 4x4 mesh.
+///
+/// Mesh placement (x, y):
+/// ```text
+///   y=3 | A15-0  A15-1  A15-2  A15-3
+///   y=2 | A7-0   A7-1   A7-2   A7-3
+///   y=1 | SCR-0  SCR-1  FFT-0  FFT-1
+///   y=0 | FFT-2  FFT-3  (mem)  (noc)
+/// ```
+pub fn table2_soc() -> Platform {
+    let classes = classes();
+    let mut pes = Vec::new();
+    let mut clusters = Vec::new();
+
+    let add_cluster =
+        |name: &str,
+         class: usize,
+         thermal_node: usize,
+         coords: &[(usize, usize)],
+         pes: &mut Vec<Pe>,
+         clusters: &mut Vec<Cluster>| {
+            let id = clusters.len();
+            let mut pe_ids = Vec::new();
+            for (i, &(x, y)) in coords.iter().enumerate() {
+                let pe_id = pes.len();
+                pes.push(Pe {
+                    id: pe_id,
+                    class,
+                    cluster: id,
+                    name: format!("{name}-{i}"),
+                    x,
+                    y,
+                });
+                pe_ids.push(pe_id);
+            }
+            clusters.push(Cluster {
+                id,
+                name: name.to_string(),
+                class,
+                pe_ids,
+                thermal_node,
+            });
+        };
+
+    add_cluster(
+        "A15",
+        0,
+        0,
+        &[(0, 3), (1, 3), (2, 3), (3, 3)],
+        &mut pes,
+        &mut clusters,
+    );
+    add_cluster(
+        "A7",
+        1,
+        1,
+        &[(0, 2), (1, 2), (2, 2), (3, 2)],
+        &mut pes,
+        &mut clusters,
+    );
+    add_cluster(
+        "ACC_SCR",
+        2,
+        2,
+        &[(0, 1), (1, 1)],
+        &mut pes,
+        &mut clusters,
+    );
+    add_cluster(
+        "ACC_FFT",
+        3,
+        3,
+        &[(2, 1), (3, 1), (0, 0), (1, 0)],
+        &mut pes,
+        &mut clusters,
+    );
+
+    Platform::new(
+        "table2-dssoc",
+        classes,
+        pes,
+        clusters,
+        NocParams::default(),
+        floorplan(),
+    )
+    .expect("table2 preset is valid")
+}
+
+/// Zynq-ZCU102-class validation platform: 4 big cores (Cortex-A53-like,
+/// modeled with the A15 class), no LITTLE cluster, and a larger
+/// programmable-logic accelerator pool (2 scrambler + 6 FFT).
+pub fn zcu102_soc() -> Platform {
+    let classes = classes();
+    let mut pes = Vec::new();
+    let mut clusters = Vec::new();
+    let push =
+        |name: &str, class: usize, node: usize, coords: &[(usize, usize)],
+         pes: &mut Vec<Pe>, clusters: &mut Vec<Cluster>| {
+            let id = clusters.len();
+            let mut pe_ids = Vec::new();
+            for (i, &(x, y)) in coords.iter().enumerate() {
+                let pe_id = pes.len();
+                pes.push(Pe {
+                    id: pe_id,
+                    class,
+                    cluster: id,
+                    name: format!("{name}-{i}"),
+                    x,
+                    y,
+                });
+                pe_ids.push(pe_id);
+            }
+            clusters.push(Cluster {
+                id,
+                name: name.to_string(),
+                class,
+                pe_ids,
+                thermal_node: node,
+            });
+        };
+
+    push(
+        "A53",
+        0,
+        0,
+        &[(0, 3), (1, 3), (2, 3), (3, 3)],
+        &mut pes,
+        &mut clusters,
+    );
+    push("ACC_SCR", 2, 2, &[(0, 1), (1, 1)], &mut pes, &mut clusters);
+    push(
+        "ACC_FFT",
+        3,
+        3,
+        &[(2, 1), (3, 1), (0, 0), (1, 0), (2, 0), (3, 0)],
+        &mut pes,
+        &mut clusters,
+    );
+
+    Platform::new(
+        "zcu102-dssoc",
+        classes,
+        pes,
+        clusters,
+        NocParams::default(),
+        floorplan(),
+    )
+    .expect("zcu102 preset is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu102_has_more_fft_engines() {
+        let p = zcu102_soc();
+        let fft = p
+            .inventory()
+            .into_iter()
+            .find(|(n, _, _)| n == "ACC_FFT")
+            .unwrap();
+        assert_eq!(fft.2, 6);
+        assert_eq!(p.n_pes(), 12);
+    }
+
+    #[test]
+    fn peak_powers_in_published_ranges() {
+        let p = table2_soc();
+        let big = &p.classes[p.class_index("A15").unwrap()];
+        let peak =
+            big.ceff * big.max_opp().volt.powi(2) * big.max_opp().freq_mhz;
+        assert!(
+            (1.5..2.5).contains(&peak),
+            "A15 peak {peak} W out of range"
+        );
+        let little = &p.classes[p.class_index("A7").unwrap()];
+        let peak_l = little.ceff
+            * little.max_opp().volt.powi(2)
+            * little.max_opp().freq_mhz;
+        assert!(
+            (0.2..0.5).contains(&peak_l),
+            "A7 peak {peak_l} W out of range"
+        );
+        for acc in ["ACC_SCR", "ACC_FFT"] {
+            let c = &p.classes[p.class_index(acc).unwrap()];
+            let pk = c.ceff * c.max_opp().volt.powi(2) * c.max_opp().freq_mhz;
+            assert!(pk < 0.2, "{acc} peak {pk} W too high");
+        }
+    }
+
+    #[test]
+    fn floorplan_is_connected() {
+        // Union-find over couplings: every node must reach node 0.
+        let fp = floorplan();
+        let n = fp.len();
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(p: &mut Vec<usize>, i: usize) -> usize {
+            if p[i] != i {
+                let r = find(p, p[i]);
+                p[i] = r;
+            }
+            p[i]
+        }
+        for &(i, j, _) in &fp.couplings {
+            let ri = find(&mut parent, i);
+            let rj = find(&mut parent, j);
+            parent[ri] = rj;
+        }
+        let root = find(&mut parent, 0);
+        for i in 1..n {
+            assert_eq!(find(&mut parent, i), root, "node {i} disconnected");
+        }
+    }
+
+    #[test]
+    fn mesh_coordinates_unique() {
+        let p = table2_soc();
+        let mut coords: Vec<(usize, usize)> =
+            p.pes.iter().map(|pe| (pe.x, pe.y)).collect();
+        coords.sort();
+        let before = coords.len();
+        coords.dedup();
+        assert_eq!(coords.len(), before, "two PEs share a mesh tile");
+    }
+}

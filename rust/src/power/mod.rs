@@ -1,0 +1,168 @@
+//! Analytical power model and energy accounting ([Bhat et al. 2018]).
+//!
+//! Per PE:
+//!
+//! ```text
+//!   P_dyn  = ceff * V^2 * f_mhz * utilization        (W)
+//!   P_leak = k1 * V * exp(k2 * T)                    (W, T in °C)
+//! ```
+//!
+//! The simulation kernel integrates power over DTPM epochs into energy;
+//! per-candidate batched evaluation (for DVFS design-space exploration)
+//! goes through the AOT Pallas artifact (see `thermal::XlaThermal`), with
+//! this module as the scalar reference implementation.
+
+use crate::platform::{Opp, PeClass, Platform};
+
+/// Dynamic power of one PE (W).
+#[inline]
+pub fn p_dynamic(class: &PeClass, opp: Opp, utilization: f64) -> f64 {
+    debug_assert!((0.0..=1.0 + 1e-9).contains(&utilization));
+    class.ceff * opp.volt * opp.volt * opp.freq_mhz * utilization
+}
+
+/// Leakage power of one PE (W) at temperature `t_c` (°C).
+#[inline]
+pub fn p_leakage(class: &PeClass, volt: f64, t_c: f64) -> f64 {
+    class.leak_k1 * volt * (class.leak_k2 * t_c).exp()
+}
+
+/// Per-epoch energy bookkeeping for the whole platform.
+#[derive(Debug, Clone)]
+pub struct EnergyMeter {
+    /// Joules accumulated per PE.
+    pub energy_j: Vec<f64>,
+    /// Busy time accumulated per PE (µs), for utilization reports.
+    pub busy_us: Vec<f64>,
+    /// Total simulated time covered so far (µs).
+    pub elapsed_us: f64,
+}
+
+impl EnergyMeter {
+    pub fn new(n_pes: usize) -> Self {
+        EnergyMeter {
+            energy_j: vec![0.0; n_pes],
+            busy_us: vec![0.0; n_pes],
+            elapsed_us: 0.0,
+        }
+    }
+
+    /// Integrate one epoch: `powers[pe]` in W over `dt_us` microseconds.
+    pub fn add_epoch(&mut self, powers: &[f64], busy_us: &[f64], dt_us: f64) {
+        debug_assert_eq!(powers.len(), self.energy_j.len());
+        for (e, p) in self.energy_j.iter_mut().zip(powers) {
+            *e += p * dt_us * 1e-6; // W * s
+        }
+        for (b, add) in self.busy_us.iter_mut().zip(busy_us) {
+            *b += add;
+        }
+        self.elapsed_us += dt_us;
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.energy_j.iter().sum()
+    }
+
+    /// Mean utilization of a PE over the whole run, in [0, 1].
+    pub fn utilization(&self, pe: usize) -> f64 {
+        if self.elapsed_us <= 0.0 {
+            0.0
+        } else {
+            (self.busy_us[pe] / self.elapsed_us).min(1.0)
+        }
+    }
+
+    /// Average platform power (W) over the run.
+    pub fn avg_power_w(&self) -> f64 {
+        if self.elapsed_us <= 0.0 {
+            0.0
+        } else {
+            self.total_energy_j() / (self.elapsed_us * 1e-6)
+        }
+    }
+}
+
+/// Compute per-PE power for one epoch given utilizations, the cluster
+/// OPPs currently in force, and PE temperatures.  Scalar (non-batched)
+/// reference path; the batched XLA path must agree with this to 1e-4
+/// (asserted by `thermal::tests` and integration tests).
+pub fn epoch_power(
+    platform: &Platform,
+    cluster_opp: &[Opp],
+    utilization: &[f64],
+    t_pe: &[f64],
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(platform.n_pes());
+    for pe in &platform.pes {
+        let class = &platform.classes[pe.class];
+        let opp = cluster_opp[pe.cluster];
+        let p = p_dynamic(class, opp, utilization[pe.id])
+            + p_leakage(class, opp.volt, t_pe[pe.id]);
+        out.push(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    #[test]
+    fn dynamic_power_scales_quadratically_with_voltage() {
+        let p = Platform::table2_soc();
+        let big = &p.classes[p.class_index("A15").unwrap()];
+        let lo = big.min_opp();
+        let hi = big.max_opp();
+        let p_lo = p_dynamic(big, lo, 1.0);
+        let p_hi = p_dynamic(big, hi, 1.0);
+        let expect = (hi.volt / lo.volt).powi(2) * (hi.freq_mhz / lo.freq_mhz);
+        assert!(((p_hi / p_lo) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_pe_draws_only_leakage() {
+        let p = Platform::table2_soc();
+        let big = &p.classes[p.class_index("A15").unwrap()];
+        assert_eq!(p_dynamic(big, big.max_opp(), 0.0), 0.0);
+        assert!(p_leakage(big, big.max_opp().volt, 50.0) > 0.0);
+    }
+
+    #[test]
+    fn leakage_grows_with_temperature() {
+        let p = Platform::table2_soc();
+        let big = &p.classes[p.class_index("A15").unwrap()];
+        let cold = p_leakage(big, 1.2, 25.0);
+        let hot = p_leakage(big, 1.2, 85.0);
+        assert!(hot > cold * 2.0, "hot={hot} cold={cold}");
+    }
+
+    #[test]
+    fn energy_meter_integrates() {
+        let mut m = EnergyMeter::new(2);
+        // 2 W and 1 W for 1 second (1e6 µs).
+        m.add_epoch(&[2.0, 1.0], &[5e5, 1e6], 1e6);
+        assert!((m.energy_j[0] - 2.0).abs() < 1e-9);
+        assert!((m.energy_j[1] - 1.0).abs() < 1e-9);
+        assert!((m.total_energy_j() - 3.0).abs() < 1e-9);
+        assert!((m.utilization(0) - 0.5).abs() < 1e-9);
+        assert!((m.utilization(1) - 1.0).abs() < 1e-9);
+        assert!((m.avg_power_w() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epoch_power_covers_all_pes() {
+        let p = Platform::table2_soc();
+        let opps: Vec<_> =
+            p.clusters.iter().map(|c| p.classes[c.class].max_opp()).collect();
+        let util = vec![1.0; p.n_pes()];
+        let temps = vec![45.0; p.n_pes()];
+        let powers = epoch_power(&p, &opps, &util, &temps);
+        assert_eq!(powers.len(), p.n_pes());
+        assert!(powers.iter().all(|&w| w > 0.0));
+        // Fully loaded Table-2 SoC should land in a plausible envelope
+        // for a big.LITTLE part + accelerators: ~6-12 W.
+        let total: f64 = powers.iter().sum();
+        assert!((5.0..15.0).contains(&total), "total={total} W");
+    }
+}

@@ -1,0 +1,399 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the only bridge between the rust coordinator and the Layer-1/2
+//! compute graphs.  Artifacts are **HLO text** (see `python/compile/aot.py`
+//! for why text, not serialized protos), produced once by `make artifacts`
+//! and loaded here via the `xla` crate:
+//!
+//! ```text
+//!   PjRtClient::cpu() → HloModuleProto::from_text_file → compile → execute
+//! ```
+//!
+//! Each artifact struct ([`DtpmArtifact`], [`EtfArtifact`]) owns a
+//! compiled executable plus the fixed-shape padding/unpadding logic of
+//! its AOT contract (DESIGN.md §5).  One PJRT client is shared per
+//! thread (`PjRtClient` is `Rc`-internal and not `Send`).
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// DTPM artifact contract (must match `python/compile/kernels/thermal.py`).
+pub const DTPM_K: usize = 16;
+pub const DTPM_N: usize = 32;
+pub const DTPM_P: usize = 16;
+
+/// ETF artifact contract (must match `python/compile/kernels/etf.py`).
+pub const ETF_I: usize = 64;
+pub const ETF_J: usize = 16;
+
+/// Large finite sentinel used instead of +inf when padding (keeps the
+/// device matrix finite so argmin reductions avoid NaN edge cases and
+/// the values survive JSON goldens).
+pub const PAD_SENTINEL: f32 = 1e30;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+fn with_client<T>(
+    f: impl FnOnce(&xla::PjRtClient) -> Result<T>,
+) -> Result<T> {
+    CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let client = xla::PjRtClient::cpu().map_err(|e| {
+                Error::Runtime(format!("PjRtClient::cpu failed: {e:?}"))
+            })?;
+            *slot = Some(client);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// Resolve the artifacts directory: `$DS3R_ARTIFACTS`, else `artifacts/`
+/// relative to the current directory, else relative to the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DS3R_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the AOT artifacts are present (tests skip gracefully if the
+/// user has not run `make artifacts`).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("dtpm_step.hlo.txt").exists()
+        && dir.join("etf_matrix.hlo.txt").exists()
+}
+
+fn compile(path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    if !path.exists() {
+        return Err(Error::Runtime(format!(
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        )));
+    }
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| {
+            Error::Runtime("non-utf8 artifact path".into())
+        })?,
+    )
+    .map_err(|e| {
+        Error::Runtime(format!("parse {}: {e:?}", path.display()))
+    })?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    with_client(|client| {
+        client.compile(&comp).map_err(|e| {
+            Error::Runtime(format!("compile {}: {e:?}", path.display()))
+        })
+    })
+}
+
+fn lit_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| Error::Runtime(format!("reshape: {e:?}")))
+}
+
+fn run(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| Error::Runtime(format!("execute: {e:?}")))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("to_literal: {e:?}")))?;
+    // aot.py lowers with return_tuple=True: unpack the result tuple.
+    lit.to_tuple()
+        .map_err(|e| Error::Runtime(format!("to_tuple: {e:?}")))
+}
+
+fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))
+}
+
+// ---------------------------------------------------------------------------
+// DTPM artifact
+// ---------------------------------------------------------------------------
+
+/// Outputs of one batched DTPM step (unpadded to platform dimensions).
+#[derive(Debug, Clone)]
+pub struct DtpmStepOut {
+    /// `[k][node]` next above-ambient temperatures.
+    pub t_next: Vec<Vec<f64>>,
+    /// `[k][pe]` leakage power (W).
+    pub p_leak: Vec<Vec<f64>>,
+    /// `[k][pe]` total power (W).
+    pub p_total: Vec<Vec<f64>>,
+    /// `[k]` SoC power (W).
+    pub p_sum: Vec<f64>,
+}
+
+/// The batched power/thermal epoch update, AOT-compiled from
+/// `python/compile/model.py::dtpm_step_model`.
+pub struct DtpmArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    /// Padded constant operands (platform-dependent, set via `set_model`).
+    a_pad: Vec<f32>,
+    b_pad: Vec<f32>,
+    pe_node_pad: Vec<f32>,
+    k1_pad: Vec<f32>,
+    k2_pad: Vec<f32>,
+    n_nodes: usize,
+    n_pes: usize,
+    pub calls: u64,
+}
+
+impl DtpmArtifact {
+    pub const K: usize = DTPM_K;
+
+    /// Load + compile the artifact; `set_model` must be called before
+    /// `step`.
+    pub fn load(dir: &Path) -> Result<DtpmArtifact> {
+        let exe = compile(&dir.join("dtpm_step.hlo.txt"))?;
+        Ok(DtpmArtifact {
+            exe,
+            a_pad: vec![0.0; DTPM_N * DTPM_N],
+            b_pad: vec![0.0; DTPM_N * DTPM_P],
+            pe_node_pad: vec![0.0; DTPM_P * DTPM_N],
+            k1_pad: vec![0.0; DTPM_P],
+            k2_pad: vec![0.0; DTPM_P],
+            n_nodes: 0,
+            n_pes: 0,
+            calls: 0,
+        })
+    }
+
+    /// Install the platform's thermal model and leakage coefficients.
+    ///
+    /// `k1` must already be the *effective* k1 (ambient offset folded in,
+    /// see `thermal::RcModel::leak_k1_effective`).
+    pub fn set_model(
+        &mut self,
+        rc: &crate::thermal::RcModel,
+        k1_eff: &[f64],
+        k2: &[f64],
+    ) -> Result<()> {
+        if rc.n > DTPM_N || rc.n_pes > DTPM_P {
+            return Err(Error::Runtime(format!(
+                "platform ({} nodes, {} pes) exceeds artifact padding \
+                 ({DTPM_N}, {DTPM_P})",
+                rc.n, rc.n_pes
+            )));
+        }
+        self.a_pad = rc.a_padded_f32(DTPM_N, DTPM_N);
+        self.b_pad = rc.b_padded_f32(DTPM_N, DTPM_P);
+        self.pe_node_pad = rc.pe_node_padded_f32(DTPM_P, DTPM_N);
+        self.k1_pad = vec![0.0; DTPM_P];
+        self.k2_pad = vec![0.0; DTPM_P];
+        for i in 0..rc.n_pes {
+            self.k1_pad[i] = k1_eff[i] as f32;
+            self.k2_pad[i] = k2[i] as f32;
+        }
+        self.n_nodes = rc.n;
+        self.n_pes = rc.n_pes;
+        Ok(())
+    }
+
+    /// Execute one batched step for `candidates.len() <= K` DVFS
+    /// candidates.  Each candidate supplies per-PE dynamic power and
+    /// voltage; `theta` is the shared current state (above-ambient °C).
+    pub fn step(
+        &mut self,
+        theta: &[f64],
+        candidates: &[(Vec<f64>, Vec<f64>)], // (p_dyn, volt) per candidate
+    ) -> Result<DtpmStepOut> {
+        assert!(self.n_nodes > 0, "set_model not called");
+        let k_used = candidates.len();
+        if k_used == 0 || k_used > DTPM_K {
+            return Err(Error::Runtime(format!(
+                "bad candidate count {k_used} (1..={DTPM_K})"
+            )));
+        }
+        debug_assert_eq!(theta.len(), self.n_nodes);
+
+        let mut t = vec![0.0f32; DTPM_K * DTPM_N];
+        let mut pd = vec![0.0f32; DTPM_K * DTPM_P];
+        let mut v = vec![0.0f32; DTPM_K * DTPM_P];
+        for k in 0..DTPM_K {
+            // Unused candidate rows replicate row 0 (harmless work).
+            let (pdk, vk) = candidates.get(k).unwrap_or(&candidates[0]);
+            for i in 0..self.n_nodes {
+                t[k * DTPM_N + i] = theta[i] as f32;
+            }
+            for p in 0..self.n_pes {
+                pd[k * DTPM_P + p] = pdk[p] as f32;
+                v[k * DTPM_P + p] = vk[p] as f32;
+            }
+        }
+
+        let inputs = [
+            lit_2d(&t, DTPM_K, DTPM_N)?,
+            lit_2d(&self.a_pad, DTPM_N, DTPM_N)?,
+            lit_2d(&self.b_pad, DTPM_N, DTPM_P)?,
+            lit_2d(&pd, DTPM_K, DTPM_P)?,
+            lit_2d(&v, DTPM_K, DTPM_P)?,
+            lit_2d(&self.k1_pad, 1, DTPM_P)?,
+            lit_2d(&self.k2_pad, 1, DTPM_P)?,
+            lit_2d(&self.pe_node_pad, DTPM_P, DTPM_N)?,
+        ];
+        let outs = run(&self.exe, &inputs)?;
+        if outs.len() != 4 {
+            return Err(Error::Runtime(format!(
+                "dtpm artifact returned {} outputs, want 4",
+                outs.len()
+            )));
+        }
+        self.calls += 1;
+        let t_next_raw = to_f32_vec(&outs[0])?;
+        let p_leak_raw = to_f32_vec(&outs[1])?;
+        let p_total_raw = to_f32_vec(&outs[2])?;
+        let p_sum_raw = to_f32_vec(&outs[3])?;
+
+        let unpad = |raw: &[f32], cols_pad: usize, cols: usize| {
+            (0..k_used)
+                .map(|k| {
+                    (0..cols)
+                        .map(|c| raw[k * cols_pad + c] as f64)
+                        .collect::<Vec<f64>>()
+                })
+                .collect::<Vec<_>>()
+        };
+        // p_sum from the device includes padded-PE leakage (zero k1 ⇒
+        // zero), so it is exact for the real PEs.
+        Ok(DtpmStepOut {
+            t_next: unpad(&t_next_raw, DTPM_N, self.n_nodes),
+            p_leak: unpad(&p_leak_raw, DTPM_P, self.n_pes),
+            p_total: unpad(&p_total_raw, DTPM_P, self.n_pes),
+            p_sum: (0..k_used).map(|k| p_sum_raw[k] as f64).collect(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ETF artifact
+// ---------------------------------------------------------------------------
+
+/// The ETF finish-time matrix, AOT-compiled from
+/// `python/compile/model.py::etf_model`.
+pub struct EtfArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub calls: u64,
+}
+
+impl EtfArtifact {
+    /// Max ready tasks per device call (artifact row padding).
+    pub const MAX_TASKS: usize = ETF_I;
+    /// Max PEs (artifact column padding).
+    pub const MAX_PES: usize = ETF_J;
+
+    pub fn load(dir: &Path) -> Result<EtfArtifact> {
+        Ok(EtfArtifact {
+            exe: compile(&dir.join("etf_matrix.hlo.txt"))?,
+            calls: 0,
+        })
+    }
+
+    /// Compute `finish[i][j] = max(avail[j], ready[i][j]) + exec[i][j]`
+    /// for `n x m` real entries (row-major `ready`/`exec`).  Unsupported
+    /// pairs must carry `f64::INFINITY` in `exec`; they come back as
+    /// `f64::INFINITY`.
+    pub fn finish_matrix(
+        &mut self,
+        avail: &[f64],
+        ready: &[f64],
+        exec: &[f64],
+        n: usize,
+        m: usize,
+    ) -> Result<Vec<f64>> {
+        if n > ETF_I || m > ETF_J {
+            return Err(Error::Runtime(format!(
+                "ready list {n}x{m} exceeds artifact padding {ETF_I}x{ETF_J}"
+            )));
+        }
+        debug_assert_eq!(avail.len(), m);
+        debug_assert_eq!(ready.len(), n * m);
+        debug_assert_eq!(exec.len(), n * m);
+
+        let mut av = vec![PAD_SENTINEL; ETF_J];
+        for j in 0..m {
+            av[j] = avail[j] as f32;
+        }
+        let mut rd = vec![0.0f32; ETF_I * ETF_J];
+        let mut ex = vec![PAD_SENTINEL; ETF_I * ETF_J];
+        for i in 0..n {
+            for j in 0..m {
+                rd[i * ETF_J + j] = ready[i * m + j] as f32;
+                let e = exec[i * m + j];
+                ex[i * ETF_J + j] =
+                    if e.is_finite() { e as f32 } else { PAD_SENTINEL };
+            }
+        }
+
+        let inputs = [
+            lit_2d(&av, 1, ETF_J)?,
+            lit_2d(&rd, ETF_I, ETF_J)?,
+            lit_2d(&ex, ETF_I, ETF_J)?,
+        ];
+        let outs = run(&self.exe, &inputs)?;
+        if outs.len() != 3 {
+            return Err(Error::Runtime(format!(
+                "etf artifact returned {} outputs, want 3",
+                outs.len()
+            )));
+        }
+        self.calls += 1;
+        let fin_raw = to_f32_vec(&outs[0])?;
+        let mut out = vec![f64::INFINITY; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                let f = fin_raw[i * ETF_J + j];
+                // Anything that saturated the sentinel is "unsupported".
+                out[i * m + j] = if f >= PAD_SENTINEL * 0.5 {
+                    f64::INFINITY
+                } else {
+                    f as f64
+                };
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full numeric round-trip tests against the python goldens live in
+    // rust/tests/integration_runtime.rs (they need `make artifacts`).
+    // Here: pure host-side helpers.
+
+    #[test]
+    fn artifacts_dir_resolution_env() {
+        std::env::set_var("DS3R_ARTIFACTS", "/tmp/ds3r-test-artifacts");
+        assert_eq!(
+            default_artifacts_dir(),
+            PathBuf::from("/tmp/ds3r-test-artifacts")
+        );
+        std::env::remove_var("DS3R_ARTIFACTS");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let err = compile(Path::new("/nonexistent/foo.hlo.txt"))
+            .err()
+            .expect("must fail");
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "msg: {msg}");
+    }
+}

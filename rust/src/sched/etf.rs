@@ -1,0 +1,401 @@
+//! Earliest Task First scheduler (Blythe et al. 2005).
+//!
+//! ETF repeatedly picks the (ready task, PE) pair with the globally
+//! earliest *finish* time,
+//!
+//! ```text
+//!   finish(t, p) = max(avail(p), data_ready(t, p)) + exec(t, p)
+//! ```
+//!
+//! committing the pair and updating the PE's virtual availability, until
+//! every ready task is placed.  It therefore uses both "the information
+//! about the communication cost between tasks and the current status of
+//! all PEs" (paper §3) — which is why it wins Figure 3.
+//!
+//! Two implementations share the selection logic:
+//! * [`Etf`] — pure-rust inner loop (default; fastest at Table-2 scale).
+//! * [`EtfXla`] — evaluates the finish-time matrix through the AOT
+//!   Pallas artifact (`artifacts/etf_matrix.hlo.txt`) via PJRT: the
+//!   batched-matrix path described in DESIGN.md §5.  Numerically
+//!   identical decisions (asserted by integration tests); profitable
+//!   only for very wide ready lists — see the `ablations` bench.
+
+use super::{Assignment, ReadyTask, SchedBuild, SchedContext, Scheduler};
+use crate::runtime::EtfArtifact;
+use crate::Result;
+
+/// Shared ETF selection over cached exec / data-ready matrices.
+///
+/// Semantics: repeatedly commit the (task, PE) pair with the globally
+/// earliest finish `max(avail_j, ready_ij, now) + exec_ij`, updating the
+/// chosen PE's virtual availability.  Ties break to the lower ready-list
+/// index (FIFO) then the lower PE id — deterministic.
+///
+/// Complexity: the naive loop is O(I²·J).  This implementation caches
+/// each task's best (finish, pe): committing to PE `j` only invalidates
+/// tasks whose cached best is `j` (other columns' finish times are
+/// unchanged because availability only grew for `j`), so a round is
+/// O(I + k·J) with k = tasks sharing the winner's PE — a ~5× epoch
+/// speedup at I=64 on the Table-2 platform (EXPERIMENTS.md §Perf).
+fn select_etf(
+    ready: &[ReadyTask],
+    ctx: &dyn SchedContext,
+    mut avail: Vec<f64>,
+) -> Vec<Assignment> {
+    let n = ready.len();
+    let m = avail.len();
+    let now = ctx.now_us();
+
+    // Fast path: a single ready task (the dominant decision-epoch shape
+    // below saturation) needs one scan and no matrix allocation.
+    if n == 1 {
+        let rt = &ready[0];
+        let mut best = (f64::INFINITY, usize::MAX);
+        for (j, &av) in avail.iter().enumerate() {
+            if let Some(e) = ctx.exec_us(rt, j) {
+                let fin = av.max(ctx.data_ready_us(rt, j)).max(now) + e;
+                if fin < best.0 {
+                    best = (fin, j);
+                }
+            }
+        }
+        return if best.1 == usize::MAX {
+            Vec::new()
+        } else {
+            vec![Assignment { job: rt.job, task: rt.task, pe: best.1 }]
+        };
+    }
+
+    // Cache exec + data-ready: both are consulted O(n) times per round.
+    let mut exec = vec![f64::INFINITY; n * m];
+    let mut dready = vec![0.0f64; n * m];
+    for (i, rt) in ready.iter().enumerate() {
+        for j in 0..m {
+            if let Some(us) = ctx.exec_us(rt, j) {
+                exec[i * m + j] = us;
+                dready[i * m + j] = ctx.data_ready_us(rt, j);
+            }
+        }
+    }
+
+    // Per-task best (finish, pe) cache.
+    let best_of = |i: usize, avail: &[f64]| -> (f64, usize) {
+        let mut best = (f64::INFINITY, usize::MAX);
+        for j in 0..m {
+            let e = exec[i * m + j];
+            if !e.is_finite() {
+                continue;
+            }
+            let fin = avail[j].max(dready[i * m + j]).max(now) + e;
+            if fin < best.0 {
+                best = (fin, j);
+            }
+        }
+        best
+    };
+    let mut cache: Vec<(f64, usize)> =
+        (0..n).map(|i| best_of(i, &avail)).collect();
+
+    let mut placed = vec![false; n];
+    let mut out = Vec::with_capacity(n);
+    loop {
+        // Global min over cached per-task bests: O(I).
+        let mut win = (f64::INFINITY, usize::MAX);
+        for i in 0..n {
+            if !placed[i] && cache[i].0 < win.0 {
+                win = (cache[i].0, i);
+            }
+        }
+        let (fin, i) = win;
+        if i == usize::MAX {
+            break; // nothing left placeable
+        }
+        let j = cache[i].1;
+        placed[i] = true;
+        avail[j] = fin;
+        out.push(Assignment {
+            job: ready[i].job,
+            task: ready[i].task,
+            pe: j,
+        });
+        // Only tasks whose cached best used PE j can have changed (its
+        // availability grew; all other columns are untouched).
+        for ii in 0..n {
+            if !placed[ii] && cache[ii].1 == j {
+                cache[ii] = best_of(ii, &avail);
+            }
+        }
+    }
+    out
+}
+
+/// Pure-rust ETF.
+#[derive(Debug, Default)]
+pub struct Etf {
+    epochs: u64,
+    pairs_evaluated: u64,
+}
+
+impl Etf {
+    pub fn new() -> Etf {
+        Etf::default()
+    }
+}
+
+impl Scheduler for Etf {
+    fn name(&self) -> &str {
+        "etf"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        self.epochs += 1;
+        self.pairs_evaluated +=
+            (ready.len() * ctx.pes().len()) as u64;
+        let avail: Vec<f64> =
+            ctx.pes().iter().map(|p| p.avail_us).collect();
+        select_etf(ready, ctx, avail)
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!(
+            "etf: {} epochs, {} (task, pe) pairs evaluated",
+            self.epochs, self.pairs_evaluated
+        )]
+    }
+}
+
+/// XLA-accelerated ETF: the finish-time matrix (and per-task argmin) is
+/// computed by the AOT-compiled Pallas kernel; selection then proceeds
+/// on the returned matrix.  Falls back to chunking when the ready list
+/// exceeds the artifact's padded I=64 rows.
+pub struct EtfXla {
+    artifact: EtfArtifact,
+    epochs: u64,
+    device_calls: u64,
+}
+
+impl EtfXla {
+    pub fn new(build: &SchedBuild) -> Result<EtfXla> {
+        let dir = build
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(crate::runtime::default_artifacts_dir);
+        Ok(EtfXla {
+            artifact: EtfArtifact::load(&dir)?,
+            epochs: 0,
+            device_calls: 0,
+        })
+    }
+}
+
+impl Scheduler for EtfXla {
+    fn name(&self) -> &str {
+        "etf-xla"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        self.epochs += 1;
+        let m = ctx.pes().len();
+        let now = ctx.now_us();
+        let mut avail: Vec<f64> =
+            ctx.pes().iter().map(|p| p.avail_us.max(now)).collect();
+
+        // Iteratively: evaluate the finish matrix on-device for all
+        // unplaced tasks, commit the single best pair, repeat.  (The
+        // artifact returns the whole matrix, so after the first call we
+        // can do the remaining selection host-side against the returned
+        // matrix, recomputing only the winning column's contribution —
+        // identical to `select_etf` semantics.)
+        let n = ready.len();
+        let mut exec = vec![f64::INFINITY; n * m];
+        let mut dready = vec![0.0f64; n * m];
+        for (i, rt) in ready.iter().enumerate() {
+            for j in 0..m {
+                if let Some(us) = ctx.exec_us(rt, j) {
+                    exec[i * m + j] = us;
+                    dready[i * m + j] = ctx.data_ready_us(rt, j);
+                }
+            }
+        }
+
+        // One device call per chunk evaluates the full finish matrix
+        // F0[i][j] = max(avail_j, ready_ij) + exec_ij for the *initial*
+        // availability.  The host selection loop below consumes F0
+        // directly and only recomputes entries in a column whose
+        // availability it changed by committing an assignment — the
+        // semantics are identical to the pure-rust `select_etf`.
+        let mut fin_cache = vec![f64::INFINITY; n * m];
+        let mut device_ok = true;
+        let chunk_sz = EtfArtifact::MAX_TASKS.max(1);
+        let chunks = n.div_ceil(chunk_sz);
+        for c in 0..chunks {
+            let lo = c * chunk_sz;
+            let hi = ((c + 1) * chunk_sz).min(n);
+            match self.artifact.finish_matrix(
+                &avail,
+                &dready[lo * m..hi * m],
+                &exec[lo * m..hi * m],
+                hi - lo,
+                m,
+            ) {
+                Ok(matrix) => {
+                    self.device_calls += 1;
+                    fin_cache[lo * m..hi * m]
+                        .copy_from_slice(&matrix[..(hi - lo) * m]);
+                }
+                Err(e) => {
+                    // Device failure mid-run: degrade to the host path.
+                    eprintln!(
+                        "etf-xla: device call failed ({e}); host fallback"
+                    );
+                    device_ok = false;
+                }
+            }
+        }
+        if !device_ok {
+            return select_etf(ready, ctx, avail);
+        }
+
+        let mut placed = vec![false; n];
+        let mut out = Vec::with_capacity(n);
+        loop {
+            let mut best = (f64::INFINITY, usize::MAX, usize::MAX);
+            for i in 0..n {
+                if placed[i] {
+                    continue;
+                }
+                let row = &fin_cache[i * m..(i + 1) * m];
+                for (j, &fin) in row.iter().enumerate() {
+                    if fin < best.0 {
+                        best = (fin, i, j);
+                    }
+                }
+            }
+            let (fin, i, j) = best;
+            if i == usize::MAX {
+                break;
+            }
+            placed[i] = true;
+            avail[j] = fin;
+            out.push(Assignment {
+                job: ready[i].job,
+                task: ready[i].task,
+                pe: j,
+            });
+            // Column j's availability changed: refresh its cached finish
+            // times for the remaining tasks.
+            for ii in 0..n {
+                if placed[ii] {
+                    continue;
+                }
+                let e = exec[ii * m + j];
+                fin_cache[ii * m + j] = if e.is_finite() {
+                    avail[j].max(dready[ii * m + j]).max(now) + e
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        out
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!(
+            "etf-xla: {} epochs, {} PJRT executions",
+            self.epochs, self.device_calls
+        )]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    #[test]
+    fn prefers_earliest_finish_not_fastest_exec() {
+        // PE 0: exec 10 but busy until t=100 -> finish 110.
+        // PE 1: exec 40, idle -> finish 40.  ETF must pick PE 1
+        // (MET would pick PE 0).
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, 0, 1, 40.0);
+        ctx.pes[0].avail_us = 100.0;
+        let mut etf = Etf::new();
+        let a = etf.schedule(&[rt(0, 0)], &ctx);
+        assert_eq!(a[0].pe, 1);
+    }
+
+    #[test]
+    fn accounts_for_communication_cost() {
+        // Same exec both PEs, but data lands at PE 1 much later.
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, 0, 1, 10.0);
+        ctx.ready_at.insert((0, 0, 1), 500.0);
+        let mut etf = Etf::new();
+        let a = etf.schedule(&[rt(0, 0)], &ctx);
+        assert_eq!(a[0].pe, 0);
+    }
+
+    #[test]
+    fn virtual_availability_spreads_load() {
+        // 4 identical tasks, 2 identical PEs -> 2 on each.
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        for t in 0..4 {
+            ctx.set_exec(0, t, 0, 10.0);
+            ctx.set_exec(0, t, 1, 10.0);
+        }
+        let mut etf = Etf::new();
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        let a = etf.schedule(&tasks, &ctx);
+        assert_eq!(a.iter().filter(|x| x.pe == 0).count(), 2);
+        assert_eq!(a.iter().filter(|x| x.pe == 1).count(), 2);
+    }
+
+    #[test]
+    fn schedules_shortest_first_on_single_pe() {
+        // On one PE the ETF order is SPT: shortest task committed first.
+        let mut ctx = MockCtx::uniform(1, 0.0);
+        ctx.set_exec(0, 0, 0, 30.0);
+        ctx.set_exec(0, 1, 0, 5.0);
+        ctx.set_exec(0, 2, 0, 12.0);
+        let mut etf = Etf::new();
+        let tasks: Vec<_> = (0..3).map(|t| rt(0, t)).collect();
+        let a = etf.schedule(&tasks, &ctx);
+        let order: Vec<usize> = a.iter().map(|x| x.task).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn places_all_supported_tasks() {
+        let mut ctx = MockCtx::uniform(3, 0.0);
+        for t in 0..7 {
+            for p in 0..3 {
+                ctx.set_exec(0, t, p, 3.0 + (t + p) as f64);
+            }
+        }
+        let mut etf = Etf::new();
+        let tasks: Vec<_> = (0..7).map(|t| rt(0, t)).collect();
+        assert_eq!(etf.schedule(&tasks, &ctx).len(), 7);
+    }
+
+    #[test]
+    fn unsupported_tasks_left_unplaced() {
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 5.0);
+        // task 1 unsupported anywhere.
+        let mut etf = Etf::new();
+        let a = etf.schedule(&[rt(0, 0), rt(0, 1)], &ctx);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].task, 0);
+    }
+}

@@ -1,0 +1,222 @@
+//! HEFT-style list scheduler (extension baseline).
+//!
+//! Heterogeneous Earliest Finish Time (Topcuoglu et al.): tasks are
+//! prioritized by *upward rank* — mean execution time plus the maximum
+//! (mean communication + rank) over successors — and each is placed on
+//! the PE minimizing its earliest finish time.  HEFT is not in the WiP
+//! paper's built-in list; it exercises the plug-and-play interface and
+//! serves as a stronger static-priority baseline in the ablation benches.
+
+use std::collections::BTreeMap;
+
+use super::{Assignment, ReadyTask, SchedBuild, SchedContext, Scheduler};
+
+#[derive(Debug)]
+pub struct Heft {
+    /// `ranks[app][task]` — upward rank (µs).
+    ranks: Vec<Vec<f64>>,
+    epochs: u64,
+}
+
+impl Heft {
+    pub fn new(build: &SchedBuild) -> Heft {
+        // Mean comm cost approximation: bytes / bandwidth + mean-hops ×
+        // hop latency (contention-free, platform-wide average distance).
+        let noc = &build.platform.noc;
+        let mean_hops = (noc.mesh_x + noc.mesh_y) as f64 / 2.0;
+        let comm_us = |bytes: u64| {
+            if bytes == 0 {
+                0.0
+            } else {
+                bytes as f64 / noc.link_bandwidth
+                    + mean_hops * noc.hop_latency_us
+                    + noc.mem_latency_us
+            }
+        };
+        let mut ranks = Vec::with_capacity(build.apps.len());
+        for app in build.apps {
+            let mut r = vec![0.0f64; app.len()];
+            for &t in app.topo_order().iter().rev() {
+                let w = app.tasks[t].mean_exec_us();
+                let down = app
+                    .succs(t)
+                    .iter()
+                    .map(|&s| comm_us(app.tasks[t].out_bytes) + r[s])
+                    .fold(0.0, f64::max);
+                r[t] = w + down;
+            }
+            ranks.push(r);
+        }
+        Heft { ranks, epochs: 0 }
+    }
+
+    fn rank(&self, rt: &ReadyTask) -> f64 {
+        self.ranks
+            .get(rt.app)
+            .and_then(|r| r.get(rt.task))
+            .copied()
+            .unwrap_or(0.0)
+    }
+}
+
+impl Scheduler for Heft {
+    fn name(&self) -> &str {
+        "heft"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        self.epochs += 1;
+        // Order by descending upward rank (critical tasks first).
+        let mut order: Vec<usize> = (0..ready.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.rank(&ready[b])
+                .partial_cmp(&self.rank(&ready[a]))
+                .unwrap()
+                .then(ready[a].job.cmp(&ready[b].job))
+        });
+
+        let now = ctx.now_us();
+        let mut avail: Vec<f64> =
+            ctx.pes().iter().map(|p| p.avail_us).collect();
+        let mut out = Vec::with_capacity(ready.len());
+        for idx in order {
+            let rt = &ready[idx];
+            let mut best = (f64::INFINITY, usize::MAX);
+            for pe in ctx.pes() {
+                if let Some(e) = ctx.exec_us(rt, pe.id) {
+                    let start = avail[pe.id]
+                        .max(ctx.data_ready_us(rt, pe.id))
+                        .max(now);
+                    let fin = start + e;
+                    if fin < best.0 {
+                        best = (fin, pe.id);
+                    }
+                }
+            }
+            if best.1 == usize::MAX {
+                continue;
+            }
+            avail[best.1] = best.0;
+            out.push(Assignment { job: rt.job, task: rt.task, pe: best.1 });
+        }
+        out
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!("heft: {} epochs", self.epochs)]
+    }
+}
+
+/// Expose ranks for tests/diagnostics.
+impl Heft {
+    pub fn ranks_for(&self, app: usize) -> &[f64] {
+        &self.ranks[app]
+    }
+
+    pub fn ranks_by_name(
+        &self,
+        app: usize,
+        graph: &crate::app::AppGraph,
+    ) -> BTreeMap<String, f64> {
+        graph
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), self.ranks[app][i]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+    use crate::platform::Platform;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    fn make() -> (Platform, Vec<crate::app::AppGraph>) {
+        (
+            Platform::table2_soc(),
+            vec![suite::wifi_tx(WifiParams { symbols: 2 })],
+        )
+    }
+
+    #[test]
+    fn source_has_highest_rank() {
+        let (platform, apps) = make();
+        let h = Heft::new(&SchedBuild {
+            platform: &platform,
+            apps: &apps,
+            seed: 0,
+            artifacts_dir: None,
+        });
+        let ranks = h.ranks_for(0);
+        // Source (scrambler) dominates: its rank includes the whole DAG.
+        let max = ranks.iter().copied().fold(0.0, f64::max);
+        assert_eq!(ranks[0], max);
+        // Sink (crc) has the smallest rank.
+        let crc = apps[0].len() - 1;
+        let min = ranks.iter().copied().fold(f64::INFINITY, f64::min);
+        assert_eq!(ranks[crc], min);
+    }
+
+    #[test]
+    fn ranks_decrease_along_edges() {
+        let (platform, apps) = make();
+        let h = Heft::new(&SchedBuild {
+            platform: &platform,
+            apps: &apps,
+            seed: 0,
+            artifacts_dir: None,
+        });
+        let g = &apps[0];
+        for (i, t) in g.tasks.iter().enumerate() {
+            for &p in &t.preds {
+                assert!(
+                    h.ranks_for(0)[p] > h.ranks_for(0)[i],
+                    "rank({p}) <= rank({i})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prioritizes_high_rank_tasks_under_contention() {
+        let (platform, apps) = make();
+        let mut h = Heft::new(&SchedBuild {
+            platform: &platform,
+            apps: &apps,
+            seed: 0,
+            artifacts_dir: None,
+        });
+        // One PE, two tasks: task 0 (source, high rank) vs the crc sink
+        // (low rank). HEFT must commit the high-rank task first.
+        let mut ctx = MockCtx::uniform(1, 0.0);
+        let crc = apps[0].len() - 1;
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, crc, 0, 10.0);
+        let a = h.schedule(&[rt(0, crc), rt(0, 0)], &ctx);
+        assert_eq!(a[0].task, 0);
+        assert_eq!(a[1].task, crc);
+    }
+
+    #[test]
+    fn assigns_min_eft_pe() {
+        let (platform, apps) = make();
+        let mut h = Heft::new(&SchedBuild {
+            platform: &platform,
+            apps: &apps,
+            seed: 0,
+            artifacts_dir: None,
+        });
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 100.0);
+        ctx.set_exec(0, 0, 1, 20.0);
+        let a = h.schedule(&[rt(0, 0)], &ctx);
+        assert_eq!(a[0].pe, 1);
+    }
+}

@@ -1,0 +1,217 @@
+//! Minimum Execution Time scheduler (Braun et al. 2001).
+//!
+//! MET assigns each ready task to the PE offering the lowest execution
+//! time, "by only considering PEs with best execution times" (paper §3),
+//! ignoring queue state and data locality entirely.  Matching the DS3
+//! reference implementation (`np.argmin` over the per-resource execution
+//! times), ties among equally-fast instances resolve to the **lowest PE
+//! id** — so MET keeps piling work onto the first instance of the
+//! fastest class.  This naïve view of system state is exactly why MET
+//! degrades first and worst in Figure 3.
+//!
+//! [`MetLb`] (name `met-lb`) is an ablation variant that breaks ties by
+//! earliest availability instead; the `ablations` bench quantifies how
+//! much of MET's collapse is instance pinning vs class blindness.
+
+use super::{Assignment, ReadyTask, SchedContext, Scheduler};
+
+#[derive(Debug, Default)]
+pub struct Met {
+    decisions: u64,
+}
+
+impl Met {
+    pub fn new() -> Met {
+        Met { decisions: 0 }
+    }
+}
+
+/// Tie-break policy shared by [`Met`] / [`MetLb`].
+fn met_schedule(
+    ready: &[ReadyTask],
+    ctx: &dyn SchedContext,
+    least_loaded: bool,
+    decisions: &mut u64,
+) -> Vec<Assignment> {
+    let mut out = Vec::with_capacity(ready.len());
+    // Virtual availability, used only by the least-loaded variant.
+    let mut avail: Vec<f64> = ctx.pes().iter().map(|p| p.avail_us).collect();
+    for rt in ready {
+        let mut best_exec = f64::INFINITY;
+        for pe in ctx.pes() {
+            if let Some(us) = ctx.exec_us(rt, pe.id) {
+                if us < best_exec {
+                    best_exec = us;
+                }
+            }
+        }
+        if !best_exec.is_finite() {
+            continue; // unsupported everywhere; kernel will flag it
+        }
+        let mut best_pe = usize::MAX;
+        if least_loaded {
+            let mut best_avail = f64::INFINITY;
+            for pe in ctx.pes() {
+                if ctx.exec_us(rt, pe.id) == Some(best_exec)
+                    && avail[pe.id] < best_avail
+                {
+                    best_avail = avail[pe.id];
+                    best_pe = pe.id;
+                }
+            }
+        } else {
+            // DS3-faithful: first (lowest-id) PE achieving the minimum.
+            for pe in ctx.pes() {
+                if ctx.exec_us(rt, pe.id) == Some(best_exec) {
+                    best_pe = pe.id;
+                    break;
+                }
+            }
+        }
+        debug_assert_ne!(best_pe, usize::MAX);
+        avail[best_pe] = avail[best_pe].max(ctx.now_us()) + best_exec;
+        out.push(Assignment { job: rt.job, task: rt.task, pe: best_pe });
+        *decisions += 1;
+    }
+    out
+}
+
+impl Scheduler for Met {
+    fn name(&self) -> &str {
+        "met"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        met_schedule(ready, ctx, false, &mut self.decisions)
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!("met: {} decisions", self.decisions)]
+    }
+}
+
+/// MET with least-available tie-breaking among equal-best instances
+/// (ablation variant `met-lb`).
+#[derive(Debug, Default)]
+pub struct MetLb {
+    decisions: u64,
+}
+
+impl MetLb {
+    pub fn new() -> MetLb {
+        MetLb { decisions: 0 }
+    }
+}
+
+impl Scheduler for MetLb {
+    fn name(&self) -> &str {
+        "met-lb"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        met_schedule(ready, ctx, true, &mut self.decisions)
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!("met-lb: {} decisions", self.decisions)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    #[test]
+    fn picks_fastest_pe_class() {
+        let mut ctx = MockCtx::uniform(3, 0.0);
+        ctx.set_exec(0, 0, 0, 50.0);
+        ctx.set_exec(0, 0, 1, 10.0); // fastest
+        ctx.set_exec(0, 0, 2, 30.0);
+        let mut met = Met::new();
+        let a = met.schedule(&[rt(0, 0)], &ctx);
+        assert_eq!(a, vec![Assignment { job: 0, task: 0, pe: 1 }]);
+    }
+
+    #[test]
+    fn ignores_queue_on_slower_pes() {
+        // PE 1 is fastest but heavily queued; MET must still pick it
+        // (that is its defining pathology).
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 12.0);
+        ctx.set_exec(0, 0, 1, 10.0);
+        ctx.pes[1].avail_us = 10_000.0;
+        ctx.pes[1].queue_len = 40;
+        let mut met = Met::new();
+        let a = met.schedule(&[rt(0, 0)], &ctx);
+        assert_eq!(a[0].pe, 1);
+    }
+
+    #[test]
+    fn pins_to_first_equal_best_instance() {
+        // Two identical accelerators: DS3-faithful MET piles everything
+        // onto instance 0 (the Figure-3 collapse mechanism).
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        for t in 0..4 {
+            ctx.set_exec(0, t, 0, 16.0);
+            ctx.set_exec(0, t, 1, 16.0);
+        }
+        let mut met = Met::new();
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        let a = met.schedule(&tasks, &ctx);
+        assert!(a.iter().all(|x| x.pe == 0));
+    }
+
+    #[test]
+    fn met_lb_spreads_across_equal_best_instances() {
+        // The ablation variant alternates over equally-fast instances.
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        for t in 0..4 {
+            ctx.set_exec(0, t, 0, 16.0);
+            ctx.set_exec(0, t, 1, 16.0);
+        }
+        let mut met = MetLb::new();
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        let a = met.schedule(&tasks, &ctx);
+        let on0 = a.iter().filter(|x| x.pe == 0).count();
+        let on1 = a.iter().filter(|x| x.pe == 1).count();
+        assert_eq!((on0, on1), (2, 2));
+    }
+
+    #[test]
+    fn met_lb_still_ignores_other_classes() {
+        // Even met-lb must pick the fastest class when it is saturated.
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 10.0); // fast, busy
+        ctx.set_exec(0, 0, 1, 12.0); // slower, idle
+        ctx.pes[0].avail_us = 1e6;
+        let mut met = MetLb::new();
+        assert_eq!(met.schedule(&[rt(0, 0)], &ctx)[0].pe, 0);
+    }
+
+    #[test]
+    fn skips_unsupported_tasks() {
+        let ctx = MockCtx::uniform(2, 0.0); // no exec entries at all
+        let mut met = Met::new();
+        assert!(met.schedule(&[rt(0, 0)], &ctx).is_empty());
+    }
+
+    #[test]
+    fn assigns_every_supported_task() {
+        let mut ctx = MockCtx::uniform(4, 0.0);
+        for t in 0..10 {
+            ctx.set_exec(0, t, t % 4, 5.0);
+        }
+        let mut met = Met::new();
+        let tasks: Vec<_> = (0..10).map(|t| rt(0, t)).collect();
+        assert_eq!(met.schedule(&tasks, &ctx).len(), 10);
+    }
+}

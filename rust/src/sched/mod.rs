@@ -1,0 +1,248 @@
+//! Scheduler framework: the paper's plug-and-play scheduling interface.
+//!
+//! "The simulation framework invokes the scheduler at every scheduling
+//! decision epoch with the list of tasks ready for execution."  A
+//! [`Scheduler`] maps ready tasks to PE queues; the simulation kernel
+//! supplies a [`SchedContext`] exposing execution-time profiles, PE
+//! availability, and communication costs.
+//!
+//! Built-ins (§2 of the paper):
+//! * [`met::Met`] — minimum execution time (Braun et al.),
+//! * [`etf::Etf`] — earliest task first (Blythe et al.), also available
+//!   as an XLA-accelerated variant (`etf-xla`) that evaluates the
+//!   finish-time matrix through the AOT Pallas artifact,
+//! * [`table::TableSched`] — table-based scheduler storing an offline
+//!   (ILP-optimal) schedule, produced by [`ilp`].
+//!
+//! Extensions proving plug-and-play: [`heft::Heft`], [`random::RandomSched`],
+//! [`rr::RoundRobin`].  Register your own via [`create`].
+
+pub mod etf;
+pub mod heft;
+pub mod ilp;
+pub mod met;
+pub mod random;
+pub mod rr;
+pub mod table;
+
+use crate::app::AppGraph;
+use crate::platform::Platform;
+use crate::{Error, Result};
+
+/// A task instance eligible for scheduling (all predecessors finished).
+#[derive(Debug, Clone, Copy)]
+pub struct ReadyTask {
+    /// Job instance id (unique over the whole run).
+    pub job: usize,
+    /// Task index within the job's application DAG.
+    pub task: usize,
+    /// Application index within the workload mix.
+    pub app: usize,
+    /// Job arrival time (µs) — FIFO/aging tie-breaks.
+    pub arrival_us: f64,
+    /// Time the task became ready (µs).
+    pub ready_us: f64,
+}
+
+/// Immutable view of one PE for scheduling decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct PeSnapshot {
+    pub id: usize,
+    pub class: usize,
+    pub cluster: usize,
+    /// Time the PE's committed queue drains (µs); `now` if idle.
+    pub avail_us: f64,
+    /// Committed-but-unfinished tasks (including the running one).
+    pub queue_len: usize,
+}
+
+/// The simulation state a scheduler may consult.
+pub trait SchedContext {
+    /// Current simulation time (µs).
+    fn now_us(&self) -> f64;
+    /// Snapshots of every PE.
+    fn pes(&self) -> &[PeSnapshot];
+    /// Execution time of `rt` on PE `pe` at its current DVFS state
+    /// (µs), or `None` if that PE class does not support the task.
+    fn exec_us(&self, rt: &ReadyTask, pe: usize) -> Option<f64>;
+    /// Earliest time `rt`'s input data can be present at PE `pe`
+    /// (predecessor finish + NoC transfer), in µs.
+    fn data_ready_us(&self, rt: &ReadyTask, pe: usize) -> f64;
+    /// Name of the task (diagnostics, table lookups).
+    fn task_name(&self, rt: &ReadyTask) -> &str;
+    /// Name of the application the task belongs to.
+    fn app_name(&self, rt: &ReadyTask) -> &str;
+}
+
+/// A scheduling decision: commit `task` of `job` to PE `pe`'s queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub job: usize,
+    pub task: usize,
+    pub pe: usize,
+}
+
+/// The plug-and-play scheduler interface.
+///
+/// `schedule` is invoked at every decision epoch with the ready list
+/// (bounded by the kernel's `max_ready` window).  It may assign any
+/// subset; unassigned tasks reappear at the next epoch.  Assignments to
+/// unsupported PEs are rejected by the kernel (simulation error).
+pub trait Scheduler {
+    fn name(&self) -> &str;
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment>;
+    /// Optional: scheduler-specific report lines for the run summary.
+    fn report(&self) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+/// Factory context passed to scheduler constructors: offline schedulers
+/// (table/ILP, HEFT ranks) precompute against the platform + workload.
+pub struct SchedBuild<'a> {
+    pub platform: &'a Platform,
+    pub apps: &'a [AppGraph],
+    pub seed: u64,
+    /// Optional path to the AOT artifacts directory (etf-xla).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+/// Registry: construct a scheduler by name.
+///
+/// Names: `met`, `etf`, `etf-xla`, `ilp` (alias `table`), `heft`,
+/// `random`, `rr`.
+pub fn create(name: &str, build: &SchedBuild) -> Result<Box<dyn Scheduler>> {
+    match name {
+        "met" => Ok(Box::new(met::Met::new())),
+        "met-lb" => Ok(Box::new(met::MetLb::new())),
+        "etf" => Ok(Box::new(etf::Etf::new())),
+        "etf-xla" => Ok(Box::new(etf::EtfXla::new(build)?)),
+        "ilp" | "table" => Ok(Box::new(table::TableSched::from_ilp(build)?)),
+        "heft" => Ok(Box::new(heft::Heft::new(build))),
+        "random" => Ok(Box::new(random::RandomSched::new(build.seed))),
+        "rr" => Ok(Box::new(rr::RoundRobin::new())),
+        other => Err(Error::Sched(format!(
+            "unknown scheduler '{other}' \
+             (known: met, met-lb, etf, etf-xla, ilp, table, heft, random, rr)"
+        ))),
+    }
+}
+
+/// All built-in scheduler names (CLI listings, sweep defaults).
+pub fn builtin_names() -> &'static [&'static str] {
+    &["met", "met-lb", "etf", "etf-xla", "ilp", "heft", "random", "rr"]
+}
+
+// ---------------------------------------------------------------------------
+// Test scaffolding shared by the scheduler unit tests.
+// ---------------------------------------------------------------------------
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// A hand-wired context for scheduler unit tests.
+    pub struct MockCtx {
+        pub now: f64,
+        pub pes: Vec<PeSnapshot>,
+        /// (job, task, pe) -> exec µs.
+        pub exec: BTreeMap<(usize, usize, usize), f64>,
+        /// (job, task, pe) -> data-ready µs (default: now).
+        pub ready_at: BTreeMap<(usize, usize, usize), f64>,
+        pub names: BTreeMap<(usize, usize), String>,
+    }
+
+    impl MockCtx {
+        pub fn uniform(n_pes: usize, now: f64) -> MockCtx {
+            MockCtx {
+                now,
+                pes: (0..n_pes)
+                    .map(|id| PeSnapshot {
+                        id,
+                        class: 0,
+                        cluster: 0,
+                        avail_us: now,
+                        queue_len: 0,
+                    })
+                    .collect(),
+                exec: BTreeMap::new(),
+                ready_at: BTreeMap::new(),
+                names: BTreeMap::new(),
+            }
+        }
+
+        pub fn set_exec(&mut self, job: usize, task: usize, pe: usize, us: f64) {
+            self.exec.insert((job, task, pe), us);
+        }
+    }
+
+    impl SchedContext for MockCtx {
+        fn now_us(&self) -> f64 {
+            self.now
+        }
+        fn pes(&self) -> &[PeSnapshot] {
+            &self.pes
+        }
+        fn exec_us(&self, rt: &ReadyTask, pe: usize) -> Option<f64> {
+            self.exec.get(&(rt.job, rt.task, pe)).copied()
+        }
+        fn data_ready_us(&self, rt: &ReadyTask, pe: usize) -> f64 {
+            self.ready_at
+                .get(&(rt.job, rt.task, pe))
+                .copied()
+                .unwrap_or(self.now)
+        }
+        fn task_name(&self, rt: &ReadyTask) -> &str {
+            self.names
+                .get(&(rt.job, rt.task))
+                .map(String::as_str)
+                .unwrap_or("task")
+        }
+        fn app_name(&self, _rt: &ReadyTask) -> &str {
+            "mock-app"
+        }
+    }
+
+    pub fn rt(job: usize, task: usize) -> ReadyTask {
+        ReadyTask { job, task, app: 0, arrival_us: 0.0, ready_us: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite;
+
+    #[test]
+    fn registry_creates_all_builtins() {
+        let platform = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(suite::WifiParams { symbols: 2 })];
+        let build = SchedBuild {
+            platform: &platform,
+            apps: &apps,
+            seed: 1,
+            artifacts_dir: None,
+        };
+        for name in ["met", "etf", "ilp", "table", "heft", "random", "rr"] {
+            let s = create(name, &build)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn registry_rejects_unknown() {
+        let platform = Platform::table2_soc();
+        let build = SchedBuild {
+            platform: &platform,
+            apps: &[],
+            seed: 1,
+            artifacts_dir: None,
+        };
+        assert!(create("nope", &build).is_err());
+    }
+}

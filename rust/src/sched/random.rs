@@ -1,0 +1,107 @@
+//! Random scheduler: uniform choice over supporting PEs.
+//!
+//! A sanity baseline for the plug-and-play interface — any scheduler
+//! worth its name must beat it.  Deterministic given the seed.
+
+use super::{Assignment, ReadyTask, SchedContext, Scheduler};
+use crate::rng::Rng;
+
+pub struct RandomSched {
+    rng: Rng,
+    decisions: u64,
+}
+
+impl RandomSched {
+    pub fn new(seed: u64) -> RandomSched {
+        RandomSched { rng: Rng::new(seed ^ 0x5EED_5C4E_D01E_0001), decisions: 0 }
+    }
+}
+
+impl Scheduler for RandomSched {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        let mut out = Vec::with_capacity(ready.len());
+        let mut supported = Vec::new();
+        for rt in ready {
+            supported.clear();
+            for pe in ctx.pes() {
+                if ctx.exec_us(rt, pe.id).is_some() {
+                    supported.push(pe.id);
+                }
+            }
+            if supported.is_empty() {
+                continue;
+            }
+            let pick =
+                supported[self.rng.below(supported.len() as u64) as usize];
+            out.push(Assignment { job: rt.job, task: rt.task, pe: pick });
+            self.decisions += 1;
+        }
+        out
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!("random: {} decisions", self.decisions)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    #[test]
+    fn only_assigns_supported_pes() {
+        let mut ctx = MockCtx::uniform(4, 0.0);
+        ctx.set_exec(0, 0, 1, 5.0);
+        ctx.set_exec(0, 0, 3, 5.0);
+        let mut s = RandomSched::new(7);
+        for _ in 0..50 {
+            let a = s.schedule(&[rt(0, 0)], &ctx);
+            assert!(a[0].pe == 1 || a[0].pe == 3);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut ctx = MockCtx::uniform(4, 0.0);
+        for t in 0..20 {
+            for p in 0..4 {
+                ctx.set_exec(0, t, p, 5.0);
+            }
+        }
+        let tasks: Vec<_> = (0..20).map(|t| rt(0, t)).collect();
+        let run = |seed| {
+            let mut s = RandomSched::new(seed);
+            s.schedule(&tasks, &ctx)
+                .iter()
+                .map(|a| a.pe)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn covers_all_pes_eventually() {
+        let mut ctx = MockCtx::uniform(4, 0.0);
+        for t in 0..200 {
+            for p in 0..4 {
+                ctx.set_exec(0, t, p, 5.0);
+            }
+        }
+        let tasks: Vec<_> = (0..200).map(|t| rt(0, t)).collect();
+        let mut s = RandomSched::new(3);
+        let a = s.schedule(&tasks, &ctx);
+        let used: std::collections::BTreeSet<_> =
+            a.iter().map(|x| x.pe).collect();
+        assert_eq!(used.len(), 4);
+    }
+}

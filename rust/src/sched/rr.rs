@@ -1,0 +1,103 @@
+//! Round-robin scheduler: rotate over supporting PEs.
+//!
+//! Simple load-spreading baseline (no latency awareness); exercises the
+//! plug-and-play interface alongside [`super::random::RandomSched`].
+
+use super::{Assignment, ReadyTask, SchedContext, Scheduler};
+
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+    decisions: u64,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &str {
+        "rr"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        let n = ctx.pes().len();
+        let mut out = Vec::with_capacity(ready.len());
+        for rt in ready {
+            // Walk at most n PEs from the cursor to find a supporting one.
+            let mut pick = None;
+            for k in 0..n {
+                let pe = (self.cursor + k) % n;
+                if ctx.exec_us(rt, pe).is_some() {
+                    pick = Some(pe);
+                    self.cursor = (pe + 1) % n;
+                    break;
+                }
+            }
+            if let Some(pe) = pick {
+                out.push(Assignment { job: rt.job, task: rt.task, pe });
+                self.decisions += 1;
+            }
+        }
+        out
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!("rr: {} decisions", self.decisions)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    #[test]
+    fn rotates_over_all_pes() {
+        let mut ctx = MockCtx::uniform(3, 0.0);
+        for t in 0..6 {
+            for p in 0..3 {
+                ctx.set_exec(0, t, p, 5.0);
+            }
+        }
+        let mut s = RoundRobin::new();
+        let tasks: Vec<_> = (0..6).map(|t| rt(0, t)).collect();
+        let a = s.schedule(&tasks, &ctx);
+        let pes: Vec<_> = a.iter().map(|x| x.pe).collect();
+        assert_eq!(pes, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn skips_unsupported_pes() {
+        let mut ctx = MockCtx::uniform(3, 0.0);
+        for t in 0..4 {
+            ctx.set_exec(0, t, 1, 5.0); // only PE 1 supports anything
+        }
+        let mut s = RoundRobin::new();
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        let a = s.schedule(&tasks, &ctx);
+        assert!(a.iter().all(|x| x.pe == 1));
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn cursor_persists_across_epochs() {
+        let mut ctx = MockCtx::uniform(4, 0.0);
+        for t in 0..2 {
+            for p in 0..4 {
+                ctx.set_exec(0, t, p, 5.0);
+            }
+        }
+        let mut s = RoundRobin::new();
+        let a1 = s.schedule(&[rt(0, 0)], &ctx);
+        let a2 = s.schedule(&[rt(0, 1)], &ctx);
+        assert_eq!(a1[0].pe, 0);
+        assert_eq!(a2[0].pe, 1);
+    }
+}

@@ -1,0 +1,1195 @@
+//! The discrete-event simulation kernel.
+//!
+//! "the simulation kernel simulates task execution on the corresponding
+//! PE using execution time profiles obtained from our reference hardware
+//! implementations ... After each scheduling decision, the simulation
+//! kernel updates the state of the simulation, which is used in
+//! subsequent decision epochs" (paper §2).
+//!
+//! [`Simulation`] wires together every subsystem: the job generator
+//! injects DAG instances; ready tasks are handed to the pluggable
+//! [`crate::sched::Scheduler`] at every decision epoch; task execution
+//! uses the profile database scaled by the cluster's DVFS state; NoC
+//! transfers delay data readiness; at every DTPM epoch the governor and
+//! throttle policies pick OPPs and the power/thermal models advance
+//! (natively or through the AOT PJRT artifact).
+
+pub mod queue;
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+pub use crate::stats::SimReport;
+
+use crate::app::AppGraph;
+use crate::config::SimConfig;
+use crate::dtpm::{self, ExploreDse, Governor, PowerCap, ThermalThrottle};
+use crate::jobgen::JobGen;
+use crate::noc::NocModel;
+use crate::platform::{Opp, Platform};
+use crate::power::{self, EnergyMeter};
+use crate::rng::Rng;
+use crate::runtime::DtpmArtifact;
+use crate::sched::{
+    Assignment, PeSnapshot, ReadyTask, SchedBuild, SchedContext, Scheduler,
+};
+use crate::sched::ilp::ExecTable;
+use crate::stats::{EpochTrace, GanttEntry};
+use crate::thermal::RcModel;
+use crate::{Error, Result};
+use queue::{Event, EventQueue};
+
+/// Runtime state of one job instance.
+#[derive(Debug)]
+struct Job {
+    app: usize,
+    arrival_us: f64,
+    /// Unfinished predecessor count per task.
+    pred_remaining: Vec<u16>,
+    /// Finish time per task (NaN = not finished).
+    finish_us: Vec<f64>,
+    /// Committed PE per task (usize::MAX = unassigned).
+    assigned_pe: Vec<usize>,
+    tasks_done: usize,
+    done: bool,
+}
+
+/// Runtime state of one PE.
+#[derive(Debug, Clone)]
+struct PeState {
+    /// Committed FIFO queue (excluding the running task).
+    queue: VecDeque<(usize, usize)>,
+    /// Sum of execution estimates of queued tasks (avail heuristic).
+    pending_est_us: f64,
+    running: Option<(usize, usize)>,
+    /// Start/end of the running task.
+    run_start_us: f64,
+    busy_until_us: f64,
+    /// Busy time accounted so far for the running task.
+    accounted_us: f64,
+    /// Busy time inside the current DTPM epoch.
+    epoch_busy_us: f64,
+    /// Total busy time over the run.
+    total_busy_us: f64,
+}
+
+impl PeState {
+    fn new() -> PeState {
+        PeState {
+            queue: VecDeque::new(),
+            pending_est_us: 0.0,
+            running: None,
+            run_start_us: 0.0,
+            busy_until_us: 0.0,
+            accounted_us: 0.0,
+            epoch_busy_us: 0.0,
+            total_busy_us: 0.0,
+        }
+    }
+
+    fn avail_us(&self, now: f64) -> f64 {
+        let base = if self.running.is_some() {
+            self.busy_until_us
+        } else {
+            now
+        };
+        base.max(now) + self.pending_est_us
+    }
+}
+
+/// A fully wired simulation, ready to [`run`](Simulation::run).
+pub struct Simulation<'a> {
+    platform: &'a Platform,
+    apps: &'a [AppGraph],
+    cfg: SimConfig,
+
+    exec_tables: Vec<ExecTable>,
+    noc: NocModel,
+    rc: RcModel,
+    scheduler: Box<dyn Scheduler>,
+    governor: Box<dyn Governor>,
+    /// Predictive DSE governor (batched artifact path), when selected.
+    explore: Option<ExploreDse>,
+    /// DVFS-capable cluster ids the explore grid spans (max 2).
+    dvfs_clusters: Vec<usize>,
+    throttle: Option<ThermalThrottle>,
+    power_cap: Option<PowerCap>,
+    dtpm_xla: Option<DtpmArtifact>,
+
+    // --- dynamic state ---
+    now: f64,
+    events: EventQueue,
+    jobgen: JobGen,
+    jobs: Vec<Job>,
+    pes: Vec<PeState>,
+    ready: VecDeque<ReadyTask>,
+    /// Current OPP index per cluster.
+    cluster_opp_idx: Vec<usize>,
+    /// Above-ambient node temperatures.
+    theta: Vec<f64>,
+    theta_scratch: Vec<f64>,
+    energy: EnergyMeter,
+    last_epoch_t: f64,
+    last_epoch_power_w: f64,
+    jitter_rng: Rng,
+
+    // --- accounting ---
+    injected: usize,
+    completed: usize,
+    arrivals_done: bool,
+    report: SimReport,
+    sched_dirty: bool,
+}
+
+impl<'a> Simulation<'a> {
+    /// Build a simulation for `platform` running the `apps` workload mix.
+    pub fn build(
+        platform: &'a Platform,
+        apps: &'a [AppGraph],
+        cfg: &SimConfig,
+    ) -> Result<Simulation<'a>> {
+        Self::build_inner(platform, apps, cfg, None)
+    }
+
+    /// Build with a user-supplied scheduler instead of resolving
+    /// `cfg.scheduler` through the registry — the plug-and-play hook
+    /// (`examples/custom_scheduler.rs`).
+    pub fn build_with_scheduler(
+        platform: &'a Platform,
+        apps: &'a [AppGraph],
+        cfg: &SimConfig,
+        scheduler: Box<dyn Scheduler>,
+    ) -> Result<Simulation<'a>> {
+        Self::build_inner(platform, apps, cfg, Some(scheduler))
+    }
+
+    fn build_inner(
+        platform: &'a Platform,
+        apps: &'a [AppGraph],
+        cfg: &SimConfig,
+        scheduler_override: Option<Box<dyn Scheduler>>,
+    ) -> Result<Simulation<'a>> {
+        cfg.validate()?;
+        if apps.is_empty() {
+            return Err(Error::Sim("no applications in workload".into()));
+        }
+        // Every app must be runnable on this platform.
+        for app in apps {
+            for task in &app.tasks {
+                let supported = platform
+                    .classes
+                    .iter()
+                    .any(|c| task.exec_us.contains_key(&c.name));
+                if !supported {
+                    return Err(Error::Sim(format!(
+                        "task '{}' of app '{}' runs on no PE class of \
+                         platform '{}'",
+                        task.name, app.name, platform.name
+                    )));
+                }
+            }
+        }
+
+        let scheduler = match scheduler_override {
+            Some(s) => s,
+            None => {
+                let build = SchedBuild {
+                    platform,
+                    apps,
+                    seed: cfg.seed,
+                    artifacts_dir: cfg.artifacts_dir.clone(),
+                };
+                crate::sched::create(&cfg.scheduler, &build)?
+            }
+        };
+        let governor = dtpm::create_governor(&cfg.dtpm)?;
+        let rc = RcModel::new(platform, cfg.dtpm.epoch_us);
+
+        let explore_requested = cfg.dtpm.governor == "explore-xla";
+        let dtpm_xla = if cfg.use_xla_thermal || explore_requested {
+            let dir = cfg
+                .artifacts_dir
+                .clone()
+                .unwrap_or_else(crate::runtime::default_artifacts_dir);
+            let mut art = DtpmArtifact::load(&dir)?;
+            let (k1, k2): (Vec<f64>, Vec<f64>) = platform
+                .pes
+                .iter()
+                .map(|pe| {
+                    let c = &platform.classes[pe.class];
+                    (rc.leak_k1_effective(c.leak_k1, c.leak_k2), c.leak_k2)
+                })
+                .unzip();
+            art.set_model(&rc, &k1, &k2)?;
+            Some(art)
+        } else {
+            None
+        };
+
+        let exec_tables =
+            apps.iter().map(|a| ExecTable::new(a, platform)).collect();
+        let jobgen = match &cfg.trace_file {
+            Some(path) => {
+                let j = crate::util::json::Json::parse_file(path)?;
+                let gen = JobGen::from_trace_json(&j, cfg.max_jobs)?;
+                gen
+            }
+            None => JobGen::new(
+                cfg.arrival,
+                cfg.injection_rate_per_ms,
+                apps.len(),
+                &cfg.app_weights,
+                cfg.max_jobs,
+                cfg.seed,
+            ),
+        };
+        // The explore-xla governor spans the first two DVFS-capable
+        // clusters (big + LITTLE on the Table-2 SoC).
+        let dvfs_clusters: Vec<usize> = platform
+            .clusters
+            .iter()
+            .filter(|c| platform.classes[c.class].opps.len() > 1)
+            .map(|c| c.id)
+            .take(2)
+            .collect();
+        let explore = if explore_requested {
+            if dvfs_clusters.is_empty() {
+                return Err(Error::Config(
+                    "explore-xla governor needs a DVFS-capable cluster"
+                        .into(),
+                ));
+            }
+            let n_big = platform.classes
+                [platform.clusters[dvfs_clusters[0]].class]
+                .opps
+                .len();
+            let n_little = dvfs_clusters
+                .get(1)
+                .map(|&c| platform.classes[platform.clusters[c].class].opps.len())
+                .unwrap_or(1);
+            Some(ExploreDse::new(n_big, n_little, cfg.dtpm.throttle_temp_c))
+        } else {
+            None
+        };
+
+        // Governors start at max frequency (Linux boot default).
+        let cluster_opp_idx = platform
+            .clusters
+            .iter()
+            .map(|c| platform.classes[c.class].opps.len() - 1)
+            .collect();
+
+        let n_nodes = platform.floorplan.len();
+        let mut report = SimReport::default();
+        report.scheduler = scheduler.name().to_string();
+        report.injection_rate_per_ms = cfg.injection_rate_per_ms;
+        report.seed = cfg.seed;
+        report.per_app_latencies_us = vec![Vec::new(); apps.len()];
+
+        Ok(Simulation {
+            platform,
+            apps,
+            cfg: cfg.clone(),
+            exec_tables,
+            noc: NocModel::new(platform, cfg.noc_congestion),
+            rc,
+            scheduler,
+            governor,
+            explore,
+            dvfs_clusters,
+            throttle: cfg
+                .dtpm
+                .thermal_throttle
+                .then(|| ThermalThrottle::new(cfg.dtpm.throttle_temp_c)),
+            power_cap: cfg.dtpm.power_cap_w.map(PowerCap::new),
+            dtpm_xla,
+            now: 0.0,
+            events: EventQueue::new(),
+            jobgen,
+            jobs: Vec::new(),
+            pes: vec![PeState::new(); platform.n_pes()],
+            ready: VecDeque::new(),
+            cluster_opp_idx,
+            theta: vec![0.0; n_nodes],
+            theta_scratch: vec![0.0; n_nodes],
+            energy: EnergyMeter::new(platform.n_pes()),
+            last_epoch_t: 0.0,
+            last_epoch_power_w: 0.0,
+            jitter_rng: Rng::new(cfg.seed ^ 0x7177_E44E_0C5A_11AA),
+            injected: 0,
+            completed: 0,
+            arrivals_done: false,
+            report,
+            sched_dirty: false,
+        })
+    }
+
+    /// Current OPP of the cluster a PE belongs to.
+    #[inline]
+    fn pe_opp(&self, pe: usize) -> Opp {
+        let cluster = self.platform.pes[pe].cluster;
+        let class = self.platform.clusters[cluster].class;
+        self.platform.classes[class].opps[self.cluster_opp_idx[cluster]]
+    }
+
+    /// Execution time of (app, task) on `pe` at current DVFS (no jitter).
+    #[inline]
+    fn exec_base_us(&self, app: usize, task: usize, pe: usize) -> f64 {
+        let base = self.exec_tables[app].us(task, pe);
+        if !base.is_finite() {
+            return f64::INFINITY;
+        }
+        let class = self.platform.class_of(pe);
+        base * class.nominal_mhz / self.pe_opp(pe).freq_mhz
+    }
+
+    /// Earliest time the inputs of (job, task) can be at `pe`.
+    fn data_ready(&self, job: usize, task: usize, pe: usize) -> f64 {
+        let j = &self.jobs[job];
+        let app = &self.apps[j.app];
+        let mut t = j.arrival_us;
+        for &p in &app.tasks[task].preds {
+            let fin = j.finish_us[p];
+            debug_assert!(fin.is_finite(), "pred not finished");
+            let src = j.assigned_pe[p];
+            let arr = fin
+                + self.noc.transfer_us(src, pe, app.tasks[p].out_bytes);
+            if arr > t {
+                t = arr;
+            }
+        }
+        t
+    }
+
+    // -------------------------------------------------------------------
+    // Main loop
+    // -------------------------------------------------------------------
+
+    /// Run to completion and produce the report.
+    pub fn run(mut self) -> SimReport {
+        let wall0 = Instant::now();
+        // Prime the event queue: first arrival + first DTPM epoch.
+        self.schedule_next_arrival();
+        self.events.push(self.cfg.dtpm.epoch_us, Event::DtpmEpoch);
+
+        while let Some((at, ev)) = self.events.pop() {
+            debug_assert!(at + 1e-9 >= self.now, "time went backwards");
+            self.now = at;
+            if self.now > self.cfg.max_sim_us {
+                break;
+            }
+            match ev {
+                Event::JobArrival { app } => self.on_job_arrival(app),
+                Event::TaskFinish { job, task, pe } => {
+                    self.on_task_finish(job, task, pe)
+                }
+                Event::DtpmEpoch => self.on_dtpm_epoch(),
+            }
+            // Decision epoch: a task finished or a job arrived.
+            if self.sched_dirty && !self.ready.is_empty() {
+                self.invoke_scheduler();
+            }
+            if self.finished() {
+                break;
+            }
+        }
+
+        self.finalize(wall0)
+    }
+
+    fn finished(&self) -> bool {
+        self.arrivals_done
+            && self.completed == self.injected
+            && self.ready.is_empty()
+    }
+
+    fn schedule_next_arrival(&mut self) {
+        match self.jobgen.next() {
+            Some(a) => {
+                self.events.push(a.at_us, Event::JobArrival { app: a.app })
+            }
+            None => self.arrivals_done = true,
+        }
+    }
+
+    fn on_job_arrival(&mut self, app_idx: usize) {
+        assert!(
+            app_idx < self.apps.len(),
+            "trace references app index {app_idx}, workload has {}",
+            self.apps.len()
+        );
+        let app = &self.apps[app_idx];
+        let n = app.len();
+        let job_id = self.jobs.len();
+        let mut job = Job {
+            app: app_idx,
+            arrival_us: self.now,
+            pred_remaining: app
+                .tasks
+                .iter()
+                .map(|t| t.preds.len() as u16)
+                .collect(),
+            finish_us: vec![f64::NAN; n],
+            assigned_pe: vec![usize::MAX; n],
+            tasks_done: 0,
+            done: false,
+        };
+        // Sources are immediately ready.
+        for s in app.sources() {
+            job.pred_remaining[s] = 0;
+            self.ready.push_back(ReadyTask {
+                job: job_id,
+                task: s,
+                app: app_idx,
+                arrival_us: self.now,
+                ready_us: self.now,
+            });
+        }
+        self.jobs.push(job);
+        self.injected += 1;
+        self.sched_dirty = true;
+        self.schedule_next_arrival();
+    }
+
+    fn on_task_finish(&mut self, job_id: usize, task: usize, pe_id: usize) {
+        // --- PE bookkeeping ---
+        let end;
+        {
+            let pe = &mut self.pes[pe_id];
+            debug_assert_eq!(pe.running, Some((job_id, task)));
+            end = pe.busy_until_us;
+            let add = (end - pe.accounted_us).max(0.0);
+            pe.epoch_busy_us += add;
+            pe.total_busy_us += end - pe.run_start_us;
+            pe.running = None;
+        }
+        self.report.tasks_executed += 1;
+
+        // --- job bookkeeping ---
+        {
+            let job = &mut self.jobs[job_id];
+            job.finish_us[task] = end;
+            job.tasks_done += 1;
+        }
+        let app_idx = self.jobs[job_id].app;
+        let app = &self.apps[app_idx];
+        // Propagate readiness.
+        for &succ in app.succs(task) {
+            let job = &mut self.jobs[job_id];
+            job.pred_remaining[succ] -= 1;
+            if job.pred_remaining[succ] == 0 {
+                let arrival_us = job.arrival_us;
+                self.ready.push_back(ReadyTask {
+                    job: job_id,
+                    task: succ,
+                    app: app_idx,
+                    arrival_us,
+                    ready_us: self.now,
+                });
+            }
+        }
+        // Job completion.
+        if self.jobs[job_id].tasks_done == app.len() {
+            let job = &mut self.jobs[job_id];
+            job.done = true;
+            let latency = self.now - job.arrival_us;
+            self.completed += 1;
+            if job_id >= self.cfg.warmup_jobs {
+                self.report.job_latencies_us.push(latency);
+                self.report.per_app_latencies_us[app_idx].push(latency);
+            }
+            // Reclaim per-task state of completed jobs (long sweeps).
+            job.pred_remaining = Vec::new();
+        }
+        self.sched_dirty = true;
+        self.try_start_next(pe_id);
+    }
+
+    /// Start the next queued task on an idle PE, if any.
+    fn try_start_next(&mut self, pe_id: usize) {
+        if self.pes[pe_id].running.is_some() {
+            return;
+        }
+        let Some((job_id, task)) = self.pes[pe_id].queue.pop_front() else {
+            return;
+        };
+        let app_idx = self.jobs[job_id].app;
+        let est = self.exec_base_us(app_idx, task, pe_id);
+        self.pes[pe_id].pending_est_us =
+            (self.pes[pe_id].pending_est_us - est).max(0.0);
+
+        let data_at = self.data_ready(job_id, task, pe_id);
+        let start = data_at.max(self.now);
+        let mut exec = est;
+        if self.cfg.exec_jitter_frac > 0.0 {
+            let f = self
+                .jitter_rng
+                .normal(1.0, self.cfg.exec_jitter_frac)
+                .clamp(0.5, 1.5);
+            exec *= f;
+        }
+        debug_assert!(exec.is_finite(), "dispatch to unsupported PE");
+        let end = start + exec;
+        // NoC congestion tracking (first-order: flows start at dispatch).
+        if self.noc.models_congestion() {
+            self.noc.flow_started();
+            self.noc.flow_finished();
+        }
+        {
+            let pe = &mut self.pes[pe_id];
+            pe.running = Some((job_id, task));
+            pe.run_start_us = start;
+            pe.busy_until_us = end;
+            pe.accounted_us = start;
+        }
+        if self.cfg.capture_gantt
+            && self.report.gantt.len() < self.cfg.gantt_limit
+        {
+            self.report.gantt.push(GanttEntry {
+                pe: pe_id,
+                job: job_id,
+                app: app_idx,
+                task,
+                start_us: start,
+                end_us: end,
+            });
+        }
+        self.events
+            .push(end, Event::TaskFinish { job: job_id, task, pe: pe_id });
+    }
+
+    // -------------------------------------------------------------------
+    // Scheduling
+    // -------------------------------------------------------------------
+
+    fn invoke_scheduler(&mut self) {
+        self.sched_dirty = false;
+        let window = self.ready.len().min(self.cfg.max_ready);
+        let ready_vec: Vec<ReadyTask> =
+            self.ready.iter().take(window).copied().collect();
+
+        let snapshots: Vec<PeSnapshot> = self
+            .platform
+            .pes
+            .iter()
+            .map(|pe| PeSnapshot {
+                id: pe.id,
+                class: pe.class,
+                cluster: pe.cluster,
+                avail_us: self.pes[pe.id].avail_us(self.now),
+                queue_len: self.pes[pe.id].queue.len()
+                    + self.pes[pe.id].running.is_some() as usize,
+            })
+            .collect();
+
+        // Temporarily lift the scheduler out of `self` so the context can
+        // borrow the rest of the simulation immutably.
+        let mut scheduler =
+            std::mem::replace(&mut self.scheduler, Box::new(NullSched));
+        let t0 = Instant::now();
+        let assignments = {
+            let ctx = CtxView { sim: self, snapshots: &snapshots };
+            scheduler.schedule(&ready_vec, &ctx)
+        };
+        self.report.sched_wall_ns += t0.elapsed().as_nanos() as u64;
+        self.scheduler = scheduler;
+        self.report.sched_invocations += 1;
+
+        if assignments.is_empty() {
+            return;
+        }
+        // Commit.
+        let mut assigned: Vec<(usize, usize)> = Vec::with_capacity(
+            assignments.len(),
+        );
+        for a in &assignments {
+            if self.commit(a) {
+                assigned.push((a.job, a.task));
+            }
+        }
+        // Remove committed tasks from the ready deque.  Assignments can
+        // only reference the first `window` entries, so pop that prefix
+        // and push back the unassigned ones in order — O(window) rather
+        // than O(backlog) (the backlog can be thousands of tasks deep on
+        // saturated sweeps; see EXPERIMENTS.md §Perf).
+        if !assigned.is_empty() {
+            let kept: Vec<ReadyTask> = self
+                .ready
+                .drain(..window)
+                .filter(|rt| !assigned.contains(&(rt.job, rt.task)))
+                .collect();
+            for rt in kept.into_iter().rev() {
+                self.ready.push_front(rt);
+            }
+        }
+    }
+
+    /// Validate and enqueue one assignment.  Returns false if rejected.
+    fn commit(&mut self, a: &Assignment) -> bool {
+        if a.pe >= self.pes.len() || a.job >= self.jobs.len() {
+            return false;
+        }
+        let app_idx = self.jobs[a.job].app;
+        let est = self.exec_base_us(app_idx, a.task, a.pe);
+        if !est.is_finite() {
+            // Scheduler picked an unsupported PE: reject (task stays
+            // ready; a scheduler bug surfaces as starvation, not UB).
+            return false;
+        }
+        if self.jobs[a.job].assigned_pe[a.task] != usize::MAX {
+            return false; // duplicate assignment
+        }
+        self.jobs[a.job].assigned_pe[a.task] = a.pe;
+        self.pes[a.pe].queue.push_back((a.job, a.task));
+        self.pes[a.pe].pending_est_us += est;
+        self.try_start_next(a.pe);
+        true
+    }
+
+    // -------------------------------------------------------------------
+    // DTPM epoch
+    // -------------------------------------------------------------------
+
+    fn on_dtpm_epoch(&mut self) {
+        let dt = self.now - self.last_epoch_t;
+        if dt <= 0.0 {
+            self.events
+                .push(self.now + self.cfg.dtpm.epoch_us, Event::DtpmEpoch);
+            return;
+        }
+        // 1. Utilization over the closing epoch.
+        let mut util = vec![0.0f64; self.pes.len()];
+        let mut busy = vec![0.0f64; self.pes.len()];
+        for (i, pe) in self.pes.iter_mut().enumerate() {
+            if pe.running.is_some() {
+                let upto = self.now.min(pe.busy_until_us);
+                let add = (upto - pe.accounted_us).max(0.0);
+                pe.epoch_busy_us += add;
+                pe.accounted_us = pe.accounted_us.max(upto);
+            }
+            busy[i] = pe.epoch_busy_us;
+            util[i] = (pe.epoch_busy_us / dt).clamp(0.0, 1.0);
+            pe.epoch_busy_us = 0.0;
+        }
+
+        // 2. Power over the closing epoch (OPPs that were in force).
+        let cluster_opps: Vec<Opp> = (0..self.platform.clusters.len())
+            .map(|c| {
+                let class = self.platform.clusters[c].class;
+                self.platform.classes[class].opps[self.cluster_opp_idx[c]]
+            })
+            .collect();
+        let t_pe_abs: Vec<f64> = self
+            .rc
+            .t_pe(&self.theta)
+            .iter()
+            .map(|t| t + self.platform.t_ambient)
+            .collect();
+
+        let powers: Vec<f64>;
+        if let Some(art) = self.dtpm_xla.as_mut() {
+            // Device path: dynamic power host-side, leakage + thermal
+            // step on the PJRT artifact (single candidate row).
+            let p_dyn: Vec<f64> = self
+                .platform
+                .pes
+                .iter()
+                .map(|pe| {
+                    power::p_dynamic(
+                        &self.platform.classes[pe.class],
+                        cluster_opps[pe.cluster],
+                        util[pe.id],
+                    )
+                })
+                .collect();
+            let volts: Vec<f64> = self
+                .platform
+                .pes
+                .iter()
+                .map(|pe| cluster_opps[pe.cluster].volt)
+                .collect();
+            match art.step(&self.theta, &[(p_dyn.clone(), volts)]) {
+                Ok(out) => {
+                    powers = out.p_total[0].clone();
+                    self.theta.copy_from_slice(&out.t_next[0]);
+                    self.report.device_calls = art.calls;
+                }
+                Err(e) => {
+                    // Degrade to native path mid-run.
+                    eprintln!("dtpm-xla failed ({e}); native fallback");
+                    powers = power::epoch_power(
+                        self.platform,
+                        &cluster_opps,
+                        &util,
+                        &t_pe_abs,
+                    );
+                    self.rc.step_into(
+                        &self.theta,
+                        &powers,
+                        &mut self.theta_scratch,
+                    );
+                    std::mem::swap(
+                        &mut self.theta,
+                        &mut self.theta_scratch,
+                    );
+                    self.dtpm_xla = None;
+                }
+            }
+        } else {
+            powers = power::epoch_power(
+                self.platform,
+                &cluster_opps,
+                &util,
+                &t_pe_abs,
+            );
+            self.rc
+                .step_into(&self.theta, &powers, &mut self.theta_scratch);
+            std::mem::swap(&mut self.theta, &mut self.theta_scratch);
+        }
+
+        // 3. Energy + peak temperature accounting.
+        self.energy.add_epoch(&powers, &busy, dt);
+        let p_total_w: f64 = powers.iter().sum();
+        self.last_epoch_power_w = p_total_w;
+        let t_max_abs = self
+            .theta
+            .iter()
+            .copied()
+            .fold(0.0, f64::max)
+            + self.platform.t_ambient;
+        if t_max_abs > self.report.peak_temp_c {
+            self.report.peak_temp_c = t_max_abs;
+        }
+
+        // 4. Governor + DTPM policies pick OPPs for the next epoch.
+        //
+        // 4a. Predictive DSE ("explore-xla"): one batched artifact call
+        // scores the whole candidate grid; fall through to the classic
+        // governor only on device failure.
+        let mut explored = false;
+        if self.explore.is_some() && self.dtpm_xla.is_some() {
+            explored = self.explore_epoch(&util, t_max_abs);
+        }
+        for c in 0..self.platform.clusters.len() {
+            if explored && self.dvfs_clusters.contains(&c) {
+                // OPPs already set by the DSE pick; policies still cap.
+                let class_idx = self.platform.clusters[c].class;
+                let n_opps =
+                    self.platform.classes[class_idx].opps.len();
+                let mut idx = self.cluster_opp_idx[c];
+                if let Some(th) = self.throttle.as_mut() {
+                    idx = th.apply(idx, t_max_abs);
+                }
+                if let Some(cap) = self.power_cap.as_mut() {
+                    idx = cap.apply(idx, p_total_w);
+                }
+                self.cluster_opp_idx[c] = idx.min(n_opps - 1);
+                continue;
+            }
+            let class_idx = self.platform.clusters[c].class;
+            let class = &self.platform.classes[class_idx];
+            if class.opps.len() == 1 {
+                continue; // accelerators: fixed OPP
+            }
+            // Linux-style: cluster utilization = max over member PEs.
+            let u = self.platform.clusters[c]
+                .pe_ids
+                .iter()
+                .map(|&p| util[p])
+                .fold(0.0, f64::max);
+            let mut idx = self.governor.decide(
+                c,
+                u,
+                self.cluster_opp_idx[c],
+                &class.opps,
+            );
+            if let Some(th) = self.throttle.as_mut() {
+                idx = th.apply(idx, t_max_abs);
+            }
+            if let Some(cap) = self.power_cap.as_mut() {
+                idx = cap.apply(idx, p_total_w);
+            }
+            self.cluster_opp_idx[c] = idx.min(class.opps.len() - 1);
+        }
+
+        // 5. Trace.
+        if self.cfg.capture_traces {
+            self.report.trace.push(EpochTrace {
+                t_us: self.now,
+                temps_c: self
+                    .theta
+                    .iter()
+                    .map(|t| t + self.platform.t_ambient)
+                    .collect(),
+                power_w: p_total_w,
+                cluster_mhz: (0..self.platform.clusters.len())
+                    .map(|c| {
+                        let cl = self.platform.clusters[c].class;
+                        self.platform.classes[cl].opps
+                            [self.cluster_opp_idx[c]]
+                            .freq_mhz
+                    })
+                    .collect(),
+            });
+        }
+
+        self.last_epoch_t = self.now;
+        // Keep epochs coming while the system is active.
+        if !(self.arrivals_done && self.completed == self.injected) {
+            self.events
+                .push(self.now + self.cfg.dtpm.epoch_us, Event::DtpmEpoch);
+        }
+    }
+
+    /// One predictive-DSE decision: build the candidate grid, evaluate
+    /// it in a single batched artifact call, commit the best candidate's
+    /// OPP indices.  Returns false on device failure (callers then use
+    /// the classic governor for this epoch).
+    fn explore_epoch(&mut self, util: &[f64], _t_max_abs: f64) -> bool {
+        let Some(expl) = self.explore.as_mut() else { return false };
+        let Some(art) = self.dtpm_xla.as_mut() else { return false };
+        let n_pes = self.platform.n_pes();
+        let grid = expl.grid.clone();
+
+        // Current frequency per cluster (for utilization rescaling).
+        let cur_mhz: Vec<f64> = (0..self.platform.clusters.len())
+            .map(|c| {
+                let cl = self.platform.clusters[c].class;
+                self.platform.classes[cl].opps[self.cluster_opp_idx[c]]
+                    .freq_mhz
+            })
+            .collect();
+
+        let mut cands: Vec<(Vec<f64>, Vec<f64>)> =
+            Vec::with_capacity(grid.len());
+        let mut feasible = vec![true; grid.len()];
+        for (k, &(bi, li)) in grid.iter().enumerate() {
+            let mut p_dyn = vec![0.0f64; n_pes];
+            let mut volts = vec![0.0f64; n_pes];
+            for pe in &self.platform.pes {
+                let cluster = pe.cluster;
+                let class = &self.platform.classes[pe.class];
+                let opp = if Some(&cluster) == self.dvfs_clusters.first()
+                {
+                    class.opps[bi.min(class.opps.len() - 1)]
+                } else if Some(&cluster) == self.dvfs_clusters.get(1) {
+                    class.opps[li.min(class.opps.len() - 1)]
+                } else {
+                    class.opps[self.cluster_opp_idx[cluster]]
+                };
+                // Same work at lower frequency -> higher utilization.
+                let u = (util[pe.id] * cur_mhz[cluster] / opp.freq_mhz)
+                    .min(1.0);
+                if self.dvfs_clusters.contains(&cluster)
+                    && util[pe.id] * cur_mhz[cluster] / opp.freq_mhz
+                        > 0.95
+                {
+                    feasible[k] = false;
+                }
+                p_dyn[pe.id] = power::p_dynamic(class, opp, u);
+                volts[pe.id] = opp.volt;
+            }
+            cands.push((p_dyn, volts));
+        }
+
+        let out = match art.step(&self.theta, &cands) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("explore-xla device failure ({e}); governor fallback");
+                return false;
+            }
+        };
+        self.report.device_calls = art.calls;
+        let t_peak_next: Vec<f64> = out
+            .t_next
+            .iter()
+            .map(|row| {
+                row.iter().copied().fold(0.0, f64::max)
+                    + self.platform.t_ambient
+            })
+            .collect();
+        let k = expl.choose(&out.p_sum, &t_peak_next, &feasible);
+        let (bi, li) = grid[k];
+        let b_cluster = self.dvfs_clusters[0];
+        let b_class = self.platform.clusters[b_cluster].class;
+        self.cluster_opp_idx[b_cluster] =
+            bi.min(self.platform.classes[b_class].opps.len() - 1);
+        if let Some(&l_cluster) = self.dvfs_clusters.get(1) {
+            let l_class = self.platform.clusters[l_cluster].class;
+            self.cluster_opp_idx[l_cluster] =
+                li.min(self.platform.classes[l_class].opps.len() - 1);
+        }
+        true
+    }
+
+    fn finalize(mut self, wall0: Instant) -> SimReport {
+        self.report.injected_jobs = self.injected;
+        self.report.completed_jobs = self.completed;
+        self.report.sim_time_us = self.now;
+        self.report.events_processed = self.events.popped;
+        self.report.total_energy_j = self.energy.total_energy_j();
+        self.report.avg_power_w = self.energy.avg_power_w();
+        self.report.pe_utilization = (0..self.pes.len())
+            .map(|i| {
+                if self.now > 0.0 {
+                    (self.pes[i].total_busy_us / self.now).min(1.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        if let Some(th) = &self.throttle {
+            self.report.throttle_engagements = th.engagements;
+        }
+        self.report.scheduler_report = self.scheduler.report();
+        self.report.wall_s = wall0.elapsed().as_secs_f64();
+        self.report
+    }
+}
+
+/// Placeholder scheduler occupying the slot during an invocation.
+struct NullSched;
+
+impl Scheduler for NullSched {
+    fn name(&self) -> &str {
+        "null"
+    }
+    fn schedule(
+        &mut self,
+        _ready: &[ReadyTask],
+        _ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        Vec::new()
+    }
+}
+
+/// Borrowed scheduler view of the simulation.
+struct CtxView<'s, 'a> {
+    sim: &'s Simulation<'a>,
+    snapshots: &'s [PeSnapshot],
+}
+
+impl SchedContext for CtxView<'_, '_> {
+    fn now_us(&self) -> f64 {
+        self.sim.now
+    }
+    fn pes(&self) -> &[PeSnapshot] {
+        self.snapshots
+    }
+    fn exec_us(&self, rt: &ReadyTask, pe: usize) -> Option<f64> {
+        let us = self.sim.exec_base_us(rt.app, rt.task, pe);
+        us.is_finite().then_some(us)
+    }
+    fn data_ready_us(&self, rt: &ReadyTask, pe: usize) -> f64 {
+        self.sim.data_ready(rt.job, rt.task, pe)
+    }
+    fn task_name(&self, rt: &ReadyTask) -> &str {
+        &self.sim.apps[rt.app].tasks[rt.task].name
+    }
+    fn app_name(&self, rt: &ReadyTask) -> &str {
+        &self.sim.apps[rt.app].name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+
+    fn quick_cfg(sched: &str, rate: f64, jobs: usize) -> SimConfig {
+        let mut c = SimConfig::default();
+        c.scheduler = sched.into();
+        c.injection_rate_per_ms = rate;
+        c.max_jobs = jobs;
+        c.warmup_jobs = (jobs / 10).min(20);
+        c
+    }
+
+    fn wifi1() -> Vec<AppGraph> {
+        vec![suite::wifi_tx(WifiParams { symbols: 4 })]
+    }
+
+    #[test]
+    fn completes_all_jobs_at_low_rate() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 0.5, 50);
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.injected_jobs, 50);
+        assert_eq!(r.completed_jobs, 50);
+        assert!(r.avg_job_latency_us() > 0.0);
+        assert!(r.tasks_executed as usize >= 50 * apps[0].len());
+    }
+
+    #[test]
+    fn latency_lower_bounded_by_critical_path() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cp = apps[0].critical_path_us();
+        let cfg = quick_cfg("etf", 0.2, 30);
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        let min = r
+            .job_latencies_us
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            min >= cp - 1e-6,
+            "min latency {min} below critical path {cp}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 2.0, 60);
+        let a = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        let b = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(a.job_latencies_us, b.job_latencies_us);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert!((a.total_energy_j - b.total_energy_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 2.0, 60);
+        let a = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        cfg.seed = 1234;
+        let b = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_ne!(a.job_latencies_us, b.job_latencies_us);
+    }
+
+    #[test]
+    fn all_schedulers_run_clean() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        for s in ["met", "etf", "ilp", "heft", "random", "rr"] {
+            let cfg = quick_cfg(s, 1.0, 40);
+            let r = Simulation::build(&p, &apps, &cfg)
+                .unwrap_or_else(|e| panic!("{s}: {e}"))
+                .run();
+            assert_eq!(r.completed_jobs, 40, "{s} lost jobs");
+        }
+    }
+
+    #[test]
+    fn energy_and_power_are_positive() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 2.0, 100);
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert!(r.total_energy_j > 0.0);
+        assert!(r.avg_power_w > 0.0);
+        assert!(r.peak_temp_c > p.t_ambient);
+        // Idle-ish platform must not overheat.
+        assert!(r.peak_temp_c < 105.0);
+    }
+
+    #[test]
+    fn utilization_grows_with_rate() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let lo = Simulation::build(&p, &apps, &quick_cfg("etf", 0.5, 80))
+            .unwrap()
+            .run();
+        let hi = Simulation::build(&p, &apps, &quick_cfg("etf", 8.0, 80))
+            .unwrap()
+            .run();
+        let sum = |r: &SimReport| -> f64 { r.pe_utilization.iter().sum() };
+        assert!(
+            sum(&hi) > sum(&lo),
+            "hi {:?} !> lo {:?}",
+            sum(&hi),
+            sum(&lo)
+        );
+    }
+
+    #[test]
+    fn gantt_capture_respects_limit() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 1.0, 30);
+        cfg.capture_gantt = true;
+        cfg.gantt_limit = 25;
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.gantt.len(), 25);
+        // Entries are well-formed.
+        for e in &r.gantt {
+            assert!(e.end_us > e.start_us);
+            assert!(e.pe < p.n_pes());
+        }
+    }
+
+    #[test]
+    fn traces_captured_when_enabled() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 1.0, 50);
+        cfg.capture_traces = true;
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert!(!r.trace.is_empty());
+        for tr in &r.trace {
+            assert_eq!(tr.temps_c.len(), p.floorplan.len());
+            assert!(tr.power_w >= 0.0);
+        }
+    }
+
+    #[test]
+    fn multi_app_mix_completes() {
+        let p = Platform::table2_soc();
+        let apps = vec![
+            suite::wifi_tx(WifiParams { symbols: 2 }),
+            suite::single_carrier_tx(),
+            suite::range_detection(suite::RadarParams { pulses: 2 }),
+        ];
+        let mut cfg = quick_cfg("etf", 2.0, 90);
+        cfg.app_weights = vec![1.0, 2.0, 1.0];
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 90);
+        // All three apps contributed measured jobs.
+        for (i, lats) in r.per_app_latencies_us.iter().enumerate() {
+            assert!(!lats.is_empty(), "app {i} has no completions");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_workload() {
+        let p = Platform::table2_soc();
+        let cfg = SimConfig::default();
+        assert!(Simulation::build(&p, &[], &cfg).is_err());
+    }
+
+    #[test]
+    fn ondemand_tracks_load() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 6.0, 200);
+        cfg.dtpm.governor = "ondemand".into();
+        cfg.capture_traces = true;
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 200);
+        // Under load, ondemand must have raised the big cluster's
+        // frequency above min in at least one epoch.
+        let raised = r
+            .trace
+            .iter()
+            .any(|tr| tr.cluster_mhz[0] > 200.0);
+        assert!(raised);
+    }
+
+    #[test]
+    fn jitter_changes_latencies_but_not_stability() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 1.0, 60);
+        cfg.exec_jitter_frac = 0.1;
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 60);
+        let base_cfg = quick_cfg("etf", 1.0, 60);
+        let base = Simulation::build(&p, &apps, &base_cfg).unwrap().run();
+        assert_ne!(r.job_latencies_us, base.job_latencies_us);
+    }
+}

@@ -1,0 +1,341 @@
+//! Metrics, traces, and report generation.
+//!
+//! "the framework generates plots and reports of schedule, performance,
+//! throughput, and energy consumption to aid users in analyzing the
+//! behaviour of various algorithms" (paper §2).
+//!
+//! [`SimReport`] is the structured output of a simulation run; it renders
+//! to an ASCII summary, a Gantt chart, CSV series, or JSON.
+
+use crate::app::AppGraph;
+use crate::platform::Platform;
+use crate::util::json::Json;
+use crate::util::{plot, Summary};
+
+/// One executed task instance (schedule/Gantt trace).
+#[derive(Debug, Clone, Copy)]
+pub struct GanttEntry {
+    pub pe: usize,
+    pub job: usize,
+    pub app: usize,
+    pub task: usize,
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+/// One DTPM epoch snapshot.
+#[derive(Debug, Clone)]
+pub struct EpochTrace {
+    pub t_us: f64,
+    /// Absolute node temperatures (°C).
+    pub temps_c: Vec<f64>,
+    /// Average SoC power over the epoch (W).
+    pub power_w: f64,
+    /// Granted frequency per cluster (MHz).
+    pub cluster_mhz: Vec<f64>,
+}
+
+/// Structured result of one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub scheduler: String,
+    pub injection_rate_per_ms: f64,
+    pub seed: u64,
+
+    /// Jobs injected / completed (all, including warmup).
+    pub injected_jobs: usize,
+    pub completed_jobs: usize,
+    /// Post-warmup job execution times (finish - arrival, µs).
+    pub job_latencies_us: Vec<f64>,
+    /// Same, split per application index.
+    pub per_app_latencies_us: Vec<Vec<f64>>,
+    /// Simulated timespan (µs).
+    pub sim_time_us: f64,
+
+    /// Kernel counters.
+    pub events_processed: u64,
+    pub sched_invocations: u64,
+    pub tasks_executed: u64,
+    /// Wall-clock time spent inside `Scheduler::schedule` (ns).
+    pub sched_wall_ns: u64,
+    /// Total wall-clock for the run (s).
+    pub wall_s: f64,
+
+    /// Energy / power / thermal.
+    pub total_energy_j: f64,
+    pub avg_power_w: f64,
+    pub pe_utilization: Vec<f64>,
+    pub peak_temp_c: f64,
+    pub throttle_engagements: u64,
+    /// PJRT device invocations (0 on the pure-rust paths).
+    pub device_calls: u64,
+
+    pub scheduler_report: Vec<String>,
+    pub gantt: Vec<GanttEntry>,
+    pub trace: Vec<EpochTrace>,
+}
+
+impl SimReport {
+    /// Mean job execution time (µs) over post-warmup completions —
+    /// the Figure-3 y-axis.
+    pub fn avg_job_latency_us(&self) -> f64 {
+        Summary::of(&self.job_latencies_us).mean
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.job_latencies_us)
+    }
+
+    /// Completed jobs per simulated millisecond.
+    pub fn throughput_jobs_per_ms(&self) -> f64 {
+        if self.sim_time_us <= 0.0 {
+            return 0.0;
+        }
+        self.completed_jobs as f64 / (self.sim_time_us / 1000.0)
+    }
+
+    /// Energy per completed job (mJ).
+    pub fn energy_per_job_mj(&self) -> f64 {
+        if self.completed_jobs == 0 {
+            return 0.0;
+        }
+        self.total_energy_j * 1000.0 / self.completed_jobs as f64
+    }
+
+    /// Average scheduler decision latency (µs of wall time per
+    /// invocation) — the framework-overhead metric in §Perf.
+    pub fn sched_overhead_us(&self) -> f64 {
+        if self.sched_invocations == 0 {
+            return 0.0;
+        }
+        self.sched_wall_ns as f64 / 1000.0 / self.sched_invocations as f64
+    }
+
+    /// Multi-line ASCII summary.
+    pub fn summary(&self) -> String {
+        let lat = self.latency_summary();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "scheduler={} rate={}/ms seed={}\n",
+            self.scheduler, self.injection_rate_per_ms, self.seed
+        ));
+        s.push_str(&format!(
+            "  jobs: injected={} completed={} measured={}\n",
+            self.injected_jobs,
+            self.completed_jobs,
+            lat.count
+        ));
+        s.push_str(&format!(
+            "  job exec time: mean={:.1} us  p50={:.1}  p95={:.1}  p99={:.1}  max={:.1}\n",
+            lat.mean, lat.p50, lat.p95, lat.p99, lat.max
+        ));
+        s.push_str(&format!(
+            "  throughput={:.3} jobs/ms  sim_time={:.1} ms  wall={:.2} s\n",
+            self.throughput_jobs_per_ms(),
+            self.sim_time_us / 1000.0,
+            self.wall_s
+        ));
+        s.push_str(&format!(
+            "  energy={:.3} J  avg_power={:.2} W  {:.2} mJ/job  peak_temp={:.1} C  throttles={}\n",
+            self.total_energy_j,
+            self.avg_power_w,
+            self.energy_per_job_mj(),
+            self.peak_temp_c,
+            self.throttle_engagements
+        ));
+        s.push_str(&format!(
+            "  kernel: {} events, {} sched epochs ({:.2} us/epoch wall), {} tasks, {} device calls\n",
+            self.events_processed,
+            self.sched_invocations,
+            self.sched_overhead_us(),
+            self.tasks_executed,
+            self.device_calls
+        ));
+        for line in &self.scheduler_report {
+            s.push_str(&format!("  {line}\n"));
+        }
+        s
+    }
+
+    /// ASCII Gantt chart of the first `max_rows` PEs over a window.
+    pub fn gantt_ascii(
+        &self,
+        platform: &Platform,
+        apps: &[AppGraph],
+        window_us: (f64, f64),
+        width: usize,
+    ) -> String {
+        if self.gantt.is_empty() {
+            return "  (no gantt trace captured — set capture_gantt)\n"
+                .into();
+        }
+        let (lo, hi) = window_us;
+        let span = (hi - lo).max(1e-9);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "  Gantt [{:.0}..{:.0} us], one row per PE:\n",
+            lo, hi
+        ));
+        for pe in 0..platform.n_pes() {
+            let mut row = vec!['.'; width];
+            for e in self.gantt.iter().filter(|e| e.pe == pe) {
+                if e.end_us < lo || e.start_us > hi {
+                    continue;
+                }
+                let c0 = (((e.start_us - lo) / span) * width as f64)
+                    .max(0.0) as usize;
+                let c1 = (((e.end_us - lo) / span) * width as f64)
+                    .min(width as f64 - 1.0) as usize;
+                // Mark with the first letter of the task name.
+                let name = &apps[e.app].tasks[e.task].name;
+                let ch = name.chars().next().unwrap_or('#');
+                for cell in row.iter_mut().take(c1 + 1).skip(c0) {
+                    *cell = ch;
+                }
+            }
+            out.push_str(&format!(
+                "  {:>8} |{}|\n",
+                platform.pes[pe].name,
+                row.into_iter().collect::<String>()
+            ));
+        }
+        out
+    }
+
+    /// Temperature trace as CSV (`t_us, node0, node1, ...`).
+    pub fn thermal_csv(&self, platform: &Platform) -> String {
+        let mut out = String::from("t_us");
+        for n in &platform.floorplan.node_names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push_str(",power_w\n");
+        for e in &self.trace {
+            out.push_str(&format!("{}", e.t_us));
+            for t in &e.temps_c {
+                out.push_str(&format!(",{t:.3}"));
+            }
+            out.push_str(&format!(",{:.3}\n", e.power_w));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let lat = self.latency_summary();
+        let mut j = Json::obj();
+        j.set("scheduler", Json::Str(self.scheduler.clone()))
+            .set(
+                "injection_rate_per_ms",
+                Json::Num(self.injection_rate_per_ms),
+            )
+            .set("seed", Json::Num(self.seed as f64))
+            .set("injected_jobs", Json::Num(self.injected_jobs as f64))
+            .set("completed_jobs", Json::Num(self.completed_jobs as f64))
+            .set("avg_job_latency_us", Json::Num(lat.mean))
+            .set("p95_job_latency_us", Json::Num(lat.p95))
+            .set(
+                "throughput_jobs_per_ms",
+                Json::Num(self.throughput_jobs_per_ms()),
+            )
+            .set("total_energy_j", Json::Num(self.total_energy_j))
+            .set("avg_power_w", Json::Num(self.avg_power_w))
+            .set("energy_per_job_mj", Json::Num(self.energy_per_job_mj()))
+            .set("peak_temp_c", Json::Num(self.peak_temp_c))
+            .set("sim_time_us", Json::Num(self.sim_time_us))
+            .set(
+                "events_processed",
+                Json::Num(self.events_processed as f64),
+            )
+            .set(
+                "sched_overhead_us",
+                Json::Num(self.sched_overhead_us()),
+            )
+            .set(
+                "pe_utilization",
+                Json::Arr(
+                    self.pe_utilization
+                        .iter()
+                        .map(|&u| Json::Num(u))
+                        .collect(),
+                ),
+            );
+        j
+    }
+}
+
+/// Collect a Figure-3-style series: mean latency per injection rate.
+pub fn latency_series(
+    name: &str,
+    points: &[(f64, f64)],
+) -> plot::Series {
+    let mut s = plot::Series::new(name);
+    for &(x, y) in points {
+        s.push(x, y);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_report() -> SimReport {
+        SimReport {
+            scheduler: "etf".into(),
+            injection_rate_per_ms: 5.0,
+            completed_jobs: 100,
+            injected_jobs: 110,
+            job_latencies_us: (0..100).map(|i| 50.0 + i as f64).collect(),
+            sim_time_us: 20_000.0,
+            sched_invocations: 200,
+            sched_wall_ns: 400_000,
+            total_energy_j: 0.5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn latency_and_throughput() {
+        let r = demo_report();
+        assert!((r.avg_job_latency_us() - 99.5).abs() < 1e-9);
+        assert!((r.throughput_jobs_per_ms() - 5.0).abs() < 1e-9);
+        assert!((r.energy_per_job_mj() - 5.0).abs() < 1e-9);
+        assert!((r.sched_overhead_us() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = SimReport::default();
+        assert_eq!(r.avg_job_latency_us(), 0.0);
+        assert_eq!(r.throughput_jobs_per_ms(), 0.0);
+        assert_eq!(r.energy_per_job_mj(), 0.0);
+        assert_eq!(r.sched_overhead_us(), 0.0);
+        assert!(!r.summary().is_empty());
+    }
+
+    #[test]
+    fn summary_mentions_key_metrics() {
+        let s = demo_report().summary();
+        assert!(s.contains("scheduler=etf"));
+        assert!(s.contains("throughput"));
+        assert!(s.contains("energy"));
+    }
+
+    #[test]
+    fn json_contains_fig3_fields() {
+        let j = demo_report().to_json();
+        assert!(j.get("avg_job_latency_us").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("injection_rate_per_ms").unwrap().as_f64(),
+            Some(5.0)
+        );
+    }
+
+    #[test]
+    fn gantt_without_trace_degrades() {
+        let r = SimReport::default();
+        let p = Platform::table2_soc();
+        let out = r.gantt_ascii(&p, &[], (0.0, 100.0), 60);
+        assert!(out.contains("no gantt"));
+    }
+}

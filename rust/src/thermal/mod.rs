@@ -1,0 +1,447 @@
+//! RC thermal-network model.
+//!
+//! The floorplan ([`crate::platform::ThermalFloorplan`]) defines a
+//! HotSpot-style RC network: nodes with thermal capacitance, conductance
+//! to ambient, and lateral couplings.  This module discretizes it into
+//! the affine update
+//!
+//! ```text
+//!   Θ' = A Θ + B P          (Θ = temperature above ambient, °C)
+//!   A  = I - dt C⁻¹ G        B = dt C⁻¹ M
+//! ```
+//!
+//! where `G` is the conductance Laplacian (+ ambient leg on the diagonal)
+//! and `M` maps per-PE power onto floorplan nodes.  The same matrices are
+//! exported (zero-padded) to the AOT Pallas artifact, which evaluates the
+//! update batched over candidate DVFS settings (see
+//! [`crate::dtpm::XlaDtpmStep`]); [`RcModel::step`] is the scalar
+//! reference the artifact must agree with.
+//!
+//! Working in above-ambient coordinates folds the ambient offset out of
+//! the linear system; the leakage model's `exp(k2·T_abs)` is preserved by
+//! rescaling `k1 ← k1·exp(k2·T_amb)` (see [`RcModel::leak_k1_effective`]).
+
+use crate::platform::Platform;
+
+/// Discretized RC network for one platform.
+#[derive(Debug, Clone)]
+pub struct RcModel {
+    /// Number of floorplan nodes.
+    pub n: usize,
+    /// Number of PEs (columns of B).
+    pub n_pes: usize,
+    /// `n x n` state matrix, row-major.
+    pub a: Vec<f64>,
+    /// `n x n_pes` input matrix, row-major.
+    pub b: Vec<f64>,
+    /// Node index each PE's power flows into (its cluster's node).
+    pub pe_node: Vec<usize>,
+    /// Discretization step (µs).
+    pub dt_us: f64,
+    /// Ambient temperature (°C), for absolute-temperature conversions.
+    pub t_ambient: f64,
+    /// Dense conductance matrix `G` (kept for steady-state solves).
+    g: Vec<f64>,
+    /// Node capacitances (kept for diagnostics / future variable-dt).
+    #[allow(dead_code)]
+    c: Vec<f64>,
+}
+
+impl RcModel {
+    /// Build a model directly from discretized matrices (testing /
+    /// externally calibrated models).  `a` is `n x n`, `b` is
+    /// `n x n_pes`, row-major; `pe_node[p]` is the node PE `p` heats.
+    /// Steady-state solves are unavailable (no conductance matrix):
+    /// `steady_state` panics for such models.
+    pub fn from_matrices(
+        a: Vec<f64>,
+        b: Vec<f64>,
+        pe_node: Vec<usize>,
+        dt_us: f64,
+        t_ambient: f64,
+    ) -> RcModel {
+        let n = (a.len() as f64).sqrt() as usize;
+        assert_eq!(n * n, a.len(), "A must be square");
+        let n_pes = pe_node.len();
+        assert_eq!(b.len(), n * n_pes, "B must be n x n_pes");
+        RcModel {
+            n,
+            n_pes,
+            a,
+            b,
+            pe_node,
+            dt_us,
+            t_ambient,
+            g: vec![0.0; n * n],
+            c: vec![1.0; n],
+        }
+    }
+
+    /// Build the discretized model with step `dt_us`.
+    ///
+    /// Panics (debug) if the discretization would be unstable
+    /// (`dt * g_total / C >= 1` for some node) — callers should keep the
+    /// DTPM epoch well below the smallest node time constant.
+    pub fn new(platform: &Platform, dt_us: f64) -> RcModel {
+        let fp = &platform.floorplan;
+        let n = fp.len();
+        let n_pes = platform.n_pes();
+        let dt_s = dt_us * 1e-6;
+
+        // Conductance Laplacian with ambient legs on the diagonal.
+        let mut g = vec![0.0f64; n * n];
+        for i in 0..n {
+            g[i * n + i] = fp.g_amb[i];
+        }
+        for &(i, j, gij) in &fp.couplings {
+            g[i * n + i] += gij;
+            g[j * n + j] += gij;
+            g[i * n + j] -= gij;
+            g[j * n + i] -= gij;
+        }
+
+        // A = I - dt C^-1 G.
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let delta = if i == j { 1.0 } else { 0.0 };
+                a[i * n + j] = delta - dt_s * g[i * n + j] / fp.capacitance[i];
+            }
+            debug_assert!(
+                a[i * n + i] > 0.0,
+                "unstable thermal discretization at node {i}: \
+                 dt too large for capacitance {}",
+                fp.capacitance[i]
+            );
+        }
+
+        // B maps PE power into its cluster's node.
+        let mut pe_node = Vec::with_capacity(n_pes);
+        let mut b = vec![0.0f64; n * n_pes];
+        for pe in &platform.pes {
+            let node = platform.clusters[pe.cluster].thermal_node;
+            pe_node.push(node);
+            b[node * n_pes + pe.id] = dt_s / fp.capacitance[node];
+        }
+
+        RcModel {
+            n,
+            n_pes,
+            a,
+            b,
+            pe_node,
+            dt_us,
+            t_ambient: platform.t_ambient,
+            g,
+            c: fp.capacitance.clone(),
+        }
+    }
+
+    /// One epoch: `theta' = A theta + B p`.  `theta` is above-ambient °C,
+    /// `p` is per-PE power in W.
+    pub fn step(&self, theta: &[f64], p: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(theta.len(), self.n);
+        debug_assert_eq!(p.len(), self.n_pes);
+        let mut out = vec![0.0; self.n];
+        for i in 0..self.n {
+            let mut acc = 0.0;
+            let row = &self.a[i * self.n..(i + 1) * self.n];
+            for (aij, th) in row.iter().zip(theta) {
+                acc += aij * th;
+            }
+            let brow = &self.b[i * self.n_pes..(i + 1) * self.n_pes];
+            for (bij, pw) in brow.iter().zip(p) {
+                acc += bij * pw;
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    /// In-place variant used on the simulation hot path (no allocation).
+    pub fn step_into(&self, theta: &[f64], p: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.n);
+        for i in 0..self.n {
+            let mut acc = 0.0;
+            let row = &self.a[i * self.n..(i + 1) * self.n];
+            for (aij, th) in row.iter().zip(theta) {
+                acc += aij * th;
+            }
+            let brow = &self.b[i * self.n_pes..(i + 1) * self.n_pes];
+            for (bij, pw) in brow.iter().zip(p) {
+                acc += bij * pw;
+            }
+            out[i] = acc;
+        }
+    }
+
+    /// Above-ambient temperature seen by each PE.
+    pub fn t_pe(&self, theta: &[f64]) -> Vec<f64> {
+        self.pe_node.iter().map(|&nd| theta[nd]).collect()
+    }
+
+    /// Steady-state above-ambient temperatures for constant power `p`:
+    /// solves `G theta = M p` by Gaussian elimination with partial
+    /// pivoting (the system is small: n <= a few dozen nodes).
+    pub fn steady_state(&self, p: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        // rhs = M p (inject PE powers into nodes).
+        let mut rhs = vec![0.0f64; n];
+        for (pe, &node) in self.pe_node.iter().enumerate() {
+            rhs[node] += p[pe];
+        }
+        let mut m = self.g.clone();
+        // Gaussian elimination.
+        for col in 0..n {
+            // Pivot.
+            let mut piv = col;
+            for r in col + 1..n {
+                if m[r * n + col].abs() > m[piv * n + col].abs() {
+                    piv = r;
+                }
+            }
+            if piv != col {
+                for c in 0..n {
+                    m.swap(col * n + c, piv * n + c);
+                }
+                rhs.swap(col, piv);
+            }
+            let d = m[col * n + col];
+            assert!(
+                d.abs() > 1e-12,
+                "singular thermal conductance matrix (node {col} floating?)"
+            );
+            for r in col + 1..n {
+                let f = m[r * n + col] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                for c in col..n {
+                    m[r * n + c] -= f * m[col * n + c];
+                }
+                rhs[r] -= f * rhs[col];
+            }
+        }
+        // Back substitution.
+        let mut theta = vec![0.0f64; n];
+        for row in (0..n).rev() {
+            let mut acc = rhs[row];
+            for c in row + 1..n {
+                acc -= m[row * n + c] * theta[c];
+            }
+            theta[row] = acc / m[row * n + row];
+        }
+        theta
+    }
+
+    /// Effective `k1` folding the ambient offset into the leakage model
+    /// (state is above-ambient): `k1_eff = k1 * exp(k2 * t_ambient)`.
+    pub fn leak_k1_effective(&self, k1: f64, k2: f64) -> f64 {
+        k1 * (k2 * self.t_ambient).exp()
+    }
+
+    /// Pad `A` to `rows x cols` (f32, row-major) for the AOT artifact:
+    /// identity on padded diagonal entries so padded state stays inert.
+    pub fn a_padded_f32(&self, rows: usize, cols: usize) -> Vec<f32> {
+        assert!(rows >= self.n && cols >= self.n);
+        let mut out = vec![0.0f32; rows * cols];
+        for i in 0..self.n {
+            for j in 0..self.n {
+                out[i * cols + j] = self.a[i * self.n + j] as f32;
+            }
+        }
+        for i in self.n..rows.min(cols) {
+            out[i * cols + i] = 1.0;
+        }
+        out
+    }
+
+    /// Pad `B` to `rows x cols` (f32, row-major) for the AOT artifact.
+    pub fn b_padded_f32(&self, rows: usize, cols: usize) -> Vec<f32> {
+        assert!(rows >= self.n && cols >= self.n_pes);
+        let mut out = vec![0.0f32; rows * cols];
+        for i in 0..self.n {
+            for j in 0..self.n_pes {
+                out[i * cols + j] = self.b[i * self.n_pes + j] as f32;
+            }
+        }
+        out
+    }
+
+    /// One-hot PE→node map padded to `rows x cols` (f32) for the artifact.
+    pub fn pe_node_padded_f32(&self, rows: usize, cols: usize) -> Vec<f32> {
+        assert!(rows >= self.n_pes && cols >= self.n);
+        let mut out = vec![0.0f32; rows * cols];
+        for (pe, &node) in self.pe_node.iter().enumerate() {
+            out[pe * cols + node] = 1.0;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    fn model() -> RcModel {
+        RcModel::new(&Platform::table2_soc(), 10_000.0) // 10 ms epochs
+    }
+
+    #[test]
+    fn zero_power_decays_to_ambient() {
+        let m = model();
+        let mut theta = vec![30.0; m.n];
+        let p = vec![0.0; m.n_pes];
+        for _ in 0..10_000 {
+            theta = m.step(&theta, &p);
+        }
+        for &t in &theta {
+            assert!(t.abs() < 0.1, "residual {t}");
+        }
+    }
+
+    #[test]
+    fn step_converges_to_steady_state() {
+        let m = model();
+        let p: Vec<f64> =
+            (0..m.n_pes).map(|i| 0.5 + 0.1 * i as f64).collect();
+        let ss = m.steady_state(&p);
+        let mut theta = vec![0.0; m.n];
+        for _ in 0..200_000 {
+            theta = m.step(&theta, &p);
+        }
+        for (a, b) in theta.iter().zip(&ss) {
+            assert!((a - b).abs() < 0.05, "step={a} ss={b}");
+        }
+    }
+
+    #[test]
+    fn steady_state_is_fixed_point() {
+        let m = model();
+        let p = vec![1.0; m.n_pes];
+        let ss = m.steady_state(&p);
+        let next = m.step(&ss, &p);
+        for (a, b) in ss.iter().zip(&next) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn more_power_means_hotter() {
+        let m = model();
+        let lo = m.steady_state(&vec![0.5; m.n_pes]);
+        let hi = m.steady_state(&vec![2.0; m.n_pes]);
+        for (l, h) in lo.iter().zip(&hi) {
+            assert!(h > l);
+        }
+        // Linearity: 4x power = 4x above-ambient temperature.
+        for (l, h) in lo.iter().zip(&hi) {
+            assert!((h / l - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn heat_spreads_to_coupled_nodes() {
+        let m = model();
+        // Power only on PE 0 (big cluster, node 0).
+        let mut p = vec![0.0; m.n_pes];
+        p[0] = 3.0;
+        let ss = m.steady_state(&p);
+        assert!(ss[0] > ss[1]); // source hottest
+        for (i, &t) in ss.iter().enumerate() {
+            assert!(t > 0.0, "node {i} stayed cold");
+        }
+    }
+
+    #[test]
+    fn realistic_load_stays_sub_throttle() {
+        // Full-tilt Table-2 SoC: the package must settle below ~60 °C
+        // above ambient (i.e. < 90 °C absolute) — matches Odroid-XU3
+        // behaviour without throttling at full fan.
+        let m = model();
+        let platform = Platform::table2_soc();
+        let opps: Vec<_> = platform
+            .clusters
+            .iter()
+            .map(|c| platform.classes[c.class].max_opp())
+            .collect();
+        let util = vec![1.0; m.n_pes];
+        let temps = vec![60.0; m.n_pes];
+        let p = crate::power::epoch_power(&platform, &opps, &util, &temps);
+        let ss = m.steady_state(&p);
+        let peak = ss.iter().copied().fold(0.0, f64::max);
+        assert!(
+            (20.0..70.0).contains(&peak),
+            "peak above-ambient {peak} °C implausible"
+        );
+    }
+
+    #[test]
+    fn t_pe_maps_cluster_nodes() {
+        let m = model();
+        let platform = Platform::table2_soc();
+        let theta: Vec<f64> = (0..m.n).map(|i| i as f64 * 10.0).collect();
+        let t = m.t_pe(&theta);
+        for pe in &platform.pes {
+            let node = platform.clusters[pe.cluster].thermal_node;
+            assert_eq!(t[pe.id], theta[node]);
+        }
+    }
+
+    #[test]
+    fn padded_matrices_embed_originals() {
+        let m = model();
+        let a = m.a_padded_f32(32, 32);
+        for i in 0..m.n {
+            for j in 0..m.n {
+                assert!(
+                    (a[i * 32 + j] as f64 - m.a[i * m.n + j]).abs() < 1e-6
+                );
+            }
+        }
+        // Padded diagonal is identity.
+        for i in m.n..32 {
+            assert_eq!(a[i * 32 + i], 1.0);
+        }
+        let b = m.b_padded_f32(32, 16);
+        for i in 0..m.n {
+            for j in 0..m.n_pes {
+                assert!(
+                    (b[i * 16 + j] as f64 - m.b[i * m.n_pes + j]).abs()
+                        < 1e-6
+                );
+            }
+        }
+        let pn = m.pe_node_padded_f32(16, 32);
+        for (pe, &node) in m.pe_node.iter().enumerate() {
+            assert_eq!(pn[pe * 32 + node], 1.0);
+            let row_sum: f32 = pn[pe * 32..(pe + 1) * 32].iter().sum();
+            assert_eq!(row_sum, 1.0);
+        }
+    }
+
+    #[test]
+    fn step_into_matches_step() {
+        let m = model();
+        let theta: Vec<f64> = (0..m.n).map(|i| 5.0 + i as f64).collect();
+        let p: Vec<f64> = (0..m.n_pes).map(|i| 0.2 * i as f64).collect();
+        let a = m.step(&theta, &p);
+        let mut b = vec![0.0; m.n];
+        m.step_into(&theta, &p, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn leak_k1_effective_folds_ambient() {
+        let m = model();
+        let k1 = 0.01;
+        let k2 = 0.02;
+        let eff = m.leak_k1_effective(k1, k2);
+        // k1_eff * exp(k2 * theta) == k1 * exp(k2 * (theta + t_amb))
+        let theta: f64 = 40.0;
+        let lhs = eff * (k2 * theta).exp();
+        let rhs = k1 * (k2 * (theta + m.t_ambient)).exp();
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,231 @@
+//! ASCII line plots and tables for terminal reports.
+//!
+//! The paper's framework "generates plots and reports of schedule,
+//! performance, throughput, and energy consumption"; in a terminal-first
+//! tool those are ASCII artifacts plus CSV files for external plotting.
+
+/// A single named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render multiple series as an ASCII chart (rows = y buckets).
+pub fn ascii_chart(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+) -> String {
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        pts.extend(&s.points);
+    }
+    if pts.is_empty() {
+        return format!("{title}\n  (no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        if x.is_finite() {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+        }
+        if y.is_finite() {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        xmax = xmin + 1.0;
+    }
+    if !ymin.is_finite() || ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let col = ((x - xmin) / (xmax - xmin) * (width - 1) as f64)
+                .round() as usize;
+            let row = ((y - ymin) / (ymax - ymin) * (height - 1) as f64)
+                .round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][col.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("  {title}\n"));
+    out.push_str(&format!("  {ylabel}\n"));
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax - (ymax - ymin) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("  {yval:>10.1} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "  {:>10} +{}\n",
+        "",
+        "-".repeat(width)
+    ));
+    out.push_str(&format!(
+        "  {:>10}  {:<10.1}{:>width$.1}  ({xlabel})\n",
+        "",
+        xmin,
+        xmax,
+        width = width - 10
+    ));
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", marks[si % marks.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Render rows as an aligned ASCII table.
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        out.push('+');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('+');
+        }
+        out.push('\n');
+    };
+    sep(&mut out);
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:<w$} |"));
+    }
+    out.push('\n');
+    sep(&mut out);
+    for row in rows {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let empty = String::new();
+            let cell = row.get(i).unwrap_or(&empty);
+            out.push_str(&format!(" {cell:<w$} |"));
+        }
+        out.push('\n');
+    }
+    sep(&mut out);
+    out
+}
+
+/// Serialize series to CSV: `x,<name1>,<name2>,...` with union of x values.
+pub fn to_csv(xname: &str, series: &[Series]) -> String {
+    let mut xs: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.0))
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let mut out = String::new();
+    out.push_str(xname);
+    for s in series {
+        out.push(',');
+        out.push_str(&s.name);
+    }
+    out.push('\n');
+    for x in xs {
+        out.push_str(&format!("{x}"));
+        for s in series {
+            out.push(',');
+            if let Some(p) = s.points.iter().find(|p| p.0 == x) {
+                out.push_str(&format!("{}", p.1));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_series() -> Vec<Series> {
+        let mut a = Series::new("a");
+        let mut b = Series::new("b");
+        for i in 0..10 {
+            a.push(i as f64, (i * i) as f64);
+            b.push(i as f64, (2 * i) as f64);
+        }
+        vec![a, b]
+    }
+
+    #[test]
+    fn chart_contains_marks_and_legend() {
+        let s = demo_series();
+        let c = ascii_chart("t", "x", "y", &s, 40, 10);
+        assert!(c.contains('*'));
+        assert!(c.contains('+'));
+        assert!(c.contains("legend"));
+        assert!(c.contains("a"));
+    }
+
+    #[test]
+    fn chart_handles_empty() {
+        let c = ascii_chart("t", "x", "y", &[], 40, 10);
+        assert!(c.contains("no data"));
+    }
+
+    #[test]
+    fn chart_handles_single_point() {
+        let mut s = Series::new("one");
+        s.push(1.0, 1.0);
+        let c = ascii_chart("t", "x", "y", &[s], 20, 5);
+        assert!(c.contains('*'));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = ascii_table(
+            &["name", "value"],
+            &[
+                vec!["x".into(), "1".into()],
+                vec!["longer".into(), "22".into()],
+            ],
+        );
+        assert!(t.contains("| name   |"));
+        assert!(t.contains("| longer |"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let s = demo_series();
+        let csv = to_csv("x", &s);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("x,a,b"));
+        assert_eq!(lines.next(), Some("0,0,0"));
+        assert_eq!(csv.lines().count(), 11);
+    }
+}

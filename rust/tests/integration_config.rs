@@ -1,0 +1,153 @@
+//! Config-system integration: file round-trips, CLI plumbing, and
+//! config-driven custom applications running end to end.
+
+use ds3r::app::AppGraph;
+use ds3r::cli::{self, Args};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+use ds3r::util::json::Json;
+
+fn args(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from))
+}
+
+#[test]
+fn config_file_roundtrip_drives_simulation() {
+    let dir = std::env::temp_dir().join("ds3r-test-config");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.json");
+
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = "heft".into();
+    cfg.injection_rate_per_ms = 2.5;
+    cfg.max_jobs = 40;
+    cfg.warmup_jobs = 4;
+    cfg.dtpm.governor = "ondemand".into();
+    cfg.save(&path).unwrap();
+
+    let loaded = SimConfig::load(&path).unwrap();
+    assert_eq!(loaded.scheduler, "heft");
+    assert_eq!(loaded.injection_rate_per_ms, 2.5);
+    assert_eq!(loaded.dtpm.governor, "ondemand");
+
+    let p = Platform::table2_soc();
+    let apps =
+        vec![ds3r::app::suite::wifi_tx(Default::default())];
+    let r = Simulation::build(&p, &apps, &loaded).unwrap().run();
+    assert_eq!(r.completed_jobs, 40);
+    assert_eq!(r.scheduler, "heft");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_config_flag_plus_overrides() {
+    let dir = std::env::temp_dir().join("ds3r-test-config2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("base.json");
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = "met".into();
+    cfg.max_jobs = 77;
+    cfg.save(&path).unwrap();
+
+    // --rate overrides, scheduler comes from file.
+    let a = args(&format!("run --config {} --rate 6", path.display()));
+    let merged = cli::config_from_args(&a).unwrap();
+    assert_eq!(merged.scheduler, "met");
+    assert_eq!(merged.max_jobs, 77);
+    assert_eq!(merged.injection_rate_per_ms, 6.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn custom_app_from_json_runs() {
+    // A user-defined application loaded from JSON must simulate cleanly:
+    // the "plug your own DAG" path.
+    let j = Json::parse(
+        r#"{
+          "name": "custom-dsp",
+          "tasks": [
+            {"name": "src",  "exec_us": {"A15": 5, "A7": 12},
+             "preds": [], "out_bytes": 256},
+            {"name": "fir",  "exec_us": {"A15": 40, "A7": 100},
+             "preds": [0], "out_bytes": 512},
+            {"name": "fft",  "exec_us": {"ACC_FFT": 16, "A15": 118,
+             "A7": 296}, "preds": [0], "out_bytes": 512},
+            {"name": "mix",  "exec_us": {"A15": 9, "A7": 21},
+             "preds": [1, 2], "out_bytes": 128}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let app = AppGraph::from_json(&j).unwrap();
+    assert_eq!(app.len(), 4);
+    assert_eq!(app.sinks(), vec![3]);
+
+    let p = Platform::table2_soc();
+    let apps = vec![app];
+    let mut cfg = SimConfig::default();
+    cfg.max_jobs = 50;
+    cfg.warmup_jobs = 5;
+    cfg.injection_rate_per_ms = 2.0;
+    let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+    assert_eq!(r.completed_jobs, 50);
+    // Critical path: src(5) + fft(16) + mix(9) = 30 plus NoC.
+    assert!(r.avg_job_latency_us() >= 30.0);
+    assert!(r.avg_job_latency_us() < 60.0);
+}
+
+#[test]
+fn malformed_configs_are_rejected_with_context() {
+    for (text, needle) in [
+        (r#"{"max_ready": 0}"#, "max_ready"),
+        (r#"{"injection_rate_per_ms": -1}"#, "injection_rate"),
+        (r#"{"arrival": "fractal"}"#, "arrival"),
+        (r#"{"exec_jitter_frac": 0.9}"#, "jitter"),
+    ] {
+        let j = Json::parse(text).unwrap();
+        let err = SimConfig::from_json(&j).unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains(needle),
+            "error for {text} lacks '{needle}': {msg}"
+        );
+    }
+}
+
+#[test]
+fn app_json_rejects_malformed_graphs() {
+    for text in [
+        // cycle
+        r#"{"name":"x","tasks":[
+            {"name":"a","exec_us":{"A15":1},"preds":[1],"out_bytes":0},
+            {"name":"b","exec_us":{"A15":1},"preds":[0],"out_bytes":0}]}"#,
+        // missing exec_us
+        r#"{"name":"x","tasks":[{"name":"a","preds":[]}]}"#,
+        // bad pred index
+        r#"{"name":"x","tasks":[
+            {"name":"a","exec_us":{"A15":1},"preds":[9],"out_bytes":0}]}"#,
+    ] {
+        let j = Json::parse(text).unwrap();
+        assert!(AppGraph::from_json(&j).is_err(), "accepted: {text}");
+    }
+}
+
+#[test]
+fn cli_reproduce_table_commands() {
+    let out = cli::cmd_reproduce(&args("reproduce table1")).unwrap();
+    assert!(out.contains("Inverse-FFT") || out.contains("ifft"));
+    let out = cli::cmd_reproduce(&args("reproduce table2")).unwrap();
+    assert!(out.contains("total PEs: 14"));
+    let out = cli::cmd_reproduce(&args("reproduce fig2")).unwrap();
+    assert!(out.contains("->"));
+    assert!(cli::cmd_reproduce(&args("reproduce fig9")).is_err());
+}
+
+#[test]
+fn saved_config_parses_as_strict_json() {
+    // Our serializer must emit strictly-parseable JSON (self-host test).
+    let cfg = SimConfig::default();
+    let text = cfg.to_json().to_string_pretty();
+    let re = Json::parse(&text).unwrap();
+    assert!(re.get("scheduler").is_some());
+}

@@ -1,0 +1,185 @@
+//! DTPM integration tests: governors, thermal throttling and power caps
+//! acting on the full simulation loop.
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+use ds3r::stats::SimReport;
+
+fn run_with(f: impl FnOnce(&mut SimConfig)) -> SimReport {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = SimConfig::default();
+    c.max_jobs = 300;
+    c.warmup_jobs = 30;
+    c.injection_rate_per_ms = 3.0;
+    c.capture_traces = true;
+    f(&mut c);
+    Simulation::build(&p, &apps, &c).unwrap().run()
+}
+
+#[test]
+fn powersave_is_slower_but_lower_power_than_performance() {
+    let perf = run_with(|c| c.dtpm.governor = "performance".into());
+    let save = run_with(|c| c.dtpm.governor = "powersave".into());
+    assert!(
+        save.avg_job_latency_us() > 2.0 * perf.avg_job_latency_us(),
+        "powersave {} vs performance {}",
+        save.avg_job_latency_us(),
+        perf.avg_job_latency_us()
+    );
+    assert!(
+        save.avg_power_w < perf.avg_power_w,
+        "powersave power {} vs performance {}",
+        save.avg_power_w,
+        perf.avg_power_w
+    );
+}
+
+#[test]
+fn ondemand_sits_between_powersave_and_performance() {
+    let perf = run_with(|c| c.dtpm.governor = "performance".into());
+    let save = run_with(|c| c.dtpm.governor = "powersave".into());
+    let onde = run_with(|c| c.dtpm.governor = "ondemand".into());
+    let l = |r: &SimReport| r.avg_job_latency_us();
+    assert!(
+        l(&perf) <= l(&onde) && l(&onde) <= l(&save),
+        "latency ordering: perf {} ondemand {} powersave {}",
+        l(&perf),
+        l(&onde),
+        l(&save)
+    );
+    // Ondemand saves energy per job relative to performance at moderate
+    // load (clusters idle at low frequency between bursts).
+    assert!(
+        onde.avg_power_w <= perf.avg_power_w * 1.05,
+        "ondemand power {} vs perf {}",
+        onde.avg_power_w,
+        perf.avg_power_w
+    );
+}
+
+#[test]
+fn userspace_pins_frequency() {
+    let r = run_with(|c| {
+        c.dtpm.governor = "userspace".into();
+        c.dtpm.userspace_mhz = 600.0;
+    });
+    for tr in &r.trace {
+        // Cluster 0 (A15) must stay at the requested 600 MHz OPP.
+        assert_eq!(tr.cluster_mhz[0], 600.0);
+        assert_eq!(tr.cluster_mhz[1], 600.0);
+    }
+}
+
+#[test]
+fn thermal_throttle_caps_temperature() {
+    // Force a hot platform: saturating load, then compare peak temps
+    // with and without the throttle.
+    let hot = run_with(|c| {
+        c.injection_rate_per_ms = 10.0;
+        c.max_jobs = 2000;
+        c.dtpm.thermal_throttle = false;
+    });
+    let trip = hot.peak_temp_c - 2.0; // trip just below observed peak
+    let cooled = run_with(|c| {
+        c.injection_rate_per_ms = 10.0;
+        c.max_jobs = 2000;
+        c.dtpm.thermal_throttle = true;
+        c.dtpm.throttle_temp_c = trip;
+    });
+    assert!(cooled.throttle_engagements > 0, "throttle never engaged");
+    assert!(
+        cooled.peak_temp_c <= hot.peak_temp_c,
+        "throttled peak {} vs free {}",
+        cooled.peak_temp_c,
+        hot.peak_temp_c
+    );
+}
+
+#[test]
+fn power_cap_reduces_average_power() {
+    let free = run_with(|c| c.injection_rate_per_ms = 8.0);
+    let cap_w = free.avg_power_w * 0.7;
+    let capped = run_with(|c| {
+        c.injection_rate_per_ms = 8.0;
+        c.dtpm.power_cap_w = Some(cap_w);
+    });
+    assert!(
+        capped.avg_power_w < free.avg_power_w,
+        "capped {} vs free {}",
+        capped.avg_power_w,
+        free.avg_power_w
+    );
+}
+
+#[test]
+fn temperature_rises_with_load_and_stays_physical() {
+    let idle = run_with(|c| c.injection_rate_per_ms = 0.2);
+    let busy = run_with(|c| {
+        c.injection_rate_per_ms = 10.0;
+        c.max_jobs = 2000;
+    });
+    assert!(busy.peak_temp_c > idle.peak_temp_c);
+    let p = Platform::table2_soc();
+    assert!(idle.peak_temp_c >= p.t_ambient);
+    assert!(busy.peak_temp_c < 105.0, "melted: {}", busy.peak_temp_c);
+}
+
+#[test]
+fn dtpm_epoch_length_changes_trace_resolution() {
+    let coarse = run_with(|c| c.dtpm.epoch_us = 20_000.0);
+    let fine = run_with(|c| c.dtpm.epoch_us = 2_000.0);
+    assert!(fine.trace.len() > 5 * coarse.trace.len());
+    // Energy should agree regardless of sampling (same workload):
+    let ratio = fine.total_energy_j / coarse.total_energy_j;
+    assert!((0.9..1.1).contains(&ratio), "energy ratio {ratio}");
+}
+
+#[test]
+fn explore_xla_governor_saves_energy_within_thermal_limit() {
+    let dir = ds3r::runtime::default_artifacts_dir();
+    if !ds3r::runtime::artifacts_available(&dir) {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let perf = run_with(|c| {
+        c.injection_rate_per_ms = 0.8;
+        c.dtpm.governor = "performance".into();
+    });
+    let explore = run_with(|c| {
+        c.injection_rate_per_ms = 0.8;
+        c.dtpm.governor = "explore-xla".into();
+        c.dtpm.throttle_temp_c = 80.0;
+    });
+    assert_eq!(explore.completed_jobs, perf.completed_jobs);
+    assert!(explore.device_calls > 0, "DSE path never used");
+    assert!(
+        explore.energy_per_job_mj() < perf.energy_per_job_mj(),
+        "explore {} mJ vs performance {} mJ",
+        explore.energy_per_job_mj(),
+        perf.energy_per_job_mj()
+    );
+    assert!(explore.peak_temp_c <= 80.0 + 1.0);
+}
+
+#[test]
+fn energy_per_job_lower_with_ondemand_at_low_load() {
+    let perf = run_with(|c| {
+        c.dtpm.governor = "performance".into();
+        c.injection_rate_per_ms = 0.5;
+    });
+    let onde = run_with(|c| {
+        c.dtpm.governor = "ondemand".into();
+        c.injection_rate_per_ms = 0.5;
+    });
+    // At 0.5 job/ms the platform is mostly idle: ondemand drops cluster
+    // voltage/frequency and leakage+dynamic energy per job falls.
+    assert!(
+        onde.energy_per_job_mj() < perf.energy_per_job_mj(),
+        "ondemand {} mJ vs performance {} mJ",
+        onde.energy_per_job_mj(),
+        perf.energy_per_job_mj()
+    );
+}

@@ -1,0 +1,145 @@
+//! Scheduler-behaviour integration tests: the Figure-3 orderings and the
+//! qualitative claims of the paper's §3, verified end-to-end.
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::coordinator::{self, SweepPoint};
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+
+fn base(jobs: usize) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.max_jobs = jobs;
+    c.warmup_jobs = jobs / 10;
+    c
+}
+
+fn run_at(sched: &str, rate: f64, jobs: usize) -> f64 {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = base(jobs);
+    c.scheduler = sched.into();
+    c.injection_rate_per_ms = rate;
+    Simulation::build(&p, &apps, &c)
+        .unwrap()
+        .run()
+        .avg_job_latency_us()
+}
+
+#[test]
+fn fig3_low_rate_schedulers_perform_similar() {
+    // "All schedulers perform similar at low job injection rates
+    //  (less than 5 job/ms)."
+    let met = run_at("met", 1.0, 300);
+    let etf = run_at("etf", 1.0, 300);
+    let ilp = run_at("ilp", 1.0, 300);
+    let max = met.max(etf).max(ilp);
+    let min = met.min(etf).min(ilp);
+    assert!(
+        (max - min) / min < 0.15,
+        "low-rate spread too wide: met={met} etf={etf} ilp={ilp}"
+    );
+}
+
+#[test]
+fn fig3_met_degrades_past_5_jobs_per_ms() {
+    // "as the job injection rates increases, the schedule from MET
+    //  results in higher execution time"
+    let at4 = run_at("met", 4.0, 300);
+    let at7 = run_at("met", 7.0, 300);
+    assert!(
+        at7 > 3.0 * at4,
+        "MET did not collapse: {at4} -> {at7}"
+    );
+}
+
+#[test]
+fn fig3_high_rate_ordering_etf_ilp_met() {
+    // "The performance of ETF is superior in comparison to the others."
+    for rate in [6.0, 8.0, 10.0] {
+        let met = run_at("met", rate, 300);
+        let etf = run_at("etf", rate, 300);
+        let ilp = run_at("ilp", rate, 300);
+        assert!(etf <= ilp, "rate {rate}: etf {etf} > ilp {ilp}");
+        assert!(ilp < met, "rate {rate}: ilp {ilp} >= met {met}");
+    }
+}
+
+#[test]
+fn etf_beats_random_and_rr_under_load() {
+    let etf = run_at("etf", 6.0, 300);
+    let random = run_at("random", 6.0, 300);
+    let rr = run_at("rr", 6.0, 300);
+    assert!(etf < random, "etf {etf} vs random {random}");
+    assert!(etf < rr, "etf {etf} vs rr {rr}");
+}
+
+#[test]
+fn heft_is_competitive_with_etf() {
+    // HEFT and ETF should be within ~2x of each other below saturation.
+    let etf = run_at("etf", 4.0, 300);
+    let heft = run_at("heft", 4.0, 300);
+    assert!(heft < 2.0 * etf, "heft {heft} vs etf {etf}");
+}
+
+#[test]
+fn met_lb_ablation_outperforms_naive_met_under_load() {
+    // Instance pinning is most of MET's collapse (see sched::met docs).
+    let met = run_at("met", 7.0, 300);
+    let met_lb = run_at("met-lb", 7.0, 300);
+    assert!(
+        met_lb < met / 2.0,
+        "met-lb {met_lb} should be far below met {met}"
+    );
+}
+
+#[test]
+fn sweep_reproduces_fig3_shape_summary() {
+    // The same check the CLI prints, as a test: run the actual sweep
+    // machinery end to end.
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let rates = [1.0, 7.0];
+    let pts: Vec<SweepPoint> =
+        coordinator::fig3_points(&["met", "etf", "ilp"], &rates, 42);
+    let res =
+        coordinator::run_sweep(&p, &apps, &base(250), &pts, 6).unwrap();
+    let text = ds3r::cli::fig3_shape_analysis(&res, &rates);
+    assert!(
+        text.contains("HOLDS"),
+        "fig3 ordering violated:\n{text}"
+    );
+}
+
+#[test]
+fn scheduler_decisions_respect_support_constraints() {
+    // Running every scheduler on the mixed suite must never starve:
+    // all jobs complete, which implies no assignment to unsupported PEs
+    // was committed (those are rejected by the kernel).
+    let p = Platform::table2_soc();
+    let apps = vec![
+        suite::wifi_tx(WifiParams { symbols: 3 }),
+        suite::wifi_rx(WifiParams { symbols: 2 }),
+        suite::pulse_doppler(suite::RadarParams { pulses: 4 }),
+    ];
+    for sched in ["met", "met-lb", "etf", "ilp", "heft", "random", "rr"] {
+        let mut c = base(60);
+        c.scheduler = sched.into();
+        c.injection_rate_per_ms = 0.5;
+        let r = Simulation::build(&p, &apps, &c).unwrap().run();
+        assert_eq!(r.completed_jobs, 60, "{sched} starved");
+    }
+}
+
+#[test]
+fn max_ready_window_does_not_lose_tasks() {
+    // Tiny scheduler window under burst load: everything still finishes.
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = base(150);
+    c.scheduler = "etf".into();
+    c.injection_rate_per_ms = 8.0;
+    c.max_ready = 4;
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_eq!(r.completed_jobs, 150);
+}

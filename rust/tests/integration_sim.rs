@@ -1,0 +1,212 @@
+//! End-to-end simulation-kernel integration tests: queueing behaviour,
+//! conservation laws, and cross-subsystem consistency.
+
+use ds3r::app::suite::{self, RadarParams, WifiParams};
+use ds3r::config::{ArrivalKind, SimConfig};
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+
+fn cfg(sched: &str, rate: f64, jobs: usize) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.scheduler = sched.into();
+    c.injection_rate_per_ms = rate;
+    c.max_jobs = jobs;
+    c.warmup_jobs = jobs / 10;
+    c
+}
+
+#[test]
+fn latency_is_monotone_in_rate() {
+    // Mean job execution time must not decrease with injection rate
+    // (Figure 3's x-axis direction) for every scheduler.
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    for sched in ["met", "etf", "ilp", "heft"] {
+        let mut last = 0.0;
+        for rate in [0.5, 2.0, 5.0, 8.0] {
+            let r = Simulation::build(&p, &apps, &cfg(sched, rate, 300))
+                .unwrap()
+                .run();
+            let avg = r.avg_job_latency_us();
+            assert!(
+                avg >= last * 0.98, // tolerate sampling wiggle
+                "{sched}: latency fell from {last} to {avg} at rate {rate}"
+            );
+            last = avg;
+        }
+    }
+}
+
+#[test]
+fn throughput_tracks_injection_below_saturation() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    for rate in [1.0, 2.0, 4.0] {
+        let r = Simulation::build(&p, &apps, &cfg("etf", rate, 500))
+            .unwrap()
+            .run();
+        let thru = r.throughput_jobs_per_ms();
+        assert!(
+            (thru - rate).abs() / rate < 0.1,
+            "rate {rate}: throughput {thru}"
+        );
+    }
+}
+
+#[test]
+fn unloaded_latency_matches_ilp_makespan() {
+    // At near-zero load with the table scheduler, every job should take
+    // about the offline single-job makespan (plus NoC effects already
+    // included in the makespan model).
+    let p = Platform::table2_soc();
+    let app = suite::wifi_tx(WifiParams { symbols: 6 });
+    let sched = ds3r::sched::ilp::optimize(&app, &p, 2_000_000);
+    let apps = vec![app];
+    let r = Simulation::build(&p, &apps, &cfg("ilp", 0.05, 40))
+        .unwrap()
+        .run();
+    let avg = r.avg_job_latency_us();
+    assert!(
+        (avg - sched.makespan_us).abs() / sched.makespan_us < 0.10,
+        "sim {avg} vs ilp makespan {}",
+        sched.makespan_us
+    );
+}
+
+#[test]
+fn energy_scales_with_work() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let r1 = Simulation::build(&p, &apps, &cfg("etf", 2.0, 200))
+        .unwrap()
+        .run();
+    let r2 = Simulation::build(&p, &apps, &cfg("etf", 2.0, 400))
+        .unwrap()
+        .run();
+    // Twice the jobs over ~twice the time: energy roughly doubles.
+    let ratio = r2.total_energy_j / r1.total_energy_j;
+    assert!((1.6..2.4).contains(&ratio), "energy ratio {ratio}");
+}
+
+#[test]
+fn busy_time_never_exceeds_elapsed() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::pulse_doppler(RadarParams { pulses: 8 })];
+    let r = Simulation::build(&p, &apps, &cfg("etf", 1.0, 120))
+        .unwrap()
+        .run();
+    for (i, &u) in r.pe_utilization.iter().enumerate() {
+        assert!((0.0..=1.0).contains(&u), "pe {i} utilization {u}");
+    }
+}
+
+#[test]
+fn gantt_trace_is_consistent() {
+    // No PE overlap; every execution window respects its DAG deps.
+    let p = Platform::table2_soc();
+    let apps = vec![suite::range_detection(RadarParams { pulses: 4 })];
+    let mut c = cfg("etf", 2.0, 60);
+    c.capture_gantt = true;
+    c.gantt_limit = 100_000;
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert!(!r.gantt.is_empty());
+
+    // Per-PE non-overlap.
+    let mut by_pe: Vec<Vec<(f64, f64)>> = vec![Vec::new(); p.n_pes()];
+    for e in &r.gantt {
+        by_pe[e.pe].push((e.start_us, e.end_us));
+    }
+    for (pe, windows) in by_pe.iter_mut().enumerate() {
+        windows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in windows.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1 - 1e-9,
+                "pe {pe}: overlapping executions {w:?}"
+            );
+        }
+    }
+
+    // Dependency order within each job.
+    let app = &apps[0];
+    let mut finish: std::collections::BTreeMap<(usize, usize), f64> =
+        Default::default();
+    for e in &r.gantt {
+        finish.insert((e.job, e.task), e.end_us);
+    }
+    for e in &r.gantt {
+        for &pred in &app.tasks[e.task].preds {
+            if let Some(&pf) = finish.get(&(e.job, pred)) {
+                assert!(
+                    e.start_us >= pf - 1e-9,
+                    "job {} task {} started {} before pred {} finished {}",
+                    e.job,
+                    e.task,
+                    e.start_us,
+                    pred,
+                    pf
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn arrival_processes_have_distinct_signatures() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams { symbols: 4 })];
+    let mut results = Vec::new();
+    for kind in
+        [ArrivalKind::Poisson, ArrivalKind::Periodic, ArrivalKind::Uniform]
+    {
+        let mut c = cfg("etf", 5.0, 300);
+        c.arrival = kind;
+        let r = Simulation::build(&p, &apps, &c).unwrap().run();
+        results.push(r.latency_summary());
+    }
+    // Poisson has the heaviest tail; periodic the lightest (identical
+    // spacing -> near-constant latency).
+    let (poisson, periodic, _uniform) =
+        (&results[0], &results[1], &results[2]);
+    assert!(poisson.p99 >= periodic.p99);
+    assert!(poisson.std > periodic.std);
+}
+
+#[test]
+fn saturated_run_terminates_via_time_guard() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg("met", 20.0, 0); // unbounded jobs
+    c.max_sim_us = 50_000.0; // 50 ms guard
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert!(r.sim_time_us <= 51_000.0);
+    assert!(r.injected_jobs > 0);
+}
+
+#[test]
+fn zcu102_platform_runs_the_suite() {
+    let p = ds3r::platform::presets::zcu102_soc();
+    // zcu102 has no LITTLE cluster; every suite task also lists A15, so
+    // the workload remains schedulable.
+    let apps = vec![
+        suite::wifi_tx(WifiParams { symbols: 6 }),
+        suite::range_detection(RadarParams { pulses: 6 }),
+    ];
+    let r = Simulation::build(&p, &apps, &cfg("etf", 2.0, 100))
+        .unwrap()
+        .run();
+    assert_eq!(r.completed_jobs, 100);
+}
+
+#[test]
+fn per_app_latencies_partition_total() {
+    let p = Platform::table2_soc();
+    let apps = vec![
+        suite::wifi_tx(WifiParams { symbols: 4 }),
+        suite::single_carrier_rx(),
+    ];
+    let r = Simulation::build(&p, &apps, &cfg("etf", 2.0, 200))
+        .unwrap()
+        .run();
+    let n: usize = r.per_app_latencies_us.iter().map(Vec::len).sum();
+    assert_eq!(n, r.job_latencies_us.len());
+}

@@ -1,0 +1,253 @@
+//! Property-based tests: randomized DAGs, platforms, and workloads must
+//! uphold the simulator's invariants.  The offline environment has no
+//! proptest crate, so this module drives the crate's own deterministic
+//! RNG through a shrinking-free but seed-reported property loop — any
+//! failure prints the seed to reproduce.
+
+use std::collections::BTreeMap;
+
+use ds3r::app::{AppGraph, TaskSpec};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::rng::Rng;
+use ds3r::sim::Simulation;
+
+/// Generate a random valid DAG over the Table-2 classes.
+fn random_dag(rng: &mut Rng, max_tasks: usize) -> AppGraph {
+    let n = 2 + rng.below(max_tasks as u64 - 2) as usize;
+    let classes: [(&str, f64); 4] = [
+        ("A15", 1.0),
+        ("A7", 2.5),
+        ("ACC_FFT", 0.14),
+        ("ACC_SCR", 0.8),
+    ];
+    let mut tasks = Vec::with_capacity(n);
+    for i in 0..n {
+        // Random support set: always include a general-purpose class so
+        // the task is schedulable on both presets.
+        let base = 2.0 + rng.uniform(0.0, 60.0);
+        let mut exec_us = BTreeMap::new();
+        exec_us.insert("A15".to_string(), base);
+        if rng.f64() < 0.8 {
+            exec_us.insert("A7".to_string(), base * classes[1].1);
+        }
+        if rng.f64() < 0.3 {
+            exec_us.insert("ACC_FFT".to_string(), base * classes[2].1);
+        }
+        // Random preds from earlier tasks (guarantees acyclicity).
+        let mut preds = Vec::new();
+        if i > 0 {
+            let k = rng.below(3.min(i as u64) + 1) as usize;
+            for _ in 0..k {
+                let p = rng.below(i as u64) as usize;
+                if !preds.contains(&p) {
+                    preds.push(p);
+                }
+            }
+        }
+        tasks.push(TaskSpec {
+            name: format!("t{i}"),
+            exec_us,
+            preds,
+            out_bytes: rng.below(4096),
+        });
+    }
+    AppGraph::new("random", tasks).expect("generated DAG is valid")
+}
+
+fn property_seeds() -> Vec<u64> {
+    // 24 random cases per property keeps the suite < a few seconds.
+    (0..24).map(|i| 0xD53F00D + i * 7919).collect()
+}
+
+#[test]
+fn prop_all_jobs_complete_and_latency_bounded_below() {
+    for seed in property_seeds() {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 24);
+        let cp = app.critical_path_us();
+        let p = Platform::table2_soc();
+        let apps = vec![app];
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        cfg.max_jobs = 30;
+        cfg.warmup_jobs = 0;
+        cfg.injection_rate_per_ms = rng.uniform(0.2, 4.0);
+        cfg.scheduler = ["met", "etf", "ilp", "heft", "random", "rr"]
+            [rng.below(6) as usize]
+            .to_string();
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 30, "seed {seed}: jobs lost");
+        for &l in &r.job_latencies_us {
+            assert!(
+                l >= cp - 1e-6,
+                "seed {seed}: latency {l} below critical path {cp}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_determinism_across_reruns() {
+    for seed in property_seeds().into_iter().take(8) {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 20);
+        let p = Platform::table2_soc();
+        let apps = vec![app];
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        cfg.max_jobs = 25;
+        cfg.warmup_jobs = 0;
+        cfg.injection_rate_per_ms = 2.0;
+        let a = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        let b = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(
+            a.job_latencies_us, b.job_latencies_us,
+            "seed {seed}: nondeterministic latencies"
+        );
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.total_energy_j, b.total_energy_j);
+    }
+}
+
+#[test]
+fn prop_gantt_no_pe_overlap_random_dags() {
+    for seed in property_seeds().into_iter().take(10) {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 16);
+        let p = Platform::table2_soc();
+        let apps = vec![app];
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        cfg.max_jobs = 20;
+        cfg.warmup_jobs = 0;
+        cfg.injection_rate_per_ms = 5.0;
+        cfg.capture_gantt = true;
+        cfg.gantt_limit = usize::MAX >> 1;
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        let mut by_pe: Vec<Vec<(f64, f64)>> = vec![Vec::new(); p.n_pes()];
+        for e in &r.gantt {
+            by_pe[e.pe].push((e.start_us, e.end_us));
+        }
+        for windows in &mut by_pe {
+            windows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in windows.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1 - 1e-9,
+                    "seed {seed}: overlap {w:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_energy_nonnegative_and_power_bounded() {
+    // No configuration may produce negative energy or a power draw
+    // beyond the platform's absolute peak.
+    let p = Platform::table2_soc();
+    let peak_w: f64 = p
+        .pes
+        .iter()
+        .map(|pe| {
+            let c = &p.classes[pe.class];
+            let o = c.max_opp();
+            c.ceff * o.volt * o.volt * o.freq_mhz
+                + c.leak_k1 * o.volt * (c.leak_k2 * 105.0f64).exp()
+        })
+        .sum();
+    for seed in property_seeds().into_iter().take(10) {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 20);
+        let apps = vec![app];
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        cfg.max_jobs = 40;
+        cfg.warmup_jobs = 0;
+        cfg.injection_rate_per_ms = rng.uniform(1.0, 12.0);
+        cfg.dtpm.governor =
+            ["performance", "ondemand", "powersave"][rng.below(3) as usize]
+                .to_string();
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert!(r.total_energy_j >= 0.0, "seed {seed}");
+        assert!(
+            r.avg_power_w <= peak_w * 1.001,
+            "seed {seed}: avg power {} above physical peak {peak_w}",
+            r.avg_power_w
+        );
+    }
+}
+
+#[test]
+fn prop_ilp_never_worse_than_greedy_and_respects_support() {
+    for seed in property_seeds().into_iter().take(12) {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 14);
+        let p = Platform::table2_soc();
+        let s = ds3r::sched::ilp::optimize(&app, &p, 100_000);
+        assert_eq!(s.assign.len(), app.len(), "seed {seed}");
+        let exec = ds3r::sched::ilp::ExecTable::new(&app, &p);
+        for (t, &pe) in s.assign.iter().enumerate() {
+            assert!(
+                exec.supported(t, pe),
+                "seed {seed}: task {t} on unsupported pe {pe}"
+            );
+        }
+        // Sanity: makespan at least the critical path, at most total work
+        // on the slowest class (loose upper bound).
+        assert!(s.makespan_us >= app.critical_path_us() - 1e-6);
+        let upper: f64 = app
+            .tasks
+            .iter()
+            .map(|t| {
+                t.exec_us.values().copied().fold(0.0, f64::max)
+            })
+            .sum::<f64>()
+            + 10.0 * app.len() as f64; // NoC slack
+        assert!(
+            s.makespan_us <= upper,
+            "seed {seed}: makespan {} above bound {upper}",
+            s.makespan_us
+        );
+    }
+}
+
+#[test]
+fn prop_jobgen_arrival_times_sorted_positive() {
+    use ds3r::config::ArrivalKind;
+    use ds3r::jobgen::JobGen;
+    for seed in property_seeds() {
+        let mut rng = Rng::new(seed);
+        let kind = [
+            ArrivalKind::Poisson,
+            ArrivalKind::Periodic,
+            ArrivalKind::Uniform,
+        ][rng.below(3) as usize];
+        let rate = rng.uniform(0.1, 20.0);
+        let trace =
+            JobGen::new(kind, rate, 3, &[], 200, seed).record_trace();
+        assert_eq!(trace.len(), 200);
+        let mut last = 0.0;
+        for a in &trace {
+            assert!(a.at_us > last, "seed {seed}: non-increasing");
+            assert!(a.app < 3);
+            last = a.at_us;
+        }
+    }
+}
+
+#[test]
+fn prop_random_dag_json_roundtrip() {
+    for seed in property_seeds() {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 30);
+        let j = app.to_json();
+        let back = AppGraph::from_json(&j).unwrap();
+        assert_eq!(back.len(), app.len(), "seed {seed}");
+        assert_eq!(back.topo_order(), app.topo_order());
+        assert!(
+            (back.critical_path_us() - app.critical_path_us()).abs()
+                < 1e-9
+        );
+    }
+}
