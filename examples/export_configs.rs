@@ -1,15 +1,17 @@
-//! Export the built-in Table-2 platform and a Figure-3 experiment point
-//! as JSON config files (written to `configs/`): the starting point for
-//! defining your own DSSoC candidates without recompiling.
+//! Export the built-in Table-2 platform, a Figure-3 experiment point,
+//! and the scenario preset library as JSON config files (written to
+//! `configs/`): the starting point for defining your own DSSoC
+//! candidates and dynamic scenarios without recompiling.
 //!
 //! ```sh
 //! cargo run --release --example export_configs
 //! ds3r run --platform configs/table2_platform.json \
 //!          --config configs/fig3_point.json
+//! ds3r run --scenario configs/scenarios/pe-failure.json
 //! ```
 
 fn main() {
-    std::fs::create_dir_all("configs").expect("mkdir configs");
+    std::fs::create_dir_all("configs/scenarios").expect("mkdir configs");
 
     let p = ds3r::platform::Platform::table2_soc();
     std::fs::write(
@@ -26,8 +28,24 @@ fn main() {
     cfg.dtpm.governor = "ondemand".into();
     cfg.save(std::path::Path::new("configs/fig3_point.json"))
         .expect("write experiment config");
-
     println!(
         "wrote configs/table2_platform.json and configs/fig3_point.json"
     );
+
+    // Every scenario preset, ready to copy and edit.
+    for sc in ds3r::scenario::presets::all() {
+        let path = format!("configs/scenarios/{}.json", sc.name);
+        sc.save(std::path::Path::new(&path)).expect("write scenario");
+        println!("wrote {path}");
+    }
+
+    // A dynamic experiment point: the Figure-3 workload under a bursty
+    // arrival scenario, as one self-contained config file.
+    let mut dynamic = cfg.clone();
+    dynamic.injection_rate_per_ms = 1.0;
+    dynamic.scenario = Some(ds3r::scenario::presets::bursty_wifi());
+    dynamic
+        .save(std::path::Path::new("configs/bursty_point.json"))
+        .expect("write dynamic experiment config");
+    println!("wrote configs/bursty_point.json");
 }

@@ -45,6 +45,50 @@ fn main() {
         );
     }
 
+    println!("=== scenario engine overhead guard ===");
+    // Same workload twice: static vs a busy scenario timeline (an event
+    // every millisecond that re-asserts the same rate — pure dispatch
+    // cost, no behavioural change).  The guard: scenario event dispatch
+    // must stay < 5% of wall time on a saturating run.
+    {
+        use ds3r::scenario::{Action, Scenario};
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = "etf".into();
+        cfg.injection_rate_per_ms = 9.0;
+        cfg.max_jobs = 2000;
+        cfg.warmup_jobs = 100;
+        cfg.max_sim_us = 30_000_000.0;
+        let (r_static, s_static) = bench_util::bench_once(
+            "2000 jobs @ 9/ms, static",
+            || Simulation::build(&platform, &apps, &cfg).unwrap().run(),
+        );
+        let mut churn = Scenario::new(
+            "churn",
+            "no-op rate re-assertions every 1 ms",
+        );
+        for k in 0..400 {
+            churn = churn.event(
+                1000.0 * (k + 1) as f64,
+                Action::SetRate { per_ms: 9.0 },
+            );
+        }
+        cfg.scenario = Some(churn);
+        let (r_scen, s_scen) = bench_util::bench_once(
+            "2000 jobs @ 9/ms, 400-event scenario",
+            || Simulation::build(&platform, &apps, &cfg).unwrap().run(),
+        );
+        assert_eq!(r_static.completed_jobs, r_scen.completed_jobs);
+        let overhead = (s_scen / s_static - 1.0) * 100.0;
+        println!(
+            "{:>48} {:>11.1}% wall overhead ({} scenario events, \
+             {} phases) — guard: < 5%\n",
+            "",
+            overhead,
+            r_scen.scenario_events,
+            r_scen.phases.len()
+        );
+    }
+
     println!("=== event queue ===");
     let mut q = EventQueue::new();
     let mut t = 0.0;
@@ -154,6 +198,7 @@ fn main() {
                 cluster: 0,
                 avail_us: 0.0,
                 queue_len: 0,
+                available: true,
             })
             .collect(),
         exec: 10.0,

@@ -216,6 +216,11 @@ pub fn config_from_args(args: &Args) -> Result<SimConfig> {
         cfg.artifacts_dir =
             Some(std::path::PathBuf::from(args.str_or("artifacts", "")));
     }
+    if args.has("scenario") {
+        cfg.scenario = Some(crate::scenario::resolve(
+            &args.str_or("scenario", ""),
+        )?);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -377,7 +382,131 @@ pub fn cmd_list() -> String {
         "apps:       wifi-tx, wifi-rx, sc-tx, sc-rx, range-detection, \
          pulse-doppler\n",
     );
+    out.push_str("scenarios:  ");
+    out.push_str(&crate::scenario::presets::names().join(", "));
+    out.push_str(", or a scenario .json file\n");
     out
+}
+
+// ---------------------------------------------------------------------------
+// scenario: preset library + scenario sweeps
+// ---------------------------------------------------------------------------
+
+/// `ds3r scenario <list|show|export|sweep>` driver.
+pub fn cmd_scenario(args: &Args) -> Result<String> {
+    let sub = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("list");
+    match sub {
+        "list" => {
+            let mut rows = Vec::new();
+            for sc in crate::scenario::presets::all() {
+                rows.push(vec![
+                    sc.name.clone(),
+                    sc.events.len().to_string(),
+                    sc.description.clone(),
+                ]);
+            }
+            Ok(plot::ascii_table(
+                &["scenario", "events", "description"],
+                &rows,
+            ))
+        }
+        "show" => {
+            let name = args.positional.get(2).ok_or_else(|| {
+                Error::Config("scenario show <name-or-file>".into())
+            })?;
+            let sc = crate::scenario::resolve(name)?;
+            Ok(sc.to_json().to_string_pretty())
+        }
+        "export" => {
+            // Write every preset as a JSON file, ready to edit.
+            let dir = args.str_or("out", "scenarios");
+            std::fs::create_dir_all(&dir)?;
+            let mut out = String::new();
+            for sc in crate::scenario::presets::all() {
+                let path = format!("{dir}/{}.json", sc.name);
+                sc.save(std::path::Path::new(&path))?;
+                out.push_str(&format!("wrote {path}\n"));
+            }
+            Ok(out)
+        }
+        "sweep" => cmd_scenario_sweep(args),
+        other => Err(Error::Config(format!(
+            "unknown scenario subcommand '{other}' \
+             (list, show, export, sweep)"
+        ))),
+    }
+}
+
+/// Run the configured workload under several scenarios and compare.
+fn cmd_scenario_sweep(args: &Args) -> Result<String> {
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let apps = apps_from_args(args)?;
+    let mut cfg = config_from_args(args)?;
+    cfg.scenario = None; // set per sweep point
+    let sel = args.str_or("scenarios", "all");
+    let names: Vec<String> = if sel == "all" {
+        crate::scenario::presets::names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        sel.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    let scenarios = names
+        .iter()
+        .map(|n| crate::scenario::resolve(n))
+        .collect::<Result<Vec<_>>>()?;
+    let threads = args.usize_or("threads", default_threads())?;
+    let results = coordinator::run_scenario_sweep(
+        &platform, &apps, &cfg, &scenarios, threads,
+    )?;
+
+    let mut out = String::new();
+    let mut rows = Vec::new();
+    for r in &results {
+        rows.push(vec![
+            r.scenario.clone(),
+            format!("{}/{}", r.completed_jobs, r.injected_jobs),
+            format!("{:.1}", r.avg_latency_us),
+            format!("{:.1}", r.p95_latency_us),
+            format!("{:.2}", r.energy_per_job_mj),
+            format!("{:.1}", r.peak_temp_c),
+            r.phases.len().to_string(),
+        ]);
+    }
+    out.push_str(&plot::ascii_table(
+        &[
+            "scenario",
+            "done",
+            "avg us",
+            "p95 us",
+            "mJ/job",
+            "peak C",
+            "phases",
+        ],
+        &rows,
+    ));
+    for r in &results {
+        out.push_str(&format!("\n{}:\n", r.scenario));
+        for p in &r.phases {
+            out.push_str(&format!(
+                "  [{:>9.1}..{:>9.1} ms] {:<24} jobs={:<5} \
+                 avg={:>8.1} us  {:>5.2} W  peak={:>5.1} C\n",
+                p.start_us / 1000.0,
+                p.end_us / 1000.0,
+                p.label,
+                p.jobs_completed,
+                p.avg_latency_us,
+                p.avg_power_w,
+                p.peak_temp_c
+            ));
+        }
+    }
+    Ok(out)
 }
 
 pub fn default_threads() -> usize {
@@ -618,9 +747,12 @@ USAGE:
                  [--symbols 12] [--governor ondemand] [--throttle 85]
                  [--power-cap 6] [--gantt] [--traces] [--xla-thermal]
                  [--record-trace out.json] [--trace-file in.json]
+                 [--scenario pe-failure|file.json]
                  [--platform table2|zcu102] [--config file.json] [--json]
   ds3r sweep     [--scheds met,etf,ilp] [--rates 1:8:1] [--threads N]
                  [--csv out.csv] (+ run flags)
+  ds3r scenario  list | show <name> | export [--out dir] |
+                 sweep [--scenarios all|a,b] (+ run flags)
   ds3r reproduce [table1|table2|fig2|fig3|all] [--quick] [--jobs N]
                  [--rates lo:hi:step] [--csv fig3.csv]
   ds3r validate  [--jobs 200]
@@ -732,5 +864,41 @@ mod tests {
         let out = cmd_run(&a).unwrap();
         assert!(out.contains("scheduler=etf"));
         assert!(out.contains("completed=20"));
+    }
+
+    #[test]
+    fn scenario_flag_resolves_presets() {
+        let a = args("run --scenario pe-failure");
+        let c = config_from_args(&a).unwrap();
+        assert_eq!(c.scenario.as_ref().unwrap().name, "pe-failure");
+        let a = args("run --scenario no-such-scenario");
+        assert!(config_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn scenario_subcommand_list_and_show() {
+        let out = cmd_scenario(&args("scenario list")).unwrap();
+        for name in crate::scenario::presets::names() {
+            assert!(out.contains(name), "missing {name}:\n{out}");
+        }
+        let out = cmd_scenario(&args("scenario show pe-failure")).unwrap();
+        assert!(out.contains("pe-fail"));
+        assert!(out.contains("\"at_us\""));
+        assert!(cmd_scenario(&args("scenario frobnicate")).is_err());
+        assert!(cmd_scenario(&args("scenario show")).is_err());
+    }
+
+    #[test]
+    fn run_with_scenario_reports_phases() {
+        // Acceptance path: `run --scenario pe-failure` end-to-end with
+        // per-phase stats in the printed report.
+        let a = args(
+            "run --scenario pe-failure --rate 2 --jobs 250 --warmup 10 \
+             --symbols 4",
+        );
+        let out = cmd_run(&a).unwrap();
+        assert!(out.contains("scenario 'pe-failure'"), "{out}");
+        assert!(out.contains("baseline"), "{out}");
+        assert!(out.contains("pe10-fail"), "{out}");
     }
 }

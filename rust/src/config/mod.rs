@@ -7,6 +7,7 @@
 
 use std::path::PathBuf;
 
+use crate::scenario::Scenario;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -116,6 +117,12 @@ pub struct SimConfig {
     /// Step the thermal model through the AOT PJRT artifact instead of
     /// the native rust path (bit-compatible to ~1e-4; see DESIGN.md).
     pub use_xla_thermal: bool,
+    /// Scenario: a time-scripted timeline of runtime events (rate
+    /// ramps, app-mix switches, ambient steps, PE fault/hotplug, power
+    /// budgets, scheduler hot-swap) executed alongside task events.  In
+    /// JSON either an inline scenario object or a string naming a
+    /// preset / `.json` file (see [`crate::scenario`]).
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for SimConfig {
@@ -139,6 +146,7 @@ impl Default for SimConfig {
             trace_file: None,
             artifacts_dir: None,
             use_xla_thermal: false,
+            scenario: None,
         }
     }
 }
@@ -166,6 +174,9 @@ impl SimConfig {
             return Err(Error::Config(
                 "exec_jitter_frac must be in [0, 0.5)".into(),
             ));
+        }
+        if let Some(sc) = &self.scenario {
+            sc.validate()?;
         }
         Ok(())
     }
@@ -214,6 +225,9 @@ impl SimConfig {
                 "trace_file",
                 Json::Str(tf.to_string_lossy().into_owned()),
             );
+        }
+        if let Some(sc) = &self.scenario {
+            j.set("scenario", sc.to_json());
         }
         j
     }
@@ -267,6 +281,16 @@ impl SimConfig {
         }
         if let Some(tf) = j.get("trace_file").and_then(Json::as_str) {
             c.trace_file = Some(PathBuf::from(tf));
+        }
+        match j.get("scenario") {
+            None => {}
+            // A string names a preset or a scenario .json file.
+            Some(Json::Str(s)) => {
+                c.scenario = Some(crate::scenario::resolve(s)?);
+            }
+            Some(obj) => {
+                c.scenario = Some(Scenario::from_json(obj)?);
+            }
         }
         if let Some(d) = j.get("dtpm") {
             if let Some(x) = d.get("epoch_us").and_then(Json::as_f64) {
@@ -351,6 +375,36 @@ mod tests {
         assert_eq!(c2.dtpm.power_cap_w, Some(6.5));
         assert!(c2.use_xla_thermal);
         assert_eq!(c2.trace_file, Some(PathBuf::from("/tmp/trace.json")));
+    }
+
+    #[test]
+    fn scenario_roundtrips_through_config_json() {
+        use crate::scenario::{presets, Action, Scenario};
+        let mut c = SimConfig::default();
+        c.scenario = Some(
+            Scenario::new("inline", "")
+                .event(1000.0, Action::SetRate { per_ms: 4.0 })
+                .event(2000.0, Action::PeFail { pe: 3 }),
+        );
+        let c2 = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.scenario, c.scenario);
+
+        // A string resolves through the preset registry.
+        let j = Json::parse(r#"{"scenario": "pe-failure"}"#).unwrap();
+        let c3 = SimConfig::from_json(&j).unwrap();
+        assert_eq!(c3.scenario, Some(presets::pe_failure()));
+
+        // Unknown names are rejected with the preset list.
+        let j = Json::parse(r#"{"scenario": "fractal"}"#).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
+
+        // Invalid inline scenarios are rejected by validate().
+        let mut bad = SimConfig::default();
+        bad.scenario = Some(
+            Scenario::new("bad", "")
+                .event(-5.0, Action::SetRate { per_ms: 1.0 }),
+        );
+        assert!(bad.validate().is_err());
     }
 
     #[test]

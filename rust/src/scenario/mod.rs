@@ -1,0 +1,747 @@
+//! Scenario engine: time-scripted runtime events for dynamic workloads,
+//! faults, and environment changes.
+//!
+//! A [`Scenario`] is a declarative, JSON-loadable timeline of runtime
+//! [`Action`]s that the discrete-event loop executes alongside task
+//! events (`sim::queue::Event::Scenario`).  It turns a static simulation
+//! point — one injection rate, one app mix, one ambient temperature, a
+//! fixed PE set — into a *dynamic* run: workload bursts, thermal events,
+//! resource loss, policy changes.  Dynamic resource management only
+//! matters under changing conditions (DS3 journal version, CEDR); this
+//! module is how DS3R scripts those conditions reproducibly.
+//!
+//! ## Event vocabulary
+//!
+//! | action            | effect                                          |
+//! |-------------------|-------------------------------------------------|
+//! | `set-rate`        | step the aggregate injection rate (jobs/ms)     |
+//! | `ramp-rate`       | linear injection-rate ramp over a window        |
+//! | `set-app-weights` | switch the application mix weights              |
+//! | `set-ambient`     | step the ambient temperature (°C)               |
+//! | `pe-fail`         | PE fault: finishes its in-flight task, then     |
+//! |                   | accepts no work (queued tasks are re-queued)    |
+//! | `pe-restore`      | hotplug the PE back in                          |
+//! | `set-power-cap`   | change/remove the DTPM SoC power budget (W)     |
+//! | `set-scheduler`   | hot-swap the scheduler by registry name         |
+//!
+//! ## JSON schema
+//!
+//! ```json
+//! {
+//!   "name": "pe-failure",
+//!   "description": "optional free text",
+//!   "events": [
+//!     {"at_us": 0,      "action": "set-rate",        "per_ms": 2.0},
+//!     {"at_us": 50000,  "action": "ramp-rate",       "to_per_ms": 8.0,
+//!                                                    "over_us": 25000},
+//!     {"at_us": 60000,  "action": "set-app-weights", "weights": [1, 3]},
+//!     {"at_us": 70000,  "action": "set-ambient",     "t_c": 45.0},
+//!     {"at_us": 80000,  "action": "pe-fail",         "pe": 10},
+//!     {"at_us": 90000,  "action": "pe-restore",      "pe": 10},
+//!     {"at_us": 100000, "action": "set-power-cap",   "watts": 5.0},
+//!     {"at_us": 110000, "action": "set-power-cap"},
+//!     {"at_us": 120000, "action": "set-scheduler",   "scheduler": "heft"}
+//!   ]
+//! }
+//! ```
+//!
+//! `set-power-cap` without `watts` removes the cap.  Timestamps must be
+//! non-negative and non-decreasing; equal timestamps execute in listing
+//! order (the event queue's (time, sequence) total order makes the whole
+//! run deterministic).
+//!
+//! Each listed event opens a new *phase*; [`crate::stats::SimReport`]
+//! reports latency/energy/temperature per phase so the effect of every
+//! timeline step is visible in one run.  A library of named presets
+//! lives in [`presets`].
+
+pub mod presets;
+
+use crate::platform::Platform;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Number of `set-rate` sub-steps a `ramp-rate` expands into.
+pub const RAMP_STEPS: usize = 8;
+
+/// One runtime action.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Step the aggregate injection rate (jobs per millisecond).
+    SetRate { per_ms: f64 },
+    /// Linear injection-rate ramp from the rate in force at `at_us` to
+    /// `to_per_ms` over `over_us` (expanded into [`RAMP_STEPS`] steps).
+    RampRate { to_per_ms: f64, over_us: f64 },
+    /// Switch the application-mix weights (length must match the
+    /// workload's app count).
+    SetAppWeights { weights: Vec<f64> },
+    /// Step the ambient temperature (absolute °C).
+    SetAmbient { t_c: f64 },
+    /// Fail a PE: it finishes its in-flight task, its committed queue is
+    /// re-queued for rescheduling, and it accepts no work until restored.
+    PeFail { pe: usize },
+    /// Restore a failed PE (hotplug).
+    PeRestore { pe: usize },
+    /// Set (`Some`) or remove (`None`) the DTPM SoC power cap.
+    SetPowerCap { watts: Option<f64> },
+    /// Hot-swap the scheduler (registry name, see `sched::create`).
+    SetScheduler { name: String },
+}
+
+impl Action {
+    /// Compact label used for phase names and listings.
+    pub fn label(&self) -> String {
+        match self {
+            Action::SetRate { per_ms } => format!("rate={per_ms}/ms"),
+            Action::RampRate { to_per_ms, .. } => {
+                format!("ramp->{to_per_ms}/ms")
+            }
+            Action::SetAppWeights { .. } => "app-mix".into(),
+            Action::SetAmbient { t_c } => format!("ambient={t_c}C"),
+            Action::PeFail { pe } => format!("pe{pe}-fail"),
+            Action::PeRestore { pe } => format!("pe{pe}-restore"),
+            Action::SetPowerCap { watts: Some(w) } => format!("cap={w}W"),
+            Action::SetPowerCap { watts: None } => "cap-off".into(),
+            Action::SetScheduler { name } => format!("sched={name}"),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            Action::SetRate { per_ms } => {
+                j.set("action", Json::Str("set-rate".into()))
+                    .set("per_ms", Json::Num(*per_ms));
+            }
+            Action::RampRate { to_per_ms, over_us } => {
+                j.set("action", Json::Str("ramp-rate".into()))
+                    .set("to_per_ms", Json::Num(*to_per_ms))
+                    .set("over_us", Json::Num(*over_us));
+            }
+            Action::SetAppWeights { weights } => {
+                j.set("action", Json::Str("set-app-weights".into()))
+                    .set(
+                        "weights",
+                        Json::Arr(
+                            weights.iter().map(|&w| Json::Num(w)).collect(),
+                        ),
+                    );
+            }
+            Action::SetAmbient { t_c } => {
+                j.set("action", Json::Str("set-ambient".into()))
+                    .set("t_c", Json::Num(*t_c));
+            }
+            Action::PeFail { pe } => {
+                j.set("action", Json::Str("pe-fail".into()))
+                    .set("pe", Json::Num(*pe as f64));
+            }
+            Action::PeRestore { pe } => {
+                j.set("action", Json::Str("pe-restore".into()))
+                    .set("pe", Json::Num(*pe as f64));
+            }
+            Action::SetPowerCap { watts } => {
+                j.set("action", Json::Str("set-power-cap".into()));
+                if let Some(w) = watts {
+                    j.set("watts", Json::Num(*w));
+                }
+            }
+            Action::SetScheduler { name } => {
+                j.set("action", Json::Str("set-scheduler".into()))
+                    .set("scheduler", Json::Str(name.clone()));
+            }
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<Action> {
+        let kind = j.req_str("action")?;
+        match kind {
+            "set-rate" => Ok(Action::SetRate { per_ms: j.req_f64("per_ms")? }),
+            "ramp-rate" => Ok(Action::RampRate {
+                to_per_ms: j.req_f64("to_per_ms")?,
+                over_us: j.req_f64("over_us")?,
+            }),
+            "set-app-weights" => Ok(Action::SetAppWeights {
+                weights: j
+                    .get("weights")
+                    .ok_or_else(|| {
+                        Error::Config(
+                            "set-app-weights needs 'weights'".into(),
+                        )
+                    })?
+                    .f64_vec()
+                    .map_err(|_| {
+                        Error::Config(
+                            "set-app-weights 'weights' must be numbers"
+                                .into(),
+                        )
+                    })?,
+            }),
+            "set-ambient" => {
+                Ok(Action::SetAmbient { t_c: j.req_f64("t_c")? })
+            }
+            "pe-fail" => Ok(Action::PeFail {
+                pe: j.req_f64("pe")? as usize,
+            }),
+            "pe-restore" => Ok(Action::PeRestore {
+                pe: j.req_f64("pe")? as usize,
+            }),
+            "set-power-cap" => Ok(Action::SetPowerCap {
+                watts: j.get("watts").and_then(Json::as_f64),
+            }),
+            "set-scheduler" => Ok(Action::SetScheduler {
+                name: j.req_str("scheduler")?.to_string(),
+            }),
+            other => Err(Error::Config(format!(
+                "unknown scenario action '{other}' (set-rate, ramp-rate, \
+                 set-app-weights, set-ambient, pe-fail, pe-restore, \
+                 set-power-cap, set-scheduler)"
+            ))),
+        }
+    }
+}
+
+/// One timeline entry: `action` executes at simulated time `at_us`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioEvent {
+    pub at_us: f64,
+    pub action: Action,
+}
+
+/// A named, validated timeline of runtime events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl Scenario {
+    pub fn new(
+        name: impl Into<String>,
+        description: impl Into<String>,
+    ) -> Scenario {
+        Scenario {
+            name: name.into(),
+            description: description.into(),
+            events: Vec::new(),
+        }
+    }
+
+    /// Builder: append an event (keep timestamps non-decreasing).
+    pub fn event(mut self, at_us: f64, action: Action) -> Scenario {
+        self.events.push(ScenarioEvent { at_us, action });
+        self
+    }
+
+    /// Platform-independent validation: timestamps and action payloads.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::Config("scenario has no name".into()));
+        }
+        let mut last = 0.0f64;
+        // End of the latest ramp window: rate events inside it would be
+        // silently overridden by the ramp's later interpolation steps.
+        let mut ramp_until = f64::NEG_INFINITY;
+        for (i, ev) in self.events.iter().enumerate() {
+            if !ev.at_us.is_finite() || ev.at_us < 0.0 {
+                return Err(Error::Config(format!(
+                    "scenario '{}': event {i} has negative or non-finite \
+                     time {}",
+                    self.name, ev.at_us
+                )));
+            }
+            if ev.at_us < last {
+                return Err(Error::Config(format!(
+                    "scenario '{}': timeline out of order at event {i} \
+                     ({} us after {} us)",
+                    self.name, ev.at_us, last
+                )));
+            }
+            last = ev.at_us;
+            if matches!(
+                ev.action,
+                Action::SetRate { .. } | Action::RampRate { .. }
+            ) && ev.at_us < ramp_until
+            {
+                return Err(Error::Config(format!(
+                    "scenario '{}': rate event {i} at {} us falls inside \
+                     an active ramp-rate window (ends {} us)",
+                    self.name, ev.at_us, ramp_until
+                )));
+            }
+            match &ev.action {
+                Action::SetRate { per_ms } => {
+                    if *per_ms <= 0.0 || !per_ms.is_finite() {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': set-rate {per_ms} must be > 0",
+                            self.name
+                        )));
+                    }
+                }
+                Action::RampRate { to_per_ms, over_us } => {
+                    if *to_per_ms <= 0.0 || !to_per_ms.is_finite() {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': ramp-rate target {to_per_ms} \
+                             must be > 0",
+                            self.name
+                        )));
+                    }
+                    if *over_us <= 0.0 || !over_us.is_finite() {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': ramp-rate over_us {over_us} \
+                             must be > 0",
+                            self.name
+                        )));
+                    }
+                    ramp_until = ramp_until.max(ev.at_us + over_us);
+                }
+                Action::SetAppWeights { weights } => {
+                    if weights.is_empty()
+                        || weights.iter().any(|w| *w < 0.0 || !w.is_finite())
+                        || weights.iter().sum::<f64>() <= 0.0
+                    {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': set-app-weights needs \
+                             non-negative weights with a positive sum",
+                            self.name
+                        )));
+                    }
+                }
+                Action::SetAmbient { t_c } => {
+                    if !(-55.0..=150.0).contains(t_c) {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': ambient {t_c} °C outside \
+                             [-55, 150]",
+                            self.name
+                        )));
+                    }
+                }
+                Action::SetPowerCap { watts: Some(w) } => {
+                    if *w <= 0.0 || !w.is_finite() {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': power cap {w} W must be > 0",
+                            self.name
+                        )));
+                    }
+                }
+                Action::SetPowerCap { watts: None } => {}
+                Action::SetScheduler { name } => {
+                    if name.is_empty() {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': set-scheduler needs a name",
+                            self.name
+                        )));
+                    }
+                }
+                Action::PeFail { .. } | Action::PeRestore { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Platform/workload-dependent validation: PE ids in range, app-mix
+    /// weight vectors matching the workload size.
+    pub fn validate_for(
+        &self,
+        platform: &Platform,
+        n_apps: usize,
+    ) -> Result<()> {
+        for ev in &self.events {
+            match &ev.action {
+                Action::PeFail { pe } | Action::PeRestore { pe } => {
+                    if *pe >= platform.n_pes() {
+                        return Err(Error::Config(format!(
+                            "scenario '{}' references unknown PE id {pe} \
+                             (platform '{}' has {} PEs)",
+                            self.name,
+                            platform.name,
+                            platform.n_pes()
+                        )));
+                    }
+                }
+                Action::SetAppWeights { weights } => {
+                    if weights.len() != n_apps {
+                        return Err(Error::Config(format!(
+                            "scenario '{}': set-app-weights has {} \
+                             weights, workload has {n_apps} apps",
+                            self.name,
+                            weights.len()
+                        )));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Scheduler names this scenario hot-swaps to (build-time dry runs).
+    pub fn scheduler_names(&self) -> Vec<&str> {
+        self.events
+            .iter()
+            .filter_map(|ev| match &ev.action {
+                Action::SetScheduler { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Expand the timeline into the executable form: ramps become
+    /// [`RAMP_STEPS`] interpolated `set-rate` steps; the first event of
+    /// each distinct timestamp carries the phase label (joined across
+    /// simultaneous events) so per-phase stats have one phase per
+    /// timeline step, not one per co-timed action.
+    pub fn compile(&self, initial_rate_per_ms: f64) -> Vec<CompiledEvent> {
+        let mut out: Vec<CompiledEvent> = Vec::new();
+        let mut cur_rate = initial_rate_per_ms;
+        let mut i = 0;
+        while i < self.events.len() {
+            // Group events sharing this timestamp.
+            let t = self.events[i].at_us;
+            let mut j = i;
+            while j < self.events.len() && self.events[j].at_us == t {
+                j += 1;
+            }
+            let label = self.events[i..j]
+                .iter()
+                .map(|ev| ev.action.label())
+                .collect::<Vec<_>>()
+                .join("+");
+            let mut first = true;
+            for ev in &self.events[i..j] {
+                let phase_label = first.then(|| label.clone());
+                first = false;
+                match &ev.action {
+                    Action::RampRate { to_per_ms, over_us } => {
+                        // Labeled no-op anchor at the ramp start, then
+                        // interpolated steps (no extra phases).
+                        out.push(CompiledEvent {
+                            at_us: t,
+                            action: Action::SetRate { per_ms: cur_rate },
+                            phase_label,
+                        });
+                        for s in 1..=RAMP_STEPS {
+                            let f = s as f64 / RAMP_STEPS as f64;
+                            out.push(CompiledEvent {
+                                at_us: t + over_us * f,
+                                action: Action::SetRate {
+                                    per_ms: cur_rate
+                                        + (to_per_ms - cur_rate) * f,
+                                },
+                                phase_label: None,
+                            });
+                        }
+                        cur_rate = *to_per_ms;
+                    }
+                    other => {
+                        if let Action::SetRate { per_ms } = other {
+                            cur_rate = *per_ms;
+                        }
+                        out.push(CompiledEvent {
+                            at_us: t,
+                            action: other.clone(),
+                            phase_label,
+                        });
+                    }
+                }
+            }
+            i = j;
+        }
+        out
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        if !self.description.is_empty() {
+            j.set("description", Json::Str(self.description.clone()));
+        }
+        j.set(
+            "events",
+            Json::Arr(
+                self.events
+                    .iter()
+                    .map(|ev| {
+                        let mut je = ev.action.to_json();
+                        je.set("at_us", Json::Num(ev.at_us));
+                        je
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Parse and validate a scenario (platform-independent checks only;
+    /// the simulation build validates PE ids and weight lengths).
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        let name = j.req_str("name")?.to_string();
+        let description = j
+            .get("description")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mut events = Vec::new();
+        for je in j.req_arr("events")? {
+            events.push(ScenarioEvent {
+                at_us: je.req_f64("at_us")?,
+                action: Action::from_json(je)?,
+            });
+        }
+        let s = Scenario { name, description, events };
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Scenario> {
+        Scenario::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// One executable timeline entry (ramps pre-expanded).  Events carrying a
+/// `phase_label` open a new stats phase when they fire.
+#[derive(Debug, Clone)]
+pub struct CompiledEvent {
+    pub at_us: f64,
+    pub action: Action,
+    pub phase_label: Option<String>,
+}
+
+/// Resolve a scenario by preset name, or load a JSON scenario file
+/// (anything containing a path separator or ending in `.json`).
+pub fn resolve(name_or_path: &str) -> Result<Scenario> {
+    if let Some(s) = presets::by_name(name_or_path) {
+        return Ok(s);
+    }
+    if name_or_path.ends_with(".json") || name_or_path.contains('/') {
+        return Scenario::load(std::path::Path::new(name_or_path));
+    }
+    Err(Error::Config(format!(
+        "unknown scenario '{name_or_path}' (presets: {}; or a .json file)",
+        presets::names().join(", ")
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    fn demo() -> Scenario {
+        Scenario::new("demo", "a bit of everything")
+            .event(0.0, Action::SetRate { per_ms: 2.0 })
+            .event(
+                1000.0,
+                Action::RampRate { to_per_ms: 8.0, over_us: 400.0 },
+            )
+            .event(2000.0, Action::SetAppWeights { weights: vec![1.0, 3.0] })
+            .event(3000.0, Action::SetAmbient { t_c: 45.0 })
+            .event(4000.0, Action::PeFail { pe: 10 })
+            .event(5000.0, Action::PeRestore { pe: 10 })
+            .event(6000.0, Action::SetPowerCap { watts: Some(5.0) })
+            .event(7000.0, Action::SetPowerCap { watts: None })
+            .event(
+                8000.0,
+                Action::SetScheduler { name: "heft".into() },
+            )
+    }
+
+    #[test]
+    fn json_roundtrip_parse_serialize_parse() {
+        let s = demo();
+        s.validate().unwrap();
+        let j = s.to_json();
+        let s2 = Scenario::from_json(&j).unwrap();
+        assert_eq!(s, s2);
+        // Text-level stability: serialize -> parse -> serialize.
+        let text = j.to_string_pretty();
+        let s3 = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s, s3);
+        assert_eq!(s3.to_json().to_string_pretty(), text);
+    }
+
+    #[test]
+    fn validation_rejects_negative_time() {
+        let s = Scenario::new("bad", "")
+            .event(-1.0, Action::SetRate { per_ms: 1.0 });
+        let msg = format!("{}", s.validate().unwrap_err());
+        assert!(msg.contains("negative"), "{msg}");
+    }
+
+    #[test]
+    fn validation_rejects_out_of_order_timeline() {
+        let s = Scenario::new("bad", "")
+            .event(100.0, Action::SetRate { per_ms: 1.0 })
+            .event(50.0, Action::SetRate { per_ms: 2.0 });
+        let msg = format!("{}", s.validate().unwrap_err());
+        assert!(msg.contains("out of order"), "{msg}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_payloads() {
+        for s in [
+            Scenario::new("x", "").event(0.0, Action::SetRate { per_ms: 0.0 }),
+            Scenario::new("x", "").event(
+                0.0,
+                Action::RampRate { to_per_ms: 2.0, over_us: 0.0 },
+            ),
+            Scenario::new("x", "")
+                .event(0.0, Action::SetAppWeights { weights: vec![] }),
+            Scenario::new("x", "").event(
+                0.0,
+                Action::SetAppWeights { weights: vec![0.0, 0.0] },
+            ),
+            Scenario::new("x", "")
+                .event(0.0, Action::SetAmbient { t_c: 500.0 }),
+            Scenario::new("x", "")
+                .event(0.0, Action::SetPowerCap { watts: Some(-1.0) }),
+            Scenario::new("x", "")
+                .event(0.0, Action::SetScheduler { name: "".into() }),
+        ] {
+            assert!(s.validate().is_err(), "accepted: {s:?}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_rate_event_inside_ramp_window() {
+        // A rate event inside an active ramp would be silently undone
+        // by the ramp's pre-expanded later steps — reject it.
+        let s = Scenario::new("overlap", "")
+            .event(
+                0.0,
+                Action::RampRate { to_per_ms: 8.0, over_us: 100_000.0 },
+            )
+            .event(50_000.0, Action::SetRate { per_ms: 1.0 });
+        let msg = format!("{}", s.validate().unwrap_err());
+        assert!(msg.contains("ramp-rate window"), "{msg}");
+
+        // Non-rate events inside the window are fine (a fault during a
+        // ramp is a legitimate scenario)...
+        let ok = Scenario::new("ok", "")
+            .event(
+                0.0,
+                Action::RampRate { to_per_ms: 8.0, over_us: 100_000.0 },
+            )
+            .event(50_000.0, Action::PeFail { pe: 0 });
+        ok.validate().unwrap();
+        // ...and a rate event at/after the ramp end is too.
+        let ok2 = Scenario::new("ok2", "")
+            .event(
+                0.0,
+                Action::RampRate { to_per_ms: 8.0, over_us: 100_000.0 },
+            )
+            .event(100_000.0, Action::SetRate { per_ms: 1.0 });
+        ok2.validate().unwrap();
+    }
+
+    #[test]
+    fn platform_validation_rejects_unknown_pe() {
+        let p = Platform::table2_soc();
+        let ok = Scenario::new("ok", "")
+            .event(0.0, Action::PeFail { pe: p.n_pes() - 1 });
+        ok.validate_for(&p, 1).unwrap();
+        let bad = Scenario::new("bad", "")
+            .event(0.0, Action::PeFail { pe: p.n_pes() });
+        let msg = format!("{}", bad.validate_for(&p, 1).unwrap_err());
+        assert!(msg.contains("unknown PE id"), "{msg}");
+    }
+
+    #[test]
+    fn platform_validation_rejects_weight_mismatch() {
+        let p = Platform::table2_soc();
+        let s = Scenario::new("w", "")
+            .event(0.0, Action::SetAppWeights { weights: vec![1.0, 2.0] });
+        assert!(s.validate_for(&p, 2).is_ok());
+        assert!(s.validate_for(&p, 3).is_err());
+    }
+
+    #[test]
+    fn unknown_action_rejected_with_context() {
+        let j = Json::parse(
+            r#"{"name": "x", "events": [{"at_us": 0, "action": "warp"}]}"#,
+        )
+        .unwrap();
+        let msg = format!("{}", Scenario::from_json(&j).unwrap_err());
+        assert!(msg.contains("unknown scenario action"), "{msg}");
+    }
+
+    #[test]
+    fn ramp_expands_to_interpolated_steps() {
+        let s = Scenario::new("r", "").event(
+            1000.0,
+            Action::RampRate { to_per_ms: 9.0, over_us: 800.0 },
+        );
+        let c = s.compile(1.0);
+        // Anchor + RAMP_STEPS interpolated steps.
+        assert_eq!(c.len(), 1 + RAMP_STEPS);
+        assert!(c[0].phase_label.is_some());
+        assert!(c[1..].iter().all(|e| e.phase_label.is_none()));
+        match &c[0].action {
+            Action::SetRate { per_ms } => assert_eq!(*per_ms, 1.0),
+            other => panic!("{other:?}"),
+        }
+        match &c[RAMP_STEPS].action {
+            Action::SetRate { per_ms } => {
+                assert!((per_ms - 9.0).abs() < 1e-12)
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!((c[RAMP_STEPS].at_us - 1800.0).abs() < 1e-9);
+        // Midpoint is halfway up.
+        match &c[RAMP_STEPS / 2].action {
+            Action::SetRate { per_ms } => {
+                assert!((per_ms - 5.0).abs() < 1e-9)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn simultaneous_events_share_one_phase() {
+        let s = Scenario::new("m", "")
+            .event(100.0, Action::PeFail { pe: 0 })
+            .event(100.0, Action::PeFail { pe: 1 })
+            .event(200.0, Action::PeRestore { pe: 0 });
+        let c = s.compile(1.0);
+        assert_eq!(c.len(), 3);
+        assert_eq!(
+            c[0].phase_label.as_deref(),
+            Some("pe0-fail+pe1-fail")
+        );
+        assert!(c[1].phase_label.is_none());
+        assert_eq!(c[2].phase_label.as_deref(), Some("pe0-restore"));
+    }
+
+    #[test]
+    fn resolve_finds_presets_and_rejects_unknown() {
+        for name in presets::names() {
+            let s = resolve(name).unwrap();
+            assert_eq!(&s.name, name);
+            s.validate().unwrap();
+        }
+        assert!(resolve("no-such-scenario").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("ds3r-scenario-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("demo.json");
+        let s = demo();
+        s.save(&path).unwrap();
+        let back = Scenario::load(&path).unwrap();
+        assert_eq!(s, back);
+        // resolve() accepts explicit paths.
+        let via = resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(s, via);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,152 @@
+//! Named scenario presets: ready-made dynamic conditions for the
+//! Table-2 evaluation SoC.
+//!
+//! * [`bursty_wifi`] — a quiet link that bursts to near-saturation and
+//!   back (injection-rate ramps), the Figure-3 x-axis made dynamic.
+//! * [`thermal_soak`] — ambient temperature soak test: 25 → 45 → 60 °C
+//!   and back, stressing leakage and any thermal-throttle policy.
+//! * [`pe_failure`] — all four FFT accelerators fail mid-run and return
+//!   later; FFT-heavy tasks must fall back to the cores.
+//! * [`budget_throttle`] — an SoC power budget appears, tightens, and is
+//!   lifted (DTPM power-cap policy driven from the timeline).
+//! * [`scheduler_shootout`] — scheduler hot-swap etf → heft → met-lb →
+//!   etf under steady load, comparing policies inside one run.
+//!
+//! PE ids in `pe-failure` refer to the Table-2 preset layout (0-3 A15,
+//! 4-7 A7, 8-9 ACC_SCR, 10-13 ACC_FFT).
+
+use super::{Action, Scenario};
+
+/// All preset names, in listing order.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "bursty-wifi",
+        "thermal-soak",
+        "pe-failure",
+        "budget-throttle",
+        "scheduler-shootout",
+    ]
+}
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    match name {
+        "bursty-wifi" => Some(bursty_wifi()),
+        "thermal-soak" => Some(thermal_soak()),
+        "pe-failure" => Some(pe_failure()),
+        "budget-throttle" => Some(budget_throttle()),
+        "scheduler-shootout" => Some(scheduler_shootout()),
+        _ => None,
+    }
+}
+
+/// All presets (listing / export helpers).
+pub fn all() -> Vec<Scenario> {
+    names().iter().map(|n| by_name(n).unwrap()).collect()
+}
+
+/// Quiet link, then a burst to near-saturation, then quiet again.
+pub fn bursty_wifi() -> Scenario {
+    Scenario::new(
+        "bursty-wifi",
+        "injection rate 1/ms, ramp to 8/ms burst at 100 ms, back to \
+         1/ms at 250 ms, second smaller burst at 350 ms",
+    )
+    .event(0.0, Action::SetRate { per_ms: 1.0 })
+    .event(100_000.0, Action::RampRate { to_per_ms: 8.0, over_us: 50_000.0 })
+    .event(250_000.0, Action::SetRate { per_ms: 1.0 })
+    .event(350_000.0, Action::RampRate { to_per_ms: 6.0, over_us: 50_000.0 })
+}
+
+/// Ambient soak: 25 °C baseline, 45 °C, 60 °C, then back to 25 °C.
+pub fn thermal_soak() -> Scenario {
+    Scenario::new(
+        "thermal-soak",
+        "ambient temperature steps 25 -> 45 -> 60 -> 25 C; leakage and \
+         throttle policies feel the environment change",
+    )
+    .event(50_000.0, Action::SetAmbient { t_c: 45.0 })
+    .event(150_000.0, Action::SetAmbient { t_c: 60.0 })
+    .event(300_000.0, Action::SetAmbient { t_c: 25.0 })
+}
+
+/// All four FFT accelerators fail at 50 ms, return at 150 ms.
+pub fn pe_failure() -> Scenario {
+    let mut s = Scenario::new(
+        "pe-failure",
+        "FFT accelerators (PEs 10-13 on the Table-2 SoC) fail at 50 ms \
+         and hotplug back at 150 ms; FFT tasks fall back to the cores",
+    );
+    for pe in 10..14 {
+        s = s.event(50_000.0, Action::PeFail { pe });
+    }
+    for pe in 10..14 {
+        s = s.event(150_000.0, Action::PeRestore { pe });
+    }
+    s
+}
+
+/// A power budget appears at 50 ms, tightens at 150 ms, lifts at 300 ms.
+pub fn budget_throttle() -> Scenario {
+    Scenario::new(
+        "budget-throttle",
+        "SoC power cap 6 W at 50 ms, tightened to 3.5 W at 150 ms, \
+         removed at 300 ms (drives the DTPM power-cap policy)",
+    )
+    .event(50_000.0, Action::SetPowerCap { watts: Some(6.0) })
+    .event(150_000.0, Action::SetPowerCap { watts: Some(3.5) })
+    .event(300_000.0, Action::SetPowerCap { watts: None })
+}
+
+/// Scheduler hot-swap under steady load.
+pub fn scheduler_shootout() -> Scenario {
+    Scenario::new(
+        "scheduler-shootout",
+        "hot-swap the scheduler etf -> heft -> met-lb -> etf every \
+         100 ms under steady load; per-phase stats compare the policies",
+    )
+    .event(100_000.0, Action::SetScheduler { name: "heft".into() })
+    .event(200_000.0, Action::SetScheduler { name: "met-lb".into() })
+    .event(300_000.0, Action::SetScheduler { name: "etf".into() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    #[test]
+    fn all_presets_validate() {
+        let p = Platform::table2_soc();
+        for s in all() {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            s.validate_for(&p, 1)
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(!s.description.is_empty());
+            assert!(!s.events.is_empty());
+        }
+        assert_eq!(all().len(), names().len());
+    }
+
+    #[test]
+    fn presets_roundtrip_json() {
+        for s in all() {
+            let back =
+                Scenario::from_json(&s.to_json()).unwrap();
+            assert_eq!(s, back);
+        }
+    }
+
+    #[test]
+    fn pe_failure_targets_fft_engines() {
+        let p = Platform::table2_soc();
+        let s = pe_failure();
+        for ev in &s.events {
+            if let Action::PeFail { pe } | Action::PeRestore { pe } =
+                &ev.action
+            {
+                assert_eq!(p.classes[p.pes[*pe].class].name, "ACC_FFT");
+            }
+        }
+    }
+}

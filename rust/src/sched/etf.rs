@@ -45,6 +45,9 @@ fn select_etf(
     let n = ready.len();
     let m = avail.len();
     let now = ctx.now_us();
+    // Failed/hotplugged-out PEs never receive work; read the mask from
+    // the snapshots in place (this path runs every decision epoch).
+    let pes = ctx.pes();
 
     // Fast path: a single ready task (the dominant decision-epoch shape
     // below saturation) needs one scan and no matrix allocation.
@@ -52,6 +55,9 @@ fn select_etf(
         let rt = &ready[0];
         let mut best = (f64::INFINITY, usize::MAX);
         for (j, &av) in avail.iter().enumerate() {
+            if !pes[j].available {
+                continue;
+            }
             if let Some(e) = ctx.exec_us(rt, j) {
                 let fin = av.max(ctx.data_ready_us(rt, j)).max(now) + e;
                 if fin < best.0 {
@@ -71,6 +77,9 @@ fn select_etf(
     let mut dready = vec![0.0f64; n * m];
     for (i, rt) in ready.iter().enumerate() {
         for j in 0..m {
+            if !pes[j].available {
+                continue;
+            }
             if let Some(us) = ctx.exec_us(rt, j) {
                 exec[i * m + j] = us;
                 dready[i * m + j] = ctx.data_ready_us(rt, j);
@@ -219,6 +228,9 @@ impl Scheduler for EtfXla {
         let mut dready = vec![0.0f64; n * m];
         for (i, rt) in ready.iter().enumerate() {
             for j in 0..m {
+                if !ctx.pes()[j].available {
+                    continue; // failed PE: stays INFINITY everywhere
+                }
                 if let Some(us) = ctx.exec_us(rt, j) {
                     exec[i * m + j] = us;
                     dready[i * m + j] = ctx.data_ready_us(rt, j);
@@ -386,6 +398,25 @@ mod tests {
         let mut etf = Etf::new();
         let tasks: Vec<_> = (0..7).map(|t| rt(0, t)).collect();
         assert_eq!(etf.schedule(&tasks, &ctx).len(), 7);
+    }
+
+    #[test]
+    fn never_assigns_to_unavailable_pe() {
+        // PE 0 is much faster but failed; ETF must route to PE 1, and
+        // with both failed it must place nothing.
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        for t in 0..3 {
+            ctx.set_exec(0, t, 0, 1.0);
+            ctx.set_exec(0, t, 1, 50.0);
+        }
+        ctx.pes[0].available = false;
+        let mut etf = Etf::new();
+        let tasks: Vec<_> = (0..3).map(|t| rt(0, t)).collect();
+        let a = etf.schedule(&tasks, &ctx);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|x| x.pe == 1));
+        ctx.pes[1].available = false;
+        assert!(etf.schedule(&tasks, &ctx).is_empty());
     }
 
     #[test]

@@ -87,6 +87,9 @@ impl Scheduler for Heft {
             let rt = &ready[idx];
             let mut best = (f64::INFINITY, usize::MAX);
             for pe in ctx.pes() {
+                if !pe.available {
+                    continue; // failed/hotplugged-out (scenario engine)
+                }
                 if let Some(e) = ctx.exec_us(rt, pe.id) {
                     let start = avail[pe.id]
                         .max(ctx.data_ready_us(rt, pe.id))

@@ -39,6 +39,9 @@ fn met_schedule(
     for rt in ready {
         let mut best_exec = f64::INFINITY;
         for pe in ctx.pes() {
+            if !pe.available {
+                continue; // failed/hotplugged-out (scenario engine)
+            }
             if let Some(us) = ctx.exec_us(rt, pe.id) {
                 if us < best_exec {
                     best_exec = us;
@@ -52,7 +55,8 @@ fn met_schedule(
         if least_loaded {
             let mut best_avail = f64::INFINITY;
             for pe in ctx.pes() {
-                if ctx.exec_us(rt, pe.id) == Some(best_exec)
+                if pe.available
+                    && ctx.exec_us(rt, pe.id) == Some(best_exec)
                     && avail[pe.id] < best_avail
                 {
                     best_avail = avail[pe.id];
@@ -62,7 +66,9 @@ fn met_schedule(
         } else {
             // DS3-faithful: first (lowest-id) PE achieving the minimum.
             for pe in ctx.pes() {
-                if ctx.exec_us(rt, pe.id) == Some(best_exec) {
+                if pe.available
+                    && ctx.exec_us(rt, pe.id) == Some(best_exec)
+                {
                     best_pe = pe.id;
                     break;
                 }
@@ -195,6 +201,21 @@ mod tests {
         ctx.pes[0].avail_us = 1e6;
         let mut met = MetLb::new();
         assert_eq!(met.schedule(&[rt(0, 0)], &ctx)[0].pe, 0);
+    }
+
+    #[test]
+    fn failed_instance_falls_back_to_next_best() {
+        // Fastest class on PE 0 is failed: MET must take the next-best
+        // available PE instead of pinning to the failed one.
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, 0, 1, 25.0);
+        ctx.pes[0].available = false;
+        let mut met = Met::new();
+        assert_eq!(met.schedule(&[rt(0, 0)], &ctx)[0].pe, 1);
+        // All PEs failed: nothing placed.
+        ctx.pes[1].available = false;
+        assert!(met.schedule(&[rt(0, 0)], &ctx).is_empty());
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct PeSnapshot {
     pub avail_us: f64,
     /// Committed-but-unfinished tasks (including the running one).
     pub queue_len: usize,
+    /// False while the PE is failed/hotplugged out (scenario engine).
+    /// Schedulers must not assign to unavailable PEs; the kernel also
+    /// rejects such assignments and reports `exec_us = None` for them.
+    pub available: bool,
 }
 
 /// The simulation state a scheduler may consult.
@@ -167,6 +171,7 @@ pub(crate) mod testutil {
                         cluster: 0,
                         avail_us: now,
                         queue_len: 0,
+                        available: true,
                     })
                     .collect(),
                 exec: BTreeMap::new(),
@@ -188,6 +193,10 @@ pub(crate) mod testutil {
             &self.pes
         }
         fn exec_us(&self, rt: &ReadyTask, pe: usize) -> Option<f64> {
+            // Mirrors the kernel: unavailable PEs support nothing.
+            if !self.pes[pe].available {
+                return None;
+            }
             self.exec.get(&(rt.job, rt.task, pe)).copied()
         }
         fn data_ready_us(&self, rt: &ReadyTask, pe: usize) -> f64 {

@@ -32,7 +32,7 @@ impl Scheduler for RandomSched {
         for rt in ready {
             supported.clear();
             for pe in ctx.pes() {
-                if ctx.exec_us(rt, pe.id).is_some() {
+                if pe.available && ctx.exec_us(rt, pe.id).is_some() {
                     supported.push(pe.id);
                 }
             }

@@ -34,7 +34,9 @@ impl Scheduler for RoundRobin {
             let mut pick = None;
             for k in 0..n {
                 let pe = (self.cursor + k) % n;
-                if ctx.exec_us(rt, pe).is_some() {
+                if ctx.pes()[pe].available
+                    && ctx.exec_us(rt, pe).is_some()
+                {
                     pick = Some(pe);
                     self.cursor = (pe + 1) % n;
                     break;

@@ -30,11 +30,12 @@ use crate::platform::{Opp, Platform};
 use crate::power::{self, EnergyMeter};
 use crate::rng::Rng;
 use crate::runtime::DtpmArtifact;
+use crate::scenario::{Action, CompiledEvent};
 use crate::sched::{
     Assignment, PeSnapshot, ReadyTask, SchedBuild, SchedContext, Scheduler,
 };
 use crate::sched::ilp::ExecTable;
-use crate::stats::{EpochTrace, GanttEntry};
+use crate::stats::{EpochTrace, GanttEntry, PhaseStats};
 use crate::thermal::RcModel;
 use crate::{Error, Result};
 use queue::{Event, EventQueue};
@@ -122,6 +123,13 @@ pub struct Simulation<'a> {
     jobgen: JobGen,
     jobs: Vec<Job>,
     pes: Vec<PeState>,
+    /// Scenario timeline (ramps pre-expanded); empty for static runs.
+    timeline: Vec<CompiledEvent>,
+    /// Per-PE availability mask (false while failed/hotplugged out).
+    pe_available: Vec<bool>,
+    /// Ambient temperature (°C) — starts at the platform's value,
+    /// steppable by scenario events.
+    t_ambient_c: f64,
     ready: VecDeque<ReadyTask>,
     /// Current OPP index per cluster.
     cluster_opp_idx: Vec<usize>,
@@ -139,6 +147,11 @@ pub struct Simulation<'a> {
     arrivals_done: bool,
     report: SimReport,
     sched_dirty: bool,
+
+    // --- per-phase accounting (scenario runs) ---
+    phase_lats: Vec<f64>,
+    phase_energy0_j: f64,
+    phase_peak_temp_c: f64,
 }
 
 impl<'a> Simulation<'a> {
@@ -201,6 +214,33 @@ impl<'a> Simulation<'a> {
                 };
                 crate::sched::create(&cfg.scheduler, &build)?
             }
+        };
+
+        // Scenario: validate against this platform/workload, dry-run any
+        // hot-swap scheduler names through the registry so a typo fails
+        // at build time, and expand the timeline into executable form.
+        let timeline = match &cfg.scenario {
+            Some(sc) => {
+                sc.validate()?;
+                sc.validate_for(platform, apps.len())?;
+                let build = SchedBuild {
+                    platform,
+                    apps,
+                    seed: cfg.seed,
+                    artifacts_dir: cfg.artifacts_dir.clone(),
+                };
+                for name in sc.scheduler_names() {
+                    crate::sched::create(name, &build).map_err(|e| {
+                        Error::Config(format!(
+                            "scenario '{}' hot-swaps to an unusable \
+                             scheduler: {e}",
+                            sc.name
+                        ))
+                    })?;
+                }
+                sc.compile(cfg.injection_rate_per_ms)
+            }
+            None => Vec::new(),
         };
         let governor = dtpm::create_governor(&cfg.dtpm)?;
         let rc = RcModel::new(platform, cfg.dtpm.epoch_us);
@@ -285,6 +325,9 @@ impl<'a> Simulation<'a> {
         report.injection_rate_per_ms = cfg.injection_rate_per_ms;
         report.seed = cfg.seed;
         report.per_app_latencies_us = vec![Vec::new(); apps.len()];
+        if let Some(sc) = &cfg.scenario {
+            report.scenario = sc.name.clone();
+        }
 
         Ok(Simulation {
             platform,
@@ -308,6 +351,9 @@ impl<'a> Simulation<'a> {
             jobgen,
             jobs: Vec::new(),
             pes: vec![PeState::new(); platform.n_pes()],
+            timeline,
+            pe_available: vec![true; platform.n_pes()],
+            t_ambient_c: platform.t_ambient,
             ready: VecDeque::new(),
             cluster_opp_idx,
             theta: vec![0.0; n_nodes],
@@ -321,6 +367,9 @@ impl<'a> Simulation<'a> {
             arrivals_done: false,
             report,
             sched_dirty: false,
+            phase_lats: Vec::new(),
+            phase_energy0_j: 0.0,
+            phase_peak_temp_c: 0.0,
         })
     }
 
@@ -368,7 +417,16 @@ impl<'a> Simulation<'a> {
     /// Run to completion and produce the report.
     pub fn run(mut self) -> SimReport {
         let wall0 = Instant::now();
-        // Prime the event queue: first arrival + first DTPM epoch.
+        // Prime the event queue: the scenario timeline first (so
+        // same-timestamp scenario events apply before task events — the
+        // queue's (time, sequence) order makes this deterministic), then
+        // the first arrival and the first DTPM epoch.
+        if !self.timeline.is_empty() {
+            self.begin_phase("baseline".to_string());
+            for (seq, ev) in self.timeline.iter().enumerate() {
+                self.events.push(ev.at_us, Event::Scenario { seq });
+            }
+        }
         self.schedule_next_arrival();
         self.events.push(self.cfg.dtpm.epoch_us, Event::DtpmEpoch);
 
@@ -384,6 +442,7 @@ impl<'a> Simulation<'a> {
                     self.on_task_finish(job, task, pe)
                 }
                 Event::DtpmEpoch => self.on_dtpm_epoch(),
+                Event::Scenario { seq } => self.on_scenario(seq),
             }
             // Decision epoch: a task finished or a job arrived.
             if self.sched_dirty && !self.ready.is_empty() {
@@ -494,6 +553,10 @@ impl<'a> Simulation<'a> {
             job.done = true;
             let latency = self.now - job.arrival_us;
             self.completed += 1;
+            if !self.timeline.is_empty() {
+                // Scenario run: attribute the job to the current phase.
+                self.phase_lats.push(latency);
+            }
             if job_id >= self.cfg.warmup_jobs {
                 self.report.job_latencies_us.push(latency);
                 self.report.per_app_latencies_us[app_idx].push(latency);
@@ -579,6 +642,7 @@ impl<'a> Simulation<'a> {
                 avail_us: self.pes[pe.id].avail_us(self.now),
                 queue_len: self.pes[pe.id].queue.len()
                     + self.pes[pe.id].running.is_some() as usize,
+                available: self.pe_available[pe.id],
             })
             .collect();
 
@@ -629,6 +693,11 @@ impl<'a> Simulation<'a> {
         if a.pe >= self.pes.len() || a.job >= self.jobs.len() {
             return false;
         }
+        if !self.pe_available[a.pe] {
+            // Failed/hotplugged-out PE (scenario engine): reject; the
+            // task stays ready for the next decision epoch.
+            return false;
+        }
         let app_idx = self.jobs[a.job].app;
         let est = self.exec_base_us(app_idx, a.task, a.pe);
         if !est.is_finite() {
@@ -644,6 +713,166 @@ impl<'a> Simulation<'a> {
         self.pes[a.pe].pending_est_us += est;
         self.try_start_next(a.pe);
         true
+    }
+
+    // -------------------------------------------------------------------
+    // Scenario engine
+    // -------------------------------------------------------------------
+
+    /// Execute one scenario timeline entry.
+    fn on_scenario(&mut self, seq: usize) {
+        let ev = self.timeline[seq].clone();
+        self.report.scenario_events += 1;
+        if let Some(label) = ev.phase_label {
+            self.begin_phase(label);
+        }
+        match ev.action {
+            Action::SetRate { per_ms } => self.jobgen.set_rate(per_ms),
+            // compile() expands ramps to steps; handle a raw ramp from a
+            // hand-built timeline as a step to its target.
+            Action::RampRate { to_per_ms, .. } => {
+                self.jobgen.set_rate(to_per_ms)
+            }
+            Action::SetAppWeights { weights } => {
+                self.jobgen.set_weights(&weights)
+            }
+            Action::SetAmbient { t_c } => self.set_ambient(t_c),
+            Action::PeFail { pe } => self.pe_fail(pe),
+            Action::PeRestore { pe } => {
+                self.pe_available[pe] = true;
+                self.sched_dirty = true;
+            }
+            Action::SetPowerCap { watts } => match watts {
+                // Keep the cap's backoff state across budget changes.
+                Some(w) => match self.power_cap.as_mut() {
+                    Some(cap) => cap.cap_w = w,
+                    None => self.power_cap = Some(PowerCap::new(w)),
+                },
+                None => self.power_cap = None,
+            },
+            Action::SetScheduler { name } => self.swap_scheduler(&name),
+        }
+    }
+
+    /// PE fault: the in-flight task (if any) runs to completion, the
+    /// committed-but-unstarted queue is handed back to the scheduler,
+    /// and the PE accepts no work until restored.
+    fn pe_fail(&mut self, pe_id: usize) {
+        if !self.pe_available[pe_id] {
+            return;
+        }
+        self.pe_available[pe_id] = false;
+        let queued: Vec<(usize, usize)> =
+            self.pes[pe_id].queue.drain(..).collect();
+        self.pes[pe_id].pending_est_us = 0.0;
+        for (job_id, task) in queued {
+            let job = &mut self.jobs[job_id];
+            job.assigned_pe[task] = usize::MAX;
+            let app = job.app;
+            let arrival_us = job.arrival_us;
+            self.ready.push_back(ReadyTask {
+                job: job_id,
+                task,
+                app,
+                arrival_us,
+                ready_us: self.now,
+            });
+        }
+        self.sched_dirty = true;
+    }
+
+    /// Ambient temperature step: absolute temperatures shift; the
+    /// above-ambient thermal state is preserved and relaxes toward the
+    /// new environment through the RC dynamics.
+    fn set_ambient(&mut self, t_c: f64) {
+        self.t_ambient_c = t_c;
+        self.rc.t_ambient = t_c;
+        if let Some(art) = self.dtpm_xla.as_mut() {
+            // Re-fold the ambient offset into the artifact's leakage
+            // coefficients (k1_eff depends on ambient).
+            let (k1, k2): (Vec<f64>, Vec<f64>) = self
+                .platform
+                .pes
+                .iter()
+                .map(|pe| {
+                    let c = &self.platform.classes[pe.class];
+                    (
+                        self.rc.leak_k1_effective(c.leak_k1, c.leak_k2),
+                        c.leak_k2,
+                    )
+                })
+                .unzip();
+            if let Err(e) = art.set_model(&self.rc, &k1, &k2) {
+                eprintln!(
+                    "scenario ambient step: artifact refresh failed \
+                     ({e}); native fallback"
+                );
+                self.dtpm_xla = None;
+            }
+        }
+    }
+
+    /// Scheduler hot-swap through the registry.  Names are dry-run at
+    /// build time, so failures here only happen on registry state that
+    /// changed mid-run (e.g. artifacts disappearing); the old scheduler
+    /// is kept in that case.
+    fn swap_scheduler(&mut self, name: &str) {
+        let build = SchedBuild {
+            platform: self.platform,
+            apps: self.apps,
+            seed: self.cfg.seed,
+            artifacts_dir: self.cfg.artifacts_dir.clone(),
+        };
+        match crate::sched::create(name, &build) {
+            Ok(s) => {
+                self.scheduler = s;
+                if !self.report.scheduler.ends_with(name) {
+                    self.report.scheduler.push_str(&format!("+{name}"));
+                }
+                self.sched_dirty = true;
+            }
+            Err(e) => eprintln!(
+                "scenario scheduler swap to '{name}' failed: {e}"
+            ),
+        }
+    }
+
+    /// Close the current stats phase (if any) and open a new one.  A
+    /// phase that would close at zero length (e.g. "baseline" displaced
+    /// by a t=0 timeline event) is taken over instead of recorded empty.
+    fn begin_phase(&mut self, label: String) {
+        if let Some(last) = self.report.phases.last_mut() {
+            if last.start_us == self.now {
+                last.label = label;
+                return;
+            }
+        }
+        self.close_phase();
+        self.phase_lats.clear();
+        self.phase_energy0_j = self.energy.total_energy_j();
+        self.phase_peak_temp_c = 0.0;
+        self.report.phases.push(PhaseStats {
+            label,
+            start_us: self.now,
+            ..Default::default()
+        });
+    }
+
+    /// Seal the open phase's accumulators into its [`PhaseStats`].
+    /// Energy integrates at DTPM-epoch granularity, so an epoch spanning
+    /// a boundary is attributed to the phase it *ends* in.
+    fn close_phase(&mut self) {
+        let Some(p) = self.report.phases.last_mut() else { return };
+        p.end_us = self.now;
+        p.jobs_completed = self.phase_lats.len();
+        let s = crate::util::Summary::of(&self.phase_lats);
+        p.avg_latency_us = s.mean;
+        p.p95_latency_us = s.p95;
+        p.energy_j = self.energy.total_energy_j() - self.phase_energy0_j;
+        let dur_s = (p.end_us - p.start_us).max(0.0) * 1e-6;
+        p.avg_power_w =
+            if dur_s > 0.0 { p.energy_j / dur_s } else { 0.0 };
+        p.peak_temp_c = self.phase_peak_temp_c;
     }
 
     // -------------------------------------------------------------------
@@ -683,7 +912,7 @@ impl<'a> Simulation<'a> {
             .rc
             .t_pe(&self.theta)
             .iter()
-            .map(|t| t + self.platform.t_ambient)
+            .map(|t| t + self.t_ambient_c)
             .collect();
 
         let powers: Vec<f64>;
@@ -756,9 +985,14 @@ impl<'a> Simulation<'a> {
             .iter()
             .copied()
             .fold(0.0, f64::max)
-            + self.platform.t_ambient;
+            + self.t_ambient_c;
         if t_max_abs > self.report.peak_temp_c {
             self.report.peak_temp_c = t_max_abs;
+        }
+        if !self.timeline.is_empty()
+            && t_max_abs > self.phase_peak_temp_c
+        {
+            self.phase_peak_temp_c = t_max_abs;
         }
 
         // 4. Governor + DTPM policies pick OPPs for the next epoch.
@@ -819,7 +1053,7 @@ impl<'a> Simulation<'a> {
                 temps_c: self
                     .theta
                     .iter()
-                    .map(|t| t + self.platform.t_ambient)
+                    .map(|t| t + self.t_ambient_c)
                     .collect(),
                 power_w: p_total_w,
                 cluster_mhz: (0..self.platform.clusters.len())
@@ -905,7 +1139,7 @@ impl<'a> Simulation<'a> {
             .iter()
             .map(|row| {
                 row.iter().copied().fold(0.0, f64::max)
-                    + self.platform.t_ambient
+                    + self.t_ambient_c
             })
             .collect();
         let k = expl.choose(&out.p_sum, &t_peak_next, &feasible);
@@ -923,6 +1157,8 @@ impl<'a> Simulation<'a> {
     }
 
     fn finalize(mut self, wall0: Instant) -> SimReport {
+        // Seal the last scenario phase at the final simulation time.
+        self.close_phase();
         self.report.injected_jobs = self.injected;
         self.report.completed_jobs = self.completed;
         self.report.sim_time_us = self.now;
@@ -977,6 +1213,11 @@ impl SchedContext for CtxView<'_, '_> {
         self.snapshots
     }
     fn exec_us(&self, rt: &ReadyTask, pe: usize) -> Option<f64> {
+        // Out-of-range probes (instance tables can carry arbitrary ids)
+        // and failed/hotplugged-out PEs support nothing.
+        if !self.sim.pe_available.get(pe).copied().unwrap_or(false) {
+            return None;
+        }
         let us = self.sim.exec_base_us(rt.app, rt.task, pe);
         us.is_finite().then_some(us)
     }
@@ -1178,6 +1419,165 @@ mod tests {
             .iter()
             .any(|tr| tr.cluster_mhz[0] > 200.0);
         assert!(raised);
+    }
+
+    #[test]
+    fn scenario_rate_step_shifts_per_phase_throughput() {
+        use crate::scenario::Scenario;
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 1.0, 300);
+        cfg.scenario = Some(
+            Scenario::new("step", "")
+                .event(50_000.0, Action::SetRate { per_ms: 8.0 }),
+        );
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 300);
+        assert_eq!(r.scenario, "step");
+        assert_eq!(r.phases.len(), 2, "{:?}", r.phases);
+        let rate = |ph: &crate::stats::PhaseStats| {
+            ph.jobs_completed as f64 / (ph.duration_us() / 1000.0)
+        };
+        assert!(r.phases.iter().all(|ph| ph.jobs_completed > 0));
+        assert!(
+            rate(&r.phases[1]) > 3.0 * rate(&r.phases[0]),
+            "phase rates: {} vs {}",
+            rate(&r.phases[0]),
+            rate(&r.phases[1])
+        );
+    }
+
+    #[test]
+    fn scenario_pe_failure_requeues_and_completes() {
+        use crate::scenario::Scenario;
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 2.0, 300);
+        cfg.capture_gantt = true;
+        cfg.gantt_limit = usize::MAX >> 1;
+        let mut sc = Scenario::new("fft-out", "");
+        for pe in 10..14 {
+            sc = sc.event(30_000.0, Action::PeFail { pe });
+        }
+        for pe in 10..14 {
+            sc = sc.event(90_000.0, Action::PeRestore { pe });
+        }
+        cfg.scenario = Some(sc);
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        // Nothing is lost to the fault: every queued task was re-queued
+        // and re-placed on the surviving PEs.
+        assert_eq!(r.completed_jobs, 300);
+        // No execution may *start* on a failed PE inside the outage.
+        // Small slack past the fault time: a task dispatched just before
+        // the fault counts as in-flight even while its input data is
+        // still crossing the NoC.
+        for e in &r.gantt {
+            if (10..14).contains(&e.pe) {
+                assert!(
+                    e.start_us < 30_010.0 || e.start_us >= 90_000.0,
+                    "task started on failed pe {} at {}",
+                    e.pe,
+                    e.start_us
+                );
+            }
+        }
+        // The accelerators are used again after restore.
+        assert!(
+            r.gantt
+                .iter()
+                .any(|e| (10..14).contains(&e.pe)
+                    && e.start_us >= 90_000.0),
+            "FFT engines never used after hotplug"
+        );
+        // Per-phase latency shows the fault: FFT work fell back to the
+        // cores, so the outage phase is visibly slower.
+        assert_eq!(r.phases.len(), 3);
+        assert!(
+            r.phases[1].avg_latency_us > 1.5 * r.phases[0].avg_latency_us,
+            "outage {} vs baseline {}",
+            r.phases[1].avg_latency_us,
+            r.phases[0].avg_latency_us
+        );
+    }
+
+    #[test]
+    fn scenario_runs_are_deterministic() {
+        use crate::scenario::presets;
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 2.0, 200);
+        cfg.scenario = Some(presets::pe_failure());
+        let a = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        let b = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(a.job_latencies_us, b.job_latencies_us);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.scenario_events, b.scenario_events);
+        // The fault events (t = 50 ms) fire before the 200-job run
+        // drains; the restores (t = 150 ms) may fall past the end.
+        assert!(a.scenario_events >= 4);
+    }
+
+    #[test]
+    fn scenario_scheduler_hot_swap_completes() {
+        use crate::scenario::Scenario;
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 2.0, 200);
+        cfg.scenario = Some(
+            Scenario::new("swap", "")
+                .event(
+                    30_000.0,
+                    Action::SetScheduler { name: "met-lb".into() },
+                )
+                .event(
+                    60_000.0,
+                    Action::SetScheduler { name: "etf".into() },
+                ),
+        );
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 200);
+        assert!(r.scheduler.contains("met-lb"), "{}", r.scheduler);
+        assert_eq!(r.phases.len(), 3);
+    }
+
+    #[test]
+    fn scenario_ambient_step_shifts_absolute_temperature() {
+        use crate::scenario::Scenario;
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 1.0, 120);
+        cfg.scenario = Some(
+            Scenario::new("hot-room", "")
+                .event(20_000.0, Action::SetAmbient { t_c: 60.0 }),
+        );
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 120);
+        // Absolute temperatures ride on the new ambient.
+        assert!(r.peak_temp_c > 60.0, "peak {}", r.peak_temp_c);
+        assert_eq!(r.phases.len(), 2);
+        assert!(
+            r.phases[1].peak_temp_c > r.phases[0].peak_temp_c + 20.0,
+            "phases: {:?}",
+            r.phases
+        );
+    }
+
+    #[test]
+    fn scenario_build_rejects_unknown_pe_and_scheduler() {
+        use crate::scenario::Scenario;
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 1.0, 50);
+        cfg.scenario = Some(
+            Scenario::new("bad-pe", "")
+                .event(0.0, Action::PeFail { pe: 99 }),
+        );
+        assert!(Simulation::build(&p, &apps, &cfg).is_err());
+        cfg.scenario = Some(Scenario::new("bad-sched", "").event(
+            0.0,
+            Action::SetScheduler { name: "warp-speed".into() },
+        ));
+        assert!(Simulation::build(&p, &apps, &cfg).is_err());
     }
 
     #[test]

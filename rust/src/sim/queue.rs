@@ -16,6 +16,8 @@ pub enum Event {
     TaskFinish { job: usize, task: usize, pe: usize },
     /// DTPM/DVFS decision epoch boundary.
     DtpmEpoch,
+    /// Scenario timeline entry `seq` fires (see [`crate::scenario`]).
+    Scenario { seq: usize },
 }
 
 #[derive(Debug)]
@@ -118,6 +120,42 @@ mod tests {
         })
         .collect();
         assert_eq!(apps, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn same_time_mixed_kinds_pop_in_insertion_order() {
+        // Determinism is load-bearing: scenario events share timestamps
+        // with task events, and the (time, sequence) total order must
+        // keep runs exactly reproducible.  Pin the tie-break across all
+        // event kinds at one timestamp, twice, in different insertion
+        // orders.
+        let batch = [
+            Event::Scenario { seq: 0 },
+            Event::JobArrival { app: 1 },
+            Event::TaskFinish { job: 2, task: 3, pe: 4 },
+            Event::DtpmEpoch,
+            Event::Scenario { seq: 1 },
+        ];
+        let mut q = EventQueue::new();
+        q.push(9.0, Event::DtpmEpoch); // later event must not interfere
+        for ev in batch {
+            q.push(4.0, ev);
+        }
+        let popped: Vec<Event> =
+            std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(&popped[..batch.len()], &batch);
+        assert_eq!(popped[batch.len()], Event::DtpmEpoch);
+
+        // Reversed insertion order pops reversed: order is insertion,
+        // not kind priority.
+        let mut q = EventQueue::new();
+        for ev in batch.iter().rev() {
+            q.push(4.0, *ev);
+        }
+        let popped: Vec<Event> =
+            std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        let want: Vec<Event> = batch.iter().rev().copied().collect();
+        assert_eq!(popped, want);
     }
 
     #[test]

@@ -35,12 +35,44 @@ pub struct EpochTrace {
     pub cluster_mhz: Vec<f64>,
 }
 
+/// Per-phase statistics of a scenario run.  A phase spans the interval
+/// between two scenario timeline steps (the first phase, "baseline",
+/// starts at t=0); jobs are attributed to the phase they *complete* in.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStats {
+    /// Label of the scenario step that opened the phase.
+    pub label: String,
+    pub start_us: f64,
+    pub end_us: f64,
+    /// Jobs completed inside the phase (warmup included — phases are the
+    /// measurement structure of a scenario run).
+    pub jobs_completed: usize,
+    pub avg_latency_us: f64,
+    pub p95_latency_us: f64,
+    /// Energy dissipated during the phase (J).
+    pub energy_j: f64,
+    /// Mean SoC power over the phase (W).
+    pub avg_power_w: f64,
+    /// Hottest absolute node temperature observed in the phase (°C).
+    pub peak_temp_c: f64,
+}
+
+impl PhaseStats {
+    pub fn duration_us(&self) -> f64 {
+        (self.end_us - self.start_us).max(0.0)
+    }
+}
+
 /// Structured result of one simulation run.
 #[derive(Debug, Clone, Default)]
 pub struct SimReport {
     pub scheduler: String,
     pub injection_rate_per_ms: f64,
     pub seed: u64,
+    /// Scenario name (empty when the run was static).
+    pub scenario: String,
+    /// Scenario timeline entries executed (ramp sub-steps included).
+    pub scenario_events: u64,
 
     /// Jobs injected / completed (all, including warmup).
     pub injected_jobs: usize,
@@ -73,6 +105,8 @@ pub struct SimReport {
     pub scheduler_report: Vec<String>,
     pub gantt: Vec<GanttEntry>,
     pub trace: Vec<EpochTrace>,
+    /// Per-phase breakdown (scenario runs only; empty otherwise).
+    pub phases: Vec<PhaseStats>,
 }
 
 impl SimReport {
@@ -153,6 +187,30 @@ impl SimReport {
         ));
         for line in &self.scheduler_report {
             s.push_str(&format!("  {line}\n"));
+        }
+        if !self.phases.is_empty() {
+            s.push_str(&format!(
+                "  scenario '{}': {} events, {} phases\n",
+                self.scenario,
+                self.scenario_events,
+                self.phases.len()
+            ));
+            for p in &self.phases {
+                s.push_str(&format!(
+                    "    [{:>9.1}..{:>9.1} ms] {:<24} jobs={:<5} \
+                     avg={:>8.1} us  p95={:>8.1} us  {:>7.3} J  \
+                     {:>5.2} W  peak={:>5.1} C\n",
+                    p.start_us / 1000.0,
+                    p.end_us / 1000.0,
+                    p.label,
+                    p.jobs_completed,
+                    p.avg_latency_us,
+                    p.p95_latency_us,
+                    p.energy_j,
+                    p.avg_power_w,
+                    p.peak_temp_c
+                ));
+            }
         }
         s
     }
@@ -259,6 +317,45 @@ impl SimReport {
                         .collect(),
                 ),
             );
+        if !self.phases.is_empty() {
+            j.set("scenario", Json::Str(self.scenario.clone()));
+            j.set(
+                "phases",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            let mut jp = Json::obj();
+                            jp.set("label", Json::Str(p.label.clone()))
+                                .set("start_us", Json::Num(p.start_us))
+                                .set("end_us", Json::Num(p.end_us))
+                                .set(
+                                    "jobs_completed",
+                                    Json::Num(p.jobs_completed as f64),
+                                )
+                                .set(
+                                    "avg_latency_us",
+                                    Json::Num(p.avg_latency_us),
+                                )
+                                .set(
+                                    "p95_latency_us",
+                                    Json::Num(p.p95_latency_us),
+                                )
+                                .set("energy_j", Json::Num(p.energy_j))
+                                .set(
+                                    "avg_power_w",
+                                    Json::Num(p.avg_power_w),
+                                )
+                                .set(
+                                    "peak_temp_c",
+                                    Json::Num(p.peak_temp_c),
+                                );
+                            jp
+                        })
+                        .collect(),
+                ),
+            );
+        }
         j
     }
 }
@@ -328,6 +425,53 @@ mod tests {
         assert_eq!(
             j.get("injection_rate_per_ms").unwrap().as_f64(),
             Some(5.0)
+        );
+    }
+
+    #[test]
+    fn phase_stats_render_in_summary_and_json() {
+        let mut r = demo_report();
+        r.scenario = "pe-failure".into();
+        r.scenario_events = 8;
+        r.phases = vec![
+            PhaseStats {
+                label: "baseline".into(),
+                start_us: 0.0,
+                end_us: 50_000.0,
+                jobs_completed: 40,
+                avg_latency_us: 100.0,
+                p95_latency_us: 150.0,
+                energy_j: 0.2,
+                avg_power_w: 4.0,
+                peak_temp_c: 55.0,
+            },
+            PhaseStats {
+                label: "pe10-fail".into(),
+                start_us: 50_000.0,
+                end_us: 150_000.0,
+                jobs_completed: 60,
+                avg_latency_us: 400.0,
+                p95_latency_us: 600.0,
+                energy_j: 0.5,
+                avg_power_w: 5.0,
+                peak_temp_c: 60.0,
+            },
+        ];
+        assert_eq!(r.phases[1].duration_us(), 100_000.0);
+        let s = r.summary();
+        assert!(s.contains("pe-failure"));
+        assert!(s.contains("baseline"));
+        assert!(s.contains("pe10-fail"));
+        let j = r.to_json();
+        let phases = j.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(
+            phases[1].get("label").unwrap().as_str(),
+            Some("pe10-fail")
+        );
+        assert_eq!(
+            phases[1].get("avg_latency_us").unwrap().as_f64(),
+            Some(400.0)
         );
     }
 

@@ -1,0 +1,219 @@
+//! Scenario-engine integration tests: time-scripted runtime events
+//! executing end-to-end through the simulation kernel, with per-phase
+//! statistics that expose each timeline step's effect.
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::scenario::{presets, Action, Scenario};
+use ds3r::sim::Simulation;
+
+fn cfg(rate: f64, jobs: usize) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.scheduler = "etf".into();
+    c.injection_rate_per_ms = rate;
+    c.max_jobs = jobs;
+    c.warmup_jobs = jobs / 10;
+    c
+}
+
+/// The acceptance-criterion run: the `pe-failure` preset executes
+/// end-to-end and the report's per-phase stats differ across phases.
+#[test]
+fn pe_failure_preset_end_to_end_with_distinct_phases() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg(2.0, 500); // arrivals span ~250 ms
+    c.scenario = Some(presets::pe_failure());
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+
+    // Nothing is lost to the fault.
+    assert_eq!(r.completed_jobs, 500);
+    assert_eq!(r.scenario, "pe-failure");
+
+    // Three phases: baseline, FFT outage (50-150 ms), after hotplug.
+    assert_eq!(r.phases.len(), 3, "{:?}", r.phases);
+    let (base, outage, restored) =
+        (&r.phases[0], &r.phases[1], &r.phases[2]);
+    assert!(base.label.contains("baseline"));
+    assert!(outage.label.contains("pe10-fail"));
+    assert!(restored.label.contains("pe10-restore"));
+    for ph in &r.phases {
+        assert!(ph.jobs_completed > 0, "empty phase {:?}", ph);
+        assert!(ph.end_us > ph.start_us);
+        assert!(ph.energy_j > 0.0);
+    }
+
+    // The outage visibly hurts: IFFTs fall back from the 16 µs FFT
+    // engines to 118 µs A15 cores, so per-phase latency jumps, then
+    // recovers after the hotplug.
+    assert!(
+        outage.avg_latency_us > 1.5 * base.avg_latency_us,
+        "outage {} vs baseline {}",
+        outage.avg_latency_us,
+        base.avg_latency_us
+    );
+    assert!(
+        restored.avg_latency_us < outage.avg_latency_us,
+        "restored {} vs outage {}",
+        restored.avg_latency_us,
+        outage.avg_latency_us
+    );
+}
+
+#[test]
+fn scenario_run_is_deterministic_and_seed_sensitive() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams { symbols: 6 })];
+    let mut c = cfg(2.0, 200);
+    c.scenario = Some(presets::bursty_wifi());
+    let a = Simulation::build(&p, &apps, &c).unwrap().run();
+    let b = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_eq!(a.job_latencies_us, b.job_latencies_us);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.scenario_events, b.scenario_events);
+    c.seed = 777;
+    let d = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_ne!(a.job_latencies_us, d.job_latencies_us);
+}
+
+#[test]
+fn bursty_wifi_ramp_raises_mid_run_pressure() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg(1.0, 600);
+    c.scenario = Some(presets::bursty_wifi());
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_eq!(r.completed_jobs, 600);
+    // Ramp sub-steps execute on top of the listed events.
+    assert!(r.scenario_events > 4, "{}", r.scenario_events);
+    // The burst phase (opened by the first ramp) completes jobs at a
+    // much higher rate than the quiet baseline.  The t=0 set-rate event
+    // takes over the baseline phase, so match phases by label (the
+    // trailing events may fall past the end of the 600-job run).
+    assert!(r.phases.len() >= 2, "{:?}", r.phases);
+    let per_ms = |ph: &ds3r::stats::PhaseStats| {
+        ph.jobs_completed as f64 / (ph.duration_us() / 1000.0)
+    };
+    let quiet = r
+        .phases
+        .iter()
+        .find(|ph| ph.label.contains("rate=1"))
+        .expect("quiet phase");
+    let burst = r
+        .phases
+        .iter()
+        .find(|ph| ph.label.contains("ramp->8"))
+        .expect("burst phase");
+    assert!(
+        per_ms(burst) > 2.0 * per_ms(quiet),
+        "burst {} vs quiet {} jobs/ms",
+        per_ms(burst),
+        per_ms(quiet)
+    );
+}
+
+#[test]
+fn budget_throttle_scenario_engages_power_cap() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg(8.0, 1500); // hot enough to exceed 3.5 W
+    c.scenario = Some(presets::budget_throttle());
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_eq!(r.completed_jobs, 1500);
+    assert!(r.phases.len() >= 3, "{:?}", r.phases);
+    // The tightened-budget phase draws less average power than the
+    // uncapped baseline phase.
+    let base = &r.phases[0];
+    let tight = r
+        .phases
+        .iter()
+        .find(|ph| ph.label.contains("cap=3.5"))
+        .expect("tight-budget phase present");
+    assert!(
+        tight.avg_power_w < base.avg_power_w,
+        "capped {} W vs baseline {} W",
+        tight.avg_power_w,
+        base.avg_power_w
+    );
+}
+
+#[test]
+fn scheduler_shootout_swaps_policies_in_one_run() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg(2.0, 800); // arrivals span ~400 ms: all swaps fire
+    c.scenario = Some(presets::scheduler_shootout());
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_eq!(r.completed_jobs, 800);
+    assert_eq!(r.phases.len(), 4);
+    for needle in ["heft", "met-lb", "etf"] {
+        assert!(
+            r.scheduler.contains(needle),
+            "'{}' missing swap to {needle}",
+            r.scheduler
+        );
+    }
+}
+
+#[test]
+fn thermal_soak_scenario_tracks_ambient() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg(2.0, 800);
+    c.scenario = Some(presets::thermal_soak());
+    c.capture_traces = true;
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_eq!(r.completed_jobs, 800);
+    // Phase peak temperatures follow the 25 -> 45 -> 60 -> 25 staircase.
+    assert_eq!(r.phases.len(), 4);
+    assert!(r.phases[1].peak_temp_c > r.phases[0].peak_temp_c + 10.0);
+    assert!(r.phases[2].peak_temp_c > r.phases[1].peak_temp_c + 5.0);
+    assert!(r.phases[3].peak_temp_c < r.phases[2].peak_temp_c);
+    assert!(r.peak_temp_c >= 60.0, "peak {}", r.peak_temp_c);
+}
+
+#[test]
+fn scenario_json_file_drives_a_run() {
+    // The full file path: write a scenario JSON, load it through the
+    // config layer, run it.
+    let dir = std::env::temp_dir().join("ds3r-scenario-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("burst.json");
+    // 200 jobs: ~20 arrive before the burst, ~120 during it, and the
+    // rest after the rate drops back — every event fires mid-stream.
+    let sc = Scenario::new("file-burst", "from disk")
+        .event(20_000.0, Action::SetRate { per_ms: 6.0 })
+        .event(40_000.0, Action::SetRate { per_ms: 1.0 });
+    sc.save(&path).unwrap();
+
+    let j = ds3r::util::json::Json::parse(&format!(
+        r#"{{"max_jobs": 200, "warmup_jobs": 10,
+            "scenario": "{}"}}"#,
+        path.display()
+    ))
+    .unwrap();
+    let c = SimConfig::from_json(&j).unwrap();
+    assert_eq!(c.scenario.as_ref().unwrap().name, "file-burst");
+
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams { symbols: 4 })];
+    let r = Simulation::build(&p, &apps, &c).unwrap().run();
+    assert_eq!(r.completed_jobs, 200);
+    assert_eq!(r.scenario, "file-burst");
+    assert_eq!(r.phases.len(), 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn static_runs_are_untouched_by_the_scenario_engine() {
+    // No scenario => no phases, no scenario events, and identical
+    // results to the seed behaviour (guard against accidental coupling).
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams { symbols: 4 })];
+    let r = Simulation::build(&p, &apps, &cfg(2.0, 100)).unwrap().run();
+    assert_eq!(r.completed_jobs, 100);
+    assert!(r.phases.is_empty());
+    assert_eq!(r.scenario_events, 0);
+    assert!(r.scenario.is_empty());
+}
