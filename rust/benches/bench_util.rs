@@ -2,7 +2,56 @@
 //! offline build has no criterion).  Reports median / mean / min over
 //! repeated runs with a measured-overhead warmup.
 
+// Included via `mod bench_util;` by several benches; not every bench
+// uses every helper.
+#![allow(dead_code)]
+
 use std::time::Instant;
+
+/// Wall-clock statistics of a repeated whole-run measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct RunStats {
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub runs: usize,
+}
+
+/// Median-of-N measurement for long-running closures (whole simulation
+/// runs): `warmup` unmeasured runs, then `runs` measured ones.  Returns
+/// the last run's output plus the wall-clock stats — single-shot
+/// timing of a multi-second simulation is too noisy to gate CI on.
+pub fn bench_median<T, F: FnMut() -> T>(
+    name: &str,
+    warmup: usize,
+    runs: usize,
+    mut f: F,
+) -> (T, RunStats) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let runs = runs.max(1);
+    let mut secs = Vec::with_capacity(runs);
+    let mut last = None;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        let out = f();
+        secs.push(t0.elapsed().as_secs_f64());
+        last = Some(out);
+    }
+    secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = RunStats {
+        median_s: secs[secs.len() / 2],
+        min_s: secs[0],
+        max_s: secs[secs.len() - 1],
+        runs,
+    };
+    println!(
+        "{name:<48} {:>9.3} s median   (min {:.3}, max {:.3}, n={})",
+        stats.median_s, stats.min_s, stats.max_s, stats.runs
+    );
+    (last.unwrap(), stats)
+}
 
 /// Time `f` for `iters` iterations, returning ns/iter statistics.
 pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {

@@ -1,13 +1,24 @@
 //! Whole-stack hot-path benchmarks — the §Perf numbers in
-//! EXPERIMENTS.md come from this harness.
+//! EXPERIMENTS.md and the recorded trajectory in `BENCH_hotpath.json`
+//! come from this harness.
 //!
 //! * simulation kernel: events/second on a saturating Figure-3 workload
+//!   (warmup + median-of-N, written to `BENCH_hotpath.json`)
 //! * scheduler decision cost per epoch for every built-in
 //! * event-queue push/pop throughput
-//! * thermal RC step (native) and the DTPM epoch
+//! * thermal RC step (native) and the k-epoch propagator
 //! * PJRT artifact call overhead (when artifacts are present)
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! Environment knobs (the CI smoke job uses all three):
+//! * `BENCH_SMOKE=1`    — reduced jobs/repeats for CI latency
+//! * `BENCH_OUT=path`   — where to write the JSON (default
+//!   `BENCH_hotpath.json` in the working directory, i.e. the repo root
+//!   under `cargo bench`)
+//! * `BENCH_BASELINE=path` — compare events/s per kernel against a
+//!   committed baseline JSON and **exit non-zero on a >20% regression**;
+//!   a missing baseline file records only.
 
 mod bench_util;
 
@@ -17,33 +28,64 @@ use ds3r::platform::Platform;
 use ds3r::sim::queue::{Event, EventQueue};
 use ds3r::sim::Simulation;
 use ds3r::thermal::RcModel;
+use ds3r::util::json::Json;
+
+/// One simulation-kernel measurement for the JSON record.
+struct KernelResult {
+    name: String,
+    events_per_s: f64,
+    events: u64,
+    median_s: f64,
+    sched_overhead_us: f64,
+}
 
 fn main() {
     let platform = Platform::table2_soc();
     let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let (jobs, runs, warmup) = if smoke { (400, 3, 1) } else { (2000, 5, 1) };
 
-    println!("=== L3 hot path: simulation kernel ===");
+    println!(
+        "=== L3 hot path: simulation kernel (median of {runs}, \
+         {jobs} jobs{}) ===",
+        if smoke { ", smoke mode" } else { "" }
+    );
+    let mut kernels: Vec<KernelResult> = Vec::new();
     for (sched, rate) in
         [("etf", 9.0), ("met", 9.0), ("ilp", 9.0), ("heft", 9.0)]
     {
         let mut cfg = SimConfig::default();
         cfg.scheduler = sched.into();
         cfg.injection_rate_per_ms = rate;
-        cfg.max_jobs = 2000;
-        cfg.warmup_jobs = 100;
+        cfg.max_jobs = jobs;
+        cfg.warmup_jobs = jobs / 20;
         cfg.max_sim_us = 30_000_000.0;
-        let (r, secs) = bench_util::bench_once(
-            &format!("2000 jobs @ {rate}/ms [{sched}]"),
+        let (r, st) = bench_util::bench_median(
+            &format!("{jobs} jobs @ {rate}/ms [{sched}]"),
+            warmup,
+            runs,
             || Simulation::build(&platform, &apps, &cfg).unwrap().run(),
         );
+        let events_per_s = r.events_processed as f64 / st.median_s;
         println!(
             "{:>48} {:>12.0} events/s  |  {:.2} us/sched-epoch  |  {} tasks\n",
             "",
-            r.events_processed as f64 / secs,
+            events_per_s,
             r.sched_overhead_us(),
             r.tasks_executed
         );
+        kernels.push(KernelResult {
+            name: sched.to_string(),
+            events_per_s,
+            events: r.events_processed,
+            median_s: st.median_s,
+            sched_overhead_us: r.sched_overhead_us(),
+        });
     }
+    write_bench_json(&kernels, smoke, jobs, runs);
+    check_baseline(&kernels);
 
     println!("=== scenario engine overhead guard ===");
     // Same workload twice: static vs a busy scenario timeline (an event
@@ -55,11 +97,11 @@ fn main() {
         let mut cfg = SimConfig::default();
         cfg.scheduler = "etf".into();
         cfg.injection_rate_per_ms = 9.0;
-        cfg.max_jobs = 2000;
-        cfg.warmup_jobs = 100;
+        cfg.max_jobs = jobs;
+        cfg.warmup_jobs = jobs / 20;
         cfg.max_sim_us = 30_000_000.0;
         let (r_static, s_static) = bench_util::bench_once(
-            "2000 jobs @ 9/ms, static",
+            &format!("{jobs} jobs @ 9/ms, static"),
             || Simulation::build(&platform, &apps, &cfg).unwrap().run(),
         );
         let mut churn = Scenario::new(
@@ -74,7 +116,7 @@ fn main() {
         }
         cfg.scenario = Some(churn);
         let (r_scen, s_scen) = bench_util::bench_once(
-            "2000 jobs @ 9/ms, 400-event scenario",
+            &format!("{jobs} jobs @ 9/ms, 400-event scenario"),
             || Simulation::build(&platform, &apps, &cfg).unwrap().run(),
         );
         assert_eq!(r_static.completed_jobs, r_scen.completed_jobs);
@@ -101,7 +143,7 @@ fn main() {
     });
 
     println!("\n=== thermal model ===");
-    let rc = RcModel::new(&platform, 10_000.0);
+    let mut rc = RcModel::new(&platform, 10_000.0);
     let theta = vec![10.0; rc.n];
     let p = vec![1.0; rc.n_pes];
     let mut out = vec![0.0; rc.n];
@@ -110,6 +152,19 @@ fn main() {
     });
     bench_util::bench("RC steady-state solve", 100_000, || {
         std::hint::black_box(rc.steady_state(&p));
+    });
+    // Cached k-epoch propagator vs iterating k steps.
+    rc.propagator(100); // build outside the timed loop
+    bench_util::bench("RC 100-epoch advance (cached propagator)", 200_000, || {
+        std::hint::black_box(rc.advance_const_power(&theta, &p, 100));
+    });
+    bench_util::bench("RC 100-epoch advance (iterated steps)", 20_000, || {
+        let mut th = theta.clone();
+        for _ in 0..100 {
+            rc.step_into(&th, &p, &mut out);
+            std::mem::swap(&mut th, &mut out);
+        }
+        std::hint::black_box(&th);
     });
 
     let dir = ds3r::runtime::default_artifacts_dir();
@@ -221,5 +276,116 @@ fn main() {
                 std::hint::black_box(etf.schedule(&ready, &ctx));
             },
         );
+    }
+}
+
+/// Record the simulation-kernel trajectory: `BENCH_hotpath.json` at the
+/// working directory (the repo root under `cargo bench`), or wherever
+/// `BENCH_OUT` points.
+fn write_bench_json(
+    kernels: &[KernelResult],
+    smoke: bool,
+    jobs: usize,
+    runs: usize,
+) {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut j = Json::obj();
+    j.set("schema", Json::Num(1.0))
+        .set("bench", Json::Str("perf_hotpath".into()))
+        .set("smoke", Json::Bool(smoke))
+        .set("jobs", Json::Num(jobs as f64))
+        .set("runs", Json::Num(runs as f64))
+        .set("unix_time_s", Json::Num(unix_s as f64))
+        .set(
+            "kernels",
+            Json::Arr(
+                kernels
+                    .iter()
+                    .map(|k| {
+                        let mut e = Json::obj();
+                        e.set("name", Json::Str(k.name.clone()))
+                            .set(
+                                "events_per_s",
+                                Json::Num(k.events_per_s),
+                            )
+                            .set("events", Json::Num(k.events as f64))
+                            .set("median_s", Json::Num(k.median_s))
+                            .set(
+                                "sched_overhead_us",
+                                Json::Num(k.sched_overhead_us),
+                            );
+                        e
+                    })
+                    .collect(),
+            ),
+        );
+    let path = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match std::fs::write(&path, j.to_string_pretty()) {
+        Ok(()) => println!("bench record written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// CI regression gate: compare events/s per kernel against a committed
+/// baseline JSON (same schema as the emitted record) and exit non-zero
+/// on a >20% regression.  A missing baseline records only.
+fn check_baseline(kernels: &[KernelResult]) {
+    let Ok(base_path) = std::env::var("BENCH_BASELINE") else {
+        return;
+    };
+    let base = match Json::parse_file(std::path::Path::new(&base_path)) {
+        Ok(j) => j,
+        Err(e) => {
+            println!(
+                "(no usable baseline at {base_path}: {e} — recording only)"
+            );
+            return;
+        }
+    };
+    let Some(base_kernels) = base.get("kernels").and_then(Json::as_arr)
+    else {
+        println!("(baseline {base_path} has no 'kernels' — skipping)");
+        return;
+    };
+    let mut failures = Vec::new();
+    for bk in base_kernels {
+        let Some(name) = bk.get("name").and_then(Json::as_str) else {
+            continue;
+        };
+        let Some(base_eps) =
+            bk.get("events_per_s").and_then(Json::as_f64)
+        else {
+            continue;
+        };
+        let Some(cur) = kernels.iter().find(|k| k.name == name) else {
+            failures.push(format!("kernel '{name}' missing from run"));
+            continue;
+        };
+        let ratio = cur.events_per_s / base_eps;
+        println!(
+            "baseline check [{name}]: {:.0} events/s vs baseline {:.0} \
+             ({:+.1}%)",
+            cur.events_per_s,
+            base_eps,
+            (ratio - 1.0) * 100.0
+        );
+        if ratio < 0.80 {
+            failures.push(format!(
+                "kernel '{name}' regressed {:.1}% (>{:.0}% allowed)",
+                (1.0 - ratio) * 100.0,
+                20.0
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        eprintln!("PERF REGRESSION vs {base_path}:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
     }
 }

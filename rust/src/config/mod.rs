@@ -117,6 +117,11 @@ pub struct SimConfig {
     /// Step the thermal model through the AOT PJRT artifact instead of
     /// the native rust path (bit-compatible to ~1e-4; see DESIGN.md).
     pub use_xla_thermal: bool,
+    /// Force power/thermal integration at every DTPM epoch instead of
+    /// the lazy batched lane.  This is the reference path the golden
+    /// tests compare against — lazy and eager must be bit-identical
+    /// (see `rust/tests/golden_traces.rs` and README §Performance).
+    pub eager_integration: bool,
     /// Scenario: a time-scripted timeline of runtime events (rate
     /// ramps, app-mix switches, ambient steps, PE fault/hotplug, power
     /// budgets, scheduler hot-swap) executed alongside task events.  In
@@ -146,6 +151,7 @@ impl Default for SimConfig {
             trace_file: None,
             artifacts_dir: None,
             use_xla_thermal: false,
+            eager_integration: false,
             scenario: None,
         }
     }
@@ -219,7 +225,11 @@ impl SimConfig {
             .set("capture_gantt", Json::Bool(self.capture_gantt))
             .set("capture_traces", Json::Bool(self.capture_traces))
             .set("max_sim_us", Json::Num(self.max_sim_us))
-            .set("use_xla_thermal", Json::Bool(self.use_xla_thermal));
+            .set("use_xla_thermal", Json::Bool(self.use_xla_thermal))
+            .set(
+                "eager_integration",
+                Json::Bool(self.eager_integration),
+            );
         if let Some(tf) = &self.trace_file {
             j.set(
                 "trace_file",
@@ -278,6 +288,11 @@ impl SimConfig {
         }
         if let Some(b) = j.get("use_xla_thermal").and_then(Json::as_bool) {
             c.use_xla_thermal = b;
+        }
+        if let Some(b) =
+            j.get("eager_integration").and_then(Json::as_bool)
+        {
+            c.eager_integration = b;
         }
         if let Some(tf) = j.get("trace_file").and_then(Json::as_str) {
             c.trace_file = Some(PathBuf::from(tf));
@@ -356,6 +371,7 @@ mod tests {
         c.dtpm.thermal_throttle = true;
         c.dtpm.power_cap_w = Some(6.5);
         c.use_xla_thermal = true;
+        c.eager_integration = true;
         c.trace_file = Some(PathBuf::from("/tmp/trace.json"));
         let j = c.to_json();
         let c2 = SimConfig::from_json(&j).unwrap();
@@ -374,6 +390,7 @@ mod tests {
         assert!(c2.dtpm.thermal_throttle);
         assert_eq!(c2.dtpm.power_cap_w, Some(6.5));
         assert!(c2.use_xla_thermal);
+        assert!(c2.eager_integration);
         assert_eq!(c2.trace_file, Some(PathBuf::from("/tmp/trace.json")));
     }
 

@@ -225,7 +225,10 @@ impl ThermalThrottle {
     }
 
     /// Apply the policy to a requested OPP index given the hottest PE
-    /// temperature (absolute °C).
+    /// temperature (absolute °C).  Runs per cluster per DTPM epoch;
+    /// enabling it forces eager power/thermal integration (the lazy
+    /// lane cannot defer epochs a policy observes).
+    #[inline]
     pub fn apply(&mut self, requested_idx: usize, t_max_c: f64) -> usize {
         if self.engaged {
             if t_max_c < self.trip_c - self.hysteresis_c {
@@ -263,6 +266,9 @@ impl PowerCap {
         PowerCap { cap_w, backoff: 0, violations: 0 }
     }
 
+    /// Runs per cluster per DTPM epoch; like the thermal throttle, an
+    /// active cap forces eager power/thermal integration.
+    #[inline]
     pub fn apply(&mut self, requested_idx: usize, last_power_w: f64) -> usize {
         if last_power_w > self.cap_w {
             self.backoff = (self.backoff + 1).min(16);

@@ -93,6 +93,21 @@ pub fn epoch_power(
     t_pe: &[f64],
 ) -> Vec<f64> {
     let mut out = Vec::with_capacity(platform.n_pes());
+    epoch_power_into(platform, cluster_opp, utilization, t_pe, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`epoch_power`] used on the simulation
+/// hot path (the lazy integration lane replays many epochs per flush).
+/// Identical arithmetic, writes into the reused `out` buffer.
+pub fn epoch_power_into(
+    platform: &Platform,
+    cluster_opp: &[Opp],
+    utilization: &[f64],
+    t_pe: &[f64],
+    out: &mut Vec<f64>,
+) {
+    out.clear();
     for pe in &platform.pes {
         let class = &platform.classes[pe.class];
         let opp = cluster_opp[pe.cluster];
@@ -100,7 +115,6 @@ pub fn epoch_power(
             + p_leakage(class, opp.volt, t_pe[pe.id]);
         out.push(p);
     }
-    out
 }
 
 #[cfg(test)]
@@ -148,6 +162,21 @@ mod tests {
         assert!((m.utilization(0) - 0.5).abs() < 1e-9);
         assert!((m.utilization(1) - 1.0).abs() < 1e-9);
         assert!((m.avg_power_w() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epoch_power_into_matches_allocating_path() {
+        let p = Platform::table2_soc();
+        let opps: Vec<_> =
+            p.clusters.iter().map(|c| p.classes[c.class].max_opp()).collect();
+        let util: Vec<f64> =
+            (0..p.n_pes()).map(|i| (i as f64 / 14.0).min(1.0)).collect();
+        let temps: Vec<f64> =
+            (0..p.n_pes()).map(|i| 30.0 + i as f64).collect();
+        let a = epoch_power(&p, &opps, &util, &temps);
+        let mut b = vec![999.0; 3]; // stale garbage must be cleared
+        epoch_power_into(&p, &opps, &util, &temps, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -40,6 +40,11 @@ use crate::thermal::RcModel;
 use crate::{Error, Result};
 use queue::{Event, EventQueue};
 
+/// Upper bound on the lazy lane's deferred-epoch backlog.  Flushing
+/// early is always valid (the replay is exact), so this only bounds
+/// memory — at 10 ms epochs it is ~10 s of simulated time per flush.
+const MAX_PENDING_EPOCHS: usize = 1024;
+
 /// Runtime state of one job instance.
 #[derive(Debug)]
 struct Job {
@@ -98,6 +103,35 @@ impl PeState {
     }
 }
 
+/// Recyclable per-task buffers of one job.  Completed jobs hand their
+/// buffers back to the simulation's free-list (`job_pool`) so steady
+/// arrivals stop allocating — the third leg of the hot-path overhaul.
+#[derive(Debug, Default)]
+struct JobBufs {
+    pred_remaining: Vec<u16>,
+    finish_us: Vec<f64>,
+    assigned_pe: Vec<usize>,
+}
+
+/// One closed DTPM epoch awaiting power/thermal integration.
+///
+/// The lazy integration lane accumulates these piecewise-constant
+/// segments (per-PE utilization and busy time, plus the OPP indices in
+/// force) and replays them — in order, with arithmetic identical to the
+/// eager path — at the next observation point: a DTPM epoch a policy or
+/// trace observes, a scenario phase boundary, an ambient or power-cap
+/// change, or finalize.  See [`Simulation::flush_thermal`].
+#[derive(Debug, Default)]
+struct EpochSeg {
+    dt_us: f64,
+    /// Per-PE utilization over the epoch, in [0, 1].
+    util: Vec<f64>,
+    /// Per-PE busy time over the epoch (µs).
+    busy: Vec<f64>,
+    /// OPP index per cluster in force during the epoch.
+    opp_idx: Vec<usize>,
+}
+
 /// A fully wired simulation, ready to [`run`](Simulation::run).
 pub struct Simulation<'a> {
     platform: &'a Platform,
@@ -140,6 +174,35 @@ pub struct Simulation<'a> {
     last_epoch_t: f64,
     last_epoch_power_w: f64,
     jitter_rng: Rng,
+
+    // --- hot-path caches & scratch (golden-trace-guarded overhaul) ---
+    /// Per-PE cluster index (flattened from the platform).
+    pe_cluster: Vec<usize>,
+    /// Per-PE class nominal frequency (MHz).
+    pe_nominal_mhz: Vec<f64>,
+    /// Current frequency (MHz) per cluster; mirrors `cluster_opp_idx`.
+    cluster_mhz: Vec<f64>,
+    /// Initial per-task predecessor counts per app (arrival template).
+    app_pred_template: Vec<Vec<u16>>,
+    /// Source-task indices per app.
+    app_sources: Vec<Vec<usize>>,
+    /// Free-list of per-task buffers reclaimed from completed jobs.
+    job_pool: Vec<JobBufs>,
+    /// Scratch buffers reused across scheduler invocations.
+    ready_scratch: Vec<ReadyTask>,
+    snap_scratch: Vec<PeSnapshot>,
+    assigned_scratch: Vec<(usize, usize)>,
+    kept_scratch: Vec<ReadyTask>,
+    /// Lazy power/thermal lane: closed-but-unintegrated DTPM epochs.
+    pending: Vec<EpochSeg>,
+    seg_pool: Vec<EpochSeg>,
+    util_scratch: Vec<f64>,
+    busy_scratch: Vec<f64>,
+    power_scratch: Vec<f64>,
+    t_pe_scratch: Vec<f64>,
+    opps_scratch: Vec<Opp>,
+    /// Hottest absolute temperature after the last integrated epoch.
+    last_t_max_abs: f64,
 
     // --- accounting ---
     injected: usize,
@@ -313,11 +376,38 @@ impl<'a> Simulation<'a> {
         };
 
         // Governors start at max frequency (Linux boot default).
-        let cluster_opp_idx = platform
+        let cluster_opp_idx: Vec<usize> = platform
             .clusters
             .iter()
             .map(|c| platform.classes[c.class].opps.len() - 1)
             .collect();
+
+        // Hot-path caches: flatten the PE→cluster→class→OPP indirection
+        // chains consulted on every `exec_us` probe, and precompute the
+        // per-app arrival templates so job injection stops allocating.
+        let pe_cluster: Vec<usize> =
+            platform.pes.iter().map(|pe| pe.cluster).collect();
+        let pe_nominal_mhz: Vec<f64> = platform
+            .pes
+            .iter()
+            .map(|pe| platform.classes[pe.class].nominal_mhz)
+            .collect();
+        let cluster_mhz: Vec<f64> = platform
+            .clusters
+            .iter()
+            .enumerate()
+            .map(|(c, cl)| {
+                platform.classes[cl.class].opps[cluster_opp_idx[c]].freq_mhz
+            })
+            .collect();
+        let app_pred_template: Vec<Vec<u16>> = apps
+            .iter()
+            .map(|a| {
+                a.tasks.iter().map(|t| t.preds.len() as u16).collect()
+            })
+            .collect();
+        let app_sources: Vec<Vec<usize>> =
+            apps.iter().map(|a| a.sources()).collect();
 
         let n_nodes = platform.floorplan.len();
         let mut report = SimReport::default();
@@ -347,14 +437,14 @@ impl<'a> Simulation<'a> {
             power_cap: cfg.dtpm.power_cap_w.map(PowerCap::new),
             dtpm_xla,
             now: 0.0,
-            events: EventQueue::new(),
+            events: EventQueue::with_capacity(1024),
             jobgen,
-            jobs: Vec::new(),
+            jobs: Vec::with_capacity(cfg.max_jobs.clamp(16, 65_536)),
             pes: vec![PeState::new(); platform.n_pes()],
             timeline,
             pe_available: vec![true; platform.n_pes()],
             t_ambient_c: platform.t_ambient,
-            ready: VecDeque::new(),
+            ready: VecDeque::with_capacity(256),
             cluster_opp_idx,
             theta: vec![0.0; n_nodes],
             theta_scratch: vec![0.0; n_nodes],
@@ -362,6 +452,24 @@ impl<'a> Simulation<'a> {
             last_epoch_t: 0.0,
             last_epoch_power_w: 0.0,
             jitter_rng: Rng::new(cfg.seed ^ 0x7177_E44E_0C5A_11AA),
+            pe_cluster,
+            pe_nominal_mhz,
+            cluster_mhz,
+            app_pred_template,
+            app_sources,
+            job_pool: Vec::new(),
+            ready_scratch: Vec::new(),
+            snap_scratch: Vec::with_capacity(platform.n_pes()),
+            assigned_scratch: Vec::new(),
+            kept_scratch: Vec::new(),
+            pending: Vec::new(),
+            seg_pool: Vec::new(),
+            util_scratch: Vec::with_capacity(platform.n_pes()),
+            busy_scratch: Vec::with_capacity(platform.n_pes()),
+            power_scratch: Vec::with_capacity(platform.n_pes()),
+            t_pe_scratch: Vec::with_capacity(platform.n_pes()),
+            opps_scratch: Vec::with_capacity(platform.clusters.len()),
+            last_t_max_abs: platform.t_ambient,
             injected: 0,
             completed: 0,
             arrivals_done: false,
@@ -373,23 +481,31 @@ impl<'a> Simulation<'a> {
         })
     }
 
-    /// Current OPP of the cluster a PE belongs to.
-    #[inline]
-    fn pe_opp(&self, pe: usize) -> Opp {
-        let cluster = self.platform.pes[pe].cluster;
-        let class = self.platform.clusters[cluster].class;
-        self.platform.classes[class].opps[self.cluster_opp_idx[cluster]]
-    }
-
     /// Execution time of (app, task) on `pe` at current DVFS (no jitter).
+    ///
+    /// This is the single hottest probe in the kernel (every scheduler
+    /// consults it O(ready × PEs) per decision epoch), so the
+    /// PE→cluster→class→OPP pointer chain is flattened into the
+    /// `pe_nominal_mhz` / `cluster_mhz` caches — the arithmetic (and
+    /// therefore every golden trace) is unchanged.
     #[inline]
     fn exec_base_us(&self, app: usize, task: usize, pe: usize) -> f64 {
         let base = self.exec_tables[app].us(task, pe);
         if !base.is_finite() {
             return f64::INFINITY;
         }
-        let class = self.platform.class_of(pe);
-        base * class.nominal_mhz / self.pe_opp(pe).freq_mhz
+        base * self.pe_nominal_mhz[pe]
+            / self.cluster_mhz[self.pe_cluster[pe]]
+    }
+
+    /// Re-derive the per-cluster frequency cache after OPP changes
+    /// (end of every DTPM epoch — the only writer of `cluster_opp_idx`).
+    fn refresh_cluster_mhz(&mut self) {
+        for (c, cl) in self.platform.clusters.iter().enumerate() {
+            self.cluster_mhz[c] = self.platform.classes[cl.class].opps
+                [self.cluster_opp_idx[c]]
+                .freq_mhz;
+        }
     }
 
     /// Earliest time the inputs of (job, task) can be at `pe`.
@@ -477,25 +593,30 @@ impl<'a> Simulation<'a> {
             "trace references app index {app_idx}, workload has {}",
             self.apps.len()
         );
-        let app = &self.apps[app_idx];
-        let n = app.len();
+        let n = self.apps[app_idx].len();
         let job_id = self.jobs.len();
-        let mut job = Job {
+        // Per-task state comes from the free-list of completed jobs
+        // (allocation-free at steady state) and is stamped from the
+        // precomputed per-app templates.
+        let mut bufs = self.job_pool.pop().unwrap_or_default();
+        bufs.pred_remaining.clear();
+        bufs.pred_remaining
+            .extend_from_slice(&self.app_pred_template[app_idx]);
+        bufs.finish_us.clear();
+        bufs.finish_us.resize(n, f64::NAN);
+        bufs.assigned_pe.clear();
+        bufs.assigned_pe.resize(n, usize::MAX);
+        self.jobs.push(Job {
             app: app_idx,
             arrival_us: self.now,
-            pred_remaining: app
-                .tasks
-                .iter()
-                .map(|t| t.preds.len() as u16)
-                .collect(),
-            finish_us: vec![f64::NAN; n],
-            assigned_pe: vec![usize::MAX; n],
+            pred_remaining: bufs.pred_remaining,
+            finish_us: bufs.finish_us,
+            assigned_pe: bufs.assigned_pe,
             tasks_done: 0,
             done: false,
-        };
+        });
         // Sources are immediately ready.
-        for s in app.sources() {
-            job.pred_remaining[s] = 0;
+        for &s in &self.app_sources[app_idx] {
             self.ready.push_back(ReadyTask {
                 job: job_id,
                 task: s,
@@ -504,7 +625,6 @@ impl<'a> Simulation<'a> {
                 ready_us: self.now,
             });
         }
-        self.jobs.push(job);
         self.injected += 1;
         self.sched_dirty = true;
         self.schedule_next_arrival();
@@ -552,6 +672,22 @@ impl<'a> Simulation<'a> {
             let job = &mut self.jobs[job_id];
             job.done = true;
             let latency = self.now - job.arrival_us;
+            // Reclaim the per-task buffers into the free-list — no task
+            // of a done job is ever consulted again (commit() rejects
+            // stale assignments for done jobs before indexing).
+            if self.job_pool.len() < 1024 {
+                self.job_pool.push(JobBufs {
+                    pred_remaining: std::mem::take(
+                        &mut job.pred_remaining,
+                    ),
+                    finish_us: std::mem::take(&mut job.finish_us),
+                    assigned_pe: std::mem::take(&mut job.assigned_pe),
+                });
+            } else {
+                job.pred_remaining = Vec::new();
+                job.finish_us = Vec::new();
+                job.assigned_pe = Vec::new();
+            }
             self.completed += 1;
             if !self.timeline.is_empty() {
                 // Scenario run: attribute the job to the current phase.
@@ -561,8 +697,6 @@ impl<'a> Simulation<'a> {
                 self.report.job_latencies_us.push(latency);
                 self.report.per_app_latencies_us[app_idx].push(latency);
             }
-            // Reclaim per-task state of completed jobs (long sweeps).
-            job.pred_remaining = Vec::new();
         }
         self.sched_dirty = true;
         self.try_start_next(pe_id);
@@ -625,26 +759,34 @@ impl<'a> Simulation<'a> {
     // Scheduling
     // -------------------------------------------------------------------
 
+    /// Refresh the scheduler's PE view in place.  `avail_us` depends on
+    /// `now`, so values are recomputed every epoch — but into the same
+    /// reused buffer, so the per-event snapshot allocation of the old
+    /// kernel is gone.
+    fn fill_snapshots(&self, out: &mut Vec<PeSnapshot>) {
+        out.clear();
+        out.extend(self.platform.pes.iter().map(|pe| PeSnapshot {
+            id: pe.id,
+            class: pe.class,
+            cluster: pe.cluster,
+            avail_us: self.pes[pe.id].avail_us(self.now),
+            queue_len: self.pes[pe.id].queue.len()
+                + self.pes[pe.id].running.is_some() as usize,
+            available: self.pe_available[pe.id],
+        }));
+    }
+
     fn invoke_scheduler(&mut self) {
         self.sched_dirty = false;
         let window = self.ready.len().min(self.cfg.max_ready);
-        let ready_vec: Vec<ReadyTask> =
-            self.ready.iter().take(window).copied().collect();
-
-        let snapshots: Vec<PeSnapshot> = self
-            .platform
-            .pes
-            .iter()
-            .map(|pe| PeSnapshot {
-                id: pe.id,
-                class: pe.class,
-                cluster: pe.cluster,
-                avail_us: self.pes[pe.id].avail_us(self.now),
-                queue_len: self.pes[pe.id].queue.len()
-                    + self.pes[pe.id].running.is_some() as usize,
-                available: self.pe_available[pe.id],
-            })
-            .collect();
+        // Scratch buffers are moved out of `self` for the duration of
+        // the call (cheap pointer moves) so the context can borrow the
+        // simulation immutably; their capacity survives across epochs.
+        let mut ready_vec = std::mem::take(&mut self.ready_scratch);
+        ready_vec.clear();
+        ready_vec.extend(self.ready.iter().take(window).copied());
+        let mut snapshots = std::mem::take(&mut self.snap_scratch);
+        self.fill_snapshots(&mut snapshots);
 
         // Temporarily lift the scheduler out of `self` so the context can
         // borrow the rest of the simulation immutably.
@@ -658,14 +800,15 @@ impl<'a> Simulation<'a> {
         self.report.sched_wall_ns += t0.elapsed().as_nanos() as u64;
         self.scheduler = scheduler;
         self.report.sched_invocations += 1;
+        self.snap_scratch = snapshots;
+        self.ready_scratch = ready_vec;
 
         if assignments.is_empty() {
             return;
         }
         // Commit.
-        let mut assigned: Vec<(usize, usize)> = Vec::with_capacity(
-            assignments.len(),
-        );
+        let mut assigned = std::mem::take(&mut self.assigned_scratch);
+        assigned.clear();
         for a in &assignments {
             if self.commit(a) {
                 assigned.push((a.job, a.task));
@@ -677,15 +820,19 @@ impl<'a> Simulation<'a> {
         // than O(backlog) (the backlog can be thousands of tasks deep on
         // saturated sweeps; see EXPERIMENTS.md §Perf).
         if !assigned.is_empty() {
-            let kept: Vec<ReadyTask> = self
-                .ready
-                .drain(..window)
-                .filter(|rt| !assigned.contains(&(rt.job, rt.task)))
-                .collect();
-            for rt in kept.into_iter().rev() {
+            let mut kept = std::mem::take(&mut self.kept_scratch);
+            kept.clear();
+            kept.extend(
+                self.ready
+                    .drain(..window)
+                    .filter(|rt| !assigned.contains(&(rt.job, rt.task))),
+            );
+            for rt in kept.drain(..).rev() {
                 self.ready.push_front(rt);
             }
+            self.kept_scratch = kept;
         }
+        self.assigned_scratch = assigned;
     }
 
     /// Validate and enqueue one assignment.  Returns false if rejected.
@@ -696,6 +843,14 @@ impl<'a> Simulation<'a> {
         if !self.pe_available[a.pe] {
             // Failed/hotplugged-out PE (scenario engine): reject; the
             // task stays ready for the next decision epoch.
+            return false;
+        }
+        // A done job's per-task buffers live in the free-list: reject
+        // stale assignments before indexing into them, and out-of-range
+        // task ids from misbehaving schedulers outright.
+        if self.jobs[a.job].done
+            || a.task >= self.jobs[a.job].assigned_pe.len()
+        {
             return false;
         }
         let app_idx = self.jobs[a.job].app;
@@ -742,14 +897,19 @@ impl<'a> Simulation<'a> {
                 self.pe_available[pe] = true;
                 self.sched_dirty = true;
             }
-            Action::SetPowerCap { watts } => match watts {
-                // Keep the cap's backoff state across budget changes.
-                Some(w) => match self.power_cap.as_mut() {
-                    Some(cap) => cap.cap_w = w,
-                    None => self.power_cap = Some(PowerCap::new(w)),
-                },
-                None => self.power_cap = None,
-            },
+            Action::SetPowerCap { watts } => {
+                // Epochs deferred under the old budget integrate before
+                // the policy changes (the cap observes epoch power).
+                self.flush_thermal();
+                match watts {
+                    // Keep the cap's backoff state across budget changes.
+                    Some(w) => match self.power_cap.as_mut() {
+                        Some(cap) => cap.cap_w = w,
+                        None => self.power_cap = Some(PowerCap::new(w)),
+                    },
+                    None => self.power_cap = None,
+                }
+            }
             Action::SetScheduler { name } => self.swap_scheduler(&name),
         }
     }
@@ -785,6 +945,9 @@ impl<'a> Simulation<'a> {
     /// above-ambient thermal state is preserved and relaxes toward the
     /// new environment through the RC dynamics.
     fn set_ambient(&mut self, t_c: f64) {
+        // Deferred epochs ran under the old ambient: integrate them
+        // before the RC model and offsets change.
+        self.flush_thermal();
         self.t_ambient_c = t_c;
         self.rc.t_ambient = t_c;
         if let Some(art) = self.dtpm_xla.as_mut() {
@@ -862,6 +1025,10 @@ impl<'a> Simulation<'a> {
     /// Energy integrates at DTPM-epoch granularity, so an epoch spanning
     /// a boundary is attributed to the phase it *ends* in.
     fn close_phase(&mut self) {
+        // Deferred epochs belong to the closing phase: integrate them
+        // before reading the energy/peak accumulators.  (Also covers
+        // finalize for static runs — close_phase is its first step.)
+        self.flush_thermal();
         let Some(p) = self.report.phases.last_mut() else { return };
         p.end_us = self.now;
         p.jobs_completed = self.phase_lats.len();
@@ -879,6 +1046,138 @@ impl<'a> Simulation<'a> {
     // DTPM epoch
     // -------------------------------------------------------------------
 
+    /// Whether the epoch closing now can be integrated later: nothing
+    /// in the decision path (throttle, power cap, predictive DSE,
+    /// traces) observes power or temperature this epoch.
+    fn can_defer(&self) -> bool {
+        !self.cfg.eager_integration
+            && !self.cfg.capture_traces
+            && self.throttle.is_none()
+            && self.power_cap.is_none()
+            && self.explore.is_none()
+    }
+
+    /// Integrate every pending power/thermal segment, replaying the
+    /// exact per-epoch arithmetic of the eager path (power from
+    /// pre-step temperatures, RC step, energy, peak tracking) so lazy
+    /// and eager integration are bit-identical — asserted by
+    /// `tests/golden_traces.rs`.
+    fn flush_thermal(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.report.thermal_flushes += 1;
+        let mut segs = std::mem::take(&mut self.pending);
+        let mut powers = std::mem::take(&mut self.power_scratch);
+        let mut t_pe = std::mem::take(&mut self.t_pe_scratch);
+        let mut opps = std::mem::take(&mut self.opps_scratch);
+        for seg in segs.drain(..) {
+            // OPPs that were in force during the segment's epoch.
+            opps.clear();
+            for (c, cl) in self.platform.clusters.iter().enumerate() {
+                opps.push(
+                    self.platform.classes[cl.class].opps[seg.opp_idx[c]],
+                );
+            }
+            // Power from pre-step temperatures, then the RC step.
+            t_pe.clear();
+            t_pe.extend(
+                self.rc
+                    .pe_node
+                    .iter()
+                    .map(|&nd| self.theta[nd] + self.t_ambient_c),
+            );
+            power::epoch_power_into(
+                self.platform,
+                &opps,
+                &seg.util,
+                &t_pe,
+                &mut powers,
+            );
+            self.rc.step_into(
+                &self.theta,
+                &powers,
+                &mut self.theta_scratch,
+            );
+            std::mem::swap(&mut self.theta, &mut self.theta_scratch);
+            self.account_epoch(&powers, &seg.busy, seg.dt_us);
+            self.seg_pool.push(seg);
+        }
+        self.pending = segs;
+        self.power_scratch = powers;
+        self.t_pe_scratch = t_pe;
+        self.opps_scratch = opps;
+    }
+
+    /// Energy + peak-temperature accounting for one integrated epoch
+    /// (`theta` already stepped).  Shared by the lazy flush and the
+    /// device path so the two can never drift apart.
+    fn account_epoch(&mut self, powers: &[f64], busy: &[f64], dt: f64) {
+        self.energy.add_epoch(powers, busy, dt);
+        let p_total_w: f64 = powers.iter().sum();
+        self.last_epoch_power_w = p_total_w;
+        let t_max_abs = self.theta.iter().copied().fold(0.0, f64::max)
+            + self.t_ambient_c;
+        self.last_t_max_abs = t_max_abs;
+        if t_max_abs > self.report.peak_temp_c {
+            self.report.peak_temp_c = t_max_abs;
+        }
+        if !self.timeline.is_empty() && t_max_abs > self.phase_peak_temp_c
+        {
+            self.phase_peak_temp_c = t_max_abs;
+        }
+    }
+
+    /// One eager power/thermal epoch through the PJRT artifact (single
+    /// candidate row).  Returns false if the device call failed — the
+    /// artifact is dropped and the caller integrates this (and every
+    /// later) epoch through the native segment lane instead.
+    fn epoch_step_xla(&mut self, dt: f64, util: &[f64], busy: &[f64]) -> bool {
+        let cluster_opps: Vec<Opp> = (0..self.platform.clusters.len())
+            .map(|c| {
+                let class = self.platform.clusters[c].class;
+                self.platform.classes[class].opps[self.cluster_opp_idx[c]]
+            })
+            .collect();
+        // Dynamic power host-side, leakage + thermal step on-device.
+        let p_dyn: Vec<f64> = self
+            .platform
+            .pes
+            .iter()
+            .map(|pe| {
+                power::p_dynamic(
+                    &self.platform.classes[pe.class],
+                    cluster_opps[pe.cluster],
+                    util[pe.id],
+                )
+            })
+            .collect();
+        let volts: Vec<f64> = self
+            .platform
+            .pes
+            .iter()
+            .map(|pe| cluster_opps[pe.cluster].volt)
+            .collect();
+        let Some(art) = self.dtpm_xla.as_mut() else { return false };
+        let powers = match art.step(&self.theta, &[(p_dyn.clone(), volts)])
+        {
+            Ok(out) => {
+                self.theta.copy_from_slice(&out.t_next[0]);
+                self.report.device_calls = art.calls;
+                out.p_total[0].clone()
+            }
+            Err(e) => {
+                // Degrade to the native lane mid-run.
+                eprintln!("dtpm-xla failed ({e}); native fallback");
+                self.dtpm_xla = None;
+                return false;
+            }
+        };
+        self.account_epoch(&powers, busy, dt);
+        self.report.thermal_flushes += 1;
+        true
+    }
+
     fn on_dtpm_epoch(&mut self) {
         let dt = self.now - self.last_epoch_t;
         if dt <= 0.0 {
@@ -886,114 +1185,55 @@ impl<'a> Simulation<'a> {
                 .push(self.now + self.cfg.dtpm.epoch_us, Event::DtpmEpoch);
             return;
         }
-        // 1. Utilization over the closing epoch.
-        let mut util = vec![0.0f64; self.pes.len()];
-        let mut busy = vec![0.0f64; self.pes.len()];
-        for (i, pe) in self.pes.iter_mut().enumerate() {
+        // 1. Utilization over the closing epoch (reused scratch).
+        let mut util = std::mem::take(&mut self.util_scratch);
+        let mut busy = std::mem::take(&mut self.busy_scratch);
+        util.clear();
+        busy.clear();
+        for pe in self.pes.iter_mut() {
             if pe.running.is_some() {
                 let upto = self.now.min(pe.busy_until_us);
                 let add = (upto - pe.accounted_us).max(0.0);
                 pe.epoch_busy_us += add;
                 pe.accounted_us = pe.accounted_us.max(upto);
             }
-            busy[i] = pe.epoch_busy_us;
-            util[i] = (pe.epoch_busy_us / dt).clamp(0.0, 1.0);
+            busy.push(pe.epoch_busy_us);
+            util.push((pe.epoch_busy_us / dt).clamp(0.0, 1.0));
             pe.epoch_busy_us = 0.0;
         }
 
-        // 2. Power over the closing epoch (OPPs that were in force).
-        let cluster_opps: Vec<Opp> = (0..self.platform.clusters.len())
-            .map(|c| {
-                let class = self.platform.clusters[c].class;
-                self.platform.classes[class].opps[self.cluster_opp_idx[c]]
-            })
-            .collect();
-        let t_pe_abs: Vec<f64> = self
-            .rc
-            .t_pe(&self.theta)
-            .iter()
-            .map(|t| t + self.t_ambient_c)
-            .collect();
-
-        let powers: Vec<f64>;
-        if let Some(art) = self.dtpm_xla.as_mut() {
-            // Device path: dynamic power host-side, leakage + thermal
-            // step on the PJRT artifact (single candidate row).
-            let p_dyn: Vec<f64> = self
-                .platform
-                .pes
-                .iter()
-                .map(|pe| {
-                    power::p_dynamic(
-                        &self.platform.classes[pe.class],
-                        cluster_opps[pe.cluster],
-                        util[pe.id],
-                    )
-                })
-                .collect();
-            let volts: Vec<f64> = self
-                .platform
-                .pes
-                .iter()
-                .map(|pe| cluster_opps[pe.cluster].volt)
-                .collect();
-            match art.step(&self.theta, &[(p_dyn.clone(), volts)]) {
-                Ok(out) => {
-                    powers = out.p_total[0].clone();
-                    self.theta.copy_from_slice(&out.t_next[0]);
-                    self.report.device_calls = art.calls;
-                }
-                Err(e) => {
-                    // Degrade to native path mid-run.
-                    eprintln!("dtpm-xla failed ({e}); native fallback");
-                    powers = power::epoch_power(
-                        self.platform,
-                        &cluster_opps,
-                        &util,
-                        &t_pe_abs,
-                    );
-                    self.rc.step_into(
-                        &self.theta,
-                        &powers,
-                        &mut self.theta_scratch,
-                    );
-                    std::mem::swap(
-                        &mut self.theta,
-                        &mut self.theta_scratch,
-                    );
-                    self.dtpm_xla = None;
-                }
+        // 2+3. Power, thermal step, energy.  The device path is always
+        // eager (stateful artifact); the native path accumulates a
+        // piecewise-constant segment and integrates lazily unless a
+        // policy or trace observes this epoch.  A failed device call
+        // also lands in the segment lane (this epoch onwards).
+        let device_done = self.dtpm_xla.is_some()
+            && self.epoch_step_xla(dt, &util, &busy);
+        if !device_done {
+            let mut seg = self.seg_pool.pop().unwrap_or_default();
+            seg.dt_us = dt;
+            seg.util.clear();
+            seg.util.extend_from_slice(&util);
+            seg.busy.clear();
+            seg.busy.extend_from_slice(&busy);
+            seg.opp_idx.clear();
+            seg.opp_idx.extend_from_slice(&self.cluster_opp_idx);
+            self.pending.push(seg);
+            // Bound the deferred backlog: flushing early is always
+            // valid (replay is exact), so very long runs hold at most
+            // MAX_PENDING_EPOCHS segments instead of O(#epochs).
+            if !self.can_defer()
+                || self.pending.len() >= MAX_PENDING_EPOCHS
+            {
+                self.flush_thermal();
+            } else {
+                self.report.deferred_epochs += 1;
             }
-        } else {
-            powers = power::epoch_power(
-                self.platform,
-                &cluster_opps,
-                &util,
-                &t_pe_abs,
-            );
-            self.rc
-                .step_into(&self.theta, &powers, &mut self.theta_scratch);
-            std::mem::swap(&mut self.theta, &mut self.theta_scratch);
         }
-
-        // 3. Energy + peak temperature accounting.
-        self.energy.add_epoch(&powers, &busy, dt);
-        let p_total_w: f64 = powers.iter().sum();
-        self.last_epoch_power_w = p_total_w;
-        let t_max_abs = self
-            .theta
-            .iter()
-            .copied()
-            .fold(0.0, f64::max)
-            + self.t_ambient_c;
-        if t_max_abs > self.report.peak_temp_c {
-            self.report.peak_temp_c = t_max_abs;
-        }
-        if !self.timeline.is_empty()
-            && t_max_abs > self.phase_peak_temp_c
-        {
-            self.phase_peak_temp_c = t_max_abs;
-        }
+        // Valid whenever a policy below consumes them: any policy
+        // forces eager integration, which refreshes both every epoch.
+        let t_max_abs = self.last_t_max_abs;
+        let p_total_w = self.last_epoch_power_w;
 
         // 4. Governor + DTPM policies pick OPPs for the next epoch.
         //
@@ -1045,8 +1285,12 @@ impl<'a> Simulation<'a> {
             }
             self.cluster_opp_idx[c] = idx.min(class.opps.len() - 1);
         }
+        self.refresh_cluster_mhz();
+        self.util_scratch = util;
+        self.busy_scratch = busy;
 
-        // 5. Trace.
+        // 5. Trace (capture forces eager integration, so `theta` and
+        // the last epoch power are current here).
         if self.cfg.capture_traces {
             self.report.trace.push(EpochTrace {
                 t_us: self.now,
@@ -1056,14 +1300,7 @@ impl<'a> Simulation<'a> {
                     .map(|t| t + self.t_ambient_c)
                     .collect(),
                 power_w: p_total_w,
-                cluster_mhz: (0..self.platform.clusters.len())
-                    .map(|c| {
-                        let cl = self.platform.clusters[c].class;
-                        self.platform.classes[cl].opps
-                            [self.cluster_opp_idx[c]]
-                            .freq_mhz
-                    })
-                    .collect(),
+                cluster_mhz: self.cluster_mhz.clone(),
             });
         }
 
@@ -1578,6 +1815,91 @@ mod tests {
             Action::SetScheduler { name: "warp-speed".into() },
         ));
         assert!(Simulation::build(&p, &apps, &cfg).is_err());
+    }
+
+    #[test]
+    fn lazy_integration_is_bit_identical_to_eager() {
+        // The lazy power/thermal lane replays deferred epochs with the
+        // exact arithmetic of the eager path — every observable must
+        // match to the bit, not just within tolerance.
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        for sched in ["etf", "met", "rr"] {
+            let lazy_cfg = quick_cfg(sched, 3.0, 80);
+            let mut eager_cfg = lazy_cfg.clone();
+            eager_cfg.eager_integration = true;
+            let a = Simulation::build(&p, &apps, &lazy_cfg).unwrap().run();
+            let b =
+                Simulation::build(&p, &apps, &eager_cfg).unwrap().run();
+            assert_eq!(a.job_latencies_us, b.job_latencies_us, "{sched}");
+            assert_eq!(a.events_processed, b.events_processed, "{sched}");
+            assert_eq!(
+                a.total_energy_j.to_bits(),
+                b.total_energy_j.to_bits(),
+                "{sched}: energy diverged"
+            );
+            assert_eq!(
+                a.peak_temp_c.to_bits(),
+                b.peak_temp_c.to_bits(),
+                "{sched}: peak temp diverged"
+            );
+            // The lazy run actually deferred work; the eager run didn't.
+            assert!(a.deferred_epochs > 0, "{sched}: nothing deferred");
+            assert_eq!(b.deferred_epochs, 0);
+        }
+    }
+
+    #[test]
+    fn lazy_integration_matches_eager_under_scenario_phases() {
+        use crate::scenario::presets;
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut lazy_cfg = quick_cfg("etf", 2.0, 150);
+        lazy_cfg.dtpm.governor = "ondemand".into();
+        lazy_cfg.scenario = Some(presets::pe_failure());
+        let mut eager_cfg = lazy_cfg.clone();
+        eager_cfg.eager_integration = true;
+        let a = Simulation::build(&p, &apps, &lazy_cfg).unwrap().run();
+        let b = Simulation::build(&p, &apps, &eager_cfg).unwrap().run();
+        assert_eq!(a.job_latencies_us, b.job_latencies_us);
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+        assert_eq!(a.phases.len(), b.phases.len());
+        for (pa, pb) in a.phases.iter().zip(&b.phases) {
+            assert_eq!(pa.energy_j.to_bits(), pb.energy_j.to_bits());
+            assert_eq!(pa.peak_temp_c.to_bits(), pb.peak_temp_c.to_bits());
+            assert_eq!(pa.jobs_completed, pb.jobs_completed);
+        }
+    }
+
+    #[test]
+    fn throttle_and_caps_force_eager_integration() {
+        // Policies observe per-epoch temperature/power, so runs with a
+        // throttle or power cap must never defer.
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let mut cfg = quick_cfg("etf", 4.0, 80);
+        cfg.dtpm.thermal_throttle = true;
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.deferred_epochs, 0);
+        assert!(r.thermal_flushes > 0);
+
+        let mut cfg = quick_cfg("etf", 4.0, 80);
+        cfg.dtpm.power_cap_w = Some(4.0);
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.deferred_epochs, 0);
+    }
+
+    #[test]
+    fn job_buffer_pool_reuses_across_arrivals() {
+        // Many sequential jobs at a low rate: the pool keeps the run
+        // behaviourally identical to the allocating implementation.
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 0.5, 200);
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 200);
+        let again = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.job_latencies_us, again.job_latencies_us);
     }
 
     #[test]

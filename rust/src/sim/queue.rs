@@ -64,6 +64,18 @@ impl EventQueue {
         EventQueue::default()
     }
 
+    /// Pre-sized queue: saturating runs keep hundreds of in-flight
+    /// events, so the kernel pre-sizes the heap to avoid growth
+    /// reallocations on the hot path.
+    pub fn with_capacity(cap: usize) -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            seq: 0,
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
     pub fn push(&mut self, at: f64, ev: Event) {
         debug_assert!(at.is_finite(), "non-finite event time");
         self.heap.push(Entry { at, seq: self.seq, ev });

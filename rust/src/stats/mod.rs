@@ -101,6 +101,13 @@ pub struct SimReport {
     pub throttle_engagements: u64,
     /// PJRT device invocations (0 on the pure-rust paths).
     pub device_calls: u64,
+    /// DTPM epochs whose power/thermal integration was deferred to a
+    /// batched flush (the lazy lane; 0 when a policy or trace forces
+    /// eager integration every epoch).
+    pub deferred_epochs: u64,
+    /// Power/thermal integration flushes (eager runs: one per epoch;
+    /// lazy runs: one per observation point).
+    pub thermal_flushes: u64,
 
     pub scheduler_report: Vec<String>,
     pub gantt: Vec<GanttEntry>,
@@ -184,6 +191,10 @@ impl SimReport {
             self.sched_overhead_us(),
             self.tasks_executed,
             self.device_calls
+        ));
+        s.push_str(&format!(
+            "  thermal: {} epochs deferred across {} flushes\n",
+            self.deferred_epochs, self.thermal_flushes
         ));
         for line in &self.scheduler_report {
             s.push_str(&format!("  {line}\n"));

@@ -45,6 +45,21 @@ pub struct RcModel {
     /// Node capacitances (kept for diagnostics / future variable-dt).
     #[allow(dead_code)]
     c: Vec<f64>,
+    /// Cached k-epoch propagators (`A^k`, `(Σ_{i<k} A^i)·B`), keyed by
+    /// step count `k`.  The discretization step `dt` is fixed per
+    /// model, so `k` indexes repeated-`dt` batches; each propagator is
+    /// built once (O(k·n³)) and reused (O(n²) per advance).
+    props: Vec<(usize, Propagator)>,
+}
+
+/// A cached k-epoch constant-power propagator (see
+/// [`RcModel::advance_const_power`]).
+#[derive(Debug, Clone)]
+pub struct Propagator {
+    /// `A^k`, row-major `n × n`.
+    pub a_k: Vec<f64>,
+    /// `(Σ_{i<k} A^i)·B`, row-major `n × n_pes`.
+    pub s_k_b: Vec<f64>,
 }
 
 impl RcModel {
@@ -74,6 +89,7 @@ impl RcModel {
             t_ambient,
             g: vec![0.0; n * n],
             c: vec![1.0; n],
+            props: Vec::new(),
         }
     }
 
@@ -134,6 +150,7 @@ impl RcModel {
             t_ambient: platform.t_ambient,
             g,
             c: fp.capacitance.clone(),
+            props: Vec::new(),
         }
     }
 
@@ -178,6 +195,103 @@ impl RcModel {
     /// Above-ambient temperature seen by each PE.
     pub fn t_pe(&self, theta: &[f64]) -> Vec<f64> {
         self.pe_node.iter().map(|&nd| theta[nd]).collect()
+    }
+
+    /// The cached `k`-epoch propagator, building (and memoizing) it on
+    /// first use.
+    pub fn propagator(&mut self, k: usize) -> &Propagator {
+        assert!(k >= 1, "propagator needs k >= 1 epochs");
+        if let Some(pos) =
+            self.props.iter().position(|(kk, _)| *kk == k)
+        {
+            return &self.props[pos].1;
+        }
+        let n = self.n;
+        // a_k starts at I and is left-multiplied by A k times; s
+        // accumulates Σ_{i<k} A^i along the way.
+        let mut a_k = vec![0.0f64; n * n];
+        for i in 0..n {
+            a_k[i * n + i] = 1.0;
+        }
+        let mut s = vec![0.0f64; n * n];
+        for _ in 0..k {
+            for (si, ai) in s.iter_mut().zip(&a_k) {
+                *si += ai;
+            }
+            let mut next = vec![0.0f64; n * n];
+            for i in 0..n {
+                for l in 0..n {
+                    let aij = self.a[i * n + l];
+                    if aij == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        next[i * n + j] += aij * a_k[l * n + j];
+                    }
+                }
+            }
+            a_k = next;
+        }
+        // s_k_b = (Σ A^i) · B.
+        let n_pes = self.n_pes;
+        let mut s_k_b = vec![0.0f64; n * n_pes];
+        for i in 0..n {
+            for l in 0..n {
+                let sil = s[i * n + l];
+                if sil == 0.0 {
+                    continue;
+                }
+                for j in 0..n_pes {
+                    s_k_b[i * n_pes + j] += sil * self.b[l * n_pes + j];
+                }
+            }
+        }
+        self.props.push((k, Propagator { a_k, s_k_b }));
+        &self.props.last().unwrap().1
+    }
+
+    /// Fast-forward `k` epochs under constant per-PE power:
+    /// `Θ' = A^k Θ + (Σ_{i<k} A^i) B p`.
+    ///
+    /// Algebraically identical to `k` repeated [`RcModel::step`]s but a
+    /// single O(n²) evaluation after the propagator is cached.
+    /// Floating-point results differ from iterated stepping at rounding
+    /// level (~1e-12 per step), so golden-guarded paths (the simulation
+    /// kernel's lazy lane) replay per-epoch instead; this API serves
+    /// DSE "what settles where" probes and long idle fast-forwards
+    /// where that tolerance is acceptable.
+    pub fn advance_const_power(
+        &mut self,
+        theta: &[f64],
+        p: &[f64],
+        k: usize,
+    ) -> Vec<f64> {
+        if k == 0 {
+            return theta.to_vec();
+        }
+        debug_assert_eq!(theta.len(), self.n);
+        debug_assert_eq!(p.len(), self.n_pes);
+        let n = self.n;
+        let n_pes = self.n_pes;
+        let prop = self.propagator(k);
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = 0.0;
+            for (aij, th) in
+                prop.a_k[i * n..(i + 1) * n].iter().zip(theta)
+            {
+                acc += aij * th;
+            }
+            for (bij, pw) in prop.s_k_b
+                [i * n_pes..(i + 1) * n_pes]
+                .iter()
+                .zip(p)
+            {
+                acc += bij * pw;
+            }
+            out[i] = acc;
+        }
+        out
     }
 
     /// Steady-state above-ambient temperatures for constant power `p`:
@@ -430,6 +544,45 @@ mod tests {
         let mut b = vec![0.0; m.n];
         m.step_into(&theta, &p, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn propagator_advance_matches_iterated_steps() {
+        let mut m = model();
+        let theta0: Vec<f64> = (0..m.n).map(|i| 3.0 * i as f64).collect();
+        let p: Vec<f64> =
+            (0..m.n_pes).map(|i| 0.3 + 0.05 * i as f64).collect();
+        for k in [1usize, 2, 7, 50] {
+            let mut iter = theta0.clone();
+            for _ in 0..k {
+                iter = m.step(&iter, &p);
+            }
+            let fast = m.advance_const_power(&theta0, &p, k);
+            for (a, b) in fast.iter().zip(&iter) {
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "k={k}: fast={a} iter={b}"
+                );
+            }
+        }
+        // k = 0 is the identity.
+        assert_eq!(m.advance_const_power(&theta0, &p, 0), theta0);
+    }
+
+    #[test]
+    fn propagator_is_cached_per_step_count() {
+        let mut m = model();
+        let theta = vec![5.0; m.n];
+        let p = vec![1.0; m.n_pes];
+        let a = m.advance_const_power(&theta, &p, 12);
+        // Second call hits the cache and must return identical bits.
+        let b = m.advance_const_power(&theta, &p, 12);
+        assert_eq!(a, b);
+        assert_eq!(
+            m.props.iter().filter(|(k, _)| *k == 12).count(),
+            1,
+            "duplicate cache entries"
+        );
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Golden-trace regression tests: the hot-path overhaul's behavioural
+//! contract.
+//!
+//! For fixed seeds × schedulers on the Table-2 SoC, a run's canonical
+//! trace — per-job latencies, per-task (PE, start, finish) Gantt
+//! records, energy, event counts — is serialized and compared against a
+//! committed golden under `rust/tests/goldens/`.  Any optimization that
+//! changes observable behaviour trips these tests.
+//!
+//! Semantics:
+//! * golden file present  → compare (integers exact, floats fp-tolerant
+//!   to 1e-6 relative — robust to JSON round-tripping, tight enough
+//!   that any real behaviour change, which shifts latencies by whole
+//!   microseconds, is caught);
+//! * golden file missing  → the trace is written ("blessed") and the
+//!   test passes with a notice: commit the generated file.  Generate
+//!   goldens from `main` *before* landing a hot-path change;
+//! * `GOLDEN_BLESS=1 cargo test --test golden_traces` → re-bless all.
+
+use std::path::PathBuf;
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+use ds3r::stats::SimReport;
+use ds3r::util::json::Json;
+
+/// The scheduler axis of the golden matrix ("table" is the ILP-backed
+/// lookup-table scheduler's registry alias).
+const SCHEDS: &[&str] = &["etf", "met", "heft", "table", "rr"];
+const SEEDS: &[u64] = &[42, 1234];
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("goldens")
+}
+
+fn golden_cfg(sched: &str, seed: u64) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.scheduler = sched.into();
+    c.seed = seed;
+    c.injection_rate_per_ms = 3.0;
+    c.max_jobs = 120;
+    c.warmup_jobs = 0;
+    c.capture_gantt = true;
+    c.gantt_limit = 400;
+    c
+}
+
+fn run_trace(cfg: &SimConfig) -> SimReport {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+    Simulation::build(&p, &apps, cfg).unwrap().run()
+}
+
+/// Canonical JSON form of a run's observable behaviour.
+fn canonical(cfg: &SimConfig, r: &SimReport) -> Json {
+    let mut j = Json::obj();
+    j.set("scheduler", Json::Str(cfg.scheduler.clone()))
+        .set("seed", Json::Num(cfg.seed as f64))
+        .set("injected_jobs", Json::Num(r.injected_jobs as f64))
+        .set("completed_jobs", Json::Num(r.completed_jobs as f64))
+        .set("events_processed", Json::Num(r.events_processed as f64))
+        .set("tasks_executed", Json::Num(r.tasks_executed as f64))
+        .set("total_energy_j", Json::Num(r.total_energy_j))
+        .set("peak_temp_c", Json::Num(r.peak_temp_c))
+        .set(
+            "job_latencies_us",
+            Json::Arr(
+                r.job_latencies_us.iter().map(|&l| Json::Num(l)).collect(),
+            ),
+        )
+        .set(
+            "gantt",
+            Json::Arr(
+                r.gantt
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            Json::Num(e.job as f64),
+                            Json::Num(e.task as f64),
+                            Json::Num(e.pe as f64),
+                            Json::Num(e.start_us),
+                            Json::Num(e.end_us),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    j
+}
+
+fn f64_of(j: &Json, key: &str, ctx: &str) -> f64 {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("{ctx}: golden missing '{key}'"))
+}
+
+fn assert_close(ctx: &str, what: &str, got: f64, want: f64) {
+    let tol = 1e-6 * want.abs().max(1e-6);
+    assert!(
+        (got - want).abs() <= tol,
+        "{ctx}: {what} diverged from golden: got {got}, want {want}"
+    );
+}
+
+fn compare(ctx: &str, got: &Json, want: &Json) {
+    for key in [
+        "injected_jobs",
+        "completed_jobs",
+        "events_processed",
+        "tasks_executed",
+    ] {
+        assert_eq!(
+            f64_of(got, key, ctx) as u64,
+            f64_of(want, key, ctx) as u64,
+            "{ctx}: {key} diverged from golden"
+        );
+    }
+    assert_close(
+        ctx,
+        "total_energy_j",
+        f64_of(got, "total_energy_j", ctx),
+        f64_of(want, "total_energy_j", ctx),
+    );
+    assert_close(
+        ctx,
+        "peak_temp_c",
+        f64_of(got, "peak_temp_c", ctx),
+        f64_of(want, "peak_temp_c", ctx),
+    );
+
+    let lat_g = got.get("job_latencies_us").and_then(Json::as_arr).unwrap();
+    let lat_w =
+        want.get("job_latencies_us").and_then(Json::as_arr).unwrap();
+    assert_eq!(lat_g.len(), lat_w.len(), "{ctx}: latency count");
+    for (i, (a, b)) in lat_g.iter().zip(lat_w).enumerate() {
+        assert_close(
+            ctx,
+            &format!("latency[{i}]"),
+            a.as_f64().unwrap(),
+            b.as_f64().unwrap(),
+        );
+    }
+
+    let g_g = got.get("gantt").and_then(Json::as_arr).unwrap();
+    let g_w = want.get("gantt").and_then(Json::as_arr).unwrap();
+    assert_eq!(g_g.len(), g_w.len(), "{ctx}: gantt length");
+    for (i, (a, b)) in g_g.iter().zip(g_w).enumerate() {
+        let a = a.as_arr().unwrap();
+        let b = b.as_arr().unwrap();
+        for f in 0..3 {
+            // job, task, pe: exact.
+            assert_eq!(
+                a[f].as_f64().unwrap() as u64,
+                b[f].as_f64().unwrap() as u64,
+                "{ctx}: gantt[{i}] field {f} (job/task/pe) diverged"
+            );
+        }
+        for f in 3..5 {
+            assert_close(
+                ctx,
+                &format!("gantt[{i}] field {f}"),
+                a[f].as_f64().unwrap(),
+                b[f].as_f64().unwrap(),
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_traces_all_schedulers() {
+    let bless_all = std::env::var("GOLDEN_BLESS")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let dir = golden_dir();
+    for &sched in SCHEDS {
+        for &seed in SEEDS {
+            let cfg = golden_cfg(sched, seed);
+            let r = run_trace(&cfg);
+            assert_eq!(
+                r.completed_jobs, r.injected_jobs,
+                "{sched}/s{seed}: jobs lost"
+            );
+            let got = canonical(&cfg, &r);
+            let path = dir.join(format!("{sched}_s{seed}.json"));
+            if bless_all || !path.exists() {
+                std::fs::create_dir_all(&dir).unwrap();
+                std::fs::write(&path, got.to_string_pretty()).unwrap();
+                eprintln!(
+                    "golden blessed: {} — commit it to pin this \
+                     behaviour",
+                    path.display()
+                );
+                continue;
+            }
+            let want = Json::parse_file(&path).unwrap_or_else(|e| {
+                panic!("{sched}/s{seed}: unreadable golden: {e}")
+            });
+            compare(&format!("{sched}/s{seed}"), &got, &want);
+        }
+    }
+}
+
+/// The run used for goldens must itself be deterministic, otherwise the
+/// bless-compare cycle would flap.
+#[test]
+fn golden_configs_are_deterministic() {
+    let cfg = golden_cfg("etf", 42);
+    let a = run_trace(&cfg);
+    let b = run_trace(&cfg);
+    assert_eq!(a.job_latencies_us, b.job_latencies_us);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+}
+
+/// Cross-path golden: the lazy integration lane against the eager
+/// reference path, bit-exact, for every golden config.  This guard
+/// holds even before the on-disk goldens are first blessed.
+#[test]
+fn golden_lazy_vs_eager_bit_identical() {
+    for &sched in SCHEDS {
+        let lazy_cfg = golden_cfg(sched, 42);
+        let mut eager_cfg = lazy_cfg.clone();
+        eager_cfg.eager_integration = true;
+        let a = run_trace(&lazy_cfg);
+        let b = run_trace(&eager_cfg);
+        assert_eq!(a.job_latencies_us, b.job_latencies_us, "{sched}");
+        assert_eq!(a.events_processed, b.events_processed, "{sched}");
+        assert_eq!(a.tasks_executed, b.tasks_executed, "{sched}");
+        assert_eq!(
+            a.total_energy_j.to_bits(),
+            b.total_energy_j.to_bits(),
+            "{sched}: energy diverged between lazy and eager integration"
+        );
+        assert_eq!(
+            a.peak_temp_c.to_bits(),
+            b.peak_temp_c.to_bits(),
+            "{sched}: peak temperature diverged"
+        );
+        assert_eq!(a.gantt.len(), b.gantt.len(), "{sched}");
+        for (x, y) in a.gantt.iter().zip(&b.gantt) {
+            assert_eq!(
+                (x.job, x.task, x.pe),
+                (y.job, y.task, y.pe),
+                "{sched}: gantt assignment diverged"
+            );
+            assert_eq!(x.start_us.to_bits(), y.start_us.to_bits());
+            assert_eq!(x.end_us.to_bits(), y.end_us.to_bits());
+        }
+    }
+}

@@ -237,6 +237,174 @@ fn prop_jobgen_arrival_times_sorted_positive() {
 }
 
 #[test]
+fn prop_scenario_phases_partition_and_no_job_lost() {
+    // Scenario runs (PE fault + hotplug + rate step) on random DAGs:
+    // the clock stays monotone (observable through phase/Gantt
+    // ordering), no job is lost across the outage, and the reported
+    // phases exactly partition the simulated interval.
+    use ds3r::scenario::{Action, Scenario};
+    for seed in property_seeds().into_iter().take(8) {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 16);
+        let p = Platform::table2_soc();
+        let apps = vec![app];
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        cfg.max_jobs = 40;
+        cfg.warmup_jobs = 0;
+        cfg.injection_rate_per_ms = 2.0;
+        cfg.capture_gantt = true;
+        cfg.gantt_limit = usize::MAX >> 1;
+        let victim = rng.below(p.n_pes() as u64) as usize;
+        cfg.scenario = Some(
+            Scenario::new("prop-fault", "")
+                .event(5_000.0, Action::PeFail { pe: victim })
+                .event(12_000.0, Action::SetRate { per_ms: 4.0 })
+                .event(18_000.0, Action::PeRestore { pe: victim }),
+        );
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(
+            r.completed_jobs, r.injected_jobs,
+            "seed {seed}: jobs lost across PE fault/hotplug"
+        );
+        assert_eq!(r.completed_jobs, 40, "seed {seed}");
+        // Phase partition: starts at 0, contiguous, ends at sim end.
+        assert!(!r.phases.is_empty(), "seed {seed}: no phases");
+        assert_eq!(r.phases[0].start_us, 0.0, "seed {seed}");
+        for w in r.phases.windows(2) {
+            assert!(
+                (w[0].end_us - w[1].start_us).abs() < 1e-9,
+                "seed {seed}: phase gap {w:?}"
+            );
+        }
+        let last = r.phases.last().unwrap();
+        assert!(
+            (last.end_us - r.sim_time_us).abs() < 1e-9,
+            "seed {seed}: phases end {} != sim end {}",
+            last.end_us,
+            r.sim_time_us
+        );
+        for ph in &r.phases {
+            assert!(ph.end_us >= ph.start_us, "seed {seed}: {ph:?}");
+        }
+        // Clock monotone: every executed task obeys start <= end and
+        // fits the simulated interval.
+        for e in &r.gantt {
+            assert!(e.end_us >= e.start_us, "seed {seed}");
+            assert!(e.end_us <= r.sim_time_us + 1e-9, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_total_energy_equals_power_integral() {
+    // Total reported energy must equal the integral of the per-epoch
+    // reported power over the simulated interval (trace capture forces
+    // eager integration, so every integrated epoch has a trace entry).
+    for seed in property_seeds().into_iter().take(6) {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 18);
+        let p = Platform::table2_soc();
+        let apps = vec![app];
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        cfg.max_jobs = 40;
+        cfg.warmup_jobs = 0;
+        // Keep the run well past several 10 ms DTPM epochs so the
+        // trace is non-empty (energy only integrates at epochs).
+        cfg.injection_rate_per_ms = rng.uniform(0.5, 2.0);
+        cfg.capture_traces = true;
+        cfg.dtpm.governor =
+            ["performance", "ondemand", "powersave"][rng.below(3) as usize]
+                .to_string();
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert!(!r.trace.is_empty(), "seed {seed}");
+        let mut integral = 0.0;
+        let mut last_t = 0.0;
+        for tr in &r.trace {
+            integral += tr.power_w * (tr.t_us - last_t) * 1e-6;
+            last_t = tr.t_us;
+        }
+        let tol = 1e-6 * r.total_energy_j.max(1e-9);
+        assert!(
+            (integral - r.total_energy_j).abs() <= tol,
+            "seed {seed}: energy {} != power integral {integral}",
+            r.total_energy_j
+        );
+    }
+}
+
+#[test]
+fn prop_sweeps_bit_identical_across_thread_counts() {
+    // coordinator::run_sweep and run_scenario_sweep must return
+    // bit-identical results — values and order — for 1 vs 8 threads.
+    use ds3r::app::suite::{self, WifiParams};
+    use ds3r::coordinator::{self, fig3_points};
+    use ds3r::scenario::{presets, Action, Scenario};
+
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+    let mut base = SimConfig::default();
+    base.max_jobs = 60;
+    base.warmup_jobs = 5;
+
+    let pts = fig3_points(&["etf", "met", "rr"], &[0.5, 2.0, 5.0], 11);
+    let serial =
+        coordinator::run_sweep(&p, &apps, &base, &pts, 1).unwrap();
+    let par = coordinator::run_sweep(&p, &apps, &base, &pts, 8).unwrap();
+    assert_eq!(serial.len(), par.len());
+    for (a, b) in serial.iter().zip(&par) {
+        assert_eq!(a.point.scheduler, b.point.scheduler, "order changed");
+        assert_eq!(a.point.rate_per_ms, b.point.rate_per_ms);
+        assert_eq!(a.avg_latency_us.to_bits(), b.avg_latency_us.to_bits());
+        assert_eq!(a.p95_latency_us.to_bits(), b.p95_latency_us.to_bits());
+        assert_eq!(
+            a.energy_per_job_mj.to_bits(),
+            b.energy_per_job_mj.to_bits()
+        );
+        assert_eq!(a.avg_power_w.to_bits(), b.avg_power_w.to_bits());
+        assert_eq!(a.peak_temp_c.to_bits(), b.peak_temp_c.to_bits());
+        assert_eq!(a.completed_jobs, b.completed_jobs);
+        assert_eq!(a.injected_jobs, b.injected_jobs);
+    }
+
+    let mut sc_base = base.clone();
+    sc_base.max_jobs = 80;
+    sc_base.injection_rate_per_ms = 2.0;
+    let scenarios = vec![
+        presets::pe_failure(),
+        Scenario::new("quiet", "")
+            .event(10_000.0, Action::SetRate { per_ms: 1.0 }),
+    ];
+    let s1 =
+        coordinator::run_scenario_sweep(&p, &apps, &sc_base, &scenarios, 1)
+            .unwrap();
+    let s8 =
+        coordinator::run_scenario_sweep(&p, &apps, &sc_base, &scenarios, 8)
+            .unwrap();
+    assert_eq!(s1.len(), s8.len());
+    for (a, b) in s1.iter().zip(&s8) {
+        assert_eq!(a.scenario, b.scenario, "order changed");
+        assert_eq!(a.avg_latency_us.to_bits(), b.avg_latency_us.to_bits());
+        assert_eq!(
+            a.energy_per_job_mj.to_bits(),
+            b.energy_per_job_mj.to_bits()
+        );
+        assert_eq!(a.peak_temp_c.to_bits(), b.peak_temp_c.to_bits());
+        assert_eq!(a.completed_jobs, b.completed_jobs);
+        assert_eq!(a.phases.len(), b.phases.len());
+        for (pa, pb) in a.phases.iter().zip(&b.phases) {
+            assert_eq!(pa.label, pb.label);
+            assert_eq!(pa.energy_j.to_bits(), pb.energy_j.to_bits());
+            assert_eq!(
+                pa.avg_latency_us.to_bits(),
+                pb.avg_latency_us.to_bits()
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_random_dag_json_roundtrip() {
     for seed in property_seeds() {
         let mut rng = Rng::new(seed);
