@@ -1,132 +1,165 @@
-//! DSSoC design-space exploration: sweep the accelerator provisioning of
-//! the SoC (how many FFT engines? how many scrambler engines?) under a
-//! mixed wireless workload — the paper's headline use case: "rapid ...
-//! exploration of DSSoCs" / "sweeping the configuration space to
-//! determine the most suitable scheduling algorithm for a given SoC
-//! architecture".
+//! Guided design-space exploration end-to-end: search the hardware
+//! configuration space of the Table-2 SoC under a mixed
+//! wireless + radar workload (WiFi-TX + pulse Doppler) with the
+//! `ds3r::dse` engine — the paper's headline use case ("enables both
+//! design space exploration and dynamic resource management") driven by
+//! an NSGA-II-style multi-objective search instead of an exhaustive
+//! sweep.
+//!
+//! The genome mutates per-cluster PE counts, enabled OPP subsets, the
+//! NoC speed grade, and the DTPM power budget; the search minimizes
+//! average job latency and energy per job simultaneously and maintains
+//! a Pareto-front archive, checkpointed to `dse_checkpoint.json` after
+//! every generation (extend the search with `ds3r dse resume
+//! --checkpoint dse_checkpoint.json --generations N`; the checkpoint
+//! pins the workload).
 //!
 //! ```sh
 //! cargo run --release --example design_space
 //! ```
+//!
+//! Environment knobs (the CI smoke job shrinks the budget with these):
+//! * `DSE_POPULATION`  — designs per generation (default 12)
+//! * `DSE_GENERATIONS` — evolutionary generations (default 7)
+//! * `DSE_JOBS`        — jobs per evaluation (default 200)
+//! * `DSE_THREADS`     — evaluation threads (default: all cores)
 
-use ds3r::app::suite::{self, WifiParams};
-use ds3r::config::SimConfig;
-use ds3r::platform::{
-    Cluster, NocParams, Pe, Platform, ThermalFloorplan,
-};
-use ds3r::sim::Simulation;
+use ds3r::app::suite::{self, RadarParams, WifiParams};
+use ds3r::dse::{DseConfig, DseEngine, Objective};
+use ds3r::platform::Platform;
+use ds3r::util::json::Json;
 use ds3r::util::plot;
 
-/// Build a Table-2-style SoC with a configurable accelerator mix.
-fn custom_soc(n_fft: usize, n_scr: usize) -> Platform {
-    let base = Platform::table2_soc();
-    let classes = base.classes.clone();
-    let fp = ThermalFloorplan {
-        node_names: base.floorplan.node_names.clone(),
-        capacitance: base.floorplan.capacitance.clone(),
-        g_amb: base.floorplan.g_amb.clone(),
-        couplings: base.floorplan.couplings.clone(),
-    };
-    // Lay PEs on a mesh big enough for the largest config.
-    let mesh = NocParams { mesh_x: 6, mesh_y: 4, ..NocParams::default() };
-    let mut pes = Vec::new();
-    let mut clusters = Vec::new();
-    let mut place = |name: &str,
-                     class: usize,
-                     node: usize,
-                     count: usize,
-                     row: usize,
-                     pes: &mut Vec<Pe>,
-                     clusters: &mut Vec<Cluster>| {
-        let id = clusters.len();
-        let mut pe_ids = Vec::new();
-        for i in 0..count {
-            let pe_id = pes.len();
-            pes.push(Pe {
-                id: pe_id,
-                class,
-                cluster: id,
-                name: format!("{name}-{i}"),
-                x: i % 6,
-                y: row - i / 6, // wrap to the row below if > 6 wide
-            });
-            pe_ids.push(pe_id);
-        }
-        clusters.push(Cluster {
-            id,
-            name: name.into(),
-            class,
-            pe_ids,
-            thermal_node: node,
-        });
-    };
-    place("A15", 0, 0, 4, 3, &mut pes, &mut clusters);
-    place("A7", 1, 1, 4, 2, &mut pes, &mut clusters);
-    place("ACC_SCR", 2, 2, n_scr, 1, &mut pes, &mut clusters);
-    place("ACC_FFT", 3, 3, n_fft, 0, &mut pes, &mut clusters);
-    Platform::new(
-        format!("dse-{n_fft}fft-{n_scr}scr"),
-        classes,
-        pes,
-        clusters,
-        mesh,
-        fp,
-    )
-    .expect("custom SoC valid")
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
 }
 
 fn main() {
     let apps = vec![
-        suite::wifi_tx(WifiParams::default()),
-        suite::wifi_rx(WifiParams { symbols: 4 }),
+        suite::wifi_tx(WifiParams { symbols: 8 }),
+        suite::pulse_doppler(RadarParams { pulses: 8 }),
     ];
 
-    println!("Design-space exploration: FFT-engine provisioning under a");
-    println!("WiFi TX+RX mix at 4 jobs/ms (ETF scheduler)\n");
+    let mut cfg = DseConfig::default();
+    cfg.objectives = vec![Objective::Latency, Objective::Energy];
+    cfg.population = env_usize("DSE_POPULATION", 12);
+    cfg.generations = env_usize("DSE_GENERATIONS", 7);
+    cfg.threads = env_usize("DSE_THREADS", 0);
+    cfg.sim.scheduler = "etf".into();
+    cfg.sim.injection_rate_per_ms = 4.0;
+    cfg.sim.max_jobs = env_usize("DSE_JOBS", 200);
+    cfg.sim.warmup_jobs = cfg.sim.max_jobs / 10;
+    cfg.sim.max_sim_us = 4_000_000.0;
 
+    println!(
+        "Guided DSE on the Table-2 SoC — WiFi-TX + pulse-Doppler mix at \
+         {} jobs/ms",
+        cfg.sim.injection_rate_per_ms
+    );
+    println!(
+        "objectives: latency x energy | budget: {} evaluations \
+         ({} generations x {} designs)\n",
+        cfg.budget_evals(),
+        cfg.generations + 1,
+        cfg.population
+    );
+
+    let mut engine = DseEngine::new(Platform::table2_soc(), cfg)
+        .expect("valid DSE config");
+    // Pin the workload in the checkpoint so `ds3r dse resume` rebuilds
+    // (and refuses to silently change) the same app mix.
+    let mut meta = Json::obj();
+    meta.set(
+        "apps",
+        Json::Arr(vec![
+            Json::Str("wifi-tx".into()),
+            Json::Str("pulse-doppler".into()),
+        ]),
+    )
+    .set("symbols", Json::Num(8.0))
+    .set("pulses", Json::Num(8.0));
+    engine.set_workload_meta(meta);
+    let checkpoint = std::path::Path::new("dse_checkpoint.json");
+    engine
+        .run(&apps, Some(checkpoint), |s| {
+            println!(
+                "gen {:>2}: evals {:>3} (cache hits {:>2}, sims {:>3})  \
+                 front {:>3}  hv {:.4}  best latency {:>8.1} us  \
+                 energy {:>6.2} mJ/job",
+                s.generation,
+                s.evals,
+                s.cache_hits,
+                s.sims,
+                s.front_size,
+                s.hypervolume,
+                s.best[0],
+                s.best[1],
+            );
+        })
+        .expect("search completes");
+
+    // The front, most latency-optimal design first.
     let mut rows = Vec::new();
-    let mut latency = plot::Series::new("avg latency us");
-    for n_fft in [1, 2, 3, 4, 6] {
-        let platform = custom_soc(n_fft, 2);
-        let mut cfg = SimConfig::default();
-        cfg.scheduler = "etf".into();
-        cfg.injection_rate_per_ms = 4.0;
-        cfg.max_jobs = 600;
-        cfg.warmup_jobs = 60;
-        cfg.max_sim_us = 4_000_000.0;
-        let r = Simulation::build(&platform, &apps, &cfg)
-            .expect("valid")
-            .run();
+    let mut front = plot::Series::new("pareto front");
+    for p in engine.archive().sorted_by_first_objective() {
         rows.push(vec![
-            format!("{n_fft}"),
-            format!("{:.1}", r.avg_job_latency_us()),
-            format!("{:.3}", r.throughput_jobs_per_ms()),
-            format!("{:.2}", r.energy_per_job_mj()),
-            format!("{:.1}", r.peak_temp_c),
+            p.genome.id(),
+            format!("{:.1}", p.objectives[0]),
+            format!("{:.2}", p.objectives[1]),
+            p.genome
+                .pe_counts
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            p.genome
+                .opp_masks
+                .iter()
+                .map(|m| m.count_ones().to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            format!("{:.3}", p.genome.hop_latency_us),
+            p.genome
+                .power_budget_w
+                .map(|w| format!("{w:.1}"))
+                .unwrap_or_else(|| "-".into()),
         ]);
-        latency.push(n_fft as f64, r.avg_job_latency_us());
+        front.push(p.objectives[0], p.objectives[1]);
     }
     println!(
-        "{}",
+        "\n{}",
         plot::ascii_table(
-            &["# FFT acc", "avg us", "thru/ms", "mJ/job", "peak C"],
+            &[
+                "design",
+                "latency us",
+                "mJ/job",
+                "PEs A15/A7/SCR/FFT",
+                "opps",
+                "hop us",
+                "cap W",
+            ],
             &rows
         )
     );
     println!(
         "{}",
         plot::ascii_chart(
-            "latency vs FFT-engine count",
-            "# FFT engines",
-            "us",
-            &[latency],
+            "Pareto front: energy per job vs latency",
+            "latency us",
+            "mJ/job",
+            &[front],
             60,
             14
         )
     );
     println!(
-        "The knee identifies the smallest accelerator budget that meets\n\
-         the latency target — the DSSoC provisioning decision the paper's\n\
-         framework is built to answer."
+        "{} non-dominated designs — the latency end buys FFT engines and \
+         full OPP ladders; the energy end prunes accelerators, caps \
+         power, and tolerates queueing.  Checkpoint: {}",
+        engine.archive().len(),
+        checkpoint.display()
     );
 }

@@ -3,6 +3,10 @@
 //! Subcommands:
 //! * `run`        — one simulation, full report.
 //! * `sweep`      — scheduler × injection-rate grid, multithreaded.
+//! * `scenario`   — scenario preset library + scenario sweeps.
+//! * `dse`        — guided design-space exploration: `run` a
+//!   multi-objective hardware search, `resume` it from a checkpoint,
+//!   print or `export` the Pareto `front` (see [`crate::dse`]).
 //! * `reproduce`  — regenerate the paper's tables/figures
 //!   (`table1`, `table2`, `fig2`, `fig3`, `all`).
 //! * `validate`   — analytical model vs fine-grained reference
@@ -174,6 +178,15 @@ pub fn config_from_args(args: &Args) -> Result<SimConfig> {
     } else {
         SimConfig::default()
     };
+    apply_sim_flags(args, &mut cfg)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Overlay the common simulation flags onto an existing config — shared
+/// between `config_from_args` and the `dse` subcommand (whose base
+/// `SimConfig` may come from a DSE config file instead).
+pub fn apply_sim_flags(args: &Args, cfg: &mut SimConfig) -> Result<()> {
     if args.has("sched") {
         cfg.scheduler = args.str_or("sched", "etf");
     }
@@ -221,15 +234,21 @@ pub fn config_from_args(args: &Args) -> Result<SimConfig> {
             &args.str_or("scenario", ""),
         )?);
     }
-    cfg.validate()?;
-    Ok(cfg)
+    Ok(())
+}
+
+/// The workload triple behind `--apps` / `--symbols` / `--pulses`.
+fn workload_from_args(args: &Args) -> Result<(Vec<String>, usize, usize)> {
+    Ok((
+        args.list_or("apps", &["wifi-tx"]),
+        args.usize_or("symbols", 12)?,
+        args.usize_or("pulses", 16)?,
+    ))
 }
 
 /// Build the workload from `--apps` / `--symbols` / `--pulses`.
 pub fn apps_from_args(args: &Args) -> Result<Vec<AppGraph>> {
-    let names = args.list_or("apps", &["wifi-tx"]);
-    let symbols = args.usize_or("symbols", 12)?;
-    let pulses = args.usize_or("pulses", 16)?;
+    let (names, symbols, pulses) = workload_from_args(args)?;
     names
         .iter()
         .map(|n| app_by_name(n, symbols, pulses))
@@ -385,6 +404,9 @@ pub fn cmd_list() -> String {
     out.push_str("scenarios:  ");
     out.push_str(&crate::scenario::presets::names().join(", "));
     out.push_str(", or a scenario .json file\n");
+    out.push_str(
+        "objectives: latency, energy, peak_temp (dse subcommand)\n",
+    );
     out
 }
 
@@ -510,9 +532,380 @@ fn cmd_scenario_sweep(args: &Args) -> Result<String> {
 }
 
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
+    crate::util::default_threads()
+}
+
+// ---------------------------------------------------------------------------
+// dse: guided design-space exploration
+// ---------------------------------------------------------------------------
+
+/// `ds3r dse <run|resume|front|export>` driver.
+pub fn cmd_dse(args: &Args) -> Result<String> {
+    let sub = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("run");
+    match sub {
+        "run" => cmd_dse_run(args),
+        "resume" => cmd_dse_resume(args),
+        "front" => cmd_dse_front(args),
+        "export" => cmd_dse_export(args),
+        other => Err(Error::Config(format!(
+            "unknown dse subcommand '{other}' (run, resume, front, export)"
+        ))),
+    }
+}
+
+/// Assemble a `DseConfig` from `--dse-config` plus flag overrides.
+fn dse_config_from_args(args: &Args) -> Result<crate::dse::DseConfig> {
+    use crate::dse::{DseConfig, Objective};
+    let mut cfg = if args.has("dse-config") {
+        DseConfig::load(std::path::Path::new(
+            &args.str_or("dse-config", ""),
+        ))?
+    } else {
+        DseConfig::default()
+    };
+    if args.has("objectives") {
+        cfg.objectives = args
+            .list_or("objectives", &[])
+            .iter()
+            .map(|s| Objective::parse(s))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if args.has("algorithm") {
+        cfg.algorithm = args.str_or("algorithm", "nsga2");
+    }
+    cfg.population = args.usize_or("population", cfg.population)?;
+    cfg.generations = args.usize_or("generations", cfg.generations)?;
+    cfg.search_seed =
+        args.usize_or("search-seed", cfg.search_seed as usize)? as u64;
+    cfg.mutation_rate = args.f64_or("mutation", cfg.mutation_rate)?;
+    cfg.crossover_rate = args.f64_or("crossover", cfg.crossover_rate)?;
+    cfg.min_pes_per_cluster =
+        args.usize_or("min-pes", cfg.min_pes_per_cluster)?;
+    cfg.max_pes_per_cluster =
+        args.usize_or("max-pes", cfg.max_pes_per_cluster)?;
+    cfg.threads = args.usize_or("threads", cfg.threads)?;
+    if args.has("eval-seeds") {
+        cfg.seeds = args
+            .list_or("eval-seeds", &[])
+            .iter()
+            .map(|s| {
+                s.parse::<u64>().map_err(|_| {
+                    Error::Config(format!("--eval-seeds: bad seed '{s}'"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if args.has("eval-scenarios") {
+        cfg.scenarios = args.list_or("eval-scenarios", &[]);
+    }
+    // Base-simulation flags (--sched, --rate, --jobs, ...) overlay the
+    // embedded SimConfig.
+    apply_sim_flags(args, &mut cfg.sim)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn dse_progress_line(s: &crate::stats::DseGenStats) -> String {
+    let best = s
+        .best
+        .iter()
+        .map(|b| format!("{b:.1}"))
+        .collect::<Vec<_>>()
+        .join("/");
+    format!(
+        "gen {:>3}: evals {:>3} (cache {:>2}) sims {:>3}  front {:>3}  \
+         hv {:.4}  best {}\n",
+        s.generation, s.evals, s.cache_hits, s.sims, s.front_size, best
+    )
+}
+
+/// Render the Pareto front as a table (sorted by the first objective).
+fn dse_front_table(engine: &crate::dse::DseEngine) -> String {
+    let objectives = &engine.config().objectives;
+    let mut headers: Vec<String> = vec!["design".into()];
+    for o in objectives {
+        headers.push(format!("{} ({})", o.name(), o.unit()));
+    }
+    headers.push("PEs".into());
+    headers.push("opps".into());
+    headers.push("hop us".into());
+    headers.push("BW B/us".into());
+    headers.push("cap W".into());
+    let header_refs: Vec<&str> =
+        headers.iter().map(String::as_str).collect();
+    let base = engine.space().base();
+    let rows: Vec<Vec<String>> = engine
+        .archive()
+        .sorted_by_first_objective()
+        .into_iter()
+        .map(|p| {
+            let mut row = vec![p.genome.id()];
+            for v in &p.objectives {
+                row.push(format!("{v:.2}"));
+            }
+            row.push(
+                p.genome
+                    .pe_counts
+                    .iter()
+                    .map(|c| c.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            );
+            row.push(
+                p.genome
+                    .opp_masks
+                    .iter()
+                    .map(|m| m.count_ones().to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            );
+            row.push(format!("{:.3}", p.genome.hop_latency_us));
+            row.push(format!("{:.0}", p.genome.link_bandwidth));
+            row.push(
+                p.genome
+                    .power_budget_w
+                    .map(|w| format!("{w:.1}"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+            row
+        })
+        .collect();
+    let mut out = format!(
+        "Pareto front over {} (base platform '{}', clusters {}):\n",
+        objectives
+            .iter()
+            .map(|o| o.name())
+            .collect::<Vec<_>>()
+            .join(" x "),
+        base.name,
+        base.clusters
+            .iter()
+            .map(|c| c.name.as_str())
+            .collect::<Vec<_>>()
+            .join("/"),
+    );
+    out.push_str(&plot::ascii_table(&header_refs, &rows));
+    out
+}
+
+/// Encode the CLI workload flags as checkpoint metadata.
+fn dse_workload_meta(
+    names: &[String],
+    symbols: usize,
+    pulses: usize,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut m = Json::obj();
+    m.set(
+        "apps",
+        Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()),
+    )
+    .set("symbols", Json::Num(symbols as f64))
+    .set("pulses", Json::Num(pulses as f64));
+    m
+}
+
+fn cmd_dse_run(args: &Args) -> Result<String> {
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let (names, symbols, pulses) = workload_from_args(args)?;
+    let apps = names
+        .iter()
+        .map(|n| app_by_name(n, symbols, pulses))
+        .collect::<Result<Vec<_>>>()?;
+    let cfg = dse_config_from_args(args)?;
+    let checkpoint = args.str_or("checkpoint", "dse_checkpoint.json");
+    let budget = cfg.budget_evals();
+    let mut engine = crate::dse::DseEngine::new(platform, cfg)?;
+    engine.set_workload_meta(dse_workload_meta(&names, symbols, pulses));
+    let mut out = format!(
+        "DSE: {} search, budget {} evaluations ({} x {} designs)\n",
+        engine.config().algorithm,
+        budget,
+        engine.target_generations(),
+        engine.config().population,
+    );
+    engine.run(
+        &apps,
+        Some(std::path::Path::new(&checkpoint)),
+        |s| out.push_str(&dse_progress_line(s)),
+    )?;
+    out.push('\n');
+    out.push_str(&dse_front_table(&engine));
+    out.push_str(&format!(
+        "\ncheckpoint written to {checkpoint} — `ds3r dse front \
+         --checkpoint {checkpoint}` to revisit, `ds3r dse resume \
+         --checkpoint {checkpoint} --generations N` to extend\n"
+    ));
+    Ok(out)
+}
+
+fn cmd_dse_resume(args: &Args) -> Result<String> {
+    if !args.has("checkpoint") {
+        return Err(Error::Config(
+            "dse resume requires --checkpoint <file>".into(),
+        ));
+    }
+    let checkpoint = args.str_or("checkpoint", "");
+    let mut engine = crate::dse::DseEngine::from_checkpoint_file(
+        std::path::Path::new(&checkpoint),
+    )?;
+    // Rebuild the workload the checkpoint pins; refuse a silent switch
+    // (cached metrics and the archive would mix incomparable
+    // workloads).  The metadata is treated as usable only when the
+    // full apps/symbols/pulses schema is present — a partial or
+    // foreign meta blob must not be patched up with defaults.
+    let meta_workload = engine.workload_meta().and_then(|meta| {
+        use crate::util::json::Json;
+        let apps: Vec<String> = meta
+            .get("apps")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(String::from))
+            .collect::<Option<Vec<_>>>()?;
+        if apps.is_empty() {
+            return None;
+        }
+        let symbols = meta.get("symbols").and_then(Json::as_usize)?;
+        let pulses = meta.get("pulses").and_then(Json::as_usize)?;
+        Some((apps, symbols, pulses))
+    });
+    let apps = match meta_workload {
+        Some((stored, symbols, pulses)) => {
+            let (names, fsym, fpul) = workload_from_args(args)?;
+            if args.has("apps") && names != stored {
+                return Err(Error::Config(format!(
+                    "checkpoint pins workload --apps {} (got {})",
+                    stored.join(","),
+                    names.join(",")
+                )));
+            }
+            if args.has("symbols") && fsym != symbols {
+                return Err(Error::Config(format!(
+                    "checkpoint pins --symbols {symbols} (got {fsym})"
+                )));
+            }
+            if args.has("pulses") && fpul != pulses {
+                return Err(Error::Config(format!(
+                    "checkpoint pins --pulses {pulses} (got {fpul})"
+                )));
+            }
+            stored
+                .iter()
+                .map(|n| app_by_name(n, symbols, pulses))
+                .collect::<Result<Vec<_>>>()?
+        }
+        // Library-written checkpoints may omit (or carry a foreign)
+        // workload metadata blob; never guess a default workload
+        // silently — demand explicit flags.
+        None => {
+            if !args.has("apps") {
+                return Err(Error::Config(
+                    "checkpoint carries no usable workload metadata; \
+                     pass the original workload explicitly (--apps, and \
+                     --symbols/--pulses if not default)"
+                        .into(),
+                ));
+            }
+            apps_from_args(args)?
+        }
+    };
+    if args.has("generations") {
+        engine.set_generations(args.usize_or("generations", 0)?);
+    }
+    if engine.is_done() {
+        let done = engine.completed_generations() - 1;
+        return Ok(format!(
+            "search already complete at generation {done}; pass \
+             --generations N (> {done}) to extend\n{}",
+            dse_front_table(&engine)
+        ));
+    }
+    let mut out = format!(
+        "resuming from {checkpoint} at generation {} (target {})\n",
+        engine.completed_generations(),
+        engine.target_generations(),
+    );
+    engine.run(
+        &apps,
+        Some(std::path::Path::new(&checkpoint)),
+        |s| out.push_str(&dse_progress_line(s)),
+    )?;
+    out.push('\n');
+    out.push_str(&dse_front_table(&engine));
+    Ok(out)
+}
+
+fn cmd_dse_front(args: &Args) -> Result<String> {
+    if !args.has("checkpoint") {
+        return Err(Error::Config(
+            "dse front requires --checkpoint <file>".into(),
+        ));
+    }
+    let engine = crate::dse::DseEngine::from_checkpoint_file(
+        std::path::Path::new(&args.str_or("checkpoint", "")),
+    )?;
+    if args.has("json") {
+        return Ok(engine.archive().to_json().to_string_pretty());
+    }
+    let mut out = dse_front_table(&engine);
+    if let Some(last) = engine.history().last() {
+        out.push_str(&format!(
+            "after generation {}: {} designs on the front, hypervolume \
+             proxy {:.4}\n",
+            last.generation, last.front_size, last.hypervolume
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_dse_export(args: &Args) -> Result<String> {
+    if !args.has("checkpoint") {
+        return Err(Error::Config(
+            "dse export requires --checkpoint <file>".into(),
+        ));
+    }
+    let engine = crate::dse::DseEngine::from_checkpoint_file(
+        std::path::Path::new(&args.str_or("checkpoint", "")),
+    )?;
+    let dir = args.str_or("out", "dse_designs");
+    std::fs::create_dir_all(&dir)?;
+    let mut out = String::new();
+    for p in engine.archive().sorted_by_first_objective() {
+        let path = format!("{dir}/{}.json", p.genome.id());
+        engine
+            .space()
+            .export_platform(&p.genome, std::path::Path::new(&path))?;
+        // The power budget is a runtime (SimConfig) knob, not a
+        // platform property — ship it as a companion config so the
+        // exported design reproduces its evaluated behaviour.
+        if let Some(w) = p.genome.power_budget_w {
+            let mut sim = engine.config().sim.clone();
+            sim.dtpm.power_cap_w = Some(w);
+            let cfg_path = format!("{dir}/{}.config.json", p.genome.id());
+            sim.save(std::path::Path::new(&cfg_path))?;
+            out.push_str(&format!(
+                "wrote {path} (+ {cfg_path}: {w:.1} W power cap)\n"
+            ));
+        } else {
+            out.push_str(&format!("wrote {path}\n"));
+        }
+    }
+    let front_path = format!("{dir}/front.json");
+    std::fs::write(
+        &front_path,
+        engine.archive().to_json().to_string_pretty(),
+    )?;
+    out.push_str(&format!(
+        "wrote {front_path} ({} designs) — run a design with `ds3r run \
+         --platform <file>`, adding `--config <id>.config.json` for \
+         power-capped designs\n",
+        engine.archive().len()
+    ));
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -753,6 +1146,16 @@ USAGE:
                  [--csv out.csv] (+ run flags)
   ds3r scenario  list | show <name> | export [--out dir] |
                  sweep [--scenarios all|a,b] (+ run flags)
+  ds3r dse       run    [--dse-config file.json] [--objectives latency,energy]
+                        [--population 16] [--generations 13]
+                        [--algorithm nsga2|random] [--search-seed 7]
+                        [--mutation 0.35] [--crossover 0.9]
+                        [--min-pes 1] [--max-pes 8] [--eval-seeds 1,2]
+                        [--eval-scenarios bursty-wifi] [--threads N]
+                        [--checkpoint dse_checkpoint.json] (+ run flags)
+                 resume --checkpoint file [--generations N]
+                 front  --checkpoint file [--json]
+                 export --checkpoint file [--out dse_designs]
   ds3r reproduce [table1|table2|fig2|fig3|all] [--quick] [--jobs N]
                  [--rates lo:hi:step] [--csv fig3.csv]
   ds3r validate  [--jobs 200]
@@ -886,6 +1289,96 @@ mod tests {
         assert!(out.contains("\"at_us\""));
         assert!(cmd_scenario(&args("scenario frobnicate")).is_err());
         assert!(cmd_scenario(&args("scenario show")).is_err());
+    }
+
+    #[test]
+    fn dse_run_front_resume_export_cycle() {
+        let dir = std::env::temp_dir().join("ds3r_cli_dse_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("ckpt.json");
+        let ckpt_s = ckpt.to_string_lossy().into_owned();
+
+        let out = cmd_dse(&args(&format!(
+            "dse run --population 4 --generations 1 --jobs 25 --warmup 2 \
+             --rate 2 --symbols 2 --threads 2 --search-seed 11 \
+             --checkpoint {ckpt_s}"
+        )))
+        .unwrap();
+        assert!(out.contains("Pareto front"), "{out}");
+        assert!(out.contains("gen   0"), "{out}");
+        assert!(ckpt.exists());
+
+        let out = cmd_dse(&args(&format!(
+            "dse front --checkpoint {ckpt_s}"
+        )))
+        .unwrap();
+        assert!(out.contains("design"), "{out}");
+
+        // Budget exhausted: resume reports completion...
+        let out = cmd_dse(&args(&format!(
+            "dse resume --symbols 2 --checkpoint {ckpt_s}"
+        )))
+        .unwrap();
+        assert!(out.contains("already complete"), "{out}");
+        // ...the checkpoint pins the workload against silent switches...
+        let err = cmd_dse(&args(&format!(
+            "dse resume --apps wifi-rx --checkpoint {ckpt_s}"
+        )));
+        assert!(err.is_err(), "conflicting --apps must be rejected");
+        let err = cmd_dse(&args(&format!(
+            "dse resume --symbols 9 --checkpoint {ckpt_s}"
+        )));
+        assert!(err.is_err(), "conflicting --symbols must be rejected");
+        // ...and --generations extends the run.
+        let out = cmd_dse(&args(&format!(
+            "dse resume --symbols 2 --generations 2 --checkpoint {ckpt_s}"
+        )))
+        .unwrap();
+        assert!(out.contains("gen   2"), "{out}");
+
+        let export_dir = dir.join("designs");
+        let out = cmd_dse(&args(&format!(
+            "dse export --checkpoint {ckpt_s} --out {}",
+            export_dir.to_string_lossy()
+        )))
+        .unwrap();
+        assert!(out.contains("front.json"), "{out}");
+        // Every exported design is a loadable platform.
+        let front = std::fs::read_dir(&export_dir).unwrap().count();
+        assert!(front >= 2, "expected front.json + >=1 design");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dse_flag_validation() {
+        assert!(cmd_dse(&args("dse frobnicate")).is_err());
+        assert!(cmd_dse(&args("dse resume")).is_err());
+        assert!(cmd_dse(&args("dse front")).is_err());
+        assert!(cmd_dse(&args("dse export")).is_err());
+        assert!(dse_config_from_args(&args(
+            "dse run --objectives latency,carbon"
+        ))
+        .is_err());
+        assert!(dse_config_from_args(&args(
+            "dse run --algorithm annealing"
+        ))
+        .is_err());
+        let c = dse_config_from_args(&args(
+            "dse run --objectives energy,peak_temp --population 6 \
+             --eval-seeds 3,4 --sched met",
+        ))
+        .unwrap();
+        assert_eq!(c.population, 6);
+        assert_eq!(c.seeds, vec![3, 4]);
+        assert_eq!(c.sim.scheduler, "met");
+        assert_eq!(
+            c.objectives,
+            vec![
+                crate::dse::Objective::Energy,
+                crate::dse::Objective::PeakTemp
+            ]
+        );
     }
 
     #[test]

@@ -4,12 +4,19 @@
 //! (de)serializable as JSON so experiments are reproducible from a
 //! config file (`ds3r run --config exp.json`).  Defaults mirror the
 //! paper's scheduling case study (§3).
+//!
+//! Design-space exploration runs are configured by [`DseConfig`]
+//! (re-exported from [`crate::dse`]), which embeds a base `SimConfig`
+//! for its evaluations and follows the same JSON-with-defaults and
+//! validate-on-parse conventions.
 
 use std::path::PathBuf;
 
 use crate::scenario::Scenario;
 use crate::util::json::Json;
 use crate::{Error, Result};
+
+pub use crate::dse::DseConfig;
 
 /// Job inter-arrival process.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

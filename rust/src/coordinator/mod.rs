@@ -9,6 +9,12 @@
 //! [`Simulation`], so the sweep scales linearly with cores.  Helpers
 //! assemble the Figure-3 experiment and the hardware-validation
 //! comparison from sweep results.
+//!
+//! The underlying fan-out primitive, [`parallel_map`], is shared with
+//! the guided design-space exploration engine ([`crate::dse`]): results
+//! land in input order regardless of thread interleaving, which is what
+//! makes parallel sweeps and DSE generations bit-identical to their
+//! serial counterparts.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -20,7 +26,70 @@ use crate::scenario::Scenario;
 use crate::sim::Simulation;
 use crate::stats::{PhaseStats, SimReport};
 use crate::util::plot::Series;
-use crate::Result;
+use crate::{Error, Result};
+
+/// Run `f` over `items` on up to `threads` OS threads, returning results
+/// in input order.  This is the shared fan-out primitive behind
+/// [`run_sweep`], [`run_scenario_sweep`] and the DSE evaluator
+/// ([`crate::dse`]): an atomic work index hands items to workers and
+/// each result lands in its input slot, so the output is independent of
+/// thread interleaving — a parallel run is bit-identical to a serial
+/// one whenever `f` itself is deterministic.
+pub fn parallel_map<T, R, F>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> Vec<Result<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> Result<R> + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<Result<R>>>> =
+        Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("all items filled"))
+        .collect()
+}
+
+/// Unwrap a [`parallel_map`] result vector, aggregating failures into a
+/// single error ("<what>: <label>: <cause>; ...").
+fn collect_results<R>(
+    results: Vec<Result<R>>,
+    label: impl Fn(usize) -> String,
+    what: &str,
+) -> Result<Vec<R>> {
+    let mut out = Vec::with_capacity(results.len());
+    let mut errs = Vec::new();
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(v) => out.push(v),
+            Err(e) => errs.push(format!("{}: {e}", label(i))),
+        }
+    }
+    if errs.is_empty() {
+        Ok(out)
+    } else {
+        Err(Error::Sim(format!("{what}: {}", errs.join("; "))))
+    }
+}
 
 /// One sweep point: a scheduler at an injection rate (and seed).
 #[derive(Debug, Clone)]
@@ -74,55 +143,19 @@ pub fn run_sweep(
     points: &[SweepPoint],
     threads: usize,
 ) -> Result<Vec<SweepResult>> {
-    let threads = threads.max(1);
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<SweepResult>>> =
-        Mutex::new(vec![None; points.len()]);
-    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(points.len().max(1)) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= points.len() {
-                    break;
-                }
-                let p = &points[i];
-                let mut cfg = base.clone();
-                cfg.scheduler = p.scheduler.clone();
-                cfg.injection_rate_per_ms = p.rate_per_ms;
-                cfg.seed = p.seed;
-                match Simulation::build(platform, apps, &cfg) {
-                    Ok(sim) => {
-                        let report = sim.run();
-                        results.lock().unwrap()[i] = Some(
-                            SweepResult::from_report(p.clone(), &report),
-                        );
-                    }
-                    Err(e) => {
-                        errors
-                            .lock()
-                            .unwrap()
-                            .push(format!("{}@{}: {e}", p.scheduler, p.rate_per_ms));
-                    }
-                }
-            });
-        }
+    let results = parallel_map(points, threads, |_, p| {
+        let mut cfg = base.clone();
+        cfg.scheduler = p.scheduler.clone();
+        cfg.injection_rate_per_ms = p.rate_per_ms;
+        cfg.seed = p.seed;
+        let report = Simulation::build(platform, apps, &cfg)?.run();
+        Ok(SweepResult::from_report(p.clone(), &report))
     });
-
-    let errs = errors.into_inner().unwrap();
-    if !errs.is_empty() {
-        return Err(crate::Error::Sim(format!(
-            "sweep failures: {}",
-            errs.join("; ")
-        )));
-    }
-    Ok(results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("all points filled"))
-        .collect())
+    collect_results(
+        results,
+        |i| format!("{}@{}", points[i].scheduler, points[i].rate_per_ms),
+        "sweep failures",
+    )
 }
 
 /// Condensed result of one scenario sweep point.
@@ -151,63 +184,28 @@ pub fn run_scenario_sweep(
     scenarios: &[Scenario],
     threads: usize,
 ) -> Result<Vec<ScenarioResult>> {
-    let threads = threads.max(1);
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<ScenarioResult>>> =
-        Mutex::new(vec![None; scenarios.len()]);
-    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(scenarios.len().max(1)) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= scenarios.len() {
-                    break;
-                }
-                let sc = &scenarios[i];
-                let mut cfg = base.clone();
-                cfg.scenario = Some(sc.clone());
-                match Simulation::build(platform, apps, &cfg) {
-                    Ok(sim) => {
-                        let r = sim.run();
-                        let s = r.latency_summary();
-                        results.lock().unwrap()[i] =
-                            Some(ScenarioResult {
-                                scenario: sc.name.clone(),
-                                avg_latency_us: s.mean,
-                                p95_latency_us: s.p95,
-                                completed_jobs: r.completed_jobs,
-                                injected_jobs: r.injected_jobs,
-                                energy_per_job_mj: r.energy_per_job_mj(),
-                                avg_power_w: r.avg_power_w,
-                                peak_temp_c: r.peak_temp_c,
-                                phases: r.phases,
-                            });
-                    }
-                    Err(e) => {
-                        errors
-                            .lock()
-                            .unwrap()
-                            .push(format!("{}: {e}", sc.name));
-                    }
-                }
-            });
-        }
+    let results = parallel_map(scenarios, threads, |_, sc| {
+        let mut cfg = base.clone();
+        cfg.scenario = Some(sc.clone());
+        let r = Simulation::build(platform, apps, &cfg)?.run();
+        let s = r.latency_summary();
+        Ok(ScenarioResult {
+            scenario: sc.name.clone(),
+            avg_latency_us: s.mean,
+            p95_latency_us: s.p95,
+            completed_jobs: r.completed_jobs,
+            injected_jobs: r.injected_jobs,
+            energy_per_job_mj: r.energy_per_job_mj(),
+            avg_power_w: r.avg_power_w,
+            peak_temp_c: r.peak_temp_c,
+            phases: r.phases,
+        })
     });
-
-    let errs = errors.into_inner().unwrap();
-    if !errs.is_empty() {
-        return Err(crate::Error::Sim(format!(
-            "scenario sweep failures: {}",
-            errs.join("; ")
-        )));
-    }
-    Ok(results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("all scenarios filled"))
-        .collect())
+    collect_results(
+        results,
+        |i| scenarios[i].name.clone(),
+        "scenario sweep failures",
+    )
 }
 
 /// Build the Figure-3 point grid: every scheduler at every rate.
@@ -321,6 +319,42 @@ mod tests {
         c.max_jobs = 40;
         c.warmup_jobs = 5;
         c
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_and_aggregates_errors() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = parallel_map(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            if x % 13 == 5 {
+                Err(crate::Error::Sim(format!("boom{x}")))
+            } else {
+                Ok(x * 2)
+            }
+        });
+        assert_eq!(out.len(), 64);
+        for (i, r) in out.iter().enumerate() {
+            if i % 13 == 5 {
+                assert!(r.is_err(), "item {i}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 2);
+            }
+        }
+        let all_ok = parallel_map(&items, 3, |_, &x| Ok(x + 1));
+        let vals =
+            collect_results(all_ok, |i| format!("{i}"), "failures").unwrap();
+        assert_eq!(vals, (1..=64).collect::<Vec<_>>());
+        let one_bad = parallel_map(&items, 3, |_, &x| {
+            if x == 7 {
+                Err(crate::Error::Sim("seven".into()))
+            } else {
+                Ok(x)
+            }
+        });
+        let err = collect_results(one_bad, |i| format!("item{i}"), "fail")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("item7") && msg.contains("seven"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,496 @@
+//! Candidate evaluation: decode → simulate → aggregate, fanned out over
+//! OS threads with a canonical-key result cache.
+//!
+//! One *evaluation* of a genome runs `seeds × scenarios` independent
+//! simulations (scenario presets model robustness to dynamic
+//! conditions; an empty scenario list means one static run per seed)
+//! and aggregates the report metrics by arithmetic mean.  Results are
+//! cached keyed by the genome's canonical encoding, so designs the
+//! search revisits — common once the population converges — cost
+//! nothing.  Evaluations are deterministic functions of (genome, config),
+//! which together with [`crate::coordinator::parallel_map`]'s
+//! input-order result placement makes a whole DSE generation
+//! bit-identical across thread counts.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::genome::{GenomeSpace, PlatformGenome};
+use super::Objective;
+use crate::app::AppGraph;
+use crate::config::SimConfig;
+use crate::coordinator::parallel_map;
+use crate::scenario::Scenario;
+use crate::sim::Simulation;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Aggregated metrics of one genome evaluation (means over the
+/// `seeds × scenarios` run grid).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalMetrics {
+    pub avg_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub energy_per_job_mj: f64,
+    pub peak_temp_c: f64,
+    pub throughput_jobs_per_ms: f64,
+    pub avg_power_w: f64,
+    /// Mean completed/injected ratio — < 1 when a design saturates and
+    /// hits the simulated-time wall.
+    pub completed_frac: f64,
+    /// Simulations aggregated into this record.
+    pub runs: usize,
+}
+
+impl EvalMetrics {
+    /// Objective value (lower is better).  Latency carries a completion
+    /// penalty: a design that only finishes a fraction `f` of its
+    /// offered load is scored `avg * (1 + 9(1-f))`, so saturated
+    /// configurations rank strictly behind ones that keep up, without
+    /// introducing non-finite values (which would not survive the JSON
+    /// checkpoint round-trip).
+    pub fn objective(&self, o: Objective) -> f64 {
+        match o {
+            Objective::Latency => {
+                self.avg_latency_us
+                    * (1.0 + 9.0 * (1.0 - self.completed_frac).max(0.0))
+            }
+            Objective::Energy => self.energy_per_job_mj,
+            Objective::PeakTemp => self.peak_temp_c,
+        }
+    }
+
+    pub fn objective_vector(&self, objectives: &[Objective]) -> Vec<f64> {
+        objectives.iter().map(|&o| self.objective(o)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("avg_latency_us", Json::Num(self.avg_latency_us))
+            .set("p95_latency_us", Json::Num(self.p95_latency_us))
+            .set("energy_per_job_mj", Json::Num(self.energy_per_job_mj))
+            .set("peak_temp_c", Json::Num(self.peak_temp_c))
+            .set(
+                "throughput_jobs_per_ms",
+                Json::Num(self.throughput_jobs_per_ms),
+            )
+            .set("avg_power_w", Json::Num(self.avg_power_w))
+            .set("completed_frac", Json::Num(self.completed_frac))
+            .set("runs", Json::Num(self.runs as f64));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<EvalMetrics> {
+        Ok(EvalMetrics {
+            avg_latency_us: j.req_f64("avg_latency_us")?,
+            p95_latency_us: j.req_f64("p95_latency_us")?,
+            energy_per_job_mj: j.req_f64("energy_per_job_mj")?,
+            peak_temp_c: j.req_f64("peak_temp_c")?,
+            throughput_jobs_per_ms: j.req_f64("throughput_jobs_per_ms")?,
+            avg_power_w: j.req_f64("avg_power_w")?,
+            completed_frac: j.req_f64("completed_frac")?,
+            runs: j.req_f64("runs")? as usize,
+        })
+    }
+}
+
+/// Parallel, caching evaluator.
+#[derive(Debug, Clone)]
+pub struct Evaluator {
+    base_cfg: SimConfig,
+    seeds: Vec<u64>,
+    scenarios: Vec<Scenario>,
+    threads: usize,
+    /// When true (the space explores the power-budget gene), the
+    /// genome's `power_budget_w` fully owns the DTPM cap — `None`
+    /// means *uncapped*, clearing any base-config cap.  When false the
+    /// gene is pinned to `None` and the base config's cap stands.
+    genome_owns_power_cap: bool,
+    cache: BTreeMap<String, EvalMetrics>,
+    /// Genome evaluations requested (cache hits included).
+    pub evals_requested: usize,
+    /// Evaluations served from the cache.
+    pub cache_hits: usize,
+    /// Individual simulations executed.
+    pub sims_run: usize,
+}
+
+impl Evaluator {
+    pub fn new(
+        base_cfg: SimConfig,
+        seeds: Vec<u64>,
+        scenarios: Vec<Scenario>,
+        threads: usize,
+        genome_owns_power_cap: bool,
+    ) -> Result<Evaluator> {
+        if seeds.is_empty() {
+            return Err(Error::Config(
+                "evaluator needs at least one seed".into(),
+            ));
+        }
+        Ok(Evaluator {
+            base_cfg,
+            seeds,
+            scenarios,
+            threads: threads.max(1),
+            genome_owns_power_cap,
+            cache: BTreeMap::new(),
+            evals_requested: 0,
+            cache_hits: 0,
+            sims_run: 0,
+        })
+    }
+
+    /// Simulations one (uncached) genome evaluation costs.
+    pub fn runs_per_eval(&self) -> usize {
+        self.seeds.len() * self.scenarios.len().max(1)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Evaluate a batch of genomes, returning metrics in input order.
+    /// Duplicate and previously seen genomes are served from the cache;
+    /// the rest fan out over the evaluator's threads.
+    pub fn evaluate_batch(
+        &mut self,
+        space: &GenomeSpace,
+        apps: &[AppGraph],
+        genomes: &[PlatformGenome],
+    ) -> Result<Vec<EvalMetrics>> {
+        let mut uncached: Vec<(String, PlatformGenome)> = Vec::new();
+        let mut queued: BTreeSet<String> = BTreeSet::new();
+        for g in genomes {
+            let key = g.key();
+            if !self.cache.contains_key(&key) && queued.insert(key.clone())
+            {
+                uncached.push((key, g.clone()));
+            }
+        }
+        self.evals_requested += genomes.len();
+        self.cache_hits += genomes.len() - uncached.len();
+        self.sims_run += uncached.len() * self.runs_per_eval();
+
+        let fresh = parallel_map(&uncached, self.threads, |_, (_, g)| {
+            self.eval_one(space, apps, g)
+        });
+        for ((key, g), m) in uncached.iter().zip(fresh) {
+            match m {
+                Ok(m) => {
+                    self.cache.insert(key.clone(), m);
+                }
+                Err(e) => {
+                    return Err(Error::Sim(format!(
+                        "evaluating design {}: {e}",
+                        g.id()
+                    )))
+                }
+            }
+        }
+        Ok(genomes
+            .iter()
+            .map(|g| self.cache[&g.key()].clone())
+            .collect())
+    }
+
+    /// Decode and run the full `seeds × scenarios` grid for one genome.
+    fn eval_one(
+        &self,
+        space: &GenomeSpace,
+        apps: &[AppGraph],
+        g: &PlatformGenome,
+    ) -> Result<EvalMetrics> {
+        let (platform, cap) = space.decode(g)?;
+        let mut acc = EvalMetrics {
+            avg_latency_us: 0.0,
+            p95_latency_us: 0.0,
+            energy_per_job_mj: 0.0,
+            peak_temp_c: 0.0,
+            throughput_jobs_per_ms: 0.0,
+            avg_power_w: 0.0,
+            completed_frac: 0.0,
+            runs: 0,
+        };
+        let scenario_slots: Vec<Option<&Scenario>> = if self
+            .scenarios
+            .is_empty()
+        {
+            vec![None]
+        } else {
+            self.scenarios.iter().map(Some).collect()
+        };
+        for &seed in &self.seeds {
+            for &sc in &scenario_slots {
+                let mut cfg = self.base_cfg.clone();
+                cfg.seed = seed;
+                // A grid scenario replaces the base config's; a `None`
+                // slot (empty grid) leaves any base scenario in force.
+                if sc.is_some() {
+                    cfg.scenario = sc.cloned();
+                }
+                if self.genome_owns_power_cap {
+                    // The gene is authoritative: `None` = uncapped,
+                    // even when the base config carries a cap.
+                    cfg.dtpm.power_cap_w = cap;
+                }
+                let r = Simulation::build(&platform, apps, &cfg)?.run();
+                let s = r.latency_summary();
+                // A run with zero (post-warmup) completions would report
+                // 0 latency / 0 energy-per-job and look falsely optimal;
+                // substitute finite worst-case surrogates so such a
+                // design is dominated, never preferred.
+                if s.count == 0 || r.completed_jobs == 0 {
+                    acc.avg_latency_us += cfg.max_sim_us;
+                    acc.p95_latency_us += cfg.max_sim_us;
+                    acc.energy_per_job_mj +=
+                        (r.total_energy_j * 1e3).max(1e6);
+                } else {
+                    acc.avg_latency_us += s.mean;
+                    acc.p95_latency_us += s.p95;
+                    acc.energy_per_job_mj += r.energy_per_job_mj();
+                }
+                acc.peak_temp_c += r.peak_temp_c;
+                acc.throughput_jobs_per_ms += r.throughput_jobs_per_ms();
+                acc.avg_power_w += r.avg_power_w;
+                debug_assert!(acc.avg_latency_us.is_finite());
+                acc.completed_frac += if r.injected_jobs > 0 {
+                    r.completed_jobs as f64 / r.injected_jobs as f64
+                } else {
+                    1.0
+                };
+                acc.runs += 1;
+            }
+        }
+        let n = acc.runs.max(1) as f64;
+        acc.avg_latency_us /= n;
+        acc.p95_latency_us /= n;
+        acc.energy_per_job_mj /= n;
+        acc.peak_temp_c /= n;
+        acc.throughput_jobs_per_ms /= n;
+        acc.avg_power_w /= n;
+        acc.completed_frac /= n;
+        Ok(acc)
+    }
+
+    /// Serialize the cache for checkpointing (sorted by canonical key,
+    /// so the output is deterministic).
+    pub fn cache_to_json(&self) -> Json {
+        Json::Arr(
+            self.cache
+                .iter()
+                .map(|(key, m)| {
+                    let mut e = Json::obj();
+                    // The key IS the canonical genome encoding; parse it
+                    // back so checkpoints stay human-readable.
+                    e.set(
+                        "genome",
+                        Json::parse(key).expect("cache key is valid JSON"),
+                    )
+                    .set("metrics", m.to_json());
+                    e
+                })
+                .collect(),
+        )
+    }
+
+    /// Restore the cache from a checkpoint (inverse of
+    /// [`Self::cache_to_json`]).
+    pub fn cache_from_json(&mut self, j: &Json) -> Result<()> {
+        let entries = j.as_arr().ok_or_else(|| {
+            Error::Config("checkpoint cache must be an array".into())
+        })?;
+        for e in entries {
+            let g = PlatformGenome::from_json(
+                e.get("genome").ok_or_else(|| {
+                    Error::Config("cache entry missing genome".into())
+                })?,
+            )?;
+            let m = EvalMetrics::from_json(
+                e.get("metrics").ok_or_else(|| {
+                    Error::Config("cache entry missing metrics".into())
+                })?,
+            )?;
+            self.cache.insert(g.key(), m);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+    use crate::platform::Platform;
+
+    fn small_space() -> GenomeSpace {
+        GenomeSpace::new(
+            Platform::table2_soc(),
+            1,
+            6,
+            (0.02, 0.2),
+            (2000.0, 16000.0),
+            (3.0, 10.0),
+            true,
+        )
+        .unwrap()
+    }
+
+    fn small_cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.max_jobs = 30;
+        c.warmup_jobs = 3;
+        c.injection_rate_per_ms = 2.0;
+        c
+    }
+
+    #[test]
+    fn cache_hits_skip_simulation() {
+        let space = small_space();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let mut ev =
+            Evaluator::new(small_cfg(), vec![1, 2], vec![], 2, true).unwrap();
+        assert_eq!(ev.runs_per_eval(), 2);
+        let g = space.seed_genome();
+        let batch = vec![g.clone(), g.clone()];
+        let r1 = ev.evaluate_batch(&space, &apps, &batch).unwrap();
+        assert_eq!(r1.len(), 2);
+        assert_eq!(r1[0], r1[1]);
+        assert_eq!(ev.sims_run, 2); // one unique genome x two seeds
+        assert_eq!(ev.cache_hits, 1);
+        let sims_before = ev.sims_run;
+        let r2 = ev
+            .evaluate_batch(&space, &apps, std::slice::from_ref(&g))
+            .unwrap();
+        assert_eq!(ev.sims_run, sims_before, "second batch fully cached");
+        assert_eq!(ev.cache_hits, 2);
+        assert_eq!(r2[0], r1[0]);
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial() {
+        let space = small_space();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let mut rng = crate::rng::Rng::new(11);
+        let genomes: Vec<_> =
+            (0..6).map(|_| space.random(&mut rng)).collect();
+        let mut serial =
+            Evaluator::new(small_cfg(), vec![7], vec![], 1, true).unwrap();
+        let mut par =
+            Evaluator::new(small_cfg(), vec![7], vec![], 8, true).unwrap();
+        let a = serial.evaluate_batch(&space, &apps, &genomes).unwrap();
+        let b = par.evaluate_batch(&space, &apps, &genomes).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scenario_presets_enter_the_grid() {
+        let space = small_space();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let sc = crate::scenario::presets::pe_failure();
+        let mut ev =
+            Evaluator::new(small_cfg(), vec![1], vec![sc], 2, true)
+                .unwrap();
+        assert_eq!(ev.runs_per_eval(), 1);
+        let g = space.seed_genome();
+        let m = ev
+            .evaluate_batch(&space, &apps, std::slice::from_ref(&g))
+            .unwrap();
+        assert_eq!(m[0].runs, 1);
+        assert!(m[0].avg_latency_us > 0.0);
+    }
+
+    #[test]
+    fn genome_power_gene_owns_the_cap() {
+        let space = small_space();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let mut capped_base = small_cfg();
+        capped_base.dtpm.power_cap_w = Some(1.0);
+
+        // Gene None + owning evaluator == no cap at all: the gene
+        // clears the base-config cap.
+        let mut owns =
+            Evaluator::new(capped_base.clone(), vec![1], vec![], 1, true)
+                .unwrap();
+        let mut uncapped_ref =
+            Evaluator::new(small_cfg(), vec![1], vec![], 1, true).unwrap();
+        let g = space.seed_genome();
+        let a = owns
+            .evaluate_batch(&space, &apps, std::slice::from_ref(&g))
+            .unwrap();
+        let b = uncapped_ref
+            .evaluate_batch(&space, &apps, std::slice::from_ref(&g))
+            .unwrap();
+        assert_eq!(a, b, "gene None must clear the base cap");
+
+        // Gene Some(w) == base-config cap w under a pinned space.
+        let mut g_capped = space.seed_genome();
+        g_capped.power_budget_w = Some(1.0);
+        let x = owns
+            .evaluate_batch(&space, &apps, std::slice::from_ref(&g_capped))
+            .unwrap();
+        let mut pinned =
+            Evaluator::new(capped_base, vec![1], vec![], 1, false)
+                .unwrap();
+        let y = pinned
+            .evaluate_batch(&space, &apps, std::slice::from_ref(&g))
+            .unwrap();
+        assert_eq!(x, y, "gene Some(w) must equal a base cap of w");
+    }
+
+    #[test]
+    fn metrics_json_roundtrip() {
+        let m = EvalMetrics {
+            avg_latency_us: 123.456,
+            p95_latency_us: 234.5,
+            energy_per_job_mj: 1.25,
+            peak_temp_c: 61.5,
+            throughput_jobs_per_ms: 3.9,
+            avg_power_w: 4.25,
+            completed_frac: 0.975,
+            runs: 4,
+        };
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(EvalMetrics::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn cache_roundtrips_through_json() {
+        let space = small_space();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let mut ev =
+            Evaluator::new(small_cfg(), vec![3], vec![], 2, true).unwrap();
+        let mut rng = crate::rng::Rng::new(13);
+        let genomes: Vec<_> =
+            (0..4).map(|_| space.random(&mut rng)).collect();
+        let res = ev.evaluate_batch(&space, &apps, &genomes).unwrap();
+        let j = Json::parse(&ev.cache_to_json().to_string()).unwrap();
+        let mut ev2 =
+            Evaluator::new(small_cfg(), vec![3], vec![], 2, true).unwrap();
+        ev2.cache_from_json(&j).unwrap();
+        assert_eq!(ev2.cache_len(), ev.cache_len());
+        // Re-evaluating from the restored cache runs zero simulations.
+        let res2 = ev2.evaluate_batch(&space, &apps, &genomes).unwrap();
+        assert_eq!(ev2.sims_run, 0);
+        assert_eq!(res, res2);
+    }
+
+    #[test]
+    fn latency_objective_penalizes_incomplete_runs() {
+        let mut m = EvalMetrics {
+            avg_latency_us: 100.0,
+            p95_latency_us: 0.0,
+            energy_per_job_mj: 1.0,
+            peak_temp_c: 50.0,
+            throughput_jobs_per_ms: 1.0,
+            avg_power_w: 1.0,
+            completed_frac: 1.0,
+            runs: 1,
+        };
+        assert_eq!(m.objective(Objective::Latency), 100.0);
+        m.completed_frac = 0.5;
+        assert!(m.objective(Objective::Latency) > 100.0);
+        assert!(m.objective(Objective::Latency).is_finite());
+        assert_eq!(m.objective(Objective::Energy), 1.0);
+        assert_eq!(m.objective(Objective::PeakTemp), 50.0);
+    }
+}

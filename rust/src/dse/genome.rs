@@ -1,0 +1,853 @@
+//! Platform genome: a compact, serializable encoding of the mutable
+//! hardware parameters of a DSSoC, with validated decode back into a
+//! [`Platform`] and the variation operators (mutation, crossover) the
+//! evolutionary search applies.
+//!
+//! A genome is always interpreted relative to a *base platform* (held by
+//! [`GenomeSpace`]), which contributes everything the search does not
+//! touch: PE classes with their latency/power coefficients, the thermal
+//! floorplan, cluster→thermal-node wiring, and the memory latency.  The
+//! genes are:
+//!
+//! * `pe_counts[c]`   — PE instances in cluster `c` (the Table-2
+//!   provisioning question: how many FFT engines? how many big cores?)
+//! * `opp_masks[c]`   — bitmask of enabled OPPs for cluster `c`'s class
+//!   (bit *i* = i-th entry of the class ladder; DVFS-domain pruning à la
+//!   Montanaro et al., arXiv:2411.15574)
+//! * `hop_latency_us` / `link_bandwidth` — NoC fabric speed grade
+//! * `power_budget_w` — optional DTPM SoC power cap applied at runtime
+//!
+//! Decoding re-derives the mesh (row-major placement on a near-square
+//! grid) and re-instantiates per-cluster PEs; everything else is carried
+//! over from the base platform unchanged.
+
+use std::path::Path;
+
+use crate::platform::{Cluster, NocParams, Pe, PeClass, Platform};
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// A candidate hardware configuration in genome form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformGenome {
+    /// PE instances per base cluster (same order as the base platform's
+    /// cluster list).
+    pub pe_counts: Vec<usize>,
+    /// Enabled-OPP bitmask per cluster; bit `i` enables the i-th OPP of
+    /// the cluster's class ladder.  At least one bit per cluster.
+    pub opp_masks: Vec<u64>,
+    /// Per-hop router+link latency (µs).
+    pub hop_latency_us: f64,
+    /// Link bandwidth (bytes/µs).
+    pub link_bandwidth: f64,
+    /// DTPM SoC power budget (W); `None` = uncapped.
+    pub power_budget_w: Option<f64>,
+}
+
+impl PlatformGenome {
+    /// Stable 64-bit identity (FNV-1a over the canonical encoding).
+    /// Used for design ids and checkpoint bookkeeping; the evaluation
+    /// cache keys on the full canonical encoding ([`Self::key`]) so hash
+    /// collisions can never alias two designs.
+    pub fn hash64(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+        const FNV_PRIME: u64 = 0x100000001b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        for &c in &self.pe_counts {
+            eat(c as u64);
+        }
+        for &m in &self.opp_masks {
+            eat(m);
+        }
+        eat(self.hop_latency_us.to_bits());
+        eat(self.link_bandwidth.to_bits());
+        match self.power_budget_w {
+            None => eat(0),
+            Some(w) => {
+                eat(1);
+                eat(w.to_bits());
+            }
+        }
+        h
+    }
+
+    /// Canonical compact encoding — the evaluation-cache key.
+    pub fn key(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Short printable design id, e.g. `g3f2a90c1`.
+    pub fn id(&self) -> String {
+        format!("g{:08x}", self.hash64() as u32)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "pe_counts",
+            Json::Arr(
+                self.pe_counts.iter().map(|&c| Json::Num(c as f64)).collect(),
+            ),
+        )
+        .set(
+            "opp_masks",
+            Json::Arr(
+                self.opp_masks.iter().map(|&m| Json::Num(m as f64)).collect(),
+            ),
+        )
+        .set("hop_latency_us", Json::Num(self.hop_latency_us))
+        .set("link_bandwidth", Json::Num(self.link_bandwidth));
+        if let Some(w) = self.power_budget_w {
+            j.set("power_budget_w", Json::Num(w));
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlatformGenome> {
+        let pe_counts = j
+            .req_arr("pe_counts")?
+            .iter()
+            .map(|v| {
+                v.as_usize().ok_or_else(|| {
+                    Error::Config("genome pe_counts: bad count".into())
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opp_masks = j
+            .req_arr("opp_masks")?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| {
+                        Error::Config("genome opp_masks: bad mask".into())
+                    })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlatformGenome {
+            pe_counts,
+            opp_masks,
+            hop_latency_us: j.req_f64("hop_latency_us")?,
+            link_bandwidth: j.req_f64("link_bandwidth")?,
+            power_budget_w: j.get("power_budget_w").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// Bounds of the searchable space plus the base platform genomes are
+/// decoded against.  Construction validates that the base platform is
+/// *genome-compatible*: every cluster must own a distinct PE class
+/// (true of both presets), because decode specializes each cluster's
+/// OPP ladder independently while class names must stay unique.
+#[derive(Debug, Clone)]
+pub struct GenomeSpace {
+    base: Platform,
+    /// Per-cluster instance-count bounds (inclusive).
+    pub min_pes: usize,
+    pub max_pes: usize,
+    /// NoC gene bounds (inclusive).
+    pub hop_latency_range: (f64, f64),
+    pub link_bandwidth_range: (f64, f64),
+    /// Power-budget gene bounds; `explore_power_budget = false` pins the
+    /// gene to `None` (uncapped).
+    pub power_budget_range: (f64, f64),
+    pub explore_power_budget: bool,
+}
+
+impl GenomeSpace {
+    pub fn new(
+        base: Platform,
+        min_pes: usize,
+        max_pes: usize,
+        hop_latency_range: (f64, f64),
+        link_bandwidth_range: (f64, f64),
+        power_budget_range: (f64, f64),
+        explore_power_budget: bool,
+    ) -> Result<GenomeSpace> {
+        if min_pes == 0 || max_pes < min_pes {
+            return Err(Error::Config(format!(
+                "bad PE-count bounds [{min_pes}, {max_pes}]"
+            )));
+        }
+        for (lo, hi, name) in [
+            (hop_latency_range.0, hop_latency_range.1, "hop_latency"),
+            (
+                link_bandwidth_range.0,
+                link_bandwidth_range.1,
+                "link_bandwidth",
+            ),
+            (power_budget_range.0, power_budget_range.1, "power_budget"),
+        ] {
+            if !(lo > 0.0 && hi >= lo) {
+                return Err(Error::Config(format!(
+                    "bad {name} range [{lo}, {hi}]"
+                )));
+            }
+        }
+        let mut seen = vec![false; base.classes.len()];
+        for cl in &base.clusters {
+            if seen[cl.class] {
+                return Err(Error::Config(format!(
+                    "base platform '{}' is not genome-compatible: class \
+                     '{}' is shared by two clusters",
+                    base.name, base.classes[cl.class].name
+                )));
+            }
+            seen[cl.class] = true;
+        }
+        if base.clusters.is_empty() {
+            return Err(Error::Config(
+                "base platform has no clusters".into(),
+            ));
+        }
+        Ok(GenomeSpace {
+            base,
+            min_pes,
+            max_pes,
+            hop_latency_range,
+            link_bandwidth_range,
+            power_budget_range,
+            explore_power_budget,
+        })
+    }
+
+    pub fn base(&self) -> &Platform {
+        &self.base
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.base.clusters.len()
+    }
+
+    fn class_of_cluster(&self, c: usize) -> &PeClass {
+        &self.base.classes[self.base.clusters[c].class]
+    }
+
+    /// Full-ladder mask for cluster `c`'s class.
+    fn full_mask(&self, c: usize) -> u64 {
+        let n = self.class_of_cluster(c).opps.len().min(63);
+        (1u64 << n) - 1
+    }
+
+    /// The genome that reproduces the base platform (modulo mesh
+    /// re-placement): base PE counts, full OPP ladders, base NoC genes,
+    /// no power cap.
+    pub fn seed_genome(&self) -> PlatformGenome {
+        PlatformGenome {
+            pe_counts: self
+                .base
+                .clusters
+                .iter()
+                .map(|cl| cl.pe_ids.len().clamp(self.min_pes, self.max_pes))
+                .collect(),
+            opp_masks: (0..self.n_clusters())
+                .map(|c| self.full_mask(c))
+                .collect(),
+            hop_latency_us: self.base.noc.hop_latency_us.clamp(
+                self.hop_latency_range.0,
+                self.hop_latency_range.1,
+            ),
+            link_bandwidth: self.base.noc.link_bandwidth.clamp(
+                self.link_bandwidth_range.0,
+                self.link_bandwidth_range.1,
+            ),
+            power_budget_w: None,
+        }
+    }
+
+    /// Sample a uniform-random genome.
+    pub fn random(&self, rng: &mut Rng) -> PlatformGenome {
+        let pe_counts = (0..self.n_clusters())
+            .map(|_| {
+                self.min_pes
+                    + rng.below((self.max_pes - self.min_pes + 1) as u64)
+                        as usize
+            })
+            .collect();
+        let opp_masks = (0..self.n_clusters())
+            .map(|c| self.random_mask(c, rng))
+            .collect();
+        let power_budget_w = if self.explore_power_budget && rng.f64() < 0.5
+        {
+            Some(rng.uniform(
+                self.power_budget_range.0,
+                self.power_budget_range.1,
+            ))
+        } else {
+            None
+        };
+        PlatformGenome {
+            pe_counts,
+            opp_masks,
+            hop_latency_us: rng.uniform(
+                self.hop_latency_range.0,
+                self.hop_latency_range.1,
+            ),
+            link_bandwidth: rng.uniform(
+                self.link_bandwidth_range.0,
+                self.link_bandwidth_range.1,
+            ),
+            power_budget_w,
+        }
+    }
+
+    /// Random non-empty OPP subset that always keeps the top OPP (so
+    /// `nominal_mhz`-relative scaling stays bounded and the performance
+    /// governor has a ceiling to grant).
+    fn random_mask(&self, c: usize, rng: &mut Rng) -> u64 {
+        let n = self.class_of_cluster(c).opps.len().min(63);
+        let top = 1u64 << (n - 1);
+        if n == 1 {
+            return top;
+        }
+        (rng.next_u64() & self.full_mask(c)) | top
+    }
+
+    /// Mutate: each gene flips with probability `rate`.  A gene flip
+    /// that turns out to be a no-op (a single-OPP accelerator ladder, a
+    /// continuous gene pinned at its bound) does not count, and at
+    /// least one gene is always genuinely perturbed — offspring never
+    /// silently equal their parent (as long as the space has more than
+    /// one PE-count value, i.e. `min_pes < max_pes`).
+    pub fn mutate(
+        &self,
+        g: &PlatformGenome,
+        rate: f64,
+        rng: &mut Rng,
+    ) -> PlatformGenome {
+        let mut out = g.clone();
+        let mut touched = false;
+        for c in 0..self.n_clusters() {
+            if rng.f64() < rate {
+                let next = self.step_count(out.pe_counts[c], rng);
+                touched |= next != out.pe_counts[c];
+                out.pe_counts[c] = next;
+            }
+            if rng.f64() < rate {
+                let next = self.toggle_opp(c, out.opp_masks[c], rng);
+                touched |= next != out.opp_masks[c];
+                out.opp_masks[c] = next;
+            }
+        }
+        if rng.f64() < rate {
+            let next = scale_clamped(
+                out.hop_latency_us,
+                self.hop_latency_range,
+                rng,
+            );
+            touched |= next != out.hop_latency_us;
+            out.hop_latency_us = next;
+        }
+        if rng.f64() < rate {
+            let next = scale_clamped(
+                out.link_bandwidth,
+                self.link_bandwidth_range,
+                rng,
+            );
+            touched |= next != out.link_bandwidth;
+            out.link_bandwidth = next;
+        }
+        if self.explore_power_budget && rng.f64() < rate {
+            let next = match out.power_budget_w {
+                None => Some(rng.uniform(
+                    self.power_budget_range.0,
+                    self.power_budget_range.1,
+                )),
+                Some(w) => {
+                    if rng.f64() < 0.25 {
+                        None
+                    } else {
+                        Some(scale_clamped(
+                            w,
+                            self.power_budget_range,
+                            rng,
+                        ))
+                    }
+                }
+            };
+            touched |= next != out.power_budget_w;
+            out.power_budget_w = next;
+        }
+        if !touched {
+            // Force one PE-count step: the cheapest always-legal move.
+            let c = rng.below(self.n_clusters() as u64) as usize;
+            out.pe_counts[c] = self.step_count(out.pe_counts[c], rng);
+        }
+        out
+    }
+
+    fn step_count(&self, cur: usize, rng: &mut Rng) -> usize {
+        let up = rng.f64() < 0.5;
+        let next = if up { cur + 1 } else { cur.saturating_sub(1) };
+        let next = next.clamp(self.min_pes, self.max_pes);
+        if next == cur {
+            // At a bound: step the other way (bounds span >= 1 value).
+            if up {
+                cur.saturating_sub(1).clamp(self.min_pes, self.max_pes)
+            } else {
+                (cur + 1).clamp(self.min_pes, self.max_pes)
+            }
+        } else {
+            next
+        }
+    }
+
+    /// Toggle one non-top OPP bit; the top OPP stays enabled.
+    fn toggle_opp(&self, c: usize, mask: u64, rng: &mut Rng) -> u64 {
+        let n = self.class_of_cluster(c).opps.len().min(63);
+        if n <= 1 {
+            return mask;
+        }
+        let bit = 1u64 << rng.below((n - 1) as u64);
+        let top = 1u64 << (n - 1);
+        (mask ^ bit) | top
+    }
+
+    /// Uniform crossover: each gene comes from either parent with equal
+    /// probability.
+    pub fn crossover(
+        &self,
+        a: &PlatformGenome,
+        b: &PlatformGenome,
+        rng: &mut Rng,
+    ) -> PlatformGenome {
+        let pick = |rng: &mut Rng| rng.f64() < 0.5;
+        PlatformGenome {
+            pe_counts: (0..self.n_clusters())
+                .map(|c| {
+                    if pick(rng) {
+                        a.pe_counts[c]
+                    } else {
+                        b.pe_counts[c]
+                    }
+                })
+                .collect(),
+            opp_masks: (0..self.n_clusters())
+                .map(|c| {
+                    if pick(rng) {
+                        a.opp_masks[c]
+                    } else {
+                        b.opp_masks[c]
+                    }
+                })
+                .collect(),
+            hop_latency_us: if pick(rng) {
+                a.hop_latency_us
+            } else {
+                b.hop_latency_us
+            },
+            link_bandwidth: if pick(rng) {
+                a.link_bandwidth
+            } else {
+                b.link_bandwidth
+            },
+            power_budget_w: if pick(rng) {
+                a.power_budget_w
+            } else {
+                b.power_budget_w
+            },
+        }
+    }
+
+    /// Validate a genome against this space (shape and bounds).  Decode
+    /// calls this, so a corrupt checkpoint fails loudly, not silently.
+    pub fn validate(&self, g: &PlatformGenome) -> Result<()> {
+        let n = self.n_clusters();
+        if g.pe_counts.len() != n || g.opp_masks.len() != n {
+            return Err(Error::Config(format!(
+                "genome shape mismatch: {} counts / {} masks for {} \
+                 clusters",
+                g.pe_counts.len(),
+                g.opp_masks.len(),
+                n
+            )));
+        }
+        for (c, &cnt) in g.pe_counts.iter().enumerate() {
+            if !(self.min_pes..=self.max_pes).contains(&cnt) {
+                return Err(Error::Config(format!(
+                    "cluster {c}: PE count {cnt} outside [{}, {}]",
+                    self.min_pes, self.max_pes
+                )));
+            }
+        }
+        for (c, &mask) in g.opp_masks.iter().enumerate() {
+            let full = self.full_mask(c);
+            if mask & full == 0 {
+                return Err(Error::Config(format!(
+                    "cluster {c}: empty OPP subset"
+                )));
+            }
+            if mask & !full != 0 {
+                return Err(Error::Config(format!(
+                    "cluster {c}: OPP mask {mask:#x} has bits beyond the \
+                     {}-entry ladder",
+                    self.class_of_cluster(c).opps.len()
+                )));
+            }
+        }
+        let in_range = |x: f64, (lo, hi): (f64, f64)| x >= lo && x <= hi;
+        if !in_range(g.hop_latency_us, self.hop_latency_range) {
+            return Err(Error::Config(format!(
+                "genome hop latency {} outside [{}, {}]",
+                g.hop_latency_us,
+                self.hop_latency_range.0,
+                self.hop_latency_range.1
+            )));
+        }
+        if !in_range(g.link_bandwidth, self.link_bandwidth_range) {
+            return Err(Error::Config(format!(
+                "genome link bandwidth {} outside [{}, {}]",
+                g.link_bandwidth,
+                self.link_bandwidth_range.0,
+                self.link_bandwidth_range.1
+            )));
+        }
+        if let Some(w) = g.power_budget_w {
+            if !self.explore_power_budget {
+                return Err(Error::Config(
+                    "genome carries a power budget but the space does \
+                     not explore one"
+                        .into(),
+                ));
+            }
+            if !in_range(w, self.power_budget_range) {
+                return Err(Error::Config(format!(
+                    "genome power budget {w} W outside [{}, {}]",
+                    self.power_budget_range.0, self.power_budget_range.1
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode a genome into a runnable platform plus the DTPM power-cap
+    /// override the evaluation layer applies to its `SimConfig`.
+    ///
+    /// PEs are re-placed row-major on a near-square mesh sized to the
+    /// total instance count; per-cluster classes are cloned from the
+    /// base with their OPP ladder filtered by the genome's mask.
+    pub fn decode(
+        &self,
+        g: &PlatformGenome,
+    ) -> Result<(Platform, Option<f64>)> {
+        self.validate(g)?;
+        let total: usize = g.pe_counts.iter().sum();
+        let mesh_x = ((total as f64).sqrt().ceil() as usize).max(1);
+        let mesh_y = total.div_ceil(mesh_x).max(1);
+
+        let mut classes: Vec<PeClass> = Vec::with_capacity(self.n_clusters());
+        let mut pes: Vec<Pe> = Vec::with_capacity(total);
+        let mut clusters: Vec<Cluster> = Vec::with_capacity(self.n_clusters());
+        for (c, base_cl) in self.base.clusters.iter().enumerate() {
+            let base_class = &self.base.classes[base_cl.class];
+            let opps = base_class
+                .opps
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| g.opp_masks[c] >> i & 1 == 1)
+                .map(|(_, o)| *o)
+                .collect::<Vec<_>>();
+            classes.push(PeClass { opps, ..base_class.clone() });
+            let mut pe_ids = Vec::with_capacity(g.pe_counts[c]);
+            for i in 0..g.pe_counts[c] {
+                let id = pes.len();
+                pes.push(Pe {
+                    id,
+                    class: c,
+                    cluster: c,
+                    name: format!("{}-{i}", base_cl.name),
+                    x: id % mesh_x,
+                    y: id / mesh_x,
+                });
+                pe_ids.push(id);
+            }
+            clusters.push(Cluster {
+                id: c,
+                name: base_cl.name.clone(),
+                class: c,
+                pe_ids,
+                thermal_node: base_cl.thermal_node,
+            });
+        }
+        let noc = NocParams {
+            mesh_x,
+            mesh_y,
+            hop_latency_us: g.hop_latency_us,
+            link_bandwidth: g.link_bandwidth,
+            mem_latency_us: self.base.noc.mem_latency_us,
+        };
+        let floorplan = self.base.floorplan.clone();
+        let mut platform = Platform::new(
+            format!("dse-{}", g.id()),
+            classes,
+            pes,
+            clusters,
+            noc,
+            floorplan,
+        )?;
+        platform.t_ambient = self.base.t_ambient;
+        Ok((platform, g.power_budget_w))
+    }
+
+    /// Convenience: decode and write the platform JSON (`dse export`).
+    pub fn export_platform(
+        &self,
+        g: &PlatformGenome,
+        path: &Path,
+    ) -> Result<()> {
+        let (platform, _) = self.decode(g)?;
+        std::fs::write(path, platform.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Multiply by a uniform factor in [0.75, 1.3), clamped to the range —
+/// the continuous-gene mutation kernel.
+fn scale_clamped(x: f64, range: (f64, f64), rng: &mut Rng) -> f64 {
+    (x * rng.uniform(0.75, 1.3)).clamp(range.0, range.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> GenomeSpace {
+        GenomeSpace::new(
+            Platform::table2_soc(),
+            1,
+            8,
+            (0.02, 0.2),
+            (2000.0, 16000.0),
+            (3.0, 10.0),
+            true,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn seed_genome_decodes_to_base_inventory() {
+        let s = space();
+        let g = s.seed_genome();
+        let (p, cap) = s.decode(&g).unwrap();
+        assert_eq!(cap, None);
+        assert_eq!(p.n_pes(), s.base().n_pes());
+        // Same per-class instance counts as the base platform.
+        let inv = |p: &Platform| {
+            let mut v: Vec<(String, usize)> = p
+                .inventory()
+                .into_iter()
+                .map(|(n, _, c)| (n, c))
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(inv(&p), inv(s.base()));
+        // Full OPP ladders survive.
+        for (c, cl) in p.clusters.iter().enumerate() {
+            assert_eq!(
+                p.classes[cl.class].opps.len(),
+                s.base().classes[s.base().clusters[c].class].opps.len()
+            );
+        }
+    }
+
+    #[test]
+    fn decode_respects_counts_masks_and_noc_genes() {
+        let s = space();
+        let mut g = s.seed_genome();
+        g.pe_counts = vec![2, 1, 3, 6];
+        // Keep only the top OPP of cluster 0 (A15), top two of cluster 1.
+        let n0 = s.base().classes[0].opps.len();
+        let n1 = s.base().classes[1].opps.len();
+        g.opp_masks[0] = 1 << (n0 - 1);
+        g.opp_masks[1] = (1 << (n1 - 1)) | (1 << (n1 - 2));
+        g.hop_latency_us = 0.1;
+        g.link_bandwidth = 4000.0;
+        g.power_budget_w = Some(5.0);
+        let (p, cap) = s.decode(&g).unwrap();
+        assert_eq!(cap, Some(5.0));
+        assert_eq!(p.n_pes(), 12);
+        assert_eq!(p.clusters[0].pe_ids.len(), 2);
+        assert_eq!(p.clusters[3].pe_ids.len(), 6);
+        assert_eq!(p.classes[p.clusters[0].class].opps.len(), 1);
+        assert_eq!(p.classes[p.clusters[1].class].opps.len(), 2);
+        // The filtered ladder keeps the max OPP.
+        assert_eq!(
+            p.classes[p.clusters[0].class].max_opp().freq_mhz,
+            s.base().classes[0].max_opp().freq_mhz
+        );
+        assert_eq!(p.noc.hop_latency_us, 0.1);
+        assert_eq!(p.noc.link_bandwidth, 4000.0);
+        // Mesh fits every PE (Platform::new re-validates coordinates).
+        assert!(p.noc.mesh_x * p.noc.mesh_y >= 12);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_space_genomes() {
+        let s = space();
+        let mut g = s.seed_genome();
+        g.pe_counts[2] = 0;
+        assert!(s.decode(&g).is_err());
+
+        let mut g = s.seed_genome();
+        g.pe_counts[2] = 99;
+        assert!(s.decode(&g).is_err());
+
+        let mut g = s.seed_genome();
+        g.opp_masks[0] = 0;
+        assert!(s.decode(&g).is_err());
+
+        let mut g = s.seed_genome();
+        g.opp_masks[0] = u64::MAX;
+        assert!(s.decode(&g).is_err());
+
+        let mut g = s.seed_genome();
+        g.pe_counts.pop();
+        assert!(s.decode(&g).is_err());
+
+        // Continuous genes outside the space bounds fail loudly too
+        // (corrupt or foreign-config checkpoints must not evaluate).
+        let mut g = s.seed_genome();
+        g.hop_latency_us = 5.0;
+        assert!(s.decode(&g).is_err());
+
+        let mut g = s.seed_genome();
+        g.link_bandwidth = 1.0;
+        assert!(s.decode(&g).is_err());
+
+        let mut g = s.seed_genome();
+        g.power_budget_w = Some(99.0);
+        assert!(s.decode(&g).is_err());
+    }
+
+    #[test]
+    fn mutation_stays_in_space_and_changes_something() {
+        let s = space();
+        let mut rng = Rng::new(5);
+        let mut g = s.seed_genome();
+        for _ in 0..200 {
+            let m = s.mutate(&g, 0.3, &mut rng);
+            assert_ne!(m, g, "mutation must perturb at least one gene");
+            s.validate(&m).unwrap();
+            g = m;
+        }
+    }
+
+    #[test]
+    fn crossover_mixes_parent_genes() {
+        let s = space();
+        let mut rng = Rng::new(6);
+        let a = s.seed_genome();
+        let mut b = s.seed_genome();
+        b.pe_counts = vec![1, 1, 1, 1];
+        b.hop_latency_us = 0.19;
+        for _ in 0..50 {
+            let child = s.crossover(&a, &b, &mut rng);
+            s.validate(&child).unwrap();
+            for c in 0..s.n_clusters() {
+                assert!(
+                    child.pe_counts[c] == a.pe_counts[c]
+                        || child.pe_counts[c] == b.pe_counts[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_genomes_are_valid_and_diverse() {
+        let s = space();
+        let mut rng = Rng::new(7);
+        let gs: Vec<PlatformGenome> =
+            (0..64).map(|_| s.random(&mut rng)).collect();
+        for g in &gs {
+            s.validate(g).unwrap();
+            s.decode(g).unwrap();
+        }
+        let distinct: std::collections::BTreeSet<String> =
+            gs.iter().map(|g| g.key()).collect();
+        assert!(distinct.len() > 32, "only {} distinct", distinct.len());
+    }
+
+    #[test]
+    fn genome_json_roundtrip_is_exact() {
+        let s = space();
+        let mut rng = Rng::new(8);
+        for _ in 0..32 {
+            let g = s.random(&mut rng);
+            let j = Json::parse(&g.to_json().to_string()).unwrap();
+            let g2 = PlatformGenome::from_json(&j).unwrap();
+            assert_eq!(g, g2);
+            assert_eq!(g.key(), g2.key());
+            assert_eq!(g.hash64(), g2.hash64());
+        }
+    }
+
+    #[test]
+    fn hash_is_stable_and_discriminating() {
+        let s = space();
+        let g = s.seed_genome();
+        assert_eq!(g.hash64(), g.clone().hash64());
+        let mut h = g.clone();
+        h.pe_counts[0] += 1;
+        assert_ne!(g.hash64(), h.hash64());
+    }
+
+    #[test]
+    fn decoded_platform_simulates() {
+        use crate::app::suite::{self, WifiParams};
+        use crate::config::SimConfig;
+        use crate::sim::Simulation;
+        let s = space();
+        let mut rng = Rng::new(9);
+        let g = s.random(&mut rng);
+        let (p, cap) = s.decode(&g).unwrap();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let mut cfg = SimConfig::default();
+        cfg.max_jobs = 20;
+        cfg.warmup_jobs = 2;
+        cfg.dtpm.power_cap_w = cap;
+        let r = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r.completed_jobs, 20);
+    }
+
+    #[test]
+    fn rejects_class_sharing_base() {
+        // Build a base where two clusters share one class.
+        let base = Platform::table2_soc();
+        let mut pes = base.pes.clone();
+        let mut clusters = base.clusters.clone();
+        // Point cluster 1's PEs at class 0 — now class 0 backs both
+        // cluster 0 and cluster 1.
+        clusters[1].class = 0;
+        for &pid in &clusters[1].pe_ids.clone() {
+            pes[pid].class = 0;
+        }
+        let shared = Platform::new(
+            "shared",
+            base.classes.clone(),
+            pes,
+            clusters,
+            base.noc.clone(),
+            base.floorplan.clone(),
+        )
+        .unwrap();
+        assert!(GenomeSpace::new(
+            shared,
+            1,
+            8,
+            (0.02, 0.2),
+            (2000.0, 16000.0),
+            (3.0, 10.0),
+            true,
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,587 @@
+//! Guided design-space exploration: multi-objective search over the
+//! hardware configuration space.
+//!
+//! The paper positions DS3 as enabling "both design space exploration
+//! and dynamic resource management"; the journal version (Arda et al.,
+//! arXiv:2003.09016) demonstrates DSE over PE counts and frequency
+//! domains as a first-class use case.  This module turns the simulator
+//! into that search engine:
+//!
+//! * [`genome`] — a **platform genome**: per-cluster PE counts, enabled
+//!   OPP subsets, NoC hop latency / link bandwidth, and an optional
+//!   DTPM power budget, with validated decode into a
+//!   [`crate::platform::Platform`] and mutation/crossover operators.
+//! * [`eval`] — a parallel, caching **evaluation layer**: each genome
+//!   runs a `seeds × scenarios` simulation grid fanned out over OS
+//!   threads (via [`crate::coordinator::parallel_map`]), with results
+//!   cached by canonical genome encoding so revisited designs are free.
+//! * [`archive`] — a **Pareto-front archive** of non-dominated designs
+//!   plus a hypervolume proxy (a front-shape diagnostic; see
+//!   [`archive`] docs) and monotone best-per-objective tracking.
+//! * [`search`] — the **search loop**: NSGA-II-style evolutionary
+//!   optimization (non-dominated sorting, crowding distance, binary
+//!   tournaments) or pure random search, with JSON
+//!   **checkpoint/resume** that round-trips the archive, population,
+//!   evaluation cache, and RNG state — a resumed search continues
+//!   bit-identically to an uninterrupted one.
+//!
+//! Objectives (all minimized): average job latency (with a completion
+//! penalty for saturated designs), energy per job, and peak
+//! temperature.  Drive it from the CLI (`ds3r dse run|resume|front|
+//! export`) or programmatically (`examples/design_space.rs`):
+//!
+//! ```no_run
+//! use ds3r::dse::{DseConfig, DseEngine};
+//! use ds3r::platform::Platform;
+//!
+//! let mut cfg = DseConfig::default();
+//! cfg.population = 16;
+//! cfg.generations = 13;           // 16 + 13x16 = 224 evaluations
+//! let apps = vec![ds3r::app::suite::wifi_tx(Default::default())];
+//! let mut engine = DseEngine::new(Platform::table2_soc(), cfg).unwrap();
+//! engine.run(&apps, None, |g| println!("gen {}: front {}",
+//!     g.generation, g.front_size)).unwrap();
+//! for p in engine.archive().entries() {
+//!     println!("{:?} -> {:?}", p.genome.id(), p.objectives);
+//! }
+//! ```
+
+pub mod archive;
+pub mod eval;
+pub mod genome;
+pub mod search;
+
+pub use archive::{dominates, DesignPoint, ParetoArchive};
+pub use eval::{EvalMetrics, Evaluator};
+pub use genome::{GenomeSpace, PlatformGenome};
+pub use search::DseEngine;
+
+use crate::config::SimConfig;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// JSON numbers are f64, which only holds integers exactly below 2^53;
+/// larger seeds are serialized as decimal strings so checkpoints stay
+/// exact (the bit-identical-resume guarantee depends on it).
+fn u64_to_json(x: u64) -> Json {
+    if x < (1u64 << 53) {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+fn u64_from_json(v: &Json) -> Option<u64> {
+    match v {
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+/// An optimization objective (minimized).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Mean job latency (µs), penalized for incomplete offered load —
+    /// see `EvalMetrics::objective`.
+    Latency,
+    /// Energy per completed job (mJ).
+    Energy,
+    /// Peak absolute node temperature (°C).
+    PeakTemp,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "latency" => Ok(Objective::Latency),
+            "energy" => Ok(Objective::Energy),
+            "peak_temp" | "peak-temp" | "temp" => Ok(Objective::PeakTemp),
+            other => Err(Error::Config(format!(
+                "unknown objective '{other}' (latency, energy, peak_temp)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::PeakTemp => "peak_temp",
+        }
+    }
+
+    /// Column header for front tables.
+    pub fn unit(&self) -> &'static str {
+        match self {
+            Objective::Latency => "us",
+            Objective::Energy => "mJ/job",
+            Objective::PeakTemp => "C",
+        }
+    }
+}
+
+/// Full configuration of a DSE run: search budget and operators, genome
+/// bounds, evaluation grid, and the base `SimConfig` every evaluation
+/// inherits.  JSON round-trips (`ds3r dse run --dse-config file.json`);
+/// missing keys keep their defaults, and [`DseConfig::from_json`]
+/// validates on the way in via [`Error::Config`].
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    /// `nsga2` (guided evolutionary search) or `random` (baseline).
+    pub algorithm: String,
+    /// 1-3 distinct objectives; the Pareto front lives in this space.
+    pub objectives: Vec<Objective>,
+    /// Candidate designs per generation.
+    pub population: usize,
+    /// Evolutionary generations after the seeded initial population
+    /// (total evaluations = `population * (generations + 1)`).
+    pub generations: usize,
+    /// Workload seeds each design is evaluated under (aggregated by
+    /// mean — robustness across stochastic arrivals).
+    pub seeds: Vec<u64>,
+    /// Scenario presets / files each design is additionally evaluated
+    /// under (empty = one static run per seed).
+    pub scenarios: Vec<String>,
+    /// Per-gene mutation probability.
+    pub mutation_rate: f64,
+    /// Probability an offspring is produced by crossover.
+    pub crossover_rate: f64,
+    /// Seed of the search's own RNG stream (genome sampling, variation
+    /// operators) — independent from workload seeds.
+    pub search_seed: u64,
+    /// Genome bounds: PE instances per cluster.
+    pub min_pes_per_cluster: usize,
+    pub max_pes_per_cluster: usize,
+    /// Genome bounds: NoC genes.
+    pub hop_latency_range: (f64, f64),
+    pub link_bandwidth_range: (f64, f64),
+    /// Genome bounds: DTPM power budget (W); `explore_power_budget =
+    /// false` pins the gene to "uncapped".
+    pub power_budget_range: (f64, f64),
+    pub explore_power_budget: bool,
+    /// Base simulation config for every evaluation (scheduler, rate,
+    /// jobs, DTPM policy...).  `seed` and `scenario` are overridden per
+    /// grid point; `dtpm.power_cap_w` is overridden when the genome
+    /// carries a budget.
+    pub sim: SimConfig,
+    /// Evaluation threads (0 = all available cores).
+    pub threads: usize,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        let mut sim = SimConfig::default();
+        // DSE evaluations favour many medium-length runs: enough jobs
+        // for stable steady-state means, a hard sim-time wall so
+        // saturated designs terminate quickly (they pay the completion
+        // penalty instead of burning wall clock).
+        sim.injection_rate_per_ms = 4.0;
+        sim.max_jobs = 300;
+        sim.warmup_jobs = 30;
+        sim.max_sim_us = 4_000_000.0;
+        DseConfig {
+            algorithm: "nsga2".into(),
+            objectives: vec![Objective::Latency, Objective::Energy],
+            population: 16,
+            generations: 13,
+            seeds: vec![1],
+            scenarios: Vec::new(),
+            mutation_rate: 0.35,
+            crossover_rate: 0.9,
+            search_seed: 7,
+            min_pes_per_cluster: 1,
+            max_pes_per_cluster: 8,
+            hop_latency_range: (0.02, 0.2),
+            link_bandwidth_range: (2000.0, 16000.0),
+            power_budget_range: (3.0, 10.0),
+            explore_power_budget: true,
+            sim,
+            threads: 0,
+        }
+    }
+}
+
+impl DseConfig {
+    /// Resolved evaluation thread count.
+    pub fn eval_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            crate::util::default_threads()
+        }
+    }
+
+    /// Total genome evaluations the configured budget requests.
+    pub fn budget_evals(&self) -> usize {
+        self.population * (self.generations + 1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.algorithm.as_str(), "nsga2" | "random") {
+            return Err(Error::Config(format!(
+                "unknown DSE algorithm '{}' (nsga2, random)",
+                self.algorithm
+            )));
+        }
+        if self.objectives.is_empty() || self.objectives.len() > 3 {
+            return Err(Error::Config(
+                "objectives must list 1-3 of latency, energy, peak_temp"
+                    .into(),
+            ));
+        }
+        for (i, a) in self.objectives.iter().enumerate() {
+            if self.objectives[i + 1..].contains(a) {
+                return Err(Error::Config(format!(
+                    "duplicate objective '{}'",
+                    a.name()
+                )));
+            }
+        }
+        if self.population < 2 {
+            return Err(Error::Config(
+                "population must be >= 2".into(),
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.mutation_rate)
+            || self.mutation_rate == 0.0
+        {
+            return Err(Error::Config(
+                "mutation_rate must be in (0, 1]".into(),
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.crossover_rate) {
+            return Err(Error::Config(
+                "crossover_rate must be in [0, 1]".into(),
+            ));
+        }
+        if self.seeds.is_empty() {
+            return Err(Error::Config(
+                "seeds must list at least one workload seed".into(),
+            ));
+        }
+        if self.min_pes_per_cluster == 0
+            || self.max_pes_per_cluster < self.min_pes_per_cluster
+        {
+            return Err(Error::Config(format!(
+                "bad PE-count bounds [{}, {}]",
+                self.min_pes_per_cluster, self.max_pes_per_cluster
+            )));
+        }
+        for ((lo, hi), name) in [
+            (self.hop_latency_range, "hop_latency_range"),
+            (self.link_bandwidth_range, "link_bandwidth_range"),
+            (self.power_budget_range, "power_budget_range"),
+        ] {
+            if !(lo > 0.0 && hi >= lo) {
+                return Err(Error::Config(format!(
+                    "bad {name} [{lo}, {hi}]"
+                )));
+            }
+        }
+        self.sim.validate()
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let range = |(lo, hi): (f64, f64)| {
+            Json::Arr(vec![Json::Num(lo), Json::Num(hi)])
+        };
+        let mut j = Json::obj();
+        j.set("algorithm", Json::Str(self.algorithm.clone()))
+            .set(
+                "objectives",
+                Json::Arr(
+                    self.objectives
+                        .iter()
+                        .map(|o| Json::Str(o.name().into()))
+                        .collect(),
+                ),
+            )
+            .set("population", Json::Num(self.population as f64))
+            .set("generations", Json::Num(self.generations as f64))
+            .set(
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| u64_to_json(s)).collect()),
+            )
+            .set(
+                "scenarios",
+                Json::Arr(
+                    self.scenarios
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            )
+            .set("mutation_rate", Json::Num(self.mutation_rate))
+            .set("crossover_rate", Json::Num(self.crossover_rate))
+            .set("search_seed", u64_to_json(self.search_seed))
+            .set(
+                "min_pes_per_cluster",
+                Json::Num(self.min_pes_per_cluster as f64),
+            )
+            .set(
+                "max_pes_per_cluster",
+                Json::Num(self.max_pes_per_cluster as f64),
+            )
+            .set("hop_latency_range", range(self.hop_latency_range))
+            .set("link_bandwidth_range", range(self.link_bandwidth_range))
+            .set("power_budget_range", range(self.power_budget_range))
+            .set(
+                "explore_power_budget",
+                Json::Bool(self.explore_power_budget),
+            )
+            .set("sim", self.sim.to_json())
+            .set("threads", Json::Num(self.threads as f64));
+        j
+    }
+
+    /// Parse from JSON; missing keys keep their defaults.  Validates.
+    pub fn from_json(j: &Json) -> Result<DseConfig> {
+        let mut c = DseConfig::default();
+        if let Some(s) = j.get("algorithm").and_then(Json::as_str) {
+            c.algorithm = s.to_string();
+        }
+        if let Some(a) = j.get("objectives").and_then(Json::as_arr) {
+            c.objectives = a
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .ok_or_else(|| {
+                            Error::Config(
+                                "objectives must be strings".into(),
+                            )
+                        })
+                        .and_then(Objective::parse)
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(x) = j.get("population").and_then(Json::as_usize) {
+            c.population = x;
+        }
+        if let Some(x) = j.get("generations").and_then(Json::as_usize) {
+            c.generations = x;
+        }
+        if let Some(a) = j.get("seeds").and_then(Json::as_arr) {
+            c.seeds = a
+                .iter()
+                .map(|v| {
+                    u64_from_json(v).ok_or_else(|| {
+                        Error::Config(format!(
+                            "seeds: bad entry {}",
+                            v.to_string()
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(a) = j.get("scenarios").and_then(Json::as_arr) {
+            c.scenarios = a
+                .iter()
+                .map(|v| {
+                    v.as_str().map(String::from).ok_or_else(|| {
+                        Error::Config(
+                            "scenarios entries must be strings".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(x) = j.get("mutation_rate").and_then(Json::as_f64) {
+            c.mutation_rate = x;
+        }
+        if let Some(x) = j.get("crossover_rate").and_then(Json::as_f64) {
+            c.crossover_rate = x;
+        }
+        if let Some(v) = j.get("search_seed") {
+            c.search_seed = u64_from_json(v).ok_or_else(|| {
+                Error::Config("search_seed must be a non-negative integer \
+                               (number or decimal string)".into())
+            })?;
+        }
+        if let Some(x) =
+            j.get("min_pes_per_cluster").and_then(Json::as_usize)
+        {
+            c.min_pes_per_cluster = x;
+        }
+        if let Some(x) =
+            j.get("max_pes_per_cluster").and_then(Json::as_usize)
+        {
+            c.max_pes_per_cluster = x;
+        }
+        let parse_range = |key: &str, default: (f64, f64)| -> Result<(f64, f64)> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => {
+                    let xs = v.f64_vec()?;
+                    if xs.len() != 2 {
+                        return Err(Error::Config(format!(
+                            "{key} must be [lo, hi]"
+                        )));
+                    }
+                    Ok((xs[0], xs[1]))
+                }
+            }
+        };
+        c.hop_latency_range =
+            parse_range("hop_latency_range", c.hop_latency_range)?;
+        c.link_bandwidth_range =
+            parse_range("link_bandwidth_range", c.link_bandwidth_range)?;
+        c.power_budget_range =
+            parse_range("power_budget_range", c.power_budget_range)?;
+        if let Some(b) =
+            j.get("explore_power_budget").and_then(Json::as_bool)
+        {
+            c.explore_power_budget = b;
+        }
+        if let Some(sim) = j.get("sim") {
+            c.sim = SimConfig::from_json(sim)?;
+        }
+        if let Some(x) = j.get("threads").and_then(Json::as_usize) {
+            c.threads = x;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<DseConfig> {
+        DseConfig::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_meets_the_budget_floor() {
+        let c = DseConfig::default();
+        c.validate().unwrap();
+        assert!(c.budget_evals() >= 200, "{}", c.budget_evals());
+        assert!(c.eval_threads() >= 1);
+    }
+
+    #[test]
+    fn objective_parse_and_names() {
+        assert_eq!(Objective::parse("latency").unwrap(), Objective::Latency);
+        assert_eq!(Objective::parse("energy").unwrap(), Objective::Energy);
+        assert_eq!(
+            Objective::parse("peak_temp").unwrap(),
+            Objective::PeakTemp
+        );
+        assert_eq!(
+            Objective::parse("peak-temp").unwrap(),
+            Objective::PeakTemp
+        );
+        assert!(Objective::parse("carbon").is_err());
+        for o in [Objective::Latency, Objective::Energy, Objective::PeakTemp]
+        {
+            assert_eq!(Objective::parse(o.name()).unwrap(), o);
+            assert!(!o.unit().is_empty());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut c = DseConfig::default();
+        c.algorithm = "random".into();
+        c.objectives =
+            vec![Objective::Energy, Objective::PeakTemp, Objective::Latency];
+        c.population = 10;
+        c.generations = 4;
+        c.seeds = vec![3, 5, u64::MAX]; // u64::MAX exercises the string path
+        c.scenarios = vec!["bursty-wifi".into()];
+        c.mutation_rate = 0.5;
+        c.crossover_rate = 0.75;
+        c.search_seed = (1u64 << 53) + 3; // exercises the string path
+        c.min_pes_per_cluster = 2;
+        c.max_pes_per_cluster = 6;
+        c.hop_latency_range = (0.03, 0.15);
+        c.link_bandwidth_range = (4000.0, 12000.0);
+        c.power_budget_range = (4.0, 8.0);
+        c.explore_power_budget = false;
+        c.sim.scheduler = "met".into();
+        c.sim.max_jobs = 123;
+        c.sim.warmup_jobs = 12;
+        c.threads = 3;
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        let c2 = DseConfig::from_json(&j).unwrap();
+        assert_eq!(c2.algorithm, c.algorithm);
+        assert_eq!(c2.objectives, c.objectives);
+        assert_eq!(c2.population, c.population);
+        assert_eq!(c2.generations, c.generations);
+        assert_eq!(c2.seeds, c.seeds);
+        assert_eq!(c2.scenarios, c.scenarios);
+        assert_eq!(c2.mutation_rate, c.mutation_rate);
+        assert_eq!(c2.crossover_rate, c.crossover_rate);
+        assert_eq!(c2.search_seed, c.search_seed);
+        assert_eq!(c2.min_pes_per_cluster, c.min_pes_per_cluster);
+        assert_eq!(c2.max_pes_per_cluster, c.max_pes_per_cluster);
+        assert_eq!(c2.hop_latency_range, c.hop_latency_range);
+        assert_eq!(c2.link_bandwidth_range, c.link_bandwidth_range);
+        assert_eq!(c2.power_budget_range, c.power_budget_range);
+        assert_eq!(c2.explore_power_budget, c.explore_power_budget);
+        assert_eq!(c2.sim.scheduler, "met");
+        assert_eq!(c2.sim.max_jobs, 123);
+        assert_eq!(c2.threads, 3);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"population": 8}"#).unwrap();
+        let c = DseConfig::from_json(&j).unwrap();
+        assert_eq!(c.population, 8);
+        assert_eq!(c.generations, DseConfig::default().generations);
+        assert_eq!(c.objectives, DseConfig::default().objectives);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = DseConfig::default();
+        c.algorithm = "annealing".into();
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.objectives = vec![];
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.objectives = vec![Objective::Latency, Objective::Latency];
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.population = 1;
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.mutation_rate = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.crossover_rate = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.seeds = vec![];
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.min_pes_per_cluster = 5;
+        c.max_pes_per_cluster = 2;
+        assert!(c.validate().is_err());
+
+        let mut c = DseConfig::default();
+        c.hop_latency_range = (0.2, 0.02);
+        assert!(c.validate().is_err());
+
+        // Bad range shape in JSON.
+        let j = Json::parse(r#"{"hop_latency_range": [1]}"#).unwrap();
+        assert!(DseConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,757 @@
+//! The guided search loop: NSGA-II-style evolutionary multi-objective
+//! optimization (plus a pure random-search baseline) with JSON
+//! checkpoint/resume.
+//!
+//! One *generation* evaluates `population` candidate genomes (fanned out
+//! over OS threads, cache-deduplicated), folds every result into the
+//! Pareto archive, and — under `nsga2` — selects the next parent
+//! population by non-dominated rank and crowding distance.  All
+//! randomness flows from one [`Rng`] stream whose state is part of the
+//! checkpoint, and evaluation results are deterministic per genome, so:
+//!
+//! * the same config + seed give a bit-identical archive for any thread
+//!   count, and
+//! * a search resumed from a checkpoint continues bit-identically to an
+//!   uninterrupted run (`rust/tests/integration_dse.rs` pins both).
+
+use std::path::Path;
+
+use super::archive::{dominates, DesignPoint, ParetoArchive};
+use super::eval::Evaluator;
+use super::genome::{GenomeSpace, PlatformGenome};
+use super::DseConfig;
+use crate::app::AppGraph;
+use crate::platform::Platform;
+use crate::rng::Rng;
+use crate::scenario::{Action, Scenario};
+use crate::stats::DseGenStats;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Checkpoint format version.
+const CHECKPOINT_SCHEMA: f64 = 1.0;
+const CHECKPOINT_KIND: &str = "ds3r-dse-checkpoint";
+
+/// The design-space exploration engine.
+#[derive(Debug, Clone)]
+pub struct DseEngine {
+    cfg: DseConfig,
+    space: GenomeSpace,
+    evaluator: Evaluator,
+    rng: Rng,
+    population: Vec<DesignPoint>,
+    archive: ParetoArchive,
+    history: Vec<DseGenStats>,
+    /// Opaque caller-provided description of the workload the search
+    /// ran under (the CLI stores its `--apps`/`--symbols`/`--pulses`
+    /// here).  Persisted in the checkpoint so `resume` can rebuild —
+    /// and refuse to silently change — the workload.
+    workload: Option<Json>,
+}
+
+impl DseEngine {
+    /// Build a fresh engine around `base` (the platform whose clusters,
+    /// classes and floorplan anchor the genome space).  Fails with
+    /// [`Error::Config`] on invalid configuration — including scenario
+    /// presets that reference PE ids the smallest decodable design
+    /// cannot have.
+    pub fn new(base: Platform, cfg: DseConfig) -> Result<DseEngine> {
+        cfg.validate()?;
+        let space = GenomeSpace::new(
+            base,
+            cfg.min_pes_per_cluster,
+            cfg.max_pes_per_cluster,
+            cfg.hop_latency_range,
+            cfg.link_bandwidth_range,
+            cfg.power_budget_range,
+            cfg.explore_power_budget,
+        )?;
+        let scenarios = cfg
+            .scenarios
+            .iter()
+            .map(|n| crate::scenario::resolve(n))
+            .collect::<Result<Vec<_>>>()?;
+        let min_total = cfg.min_pes_per_cluster * space.n_clusters();
+        for sc in &scenarios {
+            check_scenario_pe_refs(sc, min_total)?;
+        }
+        let evaluator = Evaluator::new(
+            cfg.sim.clone(),
+            cfg.seeds.clone(),
+            scenarios,
+            cfg.eval_threads(),
+            cfg.explore_power_budget,
+        )?;
+        let rng = Rng::new(cfg.search_seed);
+        Ok(DseEngine {
+            cfg,
+            space,
+            evaluator,
+            rng,
+            population: Vec::new(),
+            archive: ParetoArchive::new(),
+            history: Vec::new(),
+            workload: None,
+        })
+    }
+
+    /// Attach an opaque workload description persisted with every
+    /// checkpoint (see the `workload` field).
+    pub fn set_workload_meta(&mut self, meta: Json) {
+        self.workload = Some(meta);
+    }
+
+    pub fn workload_meta(&self) -> Option<&Json> {
+        self.workload.as_ref()
+    }
+
+    pub fn config(&self) -> &DseConfig {
+        &self.cfg
+    }
+
+    pub fn space(&self) -> &GenomeSpace {
+        &self.space
+    }
+
+    pub fn archive(&self) -> &ParetoArchive {
+        &self.archive
+    }
+
+    pub fn history(&self) -> &[DseGenStats] {
+        &self.history
+    }
+
+    /// Generations completed so far (the seeded generation 0 counts).
+    pub fn completed_generations(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Total generations this engine will run: the initial population
+    /// plus `cfg.generations` evolutionary rounds.
+    pub fn target_generations(&self) -> usize {
+        self.cfg.generations + 1
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completed_generations() >= self.target_generations()
+    }
+
+    /// Extend (or shrink) the evolutionary budget — used by
+    /// `dse resume --generations N`.
+    pub fn set_generations(&mut self, generations: usize) {
+        self.cfg.generations = generations;
+    }
+
+    /// Run one generation: the seeded initial population first, then
+    /// evolutionary (or random) rounds.  Returns that generation's
+    /// summary (also appended to [`Self::history`]).
+    pub fn step(&mut self, apps: &[AppGraph]) -> Result<DseGenStats> {
+        if self.is_done() {
+            return Err(Error::Config(format!(
+                "search already ran {} generations; raise the budget to \
+                 continue",
+                self.completed_generations()
+            )));
+        }
+        let evals0 = self.evaluator.evals_requested;
+        let hits0 = self.evaluator.cache_hits;
+        let sims0 = self.evaluator.sims_run;
+
+        let genomes: Vec<PlatformGenome> = if self.history.is_empty() {
+            // Generation 0: the base design plus random exploration.
+            let mut g = vec![self.space.seed_genome()];
+            while g.len() < self.cfg.population {
+                g.push(self.space.random(&mut self.rng));
+            }
+            g
+        } else if self.cfg.algorithm == "random" {
+            (0..self.cfg.population)
+                .map(|_| self.space.random(&mut self.rng))
+                .collect()
+        } else {
+            self.make_offspring()
+        };
+
+        let metrics =
+            self.evaluator.evaluate_batch(&self.space, apps, &genomes)?;
+        let points: Vec<DesignPoint> = genomes
+            .into_iter()
+            .zip(metrics)
+            .map(|(genome, m)| {
+                let objectives =
+                    m.objective_vector(&self.cfg.objectives);
+                DesignPoint { genome, metrics: m, objectives }
+            })
+            .collect();
+        for p in &points {
+            self.archive.insert(p.clone());
+        }
+
+        self.population = if self.history.is_empty()
+            || self.cfg.algorithm == "random"
+        {
+            points
+        } else {
+            // µ+λ environmental selection over parents ∪ offspring.
+            let mut combined = std::mem::take(&mut self.population);
+            combined.extend(points);
+            select_nsga2(combined, self.cfg.population)
+        };
+
+        let stats = DseGenStats {
+            generation: self.history.len(),
+            evals: self.evaluator.evals_requested - evals0,
+            cache_hits: self.evaluator.cache_hits - hits0,
+            sims: self.evaluator.sims_run - sims0,
+            front_size: self.archive.len(),
+            hypervolume: self.archive.hypervolume_proxy(),
+            best: self.archive.best_per_objective(),
+        };
+        self.history.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Run to the configured budget.  `on_gen` fires after every
+    /// generation (progress reporting); `checkpoint` — when given — is
+    /// rewritten after every generation, so an interrupted search loses
+    /// at most one generation of work.
+    pub fn run(
+        &mut self,
+        apps: &[AppGraph],
+        checkpoint: Option<&Path>,
+        mut on_gen: impl FnMut(&DseGenStats),
+    ) -> Result<()> {
+        while !self.is_done() {
+            let stats = self.step(apps)?;
+            if let Some(path) = checkpoint {
+                self.save_checkpoint(path)?;
+            }
+            on_gen(&stats);
+        }
+        Ok(())
+    }
+
+    /// Binary-tournament parent selection + crossover + mutation.
+    fn make_offspring(&mut self) -> Vec<PlatformGenome> {
+        let objs: Vec<&[f64]> = self
+            .population
+            .iter()
+            .map(|p| p.objectives.as_slice())
+            .collect();
+        let rank = rank_of(&nondominated_sort(&objs), objs.len());
+        let crowd = crowding_all(&objs, &rank);
+        let n = self.population.len();
+        let mut tournament = |rng: &mut Rng| -> usize {
+            let i = rng.below(n as u64) as usize;
+            let j = rng.below(n as u64) as usize;
+            if better(rank[i], crowd[i], i, rank[j], crowd[j], j) {
+                i
+            } else {
+                j
+            }
+        };
+        (0..self.cfg.population)
+            .map(|_| {
+                let a = tournament(&mut self.rng);
+                let child = if self.rng.f64() < self.cfg.crossover_rate {
+                    let b = tournament(&mut self.rng);
+                    self.space.crossover(
+                        &self.population[a].genome,
+                        &self.population[b].genome,
+                        &mut self.rng,
+                    )
+                } else {
+                    self.population[a].genome.clone()
+                };
+                self.space.mutate(
+                    &child,
+                    self.cfg.mutation_rate,
+                    &mut self.rng,
+                )
+            })
+            .collect()
+    }
+
+    // ---- checkpointing ---------------------------------------------------
+
+    pub fn checkpoint_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Num(CHECKPOINT_SCHEMA))
+            .set("kind", Json::Str(CHECKPOINT_KIND.into()))
+            .set("config", self.cfg.to_json())
+            .set("platform", self.space.base().to_json())
+            .set(
+                "rng",
+                Json::Arr(
+                    self.rng
+                        .state()
+                        .iter()
+                        .map(|&w| Json::Str(format!("{w:#018x}")))
+                        .collect(),
+                ),
+            )
+            .set(
+                "population",
+                Json::Arr(
+                    self.population
+                        .iter()
+                        .map(DesignPoint::to_json)
+                        .collect(),
+                ),
+            )
+            .set("archive", self.archive.to_json())
+            .set("cache", self.evaluator.cache_to_json())
+            .set(
+                "history",
+                Json::Arr(
+                    self.history.iter().map(DseGenStats::to_json).collect(),
+                ),
+            )
+            .set(
+                "evals_requested",
+                Json::Num(self.evaluator.evals_requested as f64),
+            )
+            .set(
+                "cache_hits",
+                Json::Num(self.evaluator.cache_hits as f64),
+            )
+            .set("sims_run", Json::Num(self.evaluator.sims_run as f64));
+        if let Some(w) = &self.workload {
+            j.set("workload", w.clone());
+        }
+        j
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.checkpoint_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Rebuild an engine from a checkpoint.  The base platform travels
+    /// inside the checkpoint; applications are code-built graphs, so
+    /// the same workload must be passed to [`Self::run`] /
+    /// [`Self::step`] for the continuation to be meaningful — callers
+    /// should rebuild it from [`Self::workload_meta`] (the CLI does,
+    /// and rejects conflicting flags).
+    pub fn from_checkpoint(j: &Json) -> Result<DseEngine> {
+        if j.get("kind").and_then(Json::as_str) != Some(CHECKPOINT_KIND) {
+            return Err(Error::Config(
+                "not a ds3r DSE checkpoint (missing kind)".into(),
+            ));
+        }
+        let cfg = DseConfig::from_json(j.get("config").ok_or_else(|| {
+            Error::Config("checkpoint missing config".into())
+        })?)?;
+        let base = Platform::from_json(j.get("platform").ok_or_else(
+            || Error::Config("checkpoint missing platform".into()),
+        )?)?;
+        let mut engine = DseEngine::new(base, cfg)?;
+
+        let rng_words = j
+            .get("rng")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("checkpoint missing rng".into()))?;
+        if rng_words.len() != 4 {
+            return Err(Error::Config(
+                "checkpoint rng must have 4 words".into(),
+            ));
+        }
+        let mut state = [0u64; 4];
+        for (slot, w) in state.iter_mut().zip(rng_words) {
+            let s = w.as_str().ok_or_else(|| {
+                Error::Config("checkpoint rng word must be a string".into())
+            })?;
+            let hex = s.strip_prefix("0x").unwrap_or(s);
+            *slot = u64::from_str_radix(hex, 16).map_err(|_| {
+                Error::Config(format!("bad rng word '{s}'"))
+            })?;
+        }
+        engine.rng = Rng::from_state(state);
+
+        engine.population = j
+            .get("population")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| {
+                Error::Config("checkpoint missing population".into())
+            })?
+            .iter()
+            .map(DesignPoint::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        engine.archive = ParetoArchive::from_json(
+            j.get("archive").ok_or_else(|| {
+                Error::Config("checkpoint missing archive".into())
+            })?,
+        )?;
+        if let Some(cache) = j.get("cache") {
+            engine.evaluator.cache_from_json(cache)?;
+        }
+        engine.history = j
+            .get("history")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| {
+                Error::Config("checkpoint missing history".into())
+            })?
+            .iter()
+            .map(DseGenStats::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        engine.evaluator.evals_requested =
+            j.get("evals_requested").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize;
+        engine.evaluator.cache_hits =
+            j.get("cache_hits").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize;
+        engine.evaluator.sims_run =
+            j.get("sims_run").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize;
+        engine.workload = j.get("workload").cloned();
+        Ok(engine)
+    }
+
+    pub fn from_checkpoint_file(path: &Path) -> Result<DseEngine> {
+        DseEngine::from_checkpoint(&Json::parse_file(path)?)
+    }
+}
+
+/// Scenario presets that fail/restore PEs constrain the genome space:
+/// the smallest decodable design must still contain the referenced PE.
+fn check_scenario_pe_refs(sc: &Scenario, min_total: usize) -> Result<()> {
+    for e in &sc.events {
+        let pe = match e.action {
+            Action::PeFail { pe } | Action::PeRestore { pe } => pe,
+            _ => continue,
+        };
+        if pe >= min_total {
+            return Err(Error::Config(format!(
+                "scenario '{}' references PE {pe}, but the smallest \
+                 decodable design has only {min_total} PEs; raise \
+                 min_pes_per_cluster or drop the scenario",
+                sc.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// `(rank, crowding, index)` lexicographic "better" for tournaments and
+/// truncation: lower rank, then larger crowding, then lower index (the
+/// final tie-break keeps every comparison deterministic).
+fn better(
+    ra: usize,
+    ca: f64,
+    ia: usize,
+    rb: usize,
+    cb: f64,
+    ib: usize,
+) -> bool {
+    if ra != rb {
+        return ra < rb;
+    }
+    if ca != cb {
+        return ca > cb;
+    }
+    ia < ib
+}
+
+/// Fast non-dominated sort: partition indices into fronts (front 0 =
+/// non-dominated).  O(n²·m) — fine at population scale.
+pub fn nondominated_sort(objs: &[&[f64]]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<usize> = vec![0; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for k in (i + 1)..n {
+            if dominates(objs[i], objs[k]) {
+                dominates_list[i].push(k);
+                dominated_by[k] += 1;
+            } else if dominates(objs[k], objs[i]) {
+                dominates_list[k].push(i);
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next: Vec<usize> = Vec::new();
+        for &i in &current {
+            for &k in &dominates_list[i] {
+                dominated_by[k] -= 1;
+                if dominated_by[k] == 0 {
+                    next.push(k);
+                }
+            }
+        }
+        next.sort_unstable();
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Per-index front rank from a front partition.
+fn rank_of(fronts: &[Vec<usize>], n: usize) -> Vec<usize> {
+    let mut rank = vec![0usize; n];
+    for (r, front) in fronts.iter().enumerate() {
+        for &i in front {
+            rank[i] = r;
+        }
+    }
+    rank
+}
+
+/// Crowding distance of one front (objective-wise normalized gap to the
+/// nearest neighbours; boundary points get `f64::INFINITY`).
+pub fn crowding_distance(
+    objs: &[&[f64]],
+    front: &[usize],
+) -> Vec<f64> {
+    let m = front.len();
+    let mut dist = vec![0.0f64; m];
+    if m == 0 {
+        return dist;
+    }
+    if m <= 2 {
+        return vec![f64::INFINITY; m];
+    }
+    let dims = objs[front[0]].len();
+    for k in 0..dims {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][k]
+                .partial_cmp(&objs[front[b]][k])
+                .expect("finite objectives")
+                .then(front[a].cmp(&front[b]))
+        });
+        let lo = objs[front[order[0]]][k];
+        let hi = objs[front[order[m - 1]]][k];
+        let span = (hi - lo).max(1e-12);
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        for w in 1..m - 1 {
+            let gap = objs[front[order[w + 1]]][k]
+                - objs[front[order[w - 1]]][k];
+            dist[order[w]] += gap / span;
+        }
+    }
+    dist
+}
+
+/// Crowding distance for every index given its front partition.
+fn crowding_all(objs: &[&[f64]], rank: &[usize]) -> Vec<f64> {
+    let n = objs.len();
+    let n_fronts = rank.iter().copied().max().map_or(0, |r| r + 1);
+    let mut crowd = vec![0.0f64; n];
+    for r in 0..n_fronts {
+        let front: Vec<usize> =
+            (0..n).filter(|&i| rank[i] == r).collect();
+        let d = crowding_distance(objs, &front);
+        for (slot, &i) in d.iter().zip(&front) {
+            crowd[i] = *slot;
+        }
+    }
+    crowd
+}
+
+/// NSGA-II environmental selection: fill the next population front by
+/// front, truncating the splitting front by crowding distance.  Output
+/// order is deterministic (front order, then crowding-desc with index
+/// tie-break).
+pub fn select_nsga2(
+    combined: Vec<DesignPoint>,
+    target: usize,
+) -> Vec<DesignPoint> {
+    if combined.len() <= target {
+        return combined;
+    }
+    let objs: Vec<&[f64]> =
+        combined.iter().map(|p| p.objectives.as_slice()).collect();
+    let fronts = nondominated_sort(&objs);
+    let mut chosen: Vec<usize> = Vec::with_capacity(target);
+    for front in &fronts {
+        if chosen.len() + front.len() <= target {
+            chosen.extend_from_slice(front);
+            if chosen.len() == target {
+                break;
+            }
+        } else {
+            let d = crowding_distance(&objs, front);
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            order.sort_by(|&a, &b| {
+                d[b].partial_cmp(&d[a])
+                    .expect("crowding is comparable")
+                    .then(front[a].cmp(&front[b]))
+            });
+            for &w in order.iter().take(target - chosen.len()) {
+                chosen.push(front[w]);
+            }
+            break;
+        }
+    }
+    // Materialize in chosen order without cloning the points.
+    let mut slots: Vec<Option<DesignPoint>> =
+        combined.into_iter().map(Some).collect();
+    chosen
+        .into_iter()
+        .map(|i| slots[i].take().expect("indices are unique"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+    use crate::config::SimConfig;
+    use crate::dse::Objective;
+
+    fn tiny_cfg() -> DseConfig {
+        let mut sim = SimConfig::default();
+        sim.max_jobs = 25;
+        sim.warmup_jobs = 2;
+        sim.injection_rate_per_ms = 2.0;
+        sim.max_sim_us = 2_000_000.0;
+        let mut cfg = DseConfig::default();
+        cfg.population = 6;
+        cfg.generations = 2;
+        cfg.seeds = vec![1];
+        cfg.sim = sim;
+        cfg.threads = 2;
+        cfg
+    }
+
+    fn apps() -> Vec<AppGraph> {
+        vec![suite::wifi_tx(WifiParams { symbols: 2 })]
+    }
+
+    #[test]
+    fn nondominated_sort_partitions_correctly() {
+        let o: Vec<Vec<f64>> = vec![
+            vec![1.0, 1.0], // front 0
+            vec![2.0, 2.0], // front 1 (dominated by 0)
+            vec![0.5, 3.0], // front 0
+            vec![3.0, 3.0], // front 2
+            vec![2.5, 0.5], // front 0
+        ];
+        let refs: Vec<&[f64]> = o.iter().map(|v| v.as_slice()).collect();
+        let fronts = nondominated_sort(&refs);
+        assert_eq!(fronts[0], vec![0, 2, 4]);
+        assert_eq!(fronts[1], vec![1]);
+        assert_eq!(fronts[2], vec![3]);
+        let rank = rank_of(&fronts, 5);
+        assert_eq!(rank, vec![0, 1, 0, 2, 0]);
+    }
+
+    #[test]
+    fn crowding_rewards_boundary_and_spread() {
+        let o: Vec<Vec<f64>> = vec![
+            vec![0.0, 10.0],
+            vec![1.0, 5.0],  // close to 0 and 2
+            vec![2.0, 4.0],
+            vec![10.0, 0.0],
+        ];
+        let refs: Vec<&[f64]> = o.iter().map(|v| v.as_slice()).collect();
+        let front: Vec<usize> = vec![0, 1, 2, 3];
+        let d = crowding_distance(&refs, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[2].is_finite());
+        // Point 2 spans a wider neighbour gap on objective 0.
+        assert!(d[2] > d[1]);
+    }
+
+    #[test]
+    fn engine_runs_and_archive_is_nontrivial() {
+        let mut e =
+            DseEngine::new(Platform::table2_soc(), tiny_cfg()).unwrap();
+        let mut gens = 0;
+        e.run(&apps(), None, |s| {
+            gens += 1;
+            assert!(s.front_size >= 1);
+            assert_eq!(s.best.len(), 2);
+        })
+        .unwrap();
+        assert_eq!(gens, 3);
+        assert_eq!(e.completed_generations(), 3);
+        assert!(e.is_done());
+        assert!(!e.archive().is_empty());
+        assert!(e.history()[2].hypervolume >= 0.0);
+        // Archive invariant: no entry dominates another.
+        let pts = e.archive().entries();
+        for a in pts {
+            for b in pts {
+                if !std::ptr::eq(a, b) {
+                    assert!(!dominates(&a.objectives, &b.objectives));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_algorithm_also_runs() {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = "random".into();
+        cfg.generations = 1;
+        let mut e =
+            DseEngine::new(Platform::table2_soc(), cfg).unwrap();
+        e.run(&apps(), None, |_| {}).unwrap();
+        assert_eq!(e.completed_generations(), 2);
+        assert!(!e.archive().is_empty());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_engine_state() {
+        let mut e =
+            DseEngine::new(Platform::table2_soc(), tiny_cfg()).unwrap();
+        e.step(&apps()).unwrap();
+        e.step(&apps()).unwrap();
+        let j = Json::parse(&e.checkpoint_json().to_string()).unwrap();
+        let e2 = DseEngine::from_checkpoint(&j).unwrap();
+        assert_eq!(e2.completed_generations(), 2);
+        assert_eq!(e2.rng.state(), e.rng.state());
+        assert_eq!(e2.archive(), e.archive());
+        assert_eq!(e2.population, e.population);
+        assert_eq!(e2.history(), e.history());
+    }
+
+    #[test]
+    fn rejects_scenarios_referencing_impossible_pes() {
+        // pe-failure fails PEs 10-13; with min 1 PE/cluster the smallest
+        // design has only 4 PEs, so the combination must be rejected.
+        let mut cfg = tiny_cfg();
+        cfg.scenarios = vec!["pe-failure".into()];
+        cfg.min_pes_per_cluster = 1;
+        assert!(DseEngine::new(Platform::table2_soc(), cfg).is_err());
+
+        // With >= 4 PEs/cluster every design has >= 16 PEs: PE 13 always
+        // exists and the scenario is accepted.
+        let mut cfg = tiny_cfg();
+        cfg.scenarios = vec!["pe-failure".into()];
+        cfg.min_pes_per_cluster = 4;
+        assert!(DseEngine::new(Platform::table2_soc(), cfg).is_ok());
+    }
+
+    #[test]
+    fn step_past_budget_errors() {
+        let mut cfg = tiny_cfg();
+        cfg.generations = 0;
+        let mut e =
+            DseEngine::new(Platform::table2_soc(), cfg).unwrap();
+        e.step(&apps()).unwrap();
+        assert!(e.step(&apps()).is_err());
+        e.set_generations(1);
+        assert!(e.step(&apps()).is_ok());
+    }
+
+    #[test]
+    fn objectives_drive_the_archive_dimension() {
+        let mut cfg = tiny_cfg();
+        cfg.objectives =
+            vec![Objective::Latency, Objective::Energy, Objective::PeakTemp];
+        cfg.generations = 0;
+        let mut e =
+            DseEngine::new(Platform::table2_soc(), cfg).unwrap();
+        e.step(&apps()).unwrap();
+        for p in e.archive().entries() {
+            assert_eq!(p.objectives.len(), 3);
+        }
+    }
+}

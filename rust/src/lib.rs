@@ -28,6 +28,11 @@
 //! * **Reporting** of schedules (Gantt), latency, throughput, energy and
 //!   temperature ([`stats`]), plus a multithreaded design-space sweep
 //!   coordinator ([`coordinator`]) that also sweeps scenario files.
+//! * **Guided design-space exploration** ([`dse`]): a mutable platform
+//!   genome (PE counts, OPP subsets, NoC speed grade, power budget),
+//!   NSGA-II-style multi-objective search over latency/energy/peak
+//!   temperature with a Pareto-front archive, parallel cached
+//!   evaluation, and resumable JSON checkpoints.
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack; Layers 1-2
 //! (Pallas kernels + JAX models) live in `python/compile/` and are only
@@ -53,6 +58,7 @@ pub mod app;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod dse;
 pub mod dtpm;
 pub mod jobgen;
 pub mod noc;
@@ -71,6 +77,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::app::{AppGraph, TaskSpec};
     pub use crate::config::SimConfig;
+    pub use crate::dse::{DseConfig, DseEngine};
     pub use crate::platform::{PeType, Platform};
     pub use crate::scenario::Scenario;
     pub use crate::sched::Scheduler;

@@ -9,6 +9,7 @@ fn main() {
         "run" => cli::cmd_run(&args),
         "sweep" => cli::cmd_sweep(&args),
         "scenario" => cli::cmd_scenario(&args),
+        "dse" => cli::cmd_dse(&args),
         "reproduce" => cli::cmd_reproduce(&args),
         "validate" => cli::cmd_validate(&args),
         "list" => Ok(cli::cmd_list()),

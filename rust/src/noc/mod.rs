@@ -180,6 +180,85 @@ mod tests {
     }
 
     #[test]
+    fn latency_is_monotonic_in_active_flows() {
+        let mut m = NocModel::new(&Platform::table2_soc(), true);
+        let mut last = m.transfer_us(0, 5, 2048);
+        let mut grew = false;
+        for _ in 0..40 {
+            m.flow_started();
+            let cur = m.transfer_us(0, 5, 2048);
+            assert!(
+                cur >= last,
+                "latency dropped while flows only started: {cur} < {last}"
+            );
+            grew |= cur > last;
+            last = cur;
+        }
+        assert!(grew, "40 concurrent flows never raised latency");
+        // Draining relaxes the model back toward quiet.  (The EMA lags
+        // the instantaneous flow count, so the decay need not be
+        // step-monotonic — only the end state is pinned.)
+        let peak = last;
+        for _ in 0..40 {
+            m.flow_finished();
+        }
+        for _ in 0..60 {
+            // Idle-tick the EMA down with zero active flows.
+            m.flow_finished();
+        }
+        assert!(m.transfer_us(0, 5, 2048) < peak);
+    }
+
+    #[test]
+    fn contention_free_matches_closed_form() {
+        let p = Platform::table2_soc();
+        let m = model();
+        for (src, dst, bytes) in
+            [(0usize, 1usize, 64u64), (0, 9, 2048), (3, 12, 777), (5, 6, 1)]
+        {
+            let expected = p.hops(src, dst) as f64 * p.noc.hop_latency_us
+                + bytes as f64 / p.noc.link_bandwidth
+                + p.noc.mem_latency_us;
+            assert_eq!(
+                m.transfer_us(src, dst, bytes),
+                expected,
+                "{src}->{dst} x{bytes}"
+            );
+        }
+    }
+
+    #[test]
+    fn congestion_state_resets_between_simulations() {
+        // Direct: a fresh model has no residual congestion.
+        let p = Platform::table2_soc();
+        let mut m1 = NocModel::new(&p, true);
+        let quiet = m1.transfer_us(0, 5, 1024);
+        for _ in 0..100 {
+            m1.flow_started();
+        }
+        assert!(m1.transfer_us(0, 5, 1024) > quiet);
+        let m2 = NocModel::new(&p, true);
+        assert_eq!(m2.transfer_us(0, 5, 1024), quiet);
+
+        // End-to-end: each Simulation builds its own NocModel, so two
+        // identical congested runs are bit-identical — run 2 cannot see
+        // run 1's flow history.
+        use crate::app::suite::{self, WifiParams};
+        use crate::config::SimConfig;
+        use crate::sim::Simulation;
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 3 })];
+        let mut cfg = SimConfig::default();
+        cfg.max_jobs = 60;
+        cfg.warmup_jobs = 6;
+        cfg.injection_rate_per_ms = 4.0;
+        cfg.noc_congestion = true;
+        let r1 = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        let r2 = Simulation::build(&p, &apps, &cfg).unwrap().run();
+        assert_eq!(r1.job_latencies_us, r2.job_latencies_us);
+        assert_eq!(r1.total_energy_j, r2.total_energy_j);
+    }
+
+    #[test]
     fn contention_free_is_deterministic() {
         let mut m = model();
         let x = m.transfer_us(0, 9, 2048);

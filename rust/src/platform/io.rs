@@ -7,6 +7,7 @@
 //! ```json
 //! {
 //!   "name": "my-dssoc",
+//!   "t_ambient": 25.0,
 //!   "mesh": {"x": 4, "y": 4, "hop_latency_us": 0.05,
 //!            "link_bandwidth": 8000, "mem_latency_us": 0.5},
 //!   "classes": [
@@ -173,7 +174,15 @@ impl Platform {
             });
         }
 
-        Platform::new(name, classes, pes, clusters, noc, floorplan)
+        let mut platform =
+            Platform::new(name, classes, pes, clusters, noc, floorplan)?;
+        // Optional: ambient temperature (°C).  Without the key the
+        // constructor default (25 °C) stands — older platform files
+        // keep loading unchanged.
+        if let Some(t) = j.get("t_ambient").and_then(Json::as_f64) {
+            platform.t_ambient = t;
+        }
+        Ok(platform)
     }
 
     pub fn from_json_file(path: &std::path::Path) -> Result<Platform> {
@@ -184,6 +193,7 @@ impl Platform {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("name", Json::Str(self.name.clone()));
+        j.set("t_ambient", Json::Num(self.t_ambient));
 
         let mut mesh = Json::obj();
         mesh.set("x", Json::Num(self.noc.mesh_x as f64))
@@ -321,6 +331,101 @@ mod tests {
         let r1 = Simulation::build(&p, &apps, &cfg).unwrap().run();
         let r2 = Simulation::build(&p2, &apps, &cfg).unwrap().run();
         assert_eq!(r1.job_latencies_us, r2.job_latencies_us);
+    }
+
+    /// Field-by-field equality of a platform and its JSON round-trip —
+    /// any field the (de)serializer silently drops (and hence any field
+    /// the DSE genome decode path would lose when re-materializing a
+    /// design from a checkpointed platform) fails here by name.
+    fn assert_roundtrip_exact(p: &Platform) {
+        let p2 = Platform::from_json(&p.to_json()).unwrap();
+        assert_eq!(p2.name, p.name, "name");
+        assert_eq!(p2.t_ambient, p.t_ambient, "t_ambient");
+        assert_eq!(p2.noc.mesh_x, p.noc.mesh_x, "mesh_x");
+        assert_eq!(p2.noc.mesh_y, p.noc.mesh_y, "mesh_y");
+        assert_eq!(
+            p2.noc.hop_latency_us, p.noc.hop_latency_us,
+            "hop_latency_us"
+        );
+        assert_eq!(
+            p2.noc.link_bandwidth, p.noc.link_bandwidth,
+            "link_bandwidth"
+        );
+        assert_eq!(
+            p2.noc.mem_latency_us, p.noc.mem_latency_us,
+            "mem_latency_us"
+        );
+        assert_eq!(p2.classes.len(), p.classes.len(), "class count");
+        for (a, b) in p.classes.iter().zip(&p2.classes) {
+            assert_eq!(a.name, b.name, "class name");
+            assert_eq!(a.ty, b.ty, "class type of {}", a.name);
+            assert_eq!(
+                a.nominal_mhz, b.nominal_mhz,
+                "nominal_mhz of {}",
+                a.name
+            );
+            assert_eq!(a.opps, b.opps, "opps of {}", a.name);
+            assert_eq!(a.ceff, b.ceff, "ceff of {}", a.name);
+            assert_eq!(a.leak_k1, b.leak_k1, "leak_k1 of {}", a.name);
+            assert_eq!(a.leak_k2, b.leak_k2, "leak_k2 of {}", a.name);
+        }
+        assert_eq!(p2.n_pes(), p.n_pes(), "pe count");
+        for (a, b) in p.pes.iter().zip(&p2.pes) {
+            assert_eq!(a.id, b.id, "pe id");
+            assert_eq!(a.class, b.class, "class of pe {}", a.id);
+            assert_eq!(a.cluster, b.cluster, "cluster of pe {}", a.id);
+            assert_eq!((a.x, a.y), (b.x, b.y), "coords of pe {}", a.id);
+        }
+        assert_eq!(p2.clusters.len(), p.clusters.len(), "cluster count");
+        for (a, b) in p.clusters.iter().zip(&p2.clusters) {
+            assert_eq!(a.id, b.id, "cluster id");
+            assert_eq!(a.name, b.name, "cluster name");
+            assert_eq!(a.class, b.class, "class of cluster {}", a.name);
+            assert_eq!(a.pe_ids, b.pe_ids, "pe_ids of cluster {}", a.name);
+            assert_eq!(
+                a.thermal_node, b.thermal_node,
+                "thermal_node of cluster {}",
+                a.name
+            );
+        }
+        assert_eq!(
+            p2.floorplan.node_names, p.floorplan.node_names,
+            "floorplan node names"
+        );
+        assert_eq!(
+            p2.floorplan.capacitance, p.floorplan.capacitance,
+            "floorplan capacitance"
+        );
+        assert_eq!(p2.floorplan.g_amb, p.floorplan.g_amb, "floorplan g_amb");
+        assert_eq!(
+            p2.floorplan.couplings, p.floorplan.couplings,
+            "floorplan couplings"
+        );
+    }
+
+    #[test]
+    fn table2_preset_roundtrips_every_field() {
+        assert_roundtrip_exact(&Platform::table2_soc());
+    }
+
+    #[test]
+    fn zcu102_preset_roundtrips_every_field() {
+        assert_roundtrip_exact(&crate::platform::presets::zcu102_soc());
+    }
+
+    #[test]
+    fn t_ambient_roundtrips_and_defaults() {
+        let mut p = Platform::table2_soc();
+        p.t_ambient = 41.5;
+        let p2 = Platform::from_json(&p.to_json()).unwrap();
+        assert_eq!(p2.t_ambient, 41.5);
+        // Files without the key keep the constructor default.
+        let mut j = p.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("t_ambient");
+        }
+        let p3 = Platform::from_json(&j).unwrap();
+        assert_eq!(p3.t_ambient, 25.0);
     }
 
     #[test]

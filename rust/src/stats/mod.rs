@@ -371,6 +371,72 @@ impl SimReport {
     }
 }
 
+/// Per-generation summary of a guided design-space exploration run
+/// ([`crate::dse`]): search progress (front size, hypervolume proxy,
+/// best objective values) and evaluation economics (evaluations, cache
+/// hits, simulations executed).  Checkpoints carry the whole history,
+/// so a resumed search reports the same trajectory as an uninterrupted
+/// one.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DseGenStats {
+    /// Generation index (0 = the seeded initial population).
+    pub generation: usize,
+    /// Genome evaluations requested this generation (cache hits
+    /// included).
+    pub evals: usize,
+    /// Evaluations served from the result cache this generation.
+    pub cache_hits: usize,
+    /// Simulations actually executed this generation.
+    pub sims: usize,
+    /// Non-dominated designs in the archive after this generation.
+    pub front_size: usize,
+    /// Hypervolume proxy of the archive — a front-*shape* diagnostic
+    /// normalized to the archive's own bounding box, not a monotone
+    /// progress metric (see `dse::ParetoArchive::hypervolume_proxy`).
+    pub hypervolume: f64,
+    /// Best (minimum) value per objective on the front so far — the
+    /// monotone progress signal.
+    pub best: Vec<f64>,
+}
+
+impl DseGenStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("generation", Json::Num(self.generation as f64))
+            .set("evals", Json::Num(self.evals as f64))
+            .set("cache_hits", Json::Num(self.cache_hits as f64))
+            .set("sims", Json::Num(self.sims as f64))
+            .set("front_size", Json::Num(self.front_size as f64))
+            .set("hypervolume", Json::Num(self.hypervolume))
+            .set(
+                "best",
+                Json::Arr(
+                    self.best.iter().map(|&x| Json::Num(x)).collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<DseGenStats> {
+        Ok(DseGenStats {
+            generation: j.req_f64("generation")? as usize,
+            evals: j.req_f64("evals")? as usize,
+            cache_hits: j.req_f64("cache_hits")? as usize,
+            sims: j.req_f64("sims")? as usize,
+            front_size: j.req_f64("front_size")? as usize,
+            hypervolume: j.req_f64("hypervolume")?,
+            best: j
+                .get("best")
+                .ok_or_else(|| {
+                    crate::Error::Config(
+                        "DseGenStats missing 'best'".into(),
+                    )
+                })?
+                .f64_vec()?,
+        })
+    }
+}
+
 /// Collect a Figure-3-style series: mean latency per injection rate.
 pub fn latency_series(
     name: &str,
@@ -400,6 +466,21 @@ mod tests {
             total_energy_j: 0.5,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn dse_gen_stats_json_roundtrip() {
+        let s = DseGenStats {
+            generation: 7,
+            evals: 16,
+            cache_hits: 3,
+            sims: 26,
+            front_size: 9,
+            hypervolume: 0.8125,
+            best: vec![123.5, 1.75, 61.0],
+        };
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(DseGenStats::from_json(&j).unwrap(), s);
     }
 
     #[test]

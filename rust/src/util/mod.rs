@@ -56,6 +56,15 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Available hardware parallelism with a conservative fallback — the
+/// single resolve-thread-count policy behind `cli::default_threads`
+/// and the DSE evaluator.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
 /// Format a microsecond quantity with an adaptive unit.
 pub fn fmt_us(us: f64) -> String {
     if us >= 1e6 {

@@ -1,0 +1,178 @@
+//! Integration tests for the guided design-space exploration engine:
+//! end-to-end search behaviour, thread-count determinism (the same
+//! pattern as the sweep bit-identity test in `prop_invariants.rs`),
+//! and checkpoint/resume bit-identity.
+
+use ds3r::app::suite::{self, RadarParams, WifiParams};
+use ds3r::app::AppGraph;
+use ds3r::dse::{DseConfig, DseEngine, Objective};
+use ds3r::platform::Platform;
+use ds3r::util::json::Json;
+
+fn tiny_cfg(threads: usize) -> DseConfig {
+    let mut cfg = DseConfig::default();
+    cfg.population = 6;
+    cfg.generations = 3;
+    cfg.search_seed = 42;
+    cfg.seeds = vec![1];
+    cfg.threads = threads;
+    cfg.sim.injection_rate_per_ms = 2.0;
+    cfg.sim.max_jobs = 30;
+    cfg.sim.warmup_jobs = 3;
+    cfg.sim.max_sim_us = 2_000_000.0;
+    cfg
+}
+
+fn apps() -> Vec<AppGraph> {
+    vec![suite::wifi_tx(WifiParams { symbols: 2 })]
+}
+
+/// Serialize the parts of engine state that must be reproducible
+/// (everything except the config, which legitimately differs in
+/// `threads` between the compared runs).
+fn state_fingerprint(e: &DseEngine) -> (String, String) {
+    let archive = e.archive().to_json().to_string();
+    let history = Json::Arr(
+        e.history().iter().map(|h| h.to_json()).collect::<Vec<_>>(),
+    )
+    .to_string();
+    (archive, history)
+}
+
+#[test]
+fn dse_archive_bit_identical_across_1_vs_8_threads() {
+    let apps = apps();
+    let mut serial =
+        DseEngine::new(Platform::table2_soc(), tiny_cfg(1)).unwrap();
+    serial.run(&apps, None, |_| {}).unwrap();
+    let mut parallel =
+        DseEngine::new(Platform::table2_soc(), tiny_cfg(8)).unwrap();
+    parallel.run(&apps, None, |_| {}).unwrap();
+
+    let (a_archive, a_history) = state_fingerprint(&serial);
+    let (b_archive, b_history) = state_fingerprint(&parallel);
+    assert_eq!(
+        a_archive, b_archive,
+        "Pareto archive depends on evaluation thread count"
+    );
+    assert_eq!(
+        a_history, b_history,
+        "per-generation stats depend on evaluation thread count"
+    );
+    assert!(!serial.archive().is_empty());
+}
+
+#[test]
+fn dse_resume_continues_bit_identically() {
+    let apps = apps();
+
+    // Reference: one uninterrupted 1+5-generation run.
+    let mut straight_cfg = tiny_cfg(2);
+    straight_cfg.generations = 5;
+    let mut straight =
+        DseEngine::new(Platform::table2_soc(), straight_cfg).unwrap();
+    straight.run(&apps, None, |_| {}).unwrap();
+
+    // Interrupted: stop after 1+2 generations, checkpoint to disk,
+    // rebuild from the file, extend the budget, continue.
+    let mut short_cfg = tiny_cfg(2);
+    short_cfg.generations = 2;
+    let mut interrupted =
+        DseEngine::new(Platform::table2_soc(), short_cfg).unwrap();
+    interrupted.run(&apps, None, |_| {}).unwrap();
+
+    let dir = std::env::temp_dir().join("ds3r_dse_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("checkpoint.json");
+    interrupted.save_checkpoint(&ckpt).unwrap();
+
+    let mut resumed = DseEngine::from_checkpoint_file(&ckpt).unwrap();
+    assert_eq!(resumed.completed_generations(), 3);
+    resumed.set_generations(5);
+    resumed.run(&apps, None, |_| {}).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let (a_archive, a_history) = state_fingerprint(&straight);
+    let (b_archive, b_history) = state_fingerprint(&resumed);
+    assert_eq!(
+        a_archive, b_archive,
+        "resumed archive diverged from the uninterrupted run"
+    );
+    assert_eq!(
+        a_history, b_history,
+        "resumed per-generation stats diverged"
+    );
+}
+
+#[test]
+fn dse_checkpoint_file_roundtrip_is_exact() {
+    let apps = apps();
+    let mut e =
+        DseEngine::new(Platform::table2_soc(), tiny_cfg(2)).unwrap();
+    e.step(&apps).unwrap();
+    e.step(&apps).unwrap();
+
+    let dir = std::env::temp_dir().join("ds3r_dse_roundtrip_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("checkpoint.json");
+    e.save_checkpoint(&ckpt).unwrap();
+    let e2 = DseEngine::from_checkpoint_file(&ckpt).unwrap();
+    // Writing the restored engine's checkpoint reproduces the file
+    // byte-for-byte — nothing drifts through the f64/JSON round-trip.
+    let ckpt2 = dir.join("checkpoint2.json");
+    e2.save_checkpoint(&ckpt2).unwrap();
+    let a = std::fs::read_to_string(&ckpt).unwrap();
+    let b = std::fs::read_to_string(&ckpt2).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(a, b);
+}
+
+/// A meaningful (if small-budget) two-objective search on the Table-2
+/// SoC with the WiFi-TX + pulse-Doppler mix: the acceptance-criteria
+/// workload at test scale.  The full-budget path (>= 200 evaluations)
+/// runs through `ds3r dse run` defaults and the design_space example.
+#[test]
+fn dse_finds_a_nontrivial_front_on_the_mixed_workload() {
+    let apps = vec![
+        suite::wifi_tx(WifiParams { symbols: 4 }),
+        suite::pulse_doppler(RadarParams { pulses: 4 }),
+    ];
+    let mut cfg = tiny_cfg(0);
+    cfg.population = 16;
+    cfg.generations = 7; // 128 evaluations
+    cfg.objectives = vec![Objective::Latency, Objective::Energy];
+    cfg.sim.injection_rate_per_ms = 3.0;
+    cfg.sim.max_jobs = 30;
+    cfg.sim.warmup_jobs = 3;
+    let mut e = DseEngine::new(Platform::table2_soc(), cfg).unwrap();
+    e.run(&apps, None, |_| {}).unwrap();
+
+    let front = e.archive().entries();
+    assert!(
+        front.len() >= 5,
+        "expected a non-trivial Pareto front, got {} designs",
+        front.len()
+    );
+    // The front spans a real trade-off: the latency-best and
+    // energy-best designs differ.
+    let best = e.archive().best_per_objective();
+    let lat_winner = front
+        .iter()
+        .find(|p| p.objectives[0] == best[0])
+        .unwrap();
+    let energy_winner = front
+        .iter()
+        .find(|p| p.objectives[1] == best[1])
+        .unwrap();
+    assert_ne!(
+        lat_winner.genome, energy_winner.genome,
+        "degenerate front: one design wins every objective"
+    );
+    // The proxy is computed and finite every generation.  (It is
+    // normalized to the archive's own bounding box, so it is not
+    // monotone across generations — only well-defined.)
+    for h in e.history() {
+        assert!(h.hypervolume.is_finite() && h.hypervolume >= 0.0);
+        assert!(h.front_size >= 1);
+    }
+}
