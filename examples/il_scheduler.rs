@@ -1,0 +1,125 @@
+//! Learned runtime resource management end-to-end: train an
+//! imitation-learning scheduler against an ETF oracle on a mixed
+//! wireless + radar workload (WiFi-TX + pulse Doppler), write the
+//! deployable policy artifact, and evaluate it against the oracle and
+//! the random/round-robin baselines — the "dynamic resource management"
+//! pillar of the paper made learnable (DS3 journal version,
+//! arXiv:2003.09016; CEDR, arXiv:2204.08962).
+//!
+//! ```sh
+//! cargo run --release --example il_scheduler
+//! ds3r run --sched il --il-policy il_policy.json   # deploy it
+//! ```
+//!
+//! Environment knobs (the CI smoke job shrinks the budget with these,
+//! mirroring the `DSE_*` knobs of `design_space.rs`):
+//! * `LEARN_ROUNDS`  — collection/training rounds (default 2; 1 =
+//!   behavioural cloning, more adds DAgger rounds)
+//! * `LEARN_EPOCHS`  — SGD epochs per training pass (default 10)
+//! * `LEARN_JOBS`    — jobs per collection/eval simulation (default 150)
+//! * `LEARN_THREADS` — fan-out threads (default: all cores)
+//!
+//! The example exits non-zero unless the trained policy beats the
+//! `random` baseline on mean latency — the same gate CI enforces.
+
+use ds3r::app::suite::{self, RadarParams, WifiParams};
+use ds3r::learn::{self, LearnConfig};
+use ds3r::platform::Platform;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let platform = Platform::table2_soc();
+    let apps = vec![
+        suite::wifi_tx(WifiParams { symbols: 8 }),
+        suite::pulse_doppler(RadarParams { pulses: 8 }),
+    ];
+
+    let mut lc = LearnConfig::default();
+    lc.oracle = "etf".into();
+    lc.rounds = env_usize("LEARN_ROUNDS", 2);
+    lc.epochs = env_usize("LEARN_EPOCHS", 10);
+    lc.threads = env_usize("LEARN_THREADS", 0);
+    lc.sim.max_jobs = env_usize("LEARN_JOBS", 150);
+    lc.sim.warmup_jobs = lc.sim.max_jobs / 10;
+
+    println!(
+        "Imitation learning on the Table-2 SoC — WiFi-TX + pulse-Doppler \
+         mix, oracle '{}'",
+        lc.oracle
+    );
+    println!(
+        "grid: seeds {:?} x rates {:?} jobs/ms, {} round(s) x {} SGD \
+         epochs\n",
+        lc.seeds, lc.rates_per_ms, lc.rounds, lc.epochs
+    );
+
+    let (model, summary) = learn::train_policy(&platform, &apps, &lc)
+        .expect("training pipeline completes");
+    println!(
+        "trained on {} demonstrations over {} round(s){}",
+        summary.samples,
+        summary.rounds,
+        summary
+            .agreement
+            .map(|a| format!(
+                ", last-round oracle agreement {:.1}%",
+                a * 100.0
+            ))
+            .unwrap_or_default()
+    );
+
+    let artifact = std::path::Path::new("il_policy.json");
+    model.save(artifact).expect("policy artifact written");
+    println!("policy artifact -> {}\n", artifact.display());
+
+    let report = learn::evaluate(&platform, &apps, &lc, &model)
+        .expect("evaluation completes");
+    println!(
+        "{:<10} {:>12} {:>10} {:>12} {:>12}",
+        "scheduler", "mean us", "mJ/job", "done", "fallbacks"
+    );
+    for row in &report.rows {
+        println!(
+            "{:<10} {:>12.1} {:>10.2} {:>7}/{:<6} {:>12}",
+            row.scheduler,
+            row.mean_latency_us,
+            row.energy_per_job_mj,
+            row.completed,
+            row.injected,
+            if row.decisions > 0 {
+                format!("{}/{}", row.fallbacks, row.decisions)
+            } else {
+                "-".into()
+            }
+        );
+    }
+    println!(
+        "\ndecision agreement with the oracle: {:.1}% over {} grid points",
+        report.agreement * 100.0,
+        report.grid_points
+    );
+
+    let il = report.row("il").expect("il row");
+    let oracle = report.row(&lc.oracle).expect("oracle row");
+    let random = report.row("random").expect("random row");
+    println!(
+        "il vs oracle: {:.1} vs {:.1} us ({:+.1}%)",
+        il.mean_latency_us,
+        oracle.mean_latency_us,
+        (il.mean_latency_us / oracle.mean_latency_us - 1.0) * 100.0
+    );
+    // The CI gate: a learned policy must beat the random baseline.
+    assert!(
+        il.mean_latency_us < random.mean_latency_us,
+        "learned policy ({:.1} us) does not beat random ({:.1} us)",
+        il.mean_latency_us,
+        random.mean_latency_us
+    );
+    println!("gate: il beats random on mean latency — OK");
+}

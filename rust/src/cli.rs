@@ -7,6 +7,9 @@
 //! * `dse`        — guided design-space exploration: `run` a
 //!   multi-objective hardware search, `resume` it from a checkpoint,
 //!   print or `export` the Pareto `front` (see [`crate::dse`]).
+//! * `learn`      — imitation-learned scheduling: `collect` oracle
+//!   demonstrations, `train` the deployable `il` policy, `eval` it
+//!   against the oracle and baselines (see [`crate::learn`]).
 //! * `reproduce`  — regenerate the paper's tables/figures
 //!   (`table1`, `table2`, `fig2`, `fig3`, `all`).
 //! * `validate`   — analytical model vs fine-grained reference
@@ -228,6 +231,10 @@ pub fn apply_sim_flags(args: &Args, cfg: &mut SimConfig) -> Result<()> {
     if args.has("artifacts") {
         cfg.artifacts_dir =
             Some(std::path::PathBuf::from(args.str_or("artifacts", "")));
+    }
+    if args.has("il-policy") {
+        cfg.il_policy =
+            Some(std::path::PathBuf::from(args.str_or("il-policy", "")));
     }
     if args.has("scenario") {
         cfg.scenario = Some(crate::scenario::resolve(
@@ -909,6 +916,210 @@ fn cmd_dse_export(args: &Args) -> Result<String> {
 }
 
 // ---------------------------------------------------------------------------
+// learn: imitation-learned scheduling
+// ---------------------------------------------------------------------------
+
+/// Assemble a `LearnConfig` from `--learn-config` plus flag overrides.
+fn learn_config_from_args(args: &Args) -> Result<crate::learn::LearnConfig> {
+    use crate::learn::LearnConfig;
+    let mut lc = if args.has("learn-config") {
+        LearnConfig::load(std::path::Path::new(
+            &args.str_or("learn-config", ""),
+        ))?
+    } else {
+        LearnConfig::default()
+    };
+    if args.has("oracle") {
+        lc.oracle = args.str_or("oracle", "etf");
+    }
+    lc.rounds = args.usize_or("rounds", lc.rounds)?;
+    lc.epochs = args.usize_or("epochs", lc.epochs)?;
+    lc.learning_rate = args.f64_or("lr", lc.learning_rate)?;
+    lc.l2 = args.f64_or("l2", lc.l2)?;
+    lc.train_seed =
+        args.usize_or("train-seed", lc.train_seed as usize)? as u64;
+    lc.guard_ratio = args.f64_or("guard", lc.guard_ratio)?;
+    if args.has("learn-seeds") {
+        lc.seeds = args
+            .list_or("learn-seeds", &[])
+            .iter()
+            .map(|s| {
+                s.parse::<u64>().map_err(|_| {
+                    Error::Config(format!("--learn-seeds: bad seed '{s}'"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if args.has("rates") {
+        lc.rates_per_ms = args.rates_or("rates", &[])?;
+    }
+    if args.has("baselines") {
+        lc.baselines = args.list_or("baselines", &[]);
+    }
+    lc.max_samples_per_run =
+        args.usize_or("max-samples", lc.max_samples_per_run)?;
+    lc.threads = args.usize_or("threads", lc.threads)?;
+    // Base-simulation flags (--jobs, --warmup, --governor, ...) overlay
+    // the embedded SimConfig; --rate/--seed stay per-grid-point knobs.
+    apply_sim_flags(args, &mut lc.sim)?;
+    lc.validate()?;
+    Ok(lc)
+}
+
+/// Render an eval report as an ASCII table + agreement line.
+fn learn_eval_text(report: &crate::learn::EvalReport) -> String {
+    let rows: Vec<Vec<String>> = report
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.scheduler.clone(),
+                format!("{:.1}", r.mean_latency_us),
+                format!("{:.2}", r.energy_per_job_mj),
+                format!("{}/{}", r.completed, r.injected),
+                if r.decisions > 0 {
+                    format!("{}/{}", r.fallbacks, r.decisions)
+                } else {
+                    "-".into()
+                },
+            ]
+        })
+        .collect();
+    let mut out = plot::ascii_table(
+        &["scheduler", "mean us", "mJ/job", "done", "fallbacks"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "decision agreement with the oracle: {:.1}% over {} grid \
+         points\n",
+        report.agreement * 100.0,
+        report.grid_points
+    ));
+    out
+}
+
+/// `ds3r learn <collect|train|eval>` driver.
+pub fn cmd_learn(args: &Args) -> Result<String> {
+    let sub = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("train");
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let apps = apps_from_args(args)?;
+    let mut lc = learn_config_from_args(args)?;
+    match sub {
+        "collect" => {
+            let out = args.str_or("out", "il_dataset.json");
+            let (data, _, _) =
+                crate::learn::collect_round(&platform, &apps, &lc, None)?;
+            data.save(std::path::Path::new(&out))?;
+            Ok(format!(
+                "collected {} demonstrations from oracle '{}' over a \
+                 {}x{} seeds x rates grid -> {out}\n",
+                data.len(),
+                lc.oracle,
+                lc.seeds.len(),
+                lc.rates_per_ms.len()
+            ))
+        }
+        "train" => {
+            let out = args.str_or("out", "il_policy.json");
+            let (model, text) = if args.has("data") {
+                // Train on a previously collected dataset.
+                let data = crate::learn::Dataset::load(
+                    std::path::Path::new(&args.str_or("data", "")),
+                )?;
+                let params = crate::learn::TrainParams {
+                    epochs: lc.epochs,
+                    learning_rate: lc.learning_rate,
+                    l2: lc.l2,
+                    seed: lc.train_seed,
+                };
+                // The dataset records which oracle labelled it; stamp
+                // the artifact with that unless --oracle overrides.
+                let oracle = if args.has("oracle") || data.oracle.is_empty()
+                {
+                    lc.oracle.clone()
+                } else {
+                    data.oracle.clone()
+                };
+                let model = crate::learn::SoftmaxModel::train(
+                    &data,
+                    platform.classes.len().max(1),
+                    &oracle,
+                    &params,
+                    lc.guard_ratio,
+                );
+                (
+                    model,
+                    format!(
+                        "trained on {} stored demonstrations\n",
+                        data.len()
+                    ),
+                )
+            } else {
+                // Full DAgger pipeline: collect -> train, lc.rounds x.
+                let (model, summary) =
+                    crate::learn::train_policy(&platform, &apps, &lc)?;
+                let agree = summary
+                    .agreement
+                    .map(|a| format!(", last-round agreement {:.1}%", a * 100.0))
+                    .unwrap_or_default();
+                (
+                    model,
+                    format!(
+                        "trained on {} demonstrations over {} round(s){}\n",
+                        summary.samples, summary.rounds, agree
+                    ),
+                )
+            };
+            model.save(std::path::Path::new(&out))?;
+            Ok(format!(
+                "{text}policy artifact -> {out}  (run it: ds3r run \
+                 --sched il --il-policy {out}; evaluate: ds3r learn \
+                 eval --policy {out})\n"
+            ))
+        }
+        "eval" => {
+            let path = args.str_or("policy", "il_policy.json");
+            let p = std::path::Path::new(&path);
+            let (model, note) = if p.exists() {
+                (crate::learn::SoftmaxModel::load(p)?, String::new())
+            } else if args.has("policy") {
+                return Err(Error::Config(format!(
+                    "policy artifact '{path}' not found"
+                )));
+            } else {
+                (
+                    crate::learn::SoftmaxModel::from_json(
+                        &crate::util::json::Json::parse(
+                            crate::learn::PRESET_POLICY,
+                        )?,
+                    )?,
+                    format!(
+                        "(no {path}; evaluating the committed pretrained \
+                         preset)\n"
+                    ),
+                )
+            };
+            // The artifact records which oracle it imitates; compare
+            // and label against that one unless --oracle overrides.
+            if !args.has("oracle") && lc.oracle != model.oracle {
+                lc.oracle = model.oracle.clone();
+                lc.validate()?;
+            }
+            let report =
+                crate::learn::evaluate(&platform, &apps, &lc, &model)?;
+            Ok(format!("{note}{}", learn_eval_text(&report)))
+        }
+        other => Err(Error::Config(format!(
+            "unknown learn subcommand '{other}' (collect, train, eval)"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // reproduce: the paper's tables and figures
 // ---------------------------------------------------------------------------
 
@@ -1140,7 +1351,7 @@ USAGE:
                  [--symbols 12] [--governor ondemand] [--throttle 85]
                  [--power-cap 6] [--gantt] [--traces] [--xla-thermal]
                  [--record-trace out.json] [--trace-file in.json]
-                 [--scenario pe-failure|file.json]
+                 [--il-policy policy.json] [--scenario pe-failure|file.json]
                  [--platform table2|zcu102] [--config file.json] [--json]
   ds3r sweep     [--scheds met,etf,ilp] [--rates 1:8:1] [--threads N]
                  [--csv out.csv] (+ run flags)
@@ -1156,6 +1367,13 @@ USAGE:
                  resume --checkpoint file [--generations N]
                  front  --checkpoint file [--json]
                  export --checkpoint file [--out dse_designs]
+  ds3r learn     collect [--out il_dataset.json] |
+                 train   [--data il_dataset.json] [--out il_policy.json] |
+                 eval    [--policy il_policy.json]
+                 [--oracle etf] [--rounds 2] [--epochs 10] [--lr 0.05]
+                 [--l2 0.0001] [--train-seed 7] [--guard 1.25]
+                 [--learn-seeds 1,2] [--rates 1.5,3] [--baselines random,rr]
+                 [--learn-config file.json] [--threads N] (+ run flags)
   ds3r reproduce [table1|table2|fig2|fig3|all] [--quick] [--jobs N]
                  [--rates lo:hi:step] [--csv fig3.csv]
   ds3r validate  [--jobs 200]
@@ -1379,6 +1597,72 @@ mod tests {
                 crate::dse::Objective::PeakTemp
             ]
         );
+    }
+
+    #[test]
+    fn learn_config_from_args_applies_flags() {
+        let lc = learn_config_from_args(&args(
+            "learn train --oracle heft --rounds 3 --epochs 4 --lr 0.1 \
+             --l2 0.01 --train-seed 11 --guard 1.5 --learn-seeds 9,10 \
+             --rates 1,2 --baselines rr --max-samples 500 --jobs 80 \
+             --warmup 8",
+        ))
+        .unwrap();
+        assert_eq!(lc.oracle, "heft");
+        assert_eq!(lc.rounds, 3);
+        assert_eq!(lc.epochs, 4);
+        assert_eq!(lc.learning_rate, 0.1);
+        assert_eq!(lc.l2, 0.01);
+        assert_eq!(lc.train_seed, 11);
+        assert_eq!(lc.guard_ratio, 1.5);
+        assert_eq!(lc.seeds, vec![9, 10]);
+        assert_eq!(lc.rates_per_ms, vec![1.0, 2.0]);
+        assert_eq!(lc.baselines, vec!["rr"]);
+        assert_eq!(lc.max_samples_per_run, 500);
+        assert_eq!(lc.sim.max_jobs, 80);
+        // Validation flows through.
+        assert!(learn_config_from_args(&args("learn --guard 0.5"))
+            .is_err());
+        assert!(learn_config_from_args(&args("learn --oracle il"))
+            .is_err());
+    }
+
+    #[test]
+    fn learn_cli_collect_train_eval_cycle() {
+        let dir = std::env::temp_dir().join("ds3r_cli_learn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = dir.join("data.json");
+        let policy = dir.join("policy.json");
+        let base = "--learn-seeds 1 --rates 2 --jobs 30 --warmup 3 \
+                    --symbols 2 --rounds 1 --epochs 2 --threads 2";
+        let out = cmd_learn(&args(&format!(
+            "learn collect --out {} {base}",
+            data.display()
+        )))
+        .unwrap();
+        assert!(out.contains("demonstrations"), "{out}");
+        assert!(data.exists());
+        let out = cmd_learn(&args(&format!(
+            "learn train --data {} --out {} {base}",
+            data.display(),
+            policy.display()
+        )))
+        .unwrap();
+        assert!(out.contains("policy artifact"), "{out}");
+        assert!(policy.exists());
+        let out = cmd_learn(&args(&format!(
+            "learn eval --policy {} {base}",
+            policy.display()
+        )))
+        .unwrap();
+        assert!(out.contains("agreement"), "{out}");
+        assert!(out.contains("il"), "{out}");
+        assert!(cmd_learn(&args("learn frobnicate")).is_err());
+        assert!(cmd_learn(&args(
+            "learn eval --policy /nonexistent/policy.json"
+        ))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //! paper's scheduling case study (§3).
 //!
 //! Design-space exploration runs are configured by [`DseConfig`]
-//! (re-exported from [`crate::dse`]), which embeds a base `SimConfig`
-//! for its evaluations and follows the same JSON-with-defaults and
-//! validate-on-parse conventions.
+//! (re-exported from [`crate::dse`]) and imitation-learning runs by
+//! [`LearnConfig`] (re-exported from [`crate::learn`]); both embed a
+//! base `SimConfig` for their evaluations and follow the same
+//! JSON-with-defaults and validate-on-parse conventions.
 
 use std::path::PathBuf;
 
@@ -17,6 +18,7 @@ use crate::util::json::Json;
 use crate::{Error, Result};
 
 pub use crate::dse::DseConfig;
+pub use crate::learn::LearnConfig;
 
 /// Job inter-arrival process.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -121,6 +123,10 @@ pub struct SimConfig {
     pub trace_file: Option<PathBuf>,
     /// Artifacts directory override (etf-xla / XLA thermal path).
     pub artifacts_dir: Option<PathBuf>,
+    /// Trained IL policy artifact for the `il` scheduler (JSON, see
+    /// [`crate::learn`]).  `None` uses the committed pretrained preset
+    /// baked into the binary, so `--sched il` works without training.
+    pub il_policy: Option<PathBuf>,
     /// Step the thermal model through the AOT PJRT artifact instead of
     /// the native rust path (bit-compatible to ~1e-4; see DESIGN.md).
     pub use_xla_thermal: bool,
@@ -157,6 +163,7 @@ impl Default for SimConfig {
             max_sim_us: 60_000_000.0, // 60 s simulated
             trace_file: None,
             artifacts_dir: None,
+            il_policy: None,
             use_xla_thermal: false,
             eager_integration: false,
             scenario: None,
@@ -243,6 +250,12 @@ impl SimConfig {
                 Json::Str(tf.to_string_lossy().into_owned()),
             );
         }
+        if let Some(p) = &self.il_policy {
+            j.set(
+                "il_policy",
+                Json::Str(p.to_string_lossy().into_owned()),
+            );
+        }
         if let Some(sc) = &self.scenario {
             j.set("scenario", sc.to_json());
         }
@@ -303,6 +316,9 @@ impl SimConfig {
         }
         if let Some(tf) = j.get("trace_file").and_then(Json::as_str) {
             c.trace_file = Some(PathBuf::from(tf));
+        }
+        if let Some(p) = j.get("il_policy").and_then(Json::as_str) {
+            c.il_policy = Some(PathBuf::from(p));
         }
         match j.get("scenario") {
             None => {}
@@ -380,6 +396,7 @@ mod tests {
         c.use_xla_thermal = true;
         c.eager_integration = true;
         c.trace_file = Some(PathBuf::from("/tmp/trace.json"));
+        c.il_policy = Some(PathBuf::from("/tmp/policy.json"));
         let j = c.to_json();
         let c2 = SimConfig::from_json(&j).unwrap();
         assert_eq!(c2.scheduler, "met");
@@ -399,6 +416,7 @@ mod tests {
         assert!(c2.use_xla_thermal);
         assert!(c2.eager_integration);
         assert_eq!(c2.trace_file, Some(PathBuf::from("/tmp/trace.json")));
+        assert_eq!(c2.il_policy, Some(PathBuf::from("/tmp/policy.json")));
     }
 
     #[test]

@@ -57,27 +57,8 @@ pub use genome::{GenomeSpace, PlatformGenome};
 pub use search::DseEngine;
 
 use crate::config::SimConfig;
-use crate::util::json::Json;
+use crate::util::json::{u64_from_json, u64_to_json, Json};
 use crate::{Error, Result};
-
-/// JSON numbers are f64, which only holds integers exactly below 2^53;
-/// larger seeds are serialized as decimal strings so checkpoints stay
-/// exact (the bit-identical-resume guarantee depends on it).
-fn u64_to_json(x: u64) -> Json {
-    if x < (1u64 << 53) {
-        Json::Num(x as f64)
-    } else {
-        Json::Str(x.to_string())
-    }
-}
-
-fn u64_from_json(v: &Json) -> Option<u64> {
-    match v {
-        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
-        Json::Str(s) => s.parse().ok(),
-        _ => None,
-    }
-}
 
 /// An optimization objective (minimized).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

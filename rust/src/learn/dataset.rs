@@ -1,0 +1,447 @@
+//! Demonstration datasets and the DAgger collector.
+//!
+//! A [`Sample`] is one scheduling decision: the feature vectors of every
+//! candidate PE plus the index of the oracle's choice.  [`Collector`]
+//! is a [`Scheduler`] wrapper that records these while a simulation
+//! runs: in round 0 the oracle both *acts* and *labels* (behavioural
+//! cloning); in later rounds the current policy acts while the oracle
+//! keeps labelling — DAgger-style aggregation, so the dataset covers the
+//! states the deployed policy actually visits, not just the oracle's
+//! trajectory.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::sched::{Assignment, ReadyTask, SchedContext, Scheduler};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::features::{candidates, features_into, FeatureCtx, N_FEATURES};
+use super::model::SoftmaxModel;
+use super::policy::choose_guarded;
+
+/// One recorded decision: candidate PE classes + features, oracle label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Index of the oracle's choice within the candidate list.
+    pub chosen: u32,
+    /// PE class per candidate.
+    pub classes: Vec<u16>,
+    /// `classes.len() × N_FEATURES` row-major feature matrix.
+    pub feats: Vec<f64>,
+}
+
+/// An aggregated demonstration set (JSON-serializable so collection and
+/// training can run as separate CLI steps).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Dataset {
+    pub samples: Vec<Sample>,
+    /// Name of the oracle that produced the labels (stamped by
+    /// `collect_round`; empty for hand-built sets).  `learn train
+    /// --data` prefers this over its own default so the policy artifact
+    /// records the oracle it actually imitates.
+    pub oracle: String,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// DAgger aggregation: append another round's demonstrations.
+    pub fn extend(&mut self, other: Dataset) {
+        self.samples.extend(other.samples);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str("ds3r-il-dataset".into()))
+            .set("n_features", Json::Num(N_FEATURES as f64));
+        if !self.oracle.is_empty() {
+            j.set("oracle", Json::Str(self.oracle.clone()));
+        }
+        j.set(
+                "samples",
+                Json::Arr(
+                    self.samples
+                        .iter()
+                        .map(|s| {
+                            let mut js = Json::obj();
+                            js.set("chosen", Json::Num(s.chosen as f64))
+                                .set(
+                                    "classes",
+                                    Json::Arr(
+                                        s.classes
+                                            .iter()
+                                            .map(|&c| Json::Num(c as f64))
+                                            .collect(),
+                                    ),
+                                )
+                                .set(
+                                    "feats",
+                                    Json::Arr(
+                                        s.feats
+                                            .iter()
+                                            .map(|&x| Json::Num(x))
+                                            .collect(),
+                                    ),
+                                );
+                            js
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Dataset> {
+        if let Some(kind) = j.get("kind").and_then(Json::as_str) {
+            if kind != "ds3r-il-dataset" {
+                return Err(Error::Config(format!(
+                    "not an IL dataset (kind '{kind}')"
+                )));
+            }
+        }
+        let nf = j
+            .get("n_features")
+            .and_then(Json::as_usize)
+            .unwrap_or(N_FEATURES);
+        if nf != N_FEATURES {
+            return Err(Error::Config(format!(
+                "dataset carries {nf} features; this build extracts \
+                 {N_FEATURES} (schema drift — recollect)"
+            )));
+        }
+        let oracle = j
+            .get("oracle")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mut samples = Vec::new();
+        for (i, js) in j.req_arr("samples")?.iter().enumerate() {
+            let chosen = js.req_f64("chosen")? as usize;
+            let classes: Vec<u16> = js
+                .get("classes")
+                .ok_or_else(|| {
+                    Error::Config(format!("sample {i} missing 'classes'"))
+                })?
+                .f64_vec()?
+                .into_iter()
+                .map(|x| x as u16)
+                .collect();
+            let feats = js
+                .get("feats")
+                .ok_or_else(|| {
+                    Error::Config(format!("sample {i} missing 'feats'"))
+                })?
+                .f64_vec()?;
+            if classes.is_empty()
+                || feats.len() != classes.len() * N_FEATURES
+                || chosen >= classes.len()
+            {
+                return Err(Error::Config(format!(
+                    "sample {i} is malformed ({} classes, {} features, \
+                     chosen {chosen})",
+                    classes.len(),
+                    feats.len()
+                )));
+            }
+            samples.push(Sample { chosen: chosen as u32, classes, feats });
+        }
+        Ok(Dataset { samples, oracle })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Dataset> {
+        Dataset::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// What one collection run hands back: the demonstrations plus the
+/// policy-vs-oracle agreement counters (policy rounds only).
+#[derive(Debug, Default)]
+pub struct Collected {
+    pub data: Dataset,
+    /// Decisions the *policy* executed (0 in oracle-action rounds).
+    pub policy_decisions: u64,
+    /// Of those, how many matched the oracle's label.
+    pub policy_matches: u64,
+}
+
+/// A recording [`Scheduler`]: wraps an oracle, logs (features → chosen
+/// PE) demonstrations, and executes either the oracle's actions (round
+/// 0) or the current policy's (DAgger rounds).
+pub struct Collector {
+    oracle: Box<dyn Scheduler>,
+    policy: Option<SoftmaxModel>,
+    shared: Rc<RefCell<Collected>>,
+    max_samples: usize,
+    fc: FeatureCtx,
+    cands: Vec<(usize, f64)>,
+    fins: Vec<f64>,
+    avail: Vec<f64>,
+}
+
+impl Collector {
+    /// Returns the collector plus the shared handle the caller unwraps
+    /// after the simulation drops its scheduler (`Rc::try_unwrap`).
+    /// `max_samples = 0` makes the collector count-only: agreement
+    /// counters still accumulate, but no demonstrations are stored.
+    pub fn new(
+        oracle: Box<dyn Scheduler>,
+        policy: Option<SoftmaxModel>,
+        max_samples: usize,
+    ) -> (Collector, Rc<RefCell<Collected>>) {
+        let shared = Rc::new(RefCell::new(Collected::default()));
+        (
+            Collector {
+                oracle,
+                policy,
+                shared: Rc::clone(&shared),
+                max_samples,
+                fc: FeatureCtx::default(),
+                cands: Vec::new(),
+                fins: Vec::new(),
+                avail: Vec::new(),
+            },
+            shared,
+        )
+    }
+}
+
+impl Scheduler for Collector {
+    fn name(&self) -> &str {
+        "collect"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        self.fc.refresh(ctx);
+        // The oracle labels the whole epoch from its start-of-epoch view.
+        let labels = self.oracle.schedule(ready, ctx);
+        // Oracle-action rounds do feature work only to record samples;
+        // once the cap is hit the epoch is a plain oracle replay.
+        if self.policy.is_none()
+            && self.shared.borrow().data.samples.len() >= self.max_samples
+        {
+            return labels;
+        }
+        let rt_of: BTreeMap<(usize, usize), &ReadyTask> =
+            ready.iter().map(|rt| ((rt.job, rt.task), rt)).collect();
+        let pes = ctx.pes();
+        let now = ctx.now_us();
+        self.avail.clear();
+        self.avail.extend(pes.iter().map(|p| p.avail_us));
+        let mut out = Vec::with_capacity(labels.len());
+        // Walk in the *oracle's commit order* (tasks it left unassigned
+        // stay ready, as in a plain oracle run): the virtual-availability
+        // trajectory each sample's features see then matches the
+        // trajectory the oracle labelled against, instead of re-ordering
+        // by ready-list position and mislabelling multi-task epochs.
+        for a in &labels {
+            let Some(rt) = rt_of.get(&(a.job, a.task)).copied() else {
+                continue;
+            };
+            let oracle_pe = a.pe;
+            let best_exec = candidates(rt, ctx, &mut self.cands);
+            if self.cands.is_empty() {
+                continue;
+            }
+            let k = self.cands.len();
+            let mut classes: Vec<u16> = Vec::with_capacity(k);
+            let mut feats = vec![0.0f64; k * N_FEATURES];
+            self.fins.clear();
+            let mut chosen = usize::MAX;
+            for (i, &(pe_id, exec)) in self.cands.iter().enumerate() {
+                let snap = &pes[pe_id];
+                features_into(
+                    rt,
+                    ctx,
+                    snap,
+                    self.avail[pe_id],
+                    exec,
+                    best_exec,
+                    &self.fc,
+                    &mut feats[i * N_FEATURES..(i + 1) * N_FEATURES],
+                );
+                classes.push(snap.class as u16);
+                self.fins.push(
+                    self.avail[pe_id]
+                        .max(ctx.data_ready_us(rt, pe_id))
+                        .max(now)
+                        + exec,
+                );
+                if pe_id == oracle_pe {
+                    chosen = i;
+                }
+            }
+            if chosen == usize::MAX {
+                // Oracle picked a PE outside the candidate view (should
+                // not happen — it would be rejected by the kernel too).
+                continue;
+            }
+            // Action: the policy's guarded choice in DAgger rounds, the
+            // oracle's label otherwise.
+            let act = match &self.policy {
+                Some(m) => {
+                    let (pick, _) =
+                        choose_guarded(m, &classes, &feats, &self.fins);
+                    let mut sh = self.shared.borrow_mut();
+                    sh.policy_decisions += 1;
+                    if pick == chosen {
+                        sh.policy_matches += 1;
+                    }
+                    pick
+                }
+                None => chosen,
+            };
+            {
+                let mut sh = self.shared.borrow_mut();
+                if sh.data.samples.len() < self.max_samples {
+                    sh.data.samples.push(Sample {
+                        chosen: chosen as u32,
+                        classes,
+                        feats,
+                    });
+                }
+            }
+            let (pe_id, _) = self.cands[act];
+            // Advance to the projected finish (data wait included) —
+            // the trajectory the next task's features must see.
+            self.avail[pe_id] = self.fins[act];
+            out.push(Assignment { job: rt.job, task: rt.task, pe: pe_id });
+        }
+        out
+    }
+
+    fn report(&self) -> Vec<String> {
+        let sh = self.shared.borrow();
+        vec![format!(
+            "collect: {} samples (oracle '{}', {} policy decisions)",
+            sh.data.len(),
+            self.oracle.name(),
+            sh.policy_decisions
+        )]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::etf::Etf;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    fn two_pe_ctx() -> MockCtx {
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        for t in 0..4 {
+            ctx.set_exec(0, t, 0, 10.0);
+            ctx.set_exec(0, t, 1, 25.0);
+        }
+        ctx
+    }
+
+    #[test]
+    fn oracle_round_records_labels_and_replays_actions() {
+        let ctx = two_pe_ctx();
+        let (mut coll, shared) =
+            Collector::new(Box::new(Etf::new()), None, 1000);
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        let mut acts = coll.schedule(&tasks, &ctx);
+        // Labels and actions coincide in the oracle round (order within
+        // the epoch may differ — compare the task→PE mapping).
+        let mut oracle = Etf::new();
+        let mut want = oracle.schedule(&tasks, &ctx);
+        acts.sort_by_key(|a| (a.job, a.task));
+        want.sort_by_key(|a| (a.job, a.task));
+        assert_eq!(acts, want);
+        let sh = shared.borrow();
+        assert_eq!(sh.data.len(), 4);
+        assert_eq!(sh.policy_decisions, 0);
+        for s in &sh.data.samples {
+            assert_eq!(s.classes.len(), 2);
+            assert_eq!(s.feats.len(), 2 * N_FEATURES);
+            assert!((s.chosen as usize) < s.classes.len());
+            assert!(s.feats.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn policy_round_counts_agreement() {
+        let ctx = two_pe_ctx();
+        // A zero model scores ties -> always picks candidate 0; with the
+        // guard wide open its decisions are its own.
+        let mut m = SoftmaxModel::zeros(1, "etf");
+        m.guard_ratio = 1e9;
+        let (mut coll, shared) =
+            Collector::new(Box::new(Etf::new()), Some(m), 1000);
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        let acts = coll.schedule(&tasks, &ctx);
+        assert_eq!(acts.len(), 4);
+        let sh = shared.borrow();
+        assert_eq!(sh.policy_decisions, 4);
+        assert!(sh.policy_matches <= 4);
+        assert_eq!(sh.data.len(), 4);
+    }
+
+    #[test]
+    fn sample_cap_bounds_memory() {
+        let ctx = two_pe_ctx();
+        let (mut coll, shared) =
+            Collector::new(Box::new(Etf::new()), None, 2);
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        coll.schedule(&tasks, &ctx);
+        assert_eq!(shared.borrow().data.len(), 2);
+    }
+
+    #[test]
+    fn dataset_json_roundtrip() {
+        let mut d = Dataset::default();
+        d.oracle = "heft".into();
+        d.samples.push(Sample {
+            chosen: 1,
+            classes: vec![0, 3],
+            feats: (0..2 * N_FEATURES).map(|i| i as f64 * 0.5).collect(),
+        });
+        let j = Json::parse(&d.to_json().to_string_pretty()).unwrap();
+        let back = Dataset::from_json(&j).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(back.oracle, "heft");
+        // An unstamped set round-trips too (oracle key omitted).
+        let d2 = Dataset::default();
+        let j2 = Json::parse(&d2.to_json().to_string()).unwrap();
+        assert!(j2.get("oracle").is_none());
+        assert_eq!(Dataset::from_json(&j2).unwrap(), d2);
+    }
+
+    #[test]
+    fn dataset_rejects_malformed_samples() {
+        let j = Json::parse(
+            r#"{"kind": "ds3r-il-dataset",
+                "samples": [{"chosen": 5, "classes": [0, 1],
+                             "feats": []}]}"#,
+        )
+        .unwrap();
+        assert!(Dataset::from_json(&j).is_err());
+        let j = Json::parse(r#"{"kind": "other", "samples": []}"#).unwrap();
+        assert!(Dataset::from_json(&j).is_err());
+        // Feature-count drift.
+        let j = Json::parse(
+            r#"{"kind": "ds3r-il-dataset", "n_features": 2,
+                "samples": []}"#,
+        )
+        .unwrap();
+        assert!(Dataset::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! Feature extraction for the imitation-learning scheduler.
+//!
+//! Every scheduling decision is cast as a choice among *candidate PEs*
+//! for one ready task; each (ready-task, candidate-PE) pair is described
+//! by a fixed, documented vector of [`N_FEATURES`] values derived
+//! entirely from the [`SchedContext`] / [`ReadyTask`] / [`PeSnapshot`]
+//! API — the same view every hand-written scheduler sees, so a learned
+//! policy is deployable wherever ETF is.
+//!
+//! ## Feature schema (index — name — meaning)
+//!
+//! | # | name                  | meaning                                      |
+//! |---|-----------------------|----------------------------------------------|
+//! | 0 | `bias`                | constant 1.0                                 |
+//! | 1 | `log_exec_us`         | ln(1 + exec estimate on this PE, µs)         |
+//! | 2 | `exec_ratio`          | exec / best exec among candidates (≥ 1)      |
+//! | 3 | `log_queue_wait_us`   | ln(1 + time until the PE's queue drains)     |
+//! | 4 | `log_data_wait_us`    | ln(1 + time until inputs arrive via the NoC) |
+//! | 5 | `log_finish_us`       | ln(1 + projected finish delta from now)      |
+//! | 6 | `queue_depth`         | committed tasks on this PE, capped /16       |
+//! | 7 | `cluster_queue_depth` | mean queue depth over the PE's cluster, /16  |
+//! | 8 | `cluster_busy_frac`   | fraction of busy PEs in the PE's cluster     |
+//! | 9 | `is_fastest_class`    | 1.0 iff this PE achieves the best exec       |
+//! | 10| `headroom`            | DVFS × thermal headroom of the cluster [0,1] |
+//! | 11| `log_task_age_us`     | ln(1 + time the task has been ready)         |
+//!
+//! All features are finite by construction — degenerate states (zero
+//! live PEs of a class, saturated queues, failed PEs) either remove the
+//! candidate or clamp the value, never produce NaN/inf (unit-tested on
+//! `sched::testutil::MockCtx`).  Log compression keeps microsecond
+//! quantities spanning six orders of magnitude in a range SGD handles.
+
+use crate::sched::{PeSnapshot, ReadyTask, SchedContext};
+
+/// Length of the per-(task, PE) feature vector.  Policy artifacts pin
+/// this value; loading an artifact with a different `n_features` fails.
+pub const N_FEATURES: usize = 12;
+
+/// Documentation names for the feature slots (serialized into policy
+/// artifacts so a saved model is self-describing).
+pub const FEATURE_NAMES: [&str; N_FEATURES] = [
+    "bias",
+    "log_exec_us",
+    "exec_ratio",
+    "log_queue_wait_us",
+    "log_data_wait_us",
+    "log_finish_us",
+    "queue_depth",
+    "cluster_queue_depth",
+    "cluster_busy_frac",
+    "is_fastest_class",
+    "headroom",
+    "log_task_age_us",
+];
+
+/// Queue depths are capped at this many tasks before normalization.
+const QUEUE_NORM: f64 = 16.0;
+
+/// Exec ratios are capped here (a 64×-slower PE and a 1000×-slower PE
+/// are equally hopeless; unbounded ratios destabilize SGD).
+const RATIO_CAP: f64 = 64.0;
+
+/// Per-decision-epoch cluster aggregates, computed once from the PE
+/// snapshots and shared by every candidate's feature vector.
+/// Long-lived schedulers keep one instance and [`refresh`] it per
+/// epoch, so the hot path never reallocates.
+///
+/// [`refresh`]: FeatureCtx::refresh
+#[derive(Debug, Clone, Default)]
+pub struct FeatureCtx {
+    /// Mean committed-queue depth per cluster.
+    pub mean_queue: Vec<f64>,
+    /// Fraction of cluster PEs with a non-empty queue.
+    pub busy_frac: Vec<f64>,
+    /// Scratch: live PEs per cluster.
+    counts: Vec<f64>,
+}
+
+impl FeatureCtx {
+    pub fn new(ctx: &dyn SchedContext) -> FeatureCtx {
+        let mut fc = FeatureCtx::default();
+        fc.refresh(ctx);
+        fc
+    }
+
+    /// Clear and refill the aggregates from the current snapshots,
+    /// reusing the buffers' capacity across epochs.
+    pub fn refresh(&mut self, ctx: &dyn SchedContext) {
+        let pes = ctx.pes();
+        let n_clusters =
+            pes.iter().map(|p| p.cluster + 1).max().unwrap_or(0);
+        self.counts.clear();
+        self.counts.resize(n_clusters, 0.0);
+        self.mean_queue.clear();
+        self.mean_queue.resize(n_clusters, 0.0);
+        self.busy_frac.clear();
+        self.busy_frac.resize(n_clusters, 0.0);
+        for p in pes {
+            self.counts[p.cluster] += 1.0;
+            self.mean_queue[p.cluster] += p.queue_len as f64;
+            if p.queue_len > 0 {
+                self.busy_frac[p.cluster] += 1.0;
+            }
+        }
+        for c in 0..n_clusters {
+            if self.counts[c] > 0.0 {
+                self.mean_queue[c] /= self.counts[c];
+                self.busy_frac[c] /= self.counts[c];
+            }
+        }
+    }
+}
+
+/// Collect the available, supporting PEs for `rt` into `out` as
+/// `(pe id, exec µs)` pairs, and return the best (minimum) execution
+/// estimate among them — `f64::INFINITY` when the task is currently
+/// unplaceable (e.g. every PE of its supporting classes is failed).
+pub fn candidates(
+    rt: &ReadyTask,
+    ctx: &dyn SchedContext,
+    out: &mut Vec<(usize, f64)>,
+) -> f64 {
+    out.clear();
+    let mut best = f64::INFINITY;
+    for pe in ctx.pes() {
+        if !pe.available {
+            continue;
+        }
+        if let Some(us) = ctx.exec_us(rt, pe.id) {
+            out.push((pe.id, us));
+            if us < best {
+                best = us;
+            }
+        }
+    }
+    best
+}
+
+#[inline]
+fn ln1p_us(x: f64) -> f64 {
+    x.max(0.0).ln_1p()
+}
+
+/// Fill `out` (length [`N_FEATURES`]) with the feature vector of one
+/// (ready-task, candidate-PE) pair.
+///
+/// `avail_us` is passed explicitly (rather than read from the snapshot)
+/// so callers committing several tasks per epoch can feed the
+/// *virtually updated* availability — the same convention ETF uses.
+/// `best_exec_us` is the minimum over the task's candidates (see
+/// [`candidates`]); non-finite or non-positive values degrade to a
+/// ratio of 1 rather than NaN.
+#[allow(clippy::too_many_arguments)]
+pub fn features_into(
+    rt: &ReadyTask,
+    ctx: &dyn SchedContext,
+    pe: &PeSnapshot,
+    avail_us: f64,
+    exec_us: f64,
+    best_exec_us: f64,
+    fc: &FeatureCtx,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), N_FEATURES);
+    let now = ctx.now_us();
+    let data_at = ctx.data_ready_us(rt, pe.id);
+    let queue_wait = (avail_us - now).max(0.0);
+    let data_wait = (data_at - now).max(0.0);
+    let start = avail_us.max(data_at).max(now);
+    let finish = (start - now).max(0.0) + exec_us;
+    let ratio = if best_exec_us.is_finite() && best_exec_us > 0.0 {
+        (exec_us / best_exec_us).min(RATIO_CAP)
+    } else {
+        1.0
+    };
+    out[0] = 1.0;
+    out[1] = ln1p_us(exec_us);
+    out[2] = ratio;
+    out[3] = ln1p_us(queue_wait);
+    out[4] = ln1p_us(data_wait);
+    out[5] = ln1p_us(finish);
+    out[6] = (pe.queue_len as f64 / QUEUE_NORM).min(1.0);
+    out[7] = (fc.mean_queue.get(pe.cluster).copied().unwrap_or(0.0)
+        / QUEUE_NORM)
+        .min(1.0);
+    out[8] = fc.busy_frac.get(pe.cluster).copied().unwrap_or(0.0);
+    out[9] = if exec_us <= best_exec_us { 1.0 } else { 0.0 };
+    out[10] = ctx.headroom_frac(pe.cluster).clamp(0.0, 1.0);
+    out[11] = ln1p_us(now - rt.ready_us);
+    debug_assert!(
+        out.iter().all(|v| v.is_finite()),
+        "non-finite feature: {out:?}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    fn assert_all_finite(v: &[f64]) {
+        assert!(v.iter().all(|x| x.is_finite()), "{v:?}");
+    }
+
+    #[test]
+    fn features_are_finite_and_schema_sized() {
+        let mut ctx = MockCtx::uniform(3, 100.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, 0, 1, 40.0);
+        let fc = FeatureCtx::new(&ctx);
+        let mut cands = Vec::new();
+        let best = candidates(&rt(0, 0), &ctx, &mut cands);
+        assert_eq!(best, 10.0);
+        assert_eq!(cands, vec![(0, 10.0), (1, 40.0)]);
+        let mut out = [0.0; N_FEATURES];
+        for &(pe, exec) in &cands {
+            features_into(
+                &rt(0, 0),
+                &ctx,
+                &ctx.pes[pe],
+                ctx.pes[pe].avail_us,
+                exec,
+                best,
+                &fc,
+                &mut out,
+            );
+            assert_all_finite(&out);
+            assert_eq!(out[0], 1.0);
+        }
+        assert_eq!(FEATURE_NAMES.len(), N_FEATURES);
+    }
+
+    #[test]
+    fn zero_pes_of_a_class_means_no_candidates() {
+        // Task 7 is supported nowhere (models "zero live PEs of the
+        // supporting class"): the candidate list must come back empty
+        // with an infinite best exec, never a NaN feature.
+        let ctx = MockCtx::uniform(4, 0.0);
+        let mut cands = Vec::new();
+        let best = candidates(&rt(0, 7), &ctx, &mut cands);
+        assert!(cands.is_empty());
+        assert!(best.is_infinite());
+    }
+
+    #[test]
+    fn failed_pes_are_not_candidates() {
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 5.0);
+        ctx.set_exec(0, 0, 1, 5.0);
+        ctx.pes[0].available = false;
+        let mut cands = Vec::new();
+        let best = candidates(&rt(0, 0), &ctx, &mut cands);
+        assert_eq!(cands, vec![(1, 5.0)]);
+        assert_eq!(best, 5.0);
+        ctx.pes[1].available = false;
+        assert!(candidates(&rt(0, 0), &ctx, &mut cands).is_infinite());
+        assert!(cands.is_empty());
+    }
+
+    #[test]
+    fn saturated_queues_do_not_nan() {
+        let mut ctx = MockCtx::uniform(2, 1000.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.pes[0].avail_us = 1e12; // queue drains in ~12 days
+        ctx.pes[0].queue_len = 100_000;
+        let fc = FeatureCtx::new(&ctx);
+        let mut out = [0.0; N_FEATURES];
+        features_into(
+            &rt(0, 0),
+            &ctx,
+            &ctx.pes[0],
+            ctx.pes[0].avail_us,
+            10.0,
+            10.0,
+            &fc,
+            &mut out,
+        );
+        assert_all_finite(&out);
+        assert_eq!(out[6], 1.0, "queue depth must cap at 1");
+        assert!(out[3] > 0.0, "queue wait must register");
+    }
+
+    #[test]
+    fn exec_ratio_and_fastest_flag() {
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, 0, 1, 40.0);
+        let fc = FeatureCtx::new(&ctx);
+        let mut a = [0.0; N_FEATURES];
+        let mut b = [0.0; N_FEATURES];
+        features_into(&rt(0, 0), &ctx, &ctx.pes[0], 0.0, 10.0, 10.0, &fc, &mut a);
+        features_into(&rt(0, 0), &ctx, &ctx.pes[1], 0.0, 40.0, 10.0, &fc, &mut b);
+        assert_eq!(a[2], 1.0);
+        assert_eq!(b[2], 4.0);
+        assert_eq!(a[9], 1.0);
+        assert_eq!(b[9], 0.0);
+        // Degenerate best-exec inputs fall back to ratio 1, not NaN.
+        let mut c = [0.0; N_FEATURES];
+        features_into(
+            &rt(0, 0),
+            &ctx,
+            &ctx.pes[0],
+            0.0,
+            10.0,
+            f64::INFINITY,
+            &fc,
+            &mut c,
+        );
+        assert_eq!(c[2], 1.0);
+        assert_all_finite(&c);
+    }
+
+    #[test]
+    fn cluster_aggregates_follow_snapshots() {
+        let mut ctx = MockCtx::uniform(4, 0.0);
+        ctx.pes[2].cluster = 1;
+        ctx.pes[3].cluster = 1;
+        ctx.pes[0].queue_len = 4;
+        ctx.pes[2].queue_len = 2;
+        let fc = FeatureCtx::new(&ctx);
+        assert_eq!(fc.mean_queue, vec![2.0, 1.0]);
+        assert_eq!(fc.busy_frac, vec![0.5, 0.5]);
+    }
+}

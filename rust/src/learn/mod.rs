@@ -1,0 +1,426 @@
+//! Learned runtime resource management: an imitation-learning scheduler
+//! subsystem.
+//!
+//! The paper positions DS3 as enabling "both design space exploration
+//! and dynamic resource management"; the DS3 journal version (Arda et
+//! al., arXiv:2003.09016) ships learned runtime policies trained
+//! against oracle schedulers, and CEDR (arXiv:2204.08962) shows that a
+//! pluggable runtime-policy layer is what keeps a DSSoC framework
+//! extensible.  This module adds that layer as a **dependency-free
+//! imitation-learning pipeline** producing a deployable scheduler:
+//!
+//! * [`features`] — a fixed, documented feature vector per
+//!   (ready-task, candidate-PE) pair, extracted from the
+//!   [`crate::sched::SchedContext`] API (exec estimates, queue depths
+//!   and cluster utilization, NoC/data-readiness delay, DVFS/thermal
+//!   headroom).
+//! * [`dataset`] — demonstration collection: a recording scheduler logs
+//!   (features → oracle-chosen PE) decisions while simulations run,
+//!   with DAgger-style aggregation across rounds so the dataset covers
+//!   the states the deployed policy actually visits.
+//! * [`model`] — a seeded, deterministic multiclass linear softmax
+//!   trained by SGD (no new crates; bit-reproducible via the in-tree
+//!   [`crate::rng::Rng`]), JSON-round-tripping as a policy artifact.
+//! * [`policy`] — [`IlSched`], registered as `"il"` in
+//!   [`crate::sched::create`], with an earliest-finish oracle-fallback
+//!   guard bounding how badly a mistrained model can behave.
+//! * [`train`] — the collect → train → eval driver, fanned out over
+//!   [`crate::coordinator::parallel_map`] (bit-identical across thread
+//!   counts) and reporting IL-vs-oracle latency/energy/agreement.
+//!
+//! Drive it from the CLI (`ds3r learn collect|train|eval`), the library
+//! API ([`train::train_policy`] / [`train::evaluate`]), or
+//! `examples/il_scheduler.rs`.  A committed pretrained preset
+//! (`rust/data/il_policy.json`) makes `--sched il` work out of the box,
+//! and the scenario engine can hot-swap to the learned policy mid-run
+//! (`{"action": "set-scheduler", "scheduler": "il"}`).
+
+pub mod dataset;
+pub mod features;
+pub mod model;
+pub mod policy;
+pub mod train;
+
+pub use dataset::{Collected, Collector, Dataset, Sample};
+pub use features::{FeatureCtx, FEATURE_NAMES, N_FEATURES};
+pub use model::{SoftmaxModel, TrainParams, DEFAULT_GUARD_RATIO};
+pub use policy::{choose_guarded, IlSched, PRESET_POLICY};
+pub use train::{
+    collect_round, evaluate, train_policy, EvalReport, EvalRow,
+    TrainSummary,
+};
+
+use crate::config::SimConfig;
+use crate::util::json::{u64_from_json, u64_to_json, Json};
+use crate::{Error, Result};
+
+/// Full configuration of a learn run: the oracle, the DAgger/SGD
+/// budget, the collection/evaluation grid, and the base `SimConfig`
+/// every simulation inherits.  JSON round-trips (`ds3r learn ...
+/// --learn-config file.json`); missing keys keep their defaults, and
+/// [`LearnConfig::from_json`] validates on the way in.
+#[derive(Debug, Clone)]
+pub struct LearnConfig {
+    /// Oracle scheduler demonstrations are collected from (`etf`,
+    /// `heft`, ... — any registry name except `il` itself).
+    pub oracle: String,
+    /// Collection/training rounds: 1 = behavioural cloning, more adds
+    /// DAgger rounds (policy acts, oracle labels).
+    pub rounds: usize,
+    /// SGD epochs per training pass.
+    pub epochs: usize,
+    pub learning_rate: f64,
+    /// L2 weight decay.
+    pub l2: f64,
+    /// Seed of the SGD shuffle stream (independent of workload seeds).
+    pub train_seed: u64,
+    /// Oracle-fallback guard ratio baked into the trained artifact
+    /// (see [`model::DEFAULT_GUARD_RATIO`]).
+    pub guard_ratio: f64,
+    /// Workload seeds of the collection/evaluation grid.
+    pub seeds: Vec<u64>,
+    /// Injection rates (jobs/ms) of the grid.
+    pub rates_per_ms: Vec<f64>,
+    /// Baselines `learn eval` compares against, besides the oracle.
+    pub baselines: Vec<String>,
+    /// Per-simulation demonstration cap (bounds memory on long runs).
+    pub max_samples_per_run: usize,
+    /// Base simulation config for every collection/evaluation run
+    /// (`seed`, `injection_rate_per_ms` are overridden per grid point).
+    pub sim: SimConfig,
+    /// Fan-out threads (0 = all available cores).
+    pub threads: usize,
+}
+
+impl Default for LearnConfig {
+    fn default() -> Self {
+        let mut sim = SimConfig::default();
+        // Collection favours several medium runs over one long one:
+        // enough decisions per (seed, rate) point for stable labels, a
+        // sim-time wall so saturated grids terminate.
+        sim.max_jobs = 150;
+        sim.warmup_jobs = 15;
+        sim.max_sim_us = 4_000_000.0;
+        LearnConfig {
+            oracle: "etf".into(),
+            rounds: 2,
+            epochs: 10,
+            learning_rate: 0.05,
+            l2: 1e-4,
+            train_seed: 7,
+            guard_ratio: DEFAULT_GUARD_RATIO,
+            seeds: vec![1, 2],
+            rates_per_ms: vec![1.5, 3.0],
+            baselines: vec!["random".into(), "rr".into()],
+            max_samples_per_run: 20_000,
+            sim,
+            threads: 0,
+        }
+    }
+}
+
+impl LearnConfig {
+    /// Resolved fan-out thread count.
+    pub fn eval_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            crate::util::default_threads()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        // Scheduler names are checked against the registry here, like
+        // the scenario engine does at build time — a typo must fail in
+        // milliseconds, not after the whole evaluation grid has run.
+        let known = crate::sched::builtin_names();
+        if self.oracle == "il" || !known.contains(&self.oracle.as_str()) {
+            return Err(Error::Config(format!(
+                "learn oracle '{}' must be a non-IL scheduler name \
+                 (known: {})",
+                self.oracle,
+                known.join(", ")
+            )));
+        }
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds must be >= 1".into()));
+        }
+        if self.epochs == 0 {
+            return Err(Error::Config("epochs must be >= 1".into()));
+        }
+        if !self.learning_rate.is_finite() || self.learning_rate <= 0.0 {
+            return Err(Error::Config(
+                "learning_rate must be finite and > 0".into(),
+            ));
+        }
+        if !self.l2.is_finite() || self.l2 < 0.0 {
+            return Err(Error::Config(
+                "l2 must be finite and >= 0".into(),
+            ));
+        }
+        if !self.guard_ratio.is_finite() || self.guard_ratio < 1.0 {
+            return Err(Error::Config(
+                "guard_ratio must be finite and >= 1".into(),
+            ));
+        }
+        if self.seeds.is_empty() {
+            return Err(Error::Config(
+                "seeds must list at least one workload seed".into(),
+            ));
+        }
+        if self.rates_per_ms.is_empty()
+            || self
+                .rates_per_ms
+                .iter()
+                .any(|r| !r.is_finite() || *r <= 0.0)
+        {
+            return Err(Error::Config(
+                "rates_per_ms must list positive rates".into(),
+            ));
+        }
+        if let Some(bad) = self
+            .baselines
+            .iter()
+            .find(|b| *b == "il" || !known.contains(&b.as_str()))
+        {
+            return Err(Error::Config(format!(
+                "learn baseline '{bad}' must be a non-IL scheduler name \
+                 (known: {})",
+                known.join(", ")
+            )));
+        }
+        if self.max_samples_per_run == 0 {
+            return Err(Error::Config(
+                "max_samples_per_run must be >= 1".into(),
+            ));
+        }
+        self.sim.validate()
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("oracle", Json::Str(self.oracle.clone()))
+            .set("rounds", Json::Num(self.rounds as f64))
+            .set("epochs", Json::Num(self.epochs as f64))
+            .set("learning_rate", Json::Num(self.learning_rate))
+            .set("l2", Json::Num(self.l2))
+            .set("train_seed", u64_to_json(self.train_seed))
+            .set("guard_ratio", Json::Num(self.guard_ratio))
+            .set(
+                "seeds",
+                Json::Arr(
+                    self.seeds.iter().map(|&s| u64_to_json(s)).collect(),
+                ),
+            )
+            .set(
+                "rates_per_ms",
+                Json::Arr(
+                    self.rates_per_ms
+                        .iter()
+                        .map(|&r| Json::Num(r))
+                        .collect(),
+                ),
+            )
+            .set(
+                "baselines",
+                Json::Arr(
+                    self.baselines
+                        .iter()
+                        .map(|b| Json::Str(b.clone()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "max_samples_per_run",
+                Json::Num(self.max_samples_per_run as f64),
+            )
+            .set("sim", self.sim.to_json())
+            .set("threads", Json::Num(self.threads as f64));
+        j
+    }
+
+    /// Parse from JSON; missing keys keep their defaults.  Validates.
+    pub fn from_json(j: &Json) -> Result<LearnConfig> {
+        let mut c = LearnConfig::default();
+        if let Some(s) = j.get("oracle").and_then(Json::as_str) {
+            c.oracle = s.to_string();
+        }
+        if let Some(x) = j.get("rounds").and_then(Json::as_usize) {
+            c.rounds = x;
+        }
+        if let Some(x) = j.get("epochs").and_then(Json::as_usize) {
+            c.epochs = x;
+        }
+        if let Some(x) = j.get("learning_rate").and_then(Json::as_f64) {
+            c.learning_rate = x;
+        }
+        if let Some(x) = j.get("l2").and_then(Json::as_f64) {
+            c.l2 = x;
+        }
+        if let Some(v) = j.get("train_seed") {
+            c.train_seed = u64_from_json(v).ok_or_else(|| {
+                Error::Config(
+                    "train_seed must be a non-negative integer (number \
+                     or decimal string)"
+                        .into(),
+                )
+            })?;
+        }
+        if let Some(x) = j.get("guard_ratio").and_then(Json::as_f64) {
+            c.guard_ratio = x;
+        }
+        if let Some(a) = j.get("seeds").and_then(Json::as_arr) {
+            c.seeds = a
+                .iter()
+                .map(|v| {
+                    u64_from_json(v).ok_or_else(|| {
+                        Error::Config(format!(
+                            "seeds: bad entry {}",
+                            v.to_string()
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = j.get("rates_per_ms") {
+            c.rates_per_ms = v.f64_vec()?;
+        }
+        if let Some(a) = j.get("baselines").and_then(Json::as_arr) {
+            c.baselines = a
+                .iter()
+                .map(|v| {
+                    v.as_str().map(String::from).ok_or_else(|| {
+                        Error::Config(
+                            "baselines entries must be strings".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(x) =
+            j.get("max_samples_per_run").and_then(Json::as_usize)
+        {
+            c.max_samples_per_run = x;
+        }
+        if let Some(sim) = j.get("sim") {
+            c.sim = SimConfig::from_json(sim)?;
+        }
+        if let Some(x) = j.get("threads").and_then(Json::as_usize) {
+            c.threads = x;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<LearnConfig> {
+        LearnConfig::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        LearnConfig::default().validate().unwrap();
+        assert!(LearnConfig::default().eval_threads() >= 1);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut c = LearnConfig::default();
+        c.oracle = "heft".into();
+        c.rounds = 3;
+        c.epochs = 5;
+        c.learning_rate = 0.1;
+        c.l2 = 0.001;
+        c.train_seed = (1u64 << 53) + 7; // exercises the string path
+        c.guard_ratio = 1.5;
+        c.seeds = vec![4, u64::MAX];
+        c.rates_per_ms = vec![0.5, 6.0];
+        c.baselines = vec!["rr".into()];
+        c.max_samples_per_run = 99;
+        c.sim.scheduler = "met".into();
+        c.sim.max_jobs = 77;
+        c.sim.warmup_jobs = 7;
+        c.threads = 3;
+        let j = Json::parse(&c.to_json().to_string_pretty()).unwrap();
+        let c2 = LearnConfig::from_json(&j).unwrap();
+        assert_eq!(c2.oracle, c.oracle);
+        assert_eq!(c2.rounds, c.rounds);
+        assert_eq!(c2.epochs, c.epochs);
+        assert_eq!(c2.learning_rate, c.learning_rate);
+        assert_eq!(c2.l2, c.l2);
+        assert_eq!(c2.train_seed, c.train_seed);
+        assert_eq!(c2.guard_ratio, c.guard_ratio);
+        assert_eq!(c2.seeds, c.seeds);
+        assert_eq!(c2.rates_per_ms, c.rates_per_ms);
+        assert_eq!(c2.baselines, c.baselines);
+        assert_eq!(c2.max_samples_per_run, c.max_samples_per_run);
+        assert_eq!(c2.sim.scheduler, "met");
+        assert_eq!(c2.sim.max_jobs, 77);
+        assert_eq!(c2.threads, 3);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"rounds": 4}"#).unwrap();
+        let c = LearnConfig::from_json(&j).unwrap();
+        assert_eq!(c.rounds, 4);
+        assert_eq!(c.oracle, "etf");
+        assert_eq!(c.epochs, LearnConfig::default().epochs);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = LearnConfig::default();
+        c.oracle = "il".into();
+        assert!(c.validate().is_err());
+
+        // Registry check: typos fail at validate time, not after the
+        // whole evaluation grid has run.
+        let mut c = LearnConfig::default();
+        c.oracle = "warp-speed".into();
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.baselines = vec!["randm".into()];
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.rounds = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.learning_rate = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.guard_ratio = 0.5;
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.seeds = vec![];
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.rates_per_ms = vec![1.0, -2.0];
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.baselines = vec!["il".into()];
+        assert!(c.validate().is_err());
+
+        let mut c = LearnConfig::default();
+        c.max_samples_per_run = 0;
+        assert!(c.validate().is_err());
+    }
+}

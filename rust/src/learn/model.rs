@@ -1,0 +1,392 @@
+//! The deployable policy model: a multiclass linear softmax over
+//! candidate PEs, trained by seeded SGD.
+//!
+//! A decision scores every candidate PE with a linear function of its
+//! feature vector, `score = w[pe_class] · x`, and the policy picks the
+//! argmax (training normalizes the scores with a softmax and minimizes
+//! cross-entropy against the oracle's choice).  Weights are **per PE
+//! class** (A15 / A7 / accelerator...), not per PE instance, so a model
+//! generalizes across instance counts — including platforms the DSE
+//! engine resizes.
+//!
+//! Everything is plain `f64` arithmetic in deterministic order with a
+//! seeded [`Rng`] shuffle, so `train` is **bit-reproducible**: the same
+//! dataset and seed produce the same weight bytes on any thread count
+//! (asserted by `rust/tests/integration_learn.rs`).
+
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::dataset::Dataset;
+use super::features::{FEATURE_NAMES, N_FEATURES};
+
+/// Default oracle-fallback guard: a pick whose projected finish exceeds
+/// `guard_ratio ×` the best achievable finish is overridden (see
+/// [`super::policy::choose_guarded`]).
+pub const DEFAULT_GUARD_RATIO: f64 = 1.25;
+
+/// SGD hyperparameters (seeded, deterministic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainParams {
+    pub epochs: usize,
+    pub learning_rate: f64,
+    /// L2 weight decay per touched row per sample.
+    pub l2: f64,
+    /// Seed of the epoch-shuffle stream.
+    pub seed: u64,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        TrainParams { epochs: 10, learning_rate: 0.05, l2: 1e-4, seed: 7 }
+    }
+}
+
+/// A trained (or hand-written) linear softmax policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoftmaxModel {
+    /// Weight rows (one per PE class), `n_classes × N_FEATURES`
+    /// row-major.  PE classes beyond `n_classes` clamp to the last row.
+    pub n_classes: usize,
+    pub weights: Vec<f64>,
+    /// Oracle-fallback guard ratio (≥ 1); see [`DEFAULT_GUARD_RATIO`].
+    pub guard_ratio: f64,
+    /// Name of the oracle scheduler the model imitates (diagnostics).
+    pub oracle: String,
+}
+
+impl SoftmaxModel {
+    /// All-zero model (uniform scores — only useful as a train target).
+    pub fn zeros(n_classes: usize, oracle: &str) -> SoftmaxModel {
+        let n_classes = n_classes.max(1);
+        SoftmaxModel {
+            n_classes,
+            weights: vec![0.0; n_classes * N_FEATURES],
+            guard_ratio: DEFAULT_GUARD_RATIO,
+            oracle: oracle.to_string(),
+        }
+    }
+
+    /// Linear score of one candidate: `w[class] · x`.  Classes beyond
+    /// the trained range clamp to the last row (keeps a model usable on
+    /// platforms with more classes than it was trained on).
+    #[inline]
+    pub fn score(&self, class: usize, x: &[f64]) -> f64 {
+        let row = class.min(self.n_classes - 1);
+        let w = &self.weights[row * N_FEATURES..(row + 1) * N_FEATURES];
+        w.iter().zip(x).map(|(a, b)| a * b).sum()
+    }
+
+    /// Argmax over candidate scores (`feats` is `classes.len() ×
+    /// N_FEATURES` row-major).  Ties resolve to the lowest candidate
+    /// index — deterministic.  Panics on an empty candidate list.
+    pub fn predict(&self, classes: &[u16], feats: &[f64]) -> usize {
+        assert!(!classes.is_empty(), "predict on empty candidate list");
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (k, &c) in classes.iter().enumerate() {
+            let s = self.score(
+                c as usize,
+                &feats[k * N_FEATURES..(k + 1) * N_FEATURES],
+            );
+            if s > best.0 {
+                best = (s, k);
+            }
+        }
+        best.1
+    }
+
+    /// Train a model on `dataset` by SGD over the per-sample softmax
+    /// cross-entropy.  Deterministic: samples are visited in a seeded
+    /// shuffle order, and all arithmetic is sequential `f64`.
+    pub fn train(
+        dataset: &Dataset,
+        n_classes: usize,
+        oracle: &str,
+        p: &TrainParams,
+        guard_ratio: f64,
+    ) -> SoftmaxModel {
+        let mut m = SoftmaxModel::zeros(n_classes, oracle);
+        m.guard_ratio = guard_ratio;
+        let mut order: Vec<usize> = (0..dataset.samples.len()).collect();
+        let mut rng = Rng::new(p.seed ^ 0x11AA_11AA_11AA_11AA);
+        let mut probs: Vec<f64> = Vec::new();
+        let decay = 1.0 - p.learning_rate * p.l2;
+        for _ in 0..p.epochs {
+            rng.shuffle(&mut order);
+            for &si in &order {
+                let s = &dataset.samples[si];
+                let k = s.classes.len();
+                if k == 0 {
+                    continue;
+                }
+                // Softmax over candidate scores (max-shifted).
+                probs.clear();
+                let mut zmax = f64::NEG_INFINITY;
+                for i in 0..k {
+                    let z = m.score(
+                        s.classes[i] as usize,
+                        &s.feats[i * N_FEATURES..(i + 1) * N_FEATURES],
+                    );
+                    probs.push(z);
+                    if z > zmax {
+                        zmax = z;
+                    }
+                }
+                let mut sum = 0.0;
+                for z in probs.iter_mut() {
+                    *z = (*z - zmax).exp();
+                    sum += *z;
+                }
+                for z in probs.iter_mut() {
+                    *z /= sum;
+                }
+                // Cross-entropy gradient: (p_i - y_i) x_i per candidate.
+                for i in 0..k {
+                    let y = if i == s.chosen as usize { 1.0 } else { 0.0 };
+                    let g = probs[i] - y;
+                    let row = (s.classes[i] as usize).min(m.n_classes - 1);
+                    let x =
+                        &s.feats[i * N_FEATURES..(i + 1) * N_FEATURES];
+                    let w = &mut m.weights
+                        [row * N_FEATURES..(row + 1) * N_FEATURES];
+                    for (wj, xj) in w.iter_mut().zip(x) {
+                        *wj = *wj * decay - p.learning_rate * g * xj;
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    // ---- JSON artifact ---------------------------------------------------
+
+    /// Serialize as a policy artifact (`kind: "ds3r-il-policy"`).  The
+    /// feature schema names ride along so saved models self-describe.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str("ds3r-il-policy".into()))
+            .set("n_features", Json::Num(N_FEATURES as f64))
+            .set("n_classes", Json::Num(self.n_classes as f64))
+            .set(
+                "feature_names",
+                Json::Arr(
+                    FEATURE_NAMES
+                        .iter()
+                        .map(|n| Json::Str(n.to_string()))
+                        .collect(),
+                ),
+            )
+            .set("oracle", Json::Str(self.oracle.clone()))
+            .set("guard_ratio", Json::Num(self.guard_ratio))
+            .set(
+                "weights",
+                Json::Arr(
+                    (0..self.n_classes)
+                        .map(|r| {
+                            Json::Arr(
+                                self.weights[r * N_FEATURES
+                                    ..(r + 1) * N_FEATURES]
+                                    .iter()
+                                    .map(|&w| Json::Num(w))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    /// Parse and validate a policy artifact.  Rejects a feature-count
+    /// mismatch (an artifact from a different schema version), ragged or
+    /// non-finite weight rows, and bad guard ratios.
+    pub fn from_json(j: &Json) -> Result<SoftmaxModel> {
+        if let Some(kind) = j.get("kind").and_then(Json::as_str) {
+            if kind != "ds3r-il-policy" {
+                return Err(Error::Config(format!(
+                    "not an IL policy artifact (kind '{kind}')"
+                )));
+            }
+        }
+        let nf = j
+            .get("n_features")
+            .and_then(Json::as_usize)
+            .unwrap_or(N_FEATURES);
+        if nf != N_FEATURES {
+            return Err(Error::Config(format!(
+                "policy artifact carries {nf} features; this build \
+                 extracts {N_FEATURES} (schema drift — retrain)"
+            )));
+        }
+        let rows = j.req_arr("weights")?;
+        if rows.is_empty() {
+            return Err(Error::Config(
+                "policy artifact has no weight rows".into(),
+            ));
+        }
+        let n_classes = j
+            .get("n_classes")
+            .and_then(Json::as_usize)
+            .unwrap_or(rows.len());
+        if n_classes != rows.len() {
+            return Err(Error::Config(format!(
+                "policy artifact n_classes {} != {} weight rows",
+                n_classes,
+                rows.len()
+            )));
+        }
+        let mut weights = Vec::with_capacity(n_classes * N_FEATURES);
+        for (r, row) in rows.iter().enumerate() {
+            let xs = row.f64_vec().map_err(|_| {
+                Error::Config(format!(
+                    "policy weight row {r} is not a number array"
+                ))
+            })?;
+            if xs.len() != N_FEATURES {
+                return Err(Error::Config(format!(
+                    "policy weight row {r} has {} entries, want \
+                     {N_FEATURES}",
+                    xs.len()
+                )));
+            }
+            if xs.iter().any(|x| !x.is_finite()) {
+                return Err(Error::Config(format!(
+                    "policy weight row {r} has non-finite entries"
+                )));
+            }
+            weights.extend(xs);
+        }
+        let guard_ratio = j
+            .get("guard_ratio")
+            .and_then(Json::as_f64)
+            .unwrap_or(DEFAULT_GUARD_RATIO);
+        if !guard_ratio.is_finite() || guard_ratio < 1.0 {
+            return Err(Error::Config(format!(
+                "policy guard_ratio {guard_ratio} must be finite and >= 1"
+            )));
+        }
+        let oracle = j
+            .get("oracle")
+            .and_then(Json::as_str)
+            .unwrap_or("etf")
+            .to_string();
+        Ok(SoftmaxModel { n_classes, weights, guard_ratio, oracle })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SoftmaxModel> {
+        SoftmaxModel::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learn::dataset::Sample;
+
+    /// Two-candidate samples where the oracle always picks the one with
+    /// the lower feature-1 value.
+    fn toy_dataset(n: usize) -> Dataset {
+        let mut d = Dataset::default();
+        for i in 0..n {
+            let hi = 1.0 + (i % 3) as f64;
+            let mut feats = vec![0.0; 2 * N_FEATURES];
+            feats[0] = 1.0; // bias of candidate 0
+            feats[1] = hi; // candidate 0 is slow
+            feats[N_FEATURES] = 1.0; // bias of candidate 1
+            feats[N_FEATURES + 1] = 0.1; // candidate 1 is fast
+            d.samples.push(Sample {
+                chosen: 1,
+                classes: vec![0, 0],
+                feats,
+            });
+        }
+        d
+    }
+
+    #[test]
+    fn sgd_learns_a_separable_preference() {
+        let d = toy_dataset(64);
+        let p = TrainParams::default();
+        let m = SoftmaxModel::train(&d, 1, "etf", &p, 1.25);
+        for s in &d.samples {
+            assert_eq!(m.predict(&s.classes, &s.feats), 1);
+        }
+        // Feature 1 (the discriminating one) got a negative weight.
+        assert!(m.weights[1] < 0.0, "w = {:?}", m.weights);
+    }
+
+    #[test]
+    fn training_is_bit_reproducible() {
+        let d = toy_dataset(32);
+        let p = TrainParams::default();
+        let a = SoftmaxModel::train(&d, 2, "etf", &p, 1.25);
+        let b = SoftmaxModel::train(&d, 2, "etf", &p, 1.25);
+        assert_eq!(a, b);
+        for (x, y) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let mut p2 = p;
+        p2.seed = 99;
+        let c = SoftmaxModel::train(&d, 2, "etf", &p2, 1.25);
+        assert_ne!(a.weights, c.weights, "seed must matter");
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let d = toy_dataset(16);
+        let m =
+            SoftmaxModel::train(&d, 3, "heft", &TrainParams::default(), 1.1);
+        let j = Json::parse(&m.to_json().to_string_pretty()).unwrap();
+        let back = SoftmaxModel::from_json(&j).unwrap();
+        assert_eq!(m, back);
+        for (x, y) in m.weights.iter().zip(&back.weights) {
+            assert_eq!(x.to_bits(), y.to_bits(), "weight bytes drifted");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_artifacts() {
+        // Wrong kind.
+        let j = Json::parse(r#"{"kind": "something-else", "weights": [[0]]}"#)
+            .unwrap();
+        assert!(SoftmaxModel::from_json(&j).is_err());
+        // Feature-count drift.
+        let j = Json::parse(
+            r#"{"kind": "ds3r-il-policy", "n_features": 3,
+                "weights": [[0, 0, 0]]}"#,
+        )
+        .unwrap();
+        assert!(SoftmaxModel::from_json(&j).is_err());
+        // Ragged row.
+        let j = Json::parse(
+            r#"{"kind": "ds3r-il-policy", "weights": [[0, 1]]}"#,
+        )
+        .unwrap();
+        assert!(SoftmaxModel::from_json(&j).is_err());
+        // Bad guard.
+        let mut good = SoftmaxModel::zeros(1, "etf").to_json();
+        good.set("guard_ratio", Json::Num(0.5));
+        assert!(SoftmaxModel::from_json(&good).is_err());
+        // Empty weights.
+        let j = Json::parse(r#"{"kind": "ds3r-il-policy", "weights": []}"#)
+            .unwrap();
+        assert!(SoftmaxModel::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn class_clamping_keeps_out_of_range_classes_usable() {
+        let mut m = SoftmaxModel::zeros(2, "etf");
+        // Row 1 prefers high bias; class 7 clamps onto row 1.
+        m.weights[N_FEATURES] = 1.0;
+        let mut feats = vec![0.0; 2 * N_FEATURES];
+        feats[0] = 0.1;
+        feats[N_FEATURES] = 5.0;
+        assert_eq!(m.predict(&[7, 7], &feats), 1);
+    }
+}

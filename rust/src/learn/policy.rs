@@ -1,0 +1,277 @@
+//! The deployable learned scheduler: [`IlSched`] (registry name `"il"`).
+//!
+//! Wraps a trained [`SoftmaxModel`] in the plug-and-play [`Scheduler`]
+//! trait: per ready task it enumerates the candidate PEs, extracts the
+//! documented feature vector for each, and commits the model's argmax —
+//! protected by an **oracle-fallback guard**: any pick whose projected
+//! finish time exceeds `guard_ratio ×` the best achievable finish is
+//! overridden by the earliest-finish (oracle-style) choice and counted
+//! as a fallback in [`crate::stats::SimReport::sched_fallbacks`].  The
+//! guard bounds how badly a mistrained model can behave without ever
+//! blocking a well-trained one.
+//!
+//! `sched::create("il", build)` loads the trained weights from the JSON
+//! artifact at `SchedBuild::policy_path` (the `il_policy` config key /
+//! `--il-policy` flag); with no path it falls back to the committed
+//! pretrained preset baked into the binary from
+//! `rust/data/il_policy.json`, so `--sched il` works out of the box.
+
+use crate::sched::{
+    Assignment, ReadyTask, SchedBuild, SchedContext, Scheduler,
+};
+use crate::util::json::Json;
+use crate::Result;
+
+use super::features::{candidates, features_into, FeatureCtx, N_FEATURES};
+use super::model::SoftmaxModel;
+
+/// The committed pretrained policy (see `rust/data/il_policy.json`):
+/// hand-verified weights that reduce to the earliest-finish rule, so the
+/// out-of-the-box `--sched il` behaves sanely on any platform.
+pub const PRESET_POLICY: &str = include_str!("../../data/il_policy.json");
+
+/// The decision rule shared by [`IlSched`] and the DAgger collector:
+/// model argmax with the earliest-finish guard.  `fins` carries each
+/// candidate's projected finish time; returns `(candidate index,
+/// guard_fired)`.
+pub fn choose_guarded(
+    model: &SoftmaxModel,
+    classes: &[u16],
+    feats: &[f64],
+    fins: &[f64],
+) -> (usize, bool) {
+    let mut best = (f64::INFINITY, 0usize);
+    for (i, &f) in fins.iter().enumerate() {
+        if f < best.0 {
+            best = (f, i);
+        }
+    }
+    let pick = model.predict(classes, feats);
+    let f = fins[pick];
+    if !f.is_finite() || f > model.guard_ratio * best.0 + 1e-9 {
+        (best.1, true)
+    } else {
+        (pick, false)
+    }
+}
+
+/// Imitation-learned scheduler (registry name `"il"`).
+pub struct IlSched {
+    model: SoftmaxModel,
+    epochs: u64,
+    decisions: u64,
+    fallbacks: u64,
+    // Reused per-epoch scratch.
+    fc: FeatureCtx,
+    cands: Vec<(usize, f64)>,
+    fins: Vec<f64>,
+    avail: Vec<f64>,
+    classes: Vec<u16>,
+    feats: Vec<f64>,
+}
+
+impl IlSched {
+    pub fn new(model: SoftmaxModel) -> IlSched {
+        IlSched {
+            model,
+            epochs: 0,
+            decisions: 0,
+            fallbacks: 0,
+            fc: FeatureCtx::default(),
+            cands: Vec::new(),
+            fins: Vec::new(),
+            avail: Vec::new(),
+            classes: Vec::new(),
+            feats: Vec::new(),
+        }
+    }
+
+    /// Registry constructor: load the artifact at
+    /// `build.policy_path`, or the committed preset when unset.
+    pub fn from_build(build: &SchedBuild) -> Result<IlSched> {
+        let model = match &build.policy_path {
+            Some(p) => SoftmaxModel::load(p)?,
+            None => SoftmaxModel::from_json(&Json::parse(PRESET_POLICY)?)?,
+        };
+        Ok(IlSched::new(model))
+    }
+
+    pub fn model(&self) -> &SoftmaxModel {
+        &self.model
+    }
+}
+
+impl Scheduler for IlSched {
+    fn name(&self) -> &str {
+        "il"
+    }
+
+    fn schedule(
+        &mut self,
+        ready: &[ReadyTask],
+        ctx: &dyn SchedContext,
+    ) -> Vec<Assignment> {
+        self.epochs += 1;
+        self.fc.refresh(ctx);
+        let pes = ctx.pes();
+        let now = ctx.now_us();
+        self.avail.clear();
+        self.avail.extend(pes.iter().map(|p| p.avail_us));
+        let mut out = Vec::with_capacity(ready.len());
+        for rt in ready {
+            let best_exec = candidates(rt, ctx, &mut self.cands);
+            if self.cands.is_empty() {
+                continue; // currently unplaceable; retry next epoch
+            }
+            let k = self.cands.len();
+            self.classes.clear();
+            self.fins.clear();
+            self.feats.clear();
+            self.feats.resize(k * N_FEATURES, 0.0);
+            for (i, &(pe_id, exec)) in self.cands.iter().enumerate() {
+                let snap = &pes[pe_id];
+                features_into(
+                    rt,
+                    ctx,
+                    snap,
+                    self.avail[pe_id],
+                    exec,
+                    best_exec,
+                    &self.fc,
+                    &mut self.feats[i * N_FEATURES..(i + 1) * N_FEATURES],
+                );
+                self.classes.push(snap.class as u16);
+                self.fins.push(
+                    self.avail[pe_id]
+                        .max(ctx.data_ready_us(rt, pe_id))
+                        .max(now)
+                        + exec,
+                );
+            }
+            let (pick, guarded) = choose_guarded(
+                &self.model,
+                &self.classes,
+                &self.feats,
+                &self.fins,
+            );
+            self.decisions += 1;
+            if guarded {
+                self.fallbacks += 1;
+            }
+            let (pe_id, _) = self.cands[pick];
+            // Virtual availability advances to the projected finish
+            // (data-ready wait included) so several same-epoch tasks
+            // spread — the same convention ETF/HEFT use.
+            self.avail[pe_id] = self.fins[pick];
+            out.push(Assignment { job: rt.job, task: rt.task, pe: pe_id });
+        }
+        out
+    }
+
+    fn report(&self) -> Vec<String> {
+        vec![format!(
+            "il: {} epochs, {} decisions, {} guard fallbacks \
+             (oracle '{}', guard {:.2})",
+            self.epochs,
+            self.decisions,
+            self.fallbacks,
+            self.model.oracle,
+            self.model.guard_ratio
+        )]
+    }
+
+    fn decision_counts(&self) -> (u64, u64) {
+        (self.decisions, self.fallbacks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::{rt, MockCtx};
+
+    fn preset() -> SoftmaxModel {
+        SoftmaxModel::from_json(&Json::parse(PRESET_POLICY).unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn committed_preset_parses_and_roundtrips() {
+        let m = preset();
+        assert!(m.n_classes >= 1);
+        assert!(m.guard_ratio >= 1.0);
+        let back = SoftmaxModel::from_json(
+            &Json::parse(&m.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn preset_prefers_earliest_finish() {
+        // PE 0: exec 10 but busy until t=100 -> finish 110.
+        // PE 1: exec 40, idle -> finish 40.  The preset must pick PE 1
+        // (it encodes the earliest-finish rule).
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, 0, 1, 40.0);
+        ctx.pes[0].avail_us = 100.0;
+        let mut s = IlSched::new(preset());
+        let a = s.schedule(&[rt(0, 0)], &ctx);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].pe, 1);
+        assert_eq!(s.decision_counts().0, 1);
+    }
+
+    #[test]
+    fn guard_overrides_a_bad_model() {
+        // A model that *prefers* late finishes (positive weight on the
+        // finish feature) with a tight guard: every decision falls back
+        // to the earliest-finish choice.
+        let mut m = SoftmaxModel::zeros(1, "etf");
+        m.weights[5] = 1.0; // log_finish_us
+        m.guard_ratio = 1.0;
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 10.0);
+        ctx.set_exec(0, 0, 1, 500.0);
+        let mut s = IlSched::new(m);
+        let a = s.schedule(&[rt(0, 0)], &ctx);
+        assert_eq!(a[0].pe, 0, "guard must reroute to earliest finish");
+        let (dec, fb) = s.decision_counts();
+        assert_eq!((dec, fb), (1, 1));
+    }
+
+    #[test]
+    fn never_assigns_to_unavailable_pes_and_spreads_batches() {
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        for t in 0..4 {
+            ctx.set_exec(0, t, 0, 10.0);
+            ctx.set_exec(0, t, 1, 10.0);
+        }
+        let mut s = IlSched::new(preset());
+        let tasks: Vec<_> = (0..4).map(|t| rt(0, t)).collect();
+        let a = s.schedule(&tasks, &ctx);
+        assert_eq!(a.len(), 4);
+        // Virtual availability spreads equal work over equal PEs.
+        assert_eq!(a.iter().filter(|x| x.pe == 0).count(), 2);
+        assert_eq!(a.iter().filter(|x| x.pe == 1).count(), 2);
+
+        ctx.pes[0].available = false;
+        let mut s = IlSched::new(preset());
+        let a = s.schedule(&tasks, &ctx);
+        assert!(a.iter().all(|x| x.pe == 1));
+        ctx.pes[1].available = false;
+        let mut s = IlSched::new(preset());
+        assert!(s.schedule(&tasks, &ctx).is_empty());
+    }
+
+    #[test]
+    fn unsupported_tasks_are_skipped() {
+        let mut ctx = MockCtx::uniform(2, 0.0);
+        ctx.set_exec(0, 0, 0, 5.0);
+        let mut s = IlSched::new(preset());
+        let a = s.schedule(&[rt(0, 0), rt(0, 1)], &ctx);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].task, 0);
+    }
+}

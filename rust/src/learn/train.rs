@@ -1,0 +1,345 @@
+//! The collect → train → eval driver.
+//!
+//! * [`collect_round`] — run the simulation grid (`seeds ×
+//!   rates`) with a recording [`Collector`] wrapped around the oracle,
+//!   fanned out over OS threads via [`crate::coordinator::parallel_map`].
+//!   Results aggregate in input order, so a parallel collection is
+//!   **bit-identical** to a serial one.
+//! * [`train_policy`] — DAgger loop: round 0 clones the oracle's
+//!   behaviour; each later round collects under the *current* policy
+//!   (oracle labels), aggregates, and retrains on everything so far.
+//! * [`evaluate`] — IL vs oracle vs baselines on the same grid: mean
+//!   latency, energy per job, guard-fallback counts, and the
+//!   decision-agreement fraction.
+
+use std::rc::Rc;
+
+use crate::app::AppGraph;
+use crate::coordinator::parallel_map;
+use crate::platform::Platform;
+use crate::sched::{self, SchedBuild};
+use crate::sim::Simulation;
+use crate::{Error, Result};
+
+use super::dataset::{Collector, Dataset};
+use super::model::{SoftmaxModel, TrainParams};
+use super::policy::IlSched;
+use super::LearnConfig;
+
+/// The `seeds × rates` simulation grid of a config, in deterministic
+/// (seed-major) order.
+fn grid(lc: &LearnConfig) -> Vec<(u64, f64)> {
+    let mut out =
+        Vec::with_capacity(lc.seeds.len() * lc.rates_per_ms.len());
+    for &s in &lc.seeds {
+        for &r in &lc.rates_per_ms {
+            out.push((s, r));
+        }
+    }
+    out
+}
+
+/// Run one collection round over the grid.  With `policy = None` the
+/// oracle acts (behavioural cloning); with a policy, the policy acts
+/// and the oracle labels (DAgger).  Returns the aggregated dataset plus
+/// the policy's (decisions, oracle-matches) counters.
+pub fn collect_round(
+    platform: &Platform,
+    apps: &[AppGraph],
+    lc: &LearnConfig,
+    policy: Option<&SoftmaxModel>,
+) -> Result<(Dataset, u64, u64)> {
+    run_grid(platform, apps, lc, policy, lc.max_samples_per_run)
+}
+
+/// Grid fan-out shared by [`collect_round`] and the agreement pass of
+/// [`evaluate`] (which sets `max_samples = 0`: decisions are counted
+/// but no demonstrations are stored).
+fn run_grid(
+    platform: &Platform,
+    apps: &[AppGraph],
+    lc: &LearnConfig,
+    policy: Option<&SoftmaxModel>,
+    max_samples: usize,
+) -> Result<(Dataset, u64, u64)> {
+    let pts = grid(lc);
+    let results = parallel_map(&pts, lc.eval_threads(), |_, &(seed, rate)| {
+        let mut cfg = lc.sim.clone();
+        cfg.scheduler = lc.oracle.clone();
+        cfg.seed = seed;
+        cfg.injection_rate_per_ms = rate;
+        let build = SchedBuild {
+            platform,
+            apps,
+            seed,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            policy_path: cfg.il_policy.clone(),
+        };
+        let oracle = sched::create(&lc.oracle, &build)?;
+        let (collector, shared) =
+            Collector::new(oracle, policy.cloned(), max_samples);
+        Simulation::build_with_scheduler(
+            platform,
+            apps,
+            &cfg,
+            Box::new(collector),
+        )?
+        .run();
+        // The simulation dropped its scheduler (and with it the other
+        // Rc handle) when `run` consumed it.
+        let c = Rc::try_unwrap(shared)
+            .map_err(|_| {
+                Error::Sim("collector leaked its sample buffer".into())
+            })?
+            .into_inner();
+        Ok((c.data, c.policy_decisions, c.policy_matches))
+    });
+    let mut data = Dataset::default();
+    data.oracle = lc.oracle.clone();
+    let (mut dec, mut mat) = (0u64, 0u64);
+    for (i, r) in results.into_iter().enumerate() {
+        let (d, pd, pm) = r.map_err(|e| {
+            Error::Sim(format!(
+                "collect seed {} rate {}: {e}",
+                pts[i].0, pts[i].1
+            ))
+        })?;
+        data.extend(d);
+        dec += pd;
+        mat += pm;
+    }
+    Ok((data, dec, mat))
+}
+
+/// Summary of a [`train_policy`] run.
+#[derive(Debug, Clone)]
+pub struct TrainSummary {
+    pub rounds: usize,
+    /// Aggregated demonstrations the final model was trained on.
+    pub samples: usize,
+    /// Deployment agreement with the oracle measured during the last
+    /// DAgger round (`None` for pure behavioural cloning, `rounds = 1`).
+    pub agreement: Option<f64>,
+}
+
+/// The DAgger pipeline: collect → train, `lc.rounds` times, aggregating
+/// demonstrations across rounds.  Bit-reproducible for a fixed config:
+/// collection aggregates in grid order, training is seeded SGD.
+pub fn train_policy(
+    platform: &Platform,
+    apps: &[AppGraph],
+    lc: &LearnConfig,
+) -> Result<(SoftmaxModel, TrainSummary)> {
+    lc.validate()?;
+    let n_classes = platform.classes.len().max(1);
+    let params = TrainParams {
+        epochs: lc.epochs,
+        learning_rate: lc.learning_rate,
+        l2: lc.l2,
+        seed: lc.train_seed,
+    };
+    let (mut agg, _, _) = collect_round(platform, apps, lc, None)?;
+    if agg.is_empty() {
+        return Err(Error::Sim(
+            "collected no demonstrations — raise max_jobs or the \
+             injection rates"
+                .into(),
+        ));
+    }
+    let mut model = SoftmaxModel::train(
+        &agg,
+        n_classes,
+        &lc.oracle,
+        &params,
+        lc.guard_ratio,
+    );
+    let mut agreement = None;
+    for _round in 1..lc.rounds {
+        let (d, dec, mat) =
+            collect_round(platform, apps, lc, Some(&model))?;
+        if dec > 0 {
+            agreement = Some(mat as f64 / dec as f64);
+        }
+        agg.extend(d);
+        model = SoftmaxModel::train(
+            &agg,
+            n_classes,
+            &lc.oracle,
+            &params,
+            lc.guard_ratio,
+        );
+    }
+    Ok((
+        model,
+        TrainSummary { rounds: lc.rounds, samples: agg.len(), agreement },
+    ))
+}
+
+/// Aggregated evaluation of one scheduler over the grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalRow {
+    pub scheduler: String,
+    /// Mean over grid points of the per-run mean job latency (µs).
+    pub mean_latency_us: f64,
+    /// Mean over grid points of energy per completed job (mJ).
+    pub energy_per_job_mj: f64,
+    pub completed: usize,
+    pub injected: usize,
+    /// Scheduler decision counters summed over the grid (IL rows).
+    pub decisions: u64,
+    pub fallbacks: u64,
+}
+
+/// Result of [`evaluate`]: one row per scheduler (IL first, then the
+/// oracle, then the baselines) plus the decision-agreement fraction.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub rows: Vec<EvalRow>,
+    /// Fraction of deployed-policy decisions matching the oracle's
+    /// label on the states the policy visits.
+    pub agreement: f64,
+    /// Grid points each row aggregates (seeds × rates).
+    pub grid_points: usize,
+}
+
+impl EvalReport {
+    pub fn row(&self, scheduler: &str) -> Option<&EvalRow> {
+        self.rows.iter().find(|r| r.scheduler == scheduler)
+    }
+}
+
+/// Run IL vs its oracle vs the configured baselines on the same
+/// `seeds × rates` grid and aggregate per scheduler, in input order —
+/// like the collection fan-out, bit-identical across thread counts.
+pub fn evaluate(
+    platform: &Platform,
+    apps: &[AppGraph],
+    lc: &LearnConfig,
+    model: &SoftmaxModel,
+) -> Result<EvalReport> {
+    lc.validate()?;
+    let mut scheds: Vec<String> = vec!["il".into(), lc.oracle.clone()];
+    for b in &lc.baselines {
+        if !scheds.contains(b) {
+            scheds.push(b.clone());
+        }
+    }
+    let g = grid(lc);
+    let mut points: Vec<(String, u64, f64)> =
+        Vec::with_capacity(scheds.len() * g.len());
+    for s in &scheds {
+        for &(seed, rate) in &g {
+            points.push((s.clone(), seed, rate));
+        }
+    }
+    let results = parallel_map(&points, lc.eval_threads(), |_, p| {
+        let (sname, seed, rate) = (&p.0, p.1, p.2);
+        let mut cfg = lc.sim.clone();
+        cfg.scheduler = sname.clone();
+        cfg.seed = seed;
+        cfg.injection_rate_per_ms = rate;
+        let report = if sname == "il" {
+            // Evaluate the in-memory model, not a disk artifact.
+            Simulation::build_with_scheduler(
+                platform,
+                apps,
+                &cfg,
+                Box::new(IlSched::new(model.clone())),
+            )?
+            .run()
+        } else {
+            Simulation::build(platform, apps, &cfg)?.run()
+        };
+        Ok((
+            report.avg_job_latency_us(),
+            report.energy_per_job_mj(),
+            report.completed_jobs,
+            report.injected_jobs,
+            report.sched_decisions,
+            report.sched_fallbacks,
+        ))
+    });
+    let mut vals = Vec::with_capacity(points.len());
+    for (i, r) in results.into_iter().enumerate() {
+        vals.push(r.map_err(|e| {
+            Error::Sim(format!(
+                "eval {} seed {} rate {}: {e}",
+                points[i].0, points[i].1, points[i].2
+            ))
+        })?);
+    }
+    let per = g.len();
+    let mut rows = Vec::with_capacity(scheds.len());
+    for (si, s) in scheds.iter().enumerate() {
+        let chunk = &vals[si * per..(si + 1) * per];
+        let n = per as f64;
+        rows.push(EvalRow {
+            scheduler: s.clone(),
+            mean_latency_us: chunk.iter().map(|v| v.0).sum::<f64>() / n,
+            energy_per_job_mj: chunk.iter().map(|v| v.1).sum::<f64>() / n,
+            completed: chunk.iter().map(|v| v.2).sum(),
+            injected: chunk.iter().map(|v| v.3).sum(),
+            decisions: chunk.iter().map(|v| v.4).sum(),
+            fallbacks: chunk.iter().map(|v| v.5).sum(),
+        });
+    }
+    // Decision agreement on the states the deployed policy visits —
+    // count-only (max_samples 0): no demonstrations are stored.
+    let (_, dec, mat) = run_grid(platform, apps, lc, Some(model), 0)?;
+    let agreement = if dec > 0 { mat as f64 / dec as f64 } else { 0.0 };
+    Ok(EvalReport { rows, agreement, grid_points: per })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+
+    fn tiny_cfg() -> LearnConfig {
+        let mut lc = LearnConfig::default();
+        lc.seeds = vec![1];
+        lc.rates_per_ms = vec![2.0];
+        lc.rounds = 1;
+        lc.epochs = 2;
+        lc.sim.max_jobs = 40;
+        lc.sim.warmup_jobs = 4;
+        lc.threads = 2;
+        lc
+    }
+
+    #[test]
+    fn tiny_pipeline_trains_and_evaluates() {
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let lc = tiny_cfg();
+        let (model, summary) = train_policy(&p, &apps, &lc).unwrap();
+        assert!(summary.samples > 0);
+        assert!(model.weights.iter().all(|w| w.is_finite()));
+        let report = evaluate(&p, &apps, &lc, &model).unwrap();
+        // il + etf + random + rr.
+        assert_eq!(report.rows.len(), 4);
+        assert_eq!(report.rows[0].scheduler, "il");
+        for row in &report.rows {
+            assert_eq!(
+                row.completed, row.injected,
+                "{} lost jobs",
+                row.scheduler
+            );
+            assert!(row.mean_latency_us > 0.0, "{}", row.scheduler);
+        }
+        let il = report.row("il").unwrap();
+        assert!(il.decisions > 0, "IL decision counter not wired");
+        assert!((0.0..=1.0).contains(&report.agreement));
+    }
+
+    #[test]
+    fn collection_grid_is_seed_major_and_deterministic() {
+        let mut lc = tiny_cfg();
+        lc.seeds = vec![3, 5];
+        lc.rates_per_ms = vec![1.0, 2.0];
+        assert_eq!(
+            grid(&lc),
+            vec![(3, 1.0), (3, 2.0), (5, 1.0), (5, 2.0)]
+        );
+    }
+}

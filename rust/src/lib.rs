@@ -33,6 +33,13 @@
 //!   NSGA-II-style multi-objective search over latency/energy/peak
 //!   temperature with a Pareto-front archive, parallel cached
 //!   evaluation, and resumable JSON checkpoints.
+//! * **Learned runtime resource management** ([`learn`]): a
+//!   dependency-free imitation-learning pipeline — feature extraction
+//!   per (ready-task, PE) pair, DAgger-style demonstration collection
+//!   from oracle schedulers, a seeded deterministic softmax model, and
+//!   the deployable [`learn::IlSched`] (`--sched il`) with an
+//!   oracle-fallback guard, hot-swappable mid-run by the scenario
+//!   engine.
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack; Layers 1-2
 //! (Pallas kernels + JAX models) live in `python/compile/` and are only
@@ -61,6 +68,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod dtpm;
 pub mod jobgen;
+pub mod learn;
 pub mod noc;
 pub mod platform;
 pub mod power;
@@ -78,6 +86,7 @@ pub mod prelude {
     pub use crate::app::{AppGraph, TaskSpec};
     pub use crate::config::SimConfig;
     pub use crate::dse::{DseConfig, DseEngine};
+    pub use crate::learn::{IlSched, LearnConfig, SoftmaxModel};
     pub use crate::platform::{PeType, Platform};
     pub use crate::scenario::Scenario;
     pub use crate::sched::Scheduler;

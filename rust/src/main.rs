@@ -10,6 +10,7 @@ fn main() {
         "sweep" => cli::cmd_sweep(&args),
         "scenario" => cli::cmd_scenario(&args),
         "dse" => cli::cmd_dse(&args),
+        "learn" => cli::cmd_learn(&args),
         "reproduce" => cli::cmd_reproduce(&args),
         "validate" => cli::cmd_validate(&args),
         "list" => Ok(cli::cmd_list()),

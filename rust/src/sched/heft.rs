@@ -156,6 +156,7 @@ mod tests {
             apps: &apps,
             seed: 0,
             artifacts_dir: None,
+            policy_path: None,
         });
         let ranks = h.ranks_for(0);
         // Source (scrambler) dominates: its rank includes the whole DAG.
@@ -175,6 +176,7 @@ mod tests {
             apps: &apps,
             seed: 0,
             artifacts_dir: None,
+            policy_path: None,
         });
         let g = &apps[0];
         for (i, t) in g.tasks.iter().enumerate() {
@@ -195,6 +197,7 @@ mod tests {
             apps: &apps,
             seed: 0,
             artifacts_dir: None,
+            policy_path: None,
         });
         // One PE, two tasks: task 0 (source, high rank) vs the crc sink
         // (low rank). HEFT must commit the high-rank task first.
@@ -215,6 +218,7 @@ mod tests {
             apps: &apps,
             seed: 0,
             artifacts_dir: None,
+            policy_path: None,
         });
         let mut ctx = MockCtx::uniform(2, 0.0);
         ctx.set_exec(0, 0, 0, 100.0);

@@ -98,6 +98,10 @@ impl Scheduler for Met {
     fn report(&self) -> Vec<String> {
         vec![format!("met: {} decisions", self.decisions)]
     }
+
+    fn decision_counts(&self) -> (u64, u64) {
+        (self.decisions, 0)
+    }
 }
 
 /// MET with least-available tie-breaking among equal-best instances
@@ -128,6 +132,10 @@ impl Scheduler for MetLb {
 
     fn report(&self) -> Vec<String> {
         vec![format!("met-lb: {} decisions", self.decisions)]
+    }
+
+    fn decision_counts(&self) -> (u64, u64) {
+        (self.decisions, 0)
     }
 }
 

@@ -15,7 +15,9 @@
 //!   (ILP-optimal) schedule, produced by [`ilp`].
 //!
 //! Extensions proving plug-and-play: [`heft::Heft`], [`random::RandomSched`],
-//! [`rr::RoundRobin`].  Register your own via [`create`].
+//! [`rr::RoundRobin`], and the imitation-learned
+//! [`crate::learn::IlSched`] (`"il"`).  Register your own via
+//! [`create`].
 
 pub mod etf;
 pub mod heft;
@@ -76,6 +78,14 @@ pub trait SchedContext {
     fn task_name(&self, rt: &ReadyTask) -> &str;
     /// Name of the application the task belongs to.
     fn app_name(&self, rt: &ReadyTask) -> &str;
+    /// DVFS/thermal headroom of `cluster`, in [0, 1]: the cluster's
+    /// current frequency as a fraction of its maximum, scaled down as
+    /// the hottest node approaches the thermal-throttle trip point.
+    /// Defaults to 1.0 for contexts that do not model DVFS/thermals
+    /// (the IL featurizer treats that as "no pressure").
+    fn headroom_frac(&self, _cluster: usize) -> f64 {
+        1.0
+    }
 }
 
 /// A scheduling decision: commit `task` of `job` to PE `pe`'s queue.
@@ -103,6 +113,13 @@ pub trait Scheduler {
     fn report(&self) -> Vec<String> {
         Vec::new()
     }
+    /// Optional: `(decisions, fallbacks)` counters surfaced as
+    /// `SimReport::sched_decisions` / `sched_fallbacks`.  `fallbacks`
+    /// counts decisions a guard rerouted (the IL scheduler's
+    /// oracle-fallback guard); plain schedulers report 0.
+    fn decision_counts(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Factory context passed to scheduler constructors: offline schedulers
@@ -113,12 +130,18 @@ pub struct SchedBuild<'a> {
     pub seed: u64,
     /// Optional path to the AOT artifacts directory (etf-xla).
     pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Optional path to a trained IL policy artifact (`il`); `None`
+    /// falls back to the committed pretrained preset.
+    pub policy_path: Option<std::path::PathBuf>,
 }
 
 /// Registry: construct a scheduler by name.
 ///
-/// Names: `met`, `etf`, `etf-xla`, `ilp` (alias `table`), `heft`,
-/// `random`, `rr`.
+/// The single source of truth for names is [`builtin_names`] —
+/// `create` accepts exactly that list (`table` is the documented alias
+/// of `ilp`, and both are listed), and the unknown-scheduler error is
+/// generated from it, so the two can never drift apart
+/// (`registry_creates_all_builtins` asserts this).
 pub fn create(name: &str, build: &SchedBuild) -> Result<Box<dyn Scheduler>> {
     match name {
         "met" => Ok(Box::new(met::Met::new())),
@@ -127,18 +150,23 @@ pub fn create(name: &str, build: &SchedBuild) -> Result<Box<dyn Scheduler>> {
         "etf-xla" => Ok(Box::new(etf::EtfXla::new(build)?)),
         "ilp" | "table" => Ok(Box::new(table::TableSched::from_ilp(build)?)),
         "heft" => Ok(Box::new(heft::Heft::new(build))),
+        "il" => Ok(Box::new(crate::learn::IlSched::from_build(build)?)),
         "random" => Ok(Box::new(random::RandomSched::new(build.seed))),
         "rr" => Ok(Box::new(rr::RoundRobin::new())),
         other => Err(Error::Sched(format!(
-            "unknown scheduler '{other}' \
-             (known: met, met-lb, etf, etf-xla, ilp, table, heft, random, rr)"
+            "unknown scheduler '{other}' (known: {})",
+            builtin_names().join(", ")
         ))),
     }
 }
 
-/// All built-in scheduler names (CLI listings, sweep defaults).
+/// All built-in scheduler names (CLI listings, sweep defaults, and the
+/// exact set [`create`] accepts — aliases included).
 pub fn builtin_names() -> &'static [&'static str] {
-    &["met", "met-lb", "etf", "etf-xla", "ilp", "heft", "random", "rr"]
+    &[
+        "met", "met-lb", "etf", "etf-xla", "ilp", "table", "heft", "il",
+        "random", "rr",
+    ]
 }
 
 // ---------------------------------------------------------------------------
@@ -228,6 +256,10 @@ mod tests {
 
     #[test]
     fn registry_creates_all_builtins() {
+        // `builtin_names` is the single source of truth: `create` must
+        // succeed for every listed name (etf-xla only needs its AOT
+        // artifact files; without them it must fail with the artifact
+        // error, not an unknown-name error).
         let platform = Platform::table2_soc();
         let apps = vec![suite::wifi_tx(suite::WifiParams { symbols: 2 })];
         let build = SchedBuild {
@@ -235,23 +267,41 @@ mod tests {
             apps: &apps,
             seed: 1,
             artifacts_dir: None,
+            policy_path: None,
         };
-        for name in ["met", "etf", "ilp", "table", "heft", "random", "rr"] {
-            let s = create(name, &build)
-                .unwrap_or_else(|e| panic!("{name}: {e}"));
-            assert!(!s.name().is_empty());
+        let artifacts = crate::runtime::artifacts_available(
+            &crate::runtime::default_artifacts_dir(),
+        );
+        for &name in builtin_names() {
+            match create(name, &build) {
+                Ok(s) => assert!(!s.name().is_empty(), "{name}"),
+                Err(e) if name == "etf-xla" && !artifacts => {
+                    let msg = format!("{e}");
+                    assert!(
+                        msg.contains("artifact"),
+                        "{name}: unexpected failure: {msg}"
+                    );
+                }
+                Err(e) => panic!("{name}: {e}"),
+            }
         }
     }
 
     #[test]
-    fn registry_rejects_unknown() {
+    fn registry_rejects_unknown_and_error_lists_all_names() {
         let platform = Platform::table2_soc();
         let build = SchedBuild {
             platform: &platform,
             apps: &[],
             seed: 1,
             artifacts_dir: None,
+            policy_path: None,
         };
-        assert!(create("nope", &build).is_err());
+        let msg = format!("{}", create("nope", &build).unwrap_err());
+        // The error message is generated from builtin_names(), so every
+        // accepted name (aliases included) appears in it.
+        for name in builtin_names() {
+            assert!(msg.contains(name), "error omits '{name}': {msg}");
+        }
     }
 }

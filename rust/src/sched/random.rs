@@ -50,6 +50,10 @@ impl Scheduler for RandomSched {
     fn report(&self) -> Vec<String> {
         vec![format!("random: {} decisions", self.decisions)]
     }
+
+    fn decision_counts(&self) -> (u64, u64) {
+        (self.decisions, 0)
+    }
 }
 
 #[cfg(test)]

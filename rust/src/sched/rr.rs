@@ -53,6 +53,10 @@ impl Scheduler for RoundRobin {
     fn report(&self) -> Vec<String> {
         vec![format!("rr: {} decisions", self.decisions)]
     }
+
+    fn decision_counts(&self) -> (u64, u64) {
+        (self.decisions, 0)
+    }
 }
 
 #[cfg(test)]

@@ -274,6 +274,7 @@ impl<'a> Simulation<'a> {
                     apps,
                     seed: cfg.seed,
                     artifacts_dir: cfg.artifacts_dir.clone(),
+                    policy_path: cfg.il_policy.clone(),
                 };
                 crate::sched::create(&cfg.scheduler, &build)?
             }
@@ -291,6 +292,7 @@ impl<'a> Simulation<'a> {
                     apps,
                     seed: cfg.seed,
                     artifacts_dir: cfg.artifacts_dir.clone(),
+                    policy_path: cfg.il_policy.clone(),
                 };
                 for name in sc.scheduler_names() {
                     crate::sched::create(name, &build).map_err(|e| {
@@ -985,6 +987,7 @@ impl<'a> Simulation<'a> {
             apps: self.apps,
             seed: self.cfg.seed,
             artifacts_dir: self.cfg.artifacts_dir.clone(),
+            policy_path: self.cfg.il_policy.clone(),
         };
         match crate::sched::create(name, &build) {
             Ok(s) => {
@@ -1415,6 +1418,9 @@ impl<'a> Simulation<'a> {
             self.report.throttle_engagements = th.engagements;
         }
         self.report.scheduler_report = self.scheduler.report();
+        let (decisions, fallbacks) = self.scheduler.decision_counts();
+        self.report.sched_decisions = decisions;
+        self.report.sched_fallbacks = fallbacks;
         self.report.wall_s = wall0.elapsed().as_secs_f64();
         self.report
     }
@@ -1466,6 +1472,31 @@ impl SchedContext for CtxView<'_, '_> {
     }
     fn app_name(&self, rt: &ReadyTask) -> &str {
         &self.sim.apps[rt.app].name
+    }
+    fn headroom_frac(&self, cluster: usize) -> f64 {
+        // DVFS headroom: current / max cluster frequency ...
+        let Some(cl) = self.sim.platform.clusters.get(cluster) else {
+            return 1.0;
+        };
+        let max_mhz =
+            self.sim.platform.classes[cl.class].max_opp().freq_mhz;
+        let dvfs = if max_mhz > 0.0 {
+            (self.sim.cluster_mhz[cluster] / max_mhz).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        // ... scaled by thermal headroom to the throttle trip point
+        // (only when a throttle polices temperature; readings are from
+        // the last integrated epoch, which is exact under any policy
+        // because policies force eager integration).
+        let thermal = if self.sim.cfg.dtpm.thermal_throttle {
+            let trip = self.sim.cfg.dtpm.throttle_temp_c;
+            let span = (trip - self.sim.t_ambient_c).max(1e-9);
+            ((trip - self.sim.last_t_max_abs) / span).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        dvfs * thermal
     }
 }
 

@@ -88,6 +88,14 @@ pub struct SimReport {
     pub events_processed: u64,
     pub sched_invocations: u64,
     pub tasks_executed: u64,
+    /// Decisions reported by the scheduler active at run end (see
+    /// `Scheduler::decision_counts`; 0 for schedulers that don't
+    /// count).  After a scenario hot-swap these describe the scheduler
+    /// in force at the end of the run.
+    pub sched_decisions: u64,
+    /// Decisions a guard rerouted — the IL scheduler's oracle-fallback
+    /// guard engaging (0 elsewhere).
+    pub sched_fallbacks: u64,
     /// Wall-clock time spent inside `Scheduler::schedule` (ns).
     pub sched_wall_ns: u64,
     /// Total wall-clock for the run (s).
@@ -196,6 +204,12 @@ impl SimReport {
             "  thermal: {} epochs deferred across {} flushes\n",
             self.deferred_epochs, self.thermal_flushes
         ));
+        if self.sched_decisions > 0 {
+            s.push_str(&format!(
+                "  scheduler decisions: {} ({} guard fallbacks)\n",
+                self.sched_decisions, self.sched_fallbacks
+            ));
+        }
         for line in &self.scheduler_report {
             s.push_str(&format!("  {line}\n"));
         }
@@ -318,6 +332,14 @@ impl SimReport {
             .set(
                 "sched_overhead_us",
                 Json::Num(self.sched_overhead_us()),
+            )
+            .set(
+                "sched_decisions",
+                Json::Num(self.sched_decisions as f64),
+            )
+            .set(
+                "sched_fallbacks",
+                Json::Num(self.sched_fallbacks as f64),
             )
             .set(
                 "pe_utilization",
@@ -508,6 +530,16 @@ mod tests {
         assert!(s.contains("scheduler=etf"));
         assert!(s.contains("throughput"));
         assert!(s.contains("energy"));
+        // The decisions line only appears for counting schedulers.
+        assert!(!s.contains("guard fallbacks"));
+        let mut r = demo_report();
+        r.sched_decisions = 42;
+        r.sched_fallbacks = 3;
+        let s = r.summary();
+        assert!(s.contains("42 (3 guard fallbacks)"), "{s}");
+        let j = r.to_json();
+        assert_eq!(j.get("sched_decisions").unwrap().as_f64(), Some(42.0));
+        assert_eq!(j.get("sched_fallbacks").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -210,6 +210,27 @@ impl Json {
     }
 }
 
+/// JSON numbers are f64, which only holds integers exactly below 2^53;
+/// larger u64s serialize as decimal strings so round-trips stay exact —
+/// the convention shared by DSE checkpoints and learn configs.
+pub fn u64_to_json(x: u64) -> Json {
+    if x < (1u64 << 53) {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// Inverse of [`u64_to_json`]: an exact non-negative integer number, or
+/// a decimal string.
+pub fn u64_from_json(v: &Json) -> Option<u64> {
+    match v {
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
