@@ -19,6 +19,11 @@
 //! * `BENCH_BASELINE=path` — compare events/s per kernel against a
 //!   committed baseline JSON and **exit non-zero on a >20% regression**;
 //!   a missing baseline file records only.
+//! * `-- --write-baseline` — additionally write this run's record to
+//!   the baseline path (`BENCH_BASELINE`, default
+//!   `BENCH_baseline.json`): the one-command refresh documented in
+//!   README §Performance.  Run it on a trusted machine from `main`,
+//!   then commit the refreshed baseline to arm the tight gate.
 
 mod bench_util;
 
@@ -84,8 +89,20 @@ fn main() {
             sched_overhead_us: r.sched_overhead_us(),
         });
     }
-    write_bench_json(&kernels, smoke, jobs, runs);
-    check_baseline(&kernels);
+    let record = write_bench_json(&kernels, smoke, jobs, runs);
+    if std::env::args().any(|a| a == "--write-baseline") {
+        let base = std::env::var("BENCH_BASELINE")
+            .unwrap_or_else(|_| "BENCH_baseline.json".into());
+        match std::fs::write(&base, record.to_string_pretty()) {
+            Ok(()) => println!(
+                "baseline refreshed at {base} — commit it to arm the \
+                 regression gate against this run's hardware"
+            ),
+            Err(e) => eprintln!("could not write baseline {base}: {e}"),
+        }
+    } else {
+        check_baseline(&kernels, smoke);
+    }
 
     println!("=== scenario engine overhead guard ===");
     // Same workload twice: static vs a busy scenario timeline (an event
@@ -281,13 +298,14 @@ fn main() {
 
 /// Record the simulation-kernel trajectory: `BENCH_hotpath.json` at the
 /// working directory (the repo root under `cargo bench`), or wherever
-/// `BENCH_OUT` points.
+/// `BENCH_OUT` points.  Returns the record so `--write-baseline` can
+/// copy it to the baseline path.
 fn write_bench_json(
     kernels: &[KernelResult],
     smoke: bool,
     jobs: usize,
     runs: usize,
-) {
+) -> Json {
     let unix_s = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -328,12 +346,16 @@ fn write_bench_json(
         Ok(()) => println!("bench record written to {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
+    j
 }
 
 /// CI regression gate: compare events/s per kernel against a committed
 /// baseline JSON (same schema as the emitted record) and exit non-zero
-/// on a >20% regression.  A missing baseline records only.
-fn check_baseline(kernels: &[KernelResult]) {
+/// on a >20% regression.  A missing baseline records only, as does a
+/// baseline recorded in the other smoke/full mode (short smoke runs
+/// carry proportionally more fixed per-run cost, so cross-mode
+/// events/s ratios would mis-gate in both directions).
+fn check_baseline(kernels: &[KernelResult], smoke: bool) {
     let Ok(base_path) = std::env::var("BENCH_BASELINE") else {
         return;
     };
@@ -346,6 +368,16 @@ fn check_baseline(kernels: &[KernelResult]) {
             return;
         }
     };
+    let base_smoke = base.get("smoke").and_then(Json::as_bool);
+    if base_smoke != Some(smoke) {
+        println!(
+            "(baseline {base_path} was recorded with smoke={:?}, this \
+             run is smoke={smoke} — modes differ, recording only; \
+             refresh the baseline in the mode the gate runs in)",
+            base_smoke
+        );
+        return;
+    }
     let Some(base_kernels) = base.get("kernels").and_then(Json::as_arr)
     else {
         println!("(baseline {base_path} has no 'kernels' — skipping)");

@@ -1,0 +1,347 @@
+//! Batched grid-evaluation benchmark — the throughput contract of the
+//! reusable-`SimWorker` engine, recorded in `BENCH_sweep.json`.
+//!
+//! Two grids:
+//!
+//! * **probe grid** — many tiny simulations (short-horizon policy
+//!   probes: the regime the DSE evaluator's seeds×scenarios fan-out
+//!   and the IL pipeline's DAgger probes live in, where per-point
+//!   setup cost dominates).  Measured twice over the *same* points:
+//!   a fresh `Simulation::build(..).run()` per point versus one
+//!   `SimSetup` + a single reused `SimWorker`.  The pooled path must
+//!   deliver **≥ 1.5× sims/s** — printed always, asserted in smoke
+//!   mode (the CI gate).
+//! * **throughput grid** — fewer, longer runs; the pooled sims/s is
+//!   recorded so the JSON trajectory tracks end-to-end sweep speed,
+//!   where the win is smaller (run time dominates setup).
+//!
+//! Run: `cargo bench --bench perf_sweep`
+//!
+//! Knobs:
+//! * `BENCH_SMOKE=1`      — reduced grid for CI latency (and the
+//!   speedup assertion)
+//! * `BENCH_OUT=path`     — where to write the JSON (default
+//!   `BENCH_sweep.json`)
+//! * `BENCH_BASELINE=path` — compare sims/s per grid against a
+//!   baseline JSON and exit non-zero on a >20% regression; missing
+//!   baseline records only
+//! * `-- --write-baseline` — additionally write this run's record to
+//!   the baseline path (refresh-and-commit workflow; see README
+//!   §Performance)
+
+mod bench_util;
+
+use ds3r::app::suite::{self, RadarParams, WifiParams};
+use ds3r::app::AppGraph;
+use ds3r::config::SimConfig;
+use ds3r::platform::Platform;
+use ds3r::sim::{SimSetup, SimWorker, Simulation};
+use ds3r::util::json::Json;
+
+/// One (scheduler, rate, seed) grid point.
+#[derive(Clone)]
+struct Point {
+    scheduler: &'static str,
+    rate: f64,
+    seed: u64,
+}
+
+fn grid(
+    scheds: &[&'static str],
+    rates: &[f64],
+    seeds: u64,
+) -> Vec<Point> {
+    let mut out = Vec::new();
+    for &scheduler in scheds {
+        for &rate in rates {
+            for seed in 0..seeds {
+                out.push(Point { scheduler, rate, seed });
+            }
+        }
+    }
+    out
+}
+
+fn point_cfg(base: &SimConfig, p: &Point) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.scheduler = p.scheduler.into();
+    cfg.injection_rate_per_ms = p.rate;
+    cfg.seed = p.seed;
+    cfg
+}
+
+/// One measured grid pass, fresh-build-per-point.
+fn pass_fresh(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    points: &[Point],
+) -> usize {
+    let mut completed = 0usize;
+    for p in points {
+        let cfg = point_cfg(base, p);
+        let r = Simulation::build(platform, apps, &cfg).unwrap().run();
+        completed += r.completed_jobs;
+    }
+    completed
+}
+
+/// One measured grid pass through a single reused worker.
+fn pass_pooled(
+    setup: &SimSetup,
+    base: &SimConfig,
+    points: &[Point],
+) -> usize {
+    let mut slot: Option<SimWorker> = None;
+    let mut completed = 0usize;
+    for p in points {
+        let cfg = point_cfg(base, p);
+        let w = SimWorker::obtain(&mut slot, setup, &cfg).unwrap();
+        completed += w.run(setup).completed_jobs;
+    }
+    completed
+}
+
+struct GridResult {
+    name: String,
+    points: usize,
+    sims_per_s: f64,
+    median_s: f64,
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let write_baseline =
+        std::env::args().any(|a| a == "--write-baseline");
+    let platform = Platform::table2_soc();
+    // Multi-app mix: setup cost (exec tables, templates, validation)
+    // scales with the workload, exactly like DSE/IL grids.
+    let apps = vec![
+        suite::wifi_tx(WifiParams { symbols: 2 }),
+        suite::single_carrier_tx(),
+        suite::range_detection(RadarParams { pulses: 2 }),
+    ];
+    let mut results: Vec<GridResult> = Vec::new();
+
+    // --- probe grid: tiny sims, setup-dominated --------------------
+    // One job per point: the limiting regime of DSE/IL policy probes,
+    // where per-point setup (exec tables, NoC, RC, buffers) rivals the
+    // simulated work itself.
+    let seeds = if smoke { 80 } else { 300 };
+    let probe = grid(&["etf", "met", "heft", "rr"], &[8.0], seeds);
+    let mut probe_cfg = SimConfig::default();
+    probe_cfg.max_jobs = 1;
+    probe_cfg.warmup_jobs = 0;
+    let (warm, runs) = if smoke { (1, 3) } else { (1, 5) };
+
+    println!(
+        "=== probe grid: {} points x {} jobs (median of {runs}{}) ===",
+        probe.len(),
+        probe_cfg.max_jobs,
+        if smoke { ", smoke mode" } else { "" }
+    );
+    let (fresh_jobs, fresh_st) = bench_util::bench_median(
+        &format!("fresh build per point ({} pts)", probe.len()),
+        warm,
+        runs,
+        || pass_fresh(&platform, &apps, &probe_cfg, &probe),
+    );
+    let setup = SimSetup::new(&platform, &apps, &probe_cfg).unwrap();
+    let (pooled_jobs, pooled_st) = bench_util::bench_median(
+        &format!("pooled SimWorker ({} pts)", probe.len()),
+        warm,
+        runs,
+        || pass_pooled(&setup, &probe_cfg, &probe),
+    );
+    assert_eq!(
+        fresh_jobs, pooled_jobs,
+        "pooled pass diverged from fresh pass (jobs completed)"
+    );
+    let fresh_sps = probe.len() as f64 / fresh_st.median_s;
+    let pooled_sps = probe.len() as f64 / pooled_st.median_s;
+    let speedup = pooled_sps / fresh_sps;
+    println!(
+        "{:>48} {fresh_sps:>10.0} sims/s fresh | {pooled_sps:>10.0} \
+         sims/s pooled | {speedup:.2}x speedup\n",
+        ""
+    );
+    results.push(GridResult {
+        name: "probe-fresh".into(),
+        points: probe.len(),
+        sims_per_s: fresh_sps,
+        median_s: fresh_st.median_s,
+    });
+    results.push(GridResult {
+        name: "probe-pooled".into(),
+        points: probe.len(),
+        sims_per_s: pooled_sps,
+        median_s: pooled_st.median_s,
+    });
+
+    // --- throughput grid: longer runs, end-to-end sweep speed ------
+    let jobs = if smoke { 120 } else { 400 };
+    let tput = grid(&["etf", "met"], &[6.0, 9.0], 2);
+    let mut tput_cfg = SimConfig::default();
+    tput_cfg.max_jobs = jobs;
+    tput_cfg.warmup_jobs = jobs / 20;
+    println!(
+        "=== throughput grid: {} points x {jobs} jobs ===",
+        tput.len()
+    );
+    let tsetup = SimSetup::new(&platform, &apps, &tput_cfg).unwrap();
+    let (_, tput_st) = bench_util::bench_median(
+        &format!("pooled SimWorker ({} pts)", tput.len()),
+        warm,
+        runs,
+        || pass_pooled(&tsetup, &tput_cfg, &tput),
+    );
+    let tput_sps = tput.len() as f64 / tput_st.median_s;
+    println!("{:>48} {tput_sps:>10.2} sims/s pooled\n", "");
+    results.push(GridResult {
+        name: "throughput-pooled".into(),
+        points: tput.len(),
+        sims_per_s: tput_sps,
+        median_s: tput_st.median_s,
+    });
+
+    write_json(&results, speedup, smoke, write_baseline);
+    if !write_baseline {
+        // (In --write-baseline mode the file was just overwritten with
+        // this run — comparing against it would be vacuous.)
+        check_baseline(&results, smoke);
+    }
+
+    // The acceptance gate: reused workers must beat fresh builds by
+    // ≥ 1.5× on the setup-dominated grid.  Asserted in smoke mode
+    // (CI); printed above either way.
+    if smoke && speedup < 1.5 {
+        eprintln!(
+            "SWEEP REGRESSION: pooled/fresh speedup {speedup:.2}x \
+             < 1.5x required on the probe grid"
+        );
+        std::process::exit(1);
+    }
+}
+
+fn write_json(
+    results: &[GridResult],
+    speedup: f64,
+    smoke: bool,
+    write_baseline: bool,
+) {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut j = Json::obj();
+    j.set("schema", Json::Num(1.0))
+        .set("bench", Json::Str("perf_sweep".into()))
+        .set("smoke", Json::Bool(smoke))
+        .set("unix_time_s", Json::Num(unix_s as f64))
+        .set("probe_speedup_pooled_vs_fresh", Json::Num(speedup))
+        .set(
+            "grids",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|g| {
+                        let mut e = Json::obj();
+                        e.set("name", Json::Str(g.name.clone()))
+                            .set("points", Json::Num(g.points as f64))
+                            .set("sims_per_s", Json::Num(g.sims_per_s))
+                            .set("median_s", Json::Num(g.median_s));
+                        e
+                    })
+                    .collect(),
+            ),
+        );
+    let out = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_sweep.json".into());
+    match std::fs::write(&out, j.to_string_pretty()) {
+        Ok(()) => println!("bench record written to {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+    if write_baseline {
+        let base = std::env::var("BENCH_BASELINE")
+            .unwrap_or_else(|_| "BENCH_sweep_baseline.json".into());
+        match std::fs::write(&base, j.to_string_pretty()) {
+            Ok(()) => println!(
+                "baseline refreshed at {base} — commit it to arm the \
+                 regression gate"
+            ),
+            Err(e) => eprintln!("could not write baseline {base}: {e}"),
+        }
+    }
+}
+
+/// Compare sims/s per grid against a committed baseline (same schema),
+/// exiting non-zero on a >20% regression — mirror of the
+/// `perf_hotpath` gate.  Refuses to compare across smoke/full modes:
+/// the grids run different job counts per sim, so cross-mode sims/s
+/// ratios are meaningless (a smoke run vs a full baseline would never
+/// fire, and the reverse would always fire).
+fn check_baseline(results: &[GridResult], smoke: bool) {
+    let Ok(base_path) = std::env::var("BENCH_BASELINE") else {
+        return;
+    };
+    let base = match Json::parse_file(std::path::Path::new(&base_path)) {
+        Ok(j) => j,
+        Err(e) => {
+            println!(
+                "(no usable baseline at {base_path}: {e} — recording only)"
+            );
+            return;
+        }
+    };
+    let base_smoke = base.get("smoke").and_then(Json::as_bool);
+    if base_smoke != Some(smoke) {
+        println!(
+            "(baseline {base_path} was recorded with smoke={:?}, this \
+             run is smoke={smoke} — modes differ, recording only; \
+             refresh the baseline in the mode the gate runs in)",
+            base_smoke
+        );
+        return;
+    }
+    let Some(grids) = base.get("grids").and_then(Json::as_arr) else {
+        println!("(baseline {base_path} has no 'grids' — skipping)");
+        return;
+    };
+    let mut failures = Vec::new();
+    for bg in grids {
+        let Some(name) = bg.get("name").and_then(Json::as_str) else {
+            continue;
+        };
+        let Some(base_sps) = bg.get("sims_per_s").and_then(Json::as_f64)
+        else {
+            continue;
+        };
+        let Some(cur) = results.iter().find(|g| g.name == name) else {
+            failures.push(format!("grid '{name}' missing from run"));
+            continue;
+        };
+        let ratio = cur.sims_per_s / base_sps;
+        println!(
+            "baseline check [{name}]: {:.1} sims/s vs baseline {:.1} \
+             ({:+.1}%)",
+            cur.sims_per_s,
+            base_sps,
+            (ratio - 1.0) * 100.0
+        );
+        if ratio < 0.80 {
+            failures.push(format!(
+                "grid '{name}' regressed {:.1}% (>20% allowed)",
+                (1.0 - ratio) * 100.0
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        eprintln!("PERF REGRESSION vs {base_path}:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

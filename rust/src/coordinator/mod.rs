@@ -23,18 +23,72 @@ use crate::app::AppGraph;
 use crate::config::SimConfig;
 use crate::platform::Platform;
 use crate::scenario::Scenario;
-use crate::sim::Simulation;
+use crate::sim::{SimSetup, SimWorker, Simulation};
 use crate::stats::{PhaseStats, SimReport};
 use crate::util::plot::Series;
 use crate::{Error, Result};
 
-/// Run `f` over `items` on up to `threads` OS threads, returning results
-/// in input order.  This is the shared fan-out primitive behind
-/// [`run_sweep`], [`run_scenario_sweep`] and the DSE evaluator
-/// ([`crate::dse`]): an atomic work index hands items to workers and
-/// each result lands in its input slot, so the output is independent of
-/// thread interleaving — a parallel run is bit-identical to a serial
-/// one whenever `f` itself is deterministic.
+/// Worker-pool fan-out: run `f` over `items` on up to `threads` OS
+/// threads, returning results in input order.  Each spawned thread
+/// calls `init` exactly once and *pins* the returned state for its
+/// whole lifetime, threading it into every `f` call it executes — the
+/// primitive behind reusable-[`SimWorker`](crate::sim::SimWorker)
+/// grids (`run_sweep`, `run_scenario_sweep`, the DSE evaluator, the
+/// learn pipeline), where the pinned state is an `Option<SimWorker>`
+/// reset per item instead of rebuilt.
+///
+/// Determinism contract: an atomic work index hands items to threads
+/// and each result lands in its input slot, so the output is
+/// independent of thread interleaving — and because a reset worker is
+/// bit-identical to a freshly built one, a 1-thread run is
+/// bit-identical to an 8-thread run whenever `f` itself is a
+/// deterministic function of `(index, item)` (asserted for the whole
+/// stack by `rust/tests/integration_worker.rs`).
+///
+/// The per-thread state needs no `Send`/`Sync`: it is created and
+/// dropped on its owning thread.
+pub fn parallel_map_pooled<T, R, W, I, F>(
+    items: &[T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<Result<R>>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, usize, &T) -> Result<R> + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<Result<R>>>> =
+        Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(&mut state, i, &items[i]);
+                    results.lock().unwrap()[i] = Some(r);
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("all items filled"))
+        .collect()
+}
+
+/// Stateless fan-out over `items` (see [`parallel_map_pooled`] for the
+/// ordering/determinism contract).  Kept for map jobs with no
+/// per-thread state worth pinning.
 pub fn parallel_map<T, R, F>(
     items: &[T],
     threads: usize,
@@ -45,28 +99,7 @@ where
     R: Send,
     F: Fn(usize, &T) -> Result<R> + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<Result<R>>>> =
-        Mutex::new((0..items.len()).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(i, &items[i]);
-                results.lock().unwrap()[i] = Some(r);
-            });
-        }
-    });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("all items filled"))
-        .collect()
+    parallel_map_pooled(items, threads, || (), |_, i, t| f(i, t))
 }
 
 /// Unwrap a [`parallel_map`] result vector, aggregating failures into a
@@ -143,14 +176,24 @@ pub fn run_sweep(
     points: &[SweepPoint],
     threads: usize,
 ) -> Result<Vec<SweepResult>> {
-    let results = parallel_map(points, threads, |_, p| {
-        let mut cfg = base.clone();
-        cfg.scheduler = p.scheduler.clone();
-        cfg.injection_rate_per_ms = p.rate_per_ms;
-        cfg.seed = p.seed;
-        let report = Simulation::build(platform, apps, &cfg)?.run();
-        Ok(SweepResult::from_report(p.clone(), &report))
-    });
+    // One immutable setup for the whole grid; one reusable worker per
+    // pool thread (reset per point — no per-point rebuild).
+    let setup = SimSetup::new(platform, apps, base)?;
+    let setup = &setup;
+    let results = parallel_map_pooled(
+        points,
+        threads,
+        || None::<SimWorker>,
+        |slot, _, p| {
+            let mut cfg = base.clone();
+            cfg.scheduler = p.scheduler.clone();
+            cfg.injection_rate_per_ms = p.rate_per_ms;
+            cfg.seed = p.seed;
+            let worker = SimWorker::obtain(slot, setup, &cfg)?;
+            let report = worker.run(setup);
+            Ok(SweepResult::from_report(p.clone(), report))
+        },
+    );
     collect_results(
         results,
         |i| format!("{}@{}", points[i].scheduler, points[i].rate_per_ms),
@@ -184,23 +227,32 @@ pub fn run_scenario_sweep(
     scenarios: &[Scenario],
     threads: usize,
 ) -> Result<Vec<ScenarioResult>> {
-    let results = parallel_map(scenarios, threads, |_, sc| {
-        let mut cfg = base.clone();
-        cfg.scenario = Some(sc.clone());
-        let r = Simulation::build(platform, apps, &cfg)?.run();
-        let s = r.latency_summary();
-        Ok(ScenarioResult {
-            scenario: sc.name.clone(),
-            avg_latency_us: s.mean,
-            p95_latency_us: s.p95,
-            completed_jobs: r.completed_jobs,
-            injected_jobs: r.injected_jobs,
-            energy_per_job_mj: r.energy_per_job_mj(),
-            avg_power_w: r.avg_power_w,
-            peak_temp_c: r.peak_temp_c,
-            phases: r.phases,
-        })
-    });
+    let setup = SimSetup::new(platform, apps, base)?;
+    let setup = &setup;
+    let results = parallel_map_pooled(
+        scenarios,
+        threads,
+        || None::<SimWorker>,
+        |slot, _, sc| {
+            let mut cfg = base.clone();
+            cfg.scenario = Some(sc.clone());
+            let worker = SimWorker::obtain(slot, setup, &cfg)?;
+            worker.run(setup);
+            let r = worker.take_report();
+            let s = r.latency_summary();
+            Ok(ScenarioResult {
+                scenario: sc.name.clone(),
+                avg_latency_us: s.mean,
+                p95_latency_us: s.p95,
+                completed_jobs: r.completed_jobs,
+                injected_jobs: r.injected_jobs,
+                energy_per_job_mj: r.energy_per_job_mj(),
+                avg_power_w: r.avg_power_w,
+                peak_temp_c: r.peak_temp_c,
+                phases: r.phases,
+            })
+        },
+    );
     collect_results(
         results,
         |i| scenarios[i].name.clone(),
@@ -355,6 +407,67 @@ mod tests {
             .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("item7") && msg.contains("seven"), "{msg}");
+    }
+
+    #[test]
+    fn pooled_map_initializes_once_per_thread_and_reuses_state() {
+        let items: Vec<usize> = (0..32).collect();
+        let out = parallel_map_pooled(
+            &items,
+            4,
+            || 0usize,
+            |count, _, &x| {
+                *count += 1;
+                Ok((x, *count))
+            },
+        );
+        let mut deepest = 0;
+        for (i, r) in out.iter().enumerate() {
+            let (x, nth) = *r.as_ref().unwrap();
+            assert_eq!(x, i, "result out of input order");
+            assert!(nth >= 1);
+            deepest = deepest.max(nth);
+        }
+        // 32 items over ≤ 4 threads: some thread must have processed
+        // ≥ 8 items through its pinned state (pigeonhole) — the state
+        // visibly persisted across items.
+        assert!(deepest >= 8, "state not reused: max depth {deepest}");
+    }
+
+    #[test]
+    fn sweep_worker_reuse_matches_fresh_builds_per_point() {
+        // The pooled run_sweep (workers reset per point) against a
+        // hand-rolled fresh-build-per-point loop: every metric must be
+        // bit-identical, regardless of which thread ran which point.
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let base = small_base();
+        let pts = fig3_points(&["etf", "met", "rr"], &[0.5, 2.0, 6.0], 9);
+        assert_eq!(pts.len(), 9);
+        // 2 threads × 9 points forces several resets per worker.
+        let pooled = run_sweep(&p, &apps, &base, &pts, 2).unwrap();
+        for (r, pt) in pooled.iter().zip(&pts) {
+            let mut cfg = base.clone();
+            cfg.scheduler = pt.scheduler.clone();
+            cfg.injection_rate_per_ms = pt.rate_per_ms;
+            cfg.seed = pt.seed;
+            let fresh = Simulation::build(&p, &apps, &cfg).unwrap().run();
+            let s = fresh.latency_summary();
+            let ctx = format!("{}@{}", pt.scheduler, pt.rate_per_ms);
+            assert_eq!(r.avg_latency_us.to_bits(), s.mean.to_bits(), "{ctx}");
+            assert_eq!(r.p95_latency_us.to_bits(), s.p95.to_bits(), "{ctx}");
+            assert_eq!(r.completed_jobs, fresh.completed_jobs, "{ctx}");
+            assert_eq!(
+                r.energy_per_job_mj.to_bits(),
+                fresh.energy_per_job_mj().to_bits(),
+                "{ctx}"
+            );
+            assert_eq!(
+                r.peak_temp_c.to_bits(),
+                fresh.peak_temp_c.to_bits(),
+                "{ctx}"
+            );
+        }
     }
 
     #[test]

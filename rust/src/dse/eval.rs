@@ -7,10 +7,14 @@
 //! and aggregates the report metrics by arithmetic mean.  Results are
 //! cached keyed by the genome's canonical encoding, so designs the
 //! search revisits — common once the population converges — cost
-//! nothing.  Evaluations are deterministic functions of (genome, config),
-//! which together with [`crate::coordinator::parallel_map`]'s
-//! input-order result placement makes a whole DSE generation
-//! bit-identical across thread counts.
+//! nothing.  Each pool thread pins one reusable
+//! [`crate::sim::SimWorker`]: a genome's whole grid shares one decoded
+//! [`crate::sim::SimSetup`], and the worker's buffers carry across
+//! genomes.  Evaluations are deterministic functions of
+//! (genome, config), which together with
+//! [`crate::coordinator::parallel_map_pooled`]'s input-order result
+//! placement makes a whole DSE generation bit-identical across thread
+//! counts.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -18,9 +22,9 @@ use super::genome::{GenomeSpace, PlatformGenome};
 use super::Objective;
 use crate::app::AppGraph;
 use crate::config::SimConfig;
-use crate::coordinator::parallel_map;
+use crate::coordinator::parallel_map_pooled;
 use crate::scenario::Scenario;
-use crate::sim::Simulation;
+use crate::sim::{SimSetup, SimWorker};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -171,9 +175,16 @@ impl Evaluator {
         self.cache_hits += genomes.len() - uncached.len();
         self.sims_run += uncached.len() * self.runs_per_eval();
 
-        let fresh = parallel_map(&uncached, self.threads, |_, (_, g)| {
-            self.eval_one(space, apps, g)
-        });
+        // One reusable SimWorker per pool thread: its buffers carry
+        // across the whole seeds×scenarios grid of each genome AND
+        // across the genomes the thread evaluates (the worker re-binds
+        // to each genome's decoded-platform setup on reset).
+        let fresh = parallel_map_pooled(
+            &uncached,
+            self.threads,
+            || None::<SimWorker>,
+            |slot, _, entry| self.eval_one(space, apps, &entry.1, slot),
+        );
         for ((key, g), m) in uncached.iter().zip(fresh) {
             match m {
                 Ok(m) => {
@@ -193,14 +204,19 @@ impl Evaluator {
             .collect())
     }
 
-    /// Decode and run the full `seeds × scenarios` grid for one genome.
+    /// Decode and run the full `seeds × scenarios` grid for one genome
+    /// on the calling thread's pinned worker (`slot`) — one setup build
+    /// per genome instead of one per simulation.
     fn eval_one(
         &self,
         space: &GenomeSpace,
         apps: &[AppGraph],
         g: &PlatformGenome,
+        slot: &mut Option<SimWorker>,
     ) -> Result<EvalMetrics> {
         let (platform, cap) = space.decode(g)?;
+        let setup =
+            SimSetup::with_owned_platform(platform, apps, &self.base_cfg)?;
         let mut acc = EvalMetrics {
             avg_latency_us: 0.0,
             p95_latency_us: 0.0,
@@ -233,7 +249,8 @@ impl Evaluator {
                     // even when the base config carries a cap.
                     cfg.dtpm.power_cap_w = cap;
                 }
-                let r = Simulation::build(&platform, apps, &cfg)?.run();
+                let worker = SimWorker::obtain(slot, &setup, &cfg)?;
+                let r = worker.run(&setup);
                 let s = r.latency_summary();
                 // A run with zero (post-warmup) completions would report
                 // 0 latency / 0 energy-per-job and look falsely optimal;

@@ -25,8 +25,10 @@
 //!   [`crate::sched::create`], with an earliest-finish oracle-fallback
 //!   guard bounding how badly a mistrained model can behave.
 //! * [`train`] — the collect → train → eval driver, fanned out over
-//!   [`crate::coordinator::parallel_map`] (bit-identical across thread
-//!   counts) and reporting IL-vs-oracle latency/energy/agreement.
+//!   reusable per-thread simulation workers via
+//!   [`crate::coordinator::parallel_map_pooled`] (bit-identical across
+//!   thread counts because a reset worker is bit-identical to a fresh
+//!   build) and reporting IL-vs-oracle latency/energy/agreement.
 //!
 //! Drive it from the CLI (`ds3r learn collect|train|eval`), the library
 //! API ([`train::train_policy`] / [`train::evaluate`]), or

@@ -2,7 +2,8 @@
 //!
 //! * [`collect_round`] — run the simulation grid (`seeds ×
 //!   rates`) with a recording [`Collector`] wrapped around the oracle,
-//!   fanned out over OS threads via [`crate::coordinator::parallel_map`].
+//!   fanned out over reusable per-thread simulation workers via
+//!   [`crate::coordinator::parallel_map_pooled`].
 //!   Results aggregate in input order, so a parallel collection is
 //!   **bit-identical** to a serial one.
 //! * [`train_policy`] — DAgger loop: round 0 clones the oracle's
@@ -15,10 +16,10 @@
 use std::rc::Rc;
 
 use crate::app::AppGraph;
-use crate::coordinator::parallel_map;
+use crate::coordinator::parallel_map_pooled;
 use crate::platform::Platform;
 use crate::sched::{self, SchedBuild};
-use crate::sim::Simulation;
+use crate::sim::{SimSetup, SimWorker};
 use crate::{Error, Result};
 
 use super::dataset::{Collector, Dataset};
@@ -63,37 +64,45 @@ fn run_grid(
     max_samples: usize,
 ) -> Result<(Dataset, u64, u64)> {
     let pts = grid(lc);
-    let results = parallel_map(&pts, lc.eval_threads(), |_, &(seed, rate)| {
-        let mut cfg = lc.sim.clone();
-        cfg.scheduler = lc.oracle.clone();
-        cfg.seed = seed;
-        cfg.injection_rate_per_ms = rate;
-        let build = SchedBuild {
-            platform,
-            apps,
-            seed,
-            artifacts_dir: cfg.artifacts_dir.clone(),
-            policy_path: cfg.il_policy.clone(),
-        };
-        let oracle = sched::create(&lc.oracle, &build)?;
-        let (collector, shared) =
-            Collector::new(oracle, policy.cloned(), max_samples);
-        Simulation::build_with_scheduler(
-            platform,
-            apps,
-            &cfg,
-            Box::new(collector),
-        )?
-        .run();
-        // The simulation dropped its scheduler (and with it the other
-        // Rc handle) when `run` consumed it.
-        let c = Rc::try_unwrap(shared)
-            .map_err(|_| {
-                Error::Sim("collector leaked its sample buffer".into())
-            })?
-            .into_inner();
-        Ok((c.data, c.policy_decisions, c.policy_matches))
-    });
+    let setup = SimSetup::new(platform, apps, &lc.sim)?;
+    let setup = &setup;
+    let results = parallel_map_pooled(
+        &pts,
+        lc.eval_threads(),
+        || None::<SimWorker>,
+        |slot, _, &(seed, rate)| {
+            let mut cfg = lc.sim.clone();
+            cfg.scheduler = lc.oracle.clone();
+            cfg.seed = seed;
+            cfg.injection_rate_per_ms = rate;
+            let build = SchedBuild {
+                platform,
+                apps,
+                seed,
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                policy_path: cfg.il_policy.clone(),
+            };
+            let oracle = sched::create(&lc.oracle, &build)?;
+            let (collector, shared) =
+                Collector::new(oracle, policy.cloned(), max_samples);
+            let worker = SimWorker::obtain_with_scheduler(
+                slot,
+                setup,
+                &cfg,
+                Box::new(collector),
+            )?;
+            worker.run(setup);
+            // Drop the worker's scheduler handle so the collector's
+            // shared sample buffer has exactly one owner left.
+            drop(worker.take_scheduler());
+            let c = Rc::try_unwrap(shared)
+                .map_err(|_| {
+                    Error::Sim("collector leaked its sample buffer".into())
+                })?
+                .into_inner();
+            Ok((c.data, c.policy_decisions, c.policy_matches))
+        },
+    );
     let mut data = Dataset::default();
     data.oracle = lc.oracle.clone();
     let (mut dec, mut mat) = (0u64, 0u64);
@@ -232,33 +241,40 @@ pub fn evaluate(
             points.push((s.clone(), seed, rate));
         }
     }
-    let results = parallel_map(&points, lc.eval_threads(), |_, p| {
-        let (sname, seed, rate) = (&p.0, p.1, p.2);
-        let mut cfg = lc.sim.clone();
-        cfg.scheduler = sname.clone();
-        cfg.seed = seed;
-        cfg.injection_rate_per_ms = rate;
-        let report = if sname == "il" {
-            // Evaluate the in-memory model, not a disk artifact.
-            Simulation::build_with_scheduler(
-                platform,
-                apps,
-                &cfg,
-                Box::new(IlSched::new(model.clone())),
-            )?
-            .run()
-        } else {
-            Simulation::build(platform, apps, &cfg)?.run()
-        };
-        Ok((
-            report.avg_job_latency_us(),
-            report.energy_per_job_mj(),
-            report.completed_jobs,
-            report.injected_jobs,
-            report.sched_decisions,
-            report.sched_fallbacks,
-        ))
-    });
+    let setup = SimSetup::new(platform, apps, &lc.sim)?;
+    let setup = &setup;
+    let results = parallel_map_pooled(
+        &points,
+        lc.eval_threads(),
+        || None::<SimWorker>,
+        |slot, _, p| {
+            let (sname, seed, rate) = (&p.0, p.1, p.2);
+            let mut cfg = lc.sim.clone();
+            cfg.scheduler = sname.clone();
+            cfg.seed = seed;
+            cfg.injection_rate_per_ms = rate;
+            let worker = if sname == "il" {
+                // Evaluate the in-memory model, not a disk artifact.
+                SimWorker::obtain_with_scheduler(
+                    slot,
+                    setup,
+                    &cfg,
+                    Box::new(IlSched::new(model.clone())),
+                )?
+            } else {
+                SimWorker::obtain(slot, setup, &cfg)?
+            };
+            let report = worker.run(setup);
+            Ok((
+                report.avg_job_latency_us(),
+                report.energy_per_job_mj(),
+                report.completed_jobs,
+                report.injected_jobs,
+                report.sched_decisions,
+                report.sched_fallbacks,
+            ))
+        },
+    );
     let mut vals = Vec::with_capacity(points.len());
     for (i, r) in results.into_iter().enumerate() {
         vals.push(r.map_err(|e| {

@@ -90,7 +90,7 @@ pub mod prelude {
     pub use crate::platform::{PeType, Platform};
     pub use crate::scenario::Scenario;
     pub use crate::sched::Scheduler;
-    pub use crate::sim::{SimReport, Simulation};
+    pub use crate::sim::{SimReport, SimSetup, SimWorker, Simulation};
 }
 
 /// Crate-wide error type (hand-rolled: the offline build has no

@@ -50,18 +50,19 @@ impl NocModel {
                 hops[a * n + b] = platform.hops(a, b) as u8;
             }
         }
-        NocModel {
+        let mut m = NocModel {
             hop_latency_us: platform.noc.hop_latency_us,
             link_bandwidth: platform.noc.link_bandwidth,
             mem_latency_us: platform.noc.mem_latency_us,
             hops,
             n_pes: n,
-            congestion: model_congestion.then(|| CongestionState {
-                ema_flows: 0.0,
-                active_flows: 0,
-                alpha: 0.15,
-            }),
-        }
+            congestion: None,
+        };
+        // Single source of truth for the fresh congestion state — the
+        // worker-reset path's `set_congestion(true)` must stay
+        // bit-identical to `NocModel::new(p, true)`.
+        m.set_congestion(model_congestion);
+        m
     }
 
     #[inline]
@@ -85,6 +86,17 @@ impl NocModel {
             }
             None => base,
         }
+    }
+
+    /// Enable or disable congestion modelling, resetting its state to
+    /// the fresh-model values either way.  Reused simulation workers
+    /// flip this per run instead of rebuilding the hop table.
+    pub fn set_congestion(&mut self, model_congestion: bool) {
+        self.congestion = model_congestion.then(|| CongestionState {
+            ema_flows: 0.0,
+            active_flows: 0,
+            alpha: 0.15,
+        });
     }
 
     /// Record the start/end of a transfer (congestion tracking).  The
@@ -256,6 +268,30 @@ mod tests {
         let r2 = Simulation::build(&p, &apps, &cfg).unwrap().run();
         assert_eq!(r1.job_latencies_us, r2.job_latencies_us);
         assert_eq!(r1.total_energy_j, r2.total_energy_j);
+    }
+
+    #[test]
+    fn set_congestion_resets_state_like_a_fresh_model() {
+        let p = Platform::table2_soc();
+        let mut m = NocModel::new(&p, true);
+        let quiet = m.transfer_us(0, 5, 1024);
+        for _ in 0..100 {
+            m.flow_started();
+        }
+        assert!(m.transfer_us(0, 5, 1024) > quiet);
+        // Re-enabling clears the EMA/active-flow state exactly like
+        // `NocModel::new(&p, true)` — reused workers rely on this.
+        m.set_congestion(true);
+        assert_eq!(m.transfer_us(0, 5, 1024), quiet);
+        assert!(m.models_congestion());
+        // Disabling matches the contention-free model.
+        m.set_congestion(false);
+        assert!(!m.models_congestion());
+        let reference = NocModel::new(&p, false);
+        assert_eq!(
+            m.transfer_us(0, 9, 2048),
+            reference.transfer_us(0, 9, 2048)
+        );
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub fn p_leakage(class: &PeClass, volt: f64, t_c: f64) -> f64 {
 }
 
 /// Per-epoch energy bookkeeping for the whole platform.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct EnergyMeter {
     /// Joules accumulated per PE.
     pub energy_j: Vec<f64>,
@@ -45,6 +45,16 @@ impl EnergyMeter {
             busy_us: vec![0.0; n_pes],
             elapsed_us: 0.0,
         }
+    }
+
+    /// Rewind to the fresh `new(n_pes)` state, reusing the per-PE
+    /// buffers (the simulation worker's reset path).
+    pub fn reset(&mut self, n_pes: usize) {
+        self.energy_j.clear();
+        self.energy_j.resize(n_pes, 0.0);
+        self.busy_us.clear();
+        self.busy_us.resize(n_pes, 0.0);
+        self.elapsed_us = 0.0;
     }
 
     /// Integrate one epoch: `powers[pe]` in W over `dt_us` microseconds.

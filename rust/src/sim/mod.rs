@@ -6,7 +6,23 @@
 //! kernel updates the state of the simulation, which is used in
 //! subsequent decision epochs" (paper §2).
 //!
-//! [`Simulation`] wires together every subsystem: the job generator
+//! The engine is split for batched grid evaluation:
+//!
+//! * [`SimSetup`] — immutable shared setup derived from
+//!   `(platform, apps)`: exec tables, NoC topology, RC model, arrival
+//!   templates.  Built once per grid, shared by every worker.
+//! * [`SimWorker`] — the event-loop engine owning all per-run mutable
+//!   state.  A worker is *reusable*: [`SimWorker::reset`] rewinds it
+//!   for the next grid point without freeing its buffers, so
+//!   steady-state grid evaluation stops allocating after warmup.
+//!   Reset is bit-identical to a fresh build by construction (one
+//!   shared constructor, `fresh`, serves both paths) and by test
+//!   (`rust/tests/integration_worker.rs`, `prop_invariants.rs`).
+//! * [`Simulation`] — the classic one-shot facade: build, run once,
+//!   take the report.  It wires a private setup to a private worker
+//!   and is what single runs and the existing examples use.
+//!
+//! The worker wires together every subsystem: the job generator
 //! injects DAG instances; ready tasks are handed to the pluggable
 //! [`crate::sched::Scheduler`] at every decision epoch; task execution
 //! uses the profile database scaled by the cluster's DVFS state; NoC
@@ -15,6 +31,9 @@
 //! (natively or through the AOT PJRT artifact).
 
 pub mod queue;
+pub mod setup;
+
+pub use setup::SimSetup;
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -34,7 +53,6 @@ use crate::scenario::{Action, CompiledEvent};
 use crate::sched::{
     Assignment, PeSnapshot, ReadyTask, SchedBuild, SchedContext, Scheduler,
 };
-use crate::sched::ilp::ExecTable;
 use crate::stats::{EpochTrace, GanttEntry, PhaseStats};
 use crate::thermal::RcModel;
 use crate::{Error, Result};
@@ -44,6 +62,11 @@ use queue::{Event, EventQueue};
 /// early is always valid (the replay is exact), so this only bounds
 /// memory — at 10 ms epochs it is ~10 s of simulated time per flush.
 const MAX_PENDING_EPOCHS: usize = 1024;
+
+/// Cap on the free-list of recycled per-job task buffers (`job_pool`).
+/// Bounds worker memory on unbounded runs; reached only when > this
+/// many jobs are ever concurrently live.
+const JOB_POOL_CAP: usize = 1024;
 
 /// Runtime state of one job instance.
 #[derive(Debug)]
@@ -101,6 +124,18 @@ impl PeState {
         };
         base.max(now) + self.pending_est_us
     }
+
+    /// Rewind to the fresh-build state, keeping the queue's allocation.
+    fn reset(&mut self) {
+        self.queue.clear();
+        self.pending_est_us = 0.0;
+        self.running = None;
+        self.run_start_us = 0.0;
+        self.busy_until_us = 0.0;
+        self.accounted_us = 0.0;
+        self.epoch_busy_us = 0.0;
+        self.total_busy_us = 0.0;
+    }
 }
 
 /// Recyclable per-task buffers of one job.  Completed jobs hand their
@@ -120,7 +155,7 @@ struct JobBufs {
 /// force) and replays them — in order, with arithmetic identical to the
 /// eager path — at the next observation point: a DTPM epoch a policy or
 /// trace observes, a scenario phase boundary, an ambient or power-cap
-/// change, or finalize.  See [`Simulation::flush_thermal`].
+/// change, or finalize.  See `SimWorker::flush_thermal`.
 #[derive(Debug, Default)]
 struct EpochSeg {
     dt_us: f64,
@@ -132,13 +167,52 @@ struct EpochSeg {
     opp_idx: Vec<usize>,
 }
 
-/// A fully wired simulation, ready to [`run`](Simulation::run).
-pub struct Simulation<'a> {
-    platform: &'a Platform,
-    apps: &'a [AppGraph],
+/// The recyclable buffers a [`SimWorker`] hands back to `fresh` on
+/// reset: the worker is rebuilt through the *same* constructor as a
+/// fresh build — bit-identity by construction — but every heap
+/// allocation survives, so steady-state grid evaluation allocates
+/// (almost) nothing per point.
+#[derive(Default)]
+struct SimSpares {
+    events: EventQueue,
+    jobs: Vec<Job>,
+    job_pool: Vec<JobBufs>,
+    pes: Vec<PeState>,
+    pe_available: Vec<bool>,
+    ready: VecDeque<ReadyTask>,
+    cluster_opp_idx: Vec<usize>,
+    cluster_mhz: Vec<f64>,
+    dvfs_clusters: Vec<usize>,
+    theta: Vec<f64>,
+    theta_scratch: Vec<f64>,
+    energy: EnergyMeter,
+    ready_scratch: Vec<ReadyTask>,
+    snap_scratch: Vec<PeSnapshot>,
+    assigned_scratch: Vec<(usize, usize)>,
+    kept_scratch: Vec<ReadyTask>,
+    pending: Vec<EpochSeg>,
+    seg_pool: Vec<EpochSeg>,
+    util_scratch: Vec<f64>,
+    busy_scratch: Vec<f64>,
+    power_scratch: Vec<f64>,
+    t_pe_scratch: Vec<f64>,
+    opps_scratch: Vec<Opp>,
+    phase_lats: Vec<f64>,
+    report: SimReport,
+}
+
+/// A reusable simulation engine: all per-run mutable state for one
+/// grid point, built against a shared [`SimSetup`].
+///
+/// Lifecycle: [`build`](SimWorker::build) →
+/// [`run`](SimWorker::run) → [`reset`](SimWorker::reset) →
+/// `run` → … — the worker owns no borrow of the setup, so one worker
+/// can even be re-targeted at a *different* setup (the DSE evaluator
+/// reuses workers across genomes this way); its buffers re-size and
+/// carry over.  A reused worker is bit-identical to a fresh build.
+pub struct SimWorker {
     cfg: SimConfig,
 
-    exec_tables: Vec<ExecTable>,
     noc: NocModel,
     rc: RcModel,
     scheduler: Box<dyn Scheduler>,
@@ -175,17 +249,10 @@ pub struct Simulation<'a> {
     last_epoch_power_w: f64,
     jitter_rng: Rng,
 
-    // --- hot-path caches & scratch (golden-trace-guarded overhaul) ---
-    /// Per-PE cluster index (flattened from the platform).
-    pe_cluster: Vec<usize>,
-    /// Per-PE class nominal frequency (MHz).
-    pe_nominal_mhz: Vec<f64>,
+    // --- hot-path caches & scratch (golden-trace-guarded overhaul;
+    // the platform-derived immutable caches live in `SimSetup`) ---
     /// Current frequency (MHz) per cluster; mirrors `cluster_opp_idx`.
     cluster_mhz: Vec<f64>,
-    /// Initial per-task predecessor counts per app (arrival template).
-    app_pred_template: Vec<Vec<u16>>,
-    /// Source-task indices per app.
-    app_sources: Vec<Vec<usize>>,
     /// Free-list of per-task buffers reclaimed from completed jobs.
     job_pool: Vec<JobBufs>,
     /// Scratch buffers reused across scheduler invocations.
@@ -215,56 +282,145 @@ pub struct Simulation<'a> {
     phase_lats: Vec<f64>,
     phase_energy0_j: f64,
     phase_peak_temp_c: f64,
+
+    /// Set by `run`; cleared by `reset` — guards against re-running a
+    /// finished worker without rewinding it first.
+    ran: bool,
 }
 
-impl<'a> Simulation<'a> {
-    /// Build a simulation for `platform` running the `apps` workload mix.
-    pub fn build(
-        platform: &'a Platform,
-        apps: &'a [AppGraph],
-        cfg: &SimConfig,
-    ) -> Result<Simulation<'a>> {
-        Self::build_inner(platform, apps, cfg, None)
+impl SimWorker {
+    /// Build a worker against `setup` for one run of `cfg`.
+    pub fn build(setup: &SimSetup, cfg: &SimConfig) -> Result<SimWorker> {
+        Self::fresh(setup, cfg, None, SimSpares::default())
     }
 
     /// Build with a user-supplied scheduler instead of resolving
     /// `cfg.scheduler` through the registry — the plug-and-play hook
     /// (`examples/custom_scheduler.rs`).
     pub fn build_with_scheduler(
-        platform: &'a Platform,
-        apps: &'a [AppGraph],
+        setup: &SimSetup,
         cfg: &SimConfig,
         scheduler: Box<dyn Scheduler>,
-    ) -> Result<Simulation<'a>> {
-        Self::build_inner(platform, apps, cfg, Some(scheduler))
+    ) -> Result<SimWorker> {
+        Self::fresh(setup, cfg, Some(scheduler), SimSpares::default())
     }
 
-    fn build_inner(
-        platform: &'a Platform,
-        apps: &'a [AppGraph],
+    /// Rewind this worker for another run of `cfg` against `setup`
+    /// (the same setup, or a different one — buffers re-size).  The
+    /// rewound worker is bit-identical to a freshly built one: both go
+    /// through the same constructor; reset only recycles allocations.
+    ///
+    /// On error the worker is left hollow (its buffers recycled but
+    /// unconfigured); a later successful `reset` fully recovers it.
+    pub fn reset(
+        &mut self,
+        setup: &SimSetup,
+        cfg: &SimConfig,
+    ) -> Result<()> {
+        self.reset_inner(setup, cfg, None)
+    }
+
+    /// [`reset`](SimWorker::reset) with a user-supplied scheduler
+    /// (the pooled counterpart of `build_with_scheduler`).
+    pub fn reset_with_scheduler(
+        &mut self,
+        setup: &SimSetup,
+        cfg: &SimConfig,
+        scheduler: Box<dyn Scheduler>,
+    ) -> Result<()> {
+        self.reset_inner(setup, cfg, Some(scheduler))
+    }
+
+    fn reset_inner(
+        &mut self,
+        setup: &SimSetup,
         cfg: &SimConfig,
         scheduler_override: Option<Box<dyn Scheduler>>,
-    ) -> Result<Simulation<'a>> {
-        cfg.validate()?;
-        if apps.is_empty() {
-            return Err(Error::Sim("no applications in workload".into()));
+    ) -> Result<()> {
+        let spares = self.take_spares();
+        *self = Self::fresh(setup, cfg, scheduler_override, spares)?;
+        Ok(())
+    }
+
+    /// Fetch the thread-pinned worker out of `slot`, building it on
+    /// first use and resetting it on every later one — the idiom every
+    /// pooled grid loop (`run_sweep`, the DSE evaluator, the learn
+    /// pipeline) uses inside
+    /// [`crate::coordinator::parallel_map_pooled`].
+    pub fn obtain<'w>(
+        slot: &'w mut Option<SimWorker>,
+        setup: &SimSetup,
+        cfg: &SimConfig,
+    ) -> Result<&'w mut SimWorker> {
+        match slot {
+            Some(w) => w.reset(setup, cfg)?,
+            None => *slot = Some(SimWorker::build(setup, cfg)?),
         }
-        // Every app must be runnable on this platform.
-        for app in apps {
-            for task in &app.tasks {
-                let supported = platform
-                    .classes
-                    .iter()
-                    .any(|c| task.exec_us.contains_key(&c.name));
-                if !supported {
-                    return Err(Error::Sim(format!(
-                        "task '{}' of app '{}' runs on no PE class of \
-                         platform '{}'",
-                        task.name, app.name, platform.name
-                    )));
-                }
+        Ok(slot.as_mut().expect("worker installed above"))
+    }
+
+    /// [`obtain`](SimWorker::obtain) with a user-supplied scheduler.
+    pub fn obtain_with_scheduler<'w>(
+        slot: &'w mut Option<SimWorker>,
+        setup: &SimSetup,
+        cfg: &SimConfig,
+        scheduler: Box<dyn Scheduler>,
+    ) -> Result<&'w mut SimWorker> {
+        match slot {
+            Some(w) => w.reset_with_scheduler(setup, cfg, scheduler)?,
+            None => {
+                *slot = Some(SimWorker::build_with_scheduler(
+                    setup, cfg, scheduler,
+                )?)
             }
         }
+        Ok(slot.as_mut().expect("worker installed above"))
+    }
+
+    /// Move every recyclable buffer out, leaving the worker hollow.
+    fn take_spares(&mut self) -> SimSpares {
+        SimSpares {
+            events: std::mem::take(&mut self.events),
+            jobs: std::mem::take(&mut self.jobs),
+            job_pool: std::mem::take(&mut self.job_pool),
+            pes: std::mem::take(&mut self.pes),
+            pe_available: std::mem::take(&mut self.pe_available),
+            ready: std::mem::take(&mut self.ready),
+            cluster_opp_idx: std::mem::take(&mut self.cluster_opp_idx),
+            cluster_mhz: std::mem::take(&mut self.cluster_mhz),
+            dvfs_clusters: std::mem::take(&mut self.dvfs_clusters),
+            theta: std::mem::take(&mut self.theta),
+            theta_scratch: std::mem::take(&mut self.theta_scratch),
+            energy: std::mem::take(&mut self.energy),
+            ready_scratch: std::mem::take(&mut self.ready_scratch),
+            snap_scratch: std::mem::take(&mut self.snap_scratch),
+            assigned_scratch: std::mem::take(&mut self.assigned_scratch),
+            kept_scratch: std::mem::take(&mut self.kept_scratch),
+            pending: std::mem::take(&mut self.pending),
+            seg_pool: std::mem::take(&mut self.seg_pool),
+            util_scratch: std::mem::take(&mut self.util_scratch),
+            busy_scratch: std::mem::take(&mut self.busy_scratch),
+            power_scratch: std::mem::take(&mut self.power_scratch),
+            t_pe_scratch: std::mem::take(&mut self.t_pe_scratch),
+            opps_scratch: std::mem::take(&mut self.opps_scratch),
+            phase_lats: std::mem::take(&mut self.phase_lats),
+            report: std::mem::take(&mut self.report),
+        }
+    }
+
+    /// The one constructor behind both `build` (empty spares) and
+    /// `reset` (recycled spares).  Per-run state depends only on
+    /// `(setup, cfg)`; the spares contribute capacity, never values —
+    /// which is what makes reset bit-identical to a fresh build.
+    fn fresh(
+        setup: &SimSetup,
+        cfg: &SimConfig,
+        scheduler_override: Option<Box<dyn Scheduler>>,
+        mut spares: SimSpares,
+    ) -> Result<SimWorker> {
+        cfg.validate()?;
+        let platform = setup.platform();
+        let apps = setup.apps();
 
         let scheduler = match scheduler_override {
             Some(s) => s,
@@ -308,7 +464,14 @@ impl<'a> Simulation<'a> {
             None => Vec::new(),
         };
         let governor = dtpm::create_governor(&cfg.dtpm)?;
-        let rc = RcModel::new(platform, cfg.dtpm.epoch_us);
+        // RC model: clone the setup's template when this run's DTPM
+        // epoch matches the one it was discretized at (the common case
+        // across a grid); a differing epoch forces an eager rebuild.
+        let rc = if setup.rc_template.dt_us == cfg.dtpm.epoch_us {
+            setup.rc_template.clone()
+        } else {
+            RcModel::new(platform, cfg.dtpm.epoch_us)
+        };
 
         let explore_requested = cfg.dtpm.governor == "explore-xla";
         let dtpm_xla = if cfg.use_xla_thermal || explore_requested {
@@ -331,8 +494,6 @@ impl<'a> Simulation<'a> {
             None
         };
 
-        let exec_tables =
-            apps.iter().map(|a| ExecTable::new(a, platform)).collect();
         let jobgen = match &cfg.trace_file {
             Some(path) => {
                 let j = crate::util::json::Json::parse_file(path)?;
@@ -350,25 +511,28 @@ impl<'a> Simulation<'a> {
         };
         // The explore-xla governor spans the first two DVFS-capable
         // clusters (big + LITTLE on the Table-2 SoC).
-        let dvfs_clusters: Vec<usize> = platform
-            .clusters
-            .iter()
-            .filter(|c| platform.classes[c.class].opps.len() > 1)
-            .map(|c| c.id)
-            .take(2)
-            .collect();
+        spares.dvfs_clusters.clear();
+        spares.dvfs_clusters.extend(
+            platform
+                .clusters
+                .iter()
+                .filter(|c| platform.classes[c.class].opps.len() > 1)
+                .map(|c| c.id)
+                .take(2),
+        );
         let explore = if explore_requested {
-            if dvfs_clusters.is_empty() {
+            if spares.dvfs_clusters.is_empty() {
                 return Err(Error::Config(
                     "explore-xla governor needs a DVFS-capable cluster"
                         .into(),
                 ));
             }
             let n_big = platform.classes
-                [platform.clusters[dvfs_clusters[0]].class]
+                [platform.clusters[spares.dvfs_clusters[0]].class]
                 .opps
                 .len();
-            let n_little = dvfs_clusters
+            let n_little = spares
+                .dvfs_clusters
                 .get(1)
                 .map(|&c| platform.classes[platform.clusters[c].class].opps.len())
                 .unwrap_or(1);
@@ -378,60 +542,110 @@ impl<'a> Simulation<'a> {
         };
 
         // Governors start at max frequency (Linux boot default).
-        let cluster_opp_idx: Vec<usize> = platform
-            .clusters
-            .iter()
-            .map(|c| platform.classes[c.class].opps.len() - 1)
-            .collect();
+        spares.cluster_opp_idx.clear();
+        spares.cluster_opp_idx.extend(
+            platform
+                .clusters
+                .iter()
+                .map(|c| platform.classes[c.class].opps.len() - 1),
+        );
+        spares.cluster_mhz.clear();
+        {
+            let opp_idx = &spares.cluster_opp_idx;
+            spares.cluster_mhz.extend(
+                platform.clusters.iter().enumerate().map(|(c, cl)| {
+                    platform.classes[cl.class].opps[opp_idx[c]].freq_mhz
+                }),
+            );
+        }
 
-        // Hot-path caches: flatten the PE→cluster→class→OPP indirection
-        // chains consulted on every `exec_us` probe, and precompute the
-        // per-app arrival templates so job injection stops allocating.
-        let pe_cluster: Vec<usize> =
-            platform.pes.iter().map(|pe| pe.cluster).collect();
-        let pe_nominal_mhz: Vec<f64> = platform
-            .pes
-            .iter()
-            .map(|pe| platform.classes[pe.class].nominal_mhz)
-            .collect();
-        let cluster_mhz: Vec<f64> = platform
-            .clusters
-            .iter()
-            .enumerate()
-            .map(|(c, cl)| {
-                platform.classes[cl.class].opps[cluster_opp_idx[c]].freq_mhz
-            })
-            .collect();
-        let app_pred_template: Vec<Vec<u16>> = apps
-            .iter()
-            .map(|a| {
-                a.tasks.iter().map(|t| t.preds.len() as u16).collect()
-            })
-            .collect();
-        let app_sources: Vec<Vec<usize>> =
-            apps.iter().map(|a| a.sources()).collect();
+        // NoC: the hop table comes precomputed from the setup; only the
+        // congestion mode is per-run.
+        let mut noc = setup.noc_template.clone();
+        noc.set_congestion(cfg.noc_congestion);
 
         let n_nodes = platform.floorplan.len();
-        let mut report = SimReport::default();
+        let n_pes = platform.n_pes();
+
+        let mut report = spares.report.recycle();
         report.scheduler = scheduler.name().to_string();
         report.injection_rate_per_ms = cfg.injection_rate_per_ms;
         report.seed = cfg.seed;
-        report.per_app_latencies_us = vec![Vec::new(); apps.len()];
+        report.per_app_latencies_us.resize(apps.len(), Vec::new());
         if let Some(sc) = &cfg.scenario {
             report.scenario = sc.name.clone();
         }
 
-        Ok(Simulation {
-            platform,
-            apps,
+        // Right-size the event heap from the run's shape: the queue
+        // holds at most one pending arrival, one DTPM epoch, one
+        // in-flight finish per PE, and the (up-front) scenario
+        // timeline.  `EventQueue::peak_len` plus the capacity
+        // regression test in `sim::tests` pin this bound.
+        let ev_cap = (timeline.len() + n_pes + 64).clamp(256, 65_536);
+        spares.events.reset(ev_cap);
+
+        // Job-table capacity from the offered load: `max_jobs` when
+        // bounded, else the expected arrivals over the simulated-time
+        // wall at the configured rate (+25% headroom).
+        let expect_jobs = if cfg.max_jobs > 0 {
+            cfg.max_jobs
+        } else {
+            (cfg.max_sim_us / 1000.0 * cfg.injection_rate_per_ms * 1.25)
+                as usize
+        };
+        let jobs_cap = expect_jobs.clamp(16, 65_536);
+        // Reclaim the per-task buffers of jobs the previous run left
+        // behind (incomplete jobs of saturated/aborted runs — completed
+        // jobs donated theirs at completion) before clearing the table.
+        for job in spares.jobs.drain(..) {
+            if spares.job_pool.len() >= JOB_POOL_CAP {
+                break;
+            }
+            if job.finish_us.capacity() > 0 {
+                spares.job_pool.push(JobBufs {
+                    pred_remaining: job.pred_remaining,
+                    finish_us: job.finish_us,
+                    assigned_pe: job.assigned_pe,
+                });
+            }
+        }
+        if spares.jobs.capacity() < jobs_cap {
+            // len is 0 here (just drained), so this guarantees
+            // capacity >= jobs_cap.
+            spares.jobs.reserve(jobs_cap);
+        }
+
+        spares.pes.truncate(n_pes);
+        for pe in &mut spares.pes {
+            pe.reset();
+        }
+        while spares.pes.len() < n_pes {
+            spares.pes.push(PeState::new());
+        }
+        spares.pe_available.clear();
+        spares.pe_available.resize(n_pes, true);
+        spares.ready.clear();
+        if spares.ready.capacity() < 256 {
+            spares.ready.reserve(256 - spares.ready.len());
+        }
+        spares.theta.clear();
+        spares.theta.resize(n_nodes, 0.0);
+        spares.theta_scratch.clear();
+        spares.theta_scratch.resize(n_nodes, 0.0);
+        spares.energy.reset(n_pes);
+        // Deferred segments of an aborted previous run go back to the
+        // segment pool.
+        spares.seg_pool.append(&mut spares.pending);
+        spares.phase_lats.clear();
+
+        Ok(SimWorker {
             cfg: cfg.clone(),
-            exec_tables,
-            noc: NocModel::new(platform, cfg.noc_congestion),
+            noc,
             rc,
             scheduler,
             governor,
             explore,
-            dvfs_clusters,
+            dvfs_clusters: spares.dvfs_clusters,
             throttle: cfg
                 .dtpm
                 .thermal_throttle
@@ -439,47 +653,44 @@ impl<'a> Simulation<'a> {
             power_cap: cfg.dtpm.power_cap_w.map(PowerCap::new),
             dtpm_xla,
             now: 0.0,
-            events: EventQueue::with_capacity(1024),
+            events: spares.events,
             jobgen,
-            jobs: Vec::with_capacity(cfg.max_jobs.clamp(16, 65_536)),
-            pes: vec![PeState::new(); platform.n_pes()],
+            jobs: spares.jobs,
+            pes: spares.pes,
             timeline,
-            pe_available: vec![true; platform.n_pes()],
+            pe_available: spares.pe_available,
             t_ambient_c: platform.t_ambient,
-            ready: VecDeque::with_capacity(256),
-            cluster_opp_idx,
-            theta: vec![0.0; n_nodes],
-            theta_scratch: vec![0.0; n_nodes],
-            energy: EnergyMeter::new(platform.n_pes()),
+            ready: spares.ready,
+            cluster_opp_idx: spares.cluster_opp_idx,
+            theta: spares.theta,
+            theta_scratch: spares.theta_scratch,
+            energy: spares.energy,
             last_epoch_t: 0.0,
             last_epoch_power_w: 0.0,
             jitter_rng: Rng::new(cfg.seed ^ 0x7177_E44E_0C5A_11AA),
-            pe_cluster,
-            pe_nominal_mhz,
-            cluster_mhz,
-            app_pred_template,
-            app_sources,
-            job_pool: Vec::new(),
-            ready_scratch: Vec::new(),
-            snap_scratch: Vec::with_capacity(platform.n_pes()),
-            assigned_scratch: Vec::new(),
-            kept_scratch: Vec::new(),
-            pending: Vec::new(),
-            seg_pool: Vec::new(),
-            util_scratch: Vec::with_capacity(platform.n_pes()),
-            busy_scratch: Vec::with_capacity(platform.n_pes()),
-            power_scratch: Vec::with_capacity(platform.n_pes()),
-            t_pe_scratch: Vec::with_capacity(platform.n_pes()),
-            opps_scratch: Vec::with_capacity(platform.clusters.len()),
+            cluster_mhz: spares.cluster_mhz,
+            job_pool: spares.job_pool,
+            ready_scratch: spares.ready_scratch,
+            snap_scratch: spares.snap_scratch,
+            assigned_scratch: spares.assigned_scratch,
+            kept_scratch: spares.kept_scratch,
+            pending: spares.pending,
+            seg_pool: spares.seg_pool,
+            util_scratch: spares.util_scratch,
+            busy_scratch: spares.busy_scratch,
+            power_scratch: spares.power_scratch,
+            t_pe_scratch: spares.t_pe_scratch,
+            opps_scratch: spares.opps_scratch,
             last_t_max_abs: platform.t_ambient,
             injected: 0,
             completed: 0,
             arrivals_done: false,
             report,
             sched_dirty: false,
-            phase_lats: Vec::new(),
+            phase_lats: spares.phase_lats,
             phase_energy0_j: 0.0,
             phase_peak_temp_c: 0.0,
+            ran: false,
         })
     }
 
@@ -491,29 +702,41 @@ impl<'a> Simulation<'a> {
     /// `pe_nominal_mhz` / `cluster_mhz` caches — the arithmetic (and
     /// therefore every golden trace) is unchanged.
     #[inline]
-    fn exec_base_us(&self, app: usize, task: usize, pe: usize) -> f64 {
-        let base = self.exec_tables[app].us(task, pe);
+    fn exec_base_us(
+        &self,
+        setup: &SimSetup,
+        app: usize,
+        task: usize,
+        pe: usize,
+    ) -> f64 {
+        let base = setup.exec_tables[app].us(task, pe);
         if !base.is_finite() {
             return f64::INFINITY;
         }
-        base * self.pe_nominal_mhz[pe]
-            / self.cluster_mhz[self.pe_cluster[pe]]
+        base * setup.pe_nominal_mhz[pe]
+            / self.cluster_mhz[setup.pe_cluster[pe]]
     }
 
     /// Re-derive the per-cluster frequency cache after OPP changes
     /// (end of every DTPM epoch — the only writer of `cluster_opp_idx`).
-    fn refresh_cluster_mhz(&mut self) {
-        for (c, cl) in self.platform.clusters.iter().enumerate() {
-            self.cluster_mhz[c] = self.platform.classes[cl.class].opps
+    fn refresh_cluster_mhz(&mut self, setup: &SimSetup) {
+        for (c, cl) in setup.platform().clusters.iter().enumerate() {
+            self.cluster_mhz[c] = setup.platform().classes[cl.class].opps
                 [self.cluster_opp_idx[c]]
                 .freq_mhz;
         }
     }
 
     /// Earliest time the inputs of (job, task) can be at `pe`.
-    fn data_ready(&self, job: usize, task: usize, pe: usize) -> f64 {
+    fn data_ready(
+        &self,
+        setup: &SimSetup,
+        job: usize,
+        task: usize,
+        pe: usize,
+    ) -> f64 {
         let j = &self.jobs[job];
-        let app = &self.apps[j.app];
+        let app = &setup.apps()[j.app];
         let mut t = j.arrival_us;
         for &p in &app.tasks[task].preds {
             let fin = j.finish_us[p];
@@ -532,15 +755,23 @@ impl<'a> Simulation<'a> {
     // Main loop
     // -------------------------------------------------------------------
 
-    /// Run to completion and produce the report.
-    pub fn run(mut self) -> SimReport {
+    /// Run to completion, finalizing the report in place (borrow it
+    /// here, or move it out with [`take_report`](SimWorker::take_report)).
+    /// A finished worker must be [`reset`](SimWorker::reset) before it
+    /// can run again.
+    pub fn run(&mut self, setup: &SimSetup) -> &SimReport {
+        assert!(
+            !self.ran,
+            "SimWorker::run called twice without reset between runs"
+        );
+        self.ran = true;
         let wall0 = Instant::now();
         // Prime the event queue: the scenario timeline first (so
         // same-timestamp scenario events apply before task events — the
         // queue's (time, sequence) order makes this deterministic), then
         // the first arrival and the first DTPM epoch.
         if !self.timeline.is_empty() {
-            self.begin_phase("baseline".to_string());
+            self.begin_phase(setup, "baseline".to_string());
             for (seq, ev) in self.timeline.iter().enumerate() {
                 self.events.push(ev.at_us, Event::Scenario { seq });
             }
@@ -555,23 +786,45 @@ impl<'a> Simulation<'a> {
                 break;
             }
             match ev {
-                Event::JobArrival { app } => self.on_job_arrival(app),
-                Event::TaskFinish { job, task, pe } => {
-                    self.on_task_finish(job, task, pe)
+                Event::JobArrival { app } => {
+                    self.on_job_arrival(setup, app)
                 }
-                Event::DtpmEpoch => self.on_dtpm_epoch(),
-                Event::Scenario { seq } => self.on_scenario(seq),
+                Event::TaskFinish { job, task, pe } => {
+                    self.on_task_finish(setup, job, task, pe)
+                }
+                Event::DtpmEpoch => self.on_dtpm_epoch(setup),
+                Event::Scenario { seq } => self.on_scenario(setup, seq),
             }
             // Decision epoch: a task finished or a job arrived.
             if self.sched_dirty && !self.ready.is_empty() {
-                self.invoke_scheduler();
+                self.invoke_scheduler(setup);
             }
             if self.finished() {
                 break;
             }
         }
 
-        self.finalize(wall0)
+        self.finalize(setup, wall0);
+        &self.report
+    }
+
+    /// Move the finished run's report out (leaving a default in its
+    /// place; the buffers return on the next reset's recycle).
+    pub fn take_report(&mut self) -> SimReport {
+        std::mem::take(&mut self.report)
+    }
+
+    /// Borrow the report of the last finished run.
+    pub fn report(&self) -> &SimReport {
+        &self.report
+    }
+
+    /// Move the scheduler out (a [`NullSched`] takes its slot until the
+    /// next reset).  Callers that wrapped shared state in a custom
+    /// scheduler — the learn pipeline's recording `Collector` — use
+    /// this to get their wrapper back after the run.
+    pub fn take_scheduler(&mut self) -> Box<dyn Scheduler> {
+        std::mem::replace(&mut self.scheduler, Box::new(NullSched))
     }
 
     fn finished(&self) -> bool {
@@ -589,13 +842,13 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    fn on_job_arrival(&mut self, app_idx: usize) {
+    fn on_job_arrival(&mut self, setup: &SimSetup, app_idx: usize) {
         assert!(
-            app_idx < self.apps.len(),
+            app_idx < setup.apps().len(),
             "trace references app index {app_idx}, workload has {}",
-            self.apps.len()
+            setup.apps().len()
         );
-        let n = self.apps[app_idx].len();
+        let n = setup.apps()[app_idx].len();
         let job_id = self.jobs.len();
         // Per-task state comes from the free-list of completed jobs
         // (allocation-free at steady state) and is stamped from the
@@ -603,7 +856,7 @@ impl<'a> Simulation<'a> {
         let mut bufs = self.job_pool.pop().unwrap_or_default();
         bufs.pred_remaining.clear();
         bufs.pred_remaining
-            .extend_from_slice(&self.app_pred_template[app_idx]);
+            .extend_from_slice(&setup.app_pred_template[app_idx]);
         bufs.finish_us.clear();
         bufs.finish_us.resize(n, f64::NAN);
         bufs.assigned_pe.clear();
@@ -618,7 +871,7 @@ impl<'a> Simulation<'a> {
             done: false,
         });
         // Sources are immediately ready.
-        for &s in &self.app_sources[app_idx] {
+        for &s in &setup.app_sources[app_idx] {
             self.ready.push_back(ReadyTask {
                 job: job_id,
                 task: s,
@@ -632,7 +885,13 @@ impl<'a> Simulation<'a> {
         self.schedule_next_arrival();
     }
 
-    fn on_task_finish(&mut self, job_id: usize, task: usize, pe_id: usize) {
+    fn on_task_finish(
+        &mut self,
+        setup: &SimSetup,
+        job_id: usize,
+        task: usize,
+        pe_id: usize,
+    ) {
         // --- PE bookkeeping ---
         let end;
         {
@@ -653,7 +912,7 @@ impl<'a> Simulation<'a> {
             job.tasks_done += 1;
         }
         let app_idx = self.jobs[job_id].app;
-        let app = &self.apps[app_idx];
+        let app = &setup.apps()[app_idx];
         // Propagate readiness.
         for &succ in app.succs(task) {
             let job = &mut self.jobs[job_id];
@@ -676,8 +935,12 @@ impl<'a> Simulation<'a> {
             let latency = self.now - job.arrival_us;
             // Reclaim the per-task buffers into the free-list — no task
             // of a done job is ever consulted again (commit() rejects
-            // stale assignments for done jobs before indexing).
-            if self.job_pool.len() < 1024 {
+            // stale assignments for done jobs before indexing).  Past
+            // the in-run cap the pool is already as deep as a reset
+            // could ever reuse, so extra buffers are freed eagerly —
+            // this keeps completed-job memory bounded on one-shot
+            // unbounded runs exactly like the pre-worker kernel.
+            if self.job_pool.len() < JOB_POOL_CAP {
                 self.job_pool.push(JobBufs {
                     pred_remaining: std::mem::take(
                         &mut job.pred_remaining,
@@ -701,11 +964,11 @@ impl<'a> Simulation<'a> {
             }
         }
         self.sched_dirty = true;
-        self.try_start_next(pe_id);
+        self.try_start_next(setup, pe_id);
     }
 
     /// Start the next queued task on an idle PE, if any.
-    fn try_start_next(&mut self, pe_id: usize) {
+    fn try_start_next(&mut self, setup: &SimSetup, pe_id: usize) {
         if self.pes[pe_id].running.is_some() {
             return;
         }
@@ -713,11 +976,11 @@ impl<'a> Simulation<'a> {
             return;
         };
         let app_idx = self.jobs[job_id].app;
-        let est = self.exec_base_us(app_idx, task, pe_id);
+        let est = self.exec_base_us(setup, app_idx, task, pe_id);
         self.pes[pe_id].pending_est_us =
             (self.pes[pe_id].pending_est_us - est).max(0.0);
 
-        let data_at = self.data_ready(job_id, task, pe_id);
+        let data_at = self.data_ready(setup, job_id, task, pe_id);
         let start = data_at.max(self.now);
         let mut exec = est;
         if self.cfg.exec_jitter_frac > 0.0 {
@@ -765,9 +1028,9 @@ impl<'a> Simulation<'a> {
     /// `now`, so values are recomputed every epoch — but into the same
     /// reused buffer, so the per-event snapshot allocation of the old
     /// kernel is gone.
-    fn fill_snapshots(&self, out: &mut Vec<PeSnapshot>) {
+    fn fill_snapshots(&self, setup: &SimSetup, out: &mut Vec<PeSnapshot>) {
         out.clear();
-        out.extend(self.platform.pes.iter().map(|pe| PeSnapshot {
+        out.extend(setup.platform().pes.iter().map(|pe| PeSnapshot {
             id: pe.id,
             class: pe.class,
             cluster: pe.cluster,
@@ -778,7 +1041,7 @@ impl<'a> Simulation<'a> {
         }));
     }
 
-    fn invoke_scheduler(&mut self) {
+    fn invoke_scheduler(&mut self, setup: &SimSetup) {
         self.sched_dirty = false;
         let window = self.ready.len().min(self.cfg.max_ready);
         // Scratch buffers are moved out of `self` for the duration of
@@ -788,7 +1051,7 @@ impl<'a> Simulation<'a> {
         ready_vec.clear();
         ready_vec.extend(self.ready.iter().take(window).copied());
         let mut snapshots = std::mem::take(&mut self.snap_scratch);
-        self.fill_snapshots(&mut snapshots);
+        self.fill_snapshots(setup, &mut snapshots);
 
         // Temporarily lift the scheduler out of `self` so the context can
         // borrow the rest of the simulation immutably.
@@ -796,7 +1059,7 @@ impl<'a> Simulation<'a> {
             std::mem::replace(&mut self.scheduler, Box::new(NullSched));
         let t0 = Instant::now();
         let assignments = {
-            let ctx = CtxView { sim: self, snapshots: &snapshots };
+            let ctx = CtxView { setup, w: self, snapshots: &snapshots };
             scheduler.schedule(&ready_vec, &ctx)
         };
         self.report.sched_wall_ns += t0.elapsed().as_nanos() as u64;
@@ -812,7 +1075,7 @@ impl<'a> Simulation<'a> {
         let mut assigned = std::mem::take(&mut self.assigned_scratch);
         assigned.clear();
         for a in &assignments {
-            if self.commit(a) {
+            if self.commit(setup, a) {
                 assigned.push((a.job, a.task));
             }
         }
@@ -838,7 +1101,7 @@ impl<'a> Simulation<'a> {
     }
 
     /// Validate and enqueue one assignment.  Returns false if rejected.
-    fn commit(&mut self, a: &Assignment) -> bool {
+    fn commit(&mut self, setup: &SimSetup, a: &Assignment) -> bool {
         if a.pe >= self.pes.len() || a.job >= self.jobs.len() {
             return false;
         }
@@ -856,7 +1119,7 @@ impl<'a> Simulation<'a> {
             return false;
         }
         let app_idx = self.jobs[a.job].app;
-        let est = self.exec_base_us(app_idx, a.task, a.pe);
+        let est = self.exec_base_us(setup, app_idx, a.task, a.pe);
         if !est.is_finite() {
             // Scheduler picked an unsupported PE: reject (task stays
             // ready; a scheduler bug surfaces as starvation, not UB).
@@ -868,7 +1131,7 @@ impl<'a> Simulation<'a> {
         self.jobs[a.job].assigned_pe[a.task] = a.pe;
         self.pes[a.pe].queue.push_back((a.job, a.task));
         self.pes[a.pe].pending_est_us += est;
-        self.try_start_next(a.pe);
+        self.try_start_next(setup, a.pe);
         true
     }
 
@@ -877,11 +1140,11 @@ impl<'a> Simulation<'a> {
     // -------------------------------------------------------------------
 
     /// Execute one scenario timeline entry.
-    fn on_scenario(&mut self, seq: usize) {
+    fn on_scenario(&mut self, setup: &SimSetup, seq: usize) {
         let ev = self.timeline[seq].clone();
         self.report.scenario_events += 1;
         if let Some(label) = ev.phase_label {
-            self.begin_phase(label);
+            self.begin_phase(setup, label);
         }
         match ev.action {
             Action::SetRate { per_ms } => self.jobgen.set_rate(per_ms),
@@ -893,7 +1156,7 @@ impl<'a> Simulation<'a> {
             Action::SetAppWeights { weights } => {
                 self.jobgen.set_weights(&weights)
             }
-            Action::SetAmbient { t_c } => self.set_ambient(t_c),
+            Action::SetAmbient { t_c } => self.set_ambient(setup, t_c),
             Action::PeFail { pe } => self.pe_fail(pe),
             Action::PeRestore { pe } => {
                 self.pe_available[pe] = true;
@@ -902,7 +1165,7 @@ impl<'a> Simulation<'a> {
             Action::SetPowerCap { watts } => {
                 // Epochs deferred under the old budget integrate before
                 // the policy changes (the cap observes epoch power).
-                self.flush_thermal();
+                self.flush_thermal(setup);
                 match watts {
                     // Keep the cap's backoff state across budget changes.
                     Some(w) => match self.power_cap.as_mut() {
@@ -912,7 +1175,7 @@ impl<'a> Simulation<'a> {
                     None => self.power_cap = None,
                 }
             }
-            Action::SetScheduler { name } => self.swap_scheduler(&name),
+            Action::SetScheduler { name } => self.swap_scheduler(setup, &name),
         }
     }
 
@@ -946,21 +1209,21 @@ impl<'a> Simulation<'a> {
     /// Ambient temperature step: absolute temperatures shift; the
     /// above-ambient thermal state is preserved and relaxes toward the
     /// new environment through the RC dynamics.
-    fn set_ambient(&mut self, t_c: f64) {
+    fn set_ambient(&mut self, setup: &SimSetup, t_c: f64) {
         // Deferred epochs ran under the old ambient: integrate them
         // before the RC model and offsets change.
-        self.flush_thermal();
+        self.flush_thermal(setup);
         self.t_ambient_c = t_c;
         self.rc.t_ambient = t_c;
         if let Some(art) = self.dtpm_xla.as_mut() {
             // Re-fold the ambient offset into the artifact's leakage
             // coefficients (k1_eff depends on ambient).
-            let (k1, k2): (Vec<f64>, Vec<f64>) = self
-                .platform
+            let (k1, k2): (Vec<f64>, Vec<f64>) = setup
+                .platform()
                 .pes
                 .iter()
                 .map(|pe| {
-                    let c = &self.platform.classes[pe.class];
+                    let c = &setup.platform().classes[pe.class];
                     (
                         self.rc.leak_k1_effective(c.leak_k1, c.leak_k2),
                         c.leak_k2,
@@ -981,10 +1244,10 @@ impl<'a> Simulation<'a> {
     /// build time, so failures here only happen on registry state that
     /// changed mid-run (e.g. artifacts disappearing); the old scheduler
     /// is kept in that case.
-    fn swap_scheduler(&mut self, name: &str) {
+    fn swap_scheduler(&mut self, setup: &SimSetup, name: &str) {
         let build = SchedBuild {
-            platform: self.platform,
-            apps: self.apps,
+            platform: setup.platform(),
+            apps: setup.apps(),
             seed: self.cfg.seed,
             artifacts_dir: self.cfg.artifacts_dir.clone(),
             policy_path: self.cfg.il_policy.clone(),
@@ -1006,14 +1269,14 @@ impl<'a> Simulation<'a> {
     /// Close the current stats phase (if any) and open a new one.  A
     /// phase that would close at zero length (e.g. "baseline" displaced
     /// by a t=0 timeline event) is taken over instead of recorded empty.
-    fn begin_phase(&mut self, label: String) {
+    fn begin_phase(&mut self, setup: &SimSetup, label: String) {
         if let Some(last) = self.report.phases.last_mut() {
             if last.start_us == self.now {
                 last.label = label;
                 return;
             }
         }
-        self.close_phase();
+        self.close_phase(setup);
         self.phase_lats.clear();
         self.phase_energy0_j = self.energy.total_energy_j();
         self.phase_peak_temp_c = 0.0;
@@ -1027,11 +1290,11 @@ impl<'a> Simulation<'a> {
     /// Seal the open phase's accumulators into its [`PhaseStats`].
     /// Energy integrates at DTPM-epoch granularity, so an epoch spanning
     /// a boundary is attributed to the phase it *ends* in.
-    fn close_phase(&mut self) {
+    fn close_phase(&mut self, setup: &SimSetup) {
         // Deferred epochs belong to the closing phase: integrate them
         // before reading the energy/peak accumulators.  (Also covers
         // finalize for static runs — close_phase is its first step.)
-        self.flush_thermal();
+        self.flush_thermal(setup);
         let Some(p) = self.report.phases.last_mut() else { return };
         p.end_us = self.now;
         p.jobs_completed = self.phase_lats.len();
@@ -1065,7 +1328,7 @@ impl<'a> Simulation<'a> {
     /// pre-step temperatures, RC step, energy, peak tracking) so lazy
     /// and eager integration are bit-identical — asserted by
     /// `tests/golden_traces.rs`.
-    fn flush_thermal(&mut self) {
+    fn flush_thermal(&mut self, setup: &SimSetup) {
         if self.pending.is_empty() {
             return;
         }
@@ -1077,9 +1340,9 @@ impl<'a> Simulation<'a> {
         for seg in segs.drain(..) {
             // OPPs that were in force during the segment's epoch.
             opps.clear();
-            for (c, cl) in self.platform.clusters.iter().enumerate() {
+            for (c, cl) in setup.platform().clusters.iter().enumerate() {
                 opps.push(
-                    self.platform.classes[cl.class].opps[seg.opp_idx[c]],
+                    setup.platform().classes[cl.class].opps[seg.opp_idx[c]],
                 );
             }
             // Power from pre-step temperatures, then the RC step.
@@ -1091,7 +1354,7 @@ impl<'a> Simulation<'a> {
                     .map(|&nd| self.theta[nd] + self.t_ambient_c),
             );
             power::epoch_power_into(
-                self.platform,
+                setup.platform(),
                 &opps,
                 &seg.util,
                 &t_pe,
@@ -1135,28 +1398,34 @@ impl<'a> Simulation<'a> {
     /// candidate row).  Returns false if the device call failed — the
     /// artifact is dropped and the caller integrates this (and every
     /// later) epoch through the native segment lane instead.
-    fn epoch_step_xla(&mut self, dt: f64, util: &[f64], busy: &[f64]) -> bool {
-        let cluster_opps: Vec<Opp> = (0..self.platform.clusters.len())
+    fn epoch_step_xla(
+        &mut self,
+        setup: &SimSetup,
+        dt: f64,
+        util: &[f64],
+        busy: &[f64],
+    ) -> bool {
+        let cluster_opps: Vec<Opp> = (0..setup.platform().clusters.len())
             .map(|c| {
-                let class = self.platform.clusters[c].class;
-                self.platform.classes[class].opps[self.cluster_opp_idx[c]]
+                let class = setup.platform().clusters[c].class;
+                setup.platform().classes[class].opps[self.cluster_opp_idx[c]]
             })
             .collect();
         // Dynamic power host-side, leakage + thermal step on-device.
-        let p_dyn: Vec<f64> = self
-            .platform
+        let p_dyn: Vec<f64> = setup
+            .platform()
             .pes
             .iter()
             .map(|pe| {
                 power::p_dynamic(
-                    &self.platform.classes[pe.class],
+                    &setup.platform().classes[pe.class],
                     cluster_opps[pe.cluster],
                     util[pe.id],
                 )
             })
             .collect();
-        let volts: Vec<f64> = self
-            .platform
+        let volts: Vec<f64> = setup
+            .platform()
             .pes
             .iter()
             .map(|pe| cluster_opps[pe.cluster].volt)
@@ -1181,7 +1450,7 @@ impl<'a> Simulation<'a> {
         true
     }
 
-    fn on_dtpm_epoch(&mut self) {
+    fn on_dtpm_epoch(&mut self, setup: &SimSetup) {
         let dt = self.now - self.last_epoch_t;
         if dt <= 0.0 {
             self.events
@@ -1211,7 +1480,7 @@ impl<'a> Simulation<'a> {
         // policy or trace observes this epoch.  A failed device call
         // also lands in the segment lane (this epoch onwards).
         let device_done = self.dtpm_xla.is_some()
-            && self.epoch_step_xla(dt, &util, &busy);
+            && self.epoch_step_xla(setup, dt, &util, &busy);
         if !device_done {
             let mut seg = self.seg_pool.pop().unwrap_or_default();
             seg.dt_us = dt;
@@ -1228,7 +1497,7 @@ impl<'a> Simulation<'a> {
             if !self.can_defer()
                 || self.pending.len() >= MAX_PENDING_EPOCHS
             {
-                self.flush_thermal();
+                self.flush_thermal(setup);
             } else {
                 self.report.deferred_epochs += 1;
             }
@@ -1245,14 +1514,14 @@ impl<'a> Simulation<'a> {
         // governor only on device failure.
         let mut explored = false;
         if self.explore.is_some() && self.dtpm_xla.is_some() {
-            explored = self.explore_epoch(&util, t_max_abs);
+            explored = self.explore_epoch(setup, &util, t_max_abs);
         }
-        for c in 0..self.platform.clusters.len() {
+        for c in 0..setup.platform().clusters.len() {
             if explored && self.dvfs_clusters.contains(&c) {
                 // OPPs already set by the DSE pick; policies still cap.
-                let class_idx = self.platform.clusters[c].class;
+                let class_idx = setup.platform().clusters[c].class;
                 let n_opps =
-                    self.platform.classes[class_idx].opps.len();
+                    setup.platform().classes[class_idx].opps.len();
                 let mut idx = self.cluster_opp_idx[c];
                 if let Some(th) = self.throttle.as_mut() {
                     idx = th.apply(idx, t_max_abs);
@@ -1263,13 +1532,13 @@ impl<'a> Simulation<'a> {
                 self.cluster_opp_idx[c] = idx.min(n_opps - 1);
                 continue;
             }
-            let class_idx = self.platform.clusters[c].class;
-            let class = &self.platform.classes[class_idx];
+            let class_idx = setup.platform().clusters[c].class;
+            let class = &setup.platform().classes[class_idx];
             if class.opps.len() == 1 {
                 continue; // accelerators: fixed OPP
             }
             // Linux-style: cluster utilization = max over member PEs.
-            let u = self.platform.clusters[c]
+            let u = setup.platform().clusters[c]
                 .pe_ids
                 .iter()
                 .map(|&p| util[p])
@@ -1288,7 +1557,7 @@ impl<'a> Simulation<'a> {
             }
             self.cluster_opp_idx[c] = idx.min(class.opps.len() - 1);
         }
-        self.refresh_cluster_mhz();
+        self.refresh_cluster_mhz(setup);
         self.util_scratch = util;
         self.busy_scratch = busy;
 
@@ -1319,17 +1588,22 @@ impl<'a> Simulation<'a> {
     /// it in a single batched artifact call, commit the best candidate's
     /// OPP indices.  Returns false on device failure (callers then use
     /// the classic governor for this epoch).
-    fn explore_epoch(&mut self, util: &[f64], _t_max_abs: f64) -> bool {
+    fn explore_epoch(
+        &mut self,
+        setup: &SimSetup,
+        util: &[f64],
+        _t_max_abs: f64,
+    ) -> bool {
         let Some(expl) = self.explore.as_mut() else { return false };
         let Some(art) = self.dtpm_xla.as_mut() else { return false };
-        let n_pes = self.platform.n_pes();
+        let n_pes = setup.platform().n_pes();
         let grid = expl.grid.clone();
 
         // Current frequency per cluster (for utilization rescaling).
-        let cur_mhz: Vec<f64> = (0..self.platform.clusters.len())
+        let cur_mhz: Vec<f64> = (0..setup.platform().clusters.len())
             .map(|c| {
-                let cl = self.platform.clusters[c].class;
-                self.platform.classes[cl].opps[self.cluster_opp_idx[c]]
+                let cl = setup.platform().clusters[c].class;
+                setup.platform().classes[cl].opps[self.cluster_opp_idx[c]]
                     .freq_mhz
             })
             .collect();
@@ -1340,9 +1614,9 @@ impl<'a> Simulation<'a> {
         for (k, &(bi, li)) in grid.iter().enumerate() {
             let mut p_dyn = vec![0.0f64; n_pes];
             let mut volts = vec![0.0f64; n_pes];
-            for pe in &self.platform.pes {
+            for pe in &setup.platform().pes {
                 let cluster = pe.cluster;
-                let class = &self.platform.classes[pe.class];
+                let class = &setup.platform().classes[pe.class];
                 let opp = if Some(&cluster) == self.dvfs_clusters.first()
                 {
                     class.opps[bi.min(class.opps.len() - 1)]
@@ -1385,35 +1659,36 @@ impl<'a> Simulation<'a> {
         let k = expl.choose(&out.p_sum, &t_peak_next, &feasible);
         let (bi, li) = grid[k];
         let b_cluster = self.dvfs_clusters[0];
-        let b_class = self.platform.clusters[b_cluster].class;
+        let b_class = setup.platform().clusters[b_cluster].class;
         self.cluster_opp_idx[b_cluster] =
-            bi.min(self.platform.classes[b_class].opps.len() - 1);
+            bi.min(setup.platform().classes[b_class].opps.len() - 1);
         if let Some(&l_cluster) = self.dvfs_clusters.get(1) {
-            let l_class = self.platform.clusters[l_cluster].class;
+            let l_class = setup.platform().clusters[l_cluster].class;
             self.cluster_opp_idx[l_cluster] =
-                li.min(self.platform.classes[l_class].opps.len() - 1);
+                li.min(setup.platform().classes[l_class].opps.len() - 1);
         }
         true
     }
 
-    fn finalize(mut self, wall0: Instant) -> SimReport {
+    fn finalize(&mut self, setup: &SimSetup, wall0: Instant) {
         // Seal the last scenario phase at the final simulation time.
-        self.close_phase();
+        self.close_phase(setup);
         self.report.injected_jobs = self.injected;
         self.report.completed_jobs = self.completed;
         self.report.sim_time_us = self.now;
         self.report.events_processed = self.events.popped;
         self.report.total_energy_j = self.energy.total_energy_j();
         self.report.avg_power_w = self.energy.avg_power_w();
-        self.report.pe_utilization = (0..self.pes.len())
-            .map(|i| {
-                if self.now > 0.0 {
-                    (self.pes[i].total_busy_us / self.now).min(1.0)
-                } else {
-                    0.0
-                }
-            })
-            .collect();
+        // In-place (the recycled buffer survives worker reuse).
+        self.report.pe_utilization.clear();
+        let now = self.now;
+        self.report.pe_utilization.extend(self.pes.iter().map(|pe| {
+            if now > 0.0 {
+                (pe.total_busy_us / now).min(1.0)
+            } else {
+                0.0
+            }
+        }));
         if let Some(th) = &self.throttle {
             self.report.throttle_engagements = th.engagements;
         }
@@ -1422,7 +1697,6 @@ impl<'a> Simulation<'a> {
         self.report.sched_decisions = decisions;
         self.report.sched_fallbacks = fallbacks;
         self.report.wall_s = wall0.elapsed().as_secs_f64();
-        self.report
     }
 }
 
@@ -1444,13 +1718,14 @@ impl Scheduler for NullSched {
 
 /// Borrowed scheduler view of the simulation.
 struct CtxView<'s, 'a> {
-    sim: &'s Simulation<'a>,
+    setup: &'s SimSetup<'a>,
+    w: &'s SimWorker,
     snapshots: &'s [PeSnapshot],
 }
 
 impl SchedContext for CtxView<'_, '_> {
     fn now_us(&self) -> f64 {
-        self.sim.now
+        self.w.now
     }
     fn pes(&self) -> &[PeSnapshot] {
         self.snapshots
@@ -1458,30 +1733,31 @@ impl SchedContext for CtxView<'_, '_> {
     fn exec_us(&self, rt: &ReadyTask, pe: usize) -> Option<f64> {
         // Out-of-range probes (instance tables can carry arbitrary ids)
         // and failed/hotplugged-out PEs support nothing.
-        if !self.sim.pe_available.get(pe).copied().unwrap_or(false) {
+        if !self.w.pe_available.get(pe).copied().unwrap_or(false) {
             return None;
         }
-        let us = self.sim.exec_base_us(rt.app, rt.task, pe);
+        let us = self.w.exec_base_us(self.setup, rt.app, rt.task, pe);
         us.is_finite().then_some(us)
     }
     fn data_ready_us(&self, rt: &ReadyTask, pe: usize) -> f64 {
-        self.sim.data_ready(rt.job, rt.task, pe)
+        self.w.data_ready(self.setup, rt.job, rt.task, pe)
     }
     fn task_name(&self, rt: &ReadyTask) -> &str {
-        &self.sim.apps[rt.app].tasks[rt.task].name
+        &self.setup.apps()[rt.app].tasks[rt.task].name
     }
     fn app_name(&self, rt: &ReadyTask) -> &str {
-        &self.sim.apps[rt.app].name
+        &self.setup.apps()[rt.app].name
     }
     fn headroom_frac(&self, cluster: usize) -> f64 {
         // DVFS headroom: current / max cluster frequency ...
-        let Some(cl) = self.sim.platform.clusters.get(cluster) else {
+        let Some(cl) = self.setup.platform().clusters.get(cluster)
+        else {
             return 1.0;
         };
         let max_mhz =
-            self.sim.platform.classes[cl.class].max_opp().freq_mhz;
+            self.setup.platform().classes[cl.class].max_opp().freq_mhz;
         let dvfs = if max_mhz > 0.0 {
-            (self.sim.cluster_mhz[cluster] / max_mhz).clamp(0.0, 1.0)
+            (self.w.cluster_mhz[cluster] / max_mhz).clamp(0.0, 1.0)
         } else {
             1.0
         };
@@ -1489,14 +1765,57 @@ impl SchedContext for CtxView<'_, '_> {
         // (only when a throttle polices temperature; readings are from
         // the last integrated epoch, which is exact under any policy
         // because policies force eager integration).
-        let thermal = if self.sim.cfg.dtpm.thermal_throttle {
-            let trip = self.sim.cfg.dtpm.throttle_temp_c;
-            let span = (trip - self.sim.t_ambient_c).max(1e-9);
-            ((trip - self.sim.last_t_max_abs) / span).clamp(0.0, 1.0)
+        let thermal = if self.w.cfg.dtpm.thermal_throttle {
+            let trip = self.w.cfg.dtpm.throttle_temp_c;
+            let span = (trip - self.w.t_ambient_c).max(1e-9);
+            ((trip - self.w.last_t_max_abs) / span).clamp(0.0, 1.0)
         } else {
             1.0
         };
         dvfs * thermal
+    }
+}
+
+/// A one-shot simulation: the classic build → run facade over a
+/// private [`SimSetup`] + [`SimWorker`] pair.  Grid evaluators that
+/// run many points should share one setup and reuse workers instead
+/// (see [`crate::coordinator::parallel_map_pooled`]).
+pub struct Simulation<'a> {
+    setup: SimSetup<'a>,
+    worker: SimWorker,
+}
+
+impl<'a> Simulation<'a> {
+    /// Build a simulation for `platform` running the `apps` workload mix.
+    pub fn build(
+        platform: &'a Platform,
+        apps: &'a [AppGraph],
+        cfg: &SimConfig,
+    ) -> Result<Simulation<'a>> {
+        let setup = SimSetup::new(platform, apps, cfg)?;
+        let worker = SimWorker::build(&setup, cfg)?;
+        Ok(Simulation { setup, worker })
+    }
+
+    /// Build with a user-supplied scheduler instead of resolving
+    /// `cfg.scheduler` through the registry — the plug-and-play hook
+    /// (`examples/custom_scheduler.rs`).
+    pub fn build_with_scheduler(
+        platform: &'a Platform,
+        apps: &'a [AppGraph],
+        cfg: &SimConfig,
+        scheduler: Box<dyn Scheduler>,
+    ) -> Result<Simulation<'a>> {
+        let setup = SimSetup::new(platform, apps, cfg)?;
+        let worker =
+            SimWorker::build_with_scheduler(&setup, cfg, scheduler)?;
+        Ok(Simulation { setup, worker })
+    }
+
+    /// Run to completion and produce the report.
+    pub fn run(mut self) -> SimReport {
+        self.worker.run(&self.setup);
+        self.worker.take_report()
     }
 }
 
@@ -1931,6 +2250,125 @@ mod tests {
         assert_eq!(r.completed_jobs, 200);
         let again = Simulation::build(&p, &apps, &cfg).unwrap().run();
         assert_eq!(r.job_latencies_us, again.job_latencies_us);
+    }
+
+    fn reports_bit_identical(a: &SimReport, b: &SimReport) {
+        assert_eq!(a.job_latencies_us, b.job_latencies_us);
+        assert_eq!(a.per_app_latencies_us, b.per_app_latencies_us);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.tasks_executed, b.tasks_executed);
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+        assert_eq!(a.peak_temp_c.to_bits(), b.peak_temp_c.to_bits());
+        assert_eq!(a.completed_jobs, b.completed_jobs);
+        assert_eq!(a.injected_jobs, b.injected_jobs);
+        assert_eq!(a.sched_invocations, b.sched_invocations);
+    }
+
+    #[test]
+    fn worker_reset_is_bit_identical_to_fresh_build() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg_a = quick_cfg("etf", 3.0, 60);
+        let cfg_b = quick_cfg("met", 6.0, 80);
+        let setup = SimSetup::new(&p, &apps, &cfg_a).unwrap();
+        let mut w = SimWorker::build(&setup, &cfg_a).unwrap();
+        w.run(&setup);
+        let a1 = w.take_report();
+        // Reuse with a different config, then come back to the first:
+        // history must not leak through the reset.
+        w.reset(&setup, &cfg_b).unwrap();
+        w.run(&setup);
+        let b1 = w.take_report();
+        w.reset(&setup, &cfg_a).unwrap();
+        w.run(&setup);
+        let a2 = w.take_report();
+        let fresh_a = Simulation::build(&p, &apps, &cfg_a).unwrap().run();
+        let fresh_b = Simulation::build(&p, &apps, &cfg_b).unwrap().run();
+        reports_bit_identical(&a1, &fresh_a);
+        reports_bit_identical(&a2, &fresh_a);
+        reports_bit_identical(&b1, &fresh_b);
+    }
+
+    #[test]
+    fn worker_reuse_keeps_job_pool_warm() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 2.0, 100);
+        let setup = SimSetup::new(&p, &apps, &cfg).unwrap();
+        let mut w = SimWorker::build(&setup, &cfg).unwrap();
+        w.run(&setup);
+        let first = w.take_report();
+        w.reset(&setup, &cfg).unwrap();
+        // The pool carried recycled per-job buffers across the reset.
+        assert!(
+            !w.job_pool.is_empty(),
+            "reset dropped the job-buffer pool"
+        );
+        w.run(&setup);
+        let second = w.take_report();
+        reports_bit_identical(&first, &second);
+    }
+
+    #[test]
+    fn event_queue_is_right_sized_and_never_grows() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 9.0, 300);
+        let setup = SimSetup::new(&p, &apps, &cfg).unwrap();
+        let mut w = SimWorker::build(&setup, &cfg).unwrap();
+        let cap0 = w.events.capacity();
+        assert!(cap0 >= 256, "queue under-sized: {cap0}");
+        assert!(
+            w.jobs.capacity() >= 300,
+            "job table under-sized: {}",
+            w.jobs.capacity()
+        );
+        w.run(&setup);
+        assert!(
+            w.events.peak_len <= cap0,
+            "event heap outgrew its pre-sized capacity: peak {} > {}",
+            w.events.peak_len,
+            cap0
+        );
+        assert_eq!(
+            w.events.capacity(),
+            cap0,
+            "event heap reallocated mid-run"
+        );
+    }
+
+    #[test]
+    fn worker_rebind_across_setups_matches_fresh() {
+        let p1 = Platform::table2_soc();
+        let mut p2 = Platform::table2_soc();
+        p2.t_ambient = 45.0;
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 2.0, 50);
+        let s1 = SimSetup::new(&p1, &apps, &cfg).unwrap();
+        let s2 = SimSetup::new(&p2, &apps, &cfg).unwrap();
+        let mut w = SimWorker::build(&s1, &cfg).unwrap();
+        w.run(&s1);
+        let _ = w.take_report();
+        // Re-target the same worker at a different platform setup (the
+        // DSE evaluator's cross-genome reuse).
+        w.reset(&s2, &cfg).unwrap();
+        w.run(&s2);
+        let hot = w.take_report();
+        let fresh = Simulation::build(&p2, &apps, &cfg).unwrap().run();
+        reports_bit_identical(&hot, &fresh);
+        assert!(hot.peak_temp_c > 45.0, "new ambient not in force");
+    }
+
+    #[test]
+    #[should_panic(expected = "without reset")]
+    fn rerunning_without_reset_panics() {
+        let p = Platform::table2_soc();
+        let apps = wifi1();
+        let cfg = quick_cfg("etf", 1.0, 20);
+        let setup = SimSetup::new(&p, &apps, &cfg).unwrap();
+        let mut w = SimWorker::build(&setup, &cfg).unwrap();
+        w.run(&setup);
+        w.run(&setup);
     }
 
     #[test]

@@ -57,6 +57,10 @@ pub struct EventQueue {
     seq: u64,
     pub pushed: u64,
     pub popped: u64,
+    /// High-water mark of the heap depth — lets the kernel's capacity
+    /// regression test prove the pre-sizing covered the whole run (no
+    /// mid-run reallocation).
+    pub peak_len: usize,
 }
 
 impl EventQueue {
@@ -73,7 +77,26 @@ impl EventQueue {
             seq: 0,
             pushed: 0,
             popped: 0,
+            peak_len: 0,
         }
+    }
+
+    /// Rewind to the fresh state — heap emptied, sequence and counters
+    /// zeroed — growing (never shrinking) the retained allocation to at
+    /// least `cap`.  Worker reuse resets instead of re-allocating.
+    pub fn reset(&mut self, cap: usize) {
+        self.heap.clear();
+        if self.heap.capacity() < cap {
+            self.heap.reserve(cap - self.heap.len());
+        }
+        self.seq = 0;
+        self.pushed = 0;
+        self.popped = 0;
+        self.peak_len = 0;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
     }
 
     pub fn push(&mut self, at: f64, ev: Event) {
@@ -81,6 +104,9 @@ impl EventQueue {
         self.heap.push(Entry { at, seq: self.seq, ev });
         self.seq += 1;
         self.pushed += 1;
+        if self.heap.len() > self.peak_len {
+            self.peak_len = self.heap.len();
+        }
     }
 
     pub fn pop(&mut self) -> Option<(f64, Event)> {
@@ -192,5 +218,37 @@ mod tests {
         assert_eq!(q.popped, 2);
         assert_eq!(q.len(), 3);
         assert!(!q.is_empty());
+        assert_eq!(q.peak_len, 5);
+    }
+
+    #[test]
+    fn reset_rewinds_counters_and_keeps_capacity() {
+        let mut q = EventQueue::with_capacity(64);
+        for i in 0..50 {
+            q.push(i as f64, Event::DtpmEpoch);
+        }
+        q.pop();
+        let cap = q.capacity();
+        assert!(cap >= 64);
+        q.reset(64);
+        assert!(q.is_empty());
+        assert_eq!((q.pushed, q.popped, q.peak_len), (0, 0, 0));
+        assert_eq!(q.capacity(), cap, "reset must not shrink or grow");
+        // Sequence restarted: same-timestamp events pop in the new
+        // insertion order, exactly like a fresh queue.
+        for app in 0..5 {
+            q.push(1.0, Event::JobArrival { app });
+        }
+        let apps: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                Event::JobArrival { app } => app,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(apps, vec![0, 1, 2, 3, 4]);
+        // Growing reset reserves at least the requested capacity.
+        q.reset(4096);
+        assert!(q.capacity() >= 4096);
     }
 }

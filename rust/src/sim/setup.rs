@@ -1,0 +1,173 @@
+//! Immutable shared simulation setup: everything derivable from
+//! `(platform, apps)` alone — independent of any single run's
+//! [`crate::config::SimConfig`] — built once and shared by every
+//! [`super::SimWorker`] evaluating points of a grid.
+//!
+//! Grid workloads (`run_sweep`, `run_scenario_sweep`, the DSE
+//! evaluator's seeds×scenarios grid, `learn collect/train/eval`) used
+//! to pay full `Simulation::build` cost — exec-table, NoC, RC and
+//! arrival-template construction plus a few dozen buffer allocations —
+//! for every grid point.  [`SimSetup`] hoists the immutable share of
+//! that cost out of the per-point loop; the mutable remainder lives in
+//! a reusable [`super::SimWorker`] whose `reset` rewinds state without
+//! freeing buffers.
+//!
+//! The platform and workload are held as [`Cow`]s: sweep-style callers
+//! borrow them (zero copies), while the DSE evaluator — whose platforms
+//! are decoded per genome and must outlive no one — moves an owned
+//! [`Platform`] in via [`SimSetup::with_owned_platform`].
+
+use std::borrow::Cow;
+
+use crate::app::AppGraph;
+use crate::config::SimConfig;
+use crate::noc::NocModel;
+use crate::platform::Platform;
+use crate::sched::ilp::ExecTable;
+use crate::thermal::RcModel;
+use crate::{Error, Result};
+
+/// Immutable, shareable setup for simulations of one `(platform, apps)`
+/// pair.  Construction performs the platform/workload compatibility
+/// validation once; workers trust it.
+pub struct SimSetup<'a> {
+    platform: Cow<'a, Platform>,
+    apps: Cow<'a, [AppGraph]>,
+    /// Per-app execution-time lookup tables (task × PE).
+    pub(crate) exec_tables: Vec<ExecTable>,
+    /// Per-PE cluster index (flattened from the platform).
+    pub(crate) pe_cluster: Vec<usize>,
+    /// Per-PE class nominal frequency (MHz).
+    pub(crate) pe_nominal_mhz: Vec<f64>,
+    /// Initial per-task predecessor counts per app (arrival template).
+    pub(crate) app_pred_template: Vec<Vec<u16>>,
+    /// Source-task indices per app.
+    pub(crate) app_sources: Vec<Vec<usize>>,
+    /// NoC topology template (hop table precomputed; congestion off).
+    /// Workers clone it and flip congestion per their config.
+    pub(crate) noc_template: NocModel,
+    /// RC thermal model discretized at the *base* config's DTPM epoch
+    /// (the common case across a grid).  Workers clone it when their
+    /// epoch matches and rebuild — the forced eager path — when not.
+    pub(crate) rc_template: RcModel,
+}
+
+impl<'a> SimSetup<'a> {
+    /// Borrowing constructor: the platform and workload outlive the
+    /// setup (sweeps, scenario grids, the learn pipeline).
+    pub fn new(
+        platform: &'a Platform,
+        apps: &'a [AppGraph],
+        base: &SimConfig,
+    ) -> Result<SimSetup<'a>> {
+        Self::build(Cow::Borrowed(platform), Cow::Borrowed(apps), base)
+    }
+
+    /// Owning-platform constructor for callers whose platform is built
+    /// per evaluation (the DSE evaluator decodes one per genome) while
+    /// the workload is shared.
+    pub fn with_owned_platform(
+        platform: Platform,
+        apps: &'a [AppGraph],
+        base: &SimConfig,
+    ) -> Result<SimSetup<'a>> {
+        Self::build(Cow::Owned(platform), Cow::Borrowed(apps), base)
+    }
+
+    fn build(
+        platform: Cow<'a, Platform>,
+        apps: Cow<'a, [AppGraph]>,
+        base: &SimConfig,
+    ) -> Result<SimSetup<'a>> {
+        if apps.is_empty() {
+            return Err(Error::Sim("no applications in workload".into()));
+        }
+        // Every app must be runnable on this platform.
+        for app in apps.iter() {
+            for task in &app.tasks {
+                let supported = platform
+                    .classes
+                    .iter()
+                    .any(|c| task.exec_us.contains_key(&c.name));
+                if !supported {
+                    return Err(Error::Sim(format!(
+                        "task '{}' of app '{}' runs on no PE class of \
+                         platform '{}'",
+                        task.name, app.name, platform.name
+                    )));
+                }
+            }
+        }
+        let p: &Platform = &platform;
+        let exec_tables =
+            apps.iter().map(|a| ExecTable::new(a, p)).collect();
+        let pe_cluster: Vec<usize> =
+            p.pes.iter().map(|pe| pe.cluster).collect();
+        let pe_nominal_mhz: Vec<f64> = p
+            .pes
+            .iter()
+            .map(|pe| p.classes[pe.class].nominal_mhz)
+            .collect();
+        let app_pred_template: Vec<Vec<u16>> = apps
+            .iter()
+            .map(|a| {
+                a.tasks.iter().map(|t| t.preds.len() as u16).collect()
+            })
+            .collect();
+        let app_sources: Vec<Vec<usize>> =
+            apps.iter().map(|a| a.sources()).collect();
+        let noc_template = NocModel::new(p, false);
+        let rc_template = RcModel::new(p, base.dtpm.epoch_us);
+        Ok(SimSetup {
+            exec_tables,
+            pe_cluster,
+            pe_nominal_mhz,
+            app_pred_template,
+            app_sources,
+            noc_template,
+            rc_template,
+            platform,
+            apps,
+        })
+    }
+
+    /// The platform every worker of this setup simulates.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// The application mix every worker of this setup injects.
+    pub fn apps(&self) -> &[AppGraph] {
+        &self.apps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+
+    #[test]
+    fn setup_rejects_empty_and_unsupported_workloads() {
+        let p = Platform::table2_soc();
+        let cfg = SimConfig::default();
+        assert!(SimSetup::new(&p, &[], &cfg).is_err());
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        assert!(SimSetup::new(&p, &apps, &cfg).is_ok());
+    }
+
+    #[test]
+    fn owned_platform_setup_matches_borrowed() {
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let cfg = SimConfig::default();
+        let borrowed = SimSetup::new(&p, &apps, &cfg).unwrap();
+        let owned =
+            SimSetup::with_owned_platform(p.clone(), &apps, &cfg).unwrap();
+        assert_eq!(borrowed.pe_cluster, owned.pe_cluster);
+        assert_eq!(borrowed.pe_nominal_mhz, owned.pe_nominal_mhz);
+        assert_eq!(borrowed.app_pred_template, owned.app_pred_template);
+        assert_eq!(borrowed.app_sources, owned.app_sources);
+        assert_eq!(borrowed.platform().name, owned.platform().name);
+    }
+}

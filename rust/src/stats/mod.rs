@@ -125,6 +125,45 @@ pub struct SimReport {
 }
 
 impl SimReport {
+    /// Recycle this report's heap buffers into a fresh zeroed report,
+    /// leaving `self` hollow.  Every scalar of the returned report is
+    /// the `Default` value; every collection is an emptied (`clear`ed,
+    /// capacity-retaining) version of `self`'s — the reusable
+    /// `SimWorker`'s reset path calls this so steady-state grid
+    /// evaluation stops re-allocating report buffers.
+    pub fn recycle(&mut self) -> SimReport {
+        let mut fresh = SimReport::default();
+        std::mem::swap(
+            &mut fresh.job_latencies_us,
+            &mut self.job_latencies_us,
+        );
+        fresh.job_latencies_us.clear();
+        std::mem::swap(
+            &mut fresh.per_app_latencies_us,
+            &mut self.per_app_latencies_us,
+        );
+        for lats in &mut fresh.per_app_latencies_us {
+            lats.clear();
+        }
+        std::mem::swap(
+            &mut fresh.pe_utilization,
+            &mut self.pe_utilization,
+        );
+        fresh.pe_utilization.clear();
+        std::mem::swap(
+            &mut fresh.scheduler_report,
+            &mut self.scheduler_report,
+        );
+        fresh.scheduler_report.clear();
+        std::mem::swap(&mut fresh.gantt, &mut self.gantt);
+        fresh.gantt.clear();
+        std::mem::swap(&mut fresh.trace, &mut self.trace);
+        fresh.trace.clear();
+        std::mem::swap(&mut fresh.phases, &mut self.phases);
+        fresh.phases.clear();
+        fresh
+    }
+
     /// Mean job execution time (µs) over post-warmup completions —
     /// the Figure-3 y-axis.
     pub fn avg_job_latency_us(&self) -> f64 {
@@ -503,6 +542,31 @@ mod tests {
         };
         let j = Json::parse(&s.to_json().to_string()).unwrap();
         assert_eq!(DseGenStats::from_json(&j).unwrap(), s);
+    }
+
+    #[test]
+    fn recycle_zeroes_everything_but_keeps_capacity() {
+        let mut r = demo_report();
+        r.per_app_latencies_us = vec![vec![1.0, 2.0], vec![3.0]];
+        r.pe_utilization = vec![0.5; 14];
+        r.peak_temp_c = 61.0;
+        let lat_cap = r.job_latencies_us.capacity();
+        let fresh = r.recycle();
+        // `r` is hollow; `fresh` is field-for-field a default report…
+        assert_eq!(fresh.scheduler, "");
+        assert_eq!(fresh.completed_jobs, 0);
+        assert_eq!(fresh.total_energy_j, 0.0);
+        assert_eq!(fresh.peak_temp_c, 0.0);
+        assert!(fresh.job_latencies_us.is_empty());
+        assert!(fresh.pe_utilization.is_empty());
+        assert!(fresh.phases.is_empty());
+        assert!(fresh
+            .per_app_latencies_us
+            .iter()
+            .all(|v| v.is_empty()));
+        // …except that the big buffers kept their allocations.
+        assert!(fresh.job_latencies_us.capacity() >= lat_cap);
+        assert!(fresh.pe_utilization.capacity() >= 14);
     }
 
     #[test]

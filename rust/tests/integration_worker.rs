@@ -1,0 +1,269 @@
+//! Worker-reuse equivalence suite: the behavioural contract of the
+//! batched grid-evaluation engine.
+//!
+//! A [`SimWorker`] that is `reset` between runs must be **bit-identical**
+//! to a freshly built `Simulation` — across every registered scheduler,
+//! every scenario preset, different setups (platform re-binding), and
+//! any thread count of the pooled fan-outs.  These tests are the reason
+//! the PR 2 golden traces did not need re-blessing for this refactor.
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::app::AppGraph;
+use ds3r::config::SimConfig;
+use ds3r::coordinator::{self, parallel_map_pooled};
+use ds3r::platform::Platform;
+use ds3r::scenario::presets;
+use ds3r::sched;
+use ds3r::sim::{SimSetup, SimWorker, Simulation};
+use ds3r::stats::SimReport;
+
+fn wifi_apps() -> Vec<AppGraph> {
+    vec![suite::wifi_tx(WifiParams { symbols: 2 })]
+}
+
+fn base_cfg(sched: &str, rate: f64, jobs: usize) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.scheduler = sched.into();
+    c.injection_rate_per_ms = rate;
+    c.max_jobs = jobs;
+    c.warmup_jobs = jobs / 10;
+    c
+}
+
+/// Every observable a fresh run and a reused-worker run must share,
+/// bit-for-bit.
+fn assert_bit_identical(ctx: &str, a: &SimReport, b: &SimReport) {
+    assert_eq!(a.injected_jobs, b.injected_jobs, "{ctx}: injected");
+    assert_eq!(a.completed_jobs, b.completed_jobs, "{ctx}: completed");
+    assert_eq!(
+        a.events_processed, b.events_processed,
+        "{ctx}: events"
+    );
+    assert_eq!(a.tasks_executed, b.tasks_executed, "{ctx}: tasks");
+    assert_eq!(
+        a.sched_invocations, b.sched_invocations,
+        "{ctx}: sched invocations"
+    );
+    assert_eq!(
+        a.job_latencies_us, b.job_latencies_us,
+        "{ctx}: latencies"
+    );
+    assert_eq!(
+        a.per_app_latencies_us, b.per_app_latencies_us,
+        "{ctx}: per-app latencies"
+    );
+    assert_eq!(
+        a.total_energy_j.to_bits(),
+        b.total_energy_j.to_bits(),
+        "{ctx}: energy"
+    );
+    assert_eq!(
+        a.peak_temp_c.to_bits(),
+        b.peak_temp_c.to_bits(),
+        "{ctx}: peak temp"
+    );
+    assert_eq!(a.pe_utilization, b.pe_utilization, "{ctx}: utilization");
+    assert_eq!(a.scenario_events, b.scenario_events, "{ctx}: sc events");
+    assert_eq!(a.phases.len(), b.phases.len(), "{ctx}: phase count");
+    for (pa, pb) in a.phases.iter().zip(&b.phases) {
+        assert_eq!(pa.label, pb.label, "{ctx}: phase label");
+        assert_eq!(pa.jobs_completed, pb.jobs_completed, "{ctx}");
+        assert_eq!(
+            pa.energy_j.to_bits(),
+            pb.energy_j.to_bits(),
+            "{ctx}: phase energy"
+        );
+    }
+}
+
+/// Fresh-build vs worker-reuse bit-identity across **all registered
+/// schedulers** (the `builtin_names()` registry): the worker runs a
+/// decoy config first so any state leak through reset would surface.
+#[test]
+fn worker_reuse_is_bit_identical_for_all_registered_schedulers() {
+    let p = Platform::table2_soc();
+    let apps = wifi_apps();
+    let artifacts = ds3r::runtime::artifacts_available(
+        &ds3r::runtime::default_artifacts_dir(),
+    );
+    let decoy = base_cfg("rr", 6.0, 40);
+    let setup = SimSetup::new(&p, &apps, &decoy).unwrap();
+    let mut slot: Option<SimWorker> = None;
+    for &name in sched::builtin_names() {
+        if name == "etf-xla" && !artifacts {
+            continue; // needs AOT artifacts on disk
+        }
+        let cfg = base_cfg(name, 3.0, 60);
+        let fresh = Simulation::build(&p, &apps, &cfg)
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .run();
+        // Dirty the worker with the decoy, then reset into `cfg`.
+        let w = SimWorker::obtain(&mut slot, &setup, &decoy).unwrap();
+        w.run(&setup);
+        w.reset(&setup, &cfg).unwrap();
+        w.run(&setup);
+        let reused = w.take_report();
+        assert_bit_identical(name, &reused, &fresh);
+    }
+}
+
+/// Same contract across **all five scenario presets** (timeline
+/// execution, phase accounting, fault/hotplug, power-budget changes and
+/// scheduler hot-swaps all pass through the reset path).
+#[test]
+fn worker_reuse_is_bit_identical_for_all_scenario_presets() {
+    let p = Platform::table2_soc();
+    let apps = wifi_apps();
+    let plain = base_cfg("etf", 4.0, 150);
+    let setup = SimSetup::new(&p, &apps, &plain).unwrap();
+    let mut slot: Option<SimWorker> = None;
+    let all = presets::all();
+    assert_eq!(all.len(), 5, "preset roster changed — update the test");
+    for sc in all {
+        let name = sc.name.clone();
+        let mut cfg = plain.clone();
+        cfg.scenario = Some(sc);
+        let fresh = Simulation::build(&p, &apps, &cfg)
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .run();
+        let w = SimWorker::obtain(&mut slot, &setup, &plain).unwrap();
+        w.run(&setup);
+        w.reset(&setup, &cfg).unwrap();
+        w.run(&setup);
+        let reused = w.take_report();
+        assert_bit_identical(&name, &reused, &fresh);
+        assert_eq!(reused.scenario, name);
+    }
+}
+
+/// Re-binding one worker across *different* platform setups (the DSE
+/// evaluator's cross-genome reuse) must equal fresh builds on each.
+#[test]
+fn worker_rebinds_across_platform_setups() {
+    let p_cool = Platform::table2_soc();
+    let mut p_hot = Platform::table2_soc();
+    p_hot.t_ambient = 50.0;
+    let apps = wifi_apps();
+    let cfg = base_cfg("etf", 3.0, 80);
+    let s_cool = SimSetup::new(&p_cool, &apps, &cfg).unwrap();
+    let s_hot =
+        SimSetup::with_owned_platform(p_hot.clone(), &apps, &cfg).unwrap();
+    let mut slot: Option<SimWorker> = None;
+    for _ in 0..2 {
+        let w = SimWorker::obtain(&mut slot, &s_cool, &cfg).unwrap();
+        w.run(&s_cool);
+        let cool = w.take_report();
+        let w = SimWorker::obtain(&mut slot, &s_hot, &cfg).unwrap();
+        w.run(&s_hot);
+        let hot = w.take_report();
+        let fresh_cool =
+            Simulation::build(&p_cool, &apps, &cfg).unwrap().run();
+        let fresh_hot =
+            Simulation::build(&p_hot, &apps, &cfg).unwrap().run();
+        assert_bit_identical("cool", &cool, &fresh_cool);
+        assert_bit_identical("hot", &hot, &fresh_hot);
+        assert!(hot.peak_temp_c > cool.peak_temp_c);
+    }
+}
+
+/// The pooled fan-out pins one worker per thread; 1 thread vs 8 threads
+/// must produce identical outputs even when workers are reused across
+/// many heterogeneous points.
+#[test]
+fn pooled_fanout_is_thread_count_invariant() {
+    let p = Platform::table2_soc();
+    let apps = wifi_apps();
+    let base = base_cfg("etf", 2.0, 40);
+    let setup = SimSetup::new(&p, &apps, &base).unwrap();
+    let setup = &setup;
+    let points: Vec<(u64, f64)> = (0..12)
+        .map(|i| (i as u64, 1.0 + (i % 4) as f64))
+        .collect();
+    let run_all = |threads: usize| -> Vec<(Vec<f64>, u64, u64)> {
+        parallel_map_pooled(
+            &points,
+            threads,
+            || None::<SimWorker>,
+            |slot, _, &(seed, rate)| {
+                let mut cfg = base.clone();
+                cfg.seed = seed;
+                cfg.injection_rate_per_ms = rate;
+                let w = SimWorker::obtain(slot, setup, &cfg)?;
+                let r = w.run(setup);
+                Ok((
+                    r.job_latencies_us.clone(),
+                    r.events_processed,
+                    r.total_energy_j.to_bits(),
+                ))
+            },
+        )
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect()
+    };
+    let serial = run_all(1);
+    let wide = run_all(8);
+    assert_eq!(serial, wide);
+}
+
+/// End-to-end: `run_sweep` (now pooled) against the serial reference,
+/// and across thread counts.
+#[test]
+fn run_sweep_pooled_matches_across_thread_counts() {
+    let p = Platform::table2_soc();
+    let apps = wifi_apps();
+    let mut base = SimConfig::default();
+    base.max_jobs = 40;
+    base.warmup_jobs = 5;
+    let pts =
+        coordinator::fig3_points(&["etf", "met", "rr"], &[0.5, 2.0], 11);
+    let serial =
+        coordinator::run_sweep(&p, &apps, &base, &pts, 1).unwrap();
+    let wide = coordinator::run_sweep(&p, &apps, &base, &pts, 8).unwrap();
+    for (a, b) in serial.iter().zip(&wide) {
+        assert_eq!(a.avg_latency_us.to_bits(), b.avg_latency_us.to_bits());
+        assert_eq!(a.p95_latency_us.to_bits(), b.p95_latency_us.to_bits());
+        assert_eq!(
+            a.energy_per_job_mj.to_bits(),
+            b.energy_per_job_mj.to_bits()
+        );
+        assert_eq!(a.completed_jobs, b.completed_jobs);
+        assert_eq!(a.peak_temp_c.to_bits(), b.peak_temp_c.to_bits());
+    }
+}
+
+/// The learn pipeline end-to-end through pooled workers: training and
+/// evaluation must produce byte-identical artifacts for 1 vs 8 threads
+/// (worker pinning may hand different points to different workers, but
+/// results land in input order and every run is reset-clean).
+#[test]
+fn learn_pipeline_artifacts_identical_across_thread_counts() {
+    use ds3r::learn::{self, LearnConfig};
+    let p = Platform::table2_soc();
+    let apps = wifi_apps();
+    let run = |threads: usize| {
+        let mut lc = LearnConfig::default();
+        lc.seeds = vec![3, 9];
+        lc.rates_per_ms = vec![1.5, 3.0];
+        lc.rounds = 2;
+        lc.epochs = 3;
+        lc.sim.max_jobs = 30;
+        lc.sim.warmup_jobs = 3;
+        lc.threads = threads;
+        let (model, summary) =
+            learn::train_policy(&p, &apps, &lc).unwrap();
+        let artifact = model.to_json().to_string();
+        let report = learn::evaluate(&p, &apps, &lc, &model).unwrap();
+        (artifact, summary.samples, report)
+    };
+    let (art1, samples1, rep1) = run(1);
+    let (art8, samples8, rep8) = run(8);
+    assert_eq!(samples1, samples8, "datasets diverged across threads");
+    assert_eq!(art1, art8, "policy artifact bytes diverged");
+    assert_eq!(rep1.rows, rep8.rows, "eval rows diverged");
+    assert_eq!(
+        rep1.agreement.to_bits(),
+        rep8.agreement.to_bits(),
+        "agreement diverged"
+    );
+}

@@ -404,6 +404,78 @@ fn prop_sweeps_bit_identical_across_thread_counts() {
     }
 }
 
+/// Worker-reuse property: for random DAGs, random configs, a random
+/// registered scheduler and a random scenario preset, a reused
+/// (reset) `SimWorker` is bit-identical to a fresh build — the
+/// behavioural contract behind every pooled grid loop.
+#[test]
+fn prop_worker_reuse_bit_identical_random_configs() {
+    use ds3r::scenario::presets;
+    use ds3r::sim::{SimSetup, SimWorker};
+    for seed in property_seeds().into_iter().take(10) {
+        let mut rng = Rng::new(seed);
+        let app = random_dag(&mut rng, 18);
+        let p = Platform::table2_soc();
+        let apps = vec![app];
+        let mut cfg = SimConfig::default();
+        cfg.seed = seed;
+        cfg.max_jobs = 40;
+        cfg.warmup_jobs = 0;
+        cfg.injection_rate_per_ms = rng.uniform(0.5, 6.0);
+        // "ilp"/"table" and "il" included: the registry is the roster.
+        let names = ds3r::sched::builtin_names();
+        loop {
+            cfg.scheduler =
+                names[rng.below(names.len() as u64) as usize].into();
+            if cfg.scheduler != "etf-xla" {
+                break; // needs on-disk artifacts; skip in properties
+            }
+        }
+        if rng.f64() < 0.5 {
+            let all = presets::all();
+            cfg.scenario =
+                Some(all[rng.below(all.len() as u64) as usize].clone());
+        }
+        let fresh = Simulation::build(&p, &apps, &cfg)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"))
+            .run();
+        // Dirty a worker with a different config, then reset into cfg.
+        let mut decoy = cfg.clone();
+        decoy.scheduler = "rr".into();
+        decoy.scenario = None;
+        decoy.max_jobs = 15;
+        let setup = SimSetup::new(&p, &apps, &cfg).unwrap();
+        let mut w = SimWorker::build(&setup, &decoy).unwrap();
+        w.run(&setup);
+        w.reset(&setup, &cfg).unwrap();
+        w.run(&setup);
+        let reused = w.take_report();
+        assert_eq!(
+            reused.job_latencies_us, fresh.job_latencies_us,
+            "seed {seed} [{}]: latencies diverged",
+            cfg.scheduler
+        );
+        assert_eq!(
+            reused.events_processed, fresh.events_processed,
+            "seed {seed} [{}]: event counts diverged",
+            cfg.scheduler
+        );
+        assert_eq!(
+            reused.total_energy_j.to_bits(),
+            fresh.total_energy_j.to_bits(),
+            "seed {seed} [{}]: energy diverged",
+            cfg.scheduler
+        );
+        assert_eq!(
+            reused.peak_temp_c.to_bits(),
+            fresh.peak_temp_c.to_bits(),
+            "seed {seed} [{}]: peak temp diverged",
+            cfg.scheduler
+        );
+        assert_eq!(reused.scenario_events, fresh.scenario_events);
+    }
+}
+
 #[test]
 fn prop_random_dag_json_roundtrip() {
     for seed in property_seeds() {
