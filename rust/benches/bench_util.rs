@@ -77,6 +77,32 @@ pub fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
     median
 }
 
+/// Build a timing-enabled telemetry handle from `TELEMETRY_OUT`
+/// (`-` streams to stderr, anything else is a JSONL file path).
+/// Returns a disabled handle when the variable is unset, so callers
+/// can `emit` unconditionally.
+pub fn telemetry_from_env() -> ds3r::telemetry::Telemetry {
+    use ds3r::telemetry::{JsonlSink, Telemetry};
+    use std::sync::Arc;
+    let Ok(out) = std::env::var("TELEMETRY_OUT") else {
+        return Telemetry::disabled();
+    };
+    let sink = if out == "-" {
+        JsonlSink::stderr()
+    } else {
+        match JsonlSink::create(std::path::Path::new(&out)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("could not open TELEMETRY_OUT {out}: {e}");
+                return Telemetry::disabled();
+            }
+        }
+    };
+    // Bench records are wall-clock measurements; a non-timing sink
+    // would drop every one of them.
+    Telemetry::new(Arc::new(sink.with_timing(true)))
+}
+
 /// Time a single long-running closure, printing seconds.
 pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
     let t0 = Instant::now();

@@ -24,6 +24,10 @@
 //!   `BENCH_baseline.json`): the one-command refresh documented in
 //!   README §Performance.  Run it on a trusted machine from `main`,
 //!   then commit the refreshed baseline to arm the tight gate.
+//! * `TELEMETRY_OUT=path|-` — additionally stream each kernel
+//!   measurement as `bench_record` telemetry events (README
+//!   §Observability), so bench trajectories land in the same JSONL
+//!   stream as campaign telemetry.
 
 mod bench_util;
 
@@ -32,6 +36,7 @@ use ds3r::config::SimConfig;
 use ds3r::platform::Platform;
 use ds3r::sim::queue::{Event, EventQueue};
 use ds3r::sim::Simulation;
+use ds3r::telemetry::Event as TelEvent;
 use ds3r::thermal::RcModel;
 use ds3r::util::json::Json;
 
@@ -89,6 +94,16 @@ fn main() {
             sched_overhead_us: r.sched_overhead_us(),
         });
     }
+    let tel = bench_util::telemetry_from_env();
+    for k in &kernels {
+        tel.emit(|| TelEvent::BenchRecord {
+            bench: "perf_hotpath".into(),
+            name: format!("kernel.{}.events_per_s", k.name),
+            value: k.events_per_s,
+            unit: "events/s".into(),
+        });
+    }
+    tel.flush();
     let record = write_bench_json(&kernels, smoke, jobs, runs);
     if std::env::args().any(|a| a == "--write-baseline") {
         let base = std::env::var("BENCH_BASELINE")
@@ -146,6 +161,82 @@ fn main() {
             r_scen.scenario_events,
             r_scen.phases.len()
         );
+    }
+
+    println!("=== telemetry overhead guard (disabled vs null sink) ===");
+    // The observability contract (README §Observability): telemetry
+    // must be free on the hot path.  The kernel emits no per-event
+    // telemetry — only counters folded from `SimReport` afterwards —
+    // so a run with the global dispatcher disabled and a run with an
+    // enabled null sink must deliver the same events/s.  Interleave
+    // the two configurations so thermal/cache drift hits both sides
+    // equally, then compare medians; the disabled path losing more
+    // than the floor vs the null-sink path fails the bench.
+    {
+        use ds3r::telemetry::{self, Sink, Telemetry};
+        use std::sync::Arc;
+
+        struct NullSink;
+        impl Sink for NullSink {
+            fn emit(&self, _ev: &TelEvent) {}
+        }
+
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = "etf".into();
+        cfg.injection_rate_per_ms = 9.0;
+        cfg.max_jobs = jobs;
+        cfg.warmup_jobs = jobs / 20;
+        cfg.max_sim_us = 30_000_000.0;
+        let measure = || {
+            let t0 = std::time::Instant::now();
+            let r =
+                Simulation::build(&platform, &apps, &cfg).unwrap().run();
+            r.events_processed as f64 / t0.elapsed().as_secs_f64()
+        };
+        std::hint::black_box(measure()); // warmup
+        let mut eps_dis = Vec::with_capacity(runs);
+        let mut eps_null = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            telemetry::set_global(Telemetry::disabled());
+            eps_dis.push(measure());
+            telemetry::set_global(Telemetry::new(Arc::new(NullSink)));
+            eps_null.push(measure());
+        }
+        telemetry::set_global(Telemetry::disabled());
+        let median = |v: &mut Vec<f64>| {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let d = median(&mut eps_dis);
+        let n = median(&mut eps_null);
+        // Short smoke runs carry more fixed cost per run, so the 1%
+        // contract is checked at a relaxed floor there.
+        let floor = if smoke { 0.90 } else { 0.99 };
+        println!(
+            "{:>48} {d:>12.0} events/s disabled | {n:>12.0} events/s \
+             null sink ({:+.2}%) — guard: disabled within {:.0}%\n",
+            "",
+            (n / d - 1.0) * 100.0,
+            (1.0 - floor) * 100.0
+        );
+        tel.emit(|| TelEvent::BenchRecord {
+            bench: "perf_hotpath".into(),
+            name: "telemetry.disabled_vs_null_sink".into(),
+            value: d / n,
+            unit: "ratio".into(),
+        });
+        tel.flush();
+        if d < floor * n {
+            eprintln!(
+                "TELEMETRY REGRESSION: disabled dispatcher delivered \
+                 {:.1}% fewer events/s than an enabled null sink \
+                 (allowed: {:.0}%) — the disabled fast path is no \
+                 longer free",
+                (1.0 - d / n) * 100.0,
+                (1.0 - floor) * 100.0
+            );
+            std::process::exit(1);
+        }
     }
 
     println!("=== event queue ===");

@@ -28,6 +28,9 @@
 //! * `-- --write-baseline` — additionally write this run's record to
 //!   the baseline path (refresh-and-commit workflow; see README
 //!   §Performance)
+//! * `TELEMETRY_OUT=path|-` — additionally stream each grid
+//!   measurement as `bench_record` telemetry events (README
+//!   §Observability)
 
 mod bench_util;
 
@@ -36,6 +39,7 @@ use ds3r::app::AppGraph;
 use ds3r::config::SimConfig;
 use ds3r::platform::Platform;
 use ds3r::sim::{SimSetup, SimWorker, Simulation};
+use ds3r::telemetry::Event as TelEvent;
 use ds3r::util::json::Json;
 
 /// One (scheduler, rate, seed) grid point.
@@ -206,6 +210,22 @@ fn main() {
         median_s: tput_st.median_s,
     });
 
+    let tel = bench_util::telemetry_from_env();
+    for g in &results {
+        tel.emit(|| TelEvent::BenchRecord {
+            bench: "perf_sweep".into(),
+            name: format!("grid.{}.sims_per_s", g.name),
+            value: g.sims_per_s,
+            unit: "sims/s".into(),
+        });
+    }
+    tel.emit(|| TelEvent::BenchRecord {
+        bench: "perf_sweep".into(),
+        name: "probe.pooled_vs_fresh".into(),
+        value: speedup,
+        unit: "ratio".into(),
+    });
+    tel.flush();
     write_json(&results, speedup, smoke, write_baseline);
     if !write_baseline {
         // (In --write-baseline mode the file was just overwritten with

@@ -15,14 +15,32 @@
 //! * `validate`   — analytical model vs fine-grained reference
 //!   (the paper's FPGA validation, simulated — DESIGN.md §Substitutions).
 //! * `list`       — available schedulers, governors, applications.
+//!
+//! Observability flags shared by every subcommand: `--telemetry
+//! <path|->` streams structured JSONL events ([`crate::telemetry`]),
+//! `--telemetry-timing` adds wall-clock fields/events to that stream,
+//! `--progress` renders live progress lines on stderr, and
+//! `--log-format json|text` picks how library diagnostics are rendered.
+//! The CLI is the only layer that turns events into print lines — CI
+//! denies `print_stdout`/`print_stderr` everywhere else in `rust/src/`,
+//! hence the file-level allow below.
+
+// The one module (with main.rs) where rendering text to the terminal
+// is the job.
+#![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use crate::app::{suite, AppGraph};
 use crate::config::SimConfig;
 use crate::coordinator;
 use crate::platform::Platform;
 use crate::sim::Simulation;
+use crate::telemetry::{
+    self, Counters, Event, FanoutSink, JsonlSink, Sink, SpanTimer,
+    Telemetry,
+};
 use crate::util::plot;
 use crate::{Error, Result};
 
@@ -263,6 +281,144 @@ pub fn apps_from_args(args: &Args) -> Result<Vec<AppGraph>> {
 }
 
 // ---------------------------------------------------------------------------
+// Telemetry wiring (--telemetry / --telemetry-timing / --progress /
+// --log-format)
+// ---------------------------------------------------------------------------
+
+/// Render selected events as human text on stderr — the only place in
+/// the library where telemetry becomes print lines.  Diagnostics are
+/// always rendered (`--log-format` picks text vs JSONL); progress-class
+/// events only under `--progress`.
+struct StderrRenderSink {
+    progress: bool,
+    json_logs: bool,
+}
+
+impl Sink for StderrRenderSink {
+    fn emit(&self, ev: &Event) {
+        match ev {
+            Event::Diagnostic { component, message } => {
+                if self.json_logs {
+                    eprintln!("{}", ev.to_json(true).to_string());
+                } else {
+                    eprintln!("{component}: {message}");
+                }
+            }
+            Event::SweepProgress {
+                completed,
+                total,
+                sims_per_s,
+                eta_s,
+            } if self.progress => {
+                eprintln!(
+                    "progress: {completed}/{total} sims \
+                     ({sims_per_s:.1}/s, eta {eta_s:.0}s)"
+                );
+            }
+            Event::DseGeneration { stats } if self.progress => {
+                eprintln!(
+                    "dse gen {:>3}: evals {:>3} (cache {:>2}) front \
+                     {:>3} hv {:.4}",
+                    stats.generation,
+                    stats.evals,
+                    stats.cache_hits,
+                    stats.front_size,
+                    stats.hypervolume
+                );
+            }
+            Event::LearnRound { round, samples, agreement }
+                if self.progress =>
+            {
+                let agree = agreement
+                    .map(|a| format!(" agreement {:.1}%", a * 100.0))
+                    .unwrap_or_default();
+                eprintln!("learn round {round}: {samples} samples{agree}");
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Build the process telemetry handle from the shared observability
+/// flags and install it as the global dispatcher (library diagnostics
+/// route through it).  Returns the handle for explicit threading into
+/// grid workloads.
+///
+/// * `--telemetry <path|->` — JSONL event stream to a file, or to
+///   stderr for `-`.  Deterministic by default: wall-clock events and
+///   fields are excluded, so fixed-seed streams are byte-identical
+///   across thread counts.
+/// * `--telemetry-timing` — include wall-clock events/fields (progress
+///   rates, spans, run wall time) in the JSONL stream.
+/// * `--progress` — live progress lines on stderr.
+/// * `--log-format json|text` — diagnostics as JSONL or plain text
+///   (default `text`, matching the pre-telemetry `eprintln!` output).
+pub fn init_telemetry(args: &Args) -> Result<Telemetry> {
+    let log_format = args.str_or("log-format", "text");
+    if log_format != "text" && log_format != "json" {
+        return Err(Error::Config(format!(
+            "--log-format: want json|text, got '{log_format}'"
+        )));
+    }
+    let mut sinks: Vec<Arc<dyn Sink>> = Vec::new();
+    if args.has("telemetry") {
+        let target = args.str_or("telemetry", "-");
+        let sink = if target == "-" {
+            JsonlSink::stderr()
+        } else {
+            JsonlSink::create(std::path::Path::new(&target))?
+        };
+        sinks.push(Arc::new(
+            sink.with_timing(args.has("telemetry-timing")),
+        ));
+    }
+    sinks.push(Arc::new(StderrRenderSink {
+        progress: args.has("progress"),
+        json_logs: log_format == "json",
+    }));
+    let tel = if sinks.len() == 1 {
+        Telemetry::new(sinks.pop().expect("one sink"))
+    } else {
+        Telemetry::new(Arc::new(FanoutSink::new(sinks)))
+    };
+    telemetry::set_global(tel.clone());
+    Ok(tel)
+}
+
+/// Emit the campaign-opening [`Event::RunStarted`] manifest: canonical
+/// config hash, seed, scheduler, and `git describe` environment stamp.
+fn emit_run_started(
+    tel: &Telemetry,
+    cmd: &'static str,
+    cfg: &SimConfig,
+) {
+    tel.emit(|| Event::RunStarted {
+        cmd: cmd.to_string(),
+        config_hash: telemetry::config_hash(&cfg.to_json().to_string()),
+        seed: cfg.seed,
+        scheduler: cfg.scheduler.clone(),
+        git: telemetry::git_describe(),
+    });
+}
+
+/// Emit the closing [`Event::RunFinished`] with the campaign's
+/// aggregated deterministic counters (wall time is a timing-gated
+/// field).
+fn emit_run_finished(
+    tel: &Telemetry,
+    cmd: &'static str,
+    counters: Counters,
+    t0: SpanTimer,
+) {
+    tel.emit(|| Event::RunFinished {
+        cmd: cmd.to_string(),
+        counters,
+        wall_s: t0.elapsed_s(),
+    });
+    tel.flush();
+}
+
+// ---------------------------------------------------------------------------
 // Subcommand drivers (each returns the text it printed, for testability)
 // ---------------------------------------------------------------------------
 
@@ -290,7 +446,11 @@ pub fn cmd_run(args: &Args) -> Result<String> {
         )?;
         return Ok(format!("recorded {} arrivals to {out}\n", trace.len()));
     }
+    let tel = telemetry::global();
+    let t0 = SpanTimer::start();
+    emit_run_started(&tel, "run", &cfg);
     let report = Simulation::build(&platform, &apps, &cfg)?.run();
+    emit_run_finished(&tel, "run", Counters::from_report(&report), t0);
     let mut out = report.summary();
     if cfg.capture_gantt {
         let hi = report
@@ -318,8 +478,13 @@ pub fn cmd_sweep(args: &Args) -> Result<String> {
     let threads = args.usize_or("threads", default_threads())?;
 
     let points = coordinator::fig3_points(&sched_refs, &rates, cfg.seed);
-    let results =
-        coordinator::run_sweep(&platform, &apps, &cfg, &points, threads)?;
+    let tel = telemetry::global();
+    let t0 = SpanTimer::start();
+    emit_run_started(&tel, "sweep", &cfg);
+    let (results, counters) = coordinator::run_sweep_with(
+        &platform, &apps, &cfg, &points, threads, &tel,
+    )?;
+    emit_run_finished(&tel, "sweep", counters, t0);
 
     let mut rows = Vec::new();
     for r in &results {
@@ -490,9 +655,13 @@ fn cmd_scenario_sweep(args: &Args) -> Result<String> {
         .map(|n| crate::scenario::resolve(n))
         .collect::<Result<Vec<_>>>()?;
     let threads = args.usize_or("threads", default_threads())?;
-    let results = coordinator::run_scenario_sweep(
-        &platform, &apps, &cfg, &scenarios, threads,
+    let tel = telemetry::global();
+    let t0 = SpanTimer::start();
+    emit_run_started(&tel, "scenario-sweep", &cfg);
+    let (results, counters) = coordinator::run_scenario_sweep_with(
+        &platform, &apps, &cfg, &scenarios, threads, &tel,
     )?;
+    emit_run_finished(&tel, "scenario-sweep", counters, t0);
 
     let mut out = String::new();
     let mut rows = Vec::new();
@@ -616,6 +785,35 @@ fn dse_config_from_args(args: &Args) -> Result<crate::dse::DseConfig> {
     Ok(cfg)
 }
 
+/// Emit the `dse run`/`dse resume` opening manifest (the DSE analogue
+/// of [`emit_run_started`]: the hash covers the whole search config).
+fn emit_dse_started(
+    tel: &Telemetry,
+    cmd: &'static str,
+    cfg: &crate::dse::DseConfig,
+) {
+    tel.emit(|| Event::RunStarted {
+        cmd: cmd.to_string(),
+        config_hash: telemetry::config_hash(&cfg.to_json().to_string()),
+        seed: cfg.search_seed,
+        scheduler: cfg.sim.scheduler.clone(),
+        git: telemetry::git_describe(),
+    });
+}
+
+/// Aggregate a search's generation history into deterministic run
+/// counters for [`Event::RunFinished`].
+fn dse_counters(history: &[crate::stats::DseGenStats]) -> Counters {
+    let mut c = Counters::new();
+    for s in history {
+        c.add("generations", 1);
+        c.add("evals", s.evals as u64);
+        c.add("cache_hits", s.cache_hits as u64);
+        c.add("sims", s.sims as u64);
+    }
+    c
+}
+
 fn dse_progress_line(s: &crate::stats::DseGenStats) -> String {
     let best = s
         .best
@@ -728,6 +926,10 @@ fn cmd_dse_run(args: &Args) -> Result<String> {
     let budget = cfg.budget_evals();
     let mut engine = crate::dse::DseEngine::new(platform, cfg)?;
     engine.set_workload_meta(dse_workload_meta(&names, symbols, pulses));
+    let tel = telemetry::global();
+    let t0 = SpanTimer::start();
+    emit_dse_started(&tel, "dse-run", engine.config());
+    engine.set_telemetry(tel.clone());
     let mut out = format!(
         "DSE: {} search, budget {} evaluations ({} x {} designs)\n",
         engine.config().algorithm,
@@ -740,6 +942,7 @@ fn cmd_dse_run(args: &Args) -> Result<String> {
         Some(std::path::Path::new(&checkpoint)),
         |s| out.push_str(&dse_progress_line(s)),
     )?;
+    emit_run_finished(&tel, "dse-run", dse_counters(engine.history()), t0);
     out.push('\n');
     out.push_str(&dse_front_table(&engine));
     out.push_str(&format!(
@@ -831,9 +1034,14 @@ fn cmd_dse_resume(args: &Args) -> Result<String> {
             dse_front_table(&engine)
         ));
     }
+    let tel = telemetry::global();
+    let t0 = SpanTimer::start();
+    emit_dse_started(&tel, "dse-resume", engine.config());
+    engine.set_telemetry(tel.clone());
+    let resumed_at = engine.completed_generations();
     let mut out = format!(
-        "resuming from {checkpoint} at generation {} (target {})\n",
-        engine.completed_generations(),
+        "resuming from {checkpoint} at generation {resumed_at} \
+         (target {})\n",
         engine.target_generations(),
     );
     engine.run(
@@ -841,6 +1049,12 @@ fn cmd_dse_resume(args: &Args) -> Result<String> {
         Some(std::path::Path::new(&checkpoint)),
         |s| out.push_str(&dse_progress_line(s)),
     )?;
+    emit_run_finished(
+        &tel,
+        "dse-resume",
+        dse_counters(&engine.history()[resumed_at..]),
+        t0,
+    );
     out.push('\n');
     out.push_str(&dse_front_table(&engine));
     Ok(out)
@@ -1060,8 +1274,24 @@ pub fn cmd_learn(args: &Args) -> Result<String> {
                 )
             } else {
                 // Full DAgger pipeline: collect -> train, lc.rounds x.
-                let (model, summary) =
-                    crate::learn::train_policy(&platform, &apps, &lc)?;
+                let tel = telemetry::global();
+                let t0 = SpanTimer::start();
+                tel.emit(|| Event::RunStarted {
+                    cmd: "learn-train".to_string(),
+                    config_hash: telemetry::config_hash(
+                        &lc.to_json().to_string(),
+                    ),
+                    seed: lc.train_seed,
+                    scheduler: lc.oracle.clone(),
+                    git: telemetry::git_describe(),
+                });
+                let (model, summary) = crate::learn::train_policy_with(
+                    &platform, &apps, &lc, &tel,
+                )?;
+                let mut counters = Counters::new();
+                counters.add("rounds", summary.rounds as u64);
+                counters.add("samples", summary.samples as u64);
+                emit_run_finished(&tel, "learn-train", counters, t0);
                 let agree = summary
                     .agreement
                     .map(|a| format!(", last-round agreement {:.1}%", a * 100.0))
@@ -1378,6 +1608,22 @@ USAGE:
                  [--rates lo:hi:step] [--csv fig3.csv]
   ds3r validate  [--jobs 200]
   ds3r list
+
+OBSERVABILITY (any subcommand):
+  --telemetry <path|->   stream structured JSONL events to a file, or
+                         stderr for '-' (run_started/run_finished with
+                         config hash + seed + git describe, per-phase
+                         scenario stats, dse_generation, learn_round,
+                         diagnostics).  Deterministic by default: same
+                         config + seed give byte-identical streams for
+                         any --threads value.
+  --telemetry-timing     include wall-clock events/fields (sweep
+                         progress rates, ETAs, spans, run wall time)
+  --progress             live progress lines on stderr (completed/total
+                         + sims/s for sweeps, per-generation DSE stats,
+                         per-round learn agreement)
+  --log-format json|text render library diagnostics as JSONL or text
+                         (default text)
 ";
 
 #[cfg(test)]
@@ -1436,6 +1682,49 @@ mod tests {
         assert_eq!(c.dtpm.throttle_temp_c, 80.0);
         assert_eq!(c.dtpm.power_cap_w, Some(5.5));
         assert!(c.capture_traces);
+    }
+
+    /// Serializes the tests that install the process-global telemetry
+    /// dispatcher (cargo runs tests in parallel threads).
+    static TEL_GLOBAL_LOCK: std::sync::Mutex<()> =
+        std::sync::Mutex::new(());
+
+    #[test]
+    fn telemetry_flags_stream_wellformed_jsonl() {
+        let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("ds3r_cli_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let a = args(&format!(
+            "sweep --scheds etf --rates 1,2 --jobs 30 --warmup 3 \
+             --threads 2 --telemetry {}",
+            path.display()
+        ));
+        init_telemetry(&a).unwrap();
+        cmd_sweep(&a).unwrap();
+        telemetry::set_global(Telemetry::disabled());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"event\": \"run_started\""), "{text}");
+        assert!(text.contains("\"event\": \"run_finished\""), "{text}");
+        assert!(text.contains("\"config_hash\""), "{text}");
+        // Default stream is deterministic: wall-clock progress events
+        // and wall_s are excluded.
+        assert!(!text.contains("sweep_progress"), "{text}");
+        assert!(!text.contains("wall_s"), "{text}");
+        for line in text.lines() {
+            crate::util::json::Json::parse(line).unwrap_or_else(|e| {
+                panic!("malformed JSONL line '{line}': {e}")
+            });
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bad_log_format_is_rejected_before_installing() {
+        let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+        assert!(init_telemetry(&args("run --log-format yaml")).is_err());
+        assert!(init_telemetry(&args("run --log-format json")).is_ok());
+        telemetry::set_global(Telemetry::disabled());
     }
 
     #[test]

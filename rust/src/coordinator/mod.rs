@@ -15,6 +15,14 @@
 //! land in input order regardless of thread interleaving, which is what
 //! makes parallel sweeps and DSE generations bit-identical to their
 //! serial counterparts.
+//!
+//! Telemetry: the `*_with` sweep variants take a
+//! [`Telemetry`](crate::telemetry::Telemetry) handle, stream
+//! [`SweepProgress`](crate::telemetry::Event::SweepProgress) while the
+//! grid runs, and aggregate per-run
+//! [`Counters`](crate::telemetry::Counters) through
+//! [`parallel_map_pooled_counted`], whose input-order fold makes the
+//! aggregate independent of thread count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -25,6 +33,7 @@ use crate::platform::Platform;
 use crate::scenario::Scenario;
 use crate::sim::{SimSetup, SimWorker, Simulation};
 use crate::stats::{PhaseStats, SimReport};
+use crate::telemetry::{Counters, Event, SpanTimer, Telemetry};
 use crate::util::plot::Series;
 use crate::{Error, Result};
 
@@ -84,6 +93,50 @@ where
         .into_iter()
         .map(|r| r.expect("all items filled"))
         .collect()
+}
+
+/// [`parallel_map_pooled`] plus deterministic telemetry counters: `f`
+/// additionally receives a per-item [`Counters`] registry, and the
+/// per-item registries are folded **in input order** into one
+/// aggregate.  Counter addition is commutative, but pinning the fold
+/// order makes the aggregate independent of thread interleaving by
+/// construction — a 1-thread and an 8-thread grid emit byte-identical
+/// aggregated telemetry (asserted by
+/// `rust/tests/integration_telemetry.rs`) and the contract survives
+/// future non-commutative merges (e.g. "last value wins" gauges).
+///
+/// Items that fail contribute no counters (their `f` call returned
+/// `Err` before finishing its run).
+pub fn parallel_map_pooled_counted<T, R, W, I, F>(
+    items: &[T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> (Vec<Result<R>>, Counters)
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, &mut Counters, usize, &T) -> Result<R> + Sync,
+{
+    let results =
+        parallel_map_pooled(items, threads, init, |state, i, t| {
+            let mut c = Counters::new();
+            let r = f(state, &mut c, i, t)?;
+            Ok((r, c))
+        });
+    let mut total = Counters::new();
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        match r {
+            Ok((v, c)) => {
+                total.merge(&c);
+                out.push(Ok(v));
+            }
+            Err(e) => out.push(Err(e)),
+        }
+    }
+    (out, total)
 }
 
 /// Stateless fan-out over `items` (see [`parallel_map_pooled`] for the
@@ -176,29 +229,97 @@ pub fn run_sweep(
     points: &[SweepPoint],
     threads: usize,
 ) -> Result<Vec<SweepResult>> {
+    run_sweep_with(
+        platform,
+        apps,
+        base,
+        points,
+        threads,
+        &Telemetry::disabled(),
+    )
+    .map(|(res, _)| res)
+}
+
+/// [`run_sweep`] with telemetry: streams
+/// [`Event::SweepProgress`] (completed/total, sims/s, ETA) as points
+/// finish and returns the grid's aggregated deterministic [`Counters`]
+/// alongside the results.  Progress events are wall-clock (emitted from
+/// whichever pool thread finishes a point); the returned counters are
+/// folded in input order and independent of `threads`.
+pub fn run_sweep_with(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    points: &[SweepPoint],
+    threads: usize,
+    tel: &Telemetry,
+) -> Result<(Vec<SweepResult>, Counters)> {
     // One immutable setup for the whole grid; one reusable worker per
     // pool thread (reset per point — no per-point rebuild).
     let setup = SimSetup::new(platform, apps, base)?;
     let setup = &setup;
-    let results = parallel_map_pooled(
+    let progress = GridProgress::start(points.len());
+    let (results, counters) = parallel_map_pooled_counted(
         points,
         threads,
         || None::<SimWorker>,
-        |slot, _, p| {
+        |slot, counters, _, p| {
             let mut cfg = base.clone();
             cfg.scheduler = p.scheduler.clone();
             cfg.injection_rate_per_ms = p.rate_per_ms;
             cfg.seed = p.seed;
             let worker = SimWorker::obtain(slot, setup, &cfg)?;
             let report = worker.run(setup);
+            counters.merge(&Counters::from_report(report));
+            progress.emit_done(tel);
             Ok(SweepResult::from_report(p.clone(), report))
         },
     );
-    collect_results(
+    let results = collect_results(
         results,
         |i| format!("{}@{}", points[i].scheduler, points[i].rate_per_ms),
         "sweep failures",
-    )
+    )?;
+    Ok((results, counters))
+}
+
+/// Shared completion tracker behind [`Event::SweepProgress`]: an atomic
+/// done-count plus the grid's start instant, emitting one progress
+/// event per finished item from whichever pool thread finished it.
+struct GridProgress {
+    total: usize,
+    done: AtomicUsize,
+    t0: SpanTimer,
+}
+
+impl GridProgress {
+    fn start(total: usize) -> GridProgress {
+        GridProgress {
+            total,
+            done: AtomicUsize::new(0),
+            t0: SpanTimer::start(),
+        }
+    }
+
+    fn emit_done(&self, tel: &Telemetry) {
+        if !tel.enabled() {
+            return;
+        }
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        let elapsed = self.t0.elapsed_s();
+        let rate = if elapsed > 0.0 { done as f64 / elapsed } else { 0.0 };
+        let eta_s = if rate > 0.0 {
+            (self.total.saturating_sub(done)) as f64 / rate
+        } else {
+            0.0
+        };
+        tel.emit(|| Event::SweepProgress {
+            completed: done,
+            total: self.total,
+            sims_per_s: rate,
+            eta_s,
+        });
+    }
 }
 
 /// Condensed result of one scenario sweep point.
@@ -227,20 +348,48 @@ pub fn run_scenario_sweep(
     scenarios: &[Scenario],
     threads: usize,
 ) -> Result<Vec<ScenarioResult>> {
+    run_scenario_sweep_with(
+        platform,
+        apps,
+        base,
+        scenarios,
+        threads,
+        &Telemetry::disabled(),
+    )
+    .map(|(res, _)| res)
+}
+
+/// [`run_scenario_sweep`] with telemetry: streams
+/// [`Event::SweepProgress`] while the grid runs, then emits one
+/// deterministic [`Event::ScenarioPhase`] per phase **in input order**
+/// after collection, and returns the aggregated [`Counters`].
+pub fn run_scenario_sweep_with(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    scenarios: &[Scenario],
+    threads: usize,
+    tel: &Telemetry,
+) -> Result<(Vec<ScenarioResult>, Counters)> {
     let setup = SimSetup::new(platform, apps, base)?;
     let setup = &setup;
-    let results = parallel_map_pooled(
+    let progress = GridProgress::start(scenarios.len());
+    let (results, counters) = parallel_map_pooled_counted(
         scenarios,
         threads,
         || None::<SimWorker>,
-        |slot, _, sc| {
+        |slot, counters, _, sc| {
             let mut cfg = base.clone();
             cfg.scenario = Some(sc.clone());
             let worker = SimWorker::obtain(slot, setup, &cfg)?;
-            worker.run(setup);
-            let r = worker.take_report();
+            // Borrow the report in place: cloning `phases` into the
+            // result lets the worker keep its buffers (latency vectors,
+            // phase list) for capacity-retaining recycle on the next
+            // reset, instead of `take_report` stealing them every run.
+            let r = worker.run(setup);
+            counters.merge(&Counters::from_report(r));
             let s = r.latency_summary();
-            Ok(ScenarioResult {
+            let res = ScenarioResult {
                 scenario: sc.name.clone(),
                 avg_latency_us: s.mean,
                 p95_latency_us: s.p95,
@@ -249,15 +398,29 @@ pub fn run_scenario_sweep(
                 energy_per_job_mj: r.energy_per_job_mj(),
                 avg_power_w: r.avg_power_w,
                 peak_temp_c: r.peak_temp_c,
-                phases: r.phases,
-            })
+                phases: r.phases.clone(),
+            };
+            progress.emit_done(tel);
+            Ok(res)
         },
     );
-    collect_results(
+    let results = collect_results(
         results,
         |i| scenarios[i].name.clone(),
         "scenario sweep failures",
-    )
+    )?;
+    // Per-phase events are deterministic, so they are emitted here —
+    // post-collection, in input order, from the calling thread — never
+    // concurrently from the pool.
+    for res in &results {
+        for phase in &res.phases {
+            tel.emit(|| Event::ScenarioPhase {
+                scenario: res.scenario.clone(),
+                phase: phase.clone(),
+            });
+        }
+    }
+    Ok((results, counters))
 }
 
 /// Build the Figure-3 point grid: every scheduler at every rate.
@@ -432,6 +595,71 @@ mod tests {
         // ≥ 8 items through its pinned state (pigeonhole) — the state
         // visibly persisted across items.
         assert!(deepest >= 8, "state not reused: max depth {deepest}");
+    }
+
+    #[test]
+    fn counted_map_aggregates_in_input_order_across_thread_counts() {
+        let items: Vec<u64> = (0..40).collect();
+        let run = |threads: usize| {
+            parallel_map_pooled_counted(
+                &items,
+                threads,
+                || (),
+                |_, c, _, &x| {
+                    c.add("sum", x);
+                    c.add("items", 1);
+                    if x == 11 {
+                        return Err(crate::Error::Sim("skip".into()));
+                    }
+                    Ok(x)
+                },
+            )
+        };
+        let (res1, c1) = run(1);
+        let (res8, c8) = run(8);
+        assert_eq!(res1.len(), 40);
+        assert_eq!(c1, c8, "aggregate must not depend on thread count");
+        assert_eq!(
+            c1.to_json().to_string(),
+            c8.to_json().to_string(),
+            "serialized counters must be byte-identical"
+        );
+        // The failing item (x == 11) contributes nothing.
+        assert_eq!(c1.get("items"), 39);
+        assert_eq!(c1.get("sum"), (0..40).sum::<u64>() - 11);
+        assert!(res8[11].is_err());
+    }
+
+    #[test]
+    fn sweep_with_streams_progress_and_counters() {
+        use crate::telemetry::MemSink;
+        use std::sync::Arc;
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let pts = fig3_points(&["etf", "met"], &[0.5, 2.0], 3);
+        let sink = Arc::new(MemSink::new().with_timing(true));
+        let tel = Telemetry::new(sink.clone());
+        let (res, counters) =
+            run_sweep_with(&p, &apps, &small_base(), &pts, 2, &tel)
+                .unwrap();
+        assert_eq!(res.len(), 4);
+        // One progress event per point, last one reporting 4/4.
+        let lines = sink.lines();
+        let progress: Vec<&String> = lines
+            .iter()
+            .filter(|l| l.contains("\"sweep_progress\""))
+            .collect();
+        assert_eq!(progress.len(), 4, "{lines:?}");
+        assert!(
+            progress.iter().any(|l| l.contains("\"completed\": 4")),
+            "{progress:?}"
+        );
+        // Aggregated counters match the per-point reports.
+        assert_eq!(counters.get("runs"), 4);
+        assert_eq!(
+            counters.get("completed_jobs"),
+            res.iter().map(|r| r.completed_jobs as u64).sum::<u64>()
+        );
     }
 
     #[test]

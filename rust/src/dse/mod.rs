@@ -33,17 +33,21 @@
 //! ```no_run
 //! use ds3r::dse::{DseConfig, DseEngine};
 //! use ds3r::platform::Platform;
+//! use ds3r::telemetry::{JsonlSink, Telemetry};
+//! use std::sync::Arc;
 //!
 //! let mut cfg = DseConfig::default();
 //! cfg.population = 16;
 //! cfg.generations = 13;           // 16 + 13x16 = 224 evaluations
 //! let apps = vec![ds3r::app::suite::wifi_tx(Default::default())];
 //! let mut engine = DseEngine::new(Platform::table2_soc(), cfg).unwrap();
-//! engine.run(&apps, None, |g| println!("gen {}: front {}",
-//!     g.generation, g.front_size)).unwrap();
-//! for p in engine.archive().entries() {
-//!     println!("{:?} -> {:?}", p.genome.id(), p.objectives);
-//! }
+//! // Per-generation progress is a telemetry stream, not print lines:
+//! // each generation emits a deterministic `dse_generation` JSONL
+//! // record (archive size, hypervolume proxy, cache hits).
+//! engine.set_telemetry(Telemetry::new(Arc::new(JsonlSink::stderr())));
+//! engine.run(&apps, None, |_| ()).unwrap();
+//! let best = engine.archive().entries().len();
+//! assert!(best > 0);
 //! ```
 
 pub mod archive;

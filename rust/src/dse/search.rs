@@ -25,6 +25,7 @@ use crate::platform::Platform;
 use crate::rng::Rng;
 use crate::scenario::{Action, Scenario};
 use crate::stats::DseGenStats;
+use crate::telemetry::{Event, Telemetry};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -47,6 +48,11 @@ pub struct DseEngine {
     /// here).  Persisted in the checkpoint so `resume` can rebuild —
     /// and refuse to silently change — the workload.
     workload: Option<Json>,
+    /// Event stream for per-generation summaries
+    /// ([`Event::DseGeneration`]).  Not part of the checkpoint:
+    /// telemetry is an environment concern, re-attached after resume
+    /// (`from_checkpoint` builds the engine with it disabled).
+    telemetry: Telemetry,
 }
 
 impl DseEngine {
@@ -92,7 +98,18 @@ impl DseEngine {
             archive: ParetoArchive::new(),
             history: Vec::new(),
             workload: None,
+            telemetry: Telemetry::disabled(),
         })
+    }
+
+    /// Attach a telemetry handle: every later [`Self::step`] emits one
+    /// deterministic [`Event::DseGeneration`] (archive size,
+    /// hypervolume proxy, cache hits, sims) after the generation
+    /// completes.  Fixed-seed searches emit byte-identical streams
+    /// regardless of `eval_threads` — asserted by
+    /// `rust/tests/integration_telemetry.rs`.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.telemetry = tel;
     }
 
     /// Attach an opaque workload description persisted with every
@@ -208,6 +225,12 @@ impl DseEngine {
             best: self.archive.best_per_objective(),
         };
         self.history.push(stats.clone());
+        // Emitted from the search thread after the generation's grid
+        // has fully collected, so the stream order is deterministic
+        // (`DseGenStats` itself carries no wall-clock fields).
+        self.telemetry.emit(|| Event::DseGeneration {
+            stats: stats.clone(),
+        });
         Ok(stats)
     }
 

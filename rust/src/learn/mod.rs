@@ -48,8 +48,8 @@ pub use features::{FeatureCtx, FEATURE_NAMES, N_FEATURES};
 pub use model::{SoftmaxModel, TrainParams, DEFAULT_GUARD_RATIO};
 pub use policy::{choose_guarded, IlSched, PRESET_POLICY};
 pub use train::{
-    collect_round, evaluate, train_policy, EvalReport, EvalRow,
-    TrainSummary,
+    collect_round, evaluate, train_policy, train_policy_with, EvalReport,
+    EvalRow, TrainSummary,
 };
 
 use crate::config::SimConfig;

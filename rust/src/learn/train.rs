@@ -139,6 +139,25 @@ pub fn train_policy(
     apps: &[AppGraph],
     lc: &LearnConfig,
 ) -> Result<(SoftmaxModel, TrainSummary)> {
+    train_policy_with(
+        platform,
+        apps,
+        lc,
+        &crate::telemetry::Telemetry::disabled(),
+    )
+}
+
+/// [`train_policy`] with telemetry: emits one deterministic
+/// [`LearnRound`](crate::telemetry::Event::LearnRound) event per
+/// DAgger round (round index, aggregated sample count, deployment
+/// agreement — `None` on the behavioural-cloning round 0).  Training
+/// itself is unchanged and bit-identical to [`train_policy`].
+pub fn train_policy_with(
+    platform: &Platform,
+    apps: &[AppGraph],
+    lc: &LearnConfig,
+    tel: &crate::telemetry::Telemetry,
+) -> Result<(SoftmaxModel, TrainSummary)> {
     lc.validate()?;
     let n_classes = platform.classes.len().max(1);
     let params = TrainParams {
@@ -162,8 +181,13 @@ pub fn train_policy(
         &params,
         lc.guard_ratio,
     );
+    tel.emit(|| crate::telemetry::Event::LearnRound {
+        round: 0,
+        samples: agg.len(),
+        agreement: None,
+    });
     let mut agreement = None;
-    for _round in 1..lc.rounds {
+    for round in 1..lc.rounds {
         let (d, dec, mat) =
             collect_round(platform, apps, lc, Some(&model))?;
         if dec > 0 {
@@ -177,6 +201,11 @@ pub fn train_policy(
             &params,
             lc.guard_ratio,
         );
+        tel.emit(|| crate::telemetry::Event::LearnRound {
+            round,
+            samples: agg.len(),
+            agreement,
+        });
     }
     Ok((
         model,

@@ -78,6 +78,7 @@ pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod stats;
+pub mod telemetry;
 pub mod thermal;
 pub mod util;
 

@@ -1,11 +1,13 @@
-//! ds3r launcher: parses the subcommand and dispatches to `cli`.
+//! ds3r launcher: parses the subcommand, installs the process
+//! telemetry (from `--telemetry`/`--progress`/`--log-format`), and
+//! dispatches to `cli`.
 
 use ds3r::cli::{self, Args};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
-    let result = match cmd {
+    let result = cli::init_telemetry(&args).and_then(|_| match cmd {
         "run" => cli::cmd_run(&args),
         "sweep" => cli::cmd_sweep(&args),
         "scenario" => cli::cmd_scenario(&args),
@@ -19,7 +21,8 @@ fn main() {
             "unknown command '{other}'\n\n{}",
             cli::USAGE
         ))),
-    };
+    });
+    ds3r::telemetry::global().flush();
     match result {
         Ok(text) => print!("{text}"),
         Err(e) => {

@@ -265,9 +265,12 @@ impl Scheduler for EtfXla {
                 }
                 Err(e) => {
                     // Device failure mid-run: degrade to the host path.
-                    eprintln!(
-                        "etf-xla: device call failed ({e}); host fallback"
-                    );
+                    crate::telemetry::diag("sched.etf-xla", || {
+                        format!(
+                            "etf-xla: device call failed ({e}); host \
+                             fallback"
+                        )
+                    });
                     device_ok = false;
                 }
             }

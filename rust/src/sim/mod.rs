@@ -339,6 +339,10 @@ impl SimWorker {
     ) -> Result<()> {
         let spares = self.take_spares();
         *self = Self::fresh(setup, cfg, scheduler_override, spares)?;
+        // Label the build span: this engine came from a recycled reset,
+        // not a from-scratch build (wall-clock metadata only — the run
+        // itself is bit-identical either way).
+        self.report.build_reused = true;
         Ok(())
     }
 
@@ -418,6 +422,7 @@ impl SimWorker {
         scheduler_override: Option<Box<dyn Scheduler>>,
         mut spares: SimSpares,
     ) -> Result<SimWorker> {
+        let build_t0 = crate::telemetry::SpanTimer::start();
         cfg.validate()?;
         let platform = setup.platform();
         let apps = setup.apps();
@@ -637,6 +642,10 @@ impl SimWorker {
         // segment pool.
         spares.seg_pool.append(&mut spares.pending);
         spares.phase_lats.clear();
+
+        // The reset-vs-fresh build span (`build_reused` is set by
+        // `reset_inner` after this returns).
+        report.build_wall_ns = build_t0.elapsed_ns();
 
         Ok(SimWorker {
             cfg: cfg.clone(),
@@ -1231,10 +1240,12 @@ impl SimWorker {
                 })
                 .unzip();
             if let Err(e) = art.set_model(&self.rc, &k1, &k2) {
-                eprintln!(
-                    "scenario ambient step: artifact refresh failed \
-                     ({e}); native fallback"
-                );
+                crate::telemetry::diag("sim.scenario", || {
+                    format!(
+                        "scenario ambient step: artifact refresh failed \
+                         ({e}); native fallback"
+                    )
+                });
                 self.dtpm_xla = None;
             }
         }
@@ -1260,9 +1271,9 @@ impl SimWorker {
                 }
                 self.sched_dirty = true;
             }
-            Err(e) => eprintln!(
-                "scenario scheduler swap to '{name}' failed: {e}"
-            ),
+            Err(e) => crate::telemetry::diag("sim.scenario", || {
+                format!("scenario scheduler swap to '{name}' failed: {e}")
+            }),
         }
     }
 
@@ -1333,6 +1344,7 @@ impl SimWorker {
             return;
         }
         self.report.thermal_flushes += 1;
+        let span = crate::telemetry::SpanTimer::start();
         let mut segs = std::mem::take(&mut self.pending);
         let mut powers = std::mem::take(&mut self.power_scratch);
         let mut t_pe = std::mem::take(&mut self.t_pe_scratch);
@@ -1373,6 +1385,9 @@ impl SimWorker {
         self.power_scratch = powers;
         self.t_pe_scratch = t_pe;
         self.opps_scratch = opps;
+        // Flushes happen at observation-point scale (epochs, not
+        // events), so one Instant pair per flush is noise-level cost.
+        self.report.thermal_wall_ns += span.elapsed_ns();
     }
 
     /// Energy + peak-temperature accounting for one integrated epoch
@@ -1405,6 +1420,7 @@ impl SimWorker {
         util: &[f64],
         busy: &[f64],
     ) -> bool {
+        let span = crate::telemetry::SpanTimer::start();
         let cluster_opps: Vec<Opp> = (0..setup.platform().clusters.len())
             .map(|c| {
                 let class = setup.platform().clusters[c].class;
@@ -1440,13 +1456,16 @@ impl SimWorker {
             }
             Err(e) => {
                 // Degrade to the native lane mid-run.
-                eprintln!("dtpm-xla failed ({e}); native fallback");
+                crate::telemetry::diag("sim.dtpm-xla", || {
+                    format!("dtpm-xla failed ({e}); native fallback")
+                });
                 self.dtpm_xla = None;
                 return false;
             }
         };
         self.account_epoch(&powers, busy, dt);
         self.report.thermal_flushes += 1;
+        self.report.thermal_wall_ns += span.elapsed_ns();
         true
     }
 
@@ -1643,7 +1662,12 @@ impl SimWorker {
         let out = match art.step(&self.theta, &cands) {
             Ok(o) => o,
             Err(e) => {
-                eprintln!("explore-xla device failure ({e}); governor fallback");
+                crate::telemetry::diag("sim.explore-xla", || {
+                    format!(
+                        "explore-xla device failure ({e}); governor \
+                         fallback"
+                    )
+                });
                 return false;
             }
         };

@@ -116,6 +116,17 @@ pub struct SimReport {
     /// Power/thermal integration flushes (eager runs: one per epoch;
     /// lazy runs: one per observation point).
     pub thermal_flushes: u64,
+    /// Wall-clock time spent inside power/thermal flushes (ns) — the
+    /// timing span over the stage `thermal_flushes` counts.
+    pub thermal_wall_ns: u64,
+    /// Wall-clock time building (or resetting) the engine for this run
+    /// (ns): the `SimWorker::fresh` span.
+    pub build_wall_ns: u64,
+    /// Whether this run's engine came from a recycled worker reset
+    /// (`true`) or a from-scratch build (`false`) — splits
+    /// `build_wall_ns` into the reset-vs-fresh comparison without
+    /// affecting simulated behaviour.
+    pub build_reused: bool,
 
     pub scheduler_report: Vec<String>,
     pub gantt: Vec<GanttEntry>,

@@ -1,0 +1,723 @@
+//! Structured telemetry: typed events, deterministic counters, and
+//! pluggable sinks for long-running campaigns.
+//!
+//! Real DS3R campaigns — sweeps, DSE generations, IL training — run
+//! for hours; this module is the one substrate behind their progress
+//! reporting, their machine-readable event streams, and the run
+//! manifests the future experiment store (ROADMAP item 2) and `serve`
+//! daemon (item 3) consume.
+//!
+//! ## Design rules
+//!
+//! * **Zero-cost when disabled.** Every emission point goes through
+//!   [`Telemetry::emit`] (or the global [`emit_global`]), which takes a
+//!   *closure* building the event — with no sink installed the check is
+//!   a single branch (one relaxed atomic load on the global path) and
+//!   the event is never constructed.  `perf_hotpath` guards the
+//!   disabled cost at <1% events/s.
+//! * **Deterministic by default.** Events are split into a
+//!   *deterministic* set (run lifecycle, counters, per-phase stats,
+//!   DSE generations, learn rounds, diagnostics) and a *wall-clock*
+//!   set (progress rates, ETAs, timing spans, bench records).  A
+//!   [`JsonlSink`] without [`JsonlSink::with_timing`] records only the
+//!   deterministic set and omits every wall-clock field, so a
+//!   fixed-seed campaign emits a **byte-identical** JSONL stream
+//!   regardless of thread count — asserted by
+//!   `rust/tests/integration_telemetry.rs`.
+//! * **Library code emits events; only the CLI renders text.**  Sinks
+//!   here write machine-readable JSONL; the human renderings (progress
+//!   lines, diagnostic text) live in `cli.rs`/`main.rs`, the only
+//!   modules exempt from the CI `print_stdout`/`print_stderr` clippy
+//!   gate.
+//!
+//! ## Counters
+//!
+//! [`Counters`] is a deterministic (sorted-key) registry of named
+//! `u64` totals.  Pooled grids
+//! ([`crate::coordinator::parallel_map_pooled_counted`]) give each
+//! worker a per-item registry and fold the per-item deltas **in input
+//! order**, so a 1-thread and an 8-thread sweep aggregate to identical
+//! counters — and identical `run_finished` bytes.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::stats::{DseGenStats, PhaseStats, SimReport};
+use crate::util::json::Json;
+use crate::Result;
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// One structured telemetry event.  `kind()` names it in the JSONL
+/// stream; `is_deterministic()` decides whether a non-timing sink
+/// records it.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A top-level invocation began (one per CLI command / campaign).
+    RunStarted {
+        /// Subcommand or campaign label (`run`, `sweep`, `dse-run`...).
+        cmd: String,
+        /// FNV-1a hash of the canonical config JSON (hex).
+        config_hash: String,
+        seed: u64,
+        scheduler: String,
+        /// `git describe --always --dirty` of the working tree, when
+        /// available (environment metadata for run manifests).
+        git: Option<String>,
+    },
+    /// The invocation finished; carries the aggregated deterministic
+    /// counters and (timing sinks only) the wall-clock cost.
+    RunFinished {
+        cmd: String,
+        counters: Counters,
+        /// Wall-clock seconds for the whole invocation (wall-clock
+        /// field: omitted by non-timing sinks).
+        wall_s: f64,
+    },
+    /// Live progress of a pooled grid (wall-clock event: rates and
+    /// ETAs are never deterministic).
+    SweepProgress {
+        completed: usize,
+        total: usize,
+        sims_per_s: f64,
+        eta_s: f64,
+    },
+    /// One scenario phase condensed from a finished run (deterministic;
+    /// emitted in input order after the grid completes).
+    ScenarioPhase { scenario: String, phase: PhaseStats },
+    /// One DSE generation summary (deterministic — `DseGenStats`
+    /// carries no wall-clock fields).
+    DseGeneration { stats: DseGenStats },
+    /// One imitation-learning round (deterministic).
+    LearnRound {
+        round: usize,
+        /// Demonstrations aggregated so far (all rounds).
+        samples: usize,
+        /// Deployment agreement with the oracle this round (absent for
+        /// the behavioural-cloning round 0).
+        agreement: Option<f64>,
+    },
+    /// One benchmark measurement (wall-clock event — benches install a
+    /// timing sink).
+    BenchRecord {
+        bench: String,
+        name: String,
+        value: f64,
+        unit: String,
+    },
+    /// A library diagnostic that previously went to `eprintln!`
+    /// (deterministic: it reflects simulated behaviour, not wall time).
+    Diagnostic { component: String, message: String },
+    /// A named wall-clock span (wall-clock event).
+    Span { name: String, wall_ns: u64 },
+}
+
+impl Event {
+    /// Stream name of this event kind (the `"event"` JSONL field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RunStarted { .. } => "run_started",
+            Event::RunFinished { .. } => "run_finished",
+            Event::SweepProgress { .. } => "sweep_progress",
+            Event::ScenarioPhase { .. } => "scenario_phase",
+            Event::DseGeneration { .. } => "dse_generation",
+            Event::LearnRound { .. } => "learn_round",
+            Event::BenchRecord { .. } => "bench_record",
+            Event::Diagnostic { .. } => "diagnostic",
+            Event::Span { .. } => "span",
+        }
+    }
+
+    /// Whether this event is a deterministic function of (config,
+    /// seed) — i.e. safe to include in a byte-identical golden stream.
+    pub fn is_deterministic(&self) -> bool {
+        !matches!(
+            self,
+            Event::SweepProgress { .. }
+                | Event::BenchRecord { .. }
+                | Event::Span { .. }
+        )
+    }
+
+    /// Serialize for the JSONL stream.  With `timing == false` every
+    /// wall-clock field is omitted, keeping the line deterministic.
+    pub fn to_json(&self, timing: bool) -> Json {
+        let mut j = Json::obj();
+        j.set("event", Json::Str(self.kind().into()));
+        match self {
+            Event::RunStarted { cmd, config_hash, seed, scheduler, git } => {
+                j.set("cmd", Json::Str(cmd.clone()))
+                    .set("config_hash", Json::Str(config_hash.clone()))
+                    .set("seed", crate::util::json::u64_to_json(*seed))
+                    .set("scheduler", Json::Str(scheduler.clone()))
+                    .set(
+                        "git",
+                        match git {
+                            Some(g) => Json::Str(g.clone()),
+                            None => Json::Null,
+                        },
+                    );
+            }
+            Event::RunFinished { cmd, counters, wall_s } => {
+                j.set("cmd", Json::Str(cmd.clone()))
+                    .set("counters", counters.to_json());
+                if timing {
+                    j.set("wall_s", Json::Num(*wall_s));
+                }
+            }
+            Event::SweepProgress { completed, total, sims_per_s, eta_s } => {
+                j.set("completed", Json::Num(*completed as f64))
+                    .set("total", Json::Num(*total as f64))
+                    .set("sims_per_s", Json::Num(*sims_per_s))
+                    .set("eta_s", Json::Num(*eta_s));
+            }
+            Event::ScenarioPhase { scenario, phase } => {
+                j.set("scenario", Json::Str(scenario.clone()))
+                    .set("label", Json::Str(phase.label.clone()))
+                    .set("start_us", Json::Num(phase.start_us))
+                    .set("end_us", Json::Num(phase.end_us))
+                    .set(
+                        "jobs_completed",
+                        Json::Num(phase.jobs_completed as f64),
+                    )
+                    .set("avg_latency_us", Json::Num(phase.avg_latency_us))
+                    .set("p95_latency_us", Json::Num(phase.p95_latency_us))
+                    .set("energy_j", Json::Num(phase.energy_j))
+                    .set("avg_power_w", Json::Num(phase.avg_power_w))
+                    .set("peak_temp_c", Json::Num(phase.peak_temp_c));
+            }
+            Event::DseGeneration { stats } => {
+                if let Json::Obj(fields) = stats.to_json() {
+                    for (k, v) in fields {
+                        j.set(&k, v);
+                    }
+                }
+            }
+            Event::LearnRound { round, samples, agreement } => {
+                j.set("round", Json::Num(*round as f64))
+                    .set("samples", Json::Num(*samples as f64))
+                    .set(
+                        "agreement",
+                        match agreement {
+                            Some(a) => Json::Num(*a),
+                            None => Json::Null,
+                        },
+                    );
+            }
+            Event::BenchRecord { bench, name, value, unit } => {
+                j.set("bench", Json::Str(bench.clone()))
+                    .set("name", Json::Str(name.clone()))
+                    .set("value", Json::Num(*value))
+                    .set("unit", Json::Str(unit.clone()));
+            }
+            Event::Diagnostic { component, message } => {
+                j.set("component", Json::Str(component.clone()))
+                    .set("message", Json::Str(message.clone()));
+            }
+            Event::Span { name, wall_ns } => {
+                j.set("name", Json::Str(name.clone()))
+                    .set("wall_ns", crate::util::json::u64_to_json(*wall_ns));
+            }
+        }
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Counters
+// ---------------------------------------------------------------------------
+
+/// A registry of named monotone `u64` totals with deterministic
+/// (sorted-key) iteration and serialization.  Merging is plain
+/// addition, so any fold order yields the same totals — pooled grids
+/// still fold per-item deltas in input order (the stronger contract,
+/// robust to future non-commutative merges).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters::default()
+    }
+
+    /// Add `n` to the named counter (creating it at 0).
+    pub fn add(&mut self, key: &str, n: u64) {
+        if let Some(v) = self.map.get_mut(key) {
+            *v += n;
+        } else {
+            self.map.insert(key.to_string(), n);
+        }
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.map.get(key).copied().unwrap_or(0)
+    }
+
+    /// Fold another registry into this one (addition per key).
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, &v) in &other.map {
+            self.add(k, v);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// The deterministic kernel counters of one finished run — the
+    /// per-point delta pooled grids aggregate.
+    pub fn from_report(r: &SimReport) -> Counters {
+        let mut c = Counters::new();
+        c.add("runs", 1);
+        c.add("injected_jobs", r.injected_jobs as u64);
+        c.add("completed_jobs", r.completed_jobs as u64);
+        c.add("events_processed", r.events_processed);
+        c.add("sched_invocations", r.sched_invocations);
+        c.add("tasks_executed", r.tasks_executed);
+        c.add("sched_decisions", r.sched_decisions);
+        c.add("sched_fallbacks", r.sched_fallbacks);
+        c.add("deferred_epochs", r.deferred_epochs);
+        c.add("thermal_flushes", r.thermal_flushes);
+        c.add("scenario_events", r.scenario_events);
+        c.add("device_calls", r.device_calls);
+        c.add("throttle_engagements", r.throttle_engagements);
+        c
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for (k, &v) in &self.map {
+            j.set(k, Json::Num(v as f64));
+        }
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// Destination for telemetry events.  Implementations must be
+/// thread-safe: pooled grid workers emit concurrently.
+pub trait Sink: Send + Sync {
+    fn emit(&self, ev: &Event);
+    fn flush(&self) {}
+}
+
+/// JSON-lines emitter over any writer (file, stderr, memory buffer).
+/// Without timing mode it records only deterministic events and omits
+/// wall-clock fields — the golden-stream configuration.
+pub struct JsonlSink {
+    out: Mutex<Box<dyn Write + Send>>,
+    timing: bool,
+}
+
+impl JsonlSink {
+    pub fn from_writer(w: Box<dyn Write + Send>) -> JsonlSink {
+        JsonlSink { out: Mutex::new(w), timing: false }
+    }
+
+    /// Create (truncate) a JSONL file sink.
+    pub fn create(path: &std::path::Path) -> Result<JsonlSink> {
+        Ok(JsonlSink::from_writer(Box::new(std::fs::File::create(
+            path,
+        )?)))
+    }
+
+    /// Stream to stderr (the `--telemetry -` configuration).
+    pub fn stderr() -> JsonlSink {
+        JsonlSink::from_writer(Box::new(std::io::stderr()))
+    }
+
+    /// Include wall-clock events/fields (progress rates, spans, bench
+    /// records).  The stream is no longer byte-deterministic.
+    pub fn with_timing(mut self, timing: bool) -> JsonlSink {
+        self.timing = timing;
+        self
+    }
+}
+
+impl Sink for JsonlSink {
+    fn emit(&self, ev: &Event) {
+        if !self.timing && !ev.is_deterministic() {
+            return;
+        }
+        let line = ev.to_json(self.timing).to_string();
+        if let Ok(mut out) = self.out.lock() {
+            // Telemetry volume is coarse (events per run/generation,
+            // not per simulated event) — flush per line so tail -f and
+            // crashed campaigns both see every record.
+            let _ = writeln!(out, "{line}");
+            let _ = out.flush();
+        }
+    }
+}
+
+/// In-memory sink capturing rendered JSONL lines — the golden-stream
+/// test harness, also handy for embedding.
+#[derive(Default)]
+pub struct MemSink {
+    lines: Mutex<Vec<String>>,
+    timing: bool,
+}
+
+impl MemSink {
+    pub fn new() -> MemSink {
+        MemSink::default()
+    }
+
+    pub fn with_timing(mut self, timing: bool) -> MemSink {
+        self.timing = timing;
+        self
+    }
+
+    /// The captured stream, one JSON object per line.
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().map(|l| l.clone()).unwrap_or_default()
+    }
+
+    /// The captured stream as one newline-terminated string (byte
+    /// comparison form).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for l in self.lines() {
+            s.push_str(&l);
+            s.push('\n');
+        }
+        s
+    }
+}
+
+impl Sink for MemSink {
+    fn emit(&self, ev: &Event) {
+        if !self.timing && !ev.is_deterministic() {
+            return;
+        }
+        if let Ok(mut lines) = self.lines.lock() {
+            lines.push(ev.to_json(self.timing).to_string());
+        }
+    }
+}
+
+/// Broadcast to several sinks (CLI: JSONL file + progress renderer +
+/// diagnostic renderer at once).
+#[derive(Default)]
+pub struct FanoutSink {
+    sinks: Vec<Arc<dyn Sink>>,
+}
+
+impl FanoutSink {
+    pub fn new(sinks: Vec<Arc<dyn Sink>>) -> FanoutSink {
+        FanoutSink { sinks }
+    }
+}
+
+impl Sink for FanoutSink {
+    fn emit(&self, ev: &Event) {
+        for s in &self.sinks {
+            s.emit(ev);
+        }
+    }
+    fn flush(&self) {
+        for s in &self.sinks {
+            s.flush();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handle
+// ---------------------------------------------------------------------------
+
+/// Cheap cloneable handle threaded through grid workloads.  A disabled
+/// handle (`Telemetry::disabled()`, also `Default`) reduces every
+/// emission to one branch; the event-building closure never runs.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    sink: Option<Arc<dyn Sink>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Telemetry(enabled={})", self.enabled())
+    }
+}
+
+impl Telemetry {
+    pub fn new(sink: Arc<dyn Sink>) -> Telemetry {
+        Telemetry { sink: Some(sink) }
+    }
+
+    pub fn disabled() -> Telemetry {
+        Telemetry::default()
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Emit the event built by `f` — `f` runs only when a sink is
+    /// installed.
+    #[inline]
+    pub fn emit(&self, f: impl FnOnce() -> Event) {
+        if let Some(sink) = &self.sink {
+            sink.emit(&f());
+        }
+    }
+
+    pub fn flush(&self) {
+        if let Some(sink) = &self.sink {
+            sink.flush();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global dispatcher (library diagnostics)
+// ---------------------------------------------------------------------------
+
+// Deep library code (the simulation kernel, device-backed schedulers)
+// has no natural place to thread a handle through, so diagnostics go
+// via a process-global dispatcher the CLI installs.  The disabled
+// fast path is one relaxed atomic load — the cost `perf_hotpath`
+// guards.
+static GLOBAL_ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: Mutex<Option<Telemetry>> = Mutex::new(None);
+
+/// Install the process-global telemetry handle (`main.rs` does this
+/// once from the CLI flags; tests install a `MemSink`).
+pub fn set_global(tel: Telemetry) {
+    GLOBAL_ENABLED.store(tel.enabled(), Ordering::Relaxed);
+    if let Ok(mut g) = GLOBAL.lock() {
+        *g = Some(tel);
+    }
+}
+
+/// A clone of the installed global handle (disabled if none).
+pub fn global() -> Telemetry {
+    GLOBAL
+        .lock()
+        .ok()
+        .and_then(|g| g.clone())
+        .unwrap_or_default()
+}
+
+/// Emit through the global dispatcher; one atomic load when disabled.
+#[inline]
+pub fn emit_global(f: impl FnOnce() -> Event) {
+    if !GLOBAL_ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Ok(g) = GLOBAL.lock() {
+        if let Some(tel) = g.as_ref() {
+            tel.emit(f);
+        }
+    }
+}
+
+/// Library diagnostic (the replacement for scattered `eprintln!`):
+/// message formatting is deferred, so disabled runs pay one branch.
+#[inline]
+pub fn diag(component: &'static str, message: impl FnOnce() -> String) {
+    emit_global(|| Event::Diagnostic {
+        component: component.to_string(),
+        message: message(),
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Timing spans + run metadata helpers
+// ---------------------------------------------------------------------------
+
+/// Minimal wall-clock span around a hot-path stage.  Stages already
+/// counted in `SimReport` (scheduler invocations, thermal flushes,
+/// worker build/reset) accumulate their span totals into the report's
+/// `*_wall_ns` fields; campaign-level spans emit [`Event::Span`].
+#[derive(Debug, Clone, Copy)]
+pub struct SpanTimer {
+    t0: Instant,
+}
+
+impl SpanTimer {
+    #[inline]
+    pub fn start() -> SpanTimer {
+        SpanTimer { t0: Instant::now() }
+    }
+
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    #[inline]
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// FNV-1a 64-bit hash of a canonical config serialization — the
+/// `config_hash` of [`Event::RunStarted`] and the cache key shape the
+/// experiment store (ROADMAP item 2) will reuse.
+pub fn config_hash(canonical: &str) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canonical.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// `git describe --always --dirty` of the working tree, if git and a
+/// repository are available — environment metadata for run manifests,
+/// never an error.
+pub fn git_describe() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let s = String::from_utf8_lossy(&out.stdout).trim().to_string();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge_is_order_independent() {
+        let mut a = Counters::new();
+        a.add("x", 3);
+        a.add("y", 1);
+        let mut b = Counters::new();
+        b.add("x", 4);
+        b.add("z", 2);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.get("x"), 7);
+        assert_eq!(ab.get("y"), 1);
+        assert_eq!(ab.get("z"), 2);
+        assert_eq!(ab.to_json().to_string(), ba.to_json().to_string());
+    }
+
+    #[test]
+    fn counters_from_report_covers_kernel_counters() {
+        let mut r = SimReport::default();
+        r.injected_jobs = 10;
+        r.completed_jobs = 9;
+        r.events_processed = 1234;
+        r.thermal_flushes = 7;
+        r.deferred_epochs = 70;
+        let c = Counters::from_report(&r);
+        assert_eq!(c.get("runs"), 1);
+        assert_eq!(c.get("completed_jobs"), 9);
+        assert_eq!(c.get("events_processed"), 1234);
+        assert_eq!(c.get("thermal_flushes"), 7);
+        assert_eq!(c.get("deferred_epochs"), 70);
+    }
+
+    #[test]
+    fn non_timing_sink_drops_wall_clock_events_and_fields() {
+        let sink = MemSink::new();
+        sink.emit(&Event::SweepProgress {
+            completed: 1,
+            total: 2,
+            sims_per_s: 10.0,
+            eta_s: 0.1,
+        });
+        sink.emit(&Event::RunFinished {
+            cmd: "run".into(),
+            counters: Counters::new(),
+            wall_s: 1.5,
+        });
+        let lines = sink.lines();
+        assert_eq!(lines.len(), 1, "progress must be dropped: {lines:?}");
+        assert!(!lines[0].contains("wall_s"), "{}", lines[0]);
+
+        let timed = MemSink::new().with_timing(true);
+        timed.emit(&Event::SweepProgress {
+            completed: 1,
+            total: 2,
+            sims_per_s: 10.0,
+            eta_s: 0.1,
+        });
+        timed.emit(&Event::RunFinished {
+            cmd: "run".into(),
+            counters: Counters::new(),
+            wall_s: 1.5,
+        });
+        let lines = timed.lines();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].contains("wall_s"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn event_json_is_deterministic_and_kinded() {
+        let ev = Event::RunStarted {
+            cmd: "sweep".into(),
+            config_hash: config_hash("{}"),
+            seed: 42,
+            scheduler: "etf".into(),
+            git: None,
+        };
+        let a = ev.to_json(false).to_string();
+        let b = ev.to_json(false).to_string();
+        assert_eq!(a, b);
+        assert!(a.contains("\"event\": \"run_started\""), "{a}");
+        assert!(a.contains("\"git\": null"), "{a}");
+    }
+
+    #[test]
+    fn disabled_handle_never_builds_events() {
+        let tel = Telemetry::disabled();
+        let mut built = false;
+        tel.emit(|| {
+            built = true;
+            Event::Span { name: "x".into(), wall_ns: 1 }
+        });
+        assert!(!built, "closure must not run with no sink installed");
+    }
+
+    #[test]
+    fn fanout_broadcasts() {
+        let a = Arc::new(MemSink::new());
+        let b = Arc::new(MemSink::new());
+        let fan = FanoutSink::new(vec![a.clone(), b.clone()]);
+        fan.emit(&Event::Diagnostic {
+            component: "t".into(),
+            message: "m".into(),
+        });
+        assert_eq!(a.lines().len(), 1);
+        assert_eq!(b.lines().len(), 1);
+    }
+
+    #[test]
+    fn config_hash_is_stable_fnv1a() {
+        // FNV-1a test vectors.
+        assert_eq!(config_hash(""), "cbf29ce484222325");
+        assert_eq!(config_hash("a"), "af63dc4c8601ec8c");
+        assert_eq!(config_hash("{}"), config_hash("{}"));
+        assert_ne!(config_hash("{}"), config_hash("{ }"));
+    }
+}
