@@ -10,6 +10,9 @@
 //! * `learn`      — imitation-learned scheduling: `collect` oracle
 //!   demonstrations, `train` the deployable `il` policy, `eval` it
 //!   against the oracle and baselines (see [`crate::learn`]).
+//! * `fuzz`       — seeded scenario fuzzing: `run` the
+//!   scheduler-robustness tournament with invariant oracles, `replay`
+//!   a minimized repro, render a saved `report` (see [`crate::fuzz`]).
 //! * `reproduce`  — regenerate the paper's tables/figures
 //!   (`table1`, `table2`, `fig2`, `fig3`, `all`).
 //! * `validate`   — analytical model vs fine-grained reference
@@ -1543,6 +1546,179 @@ pub fn fig3_shape_analysis(
     out
 }
 
+// ---------------------------------------------------------------------------
+// fuzz: seeded scenario fuzzing + scheduler-robustness tournament
+// ---------------------------------------------------------------------------
+
+/// Build the generator config from `--fuzz-config` (JSON file) plus
+/// flag overrides (`--seed`, `--cases`, `--jobs`, `--deadline-us`).
+fn fuzz_config_from_args(args: &Args) -> Result<crate::fuzz::FuzzConfig> {
+    let mut fc = if args.has("fuzz-config") {
+        crate::fuzz::FuzzConfig::load(std::path::Path::new(
+            &args.str_or("fuzz-config", ""),
+        ))?
+    } else {
+        crate::fuzz::FuzzConfig::default()
+    };
+    fc.seed = args.usize_or("seed", fc.seed as usize)? as u64;
+    fc.cases = args.usize_or("cases", fc.cases)?;
+    fc.jobs = args.usize_or("jobs", fc.jobs)?;
+    fc.deadline_us = args.f64_or("deadline-us", fc.deadline_us)?;
+    fc.validate()?;
+    Ok(fc)
+}
+
+/// `ds3r fuzz <run|replay|report>` driver (see [`crate::fuzz`]).
+pub fn cmd_fuzz(args: &Args) -> Result<String> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("run");
+    match sub {
+        "run" => cmd_fuzz_run(args),
+        "replay" => cmd_fuzz_replay(args),
+        "report" => cmd_fuzz_report(args),
+        other => Err(Error::Config(format!(
+            "unknown fuzz subcommand '{other}' (run, replay, report)"
+        ))),
+    }
+}
+
+fn cmd_fuzz_run(args: &Args) -> Result<String> {
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let apps = apps_from_args(args)?;
+    let fuzz = fuzz_config_from_args(args)?;
+    let mut opts = crate::fuzz::TournamentOpts::default();
+    let roster = args.list_or("scheds", &[]);
+    if !roster.is_empty() && roster != ["all"] {
+        opts.schedulers = roster;
+    }
+    opts.threads = args.usize_or("threads", default_threads())?;
+    if args.has("repro-dir") {
+        opts.repro_dir = Some(std::path::PathBuf::from(
+            args.str_or("repro-dir", "fuzz_repros"),
+        ));
+    }
+    if args.has("inject") {
+        // Test hook: flag an artificial violation on every scenario
+        // containing an event whose label starts with this prefix —
+        // exercises the shrink + repro pipeline on a healthy simulator.
+        opts.inject_label = Some(args.str_or("inject", "rate="));
+    }
+    // Campaign manifest: a representative cell config (first scheduler,
+    // tournament seed) so run_started carries a meaningful hash.
+    let mut cfg0 = config_from_args(args)?;
+    cfg0.scheduler =
+        opts.schedulers.first().cloned().unwrap_or_default();
+    cfg0.seed = fuzz.seed;
+    let tel = telemetry::global();
+    let t0 = SpanTimer::start();
+    emit_run_started(&tel, "fuzz", &cfg0);
+    let (report, counters) =
+        crate::fuzz::run_tournament(&platform, &apps, &fuzz, &opts)?;
+    emit_run_finished(&tel, "fuzz", counters, t0);
+    if args.has("out") {
+        let out = args.str_or("out", "tournament.json");
+        report.save(std::path::Path::new(&out))?;
+    }
+    Ok(render_tournament(&report))
+}
+
+/// Re-execute a minimized repro written by `fuzz run` and compare the
+/// fresh oracle verdict with the recorded one.  Pass the same workload
+/// flags (`--apps`/`--symbols`/`--pulses`/`--platform`) the tournament
+/// ran with — the repro pins the simulation config, not the workload.
+fn cmd_fuzz_replay(args: &Args) -> Result<String> {
+    let path = args.positional.get(2).ok_or_else(|| {
+        Error::Config("fuzz replay <repro.json>".into())
+    })?;
+    let platform = platform_by_name(&args.str_or("platform", "table2"))?;
+    let apps = apps_from_args(args)?;
+    let repro = crate::fuzz::Repro::load(std::path::Path::new(path))?;
+    let fresh = crate::fuzz::replay(&repro, &platform, &apps)?;
+    let mut out = format!(
+        "repro {path}: scheduler {}, case {}, {} event(s), oracle \
+         '{}', {} recorded violation(s)\n",
+        repro.scheduler,
+        repro.case_idx,
+        repro.scenario.events.len(),
+        repro.oracle,
+        repro.violations.len(),
+    );
+    let fresh: Vec<(String, String)> = fresh
+        .into_iter()
+        .map(|v| (v.oracle, v.detail))
+        .collect();
+    for (oracle, detail) in &fresh {
+        out.push_str(&format!("  {oracle}: {detail}\n"));
+    }
+    if fresh == repro.violations {
+        out.push_str("verdict: reproduced bit-identically\n");
+    } else if fresh.is_empty() {
+        out.push_str("verdict: no longer reproduces (bug fixed?)\n");
+    } else {
+        out.push_str("verdict: DIVERGED from the recorded violations\n");
+    }
+    Ok(out)
+}
+
+/// Render a saved [`crate::stats::TournamentReport`] JSON file.
+fn cmd_fuzz_report(args: &Args) -> Result<String> {
+    let path = args.str_or("out", "tournament.json");
+    let report = crate::stats::TournamentReport::load(
+        std::path::Path::new(&path),
+    )?;
+    let mut out = render_tournament(&report);
+    if args.has("json") {
+        out.push_str(&report.to_json().to_string_pretty());
+    }
+    Ok(out)
+}
+
+fn render_tournament(report: &crate::stats::TournamentReport) -> String {
+    let mut out = format!(
+        "fuzz tournament: seed {} — {} schedulers × {} cases \
+         ({} cells), {} oracle violation(s)\n",
+        report.fuzz_seed,
+        report.schedulers.len(),
+        report.cases,
+        report.cells.len(),
+        report.violations,
+    );
+    let mut rows = Vec::new();
+    for s in &report.standings {
+        rows.push(vec![
+            s.scheduler.clone(),
+            format!("{:.0}", s.rank_score),
+            format!("{:.1}", s.worst_max_us),
+            format!("{:.1}", s.mean_p95_us),
+            format!("{:.1}", s.mean_p99_us),
+            s.deadline_misses.to_string(),
+            format!("{:.3}", s.energy_j),
+            format!("{:.3}", s.fallback_rate),
+            s.violations.to_string(),
+        ]);
+    }
+    out.push_str(&plot::ascii_table(
+        &[
+            "scheduler",
+            "score",
+            "worst us",
+            "p95 us",
+            "p99 us",
+            "misses",
+            "J",
+            "fallback",
+            "viol",
+        ],
+        &rows,
+    ));
+    if !report.repros.is_empty() {
+        out.push_str("minimized repros:\n");
+        for r in &report.repros {
+            out.push_str(&format!("  {r}\n"));
+        }
+    }
+    out
+}
+
 pub fn cmd_reproduce(args: &Args) -> Result<String> {
     let what = args
         .positional
@@ -1604,6 +1780,13 @@ USAGE:
                  [--l2 0.0001] [--train-seed 7] [--guard 1.25]
                  [--learn-seeds 1,2] [--rates 1.5,3] [--baselines random,rr]
                  [--learn-config file.json] [--threads N] (+ run flags)
+  ds3r fuzz      run    [--seed 42] [--cases 200] [--jobs 80]
+                        [--scheds all|a,b] [--threads N]
+                        [--fuzz-config file.json] [--deadline-us 20000]
+                        [--out tournament.json] [--repro-dir dir]
+                        [--inject <label-prefix>] (+ run flags)
+                 replay <repro.json> (+ workload flags)
+                 report [--out tournament.json] [--json]
   ds3r reproduce [table1|table2|fig2|fig3|all] [--quick] [--jobs N]
                  [--rates lo:hi:step] [--csv fig3.csv]
   ds3r validate  [--jobs 200]

@@ -139,6 +139,23 @@ where
     (out, total)
 }
 
+/// Largest-first schedule for a *heterogeneous* grid: indices of
+/// `items` sorted by non-increasing `cost`, ties broken by input index
+/// (deterministic).  The pooled fan-out hands items out in list order,
+/// so feeding it `idx.map(|i| items[i])` keeps the expensive items off
+/// the tail of the run — a big item picked up last would otherwise
+/// idle every other worker while it finishes.  Callers re-scatter the
+/// permuted results through the same index vector to recover canonical
+/// input order (see `fuzz::tournament` for the idiom).
+pub fn size_ordered_indices<T>(
+    items: &[T],
+    cost: impl Fn(&T) -> u64,
+) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..items.len()).collect();
+    idx.sort_by_key(|&i| (std::cmp::Reverse(cost(&items[i])), i));
+    idx
+}
+
 /// Stateless fan-out over `items` (see [`parallel_map_pooled`] for the
 /// ordering/determinism contract).  Kept for map jobs with no
 /// per-thread state worth pinning.
@@ -570,6 +587,22 @@ mod tests {
             .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("item7") && msg.contains("seven"), "{msg}");
+    }
+
+    #[test]
+    fn size_ordered_indices_sorts_descending_with_stable_ties() {
+        let costs = [3u64, 9, 1, 9, 7, 1];
+        let idx = size_ordered_indices(&costs, |&c| c);
+        assert_eq!(idx, vec![1, 3, 4, 0, 2, 5]);
+        // Non-increasing along the schedule; a permutation of 0..n.
+        for w in idx.windows(2) {
+            assert!(costs[w[0]] >= costs[w[1]]);
+        }
+        let mut seen = idx.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..costs.len()).collect::<Vec<_>>());
+        let empty: [u64; 0] = [];
+        assert!(size_ordered_indices(&empty, |&c| c).is_empty());
     }
 
     #[test]

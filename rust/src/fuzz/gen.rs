@@ -1,0 +1,539 @@
+//! Seeded random scenario generation: the adversarial counterpart of
+//! the hand-written presets in [`crate::scenario::presets`].
+//!
+//! A [`FuzzConfig`] bounds the chaos — event counts, rate/ambient/cap
+//! ranges, the fraction of PEs a fault storm may take down, the
+//! scheduler hot-swap pool — and [`generate`] draws one [`Scenario`]
+//! per `(seed, case)` pair from the crate's deterministic RNG.  Every
+//! generated scenario is valid **by construction** (and re-checked
+//! through [`Scenario::validate`]/[`Scenario::validate_for`] before it
+//! leaves this module):
+//!
+//! * timestamps walk strictly forward, so the non-decreasing rule holds;
+//! * rate steps/ramps are suppressed while a previous ramp window is
+//!   still open (the validator rejects rate events inside one);
+//! * fault storms only fail PEs whose class keeps at least one live
+//!   member — no generated timeline can strand a task with nowhere to
+//!   run — and every failure is paired with a later hotplug
+//!   [`Action::PeRestore`], so the no-job-loss oracle is a fair check
+//!   of the simulator rather than of the workload;
+//! * app-weight churn always emits `n_apps` non-negative weights with a
+//!   positive sum, ambient swings stay inside the validator's physical
+//!   range, and power caps oscillate between `Some(cap)` and `None`.
+
+use crate::platform::Platform;
+use crate::rng::Rng;
+use crate::scenario::{Action, Scenario};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Bounds for the random scenario generator.  JSON round-trips via
+/// [`FuzzConfig::to_json`]/[`FuzzConfig::from_json`] (missing keys keep
+/// their defaults, like [`crate::config::SimConfig`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuzzConfig {
+    /// Root seed: case `i` draws from `Rng::new(seed).fork(i)`.
+    pub seed: u64,
+    /// Number of scenarios one tournament generates.
+    pub cases: usize,
+    /// Minimum generator moves per scenario (a fault storm is one move
+    /// but emits paired fail/restore events).
+    pub min_events: usize,
+    /// Maximum generator moves per scenario.
+    pub max_events: usize,
+    /// Timeline length the moves are spread over (µs).  Restores may
+    /// land slightly past it.
+    pub horizon_us: f64,
+    /// Injection-rate range for steps and ramp targets (jobs/ms).
+    pub rate_min_per_ms: f64,
+    pub rate_max_per_ms: f64,
+    /// Longest ramp window (µs).
+    pub max_ramp_us: f64,
+    /// Ambient-swing range (°C); must stay inside the validator's
+    /// physical [-55, 150] band.
+    pub ambient_min_c: f64,
+    pub ambient_max_c: f64,
+    /// Power-budget oscillation range (W).
+    pub cap_min_w: f64,
+    pub cap_max_w: f64,
+    /// Cap on the fraction of PEs failed at any instant.
+    pub max_failed_frac: f64,
+    /// Scheduler names for hot-swap events (must be creatable by
+    /// [`crate::sched::create`] without on-disk artifacts).
+    pub swap_pool: Vec<String>,
+    /// Jobs per simulated case (`SimConfig::max_jobs`).
+    pub jobs: usize,
+    /// Latency threshold above which a job counts as a deadline miss
+    /// in tournament scoring (µs).  A scoring construct, not a
+    /// simulator concept.
+    pub deadline_us: f64,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> FuzzConfig {
+        FuzzConfig {
+            seed: 42,
+            cases: 200,
+            min_events: 4,
+            max_events: 14,
+            horizon_us: 120_000.0,
+            rate_min_per_ms: 0.5,
+            rate_max_per_ms: 6.0,
+            max_ramp_us: 30_000.0,
+            ambient_min_c: 15.0,
+            ambient_max_c: 60.0,
+            cap_min_w: 2.5,
+            cap_max_w: 8.0,
+            max_failed_frac: 0.5,
+            swap_pool: vec![
+                "etf".into(),
+                "met".into(),
+                "met-lb".into(),
+                "heft".into(),
+                "rr".into(),
+            ],
+            jobs: 80,
+            deadline_us: 20_000.0,
+        }
+    }
+}
+
+impl FuzzConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.cases == 0 {
+            return Err(Error::Config("fuzz: cases must be >= 1".into()));
+        }
+        if self.min_events == 0 || self.min_events > self.max_events {
+            return Err(Error::Config(format!(
+                "fuzz: want 1 <= min_events <= max_events, got {}..{}",
+                self.min_events, self.max_events
+            )));
+        }
+        if !(self.horizon_us.is_finite() && self.horizon_us > 0.0) {
+            return Err(Error::Config(
+                "fuzz: horizon_us must be finite and > 0".into(),
+            ));
+        }
+        if !(self.rate_min_per_ms > 0.0
+            && self.rate_min_per_ms <= self.rate_max_per_ms
+            && self.rate_max_per_ms.is_finite())
+        {
+            return Err(Error::Config(format!(
+                "fuzz: want 0 < rate_min <= rate_max, got {}..{}",
+                self.rate_min_per_ms, self.rate_max_per_ms
+            )));
+        }
+        if !(self.max_ramp_us.is_finite() && self.max_ramp_us > 0.0) {
+            return Err(Error::Config(
+                "fuzz: max_ramp_us must be finite and > 0".into(),
+            ));
+        }
+        if !(self.ambient_min_c >= -55.0
+            && self.ambient_min_c <= self.ambient_max_c
+            && self.ambient_max_c <= 150.0)
+        {
+            return Err(Error::Config(format!(
+                "fuzz: ambient range {}..{} outside [-55, 150]",
+                self.ambient_min_c, self.ambient_max_c
+            )));
+        }
+        if !(self.cap_min_w > 0.0
+            && self.cap_min_w <= self.cap_max_w
+            && self.cap_max_w.is_finite())
+        {
+            return Err(Error::Config(format!(
+                "fuzz: want 0 < cap_min <= cap_max, got {}..{}",
+                self.cap_min_w, self.cap_max_w
+            )));
+        }
+        if !(0.0..=0.9).contains(&self.max_failed_frac) {
+            return Err(Error::Config(format!(
+                "fuzz: max_failed_frac {} outside [0, 0.9]",
+                self.max_failed_frac
+            )));
+        }
+        if self.swap_pool.iter().any(|s| s.is_empty()) {
+            return Err(Error::Config(
+                "fuzz: empty scheduler name in swap_pool".into(),
+            ));
+        }
+        if self.jobs == 0 {
+            return Err(Error::Config("fuzz: jobs must be >= 1".into()));
+        }
+        if !(self.deadline_us.is_finite() && self.deadline_us > 0.0) {
+            return Err(Error::Config(
+                "fuzz: deadline_us must be finite and > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seed", crate::util::json::u64_to_json(self.seed))
+            .set("cases", Json::Num(self.cases as f64))
+            .set("min_events", Json::Num(self.min_events as f64))
+            .set("max_events", Json::Num(self.max_events as f64))
+            .set("horizon_us", Json::Num(self.horizon_us))
+            .set("rate_min_per_ms", Json::Num(self.rate_min_per_ms))
+            .set("rate_max_per_ms", Json::Num(self.rate_max_per_ms))
+            .set("max_ramp_us", Json::Num(self.max_ramp_us))
+            .set("ambient_min_c", Json::Num(self.ambient_min_c))
+            .set("ambient_max_c", Json::Num(self.ambient_max_c))
+            .set("cap_min_w", Json::Num(self.cap_min_w))
+            .set("cap_max_w", Json::Num(self.cap_max_w))
+            .set("max_failed_frac", Json::Num(self.max_failed_frac))
+            .set(
+                "swap_pool",
+                Json::Arr(
+                    self.swap_pool
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            )
+            .set("jobs", Json::Num(self.jobs as f64))
+            .set("deadline_us", Json::Num(self.deadline_us));
+        j
+    }
+
+    /// Parse, with missing keys keeping their defaults; the result is
+    /// re-validated.
+    pub fn from_json(j: &Json) -> Result<FuzzConfig> {
+        let d = FuzzConfig::default();
+        let num =
+            |k: &str, v: f64| j.get(k).and_then(Json::as_f64).unwrap_or(v);
+        let cfg = FuzzConfig {
+            seed: num("seed", d.seed as f64) as u64,
+            cases: num("cases", d.cases as f64) as usize,
+            min_events: num("min_events", d.min_events as f64) as usize,
+            max_events: num("max_events", d.max_events as f64) as usize,
+            horizon_us: num("horizon_us", d.horizon_us),
+            rate_min_per_ms: num("rate_min_per_ms", d.rate_min_per_ms),
+            rate_max_per_ms: num("rate_max_per_ms", d.rate_max_per_ms),
+            max_ramp_us: num("max_ramp_us", d.max_ramp_us),
+            ambient_min_c: num("ambient_min_c", d.ambient_min_c),
+            ambient_max_c: num("ambient_max_c", d.ambient_max_c),
+            cap_min_w: num("cap_min_w", d.cap_min_w),
+            cap_max_w: num("cap_max_w", d.cap_max_w),
+            max_failed_frac: num("max_failed_frac", d.max_failed_frac),
+            swap_pool: match j.get("swap_pool") {
+                Some(Json::Arr(xs)) => xs
+                    .iter()
+                    .map(|x| {
+                        x.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Config(
+                                "fuzz: swap_pool entries must be strings"
+                                    .into(),
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                _ => d.swap_pool,
+            },
+            jobs: num("jobs", d.jobs as f64) as usize,
+            deadline_us: num("deadline_us", d.deadline_us),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FuzzConfig> {
+        FuzzConfig::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// Generate the `case`-th scenario of a fuzz campaign.  Deterministic
+/// in `(cfg.seed, case)`; independent of `cfg.cases`, so growing a
+/// campaign extends it without disturbing earlier cases.
+pub fn generate(
+    cfg: &FuzzConfig,
+    platform: &Platform,
+    n_apps: usize,
+    case: usize,
+) -> Result<Scenario> {
+    cfg.validate()?;
+    let mut root = Rng::new(cfg.seed);
+    let mut rng = root.fork(case as u64);
+    let n_pes = platform.n_pes();
+    let class_of: Vec<usize> =
+        platform.pes.iter().map(|pe| pe.class).collect();
+    let mut alive_per_class = vec![0usize; platform.classes.len()];
+    for &c in &class_of {
+        alive_per_class[c] += 1;
+    }
+    let max_failed = (((n_pes as f64) * cfg.max_failed_frac) as usize)
+        .min(n_pes.saturating_sub(1));
+
+    let span = cfg.max_events - cfg.min_events;
+    let n_moves =
+        cfg.min_events + rng.below(span as u64 + 1) as usize;
+    let gap_mean = cfg.horizon_us / (n_moves as f64 + 1.0);
+
+    let mut sc = Scenario::new(
+        format!("fuzz-s{}-c{case}", cfg.seed),
+        format!(
+            "generated scenario (seed {}, case {case}): rate \
+             steps/ramps, fault storms with hotplug recovery, ambient \
+             swings, power-budget oscillation, app churn, scheduler \
+             swaps",
+            cfg.seed
+        ),
+    )
+    .event(
+        0.0,
+        Action::SetRate {
+            per_ms: rng.uniform(cfg.rate_min_per_ms, cfg.rate_max_per_ms),
+        },
+    );
+
+    let mut t = 0.0_f64;
+    let mut ramp_until = 0.0_f64;
+    let mut cap_on = false;
+    let mut failed: Vec<usize> = Vec::new();
+    // (restore time, pe) for every in-flight failure; flushed in time
+    // order ahead of each move so timestamps stay non-decreasing.
+    let mut pending: Vec<(f64, usize)> = Vec::new();
+
+    for _ in 0..n_moves {
+        t += rng.uniform(0.25, 1.75) * gap_mean;
+        pending.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        while let Some(&(rt, pe)) = pending.first() {
+            if rt > t {
+                break;
+            }
+            sc = sc.event(rt, Action::PeRestore { pe });
+            failed.retain(|&x| x != pe);
+            alive_per_class[class_of[pe]] += 1;
+            pending.remove(0);
+        }
+
+        let can_rate = t > ramp_until;
+        let fail_candidates: Vec<usize> = (0..n_pes)
+            .filter(|pe| {
+                !failed.contains(pe) && alive_per_class[class_of[*pe]] >= 2
+            })
+            .collect();
+        let can_fail =
+            failed.len() < max_failed && !fail_candidates.is_empty();
+        // Move kinds: [rate step, rate ramp, fault storm, ambient,
+        // power cap, app weights, scheduler swap].
+        let weights = [
+            if can_rate { 2.0 } else { 0.0 },
+            if can_rate { 1.5 } else { 0.0 },
+            if can_fail { 1.5 } else { 0.0 },
+            1.0,
+            1.0,
+            if n_apps >= 2 { 1.0 } else { 0.0 },
+            if cfg.swap_pool.is_empty() { 0.0 } else { 1.0 },
+        ];
+        match rng.choose_weighted(&weights) {
+            0 => {
+                sc = sc.event(
+                    t,
+                    Action::SetRate {
+                        per_ms: rng.uniform(
+                            cfg.rate_min_per_ms,
+                            cfg.rate_max_per_ms,
+                        ),
+                    },
+                );
+            }
+            1 => {
+                let over_us = rng.uniform(0.2, 1.0) * cfg.max_ramp_us;
+                sc = sc.event(
+                    t,
+                    Action::RampRate {
+                        to_per_ms: rng.uniform(
+                            cfg.rate_min_per_ms,
+                            cfg.rate_max_per_ms,
+                        ),
+                        over_us,
+                    },
+                );
+                ramp_until = ramp_until.max(t + over_us);
+            }
+            2 => {
+                let storm = 1 + rng.below(2) as usize;
+                let mut candidates = fail_candidates;
+                for _ in 0..storm {
+                    if failed.len() >= max_failed || candidates.is_empty()
+                    {
+                        break;
+                    }
+                    let pick = candidates
+                        .remove(rng.below(candidates.len() as u64)
+                            as usize);
+                    sc = sc.event(t, Action::PeFail { pe: pick });
+                    failed.push(pick);
+                    alive_per_class[class_of[pick]] -= 1;
+                    let recover =
+                        t + rng.uniform(0.05, 0.30) * cfg.horizon_us;
+                    pending.push((recover, pick));
+                    // A storm may not orphan a class either.
+                    candidates.retain(|pe| {
+                        alive_per_class[class_of[*pe]] >= 2
+                    });
+                }
+            }
+            3 => {
+                sc = sc.event(
+                    t,
+                    Action::SetAmbient {
+                        t_c: rng
+                            .uniform(cfg.ambient_min_c, cfg.ambient_max_c),
+                    },
+                );
+            }
+            4 => {
+                if cap_on && rng.f64() < 0.4 {
+                    sc = sc
+                        .event(t, Action::SetPowerCap { watts: None });
+                    cap_on = false;
+                } else {
+                    sc = sc.event(
+                        t,
+                        Action::SetPowerCap {
+                            watts: Some(
+                                rng.uniform(cfg.cap_min_w, cfg.cap_max_w),
+                            ),
+                        },
+                    );
+                    cap_on = true;
+                }
+            }
+            5 => {
+                let w: Vec<f64> = (0..n_apps)
+                    .map(|_| rng.uniform(0.05, 1.0))
+                    .collect();
+                sc = sc.event(t, Action::SetAppWeights { weights: w });
+            }
+            _ => {
+                let name = cfg.swap_pool
+                    [rng.below(cfg.swap_pool.len() as u64) as usize]
+                    .clone();
+                sc = sc.event(t, Action::SetScheduler { name });
+            }
+        }
+    }
+
+    // Hotplug recovery for every still-failed PE, in time order.
+    pending.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+    });
+    for (rt, pe) in pending {
+        sc = sc.event(rt.max(t), Action::PeRestore { pe });
+        t = rt.max(t);
+    }
+
+    sc.validate()?;
+    sc.validate_for(platform, n_apps)?;
+    Ok(sc)
+}
+
+/// Generate the whole campaign: `cfg.cases` scenarios.
+pub fn generate_all(
+    cfg: &FuzzConfig,
+    platform: &Platform,
+    n_apps: usize,
+) -> Result<Vec<Scenario>> {
+    (0..cfg.cases).map(|i| generate(cfg, platform, n_apps, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_validates_and_roundtrips() {
+        let cfg = FuzzConfig::default();
+        cfg.validate().unwrap();
+        let j = cfg.to_json().to_string();
+        let back = FuzzConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        // Missing keys keep defaults.
+        let sparse =
+            FuzzConfig::from_json(&Json::parse("{\"cases\": 7}").unwrap())
+                .unwrap();
+        assert_eq!(sparse.cases, 7);
+        assert_eq!(sparse.jobs, cfg.jobs);
+    }
+
+    #[test]
+    fn config_rejects_bad_ranges() {
+        let mut c = FuzzConfig::default();
+        c.cases = 0;
+        assert!(c.validate().is_err());
+        let mut c = FuzzConfig::default();
+        c.rate_min_per_ms = 5.0;
+        c.rate_max_per_ms = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = FuzzConfig::default();
+        c.ambient_max_c = 400.0;
+        assert!(c.validate().is_err());
+        let mut c = FuzzConfig::default();
+        c.max_failed_frac = 0.99;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_case() {
+        let cfg = FuzzConfig::default();
+        let p = Platform::table2_soc();
+        let a = generate(&cfg, &p, 2, 3).unwrap();
+        let b = generate(&cfg, &p, 2, 3).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        let c = generate(&cfg, &p, 2, 4).unwrap();
+        assert_ne!(a.to_json().to_string(), c.to_json().to_string());
+    }
+
+    #[test]
+    fn fault_storms_never_orphan_a_class_and_always_recover() {
+        let mut cfg = FuzzConfig::default();
+        cfg.min_events = 10;
+        cfg.max_events = 20;
+        cfg.max_failed_frac = 0.9; // clamped to n_pes - 1 internally
+        let p = Platform::table2_soc();
+        for case in 0..40 {
+            let sc = generate(&cfg, &p, 2, case).unwrap();
+            let mut down: Vec<usize> = Vec::new();
+            for ev in &sc.events {
+                match ev.action {
+                    Action::PeFail { pe } => {
+                        down.push(pe);
+                        for class in 0..p.classes.len() {
+                            let alive = p
+                                .pes
+                                .iter()
+                                .enumerate()
+                                .filter(|(i, pe)| {
+                                    pe.class == class
+                                        && !down.contains(i)
+                                })
+                                .count();
+                            let total = p
+                                .pes
+                                .iter()
+                                .filter(|pe| pe.class == class)
+                                .count();
+                            assert!(
+                                total == 0 || alive >= 1,
+                                "case {case}: class {class} fully failed"
+                            );
+                        }
+                    }
+                    Action::PeRestore { pe } => {
+                        down.retain(|&x| x != pe);
+                    }
+                    _ => {}
+                }
+            }
+            assert!(
+                down.is_empty(),
+                "case {case}: PEs {down:?} never restored"
+            );
+        }
+    }
+}

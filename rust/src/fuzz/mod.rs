@@ -1,0 +1,24 @@
+//! Seeded scenario fuzzing and the scheduler-robustness tournament.
+//!
+//! Three layers, used together by the `fuzz` CLI subcommand:
+//!
+//! - [`gen`] — a deterministic random scenario generator: given a
+//!   [`gen::FuzzConfig`] seed, it emits runtime-event timelines (rate
+//!   ramps, fault storms with recovery, ambient swings, power-budget
+//!   oscillation, app-mix churn, scheduler hot-swaps) that always pass
+//!   [`crate::scenario::Scenario::validate`] by construction.
+//! - [`oracle`] — reusable invariant oracles over a finished
+//!   [`crate::stats::SimReport`]: phase partition, no job loss,
+//!   energy == ∫power, finite stats, report/counter consistency.
+//! - [`tournament`] — the pooled runner that races every registered
+//!   scheduler across the generated scenarios, scores worst-case
+//!   robustness, and shrinks any oracle violation to a minimized,
+//!   replayable repro JSON.
+
+pub mod gen;
+pub mod oracle;
+pub mod tournament;
+
+pub use gen::FuzzConfig;
+pub use oracle::{check, Violation, ORACLE_NAMES};
+pub use tournament::{replay, run_tournament, Repro, TournamentOpts};

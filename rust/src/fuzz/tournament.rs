@@ -1,0 +1,764 @@
+//! The scheduler-robustness tournament: every registered scheduler ×
+//! N generated scenarios through the pooled engine, scored on
+//! worst-case behaviour, with every run interrogated by the invariant
+//! oracles and every violation shrunk to a minimized, replayable repro.
+//!
+//! ## Determinism
+//!
+//! The grid is laid out in canonical (scheduler-major, case-minor)
+//! order, permuted largest-first through
+//! [`crate::coordinator::size_ordered_indices`] for the pooled
+//! fan-out (a heterogeneous grid scheduled index-ordered would idle
+//! the pool behind whichever big cell lands last), then scattered back
+//! to canonical order before anything observable happens: cell
+//! scoring, standings, telemetry emission, and repro writing all walk
+//! the canonical order.  The serialized [`TournamentReport`] and the
+//! telemetry stream are therefore byte-identical for any thread count
+//! (`rust/tests/fuzz_props.rs` pins this).
+//!
+//! ## Failure minimization
+//!
+//! A violated cell is re-run through greedy event deletion
+//! ([`crate::scenario::Scenario::without_event`]): each event is
+//! dropped if the candidate still validates and still triggers the
+//! original oracle; passes repeat until a fixpoint.  The minimized
+//! scenario, the exact sim config fields, and the final verdict are
+//! written as a [`Repro`] JSON file that [`replay`] re-executes
+//! bit-identically.
+
+use std::path::{Path, PathBuf};
+
+use crate::app::AppGraph;
+use crate::config::SimConfig;
+use crate::coordinator::{parallel_map_pooled_counted, size_ordered_indices};
+use crate::platform::Platform;
+use crate::scenario::Scenario;
+use crate::sim::{SimSetup, SimWorker};
+use crate::stats::{CellScore, SchedStanding, TournamentReport};
+use crate::telemetry::{emit_global, Counters, Event};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::gen::{self, FuzzConfig};
+use super::oracle::{self, Violation};
+
+/// Oracle name of artificially injected violations (the shrinker test
+/// hook — see [`TournamentOpts::inject_label`]).
+pub const INJECTED_ORACLE: &str = "injected";
+
+/// Tournament options beyond the generator's [`FuzzConfig`].
+#[derive(Debug, Clone)]
+pub struct TournamentOpts {
+    /// Scheduler roster; defaults to every registered scheduler
+    /// constructible in this environment
+    /// ([`crate::sched::available_names`]).
+    pub schedulers: Vec<String>,
+    pub threads: usize,
+    /// Where minimized repro JSON files go; `None` skips writing (the
+    /// minimized scenarios still shrink and land in the report).
+    pub repro_dir: Option<PathBuf>,
+    /// Test hook: flag an artificial violation on every cell whose
+    /// scenario contains an event whose label starts with this prefix
+    /// (e.g. `"rate="` or `"pe"`).  Exercises the shrink + repro
+    /// pipeline without needing a real simulator bug.
+    pub inject_label: Option<String>,
+}
+
+impl Default for TournamentOpts {
+    fn default() -> TournamentOpts {
+        TournamentOpts {
+            schedulers: crate::sched::available_names()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            threads: crate::util::default_threads(),
+            repro_dir: None,
+            inject_label: None,
+        }
+    }
+}
+
+/// The exact simulation config of one tournament cell — also the
+/// contract [`Repro`] replays against, so everything that shapes the
+/// run is derived from recorded fields only.
+fn case_config(
+    sched: &str,
+    scenario: &Scenario,
+    sim_seed: u64,
+    jobs: usize,
+    rate_per_ms: f64,
+) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.scheduler = sched.to_string();
+    cfg.seed = sim_seed;
+    cfg.max_jobs = jobs;
+    cfg.warmup_jobs = 0; // oracles reason about every job
+    cfg.injection_rate_per_ms = rate_per_ms;
+    cfg.capture_traces = true; // energy == ∫power needs the trace
+    cfg.scenario = Some(scenario.clone());
+    cfg
+}
+
+/// Per-case simulation seed: every scheduler sees the same arrival
+/// stream for case `i`, distinct cases decorrelate.
+fn case_seed(fuzz: &FuzzConfig, case: usize) -> u64 {
+    fuzz.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case as u64 + 1)
+}
+
+fn base_rate(fuzz: &FuzzConfig) -> f64 {
+    0.5 * (fuzz.rate_min_per_ms + fuzz.rate_max_per_ms)
+}
+
+/// Relative cost weight of a scheduler *build* (per-cell worker resets
+/// reconstruct the policy — ROADMAP item 1): solver-backed policies
+/// dwarf the listed heuristics.
+fn sched_cost_weight(name: &str) -> u64 {
+    match name {
+        "ilp" | "table" => 64,
+        "etf-xla" => 32,
+        "il" => 16,
+        "heft" => 8,
+        _ => 4,
+    }
+}
+
+/// Expected size of one cell, the sort key for the largest-first
+/// fan-out schedule: scenario timeline length plus the scheduler's
+/// build weight.
+pub(crate) fn cell_cost(sched: &str, scenario: &Scenario) -> u64 {
+    sched_cost_weight(sched) + scenario.events.len() as u64
+}
+
+fn check_cell(
+    report: &crate::stats::SimReport,
+    cfg: &SimConfig,
+    scenario: &Scenario,
+    inject_label: Option<&str>,
+) -> Vec<Violation> {
+    let mut v = oracle::check(report, cfg);
+    if let Some(prefix) = inject_label {
+        if scenario
+            .events
+            .iter()
+            .any(|e| e.action.label().starts_with(prefix))
+        {
+            v.push(Violation {
+                oracle: INJECTED_ORACLE.to_string(),
+                detail: format!(
+                    "scenario contains an event labelled '{prefix}*'"
+                ),
+            });
+        }
+    }
+    v
+}
+
+/// Run the tournament: generate `fuzz.cases` scenarios, execute every
+/// `opts.schedulers` policy over each through pooled workers, oracle
+/// every report, shrink and persist any violation, and rank the
+/// roster.  Returns the report plus the aggregated deterministic
+/// counters (for the caller's `run_finished` event).
+pub fn run_tournament(
+    platform: &Platform,
+    apps: &[AppGraph],
+    fuzz: &FuzzConfig,
+    opts: &TournamentOpts,
+) -> Result<(TournamentReport, Counters)> {
+    fuzz.validate()?;
+    if opts.schedulers.is_empty() {
+        return Err(Error::Config(
+            "tournament: empty scheduler roster".into(),
+        ));
+    }
+    let scenarios = gen::generate_all(fuzz, platform, apps.len())?;
+    let base = SimConfig::default();
+    let setup = SimSetup::new(platform, apps, &base)?;
+
+    // Canonical cell order: scheduler-major, case-minor.
+    let cells: Vec<(usize, usize)> = (0..opts.schedulers.len())
+        .flat_map(|s| (0..scenarios.len()).map(move |c| (s, c)))
+        .collect();
+    // ROADMAP housekeeping: the pooled fan-out is index-ordered, so a
+    // heterogeneous grid must be sorted by expected size at the call
+    // site — largest cells first, results scattered back afterwards.
+    let order = size_ordered_indices(&cells, |&(s, c)| {
+        cell_cost(&opts.schedulers[s], &scenarios[c])
+    });
+    let ordered: Vec<(usize, usize)> =
+        order.iter().map(|&i| cells[i]).collect();
+
+    let rate = base_rate(fuzz);
+    let (permuted, counters) = parallel_map_pooled_counted(
+        &ordered,
+        opts.threads,
+        || None::<SimWorker>,
+        |slot, counters, _, &(s, c)| {
+            let sched = &opts.schedulers[s];
+            let scenario = &scenarios[c];
+            let cfg = case_config(
+                sched,
+                scenario,
+                case_seed(fuzz, c),
+                fuzz.jobs,
+                rate,
+            );
+            let worker = SimWorker::obtain(slot, &setup, &cfg)?;
+            let report = worker.run(&setup);
+            counters.merge(&Counters::from_report(report));
+            let summary = report.latency_summary();
+            let deadline_misses = report
+                .job_latencies_us
+                .iter()
+                .filter(|&&l| l > fuzz.deadline_us)
+                .count();
+            let fallback_rate = if report.sched_decisions > 0 {
+                report.sched_fallbacks as f64
+                    / report.sched_decisions as f64
+            } else {
+                0.0
+            };
+            let violations = check_cell(
+                report,
+                &cfg,
+                scenario,
+                opts.inject_label.as_deref(),
+            );
+            Ok(CellScore {
+                scheduler: sched.clone(),
+                case_idx: c,
+                scenario: scenario.name.clone(),
+                events: scenario.events.len(),
+                mean_us: summary.mean,
+                p95_us: summary.p95,
+                p99_us: summary.p99,
+                max_us: summary.max,
+                deadline_misses,
+                energy_j: report.total_energy_j,
+                fallback_rate,
+                violations: violations
+                    .into_iter()
+                    .map(|v| (v.oracle, v.detail))
+                    .collect(),
+            })
+        },
+    );
+
+    // Scatter back to canonical order, aggregating failures.
+    let mut slots: Vec<Option<CellScore>> = Vec::new();
+    slots.resize_with(cells.len(), || None);
+    let mut errs = Vec::new();
+    for (k, r) in permuted.into_iter().enumerate() {
+        let (s, c) = ordered[k];
+        match r {
+            Ok(score) => slots[order[k]] = Some(score),
+            Err(e) => errs.push(format!(
+                "{}×case{}: {e}",
+                opts.schedulers[s], c
+            )),
+        }
+    }
+    if !errs.is_empty() {
+        return Err(Error::Sim(format!(
+            "tournament cells failed: {}",
+            errs.join("; ")
+        )));
+    }
+    let cell_scores: Vec<CellScore> =
+        slots.into_iter().map(|s| s.expect("all cells ok")).collect();
+
+    // Shrink + persist every violated cell, in canonical order.
+    let mut repros = Vec::new();
+    if let Some(dir) = &opts.repro_dir {
+        let mut slot: Option<SimWorker> = None;
+        for cell in &cell_scores {
+            if cell.violations.is_empty() {
+                continue;
+            }
+            std::fs::create_dir_all(dir)?;
+            let scenario = &scenarios[cell.case_idx];
+            let repro = shrink_and_describe(
+                &setup,
+                &mut slot,
+                fuzz,
+                &cell.scheduler,
+                cell.case_idx,
+                scenario,
+                &cell.violations[0].0,
+                opts.inject_label.as_deref(),
+            )?;
+            let path = dir.join(format!(
+                "repro_{}_c{}.json",
+                cell.scheduler, cell.case_idx
+            ));
+            repro.save(&path)?;
+            repros.push(path.to_string_lossy().into_owned());
+        }
+    }
+
+    let standings = rank(&opts.schedulers, &cell_scores);
+    let violations: usize =
+        cell_scores.iter().map(|c| c.violations.len()).sum();
+
+    for cell in &cell_scores {
+        let ev = cell.clone();
+        emit_global(|| Event::FuzzCase {
+            scheduler: ev.scheduler,
+            case: ev.case_idx,
+            scenario: ev.scenario,
+            max_latency_us: ev.max_us,
+            violations: ev.violations.len(),
+        });
+    }
+    let best = standings
+        .first()
+        .map(|s| s.scheduler.clone())
+        .unwrap_or_default();
+    emit_global(|| Event::TournamentSummary {
+        cases: fuzz.cases,
+        schedulers: opts.schedulers.len(),
+        cells: cell_scores.len(),
+        violations,
+        best,
+    });
+
+    let report = TournamentReport {
+        fuzz_seed: fuzz.seed,
+        cases: fuzz.cases,
+        jobs: fuzz.jobs,
+        schedulers: opts.schedulers.clone(),
+        cells: cell_scores,
+        standings,
+        violations,
+        repros,
+    };
+    Ok((report, counters))
+}
+
+/// Rank the roster: per-metric ascending ranks (1 + number of strictly
+/// better schedulers) summed into `rank_score`; standings sorted by
+/// violations first (a policy that broke an invariant can't win), then
+/// rank score, then name.
+fn rank(schedulers: &[String], cells: &[CellScore]) -> Vec<SchedStanding> {
+    let mut rows: Vec<SchedStanding> = schedulers
+        .iter()
+        .map(|name| {
+            let mine: Vec<&CellScore> =
+                cells.iter().filter(|c| &c.scheduler == name).collect();
+            let n = mine.len().max(1) as f64;
+            let mean = |f: &dyn Fn(&CellScore) -> f64| {
+                mine.iter().map(|c| f(*c)).sum::<f64>() / n
+            };
+            SchedStanding {
+                scheduler: name.clone(),
+                worst_max_us: mine
+                    .iter()
+                    .map(|c| c.max_us)
+                    .fold(0.0, f64::max),
+                mean_p95_us: mean(&|c| c.p95_us),
+                mean_p99_us: mean(&|c| c.p99_us),
+                deadline_misses: mine
+                    .iter()
+                    .map(|c| c.deadline_misses)
+                    .sum(),
+                energy_j: mine.iter().map(|c| c.energy_j).sum(),
+                fallback_rate: mean(&|c| c.fallback_rate),
+                violations: mine
+                    .iter()
+                    .map(|c| c.violations.len())
+                    .sum(),
+                rank_score: 0.0,
+            }
+        })
+        .collect();
+    let metrics: [&dyn Fn(&SchedStanding) -> f64; 6] = [
+        &|s| s.worst_max_us,
+        &|s| s.mean_p95_us,
+        &|s| s.mean_p99_us,
+        &|s| s.deadline_misses as f64,
+        &|s| s.energy_j,
+        &|s| s.fallback_rate,
+    ];
+    for metric in metrics {
+        let values: Vec<f64> = rows.iter().map(|r| metric(r)).collect();
+        for (i, row) in rows.iter_mut().enumerate() {
+            let better =
+                values.iter().filter(|&&v| v < values[i]).count();
+            row.rank_score += (better + 1) as f64;
+        }
+    }
+    rows.sort_by(|a, b| {
+        a.violations
+            .cmp(&b.violations)
+            .then(a.rank_score.total_cmp(&b.rank_score))
+            .then(a.scheduler.cmp(&b.scheduler))
+    });
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Shrinking + replayable repros
+// ---------------------------------------------------------------------------
+
+/// A minimized, replayable failure: the shrunk scenario plus every
+/// config field [`case_config`] derives a run from, and the verdict the
+/// minimized run produced.  [`replay`] re-executes it and must land on
+/// a bit-identical verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Repro {
+    pub scheduler: String,
+    pub case_idx: usize,
+    pub fuzz_seed: u64,
+    pub sim_seed: u64,
+    pub jobs: usize,
+    pub rate_per_ms: f64,
+    pub inject_label: Option<String>,
+    /// The oracle the shrinker preserved.
+    pub oracle: String,
+    /// Full verdict of the minimized scenario.
+    pub violations: Vec<(String, String)>,
+    pub scenario: Scenario,
+}
+
+impl Repro {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str("ds3r-fuzz-repro".into()))
+            .set("scheduler", Json::Str(self.scheduler.clone()))
+            .set("case", Json::Num(self.case_idx as f64))
+            .set("fuzz_seed", crate::util::json::u64_to_json(self.fuzz_seed))
+            .set("sim_seed", crate::util::json::u64_to_json(self.sim_seed))
+            .set("jobs", Json::Num(self.jobs as f64))
+            .set("rate_per_ms", Json::Num(self.rate_per_ms))
+            .set(
+                "inject",
+                match &self.inject_label {
+                    Some(l) => Json::Str(l.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set("oracle", Json::Str(self.oracle.clone()))
+            .set(
+                "violations",
+                Json::Arr(
+                    self.violations
+                        .iter()
+                        .map(|(o, d)| {
+                            let mut v = Json::obj();
+                            v.set("oracle", Json::Str(o.clone()))
+                                .set("detail", Json::Str(d.clone()));
+                            v
+                        })
+                        .collect(),
+                ),
+            )
+            .set("scenario", self.scenario.to_json());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Repro> {
+        if j.get("kind").and_then(Json::as_str) != Some("ds3r-fuzz-repro")
+        {
+            return Err(Error::Config(
+                "not a ds3r-fuzz-repro file".into(),
+            ));
+        }
+        Ok(Repro {
+            scheduler: j.req_str("scheduler")?.to_string(),
+            case_idx: j.req_f64("case")? as usize,
+            fuzz_seed: j.req_f64("fuzz_seed")? as u64,
+            sim_seed: j.req_f64("sim_seed")? as u64,
+            jobs: j.req_f64("jobs")? as usize,
+            rate_per_ms: j.req_f64("rate_per_ms")?,
+            inject_label: j
+                .get("inject")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            oracle: j.req_str("oracle")?.to_string(),
+            violations: j
+                .req_arr("violations")?
+                .iter()
+                .map(|v| {
+                    Ok((
+                        v.req_str("oracle")?.to_string(),
+                        v.req_str("detail")?.to_string(),
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            scenario: Scenario::from_json(
+                j.get("scenario").ok_or_else(|| {
+                    Error::Config("repro missing 'scenario'".into())
+                })?,
+            )?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Repro> {
+        Repro::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_case_violations(
+    setup: &SimSetup,
+    slot: &mut Option<SimWorker>,
+    sched: &str,
+    scenario: &Scenario,
+    sim_seed: u64,
+    jobs: usize,
+    rate: f64,
+    inject_label: Option<&str>,
+) -> Result<Vec<Violation>> {
+    let cfg = case_config(sched, scenario, sim_seed, jobs, rate);
+    let worker = SimWorker::obtain(slot, setup, &cfg)?;
+    let report = worker.run(setup);
+    Ok(check_cell(report, &cfg, scenario, inject_label))
+}
+
+/// Greedy event-deletion shrink: repeatedly drop any event whose
+/// removal keeps the scenario valid and the `target` oracle violated,
+/// until a pass removes nothing.  Returns the minimized [`Repro`]
+/// carrying the minimized run's full verdict.
+#[allow(clippy::too_many_arguments)]
+fn shrink_and_describe(
+    setup: &SimSetup,
+    slot: &mut Option<SimWorker>,
+    fuzz: &FuzzConfig,
+    sched: &str,
+    case_idx: usize,
+    scenario: &Scenario,
+    target: &str,
+    inject_label: Option<&str>,
+) -> Result<Repro> {
+    let sim_seed = case_seed(fuzz, case_idx);
+    let rate = base_rate(fuzz);
+    let platform = setup.platform();
+    let n_apps = setup.apps().len();
+    let mut cur = scenario.clone();
+    loop {
+        let mut changed = false;
+        let mut i = 0;
+        while i < cur.events.len() {
+            let cand = cur.without_event(i);
+            let still_fails = cand.validate().is_ok()
+                && cand.validate_for(platform, n_apps).is_ok()
+                && run_case_violations(
+                    setup,
+                    slot,
+                    sched,
+                    &cand,
+                    sim_seed,
+                    fuzz.jobs,
+                    rate,
+                    inject_label,
+                )?
+                .iter()
+                .any(|v| v.oracle == target);
+            if still_fails {
+                cur = cand;
+                changed = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let verdict = run_case_violations(
+        setup,
+        slot,
+        sched,
+        &cur,
+        sim_seed,
+        fuzz.jobs,
+        rate,
+        inject_label,
+    )?;
+    Ok(Repro {
+        scheduler: sched.to_string(),
+        case_idx,
+        fuzz_seed: fuzz.seed,
+        sim_seed,
+        jobs: fuzz.jobs,
+        rate_per_ms: rate,
+        inject_label: inject_label.map(str::to_string),
+        oracle: target.to_string(),
+        violations: verdict
+            .into_iter()
+            .map(|v| (v.oracle, v.detail))
+            .collect(),
+        scenario: cur,
+    })
+}
+
+/// Re-execute a repro exactly as the tournament did and return the
+/// fresh verdict — bit-identical to `repro.violations` when the
+/// simulator still misbehaves the same way (the property
+/// `rust/tests/fuzz_props.rs` pins), empty if the bug has been fixed.
+pub fn replay(
+    repro: &Repro,
+    platform: &Platform,
+    apps: &[AppGraph],
+) -> Result<Vec<Violation>> {
+    repro.scenario.validate()?;
+    repro.scenario.validate_for(platform, apps.len())?;
+    let base = SimConfig::default();
+    let setup = SimSetup::new(platform, apps, &base)?;
+    let mut slot = None;
+    run_case_violations(
+        &setup,
+        &mut slot,
+        &repro.scheduler,
+        &repro.scenario,
+        repro.sim_seed,
+        repro.jobs,
+        repro.rate_per_ms,
+        repro.inject_label.as_deref(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite::{self, WifiParams};
+
+    fn tiny_fuzz() -> FuzzConfig {
+        let mut f = FuzzConfig::default();
+        f.cases = 2;
+        f.jobs = 12;
+        f.min_events = 3;
+        f.max_events = 6;
+        f.horizon_us = 30_000.0;
+        f
+    }
+
+    fn workload() -> Vec<AppGraph> {
+        vec![suite::wifi_tx(WifiParams { symbols: 2 })]
+    }
+
+    #[test]
+    fn tiny_tournament_runs_clean_and_ranks_all_schedulers() {
+        let p = Platform::table2_soc();
+        let apps = workload();
+        let fuzz = tiny_fuzz();
+        let opts = TournamentOpts {
+            schedulers: vec!["etf".into(), "rr".into(), "met".into()],
+            threads: 2,
+            repro_dir: None,
+            inject_label: None,
+        };
+        let (report, counters) =
+            run_tournament(&p, &apps, &fuzz, &opts).unwrap();
+        assert_eq!(report.cells.len(), 6);
+        assert_eq!(report.standings.len(), 3);
+        assert_eq!(report.violations, 0, "{:?}", report.cells);
+        assert_eq!(counters.get("runs"), 6);
+        // Canonical order: scheduler-major, case-minor.
+        let order: Vec<(String, usize)> = report
+            .cells
+            .iter()
+            .map(|c| (c.scheduler.clone(), c.case_idx))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                ("etf".into(), 0),
+                ("etf".into(), 1),
+                ("rr".into(), 0),
+                ("rr".into(), 1),
+                ("met".into(), 0),
+                ("met".into(), 1),
+            ]
+        );
+        // JSON round-trip.
+        let j = report.to_json().to_string();
+        let back =
+            TournamentReport::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, report);
+    }
+
+    #[test]
+    fn fanout_schedule_is_largest_first() {
+        // The permutation the tournament feeds the pool must be
+        // non-increasing in expected cell size (the ROADMAP
+        // housekeeping contract), for a deliberately heterogeneous
+        // scheduler × scenario grid.
+        let scheds = ["table".to_string(), "rr".to_string()];
+        let scenarios = [
+            Scenario::new("small", ""),
+            Scenario::new("big", "")
+                .event(0.0, crate::scenario::Action::SetRate { per_ms: 1.0 })
+                .event(1.0, crate::scenario::Action::SetAmbient { t_c: 30.0 })
+                .event(2.0, crate::scenario::Action::SetAmbient { t_c: 35.0 }),
+        ];
+        let cells: Vec<(usize, usize)> = (0..scheds.len())
+            .flat_map(|s| (0..scenarios.len()).map(move |c| (s, c)))
+            .collect();
+        let order = size_ordered_indices(&cells, |&(s, c)| {
+            cell_cost(&scheds[s], &scenarios[c])
+        });
+        let costs: Vec<u64> = order
+            .iter()
+            .map(|&i| {
+                let (s, c) = cells[i];
+                cell_cost(&scheds[s], &scenarios[c])
+            })
+            .collect();
+        for w in costs.windows(2) {
+            assert!(w[0] >= w[1], "schedule not largest-first: {costs:?}");
+        }
+        // The solver-backed scheduler's cells lead the schedule.
+        assert_eq!(cells[order[0]].0, 0, "table cells must go first");
+    }
+
+    #[test]
+    fn injected_violation_shrinks_to_minimal_repro_and_replays() {
+        let p = Platform::table2_soc();
+        let apps = workload();
+        let mut fuzz = tiny_fuzz();
+        fuzz.cases = 1;
+        let dir = std::env::temp_dir().join("ds3r_fuzz_shrink_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = TournamentOpts {
+            schedulers: vec!["etf".into()],
+            threads: 1,
+            repro_dir: Some(dir.clone()),
+            // Every generated scenario opens with a SetRate event, so
+            // every cell trips the hook and must shrink to exactly it.
+            inject_label: Some("rate=".into()),
+        };
+        let (report, _) = run_tournament(&p, &apps, &fuzz, &opts).unwrap();
+        assert_eq!(report.violations, 1);
+        assert_eq!(report.repros.len(), 1);
+        let repro = Repro::load(Path::new(&report.repros[0])).unwrap();
+        assert_eq!(repro.oracle, INJECTED_ORACLE);
+        assert_eq!(
+            repro.scenario.events.len(),
+            1,
+            "greedy deletion must strip every event except the trigger: \
+             {:?}",
+            repro.scenario.events
+        );
+        assert!(repro.scenario.events[0]
+            .action
+            .label()
+            .starts_with("rate="));
+        // Replay reproduces the recorded verdict bit-identically.
+        let fresh = replay(&repro, &p, &apps).unwrap();
+        let fresh: Vec<(String, String)> = fresh
+            .into_iter()
+            .map(|v| (v.oracle, v.detail))
+            .collect();
+        assert_eq!(fresh, repro.violations);
+        // Repro JSON round-trips.
+        let j = repro.to_json().to_string();
+        let back = Repro::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, repro);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

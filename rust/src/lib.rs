@@ -67,6 +67,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dse;
 pub mod dtpm;
+pub mod fuzz;
 pub mod jobgen;
 pub mod learn;
 pub mod noc;

@@ -13,6 +13,7 @@ fn main() {
         "scenario" => cli::cmd_scenario(&args),
         "dse" => cli::cmd_dse(&args),
         "learn" => cli::cmd_learn(&args),
+        "fuzz" => cli::cmd_fuzz(&args),
         "reproduce" => cli::cmd_reproduce(&args),
         "validate" => cli::cmd_validate(&args),
         "list" => Ok(cli::cmd_list()),

@@ -234,6 +234,22 @@ impl Scenario {
         self
     }
 
+    /// A copy with event `idx` deleted — the primitive the fuzz
+    /// shrinker ([`crate::fuzz::tournament`]) greedily applies while a
+    /// candidate still reproduces its oracle violation.  Deletion
+    /// preserves timestamp order and only ever *shrinks* ramp windows,
+    /// so a valid scenario stays valid; the shrinker still re-validates
+    /// each candidate defensively.
+    pub fn without_event(&self, idx: usize) -> Scenario {
+        let mut events = self.events.clone();
+        events.remove(idx);
+        Scenario {
+            name: self.name.clone(),
+            description: self.description.clone(),
+            events,
+        }
+    }
+
     /// Platform-independent validation: timestamps and action payloads.
     pub fn validate(&self) -> Result<()> {
         if self.name.is_empty() {

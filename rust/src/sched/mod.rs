@@ -169,6 +169,22 @@ pub fn builtin_names() -> &'static [&'static str] {
     ]
 }
 
+/// The built-in schedulers constructible in *this* environment:
+/// [`builtin_names`] minus `etf-xla` when its on-disk AOT artifacts are
+/// absent.  "Every registered scheduler" harnesses (the fuzz
+/// tournament, property tests) iterate this so a fresh checkout still
+/// covers the full roster it can actually build.
+pub fn available_names() -> Vec<&'static str> {
+    let artifacts = crate::runtime::artifacts_available(
+        &crate::runtime::default_artifacts_dir(),
+    );
+    builtin_names()
+        .iter()
+        .copied()
+        .filter(|&n| artifacts || n != "etf-xla")
+        .collect()
+}
+
 // ---------------------------------------------------------------------------
 // Test scaffolding shared by the scheduler unit tests.
 // ---------------------------------------------------------------------------
@@ -284,6 +300,31 @@ mod tests {
                 }
                 Err(e) => panic!("{name}: {e}"),
             }
+        }
+    }
+
+    #[test]
+    fn available_names_is_builtins_modulo_artifacts() {
+        let names = available_names();
+        let artifacts = crate::runtime::artifacts_available(
+            &crate::runtime::default_artifacts_dir(),
+        );
+        for &n in builtin_names() {
+            let expect = artifacts || n != "etf-xla";
+            assert_eq!(names.contains(&n), expect, "{n}");
+        }
+        // Every available scheduler is constructible right now.
+        let platform = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(suite::WifiParams { symbols: 2 })];
+        let build = SchedBuild {
+            platform: &platform,
+            apps: &apps,
+            seed: 1,
+            artifacts_dir: None,
+            policy_path: None,
+        };
+        for name in names {
+            create(name, &build).unwrap_or_else(|e| panic!("{name}: {e}"));
         }
     }
 

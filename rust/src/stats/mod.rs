@@ -509,6 +509,255 @@ impl DseGenStats {
     }
 }
 
+/// One scheduler × generated-scenario cell of a fuzz tournament
+/// ([`crate::fuzz::tournament`]): robustness metrics plus any oracle
+/// violations the run triggered.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CellScore {
+    pub scheduler: String,
+    /// Index of the generated scenario (`fuzz::gen::generate` case).
+    pub case_idx: usize,
+    pub scenario: String,
+    /// Scenario timeline length (events), the cell's size signal.
+    pub events: usize,
+    pub mean_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Jobs whose latency exceeded the configured soft deadline.
+    pub deadline_misses: usize,
+    pub energy_j: f64,
+    /// `sched_fallbacks / sched_decisions` (0 when no decisions).
+    pub fallback_rate: f64,
+    /// `(oracle, detail)` pairs from [`crate::fuzz::oracle::check`].
+    pub violations: Vec<(String, String)>,
+}
+
+impl CellScore {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scheduler", Json::Str(self.scheduler.clone()))
+            .set("case", Json::Num(self.case_idx as f64))
+            .set("scenario", Json::Str(self.scenario.clone()))
+            .set("events", Json::Num(self.events as f64))
+            .set("mean_us", Json::Num(self.mean_us))
+            .set("p95_us", Json::Num(self.p95_us))
+            .set("p99_us", Json::Num(self.p99_us))
+            .set("max_us", Json::Num(self.max_us))
+            .set(
+                "deadline_misses",
+                Json::Num(self.deadline_misses as f64),
+            )
+            .set("energy_j", Json::Num(self.energy_j))
+            .set("fallback_rate", Json::Num(self.fallback_rate))
+            .set(
+                "violations",
+                Json::Arr(
+                    self.violations
+                        .iter()
+                        .map(|(oracle, detail)| {
+                            let mut v = Json::obj();
+                            v.set("oracle", Json::Str(oracle.clone()))
+                                .set("detail", Json::Str(detail.clone()));
+                            v
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<CellScore> {
+        let violations = match j.get("violations") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|v| {
+                    Ok((
+                        v.req_str("oracle")?.to_string(),
+                        v.req_str("detail")?.to_string(),
+                    ))
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        Ok(CellScore {
+            scheduler: j.req_str("scheduler")?.to_string(),
+            case_idx: j.req_f64("case")? as usize,
+            scenario: j.req_str("scenario")?.to_string(),
+            events: j.req_f64("events")? as usize,
+            mean_us: j.req_f64("mean_us")?,
+            p95_us: j.req_f64("p95_us")?,
+            p99_us: j.req_f64("p99_us")?,
+            max_us: j.req_f64("max_us")?,
+            deadline_misses: j.req_f64("deadline_misses")? as usize,
+            energy_j: j.req_f64("energy_j")?,
+            fallback_rate: j.req_f64("fallback_rate")?,
+            violations,
+        })
+    }
+}
+
+/// Per-scheduler aggregate over every tournament case, ranked by
+/// `rank_score` (sum of per-metric ranks; lower is better).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SchedStanding {
+    pub scheduler: String,
+    /// Worst job latency across every case (robustness headline).
+    pub worst_max_us: f64,
+    pub mean_p95_us: f64,
+    pub mean_p99_us: f64,
+    pub deadline_misses: usize,
+    pub energy_j: f64,
+    pub fallback_rate: f64,
+    pub violations: usize,
+    pub rank_score: f64,
+}
+
+impl SchedStanding {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scheduler", Json::Str(self.scheduler.clone()))
+            .set("worst_max_us", Json::Num(self.worst_max_us))
+            .set("mean_p95_us", Json::Num(self.mean_p95_us))
+            .set("mean_p99_us", Json::Num(self.mean_p99_us))
+            .set(
+                "deadline_misses",
+                Json::Num(self.deadline_misses as f64),
+            )
+            .set("energy_j", Json::Num(self.energy_j))
+            .set("fallback_rate", Json::Num(self.fallback_rate))
+            .set("violations", Json::Num(self.violations as f64))
+            .set("rank_score", Json::Num(self.rank_score));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<SchedStanding> {
+        Ok(SchedStanding {
+            scheduler: j.req_str("scheduler")?.to_string(),
+            worst_max_us: j.req_f64("worst_max_us")?,
+            mean_p95_us: j.req_f64("mean_p95_us")?,
+            mean_p99_us: j.req_f64("mean_p99_us")?,
+            deadline_misses: j.req_f64("deadline_misses")? as usize,
+            energy_j: j.req_f64("energy_j")?,
+            fallback_rate: j.req_f64("fallback_rate")?,
+            violations: j.req_f64("violations")? as usize,
+            rank_score: j.req_f64("rank_score")?,
+        })
+    }
+}
+
+/// Full result of one fuzz tournament: every cell in canonical
+/// (scheduler-major, case-minor) order, the ranked standings, and the
+/// paths of any minimized repro files written.  Byte-deterministic in
+/// `(fuzz config, scheduler roster)` — thread count never changes the
+/// serialized report (`rust/tests/fuzz_props.rs` pins this).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TournamentReport {
+    pub fuzz_seed: u64,
+    pub cases: usize,
+    pub jobs: usize,
+    pub schedulers: Vec<String>,
+    pub cells: Vec<CellScore>,
+    pub standings: Vec<SchedStanding>,
+    /// Total oracle violations across every cell.
+    pub violations: usize,
+    /// Minimized repro JSON files, in cell order.
+    pub repros: Vec<String>,
+}
+
+impl TournamentReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str("ds3r-tournament-report".into()))
+            .set("fuzz_seed", crate::util::json::u64_to_json(self.fuzz_seed))
+            .set("cases", Json::Num(self.cases as f64))
+            .set("jobs", Json::Num(self.jobs as f64))
+            .set(
+                "schedulers",
+                Json::Arr(
+                    self.schedulers
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "cells",
+                Json::Arr(self.cells.iter().map(CellScore::to_json).collect()),
+            )
+            .set(
+                "standings",
+                Json::Arr(
+                    self.standings
+                        .iter()
+                        .map(SchedStanding::to_json)
+                        .collect(),
+                ),
+            )
+            .set("violations", Json::Num(self.violations as f64))
+            .set(
+                "repros",
+                Json::Arr(
+                    self.repros
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<TournamentReport> {
+        if j.get("kind").and_then(Json::as_str)
+            != Some("ds3r-tournament-report")
+        {
+            return Err(crate::Error::Config(
+                "not a ds3r-tournament-report file".into(),
+            ));
+        }
+        let strings = |key: &str| -> crate::Result<Vec<String>> {
+            j.req_arr(key)?
+                .iter()
+                .map(|x| {
+                    x.as_str().map(str::to_string).ok_or_else(|| {
+                        crate::Error::Config(format!(
+                            "TournamentReport '{key}' entries must be \
+                             strings"
+                        ))
+                    })
+                })
+                .collect()
+        };
+        Ok(TournamentReport {
+            fuzz_seed: j.req_f64("fuzz_seed")? as u64,
+            cases: j.req_f64("cases")? as usize,
+            jobs: j.req_f64("jobs")? as usize,
+            schedulers: strings("schedulers")?,
+            cells: j
+                .req_arr("cells")?
+                .iter()
+                .map(CellScore::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            standings: j
+                .req_arr("standings")?
+                .iter()
+                .map(SchedStanding::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            violations: j.req_f64("violations")? as usize,
+            repros: strings("repros")?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<TournamentReport> {
+        TournamentReport::from_json(&Json::parse_file(path)?)
+    }
+}
+
 /// Collect a Figure-3-style series: mean latency per injection rate.
 pub fn latency_series(
     name: &str,

@@ -110,6 +110,25 @@ pub enum Event {
         value: f64,
         unit: String,
     },
+    /// One scheduler × generated-scenario tournament cell
+    /// (deterministic; emitted in canonical cell order after the
+    /// pooled grid completes, like [`Event::ScenarioPhase`]).
+    FuzzCase {
+        scheduler: String,
+        case: usize,
+        scenario: String,
+        max_latency_us: f64,
+        violations: usize,
+    },
+    /// Closing summary of one fuzz tournament (deterministic).
+    TournamentSummary {
+        cases: usize,
+        schedulers: usize,
+        cells: usize,
+        violations: usize,
+        /// Top-ranked scheduler (empty when no standings).
+        best: String,
+    },
     /// A library diagnostic that previously went to `eprintln!`
     /// (deterministic: it reflects simulated behaviour, not wall time).
     Diagnostic { component: String, message: String },
@@ -128,6 +147,8 @@ impl Event {
             Event::DseGeneration { .. } => "dse_generation",
             Event::LearnRound { .. } => "learn_round",
             Event::BenchRecord { .. } => "bench_record",
+            Event::FuzzCase { .. } => "fuzz_case",
+            Event::TournamentSummary { .. } => "tournament_summary",
             Event::Diagnostic { .. } => "diagnostic",
             Event::Span { .. } => "span",
         }
@@ -214,6 +235,32 @@ impl Event {
                     .set("name", Json::Str(name.clone()))
                     .set("value", Json::Num(*value))
                     .set("unit", Json::Str(unit.clone()));
+            }
+            Event::FuzzCase {
+                scheduler,
+                case,
+                scenario,
+                max_latency_us,
+                violations,
+            } => {
+                j.set("scheduler", Json::Str(scheduler.clone()))
+                    .set("case", Json::Num(*case as f64))
+                    .set("scenario", Json::Str(scenario.clone()))
+                    .set("max_latency_us", Json::Num(*max_latency_us))
+                    .set("violations", Json::Num(*violations as f64));
+            }
+            Event::TournamentSummary {
+                cases,
+                schedulers,
+                cells,
+                violations,
+                best,
+            } => {
+                j.set("cases", Json::Num(*cases as f64))
+                    .set("schedulers", Json::Num(*schedulers as f64))
+                    .set("cells", Json::Num(*cells as f64))
+                    .set("violations", Json::Num(*violations as f64))
+                    .set("best", Json::Str(best.clone()));
             }
             Event::Diagnostic { component, message } => {
                 j.set("component", Json::Str(component.clone()))

@@ -1,0 +1,171 @@
+//! Property tests for the fuzz subsystem (README §Fuzzing):
+//!
+//! * every `FuzzConfig` sample across 100 seeds generates scenarios
+//!   that pass validation and survive a bit-identical JSON round-trip;
+//! * a minimized repro replays to the exact recorded oracle verdict;
+//! * the tournament is thread-count invariant: the serialized
+//!   `TournamentReport` and the deterministic telemetry stream are
+//!   byte-identical for 1 vs 8 worker threads.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::app::AppGraph;
+use ds3r::fuzz::{
+    gen, replay, run_tournament, FuzzConfig, Repro, TournamentOpts,
+};
+use ds3r::platform::Platform;
+use ds3r::scenario::Scenario;
+use ds3r::stats::TournamentReport;
+use ds3r::telemetry::{self, MemSink, Telemetry};
+use ds3r::util::json::Json;
+
+fn apps() -> Vec<AppGraph> {
+    vec![suite::wifi_tx(WifiParams { symbols: 2 })]
+}
+
+fn small_fuzz(seed: u64) -> FuzzConfig {
+    let mut f = FuzzConfig::default();
+    f.seed = seed;
+    f.cases = 3;
+    f.jobs = 15;
+    f.min_events = 3;
+    f.max_events = 8;
+    f.horizon_us = 40_000.0;
+    f
+}
+
+/// Satellite: 100 fuzz seeds × generated cases — every scenario the
+/// generator emits validates (generic and against the Table-2
+/// platform/workload) and its JSON form round-trips bit-identically.
+#[test]
+fn prop_generated_scenarios_validate_and_roundtrip_100_seeds() {
+    let p = Platform::table2_soc();
+    let n_apps = 2; // exercise the app-mix move too
+    for i in 0..100u64 {
+        let seed = 0xF00D + i * 7919;
+        let mut fc = small_fuzz(seed);
+        fc.cases = 4;
+        fc.validate().unwrap();
+        // FuzzConfig itself round-trips through JSON.
+        let back = FuzzConfig::from_json(&fc.to_json()).unwrap();
+        assert_eq!(back, fc, "seed {seed}: FuzzConfig JSON round-trip");
+        let scenarios = gen::generate_all(&fc, &p, n_apps).unwrap();
+        assert_eq!(scenarios.len(), fc.cases);
+        for sc in &scenarios {
+            sc.validate().unwrap_or_else(|e| {
+                panic!("seed {seed} {}: invalid scenario: {e}", sc.name)
+            });
+            sc.validate_for(&p, n_apps).unwrap_or_else(|e| {
+                panic!("seed {seed} {}: platform check: {e}", sc.name)
+            });
+            let text = sc.to_json().to_string();
+            let back =
+                Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(&back, sc, "seed {seed}: structural round-trip");
+            assert_eq!(
+                back.to_json().to_string(),
+                text,
+                "seed {seed}: byte round-trip"
+            );
+        }
+        // Same seed, fresh generator: bit-identical scenarios.
+        let again = gen::generate_all(&fc, &p, n_apps).unwrap();
+        assert_eq!(again, scenarios, "seed {seed}: determinism");
+    }
+}
+
+/// Serializes the tests that run tournaments: they emit through the
+/// process-global telemetry dispatcher, and cargo runs tests in
+/// parallel threads.
+static TEL_GLOBAL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Satellite: an (injected) oracle violation shrinks to a minimized
+/// repro whose replay reproduces the recorded verdict bit-identically.
+#[test]
+fn prop_minimized_repro_replays_bit_identically() {
+    let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+    let p = Platform::table2_soc();
+    let apps = apps();
+    let mut fuzz = small_fuzz(99);
+    fuzz.cases = 2;
+    let dir = std::env::temp_dir().join("ds3r_fuzz_props_repro");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = TournamentOpts {
+        schedulers: vec!["etf".into()],
+        threads: 2,
+        repro_dir: Some(dir.clone()),
+        // Every generated scenario opens with a SetRate event, so every
+        // cell trips the injected oracle and must shrink + persist.
+        inject_label: Some("rate=".into()),
+    };
+    let (report, _) = run_tournament(&p, &apps, &fuzz, &opts).unwrap();
+    assert_eq!(report.violations, 2);
+    assert_eq!(report.repros.len(), 2);
+    for path in &report.repros {
+        let repro = Repro::load(Path::new(path)).unwrap();
+        assert!(
+            !repro.violations.is_empty(),
+            "{path}: repro must record its verdict"
+        );
+        // JSON round-trip of the repro file itself.
+        let text = repro.to_json().to_string();
+        let back = Repro::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, repro, "{path}: repro JSON round-trip");
+        // Replay lands on the exact recorded verdict.
+        let fresh: Vec<(String, String)> = replay(&repro, &p, &apps)
+            .unwrap()
+            .into_iter()
+            .map(|v| (v.oracle, v.detail))
+            .collect();
+        assert_eq!(fresh, repro.violations, "{path}: replay verdict");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn tournament_with_global_memsink(
+    threads: usize,
+) -> (TournamentReport, String) {
+    let p = Platform::table2_soc();
+    let apps = apps();
+    let fuzz = small_fuzz(4242);
+    let opts = TournamentOpts {
+        schedulers: vec!["etf".into(), "rr".into(), "met".into()],
+        threads,
+        repro_dir: None,
+        inject_label: None,
+    };
+    let sink = Arc::new(MemSink::new());
+    telemetry::set_global(Telemetry::new(sink.clone()));
+    let out = run_tournament(&p, &apps, &fuzz, &opts);
+    telemetry::set_global(Telemetry::disabled());
+    let (report, _) = out.unwrap();
+    (report, sink.dump())
+}
+
+/// Satellite: the same fuzz seed at 1 vs 8 worker threads produces a
+/// byte-identical serialized `TournamentReport` and a byte-identical
+/// telemetry stream.
+#[test]
+fn prop_tournament_is_thread_count_invariant() {
+    let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+    let (r1, s1) = tournament_with_global_memsink(1);
+    let (r8, s8) = tournament_with_global_memsink(8);
+    assert_eq!(r1, r8, "TournamentReport structural identity");
+    assert_eq!(
+        r1.to_json().to_string_pretty(),
+        r8.to_json().to_string_pretty(),
+        "TournamentReport byte identity"
+    );
+    assert_eq!(s1, s8, "telemetry stream byte identity");
+    assert_eq!(r1.violations, 0, "{:?}", r1.cells);
+    assert!(
+        s1.contains("\"event\": \"fuzz_case\""),
+        "stream must carry per-cell events: {s1}"
+    );
+    assert!(
+        s1.contains("\"event\": \"tournament_summary\""),
+        "stream must close with the summary: {s1}"
+    );
+}

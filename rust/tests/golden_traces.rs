@@ -27,8 +27,11 @@ use ds3r::stats::SimReport;
 use ds3r::util::json::Json;
 
 /// The scheduler axis of the golden matrix ("table" is the ILP-backed
-/// lookup-table scheduler's registry alias).
-const SCHEDS: &[&str] = &["etf", "met", "heft", "table", "rr"];
+/// lookup-table scheduler's registry alias; "il" runs the committed
+/// pretrained policy preset, "random" its seeded baseline — both
+/// deterministic for a fixed seed, so goldens pin them too).
+const SCHEDS: &[&str] =
+    &["etf", "met", "heft", "table", "rr", "il", "random"];
 const SEEDS: &[u64] = &[42, 1234];
 
 fn golden_dir() -> PathBuf {
