@@ -22,8 +22,12 @@
 //! Observability flags shared by every subcommand: `--telemetry
 //! <path|->` streams structured JSONL events ([`crate::telemetry`]),
 //! `--telemetry-timing` adds wall-clock fields/events to that stream,
-//! `--progress` renders live progress lines on stderr, and
+//! `--progress` renders live progress lines on stderr, `--store <dir>`
+//! opens the content-addressed experiment store ([`crate::store`]) —
+//! every campaign writes a manifest there and sweep/fuzz/dse points
+//! are served from its cache on re-runs — and
 //! `--log-format json|text` picks how library diagnostics are rendered.
+//! `ds3r query` and `ds3r store gc|verify` operate on a store offline.
 //! The CLI is the only layer that turns events into print lines — CI
 //! denies `print_stdout`/`print_stderr` everywhere else in `rust/src/`,
 //! hence the file-level allow below.
@@ -354,6 +358,9 @@ impl Sink for StderrRenderSink {
 /// * `--telemetry-timing` — include wall-clock events/fields (progress
 ///   rates, spans, run wall time) in the JSONL stream.
 /// * `--progress` — live progress lines on stderr.
+/// * `--store <dir>` — open (creating if needed) the experiment store:
+///   installs a manifest-writing sink and the process-global store
+///   handle that sweep/fuzz/dse drivers consult for cached points.
 /// * `--log-format json|text` — diagnostics as JSONL or plain text
 ///   (default `text`, matching the pre-telemetry `eprintln!` output).
 pub fn init_telemetry(args: &Args) -> Result<Telemetry> {
@@ -375,6 +382,18 @@ pub fn init_telemetry(args: &Args) -> Result<Telemetry> {
             sink.with_timing(args.has("telemetry-timing")),
         ));
     }
+    if args.has("store") {
+        let dir = args.str_or("store", "experiment_store");
+        let store = crate::store::ExperimentStore::open(
+            std::path::Path::new(&dir),
+        )?;
+        sinks.push(Arc::new(crate::store::StoreSink::new(store.clone())));
+        crate::store::set_global(Some(store));
+    } else {
+        // A handle left over from a previous init (tests drive several
+        // commands per process) must not leak into this campaign.
+        crate::store::set_global(None);
+    }
     sinks.push(Arc::new(StderrRenderSink {
         progress: args.has("progress"),
         json_logs: log_format == "json",
@@ -389,17 +408,20 @@ pub fn init_telemetry(args: &Args) -> Result<Telemetry> {
 }
 
 /// Emit the campaign-opening [`Event::RunStarted`] manifest: canonical
-/// config hash, seed, scheduler, and `git describe` environment stamp.
+/// config hash, workload digest, seed, scheduler, and `git describe`
+/// environment stamp.
 fn emit_run_started(
     tel: &Telemetry,
     cmd: &'static str,
     cfg: &SimConfig,
+    workload_digest: &str,
 ) {
     tel.emit(|| Event::RunStarted {
         cmd: cmd.to_string(),
         config_hash: telemetry::config_hash(&cfg.to_json().to_string()),
         seed: cfg.seed,
         scheduler: cfg.scheduler.clone(),
+        workload_digest: workload_digest.to_string(),
         git: telemetry::git_describe(),
     });
 }
@@ -419,6 +441,57 @@ fn emit_run_finished(
         wall_s: t0.elapsed_s(),
     });
     tel.flush();
+}
+
+/// The campaign workload digest: canonical config JSON, resolved app
+/// graphs, and any trace-file bytes (see
+/// [`crate::store::workload_digest`]).
+fn store_digest(cfg: &SimConfig, apps: &[AppGraph]) -> String {
+    crate::store::workload_digest(cfg, apps, &[])
+}
+
+/// Point-cache context when `--store` is active: the open store plus
+/// the campaign workload digest that scopes its point keys.
+fn store_ctx(workload_digest: &str) -> Option<crate::store::StoreCtx> {
+    crate::store::global().map(|store| crate::store::StoreCtx {
+        store,
+        workload_digest: workload_digest.to_string(),
+    })
+}
+
+/// Stash a compact numeric result summary on the pending manifest
+/// (drained by the store sink when the run-finished event lands).
+fn store_result(pairs: &[(&str, f64)]) {
+    if let Some(store) = crate::store::global() {
+        let mut r = crate::util::json::Json::obj();
+        for (k, v) in pairs {
+            r.set(k, crate::util::json::Json::Num(*v));
+        }
+        store.set_result(r);
+    }
+}
+
+/// Post-run store bookkeeping: report cache economics on stderr and
+/// emit [`Event::ManifestWritten`] once the sink has finalized the
+/// manifest — call after [`emit_run_finished`].
+fn finish_store(tel: &Telemetry, cmd: &'static str) {
+    let Some(store) = crate::store::global() else {
+        return;
+    };
+    let (hits, misses) = (store.session_hits(), store.session_misses());
+    if hits + misses > 0 {
+        eprintln!(
+            "store: {hits}/{} points served from cache",
+            hits + misses
+        );
+    }
+    if let Some(key) = store.last_manifest_key() {
+        tel.emit(|| Event::ManifestWritten {
+            cmd: cmd.to_string(),
+            key,
+        });
+        tel.flush();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -451,9 +524,15 @@ pub fn cmd_run(args: &Args) -> Result<String> {
     }
     let tel = telemetry::global();
     let t0 = SpanTimer::start();
-    emit_run_started(&tel, "run", &cfg);
+    let wd = store_digest(&cfg, &apps);
+    emit_run_started(&tel, "run", &cfg, &wd);
     let report = Simulation::build(&platform, &apps, &cfg)?.run();
+    store_result(&[
+        ("completed_jobs", report.completed_jobs as f64),
+        ("injected_jobs", report.injected_jobs as f64),
+    ]);
     emit_run_finished(&tel, "run", Counters::from_report(&report), t0);
+    finish_store(&tel, "run");
     let mut out = report.summary();
     if cfg.capture_gantt {
         let hi = report
@@ -483,11 +562,15 @@ pub fn cmd_sweep(args: &Args) -> Result<String> {
     let points = coordinator::fig3_points(&sched_refs, &rates, cfg.seed);
     let tel = telemetry::global();
     let t0 = SpanTimer::start();
-    emit_run_started(&tel, "sweep", &cfg);
-    let (results, counters) = coordinator::run_sweep_with(
-        &platform, &apps, &cfg, &points, threads, &tel,
+    let wd = store_digest(&cfg, &apps);
+    emit_run_started(&tel, "sweep", &cfg, &wd);
+    let ctx = store_ctx(&wd);
+    let (results, counters) = coordinator::run_sweep_stored(
+        &platform, &apps, &cfg, &points, threads, &tel, ctx.as_ref(),
     )?;
+    store_result(&[("points", results.len() as f64)]);
     emit_run_finished(&tel, "sweep", counters, t0);
+    finish_store(&tel, "sweep");
 
     let mut rows = Vec::new();
     for r in &results {
@@ -660,11 +743,14 @@ fn cmd_scenario_sweep(args: &Args) -> Result<String> {
     let threads = args.usize_or("threads", default_threads())?;
     let tel = telemetry::global();
     let t0 = SpanTimer::start();
-    emit_run_started(&tel, "scenario-sweep", &cfg);
+    let wd = store_digest(&cfg, &apps);
+    emit_run_started(&tel, "scenario-sweep", &cfg, &wd);
     let (results, counters) = coordinator::run_scenario_sweep_with(
         &platform, &apps, &cfg, &scenarios, threads, &tel,
     )?;
+    store_result(&[("scenarios", results.len() as f64)]);
     emit_run_finished(&tel, "scenario-sweep", counters, t0);
+    finish_store(&tel, "scenario-sweep");
 
     let mut out = String::new();
     let mut rows = Vec::new();
@@ -794,12 +880,14 @@ fn emit_dse_started(
     tel: &Telemetry,
     cmd: &'static str,
     cfg: &crate::dse::DseConfig,
+    workload_digest: &str,
 ) {
     tel.emit(|| Event::RunStarted {
         cmd: cmd.to_string(),
         config_hash: telemetry::config_hash(&cfg.to_json().to_string()),
         seed: cfg.search_seed,
         scheduler: cfg.sim.scheduler.clone(),
+        workload_digest: workload_digest.to_string(),
         git: telemetry::git_describe(),
     });
 }
@@ -931,8 +1019,10 @@ fn cmd_dse_run(args: &Args) -> Result<String> {
     engine.set_workload_meta(dse_workload_meta(&names, symbols, pulses));
     let tel = telemetry::global();
     let t0 = SpanTimer::start();
-    emit_dse_started(&tel, "dse-run", engine.config());
+    let wd = store_digest(&engine.config().sim, &apps);
+    emit_dse_started(&tel, "dse-run", engine.config(), &wd);
     engine.set_telemetry(tel.clone());
+    engine.set_store(store_ctx(&wd));
     let mut out = format!(
         "DSE: {} search, budget {} evaluations ({} x {} designs)\n",
         engine.config().algorithm,
@@ -945,7 +1035,17 @@ fn cmd_dse_run(args: &Args) -> Result<String> {
         Some(std::path::Path::new(&checkpoint)),
         |s| out.push_str(&dse_progress_line(s)),
     )?;
+    let front = engine
+        .history()
+        .last()
+        .map(|s| s.front_size as f64)
+        .unwrap_or(0.0);
+    store_result(&[
+        ("generations", engine.history().len() as f64),
+        ("front_size", front),
+    ]);
     emit_run_finished(&tel, "dse-run", dse_counters(engine.history()), t0);
+    finish_store(&tel, "dse-run");
     out.push('\n');
     out.push_str(&dse_front_table(&engine));
     out.push_str(&format!(
@@ -1039,8 +1139,10 @@ fn cmd_dse_resume(args: &Args) -> Result<String> {
     }
     let tel = telemetry::global();
     let t0 = SpanTimer::start();
-    emit_dse_started(&tel, "dse-resume", engine.config());
+    let wd = store_digest(&engine.config().sim, &apps);
+    emit_dse_started(&tel, "dse-resume", engine.config(), &wd);
     engine.set_telemetry(tel.clone());
+    engine.set_store(store_ctx(&wd));
     let resumed_at = engine.completed_generations();
     let mut out = format!(
         "resuming from {checkpoint} at generation {resumed_at} \
@@ -1052,12 +1154,22 @@ fn cmd_dse_resume(args: &Args) -> Result<String> {
         Some(std::path::Path::new(&checkpoint)),
         |s| out.push_str(&dse_progress_line(s)),
     )?;
+    let front = engine
+        .history()
+        .last()
+        .map(|s| s.front_size as f64)
+        .unwrap_or(0.0);
+    store_result(&[
+        ("generations", engine.history().len() as f64),
+        ("front_size", front),
+    ]);
     emit_run_finished(
         &tel,
         "dse-resume",
         dse_counters(&engine.history()[resumed_at..]),
         t0,
     );
+    finish_store(&tel, "dse-resume");
     out.push('\n');
     out.push_str(&dse_front_table(&engine));
     Ok(out)
@@ -1279,6 +1391,7 @@ pub fn cmd_learn(args: &Args) -> Result<String> {
                 // Full DAgger pipeline: collect -> train, lc.rounds x.
                 let tel = telemetry::global();
                 let t0 = SpanTimer::start();
+                let wd = store_digest(&lc.sim, &apps);
                 tel.emit(|| Event::RunStarted {
                     cmd: "learn-train".to_string(),
                     config_hash: telemetry::config_hash(
@@ -1286,15 +1399,21 @@ pub fn cmd_learn(args: &Args) -> Result<String> {
                     ),
                     seed: lc.train_seed,
                     scheduler: lc.oracle.clone(),
+                    workload_digest: wd,
                     git: telemetry::git_describe(),
                 });
                 let (model, summary) = crate::learn::train_policy_with(
                     &platform, &apps, &lc, &tel,
                 )?;
+                store_result(&[
+                    ("rounds", summary.rounds as f64),
+                    ("samples", summary.samples as f64),
+                ]);
                 let mut counters = Counters::new();
                 counters.add("rounds", summary.rounds as u64);
                 counters.add("samples", summary.samples as u64);
                 emit_run_finished(&tel, "learn-train", counters, t0);
+                finish_store(&tel, "learn-train");
                 let agree = summary
                     .agreement
                     .map(|a| format!(", last-round agreement {:.1}%", a * 100.0))
@@ -1610,10 +1729,19 @@ fn cmd_fuzz_run(args: &Args) -> Result<String> {
     cfg0.seed = fuzz.seed;
     let tel = telemetry::global();
     let t0 = SpanTimer::start();
-    emit_run_started(&tel, "fuzz", &cfg0);
+    let wd = store_digest(&cfg0, &apps);
+    emit_run_started(&tel, "fuzz", &cfg0, &wd);
+    opts.store = store_ctx(&wd);
     let (report, counters) =
         crate::fuzz::run_tournament(&platform, &apps, &fuzz, &opts)?;
+    let violations: usize =
+        report.cells.iter().map(|c| c.violations.len()).sum();
+    store_result(&[
+        ("cells", report.cells.len() as f64),
+        ("violations", violations as f64),
+    ]);
     emit_run_finished(&tel, "fuzz", counters, t0);
+    finish_store(&tel, "fuzz");
     if args.has("out") {
         let out = args.str_or("out", "tournament.json");
         report.save(std::path::Path::new(&out))?;
@@ -1749,6 +1877,99 @@ pub fn cmd_reproduce(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// query + store: offline drivers over the experiment store
+// ---------------------------------------------------------------------------
+
+/// `ds3r query` — filter stored run manifests by identity and render
+/// them (table/JSONL) or aggregate one counter across the selection.
+pub fn cmd_query(args: &Args) -> Result<String> {
+    let store = crate::store::global().ok_or_else(|| {
+        Error::Config("query requires --store <dir>".into())
+    })?;
+    let manifests = store.manifests();
+    let mut filter = crate::store::QueryFilter::default();
+    if args.has("sched") {
+        filter.scheduler = Some(args.str_or("sched", ""));
+    }
+    if args.has("seed") {
+        filter.seed = Some(args.usize_or("seed", 0)? as u64);
+    }
+    if args.has("config-hash") {
+        filter.config_hash = Some(args.str_or("config-hash", ""));
+    }
+    if args.has("kind") {
+        filter.kind = Some(args.str_or("kind", ""));
+    }
+    let sel = filter.select(&manifests);
+    if args.has("agg") || args.has("field") {
+        let agg = crate::store::Agg::parse(&args.str_or("agg", "mean"))?;
+        let field = args.str_or("field", "completed_jobs");
+        let a = crate::store::query::aggregate(&sel, &field, agg);
+        return Ok(format!("{}\n", a.to_json().to_string()));
+    }
+    match args.str_or("format", "table").as_str() {
+        "jsonl" => Ok(crate::store::query::render_jsonl(&sel)),
+        "table" => Ok(crate::store::query::render_table(&sel)),
+        other => Err(Error::Config(format!(
+            "--format: want table|jsonl, got '{other}'"
+        ))),
+    }
+}
+
+/// `ds3r store <gc|verify>` — maintain an on-disk experiment store:
+/// `gc` drops dangling index rows and unreferenced points (re-indexing
+/// orphaned manifests), `verify` checks every key against the content
+/// it addresses and fails loudly on a mismatch.
+pub fn cmd_store(args: &Args) -> Result<String> {
+    let store = crate::store::global().ok_or_else(|| {
+        Error::Config("store gc|verify requires --store <dir>".into())
+    })?;
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    match sub {
+        "gc" => {
+            let s = store.gc()?;
+            if args.has("json") {
+                return Ok(s.to_json().to_string_pretty());
+            }
+            Ok(format!(
+                "gc: kept {} manifests, {} points; dropped {} \
+                 unreferenced points, {} stale index rows; re-indexed \
+                 {} manifests\n",
+                s.kept_manifests,
+                s.kept_points,
+                s.dropped_points,
+                s.dropped_rows,
+                s.reindexed,
+            ))
+        }
+        "verify" => {
+            let s = store.verify()?;
+            if s.ok() {
+                if args.has("json") {
+                    return Ok(s.to_json().to_string_pretty());
+                }
+                return Ok(format!(
+                    "verify: {} manifests, {} points checked — store \
+                     is consistent\n",
+                    s.manifests_checked, s.points_checked,
+                ));
+            }
+            let mut detail = String::new();
+            for m in &s.mismatches {
+                detail.push_str(&format!("  {m}\n"));
+            }
+            Err(Error::Config(format!(
+                "store verify failed ({} mismatches):\n{detail}",
+                s.mismatches.len()
+            )))
+        }
+        other => Err(Error::Config(format!(
+            "unknown store subcommand '{other}' (gc, verify)"
+        ))),
+    }
+}
+
 pub const USAGE: &str = "\
 ds3r — DSSoC simulation framework (DS3 reproduction)
 
@@ -1790,6 +2011,10 @@ USAGE:
   ds3r reproduce [table1|table2|fig2|fig3|all] [--quick] [--jobs N]
                  [--rates lo:hi:step] [--csv fig3.csv]
   ds3r validate  [--jobs 200]
+  ds3r query     --store dir [--sched etf] [--seed 42] [--kind sweep]
+                 [--config-hash h] [--format table|jsonl]
+                 [--agg count|mean|p95|worst] [--field completed_jobs]
+  ds3r store     gc | verify  --store dir [--json]
   ds3r list
 
 OBSERVABILITY (any subcommand):
@@ -1805,6 +2030,15 @@ OBSERVABILITY (any subcommand):
   --progress             live progress lines on stderr (completed/total
                          + sims/s for sweeps, per-generation DSE stats,
                          per-round learn agreement)
+  --store <dir>          content-addressed experiment store: every
+                         campaign writes a manifest (config hash +
+                         workload digest + seed + git describe +
+                         counters + result summary); sweep, fuzz and
+                         dse consult the per-point cache and skip
+                         already-simulated points, merging cached
+                         results back in input order so reports and
+                         the default telemetry stream stay
+                         byte-identical with a cold run
   --log-format json|text render library diagnostics as JSONL or text
                          (default text)
 ";
@@ -1887,19 +2121,122 @@ mod tests {
         cmd_sweep(&a).unwrap();
         telemetry::set_global(Telemetry::disabled());
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.contains("\"event\": \"run_started\""), "{text}");
-        assert!(text.contains("\"event\": \"run_finished\""), "{text}");
-        assert!(text.contains("\"config_hash\""), "{text}");
+        // Assert on parsed structure, not serialized spelling.
+        let mut kinds = Vec::new();
+        for line in text.lines() {
+            let j = crate::util::json::Json::parse(line)
+                .unwrap_or_else(|e| {
+                    panic!("malformed JSONL line '{line}': {e}")
+                });
+            if let Some(k) =
+                j.get("event").and_then(crate::util::json::Json::as_str)
+            {
+                kinds.push(k.to_string());
+            }
+        }
+        assert!(kinds.iter().any(|k| k == "run_started"), "{text}");
+        assert!(kinds.iter().any(|k| k == "run_finished"), "{text}");
+        assert!(text.contains("config_hash"), "{text}");
+        assert!(text.contains("workload_digest"), "{text}");
         // Default stream is deterministic: wall-clock progress events
         // and wall_s are excluded.
         assert!(!text.contains("sweep_progress"), "{text}");
         assert!(!text.contains("wall_s"), "{text}");
-        for line in text.lines() {
-            crate::util::json::Json::parse(line).unwrap_or_else(|e| {
-                panic!("malformed JSONL line '{line}': {e}")
-            });
-        }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn warm_store_sweep_is_byte_identical_and_fully_cached() {
+        let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("ds3r_cli_store_sweep_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = args(&format!(
+            "sweep --scheds etf,met --rates 1,2 --jobs 25 --warmup 3 \
+             --threads 2 --store {}",
+            dir.display()
+        ));
+        init_telemetry(&a).unwrap();
+        let cold = cmd_sweep(&a).unwrap();
+        let store = crate::store::global().unwrap();
+        assert_eq!(store.session_hits(), 0);
+        assert_eq!(store.session_misses(), 4);
+        assert!(store.last_manifest_key().is_some());
+        // Re-init opens a fresh handle over the same directory: every
+        // point must now come from the cache, and the rendered report
+        // must not change by a byte.
+        init_telemetry(&a).unwrap();
+        let warm = cmd_sweep(&a).unwrap();
+        let store = crate::store::global().unwrap();
+        assert_eq!(store.session_misses(), 0);
+        assert_eq!(store.session_hits(), 4);
+        assert_eq!(cold, warm);
+        telemetry::set_global(Telemetry::disabled());
+        crate::store::set_global(None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn query_filters_aggregate_and_store_maintenance() {
+        let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join("ds3r_cli_store_query_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = args(&format!(
+            "sweep --scheds etf --rates 1 --jobs 20 --warmup 2 \
+             --threads 1 --store {}",
+            dir.display()
+        ));
+        init_telemetry(&a).unwrap();
+        cmd_sweep(&a).unwrap();
+        let q = |cmd: &str| {
+            let qa = args(cmd);
+            init_telemetry(&qa).unwrap();
+            qa
+        };
+        let jsonl = cmd_query(&q(&format!(
+            "query --store {} --format jsonl",
+            dir.display()
+        )))
+        .unwrap();
+        assert_eq!(jsonl.lines().count(), 1);
+        let j = crate::util::json::Json::parse(
+            jsonl.lines().next().unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            j.get("cmd").and_then(crate::util::json::Json::as_str),
+            Some("sweep")
+        );
+        let agg = cmd_query(&q(&format!(
+            "query --store {} --agg count --field completed_jobs",
+            dir.display()
+        )))
+        .unwrap();
+        let j = crate::util::json::Json::parse(agg.trim()).unwrap();
+        assert_eq!(
+            j.get("count")
+                .and_then(crate::util::json::Json::as_usize),
+            Some(1)
+        );
+        // A filter matching nothing selects nothing.
+        let none = cmd_query(&q(&format!(
+            "query --store {} --sched nosuch --format jsonl",
+            dir.display()
+        )))
+        .unwrap();
+        assert_eq!(none, "");
+        // Maintenance drivers: a freshly written store is consistent
+        // and gc keeps everything.
+        let verify =
+            cmd_store(&q(&format!("store verify --store {}", dir.display())))
+                .unwrap();
+        assert!(verify.contains("consistent"), "{verify}");
+        let gc =
+            cmd_store(&q(&format!("store gc --store {}", dir.display())))
+                .unwrap();
+        assert!(gc.contains("dropped 0 unreferenced points"), "{gc}");
+        telemetry::set_global(Telemetry::disabled());
+        crate::store::set_global(None);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -23,6 +23,13 @@
 //! [`Counters`](crate::telemetry::Counters) through
 //! [`parallel_map_pooled_counted`], whose input-order fold makes the
 //! aggregate independent of thread count.
+//!
+//! Experiment store: [`run_sweep_stored`] adds the cache-consult hook
+//! — with a [`StoreCtx`](crate::store::StoreCtx) it loads
+//! already-computed points from the on-disk point cache, simulates
+//! only the missing subset, and merges everything back in input
+//! order, preserving both byte-identity contracts (report bytes and
+//! aggregated counters) for warm, partial and cold runs alike.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -33,7 +40,9 @@ use crate::platform::Platform;
 use crate::scenario::Scenario;
 use crate::sim::{SimSetup, SimWorker, Simulation};
 use crate::stats::{PhaseStats, SimReport};
+use crate::store::{PointEntry, StoreCtx};
 use crate::telemetry::{Counters, Event, SpanTimer, Telemetry};
+use crate::util::json::{u64_from_json, u64_to_json, Json};
 use crate::util::plot::Series;
 use crate::{Error, Result};
 
@@ -202,6 +211,37 @@ pub struct SweepPoint {
     pub seed: u64,
 }
 
+impl SweepPoint {
+    /// The fully-resolved per-point config: `base` with this point's
+    /// scheduler/rate/seed applied.  Its canonical JSON is the point's
+    /// store identity.
+    pub fn resolve(&self, base: &SimConfig) -> SimConfig {
+        let mut cfg = base.clone();
+        cfg.scheduler = self.scheduler.clone();
+        cfg.injection_rate_per_ms = self.rate_per_ms;
+        cfg.seed = self.seed;
+        cfg
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scheduler", Json::Str(self.scheduler.clone()))
+            .set("rate_per_ms", Json::Num(self.rate_per_ms))
+            .set("seed", u64_to_json(self.seed));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<SweepPoint> {
+        Ok(SweepPoint {
+            scheduler: j.req_str("scheduler")?.to_string(),
+            rate_per_ms: j.req_f64("rate_per_ms")?,
+            seed: j.get("seed").and_then(u64_from_json).ok_or_else(
+                || Error::Json("sweep point: bad seed".into()),
+            )?,
+        })
+    }
+}
+
 /// Condensed result of one sweep point.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
@@ -232,6 +272,62 @@ impl SweepResult {
             sched_overhead_us: r.sched_overhead_us(),
             peak_temp_c: r.peak_temp_c,
         }
+    }
+
+    /// Serialize for the experiment-store point cache.  `f64` fields
+    /// round-trip bit-exactly (shortest-form printing, correctly
+    /// rounded parsing), which is what lets a warm-store rerun
+    /// reproduce the cold run's report byte-for-byte.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("point", self.point.to_json())
+            .set("avg_latency_us", Json::Num(self.avg_latency_us))
+            .set("p95_latency_us", Json::Num(self.p95_latency_us))
+            .set(
+                "throughput_jobs_per_ms",
+                Json::Num(self.throughput_jobs_per_ms),
+            )
+            .set(
+                "energy_per_job_mj",
+                Json::Num(self.energy_per_job_mj),
+            )
+            .set("avg_power_w", Json::Num(self.avg_power_w))
+            .set(
+                "completed_jobs",
+                Json::Num(self.completed_jobs as f64),
+            )
+            .set("injected_jobs", Json::Num(self.injected_jobs as f64))
+            .set(
+                "sched_overhead_us",
+                Json::Num(self.sched_overhead_us),
+            )
+            .set("peak_temp_c", Json::Num(self.peak_temp_c));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<SweepResult> {
+        let usize_at = |key: &str| -> Result<usize> {
+            j.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                Error::Json(format!(
+                    "sweep result: expected integer at key '{key}'"
+                ))
+            })
+        };
+        Ok(SweepResult {
+            point: SweepPoint::from_json(j.get("point").ok_or_else(
+                || Error::Json("sweep result: missing point".into()),
+            )?)?,
+            avg_latency_us: j.req_f64("avg_latency_us")?,
+            p95_latency_us: j.req_f64("p95_latency_us")?,
+            throughput_jobs_per_ms: j
+                .req_f64("throughput_jobs_per_ms")?,
+            energy_per_job_mj: j.req_f64("energy_per_job_mj")?,
+            avg_power_w: j.req_f64("avg_power_w")?,
+            completed_jobs: usize_at("completed_jobs")?,
+            injected_jobs: usize_at("injected_jobs")?,
+            sched_overhead_us: j.req_f64("sched_overhead_us")?,
+            peak_temp_c: j.req_f64("peak_temp_c")?,
+        })
     }
 }
 
@@ -271,32 +367,126 @@ pub fn run_sweep_with(
     threads: usize,
     tel: &Telemetry,
 ) -> Result<(Vec<SweepResult>, Counters)> {
-    // One immutable setup for the whole grid; one reusable worker per
-    // pool thread (reset per point — no per-point rebuild).
-    let setup = SimSetup::new(platform, apps, base)?;
-    let setup = &setup;
-    let progress = GridProgress::start(points.len());
-    let (results, counters) = parallel_map_pooled_counted(
-        points,
-        threads,
-        || None::<SimWorker>,
-        |slot, counters, _, p| {
-            let mut cfg = base.clone();
-            cfg.scheduler = p.scheduler.clone();
-            cfg.injection_rate_per_ms = p.rate_per_ms;
-            cfg.seed = p.seed;
-            let worker = SimWorker::obtain(slot, setup, &cfg)?;
-            let report = worker.run(setup);
-            counters.merge(&Counters::from_report(report));
-            progress.emit_done(tel);
-            Ok(SweepResult::from_report(p.clone(), report))
-        },
-    );
-    let results = collect_results(
-        results,
-        |i| format!("{}@{}", points[i].scheduler, points[i].rate_per_ms),
-        "sweep failures",
-    )?;
+    run_sweep_stored(platform, apps, base, points, threads, tel, None)
+}
+
+/// [`run_sweep_with`] plus the experiment-store cache-consult hook.
+///
+/// With a [`StoreCtx`], every point's cache key is resolved up front
+/// (in input order, so the run manifest lists identical keys for
+/// cold, warm and partial reruns), cached points are loaded instead
+/// of simulated, and only the *missing* subset goes through the
+/// pooled grid — a fully warm rerun performs **zero** simulations and
+/// never even builds the [`SimSetup`].  Cached and fresh results are
+/// merged back in input order, and the final counter fold walks the
+/// full grid in input order mixing stored and fresh per-point deltas,
+/// so the report and the aggregated counters are byte-identical to a
+/// cold run's for any thread count.
+pub fn run_sweep_stored(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    points: &[SweepPoint],
+    threads: usize,
+    tel: &Telemetry,
+    store: Option<&StoreCtx>,
+) -> Result<(Vec<SweepResult>, Counters)> {
+    // Per-point identity, resolved in canonical input order.
+    let keys: Vec<(String, String)> = match store {
+        Some(ctx) => points
+            .iter()
+            .map(|p| {
+                let ch = crate::telemetry::config_hash(
+                    &p.resolve(base).to_json().to_string(),
+                );
+                let key =
+                    crate::store::point_key(&ch, &ctx.workload_digest);
+                (ch, key)
+            })
+            .collect(),
+        None => Vec::new(),
+    };
+    if let Some(ctx) = store {
+        ctx.store
+            .record_points(&keys.iter().map(|(_, k)| k.clone()).collect::<Vec<_>>());
+    }
+
+    // Partition cached vs fresh (input order).
+    let mut slots: Vec<Option<(SweepResult, Counters)>> =
+        (0..points.len()).map(|_| None).collect();
+    let mut fresh: Vec<(usize, SweepPoint)> = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        let cached = store
+            .and_then(|ctx| ctx.store.lookup(&keys[i].1, "sweep"))
+            .and_then(|e| {
+                SweepResult::from_json(&e.result)
+                    .ok()
+                    .map(|r| (r, e.counters))
+            });
+        match cached {
+            Some(rc) => slots[i] = Some(rc),
+            None => fresh.push((i, p.clone())),
+        }
+    }
+
+    if !fresh.is_empty() {
+        // One immutable setup for the whole grid; one reusable worker
+        // per pool thread (reset per point — no per-point rebuild).
+        let setup = SimSetup::new(platform, apps, base)?;
+        let setup = &setup;
+        let progress = GridProgress::start(fresh.len());
+        let results = parallel_map_pooled(
+            &fresh,
+            threads,
+            || None::<SimWorker>,
+            |slot, _, (_, p)| {
+                let cfg = p.resolve(base);
+                let worker = SimWorker::obtain(slot, setup, &cfg)?;
+                let report = worker.run(setup);
+                let counters = Counters::from_report(report);
+                progress.emit_done(tel);
+                Ok((
+                    SweepResult::from_report(p.clone(), report),
+                    counters,
+                ))
+            },
+        );
+        let results = collect_results(
+            results,
+            |k| {
+                format!(
+                    "{}@{}",
+                    fresh[k].1.scheduler, fresh[k].1.rate_per_ms
+                )
+            },
+            "sweep failures",
+        )?;
+        // Persist and scatter fresh points — from the calling thread,
+        // in input (filtered) order, never concurrently.
+        for ((i, _), rc) in fresh.iter().zip(results) {
+            if let Some(ctx) = store {
+                ctx.store.put_point(&PointEntry {
+                    kind: "sweep".into(),
+                    key: keys[*i].1.clone(),
+                    config_hash: keys[*i].0.clone(),
+                    workload_digest: ctx.workload_digest.clone(),
+                    result: rc.0.to_json(),
+                    counters: rc.1.clone(),
+                })?;
+            }
+            slots[*i] = Some(rc);
+        }
+    }
+
+    // Final merge: walk the full grid in input order, mixing cached
+    // and fresh per-point deltas — byte-identical to a cold run.
+    let mut results = Vec::with_capacity(points.len());
+    let mut counters = Counters::new();
+    for s in slots {
+        let (r, c) = s.expect("every sweep point resolved");
+        counters.merge(&c);
+        results.push(r);
+    }
     Ok((results, counters))
 }
 
@@ -729,6 +919,39 @@ mod tests {
                 "{ctx}"
             );
         }
+    }
+
+    #[test]
+    fn sweep_result_json_round_trip_is_bit_exact() {
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let pts = fig3_points(&["etf"], &[2.0], 3);
+        let res = run_sweep(&p, &apps, &small_base(), &pts, 1).unwrap();
+        let r = &res[0];
+        let back = SweepResult::from_json(
+            &Json::parse(&r.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            r.avg_latency_us.to_bits(),
+            back.avg_latency_us.to_bits()
+        );
+        assert_eq!(
+            r.p95_latency_us.to_bits(),
+            back.p95_latency_us.to_bits()
+        );
+        assert_eq!(
+            r.energy_per_job_mj.to_bits(),
+            back.energy_per_job_mj.to_bits()
+        );
+        assert_eq!(r.completed_jobs, back.completed_jobs);
+        assert_eq!(r.point.scheduler, back.point.scheduler);
+        assert_eq!(r.point.seed, back.point.seed);
+        // And the re-serialization is byte-identical.
+        assert_eq!(
+            r.to_json().to_string(),
+            back.to_json().to_string()
+        );
     }
 
     #[test]

@@ -14,7 +14,15 @@
 //! (genome, config), which together with
 //! [`crate::coordinator::parallel_map_pooled`]'s input-order result
 //! placement makes a whole DSE generation bit-identical across thread
-//! counts.
+//! counts.  Larger designs (more PE instances) enter the pool first
+//! via [`crate::coordinator::size_ordered_indices`] so a big decode
+//! never lands last on an otherwise drained pool; results are
+//! scattered back to canonical batch order.
+//!
+//! With an attached experiment store ([`Evaluator::set_store`]) the
+//! batch additionally consults the on-disk point cache (kind
+//! `dse-eval`) before simulating and records fresh evaluations back,
+//! making interrupted searches resumable across processes.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -22,9 +30,11 @@ use super::genome::{GenomeSpace, PlatformGenome};
 use super::Objective;
 use crate::app::AppGraph;
 use crate::config::SimConfig;
-use crate::coordinator::parallel_map_pooled;
+use crate::coordinator::{parallel_map_pooled, size_ordered_indices};
 use crate::scenario::Scenario;
 use crate::sim::{SimSetup, SimWorker};
+use crate::store::{point_key, PointEntry, StoreCtx};
+use crate::telemetry::{config_hash, Counters};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -110,10 +120,16 @@ pub struct Evaluator {
     /// gene is pinned to `None` and the base config's cap stands.
     genome_owns_power_cap: bool,
     cache: BTreeMap<String, EvalMetrics>,
+    /// Optional experiment store consulted before simulating.
+    store: Option<StoreCtx>,
     /// Genome evaluations requested (cache hits included).
     pub evals_requested: usize,
     /// Evaluations served from the cache.
     pub cache_hits: usize,
+    /// Evaluations served from the experiment store (counted neither
+    /// as cache hits nor as simulations; not checkpointed — the store
+    /// itself is the persistent record).
+    pub store_hits: usize,
     /// Individual simulations executed.
     pub sims_run: usize,
 }
@@ -138,10 +154,38 @@ impl Evaluator {
             threads: threads.max(1),
             genome_owns_power_cap,
             cache: BTreeMap::new(),
+            store: None,
             evals_requested: 0,
             cache_hits: 0,
+            store_hits: 0,
             sims_run: 0,
         })
+    }
+
+    /// Attach (or detach) an experiment store: batch evaluation
+    /// consults it before simulating and records fresh evaluations
+    /// back under kind `dse-eval`.
+    pub fn set_store(&mut self, store: Option<StoreCtx>) {
+        self.store = store;
+    }
+
+    /// Content hash identifying one genome evaluation under this
+    /// evaluator's grid — the `config_hash` component of the store
+    /// point key, covering everything the metrics depend on: base
+    /// config, seed/scenario grid, cap ownership and the genome's
+    /// canonical encoding.
+    fn eval_config_hash(&self, g: &PlatformGenome) -> String {
+        let scenarios = Json::Arr(
+            self.scenarios.iter().map(|s| s.to_json()).collect(),
+        );
+        config_hash(&format!(
+            "dse-eval:{}:{:?}:{}:{}:{}",
+            config_hash(&self.base_cfg.to_json().to_string()),
+            self.seeds,
+            scenarios.to_string(),
+            self.genome_owns_power_cap,
+            g.key(),
+        ))
     }
 
     /// Simulations one (uncached) genome evaluation costs.
@@ -173,21 +217,72 @@ impl Evaluator {
         }
         self.evals_requested += genomes.len();
         self.cache_hits += genomes.len() - uncached.len();
+
+        // Consult the experiment store for designs the in-memory
+        // cache misses; a hit enters the cache without costing a
+        // simulation.  Lookups run serially in canonical batch order,
+        // so the partition is identical across thread counts.
+        if let Some(ctx) = self.store.clone() {
+            let mut fresh_only = Vec::with_capacity(uncached.len());
+            for (key, g) in uncached {
+                let skey = point_key(
+                    &self.eval_config_hash(&g),
+                    &ctx.workload_digest,
+                );
+                let hit = ctx
+                    .store
+                    .lookup(&skey, "dse-eval")
+                    .and_then(|e| EvalMetrics::from_json(&e.result).ok());
+                match hit {
+                    Some(m) => {
+                        self.cache.insert(key, m);
+                        self.store_hits += 1;
+                    }
+                    None => fresh_only.push((key, g)),
+                }
+            }
+            uncached = fresh_only;
+        }
         self.sims_run += uncached.len() * self.runs_per_eval();
 
+        // Largest designs first (by total PE instances) so a heavy
+        // decode never lands last on an otherwise drained pool; the
+        // scatter below restores canonical batch order, keeping the
+        // thread-count-invariance contract intact.
+        let order = size_ordered_indices(&uncached, |(_, g)| {
+            g.pe_counts.iter().map(|&c| c as u64).sum::<u64>()
+        });
+        let permuted: Vec<&(String, PlatformGenome)> =
+            order.iter().map(|&i| &uncached[i]).collect();
         // One reusable SimWorker per pool thread: its buffers carry
         // across the whole seeds×scenarios grid of each genome AND
         // across the genomes the thread evaluates (the worker re-binds
         // to each genome's decoded-platform setup on reset).
-        let fresh = parallel_map_pooled(
-            &uncached,
+        let pooled = parallel_map_pooled(
+            &permuted,
             self.threads,
             || None::<SimWorker>,
             |slot, _, entry| self.eval_one(space, apps, &entry.1, slot),
         );
+        let mut fresh: Vec<Option<Result<EvalMetrics>>> =
+            uncached.iter().map(|_| None).collect();
+        for (&i, r) in order.iter().zip(pooled) {
+            fresh[i] = Some(r);
+        }
         for ((key, g), m) in uncached.iter().zip(fresh) {
-            match m {
+            match m.expect("scatter covers every index") {
                 Ok(m) => {
+                    if let Some(ctx) = &self.store {
+                        let ch = self.eval_config_hash(g);
+                        ctx.store.put_point(&PointEntry {
+                            kind: "dse-eval".into(),
+                            key: point_key(&ch, &ctx.workload_digest),
+                            config_hash: ch,
+                            workload_digest: ctx.workload_digest.clone(),
+                            result: m.to_json(),
+                            counters: Counters::new(),
+                        })?;
+                    }
                     self.cache.insert(key.clone(), m);
                 }
                 Err(e) => {
@@ -489,6 +584,45 @@ mod tests {
         let res2 = ev2.evaluate_batch(&space, &apps, &genomes).unwrap();
         assert_eq!(ev2.sims_run, 0);
         assert_eq!(res, res2);
+    }
+
+    #[test]
+    fn store_round_trip_skips_simulation() {
+        let dir =
+            std::env::temp_dir().join("ds3r_dse_eval_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = crate::store::ExperimentStore::open(&dir).unwrap();
+        let ctx = StoreCtx {
+            store,
+            workload_digest: "wd-test".into(),
+        };
+        let space = small_space();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let mut rng = crate::rng::Rng::new(5);
+        let genomes: Vec<_> =
+            (0..3).map(|_| space.random(&mut rng)).collect();
+        let unique: BTreeSet<String> =
+            genomes.iter().map(|g| g.key()).collect();
+
+        let mut cold =
+            Evaluator::new(small_cfg(), vec![1], vec![], 2, true)
+                .unwrap();
+        cold.set_store(Some(ctx.clone()));
+        let a = cold.evaluate_batch(&space, &apps, &genomes).unwrap();
+        assert_eq!(cold.store_hits, 0);
+        assert!(cold.sims_run > 0);
+
+        // A brand-new evaluator (empty in-memory cache) over the same
+        // store replays every metric without simulating a thing.
+        let mut warm =
+            Evaluator::new(small_cfg(), vec![1], vec![], 2, true)
+                .unwrap();
+        warm.set_store(Some(ctx));
+        let b = warm.evaluate_batch(&space, &apps, &genomes).unwrap();
+        assert_eq!(warm.sims_run, 0, "warm store must skip all sims");
+        assert_eq!(warm.store_hits, unique.len());
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -112,6 +112,20 @@ impl DseEngine {
         self.telemetry = tel;
     }
 
+    /// Attach an experiment store: the evaluator consults its
+    /// `dse-eval` point cache before simulating and records fresh
+    /// evaluations back, so an interrupted search resumes across
+    /// processes even without a checkpoint (see
+    /// [`Evaluator::set_store`]).
+    pub fn set_store(&mut self, store: Option<crate::store::StoreCtx>) {
+        self.evaluator.set_store(store);
+    }
+
+    /// Evaluations served from the attached experiment store.
+    pub fn store_hits(&self) -> usize {
+        self.evaluator.store_hits
+    }
+
     /// Attach an opaque workload description persisted with every
     /// checkpoint (see the `workload` field).
     pub fn set_workload_meta(&mut self, meta: Json) {

@@ -30,12 +30,13 @@ use std::path::{Path, PathBuf};
 
 use crate::app::AppGraph;
 use crate::config::SimConfig;
-use crate::coordinator::{parallel_map_pooled_counted, size_ordered_indices};
+use crate::coordinator::{parallel_map_pooled, size_ordered_indices};
 use crate::platform::Platform;
 use crate::scenario::Scenario;
 use crate::sim::{SimSetup, SimWorker};
 use crate::stats::{CellScore, SchedStanding, TournamentReport};
-use crate::telemetry::{emit_global, Counters, Event};
+use crate::store::{point_key, PointEntry, StoreCtx};
+use crate::telemetry::{config_hash, emit_global, Counters, Event};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -62,6 +63,11 @@ pub struct TournamentOpts {
     /// (e.g. `"rate="` or `"pe"`).  Exercises the shrink + repro
     /// pipeline without needing a real simulator bug.
     pub inject_label: Option<String>,
+    /// Experiment store: violation-free cells are served from the
+    /// on-disk point cache (kind `fuzz`) instead of re-simulating, and
+    /// fresh clean cells are recorded back.  Violated cells are never
+    /// cached — a rerun re-examines them from scratch.
+    pub store: Option<StoreCtx>,
 }
 
 impl Default for TournamentOpts {
@@ -74,6 +80,7 @@ impl Default for TournamentOpts {
             threads: crate::util::default_threads(),
             repro_dir: None,
             inject_label: None,
+            store: None,
         }
     }
 }
@@ -173,26 +180,71 @@ pub fn run_tournament(
     let scenarios = gen::generate_all(fuzz, platform, apps.len())?;
     let base = SimConfig::default();
     let setup = SimSetup::new(platform, apps, &base)?;
+    let rate = base_rate(fuzz);
 
     // Canonical cell order: scheduler-major, case-minor.
     let cells: Vec<(usize, usize)> = (0..opts.schedulers.len())
         .flat_map(|s| (0..scenarios.len()).map(move |c| (s, c)))
         .collect();
+
+    // Experiment store: resolve every cell's content-addressed key in
+    // canonical order (the key covers the exact cell config plus the
+    // verdict-shaping knobs the config omits: deadline and the
+    // injection hook), record them on the manifest, and serve
+    // previously-computed violation-free cells from the point cache.
+    let mut slots: Vec<Option<(CellScore, Counters)>> = Vec::new();
+    slots.resize_with(cells.len(), || None);
+    let mut keys: Vec<(String, String)> = Vec::new();
+    if let Some(ctx) = &opts.store {
+        for &(s, c) in &cells {
+            let cfg = case_config(
+                &opts.schedulers[s],
+                &scenarios[c],
+                case_seed(fuzz, c),
+                fuzz.jobs,
+                rate,
+            );
+            let ch = config_hash(&format!(
+                "fuzz:{}:{}:{:?}",
+                cfg.to_json().to_string(),
+                fuzz.deadline_us,
+                opts.inject_label,
+            ));
+            let key = point_key(&ch, &ctx.workload_digest);
+            keys.push((ch, key));
+        }
+        let all: Vec<String> =
+            keys.iter().map(|(_, k)| k.clone()).collect();
+        ctx.store.record_points(&all);
+        for (i, (_, key)) in keys.iter().enumerate() {
+            if let Some(e) = ctx.store.lookup(key, "fuzz") {
+                if let Ok(score) = CellScore::from_json(&e.result) {
+                    slots[i] = Some((score, e.counters));
+                }
+            }
+        }
+    }
+    let fresh: Vec<(usize, (usize, usize))> = cells
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| slots[i].is_none())
+        .map(|(i, &sc)| (i, sc))
+        .collect();
+
     // ROADMAP housekeeping: the pooled fan-out is index-ordered, so a
     // heterogeneous grid must be sorted by expected size at the call
     // site — largest cells first, results scattered back afterwards.
-    let order = size_ordered_indices(&cells, |&(s, c)| {
+    let order = size_ordered_indices(&fresh, |&(_, (s, c))| {
         cell_cost(&opts.schedulers[s], &scenarios[c])
     });
-    let ordered: Vec<(usize, usize)> =
-        order.iter().map(|&i| cells[i]).collect();
+    let ordered: Vec<(usize, (usize, usize))> =
+        order.iter().map(|&i| fresh[i]).collect();
 
-    let rate = base_rate(fuzz);
-    let (permuted, counters) = parallel_map_pooled_counted(
+    let permuted = parallel_map_pooled(
         &ordered,
         opts.threads,
         || None::<SimWorker>,
-        |slot, counters, _, &(s, c)| {
+        |slot, _, &(_, (s, c))| {
             let sched = &opts.schedulers[s];
             let scenario = &scenarios[c];
             let cfg = case_config(
@@ -204,7 +256,7 @@ pub fn run_tournament(
             );
             let worker = SimWorker::obtain(slot, &setup, &cfg)?;
             let report = worker.run(&setup);
-            counters.merge(&Counters::from_report(report));
+            let cell_counters = Counters::from_report(report);
             let summary = report.latency_summary();
             let deadline_misses = report
                 .job_latencies_us
@@ -223,7 +275,7 @@ pub fn run_tournament(
                 scenario,
                 opts.inject_label.as_deref(),
             );
-            Ok(CellScore {
+            let score = CellScore {
                 scheduler: sched.clone(),
                 case_idx: c,
                 scenario: scenario.name.clone(),
@@ -239,18 +291,17 @@ pub fn run_tournament(
                     .into_iter()
                     .map(|v| (v.oracle, v.detail))
                     .collect(),
-            })
+            };
+            Ok((score, cell_counters))
         },
     );
 
     // Scatter back to canonical order, aggregating failures.
-    let mut slots: Vec<Option<CellScore>> = Vec::new();
-    slots.resize_with(cells.len(), || None);
     let mut errs = Vec::new();
     for (k, r) in permuted.into_iter().enumerate() {
-        let (s, c) = ordered[k];
+        let (slot_idx, (s, c)) = ordered[k];
         match r {
-            Ok(score) => slots[order[k]] = Some(score),
+            Ok(pair) => slots[slot_idx] = Some(pair),
             Err(e) => errs.push(format!(
                 "{}×case{}: {e}",
                 opts.schedulers[s], c
@@ -263,8 +314,37 @@ pub fn run_tournament(
             errs.join("; ")
         )));
     }
-    let cell_scores: Vec<CellScore> =
-        slots.into_iter().map(|s| s.expect("all cells ok")).collect();
+
+    // Record fresh violation-free cells back into the store (serial,
+    // canonical order) before consuming the slots.
+    if let Some(ctx) = &opts.store {
+        for &(i, _) in &fresh {
+            let (score, cc) =
+                slots[i].as_ref().expect("all cells ok");
+            if score.violations.is_empty() {
+                ctx.store.put_point(&PointEntry {
+                    kind: "fuzz".into(),
+                    key: keys[i].1.clone(),
+                    config_hash: keys[i].0.clone(),
+                    workload_digest: ctx.workload_digest.clone(),
+                    result: score.to_json(),
+                    counters: cc.clone(),
+                })?;
+            }
+        }
+    }
+
+    // Canonical-order merge, mixing cached and fresh cells: the
+    // aggregate counters and the score list come out byte-identical
+    // for any thread count and any cache state.
+    let mut counters = Counters::new();
+    let mut cell_scores: Vec<CellScore> =
+        Vec::with_capacity(cells.len());
+    for s in slots {
+        let (score, cc) = s.expect("all cells ok");
+        counters.merge(&cc);
+        cell_scores.push(score);
+    }
 
     // Shrink + persist every violated cell, in canonical order.
     let mut repros = Vec::new();
@@ -651,6 +731,7 @@ mod tests {
             threads: 2,
             repro_dir: None,
             inject_label: None,
+            store: None,
         };
         let (report, counters) =
             run_tournament(&p, &apps, &fuzz, &opts).unwrap();
@@ -717,6 +798,45 @@ mod tests {
     }
 
     #[test]
+    fn warm_store_reproduces_report_and_counters() {
+        let p = Platform::table2_soc();
+        let apps = workload();
+        let fuzz = tiny_fuzz();
+        let dir = std::env::temp_dir().join("ds3r_fuzz_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = crate::store::ExperimentStore::open(&dir).unwrap();
+        let ctx = StoreCtx {
+            store: store.clone(),
+            workload_digest: "wd".into(),
+        };
+        let mk = |threads| TournamentOpts {
+            schedulers: vec!["etf".into(), "rr".into()],
+            threads,
+            repro_dir: None,
+            inject_label: None,
+            store: Some(ctx.clone()),
+        };
+        let (r1, c1) = run_tournament(&p, &apps, &fuzz, &mk(1)).unwrap();
+        assert_eq!(r1.violations, 0, "{:?}", r1.cells);
+        let hits_cold = store.session_hits();
+        // Second run — different thread count, warm cache — must serve
+        // every cell from the store and land on identical bytes.
+        let (r2, c2) = run_tournament(&p, &apps, &fuzz, &mk(8)).unwrap();
+        assert_eq!(
+            store.session_hits() - hits_cold,
+            r1.cells.len() as u64,
+            "warm rerun must hit the cache for every cell"
+        );
+        assert_eq!(r1, r2);
+        assert_eq!(
+            c1.to_json().to_string(),
+            c2.to_json().to_string(),
+            "aggregate counters must merge back byte-identically"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn injected_violation_shrinks_to_minimal_repro_and_replays() {
         let p = Platform::table2_soc();
         let apps = workload();
@@ -731,6 +851,7 @@ mod tests {
             // Every generated scenario opens with a SetRate event, so
             // every cell trips the hook and must shrink to exactly it.
             inject_label: Some("rate=".into()),
+            store: None,
         };
         let (report, _) = run_tournament(&p, &apps, &fuzz, &opts).unwrap();
         assert_eq!(report.violations, 1);

@@ -40,6 +40,10 @@
 //!   the deployable [`learn::IlSched`] (`--sched il`) with an
 //!   oracle-fallback guard, hot-swappable mid-run by the scenario
 //!   engine.
+//! * **Experiment store** ([`store`]): an on-disk, content-addressed
+//!   archive of run manifests and per-point results (`--store`),
+//!   giving campaigns resumability (warm reruns skip already-computed
+//!   points) and a query layer (`ds3r query`) over their provenance.
 //!
 //! The crate is the Layer-3 coordinator of a three-layer stack; Layers 1-2
 //! (Pallas kernels + JAX models) live in `python/compile/` and are only
@@ -79,6 +83,7 @@ pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod stats;
+pub mod store;
 pub mod telemetry;
 pub mod thermal;
 pub mod util;

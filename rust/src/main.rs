@@ -16,6 +16,8 @@ fn main() {
         "fuzz" => cli::cmd_fuzz(&args),
         "reproduce" => cli::cmd_reproduce(&args),
         "validate" => cli::cmd_validate(&args),
+        "query" => cli::cmd_query(&args),
+        "store" => cli::cmd_store(&args),
         "list" => Ok(cli::cmd_list()),
         "help" | "--help" | "-h" => Ok(cli::USAGE.to_string()),
         other => Err(ds3r::Error::Config(format!(

@@ -770,6 +770,101 @@ pub fn latency_series(
     s
 }
 
+/// One reduction over stored manifests (`ds3r query --agg`): the
+/// counter field reduced, the aggregation applied, how many manifests
+/// matched, and the resulting value.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct QueryAggregate {
+    pub field: String,
+    /// Aggregation label (`count`, `mean`, `p95`, `worst`).
+    pub agg: String,
+    /// Manifests the filter selected.
+    pub count: usize,
+    pub value: f64,
+}
+
+impl QueryAggregate {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("field", Json::Str(self.field.clone()))
+            .set("agg", Json::Str(self.agg.clone()))
+            .set("count", Json::Num(self.count as f64))
+            .set("value", Json::Num(self.value));
+        j
+    }
+}
+
+/// Outcome of `ds3r store gc`: what survived and what was dropped.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StoreGcSummary {
+    /// Manifests still reachable through the index.
+    pub kept_manifests: usize,
+    /// Point files referenced by at least one manifest.
+    pub kept_points: usize,
+    /// Unreferenced point files deleted.
+    pub dropped_points: usize,
+    /// Index rows whose manifest file was missing, dropped.
+    pub dropped_rows: usize,
+    /// Orphaned manifest files (written but never indexed — e.g. a
+    /// kill between the file write and the index append) re-indexed.
+    pub reindexed: usize,
+}
+
+impl StoreGcSummary {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "kept_manifests",
+            Json::Num(self.kept_manifests as f64),
+        )
+        .set("kept_points", Json::Num(self.kept_points as f64))
+        .set("dropped_points", Json::Num(self.dropped_points as f64))
+        .set("dropped_rows", Json::Num(self.dropped_rows as f64))
+        .set("reindexed", Json::Num(self.reindexed as f64));
+        j
+    }
+}
+
+/// Outcome of `ds3r store verify`: every manifest re-hashed from its
+/// content and every point key re-derived; `mismatches` lists anything
+/// whose stored key disagrees with its content.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StoreVerifySummary {
+    pub manifests_checked: usize,
+    pub points_checked: usize,
+    /// Human-readable descriptions of every key/content disagreement.
+    pub mismatches: Vec<String>,
+}
+
+impl StoreVerifySummary {
+    pub fn ok(&self) -> bool {
+        self.mismatches.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "manifests_checked",
+            Json::Num(self.manifests_checked as f64),
+        )
+        .set(
+            "points_checked",
+            Json::Num(self.points_checked as f64),
+        )
+        .set("ok", Json::Bool(self.ok()))
+        .set(
+            "mismatches",
+            Json::Arr(
+                self.mismatches
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

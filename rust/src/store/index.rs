@@ -1,0 +1,200 @@
+//! Append-only manifest index (`<store>/index.jsonl`).
+//!
+//! One compact JSONL row per distinct manifest key — enough identity
+//! to answer `ds3r query` filters without opening every manifest
+//! file.  Appends are idempotent by key, so reruns of an identical
+//! campaign never duplicate rows and 1-vs-8-thread runs leave
+//! byte-identical index files.  `store gc` is the only writer that
+//! rewrites the file in place.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use super::manifest::Manifest;
+use crate::util::json::{u64_from_json, u64_to_json, Json};
+use crate::{Error, Result};
+
+/// One index row: the identity fields of a stored [`Manifest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexRow {
+    pub key: String,
+    pub cmd: String,
+    pub config_hash: String,
+    pub workload_digest: String,
+    pub seed: u64,
+    pub scheduler: String,
+}
+
+impl IndexRow {
+    pub fn from_manifest(m: &Manifest) -> IndexRow {
+        IndexRow {
+            key: m.key(),
+            cmd: m.cmd.clone(),
+            config_hash: m.config_hash.clone(),
+            workload_digest: m.workload_digest.clone(),
+            seed: m.seed,
+            scheduler: m.scheduler.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("key", Json::Str(self.key.clone()))
+            .set("cmd", Json::Str(self.cmd.clone()))
+            .set("config_hash", Json::Str(self.config_hash.clone()))
+            .set(
+                "workload_digest",
+                Json::Str(self.workload_digest.clone()),
+            )
+            .set("seed", u64_to_json(self.seed))
+            .set("scheduler", Json::Str(self.scheduler.clone()));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<IndexRow> {
+        Ok(IndexRow {
+            key: j.req_str("key")?.to_string(),
+            cmd: j.req_str("cmd")?.to_string(),
+            config_hash: j.req_str("config_hash")?.to_string(),
+            workload_digest: j.req_str("workload_digest")?.to_string(),
+            seed: j.get("seed").and_then(u64_from_json).ok_or_else(
+                || Error::Json("index row: bad seed".into()),
+            )?,
+            scheduler: j.req_str("scheduler")?.to_string(),
+        })
+    }
+}
+
+/// In-memory mirror of `index.jsonl` plus its on-disk path.
+#[derive(Debug)]
+pub struct Index {
+    path: PathBuf,
+    rows: Vec<IndexRow>,
+    keys: BTreeSet<String>,
+}
+
+impl Index {
+    /// Load the index at `path` (an absent file is an empty index).
+    pub fn open(path: &Path) -> Result<Index> {
+        let mut idx = Index {
+            path: path.to_path_buf(),
+            rows: Vec::new(),
+            keys: BTreeSet::new(),
+        };
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let row = IndexRow::from_json(&Json::parse(line)?)?;
+                idx.keys.insert(row.key.clone());
+                idx.rows.push(row);
+            }
+        }
+        Ok(idx)
+    }
+
+    pub fn rows(&self) -> &[IndexRow] {
+        &self.rows
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.keys.contains(key)
+    }
+
+    /// Append a row unless its key is already indexed (idempotent).
+    /// Returns whether the row was new.
+    pub fn append(&mut self, row: IndexRow) -> Result<bool> {
+        if self.keys.contains(&row.key) {
+            return Ok(false);
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", row.to_json().to_string())?;
+        self.keys.insert(row.key.clone());
+        self.rows.push(row);
+        Ok(true)
+    }
+
+    /// Drop every row failing `keep` and rewrite the file atomically
+    /// (`store gc` path).  Returns how many rows were dropped.
+    pub fn rewrite(
+        &mut self,
+        keep: impl Fn(&IndexRow) -> bool,
+    ) -> Result<usize> {
+        let before = self.rows.len();
+        self.rows.retain(&keep);
+        self.keys = self.rows.iter().map(|r| r.key.clone()).collect();
+        let mut text = String::new();
+        for row in &self.rows {
+            text.push_str(&row.to_json().to_string());
+            text.push('\n');
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        std::fs::write(&tmp, text)?;
+        std::fs::rename(&tmp, &self.path)?;
+        Ok(before - self.rows.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(key: &str, seed: u64) -> IndexRow {
+        IndexRow {
+            key: key.into(),
+            cmd: "sweep".into(),
+            config_hash: "ch".into(),
+            workload_digest: "wd".into(),
+            seed,
+            scheduler: "etf".into(),
+        }
+    }
+
+    #[test]
+    fn append_is_idempotent_and_survives_reopen() {
+        let dir = std::env::temp_dir().join("ds3r_store_index_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut idx = Index::open(&path).unwrap();
+        assert!(idx.append(row("a", 1)).unwrap());
+        assert!(idx.append(row("b", 2)).unwrap());
+        assert!(!idx.append(row("a", 1)).unwrap(), "dup must be a no-op");
+        assert_eq!(idx.rows().len(), 2);
+
+        let idx2 = Index::open(&path).unwrap();
+        assert_eq!(idx2.rows(), idx.rows());
+        assert!(idx2.contains("a") && idx2.contains("b"));
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rewrite_drops_rows_and_round_trips() {
+        let dir = std::env::temp_dir().join("ds3r_store_index_rw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut idx = Index::open(&path).unwrap();
+        idx.append(row("a", 1)).unwrap();
+        idx.append(row("b", 2)).unwrap();
+        idx.append(row("c", 3)).unwrap();
+        assert_eq!(idx.rewrite(|r| r.key != "b").unwrap(), 1);
+        assert!(!idx.contains("b"));
+
+        let idx2 = Index::open(&path).unwrap();
+        assert_eq!(idx2.rows().len(), 2);
+        assert!(idx2.contains("a") && idx2.contains("c"));
+
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,198 @@
+//! Run manifests: the durable provenance record of one CLI invocation.
+//!
+//! A [`Manifest`] is the persisted form of the `run_started` /
+//! `run_finished` event pair — canonical config hash, workload digest,
+//! seed, scheduler, git describe, the aggregated deterministic
+//! [`Counters`], the per-point cache keys the campaign touched, and a
+//! free-form result summary.  Its [`Manifest::key`] is a pure function
+//! of the identity fields (environment metadata like `git` is stored
+//! but never hashed), so re-running the identical campaign lands on
+//! the same manifest file.
+
+use crate::telemetry::{self, Counters};
+use crate::util::json::{u64_from_json, u64_to_json, Json};
+use crate::{Error, Result};
+
+/// The `"kind"` tag guarding manifest JSON files against accidental
+/// cross-loading (same convention as `ds3r-tournament-report`).
+pub const MANIFEST_KIND: &str = "ds3r-manifest";
+
+/// Content-addressed key of one campaign invocation.  Hashes only the
+/// fields that determine simulated behaviour: command, canonical
+/// config hash, workload digest, seed and scheduler.
+pub fn manifest_key(
+    cmd: &str,
+    config_hash: &str,
+    workload_digest: &str,
+    seed: u64,
+    scheduler: &str,
+) -> String {
+    telemetry::config_hash(&format!(
+        "{cmd}:{config_hash}:{workload_digest}:{seed}:{scheduler}"
+    ))
+}
+
+/// One campaign's provenance record (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Subcommand / campaign label (`run`, `sweep`, `fuzz`, ...).
+    pub cmd: String,
+    /// FNV-1a hash of the canonical config JSON.
+    pub config_hash: String,
+    /// FNV-1a digest over every workload input (app DAGs, trace files,
+    /// XLA artifacts, scenario/fuzz JSON, IL policy).
+    pub workload_digest: String,
+    pub seed: u64,
+    pub scheduler: String,
+    /// `git describe --always --dirty`, when available.  Environment
+    /// metadata: stored, never hashed into [`Manifest::key`].
+    pub git: Option<String>,
+    /// Aggregated deterministic counters of the whole invocation.
+    pub counters: Counters,
+    /// Point-cache keys this campaign consulted or wrote, in canonical
+    /// input order (identical for cold, warm and partial reruns).
+    pub point_keys: Vec<String>,
+    /// Free-form result summary (command-specific JSON).
+    pub result: Json,
+}
+
+impl Manifest {
+    /// The content-addressed key this manifest files under.
+    pub fn key(&self) -> String {
+        manifest_key(
+            &self.cmd,
+            &self.config_hash,
+            &self.workload_digest,
+            self.seed,
+            &self.scheduler,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str(MANIFEST_KIND.into()))
+            .set("key", Json::Str(self.key()))
+            .set("cmd", Json::Str(self.cmd.clone()))
+            .set("config_hash", Json::Str(self.config_hash.clone()))
+            .set(
+                "workload_digest",
+                Json::Str(self.workload_digest.clone()),
+            )
+            .set("seed", u64_to_json(self.seed))
+            .set("scheduler", Json::Str(self.scheduler.clone()))
+            .set(
+                "git",
+                match &self.git {
+                    Some(g) => Json::Str(g.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set("counters", self.counters.to_json())
+            .set(
+                "point_keys",
+                Json::Arr(
+                    self.point_keys
+                        .iter()
+                        .map(|k| Json::Str(k.clone()))
+                        .collect(),
+                ),
+            )
+            .set("result", self.result.clone());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        if j.get("kind").and_then(Json::as_str) != Some(MANIFEST_KIND) {
+            return Err(Error::Json(format!(
+                "not a {MANIFEST_KIND} file (missing/foreign kind tag)"
+            )));
+        }
+        let seed = j
+            .get("seed")
+            .and_then(u64_from_json)
+            .ok_or_else(|| Error::Json("manifest: bad seed".into()))?;
+        let mut point_keys = Vec::new();
+        for v in j.req_arr("point_keys")? {
+            point_keys.push(
+                v.as_str()
+                    .ok_or_else(|| {
+                        Error::Json("manifest: non-string point key".into())
+                    })?
+                    .to_string(),
+            );
+        }
+        let counters = match j.get("counters") {
+            Some(c) => Counters::from_json(c)?,
+            None => Counters::new(),
+        };
+        Ok(Manifest {
+            cmd: j.req_str("cmd")?.to_string(),
+            config_hash: j.req_str("config_hash")?.to_string(),
+            workload_digest: j.req_str("workload_digest")?.to_string(),
+            seed,
+            scheduler: j.req_str("scheduler")?.to_string(),
+            git: j
+                .get("git")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            counters,
+            point_keys,
+            result: j.get("result").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut counters = Counters::new();
+        counters.add("runs", 8);
+        counters.add("completed_jobs", 320);
+        let mut result = Json::obj();
+        result.set("points", Json::Num(8.0));
+        Manifest {
+            cmd: "sweep".into(),
+            config_hash: telemetry::config_hash("{}"),
+            workload_digest: telemetry::config_hash("workload"),
+            seed: 42,
+            scheduler: "etf".into(),
+            git: Some("abc1234".into()),
+            counters,
+            point_keys: vec!["k0".into(), "k1".into()],
+            result,
+        }
+    }
+
+    #[test]
+    fn manifest_json_round_trip_is_exact() {
+        let m = sample();
+        let j = m.to_json();
+        let back = Manifest::from_json(
+            &Json::parse(&j.to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(m, back);
+        assert_eq!(j.to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn key_ignores_environment_metadata() {
+        let mut a = sample();
+        let mut b = sample();
+        a.git = Some("dirty".into());
+        b.git = None;
+        b.counters = Counters::new();
+        assert_eq!(a.key(), b.key());
+        b.seed = 43;
+        assert_ne!(a.key(), b.key());
+    }
+
+    #[test]
+    fn from_json_rejects_foreign_kinds() {
+        let j = Json::parse(r#"{"kind":"ds3r-point"}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+        assert!(Manifest::from_json(&Json::obj()).is_err());
+    }
+}

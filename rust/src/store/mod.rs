@@ -1,0 +1,828 @@
+//! Content-addressed experiment store (ROADMAP item 2).
+//!
+//! Every campaign invoked with `--store <dir>` persists its provenance
+//! into an on-disk layout keyed by content hashes:
+//!
+//! ```text
+//! <store>/
+//!   index.jsonl          append-only manifest index (one row per key)
+//!   manifests/<key>.json full run manifests (config hash + workload
+//!                        digest + seed + git + counters + result)
+//!   points/<pkey>.json   per-point result cache (sweep / fuzz / dse)
+//! ```
+//!
+//! The store participates in telemetry as a [`StoreSink`]: it captures
+//! the `run_started` identity, and on `run_finished` finalizes a
+//! [`Manifest`] from the aggregated counters plus whatever point keys
+//! and result summary the campaign recorded along the way.
+//!
+//! ## Point cache and determinism
+//!
+//! Pooled campaigns ([`crate::coordinator::run_sweep_stored`], the
+//! fuzz tournament, the DSE evaluator) consult [`ExperimentStore::
+//! lookup`] *before* simulating and merge cached results back **in
+//! input order**, so a warm rerun executes zero simulations yet
+//! reproduces the cold run's report and default telemetry stream
+//! byte-for-byte — and 1-vs-8-thread runs leave identical store
+//! contents.  Cache-hit statistics live in store-internal atomics
+//! (never in [`Counters`] or stdout reports), precisely so hits do not
+//! perturb those byte-identity contracts.
+
+pub mod index;
+pub mod manifest;
+pub mod query;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::app::AppGraph;
+use crate::config::SimConfig;
+use crate::stats::{StoreGcSummary, StoreVerifySummary};
+use crate::telemetry::{self, Counters, Event, Sink};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+pub use index::{Index, IndexRow};
+pub use manifest::{manifest_key, Manifest, MANIFEST_KIND};
+pub use query::{Agg, QueryFilter};
+
+/// The `"kind"` tag of point-cache files.
+pub const POINT_KIND: &str = "ds3r-point";
+
+// ---------------------------------------------------------------------------
+// Hashing
+// ---------------------------------------------------------------------------
+
+/// Incremental FNV-1a 64 over raw bytes — the byte-stream counterpart
+/// of [`telemetry::config_hash`] (identical constants, identical hex
+/// rendering), used where inputs are files rather than strings.
+#[derive(Debug, Clone)]
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+fn fold_path(h: &mut Fnv, tag: &str, path: &Path) {
+    h.update(tag.as_bytes());
+    h.update(b"\0");
+    match std::fs::read(path) {
+        Ok(bytes) => h.update(&bytes),
+        Err(_) => h.update(b"<missing>"),
+    }
+    h.update(b"\0");
+}
+
+/// Digest every workload input feeding a campaign: application DAGs,
+/// the recorded trace file, the IL policy artifact, XLA artifacts, and
+/// any command-specific extras (scenario / fuzz / DSE / learn config
+/// JSON).  `run_started` carries this next to `config_hash`, making
+/// store keys content-addressed: editing a trace file changes the key
+/// even though the config JSON (which stores only the *path*) does
+/// not.
+pub fn workload_digest(
+    cfg: &SimConfig,
+    apps: &[AppGraph],
+    extra: &[(&str, String)],
+) -> String {
+    let mut h = Fnv::new();
+    for app in apps {
+        h.update(b"app\0");
+        h.update(app.name.as_bytes());
+        h.update(b"\0");
+        h.update(app.to_json().to_string().as_bytes());
+        h.update(b"\0");
+    }
+    if let Some(p) = &cfg.trace_file {
+        fold_path(&mut h, "trace_file", p);
+    }
+    if let Some(p) = &cfg.il_policy {
+        fold_path(&mut h, "il_policy", p);
+    }
+    if let Some(dir) = &cfg.artifacts_dir {
+        // `artifacts_dir` is deliberately absent from the canonical
+        // config JSON, so its contents must be folded here.
+        let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok().map(|e| e.path()))
+                    .filter(|p| p.is_file())
+                    .collect()
+            })
+            .unwrap_or_default();
+        files.sort();
+        for f in &files {
+            let name = f
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            fold_path(&mut h, &format!("artifact:{name}"), f);
+        }
+    }
+    for (k, v) in extra {
+        h.update(b"extra\0");
+        h.update(k.as_bytes());
+        h.update(b"\0");
+        h.update(v.as_bytes());
+        h.update(b"\0");
+    }
+    h.hex()
+}
+
+/// Point-cache key: one hash over the pair (per-point config hash,
+/// workload digest).  Every point entry — sweep, fuzz cell, DSE
+/// evaluation — derives its key this way, which is what lets
+/// `store verify` re-derive keys from entry content alone.
+pub fn point_key(config_hash: &str, workload_digest: &str) -> String {
+    telemetry::config_hash(&format!("{config_hash}:{workload_digest}"))
+}
+
+/// [`point_key`] for a fully-resolved per-point [`SimConfig`] (the
+/// sweep / fuzz shape, where the canonical config JSON *is* the point
+/// identity).
+pub fn config_point_key(cfg: &SimConfig, workload_digest: &str) -> String {
+    let ch = telemetry::config_hash(&cfg.to_json().to_string());
+    point_key(&ch, workload_digest)
+}
+
+// ---------------------------------------------------------------------------
+// Point entries
+// ---------------------------------------------------------------------------
+
+/// One cached per-point result: enough to skip the simulation and
+/// still merge the report and counters back byte-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointEntry {
+    /// Which cache population this entry belongs to (`sweep`, `fuzz`,
+    /// `dse-eval`) — lookups are kind-checked so populations with
+    /// coincidentally equal keys can never cross-contaminate.
+    pub kind: String,
+    pub key: String,
+    /// Hash of the fully-resolved per-point config (or evaluation
+    /// identity, for DSE).
+    pub config_hash: String,
+    pub workload_digest: String,
+    /// The point's serialized result (command-specific JSON).
+    pub result: Json,
+    /// The point's deterministic counter delta.
+    pub counters: Counters,
+}
+
+impl PointEntry {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str(POINT_KIND.into()))
+            .set("point_kind", Json::Str(self.kind.clone()))
+            .set("key", Json::Str(self.key.clone()))
+            .set("config_hash", Json::Str(self.config_hash.clone()))
+            .set(
+                "workload_digest",
+                Json::Str(self.workload_digest.clone()),
+            )
+            .set("result", self.result.clone())
+            .set("counters", self.counters.to_json());
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<PointEntry> {
+        if j.get("kind").and_then(Json::as_str) != Some(POINT_KIND) {
+            return Err(Error::Json(format!(
+                "not a {POINT_KIND} file (missing/foreign kind tag)"
+            )));
+        }
+        Ok(PointEntry {
+            kind: j.req_str("point_kind")?.to_string(),
+            key: j.req_str("key")?.to_string(),
+            config_hash: j.req_str("config_hash")?.to_string(),
+            workload_digest: j.req_str("workload_digest")?.to_string(),
+            result: j.get("result").cloned().unwrap_or(Json::Null),
+            counters: match j.get("counters") {
+                Some(c) => Counters::from_json(c)?,
+                None => Counters::new(),
+            },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Handle on one on-disk experiment store (see module docs).  Shared
+/// `Arc` across the CLI, the [`StoreSink`] and pooled campaign
+/// workers; all interior state is synchronized.
+#[derive(Debug)]
+pub struct ExperimentStore {
+    root: PathBuf,
+    index: Mutex<Index>,
+    /// Point keys touched by the in-flight campaign, recorded by the
+    /// campaign driver in canonical input order (never by `lookup` /
+    /// `put_point`, whose call order is thread-dependent).
+    session_points: Mutex<Vec<String>>,
+    /// Result summary the campaign stashes for its manifest.
+    pending_result: Mutex<Json>,
+    last_manifest: Mutex<Option<String>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ExperimentStore {
+    /// Open (creating if necessary) the store rooted at `dir`.
+    pub fn open(dir: &Path) -> Result<Arc<ExperimentStore>> {
+        std::fs::create_dir_all(dir.join("manifests"))?;
+        std::fs::create_dir_all(dir.join("points"))?;
+        let index = Index::open(&dir.join("index.jsonl"))?;
+        Ok(Arc::new(ExperimentStore {
+            root: dir.to_path_buf(),
+            index: Mutex::new(index),
+            session_points: Mutex::new(Vec::new()),
+            pending_result: Mutex::new(Json::Null),
+            last_manifest: Mutex::new(None),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn manifest_path(&self, key: &str) -> PathBuf {
+        self.root.join("manifests").join(format!("{key}.json"))
+    }
+
+    fn point_path(&self, key: &str) -> PathBuf {
+        self.root.join("points").join(format!("{key}.json"))
+    }
+
+    /// Atomic (write-then-rename) JSON file write, so a killed
+    /// campaign never leaves a truncated entry behind.
+    fn write_json(&self, path: &Path, j: &Json) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, j.to_string_pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    // ---- point cache ------------------------------------------------------
+
+    /// Consult the point cache.  A hit must carry the expected `kind`;
+    /// unreadable or foreign entries count as misses.
+    pub fn lookup(&self, key: &str, kind: &str) -> Option<PointEntry> {
+        let hit = Json::parse_file(&self.point_path(key))
+            .ok()
+            .and_then(|j| PointEntry::from_json(&j).ok())
+            .filter(|e| e.key == key && e.kind == kind);
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Persist one point entry (idempotent overwrite: entries are
+    /// deterministic functions of their key).
+    pub fn put_point(&self, entry: &PointEntry) -> Result<()> {
+        self.write_json(&self.point_path(&entry.key), &entry.to_json())
+    }
+
+    /// Record the point keys of the in-flight campaign, in canonical
+    /// input order.  Drivers call this once, before the pooled grid
+    /// runs, so manifests list identical keys for cold, warm and
+    /// partial reruns.
+    pub fn record_points(&self, keys: &[String]) {
+        if let Ok(mut p) = self.session_points.lock() {
+            p.extend(keys.iter().cloned());
+        }
+    }
+
+    /// Stash the campaign's result summary for its manifest.
+    pub fn set_result(&self, result: Json) {
+        if let Ok(mut r) = self.pending_result.lock() {
+            *r = result;
+        }
+    }
+
+    /// Point-cache hits of this process so far.
+    pub fn session_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Point-cache misses of this process so far.
+    pub fn session_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    // ---- manifests --------------------------------------------------------
+
+    /// Persist a manifest and index it (idempotent by key).  Returns
+    /// the manifest key.
+    pub fn put_manifest(&self, m: &Manifest) -> Result<String> {
+        let key = m.key();
+        self.write_json(&self.manifest_path(&key), &m.to_json())?;
+        if let Ok(mut idx) = self.index.lock() {
+            idx.append(IndexRow::from_manifest(m))?;
+        }
+        if let Ok(mut last) = self.last_manifest.lock() {
+            *last = Some(key.clone());
+        }
+        Ok(key)
+    }
+
+    /// Key of the manifest most recently written by this process.
+    pub fn last_manifest_key(&self) -> Option<String> {
+        self.last_manifest.lock().ok().and_then(|l| l.clone())
+    }
+
+    /// Load every indexed manifest, in index (append) order.  Rows
+    /// whose manifest file is missing or unreadable are skipped —
+    /// `store gc` reports and prunes those.
+    pub fn manifests(&self) -> Vec<Manifest> {
+        let rows: Vec<IndexRow> = self
+            .index
+            .lock()
+            .map(|idx| idx.rows().to_vec())
+            .unwrap_or_default();
+        rows.iter()
+            .filter_map(|r| {
+                Json::parse_file(&self.manifest_path(&r.key))
+                    .ok()
+                    .and_then(|j| Manifest::from_json(&j).ok())
+            })
+            .collect()
+    }
+
+    fn point_files(&self) -> Result<Vec<PathBuf>> {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(
+            self.root.join("points"),
+        )?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+        files.sort();
+        Ok(files)
+    }
+
+    // ---- maintenance ------------------------------------------------------
+
+    /// Garbage-collect the store: re-index orphaned manifest files
+    /// (e.g. a kill between manifest write and index append), drop
+    /// index rows whose manifest file vanished, and delete point
+    /// entries no surviving manifest references.
+    pub fn gc(&self) -> Result<StoreGcSummary> {
+        let mut summary = StoreGcSummary::default();
+
+        // Re-index manifest files the index does not know about.
+        let mut manifest_files: Vec<PathBuf> = std::fs::read_dir(
+            self.root.join("manifests"),
+        )?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+        manifest_files.sort();
+        if let Ok(mut idx) = self.index.lock() {
+            for f in &manifest_files {
+                let Ok(j) = Json::parse_file(f) else { continue };
+                let Ok(m) = Manifest::from_json(&j) else { continue };
+                if idx.append(IndexRow::from_manifest(&m))? {
+                    summary.reindexed += 1;
+                }
+            }
+            // Drop rows whose manifest file is gone.
+            let manifests_dir = self.root.join("manifests");
+            summary.dropped_rows = idx.rewrite(|r| {
+                manifests_dir.join(format!("{}.json", r.key)).exists()
+            })?;
+        }
+
+        // Delete point entries no surviving manifest references.
+        let manifests = self.manifests();
+        let referenced: std::collections::BTreeSet<&str> = manifests
+            .iter()
+            .flat_map(|m| m.point_keys.iter().map(String::as_str))
+            .collect();
+        for f in self.point_files()? {
+            let stem = f
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            if referenced.contains(stem.as_str()) {
+                summary.kept_points += 1;
+            } else {
+                std::fs::remove_file(&f)?;
+                summary.dropped_points += 1;
+            }
+        }
+        summary.kept_manifests = manifests.len();
+        Ok(summary)
+    }
+
+    /// Verify store integrity: re-derive every manifest key and point
+    /// key from file *content* and report entries whose filename or
+    /// recorded key disagrees (bit-rot, hand-edits, hash drift).
+    pub fn verify(&self) -> Result<StoreVerifySummary> {
+        let mut summary = StoreVerifySummary::default();
+        let rows: Vec<IndexRow> = self
+            .index
+            .lock()
+            .map(|idx| idx.rows().to_vec())
+            .unwrap_or_default();
+        for r in &rows {
+            summary.manifests_checked += 1;
+            let path = self.manifest_path(&r.key);
+            let m = Json::parse_file(&path)
+                .and_then(|j| Manifest::from_json(&j));
+            match m {
+                Ok(m) if m.key() == r.key => {}
+                Ok(m) => summary.mismatches.push(format!(
+                    "manifest {} re-hashes to {}",
+                    r.key,
+                    m.key()
+                )),
+                Err(e) => summary
+                    .mismatches
+                    .push(format!("manifest {} unreadable: {e}", r.key)),
+            }
+        }
+        for f in self.point_files()? {
+            summary.points_checked += 1;
+            let stem = f
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            let e = Json::parse_file(&f)
+                .and_then(|j| PointEntry::from_json(&j));
+            match e {
+                Ok(e) => {
+                    let derived =
+                        point_key(&e.config_hash, &e.workload_digest);
+                    if e.key != stem || derived != e.key {
+                        summary.mismatches.push(format!(
+                            "point {stem} re-hashes to {derived}"
+                        ));
+                    }
+                }
+                Err(e) => summary
+                    .mismatches
+                    .push(format!("point {stem} unreadable: {e}")),
+            }
+        }
+        Ok(summary)
+    }
+
+    /// Drain the per-campaign state into a finalized manifest (the
+    /// [`StoreSink`] `run_finished` path).
+    fn finalize(&self, id: &RunIdentity, counters: &Counters) {
+        let point_keys = self
+            .session_points
+            .lock()
+            .map(|mut p| std::mem::take(&mut *p))
+            .unwrap_or_default();
+        let result = self
+            .pending_result
+            .lock()
+            .map(|mut r| std::mem::replace(&mut *r, Json::Null))
+            .unwrap_or(Json::Null);
+        let m = Manifest {
+            cmd: id.cmd.clone(),
+            config_hash: id.config_hash.clone(),
+            workload_digest: id.workload_digest.clone(),
+            seed: id.seed,
+            scheduler: id.scheduler.clone(),
+            git: id.git.clone(),
+            counters: counters.clone(),
+            point_keys,
+            result,
+        };
+        // Sinks cannot surface errors (and must not re-enter the
+        // global telemetry dispatcher); the CLI reports the outcome
+        // via `last_manifest_key`.
+        let _ = self.put_manifest(&m);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry integration
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct RunIdentity {
+    cmd: String,
+    config_hash: String,
+    workload_digest: String,
+    seed: u64,
+    scheduler: String,
+    git: Option<String>,
+}
+
+/// Telemetry sink that materializes each `run_started`/`run_finished`
+/// pair into a stored [`Manifest`].  Fanned out next to the JSONL and
+/// progress sinks, so `--store` composes with every other
+/// observability flag.
+pub struct StoreSink {
+    store: Arc<ExperimentStore>,
+    identity: Mutex<Option<RunIdentity>>,
+}
+
+impl StoreSink {
+    pub fn new(store: Arc<ExperimentStore>) -> StoreSink {
+        StoreSink { store, identity: Mutex::new(None) }
+    }
+}
+
+impl Sink for StoreSink {
+    fn emit(&self, ev: &Event) {
+        match ev {
+            Event::RunStarted {
+                cmd,
+                config_hash,
+                workload_digest,
+                seed,
+                scheduler,
+                git,
+            } => {
+                if let Ok(mut id) = self.identity.lock() {
+                    *id = Some(RunIdentity {
+                        cmd: cmd.clone(),
+                        config_hash: config_hash.clone(),
+                        workload_digest: workload_digest.clone(),
+                        seed: *seed,
+                        scheduler: scheduler.clone(),
+                        git: git.clone(),
+                    });
+                }
+            }
+            Event::RunFinished { counters, .. } => {
+                let id = self
+                    .identity
+                    .lock()
+                    .ok()
+                    .and_then(|mut id| id.take());
+                if let Some(id) = id {
+                    self.store.finalize(&id, counters);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// What pooled campaign drivers need to consult the cache: the shared
+/// store handle plus the campaign's workload digest.
+#[derive(Debug, Clone)]
+pub struct StoreCtx {
+    pub store: Arc<ExperimentStore>,
+    pub workload_digest: String,
+}
+
+// ---------------------------------------------------------------------------
+// Global registry (CLI wiring)
+// ---------------------------------------------------------------------------
+
+static GLOBAL_STORE: Mutex<Option<Arc<ExperimentStore>>> =
+    Mutex::new(None);
+
+/// Install (or clear, with `None`) the process-global store handle —
+/// `init_telemetry` does this from `--store`; tests clear it for
+/// isolation.
+pub fn set_global(store: Option<Arc<ExperimentStore>>) {
+    if let Ok(mut g) = GLOBAL_STORE.lock() {
+        *g = store;
+    }
+}
+
+/// A clone of the installed global store handle, if any.
+pub fn global() -> Option<Arc<ExperimentStore>> {
+    GLOBAL_STORE.lock().ok().and_then(|g| g.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::suite;
+
+    fn temp_store(tag: &str) -> (PathBuf, Arc<ExperimentStore>) {
+        let dir = std::env::temp_dir()
+            .join(format!("ds3r_store_{tag}_test"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ExperimentStore::open(&dir).unwrap();
+        (dir, store)
+    }
+
+    fn entry(key: &str, kind: &str) -> PointEntry {
+        let mut counters = Counters::new();
+        counters.add("runs", 1);
+        let mut result = Json::obj();
+        result.set("avg_latency_us", Json::Num(123.5));
+        PointEntry {
+            kind: kind.into(),
+            key: key.into(),
+            config_hash: "deadbeefdeadbeef".into(),
+            workload_digest: "feedfacefeedface".into(),
+            result,
+            counters,
+        }
+    }
+
+    #[test]
+    fn point_cache_round_trip_and_kind_isolation() {
+        let (dir, store) = temp_store("points");
+        let key = point_key("deadbeefdeadbeef", "feedfacefeedface");
+        let mut e = entry(&key, "sweep");
+        e.key = key.clone();
+        store.put_point(&e).unwrap();
+        assert_eq!(store.lookup(&key, "sweep"), Some(e.clone()));
+        // Foreign kind and absent key are both misses.
+        assert_eq!(store.lookup(&key, "fuzz"), None);
+        assert_eq!(store.lookup("0000000000000000", "sweep"), None);
+        assert_eq!(store.session_hits(), 1);
+        assert_eq!(store.session_misses(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn workload_digest_tracks_trace_file_content() {
+        let dir =
+            std::env::temp_dir().join("ds3r_store_digest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.json");
+        std::fs::write(&trace, b"{\"jobs\":[1,2,3]}").unwrap();
+
+        let apps =
+            vec![suite::wifi_tx(suite::WifiParams { symbols: 2 })];
+        let mut cfg = SimConfig::default();
+        cfg.trace_file = Some(trace.clone());
+
+        let d1 = workload_digest(&cfg, &apps, &[]);
+        // Pure function of content: same inputs, same digest.
+        assert_eq!(d1, workload_digest(&cfg, &apps, &[]));
+        // Editing the trace file changes the key even though the
+        // config JSON (which records only the path) is unchanged.
+        std::fs::write(&trace, b"{\"jobs\":[1,2,3,4]}").unwrap();
+        let d2 = workload_digest(&cfg, &apps, &[]);
+        assert_ne!(d1, d2);
+        // Extras (scenario / fuzz config JSON) are folded in too.
+        let d3 = workload_digest(
+            &cfg,
+            &apps,
+            &[("fuzz-config", "{\"cases\":9}".into())],
+        );
+        assert_ne!(d2, d3);
+        // The per-point cache key inherits the sensitivity.
+        assert_ne!(
+            config_point_key(&cfg, &d1),
+            config_point_key(&cfg, &d2)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_sink_materializes_manifest_from_run_pair() {
+        let (dir, store) = temp_store("sink");
+        store.record_points(&["k0".to_string(), "k1".to_string()]);
+        let mut result = Json::obj();
+        result.set("points", Json::Num(2.0));
+        store.set_result(result.clone());
+
+        let sink = StoreSink::new(store.clone());
+        sink.emit(&Event::RunStarted {
+            cmd: "sweep".into(),
+            config_hash: "aaaaaaaaaaaaaaaa".into(),
+            workload_digest: "bbbbbbbbbbbbbbbb".into(),
+            seed: 42,
+            scheduler: "etf".into(),
+            git: None,
+        });
+        let mut counters = Counters::new();
+        counters.add("runs", 2);
+        sink.emit(&Event::RunFinished {
+            cmd: "sweep".into(),
+            counters: counters.clone(),
+            wall_s: 0.5,
+        });
+
+        let key = store.last_manifest_key().expect("manifest written");
+        let manifests = store.manifests();
+        assert_eq!(manifests.len(), 1);
+        let m = &manifests[0];
+        assert_eq!(m.key(), key);
+        assert_eq!(m.cmd, "sweep");
+        assert_eq!(m.counters, counters);
+        assert_eq!(m.point_keys, vec!["k0", "k1"]);
+        assert_eq!(m.result, result);
+        // The pair drained the session state; a second campaign in the
+        // same process starts clean.
+        sink.emit(&Event::RunStarted {
+            cmd: "run".into(),
+            config_hash: "cccccccccccccccc".into(),
+            workload_digest: "bbbbbbbbbbbbbbbb".into(),
+            seed: 7,
+            scheduler: "met".into(),
+            git: None,
+        });
+        sink.emit(&Event::RunFinished {
+            cmd: "run".into(),
+            counters: Counters::new(),
+            wall_s: 0.1,
+        });
+        let manifests = store.manifests();
+        assert_eq!(manifests.len(), 2);
+        assert!(manifests[1].point_keys.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_drops_dangling_and_verify_flags_tampering() {
+        let (dir, store) = temp_store("gc");
+        // A referenced point, a dangling point, and one manifest.
+        let ch = "deadbeefdeadbeef";
+        let wd = "feedfacefeedface";
+        let key = point_key(ch, wd);
+        let mut good = entry(&key, "sweep");
+        good.key = key.clone();
+        store.put_point(&good).unwrap();
+        let dangling_key = point_key("0123456789abcdef", wd);
+        let mut dangling = entry(&dangling_key, "sweep");
+        dangling.key = dangling_key.clone();
+        store.put_point(&dangling).unwrap();
+
+        let m = Manifest {
+            cmd: "sweep".into(),
+            config_hash: ch.into(),
+            workload_digest: wd.into(),
+            seed: 1,
+            scheduler: "etf".into(),
+            git: None,
+            counters: Counters::new(),
+            point_keys: vec![key.clone()],
+            result: Json::Null,
+        };
+        store.put_manifest(&m).unwrap();
+
+        let g = store.gc().unwrap();
+        assert_eq!(g.kept_manifests, 1);
+        assert_eq!(g.kept_points, 1);
+        assert_eq!(g.dropped_points, 1);
+        assert_eq!(g.dropped_rows, 0);
+        assert!(store.lookup(&dangling_key, "sweep").is_none());
+
+        let v = store.verify().unwrap();
+        assert!(v.ok(), "clean store must verify: {:?}", v.mismatches);
+        assert_eq!(v.manifests_checked, 1);
+        assert_eq!(v.points_checked, 1);
+
+        // Tamper with the point's identity fields on disk.
+        let mut bad = good.clone();
+        bad.config_hash = "0000000000000000".into();
+        let path = dir.join("points").join(format!("{key}.json"));
+        std::fs::write(&path, bad.to_json().to_string_pretty())
+            .unwrap();
+        let v = store.verify().unwrap();
+        assert!(!v.ok());
+        assert_eq!(v.mismatches.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_reindexes_orphaned_manifest_files() {
+        let (dir, store) = temp_store("reindex");
+        let m = Manifest {
+            cmd: "run".into(),
+            config_hash: "aa".into(),
+            workload_digest: "bb".into(),
+            seed: 3,
+            scheduler: "etf".into(),
+            git: None,
+            counters: Counters::new(),
+            point_keys: Vec::new(),
+            result: Json::Null,
+        };
+        // Simulate a kill between manifest write and index append:
+        // drop the file in place without touching the index.
+        let key = m.key();
+        std::fs::write(
+            dir.join("manifests").join(format!("{key}.json")),
+            m.to_json().to_string_pretty(),
+        )
+        .unwrap();
+        assert!(store.manifests().is_empty());
+        let g = store.gc().unwrap();
+        assert_eq!(g.reindexed, 1);
+        assert_eq!(store.manifests().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

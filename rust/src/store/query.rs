@@ -1,0 +1,274 @@
+//! Query layer over stored manifests (`ds3r query`).
+//!
+//! Filters select manifests by identity (scheduler / seed / config
+//! hash / command kind); aggregations reduce one named counter across
+//! the selection (count / mean / p95 / worst).  Renderers emit either
+//! JSONL (one full manifest per line, machine-consumable) or an ascii
+//! table (human-scannable).  Everything here is a pure function of
+//! store content, so query output is as deterministic as the store
+//! itself.
+
+use super::manifest::Manifest;
+use crate::stats::QueryAggregate;
+use crate::util::json::Json;
+use crate::util::{percentile_sorted, plot};
+use crate::{Error, Result};
+
+/// Identity predicates over stored manifests; `None` fields match
+/// everything.
+#[derive(Debug, Clone, Default)]
+pub struct QueryFilter {
+    pub scheduler: Option<String>,
+    pub seed: Option<u64>,
+    pub config_hash: Option<String>,
+    /// Campaign kind — the manifest's `cmd` (`run`, `sweep`, `fuzz`,
+    /// `dse-run`, ...).
+    pub kind: Option<String>,
+}
+
+impl QueryFilter {
+    pub fn matches(&self, m: &Manifest) -> bool {
+        self.scheduler
+            .as_ref()
+            .is_none_or(|s| *s == m.scheduler)
+            && self.seed.is_none_or(|s| s == m.seed)
+            && self
+                .config_hash
+                .as_ref()
+                .is_none_or(|h| *h == m.config_hash)
+            && self.kind.as_ref().is_none_or(|k| *k == m.cmd)
+    }
+
+    /// Apply the filter, preserving input (index) order.
+    pub fn select<'a>(
+        &self,
+        manifests: &'a [Manifest],
+    ) -> Vec<&'a Manifest> {
+        manifests.iter().filter(|m| self.matches(m)).collect()
+    }
+}
+
+/// Aggregation over one named counter of the selected manifests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    /// Number of matching manifests (ignores the field).
+    Count,
+    /// Mean of the field across matches.
+    Mean,
+    /// Linear-interpolated 95th percentile of the field.
+    P95,
+    /// Maximum of the field across matches.
+    Worst,
+}
+
+impl Agg {
+    pub fn parse(s: &str) -> Result<Agg> {
+        match s {
+            "count" => Ok(Agg::Count),
+            "mean" => Ok(Agg::Mean),
+            "p95" => Ok(Agg::P95),
+            "worst" => Ok(Agg::Worst),
+            other => Err(Error::Config(format!(
+                "unknown aggregation '{other}' (count, mean, p95, worst)"
+            ))),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Agg::Count => "count",
+            Agg::Mean => "mean",
+            Agg::P95 => "p95",
+            Agg::Worst => "worst",
+        }
+    }
+}
+
+/// Reduce `field` (a counter name) across the selection.
+pub fn aggregate(
+    selected: &[&Manifest],
+    field: &str,
+    agg: Agg,
+) -> QueryAggregate {
+    let mut xs: Vec<f64> = selected
+        .iter()
+        .map(|m| m.counters.get(field) as f64)
+        .collect();
+    xs.sort_by(f64::total_cmp);
+    let value = match agg {
+        Agg::Count => selected.len() as f64,
+        Agg::Mean => {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        }
+        Agg::P95 => percentile_sorted(&xs, 0.95),
+        Agg::Worst => xs.last().copied().unwrap_or(0.0),
+    };
+    QueryAggregate {
+        field: field.to_string(),
+        agg: agg.label().to_string(),
+        count: selected.len(),
+        value,
+    }
+}
+
+/// One compact JSON manifest per line — `ds3r query --format jsonl`.
+pub fn render_jsonl(selected: &[&Manifest]) -> String {
+    let mut out = String::new();
+    for m in selected {
+        out.push_str(&m.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Human-scannable ascii table — the default `ds3r query` rendering.
+pub fn render_table(selected: &[&Manifest]) -> String {
+    let rows: Vec<Vec<String>> = selected
+        .iter()
+        .map(|m| {
+            vec![
+                m.key(),
+                m.cmd.clone(),
+                m.scheduler.clone(),
+                m.seed.to_string(),
+                m.config_hash.clone(),
+                m.workload_digest.clone(),
+                m.counters.get("runs").to_string(),
+                m.counters.get("completed_jobs").to_string(),
+            ]
+        })
+        .collect();
+    plot::ascii_table(
+        &[
+            "key",
+            "cmd",
+            "scheduler",
+            "seed",
+            "config",
+            "workload",
+            "runs",
+            "jobs",
+        ],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Counters;
+
+    fn manifest(
+        cmd: &str,
+        scheduler: &str,
+        seed: u64,
+        jobs: u64,
+    ) -> Manifest {
+        let mut counters = Counters::new();
+        counters.add("runs", 1);
+        counters.add("completed_jobs", jobs);
+        Manifest {
+            cmd: cmd.into(),
+            config_hash: format!("hash-{cmd}"),
+            workload_digest: "wd".into(),
+            seed,
+            scheduler: scheduler.into(),
+            git: None,
+            counters,
+            point_keys: Vec::new(),
+            result: Json::Null,
+        }
+    }
+
+    fn corpus() -> Vec<Manifest> {
+        vec![
+            manifest("sweep", "etf", 1, 100),
+            manifest("sweep", "met", 1, 300),
+            manifest("sweep", "etf", 2, 200),
+            manifest("fuzz", "etf", 1, 50),
+        ]
+    }
+
+    #[test]
+    fn filters_compose_and_preserve_order() {
+        let ms = corpus();
+        let all = QueryFilter::default().select(&ms);
+        assert_eq!(all.len(), 4);
+        let etf = QueryFilter {
+            scheduler: Some("etf".into()),
+            ..Default::default()
+        }
+        .select(&ms);
+        assert_eq!(etf.len(), 3);
+        assert_eq!(etf[0].seed, 1);
+        assert_eq!(etf[1].seed, 2);
+        let narrow = QueryFilter {
+            scheduler: Some("etf".into()),
+            seed: Some(1),
+            kind: Some("sweep".into()),
+            ..Default::default()
+        }
+        .select(&ms);
+        assert_eq!(narrow.len(), 1);
+        assert_eq!(narrow[0].counters.get("completed_jobs"), 100);
+        let by_hash = QueryFilter {
+            config_hash: Some("hash-fuzz".into()),
+            ..Default::default()
+        }
+        .select(&ms);
+        assert_eq!(by_hash.len(), 1);
+        assert_eq!(by_hash[0].cmd, "fuzz");
+    }
+
+    #[test]
+    fn aggregations_reduce_counters() {
+        let ms = corpus();
+        let sel = QueryFilter {
+            kind: Some("sweep".into()),
+            ..Default::default()
+        }
+        .select(&ms);
+        let a = aggregate(&sel, "completed_jobs", Agg::Count);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.value, 3.0);
+        let a = aggregate(&sel, "completed_jobs", Agg::Mean);
+        assert_eq!(a.value, 200.0);
+        let a = aggregate(&sel, "completed_jobs", Agg::Worst);
+        assert_eq!(a.value, 300.0);
+        let a = aggregate(&sel, "completed_jobs", Agg::P95);
+        assert!(a.value > 200.0 && a.value <= 300.0, "{}", a.value);
+        // Empty selection is well-defined.
+        let none: Vec<&Manifest> = Vec::new();
+        assert_eq!(aggregate(&none, "runs", Agg::Mean).value, 0.0);
+    }
+
+    #[test]
+    fn agg_parse_rejects_unknown() {
+        assert_eq!(Agg::parse("p95").unwrap(), Agg::P95);
+        assert!(Agg::parse("median").is_err());
+    }
+
+    #[test]
+    fn renderers_cover_every_selected_manifest() {
+        let ms = corpus();
+        let sel = QueryFilter::default().select(&ms);
+        let jsonl = render_jsonl(&sel);
+        assert_eq!(jsonl.lines().count(), 4);
+        for line in jsonl.lines() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(
+                j.get("kind").and_then(Json::as_str),
+                Some(super::super::MANIFEST_KIND)
+            );
+            assert!(j.get("key").is_some());
+            assert!(j.get("counters").is_some());
+        }
+        let table = render_table(&sel);
+        assert!(table.contains("scheduler"), "{table}");
+        assert!(table.contains("hash-fuzz"), "{table}");
+    }
+}

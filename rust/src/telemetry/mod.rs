@@ -64,6 +64,13 @@ pub enum Event {
         cmd: String,
         /// FNV-1a hash of the canonical config JSON (hex).
         config_hash: String,
+        /// FNV-1a digest over every workload *input* — app DAGs, trace
+        /// files, XLA artifacts, scenario/fuzz JSON, the IL policy
+        /// ([`crate::store::workload_digest`]).  Together with
+        /// `config_hash` this makes store keys content-addressed:
+        /// editing a trace file changes the key even though the config
+        /// JSON (which records only the path) does not.
+        workload_digest: String,
         seed: u64,
         scheduler: String,
         /// `git describe --always --dirty` of the working tree, when
@@ -129,6 +136,10 @@ pub enum Event {
         /// Top-ranked scheduler (empty when no standings).
         best: String,
     },
+    /// The experiment store finalized a manifest for this invocation
+    /// (deterministic: the key hashes only config/workload/seed
+    /// identity, so warm and cold reruns emit identical bytes).
+    ManifestWritten { cmd: String, key: String },
     /// A library diagnostic that previously went to `eprintln!`
     /// (deterministic: it reflects simulated behaviour, not wall time).
     Diagnostic { component: String, message: String },
@@ -149,6 +160,7 @@ impl Event {
             Event::BenchRecord { .. } => "bench_record",
             Event::FuzzCase { .. } => "fuzz_case",
             Event::TournamentSummary { .. } => "tournament_summary",
+            Event::ManifestWritten { .. } => "manifest_written",
             Event::Diagnostic { .. } => "diagnostic",
             Event::Span { .. } => "span",
         }
@@ -171,9 +183,20 @@ impl Event {
         let mut j = Json::obj();
         j.set("event", Json::Str(self.kind().into()));
         match self {
-            Event::RunStarted { cmd, config_hash, seed, scheduler, git } => {
+            Event::RunStarted {
+                cmd,
+                config_hash,
+                workload_digest,
+                seed,
+                scheduler,
+                git,
+            } => {
                 j.set("cmd", Json::Str(cmd.clone()))
                     .set("config_hash", Json::Str(config_hash.clone()))
+                    .set(
+                        "workload_digest",
+                        Json::Str(workload_digest.clone()),
+                    )
                     .set("seed", crate::util::json::u64_to_json(*seed))
                     .set("scheduler", Json::Str(scheduler.clone()))
                     .set(
@@ -262,6 +285,10 @@ impl Event {
                     .set("violations", Json::Num(*violations as f64))
                     .set("best", Json::Str(best.clone()));
             }
+            Event::ManifestWritten { cmd, key } => {
+                j.set("cmd", Json::Str(cmd.clone()))
+                    .set("key", Json::Str(key.clone()));
+            }
             Event::Diagnostic { component, message } => {
                 j.set("component", Json::Str(component.clone()))
                     .set("message", Json::Str(message.clone()));
@@ -348,6 +375,27 @@ impl Counters {
             j.set(k, Json::Num(v as f64));
         }
         j
+    }
+
+    /// Inverse of [`Counters::to_json`] — the experiment store
+    /// round-trips per-point and per-campaign counter registries
+    /// through manifest files.
+    pub fn from_json(j: &Json) -> Result<Counters> {
+        let obj = j.as_obj().ok_or_else(|| {
+            crate::Error::Json("counters: expected object".into())
+        })?;
+        let mut c = Counters::new();
+        for (k, v) in obj {
+            let n = crate::util::json::u64_from_json(v).ok_or_else(
+                || {
+                    crate::Error::Json(format!(
+                        "counters: non-integer value at key '{k}'"
+                    ))
+                },
+            )?;
+            c.add(k, n);
+        }
+        Ok(c)
     }
 }
 
@@ -724,6 +772,7 @@ mod tests {
         let ev = Event::RunStarted {
             cmd: "sweep".into(),
             config_hash: config_hash("{}"),
+            workload_digest: config_hash("workload"),
             seed: 42,
             scheduler: "etf".into(),
             git: None,
@@ -731,8 +780,48 @@ mod tests {
         let a = ev.to_json(false).to_string();
         let b = ev.to_json(false).to_string();
         assert_eq!(a, b);
-        assert!(a.contains("\"event\": \"run_started\""), "{a}");
-        assert!(a.contains("\"git\": null"), "{a}");
+        // Assert on parsed structure, not serialized spelling.
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(
+            j.get("event").and_then(Json::as_str),
+            Some("run_started"),
+            "{a}"
+        );
+        assert_eq!(j.get("git"), Some(&Json::Null), "{a}");
+        assert_eq!(
+            j.get("workload_digest").and_then(Json::as_str),
+            Some(config_hash("workload").as_str()),
+            "{a}"
+        );
+    }
+
+    #[test]
+    fn counters_json_round_trip_is_exact() {
+        let mut c = Counters::new();
+        c.add("runs", 3);
+        c.add("completed_jobs", 120);
+        let back =
+            Counters::from_json(&Json::parse(&c.to_json().to_string())
+                .unwrap())
+            .unwrap();
+        assert_eq!(c, back);
+        assert!(Counters::from_json(&Json::Null).is_err());
+        assert!(Counters::from_json(
+            &Json::parse(r#"{"x": 1.5}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn manifest_written_is_deterministic() {
+        let ev = Event::ManifestWritten {
+            cmd: "sweep".into(),
+            key: "abc".into(),
+        };
+        assert!(ev.is_deterministic());
+        assert_eq!(ev.kind(), "manifest_written");
+        let j = ev.to_json(false);
+        assert_eq!(j.get("key").and_then(Json::as_str), Some("abc"));
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Integration tests for the experiment store (README §Experiment
+//! store & querying): manifest JSON round-trips, warm-store reruns
+//! that skip every simulation while reproducing the report and the
+//! default telemetry stream byte-for-byte, resuming a partially
+//! persisted sweep, and thread-count-independent store contents.
+//!
+//! Every test uses a *local* `Telemetry` handle and its own temp
+//! store directory — cargo runs integration tests in parallel and
+//! both the global dispatcher and the global store are process state.
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::app::AppGraph;
+use ds3r::config::SimConfig;
+use ds3r::coordinator::{run_sweep_stored, SweepPoint, SweepResult};
+use ds3r::platform::Platform;
+use ds3r::store::{
+    workload_digest, ExperimentStore, Manifest, StoreCtx, StoreSink,
+};
+use ds3r::telemetry::{
+    Counters, Event, FanoutSink, MemSink, Sink, Telemetry,
+};
+use ds3r::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn apps() -> Vec<AppGraph> {
+    vec![suite::wifi_tx(WifiParams { symbols: 2 })]
+}
+
+fn base_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.max_jobs = 30;
+    cfg.warmup_jobs = 3;
+    cfg.max_sim_us = 5_000_000.0;
+    cfg
+}
+
+fn grid() -> Vec<SweepPoint> {
+    let mut pts = Vec::new();
+    for sched in ["etf", "met"] {
+        for rate in [2.0, 4.0] {
+            pts.push(SweepPoint {
+                scheduler: sched.into(),
+                rate_per_ms: rate,
+                seed: 7,
+            });
+        }
+    }
+    pts
+}
+
+fn temp_store(tag: &str) -> (PathBuf, Arc<ExperimentStore>) {
+    let dir =
+        std::env::temp_dir().join(format!("ds3r_int_store_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ExperimentStore::open(&dir).unwrap();
+    (dir, store)
+}
+
+fn json_rows(rs: &[SweepResult]) -> Vec<String> {
+    rs.iter().map(|r| r.to_json().to_string()).collect()
+}
+
+/// One full campaign against `store`: run_started -> stored sweep ->
+/// run_finished (so the sink finalizes a manifest), capturing the
+/// default (deterministic, non-timing) event stream.
+fn campaign(
+    store: &Arc<ExperimentStore>,
+    threads: usize,
+) -> (String, Vec<SweepResult>, Counters) {
+    let platform = Platform::table2_soc();
+    let apps = apps();
+    let cfg = base_cfg();
+    let wd = workload_digest(&cfg, &apps, &[]);
+    let mem = Arc::new(MemSink::new());
+    let sinks: Vec<Arc<dyn Sink>> =
+        vec![mem.clone(), Arc::new(StoreSink::new(store.clone()))];
+    let tel = Telemetry::new(Arc::new(FanoutSink::new(sinks)));
+    tel.emit(|| Event::RunStarted {
+        cmd: "sweep".into(),
+        config_hash: "cfg-test".into(),
+        seed: cfg.seed,
+        scheduler: cfg.scheduler.clone(),
+        workload_digest: wd.clone(),
+        git: None,
+    });
+    let ctx = StoreCtx { store: store.clone(), workload_digest: wd };
+    let (results, counters) = run_sweep_stored(
+        &platform,
+        &apps,
+        &cfg,
+        &grid(),
+        threads,
+        &tel,
+        Some(&ctx),
+    )
+    .unwrap();
+    tel.emit(|| Event::RunFinished {
+        cmd: "sweep".into(),
+        counters: counters.clone(),
+        wall_s: 0.0,
+    });
+    (mem.dump(), results, counters)
+}
+
+/// `(relative path, contents)` of every file under `dir`, sorted —
+/// the full store fingerprint.
+fn tree(dir: &Path) -> Vec<(String, String)> {
+    fn walk(
+        root: &Path,
+        dir: &Path,
+        out: &mut Vec<(String, String)>,
+    ) {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(root, &p, out);
+            } else {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .into_owned();
+                out.push((rel, std::fs::read_to_string(&p).unwrap()));
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn manifest_round_trips_through_json() {
+    let mut counters = Counters::new();
+    counters.add("runs", 4);
+    counters.add("completed_jobs", 120);
+    let m = Manifest {
+        cmd: "sweep".into(),
+        config_hash: "abc123".into(),
+        workload_digest: "wd0".into(),
+        seed: 7,
+        scheduler: "etf".into(),
+        git: Some("v1-3-gdeadbee".into()),
+        counters,
+        point_keys: vec!["k1".into(), "k2".into()],
+        result: Json::parse(r#"{"points": 4}"#).unwrap(),
+    };
+    let back = Manifest::from_json(&m.to_json()).unwrap();
+    assert_eq!(m, back);
+    // ... and through actual serialized text, the on-disk format.
+    let text = m.to_json().to_string_pretty();
+    let again = Manifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(m, again);
+    assert_eq!(m.key(), again.key());
+}
+
+#[test]
+fn warm_rerun_skips_every_simulation_and_reproduces_output() {
+    let (dir, store) = temp_store("warm");
+    let n = grid().len() as u64;
+    let (s_cold, r_cold, c_cold) = campaign(&store, 2);
+    assert_eq!(store.session_hits(), 0);
+    assert_eq!(store.session_misses(), n);
+    assert!(store.last_manifest_key().is_some());
+    // A fresh handle over the same directory: every point must come
+    // from the cache, with report, counters and the default stream
+    // unchanged by a byte.
+    let store2 = ExperimentStore::open(&dir).unwrap();
+    let (s_warm, r_warm, c_warm) = campaign(&store2, 8);
+    assert_eq!(store2.session_misses(), 0, "a warm rerun simulated");
+    assert_eq!(store2.session_hits(), n);
+    assert_eq!(json_rows(&r_cold), json_rows(&r_warm));
+    assert_eq!(c_cold, c_warm);
+    assert_eq!(s_cold, s_warm, "default stream must not see the cache");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn partial_store_resume_completes_only_missing_points() {
+    let (dir, store) = temp_store("resume");
+    let platform = Platform::table2_soc();
+    let apps = apps();
+    let cfg = base_cfg();
+    let wd = workload_digest(&cfg, &apps, &[]);
+    let tel = Telemetry::disabled();
+    let all = grid();
+    // Simulate a killed campaign: only the first half of the grid got
+    // persisted before the process died.
+    let ctx =
+        StoreCtx { store: store.clone(), workload_digest: wd.clone() };
+    run_sweep_stored(
+        &platform,
+        &apps,
+        &cfg,
+        &all[..2],
+        2,
+        &tel,
+        Some(&ctx),
+    )
+    .unwrap();
+    assert_eq!(store.session_misses(), 2);
+    // Resume over the full grid with a fresh handle: the stored half
+    // hits, only the missing half simulates, and the merged report
+    // equals an uncached full run.
+    let store2 = ExperimentStore::open(&dir).unwrap();
+    let ctx2 = StoreCtx { store: store2.clone(), workload_digest: wd };
+    let (resumed, rc) = run_sweep_stored(
+        &platform,
+        &apps,
+        &cfg,
+        &all,
+        2,
+        &tel,
+        Some(&ctx2),
+    )
+    .unwrap();
+    assert_eq!(store2.session_hits(), 2);
+    assert_eq!(store2.session_misses(), 2);
+    let (cold, cc) =
+        run_sweep_stored(&platform, &apps, &cfg, &all, 2, &tel, None)
+            .unwrap();
+    assert_eq!(json_rows(&resumed), json_rows(&cold));
+    assert_eq!(rc, cc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_contents_are_identical_for_1_and_8_threads() {
+    let (d1, s1) = temp_store("threads1");
+    let (d8, s8) = temp_store("threads8");
+    campaign(&s1, 1);
+    campaign(&s8, 8);
+    let t1 = tree(&d1);
+    let t8 = tree(&d8);
+    assert!(!t1.is_empty());
+    assert_eq!(t1, t8, "store contents depend on thread count");
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d8);
+}
+
+#[test]
+fn verify_and_gc_pass_on_a_freshly_written_store() {
+    let (dir, store) = temp_store("verify");
+    campaign(&store, 2);
+    let v = store.verify().unwrap();
+    assert!(v.ok(), "mismatches: {:?}", v.mismatches);
+    assert!(v.manifests_checked >= 1);
+    assert_eq!(v.points_checked, grid().len());
+    let gc = store.gc().unwrap();
+    assert_eq!(gc.dropped_points, 0);
+    assert_eq!(gc.dropped_rows, 0);
+    assert_eq!(gc.kept_points, grid().len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
