@@ -47,6 +47,29 @@ struct KernelResult {
     events: u64,
     median_s: f64,
     sched_overhead_us: f64,
+    /// Self-profile of the measured run's wall clock (README
+    /// §Observability): fraction spent in scheduler decisions, the
+    /// residual event loop, thermal/power integration, and job
+    /// generation.  Fractions of the four buckets sum to 1.
+    profile_fracs: [f64; 4],
+}
+
+/// Wall-clock bucket names, in `SimReport` profile order.
+const PROFILE_BUCKETS: [&str; 4] = ["sched", "loop", "thermal", "jobgen"];
+
+/// Fold a report's self-profile counters into per-bucket fractions.
+fn profile_fracs(r: &ds3r::stats::SimReport) -> [f64; 4] {
+    let ns = [
+        r.sched_wall_ns,
+        r.loop_wall_ns,
+        r.thermal_wall_ns,
+        r.jobgen_wall_ns,
+    ];
+    let total: u64 = ns.iter().sum();
+    if total == 0 {
+        return [0.0; 4];
+    }
+    ns.map(|b| b as f64 / total as f64)
 }
 
 fn main() {
@@ -92,6 +115,7 @@ fn main() {
             events: r.events_processed,
             median_s: st.median_s,
             sched_overhead_us: r.sched_overhead_us(),
+            profile_fracs: profile_fracs(&r),
         });
     }
     let tel = bench_util::telemetry_from_env();
@@ -102,6 +126,16 @@ fn main() {
             value: k.events_per_s,
             unit: "events/s".into(),
         });
+        for (bucket, frac) in
+            PROFILE_BUCKETS.iter().zip(k.profile_fracs)
+        {
+            tel.emit(|| TelEvent::BenchRecord {
+                bench: "perf_hotpath".into(),
+                name: format!("kernel.{}.profile.{bucket}", k.name),
+                value: frac,
+                unit: "frac".into(),
+            });
+        }
     }
     tel.flush();
     let record = write_bench_json(&kernels, smoke, jobs, runs);
@@ -426,6 +460,13 @@ fn write_bench_json(
                                 "sched_overhead_us",
                                 Json::Num(k.sched_overhead_us),
                             );
+                        let mut prof = Json::obj();
+                        for (bucket, frac) in
+                            PROFILE_BUCKETS.iter().zip(k.profile_fracs)
+                        {
+                            prof.set(bucket, Json::Num(frac));
+                        }
+                        e.set("profile", prof);
                         e
                     })
                     .collect(),

@@ -13,6 +13,8 @@
 //! * `fuzz`       — seeded scenario fuzzing: `run` the
 //!   scheduler-robustness tournament with invariant oracles, `replay`
 //!   a minimized repro, render a saved `report` (see [`crate::fuzz`]).
+//! * `trace`      — render (`show`) or compare (`diff`) time-series
+//!   trace artifacts recorded with `--probe` (see [`crate::probe`]).
 //! * `reproduce`  — regenerate the paper's tables/figures
 //!   (`table1`, `table2`, `fig2`, `fig3`, `all`).
 //! * `validate`   — analytical model vs fine-grained reference
@@ -341,6 +343,18 @@ impl Sink for StderrRenderSink {
                     .unwrap_or_default();
                 eprintln!("learn round {round}: {samples} samples{agree}");
             }
+            // Cache economics render unconditionally (not
+            // progress-gated): CI's store smoke greps this exact line,
+            // and it must not enter deterministic JSONL streams (warm
+            // and cold reruns differ), hence event + render split.
+            Event::StoreStats { hits, misses, .. } => {
+                let total = hits + misses;
+                if total > 0 {
+                    eprintln!(
+                        "store: {hits}/{total} points served from cache"
+                    );
+                }
+            }
             _ => {}
         }
     }
@@ -471,27 +485,116 @@ fn store_result(pairs: &[(&str, f64)]) {
     }
 }
 
-/// Post-run store bookkeeping: report cache economics on stderr and
-/// emit [`Event::ManifestWritten`] once the sink has finalized the
-/// manifest — call after [`emit_run_finished`].
+/// Post-run store bookkeeping: emit the cache-economics
+/// [`Event::StoreStats`] (rendered to stderr by the CLI sink; captured
+/// in JSONL only under `--telemetry-timing`, since hit/miss rates
+/// depend on prior store state) and [`Event::ManifestWritten`] once
+/// the sink has finalized the manifest — call after
+/// [`emit_run_finished`].
 fn finish_store(tel: &Telemetry, cmd: &'static str) {
     let Some(store) = crate::store::global() else {
         return;
     };
     let (hits, misses) = (store.session_hits(), store.session_misses());
     if hits + misses > 0 {
-        eprintln!(
-            "store: {hits}/{} points served from cache",
-            hits + misses
-        );
+        tel.emit(|| Event::StoreStats {
+            cmd: cmd.to_string(),
+            hits,
+            misses,
+        });
     }
     if let Some(key) = store.last_manifest_key() {
         tel.emit(|| Event::ManifestWritten {
             cmd: cmd.to_string(),
             key,
         });
-        tel.flush();
     }
+    tel.flush();
+}
+
+// ---------------------------------------------------------------------------
+// Probe wiring (--probe / --probe-budget) and self-profiling
+// ---------------------------------------------------------------------------
+
+/// The `--probe <path|->` target, when probing was requested.
+fn probe_target(args: &Args) -> Option<String> {
+    args.has("probe").then(|| args.str_or("probe", "-"))
+}
+
+/// Probe recorder configuration from `--probe-budget`.
+fn probe_config(args: &Args) -> Result<crate::probe::ProbeConfig> {
+    Ok(crate::probe::ProbeConfig::with_budget(
+        args.usize_or("probe-budget", crate::probe::DEFAULT_BUDGET)?,
+    ))
+}
+
+/// Write (or inline, for `-`) one probe artifact; returns the text to
+/// append to stdout.
+fn write_trace_json(
+    target: &str,
+    j: &crate::util::json::Json,
+) -> Result<String> {
+    if target == "-" {
+        Ok(format!("{}\n", j.to_string_pretty()))
+    } else {
+        std::fs::write(target, j.to_string_pretty())?;
+        Ok(format!("wrote probe trace to {target}\n"))
+    }
+}
+
+/// Link a probe trace into the experiment store as a content-addressed
+/// `trace` point: keyed like every point (`point_key(config_hash,
+/// workload_digest)`) but under a `trace:`-prefixed config identity so
+/// it can never collide with the run's result point, and recorded on
+/// the pending manifest so `store gc` keeps it and `store verify`
+/// re-derives its key.  Call before [`emit_run_finished`] (the store
+/// sink drains session points when the run-finished event lands).
+fn store_trace_point(
+    label: &str,
+    cfg: &SimConfig,
+    workload_digest: &str,
+    trace: &crate::probe::TraceSeries,
+) {
+    let Some(store) = crate::store::global() else {
+        return;
+    };
+    let ch = telemetry::config_hash(&format!(
+        "trace:{label}:{}",
+        cfg.to_json().to_string()
+    ));
+    let key = crate::store::point_key(&ch, workload_digest);
+    let entry = crate::store::PointEntry {
+        kind: "trace".into(),
+        key: key.clone(),
+        config_hash: ch,
+        workload_digest: workload_digest.to_string(),
+        result: trace.to_json(),
+        counters: Counters::new(),
+    };
+    if let Err(e) = store.put_point(&entry) {
+        telemetry::diag("cli.probe", || {
+            format!("failed to store trace point {key}: {e}")
+        });
+        return;
+    }
+    store.record_points(&[key]);
+}
+
+/// Emit the wall-clock self-profile of one finished run (a
+/// timing-gated event: never part of deterministic streams).
+fn emit_profile(
+    tel: &Telemetry,
+    cmd: &'static str,
+    r: &crate::stats::SimReport,
+) {
+    tel.emit(|| Event::Profile {
+        cmd: cmd.to_string(),
+        build_wall_ns: r.build_wall_ns,
+        sched_wall_ns: r.sched_wall_ns,
+        thermal_wall_ns: r.thermal_wall_ns,
+        jobgen_wall_ns: r.jobgen_wall_ns,
+        loop_wall_ns: r.loop_wall_ns,
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -526,7 +629,18 @@ pub fn cmd_run(args: &Args) -> Result<String> {
     let t0 = SpanTimer::start();
     let wd = store_digest(&cfg, &apps);
     emit_run_started(&tel, "run", &cfg, &wd);
-    let report = Simulation::build(&platform, &apps, &cfg)?.run();
+    let mut sim = Simulation::build(&platform, &apps, &cfg)?;
+    let probe_out = probe_target(args);
+    if probe_out.is_some() {
+        sim.attach_probe(probe_config(args)?);
+    }
+    let (report, trace) = sim.run_with_trace();
+    emit_profile(&tel, "run", &report);
+    let mut probe_text = String::new();
+    if let (Some(target), Some(trace)) = (&probe_out, &trace) {
+        probe_text = write_trace_json(target, &trace.to_json())?;
+        store_trace_point("", &cfg, &wd, trace);
+    }
     store_result(&[
         ("completed_jobs", report.completed_jobs as f64),
         ("injected_jobs", report.injected_jobs as f64),
@@ -534,6 +648,7 @@ pub fn cmd_run(args: &Args) -> Result<String> {
     emit_run_finished(&tel, "run", Counters::from_report(&report), t0);
     finish_store(&tel, "run");
     let mut out = report.summary();
+    out.push_str(&probe_text);
     if cfg.capture_gantt {
         let hi = report
             .gantt
@@ -745,14 +860,38 @@ fn cmd_scenario_sweep(args: &Args) -> Result<String> {
     let t0 = SpanTimer::start();
     let wd = store_digest(&cfg, &apps);
     emit_run_started(&tel, "scenario-sweep", &cfg, &wd);
-    let (results, counters) = coordinator::run_scenario_sweep_with(
-        &platform, &apps, &cfg, &scenarios, threads, &tel,
-    )?;
+    let probe_out = probe_target(args);
+    let (results, counters, traces) = if probe_out.is_some() {
+        coordinator::run_scenario_sweep_probed(
+            &platform,
+            &apps,
+            &cfg,
+            &scenarios,
+            threads,
+            &tel,
+            &probe_config(args)?,
+        )?
+    } else {
+        let (results, counters) = coordinator::run_scenario_sweep_with(
+            &platform, &apps, &cfg, &scenarios, threads, &tel,
+        )?;
+        (results, counters, Vec::new())
+    };
+    let mut probe_text = String::new();
+    if let Some(target) = &probe_out {
+        probe_text = write_trace_json(
+            target,
+            &crate::probe::traces_to_json(&traces),
+        )?;
+        for t in &traces {
+            store_trace_point(&t.scenario, &cfg, &wd, t);
+        }
+    }
     store_result(&[("scenarios", results.len() as f64)]);
     emit_run_finished(&tel, "scenario-sweep", counters, t0);
     finish_store(&tel, "scenario-sweep");
 
-    let mut out = String::new();
+    let mut out = probe_text;
     let mut rows = Vec::new();
     for r in &results {
         rows.push(vec![
@@ -1784,6 +1923,15 @@ fn cmd_fuzz_replay(args: &Args) -> Result<String> {
     } else {
         out.push_str("verdict: DIVERGED from the recorded violations\n");
     }
+    // Render what the failing run looked like, when the tournament
+    // attached a probe trace to the repro.
+    if let Some(trace) = &repro.trace {
+        out.push_str("recorded failing-run trace:\n");
+        out.push_str(&crate::probe::render(
+            trace,
+            args.usize_or("width", 72)?,
+        ));
+    }
     Ok(out)
 }
 
@@ -1970,6 +2118,71 @@ pub fn cmd_store(args: &Args) -> Result<String> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// trace: probe-trace viewer and differ
+// ---------------------------------------------------------------------------
+
+/// `ds3r trace <show|diff>` — render or compare probe trace artifacts
+/// (plain [`crate::probe::TRACE_KIND`] files or
+/// [`crate::probe::TRACE_SET_KIND`] bundles from scenario sweeps).
+pub fn cmd_trace(args: &Args) -> Result<String> {
+    let sub = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("show");
+    let width = args.usize_or("width", 72)?;
+    let load = |pos: usize,
+                usage: &str|
+     -> Result<Vec<crate::probe::TraceSeries>> {
+        let path = args.positional.get(pos).ok_or_else(|| {
+            Error::Config(format!("trace {usage}"))
+        })?;
+        crate::probe::traces_from_json(
+            &crate::util::json::Json::parse_file(std::path::Path::new(
+                path,
+            ))?,
+        )
+    };
+    match sub {
+        "show" => {
+            let traces = load(2, "show <trace.json>")?;
+            let mut out = String::new();
+            for t in &traces {
+                out.push_str(&crate::probe::render(t, width));
+            }
+            Ok(out)
+        }
+        "diff" => {
+            let a = load(2, "diff <a.json> <b.json>")?;
+            let b = load(3, "diff <a.json> <b.json>")?;
+            let mut out = String::new();
+            if a.len() != b.len() {
+                out.push_str(&format!(
+                    "trace count differs: {} vs {}\n",
+                    a.len(),
+                    b.len()
+                ));
+            }
+            for (ta, tb) in a.iter().zip(&b) {
+                if a.len() > 1 {
+                    out.push_str(&format!(
+                        "[{} vs {}]\n",
+                        if ta.scenario.is_empty() { "-" } else { &ta.scenario },
+                        if tb.scenario.is_empty() { "-" } else { &tb.scenario },
+                    ));
+                }
+                let (txt, _differing) = crate::probe::diff(ta, tb);
+                out.push_str(&txt);
+            }
+            Ok(out)
+        }
+        other => Err(Error::Config(format!(
+            "unknown trace subcommand '{other}' (show, diff)"
+        ))),
+    }
+}
+
 pub const USAGE: &str = "\
 ds3r — DSSoC simulation framework (DS3 reproduction)
 
@@ -1980,10 +2193,12 @@ USAGE:
                  [--record-trace out.json] [--trace-file in.json]
                  [--il-policy policy.json] [--scenario pe-failure|file.json]
                  [--platform table2|zcu102] [--config file.json] [--json]
+                 [--probe trace.json|-] [--probe-budget 512]
   ds3r sweep     [--scheds met,etf,ilp] [--rates 1:8:1] [--threads N]
                  [--csv out.csv] (+ run flags)
   ds3r scenario  list | show <name> | export [--out dir] |
-                 sweep [--scenarios all|a,b] (+ run flags)
+                 sweep [--scenarios all|a,b] [--probe traces.json|-]
+                 (+ run flags)
   ds3r dse       run    [--dse-config file.json] [--objectives latency,energy]
                         [--population 16] [--generations 13]
                         [--algorithm nsga2|random] [--search-seed 7]
@@ -2015,6 +2230,8 @@ USAGE:
                  [--config-hash h] [--format table|jsonl]
                  [--agg count|mean|p95|worst] [--field completed_jobs]
   ds3r store     gc | verify  --store dir [--json]
+  ds3r trace     show <trace.json> [--width 72] |
+                 diff <a.json> <b.json>
   ds3r list
 
 OBSERVABILITY (any subcommand):
@@ -2041,6 +2258,19 @@ OBSERVABILITY (any subcommand):
                          byte-identical with a cold run
   --log-format json|text render library diagnostics as JSONL or text
                          (default text)
+  --probe <path|->       (run, scenario sweep) record bounded in-sim
+                         time series — per-PE util/frequency/
+                         availability, per-node temperature, SoC power,
+                         ready-queue depth, scheduler invocations,
+                         phase markers — as a schema-versioned trace
+                         artifact ('-' prints it).  Deterministic:
+                         byte-identical for any --threads value; with
+                         --store the trace is linked into the manifest
+                         as a content-addressed 'trace' point.  Render
+                         or compare with 'ds3r trace show|diff'.
+  --probe-budget <n>     max kept samples per probe channel (default
+                         512); longer runs downsample by stride
+                         doubling, always preserving both endpoints
 ";
 
 #[cfg(test)]

@@ -578,6 +578,51 @@ pub fn run_scenario_sweep_with(
     threads: usize,
     tel: &Telemetry,
 ) -> Result<(Vec<ScenarioResult>, Counters)> {
+    run_scenario_sweep_inner(
+        platform, apps, base, scenarios, threads, tel, None,
+    )
+    .map(|(res, counters, _)| (res, counters))
+}
+
+/// [`run_scenario_sweep_with`] with a time-series probe attached to
+/// every point: returns one sealed [`crate::probe::TraceSeries`] per
+/// scenario **in input order**, so the artifact is byte-identical
+/// across thread counts.
+pub fn run_scenario_sweep_probed(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    scenarios: &[Scenario],
+    threads: usize,
+    tel: &Telemetry,
+    probe: &crate::probe::ProbeConfig,
+) -> Result<(Vec<ScenarioResult>, Counters, Vec<crate::probe::TraceSeries>)>
+{
+    let (res, counters, traces) = run_scenario_sweep_inner(
+        platform,
+        apps,
+        base,
+        scenarios,
+        threads,
+        tel,
+        Some(probe),
+    )?;
+    Ok((res, counters, traces.into_iter().flatten().collect()))
+}
+
+fn run_scenario_sweep_inner(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    scenarios: &[Scenario],
+    threads: usize,
+    tel: &Telemetry,
+    probe: Option<&crate::probe::ProbeConfig>,
+) -> Result<(
+    Vec<ScenarioResult>,
+    Counters,
+    Vec<Option<crate::probe::TraceSeries>>,
+)> {
     let setup = SimSetup::new(platform, apps, base)?;
     let setup = &setup;
     let progress = GridProgress::start(scenarios.len());
@@ -589,6 +634,11 @@ pub fn run_scenario_sweep_with(
             let mut cfg = base.clone();
             cfg.scenario = Some(sc.clone());
             let worker = SimWorker::obtain(slot, setup, &cfg)?;
+            // A probe records exactly one run (reset drops it), so
+            // each point re-attaches after obtaining its worker.
+            if let Some(pc) = probe {
+                worker.attach_probe(pc.clone());
+            }
             // Borrow the report in place: cloning `phases` into the
             // result lets the worker keep its buffers (latency vectors,
             // phase list) for capacity-retaining recycle on the next
@@ -607,15 +657,22 @@ pub fn run_scenario_sweep_with(
                 peak_temp_c: r.peak_temp_c,
                 phases: r.phases.clone(),
             };
+            let trace = worker.take_probe_trace();
             progress.emit_done(tel);
-            Ok(res)
+            Ok((res, trace))
         },
     );
-    let results = collect_results(
+    let pairs = collect_results(
         results,
         |i| scenarios[i].name.clone(),
         "scenario sweep failures",
     )?;
+    let mut results = Vec::with_capacity(pairs.len());
+    let mut traces = Vec::with_capacity(pairs.len());
+    for (res, trace) in pairs {
+        results.push(res);
+        traces.push(trace);
+    }
     // Per-phase events are deterministic, so they are emitted here —
     // post-collection, in input order, from the calling thread — never
     // concurrently from the pool.
@@ -627,7 +684,7 @@ pub fn run_scenario_sweep_with(
             });
         }
     }
-    Ok((results, counters))
+    Ok((results, counters, traces))
 }
 
 /// Build the Figure-3 point grid: every scheduler at every rate.

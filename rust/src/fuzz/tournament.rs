@@ -479,6 +479,11 @@ fn rank(schedulers: &[String], cells: &[CellScore]) -> Vec<SchedStanding> {
 // Shrinking + replayable repros
 // ---------------------------------------------------------------------------
 
+/// Per-channel sample budget for the trace embedded in a [`Repro`]:
+/// repro files are meant to be small, pasteable artifacts, so keep the
+/// picture coarse (the full-resolution run is one `replay` away).
+const REPRO_TRACE_BUDGET: usize = 128;
+
 /// A minimized, replayable failure: the shrunk scenario plus every
 /// config field [`case_config`] derives a run from, and the verdict the
 /// minimized run produced.  [`replay`] re-executes it and must land on
@@ -497,6 +502,11 @@ pub struct Repro {
     /// Full verdict of the minimized scenario.
     pub violations: Vec<(String, String)>,
     pub scenario: Scenario,
+    /// Downsampled probe trace of the minimized failing run, so
+    /// `fuzz replay` can render what the simulator was doing when the
+    /// oracle tripped.  Absent in repros written before the probe
+    /// subsystem existed.
+    pub trace: Option<crate::probe::TraceSeries>,
 }
 
 impl Repro {
@@ -531,7 +541,14 @@ impl Repro {
                         .collect(),
                 ),
             )
-            .set("scenario", self.scenario.to_json());
+            .set("scenario", self.scenario.to_json())
+            .set(
+                "trace",
+                match &self.trace {
+                    Some(t) => t.to_json(),
+                    None => Json::Null,
+                },
+            );
         j
     }
 
@@ -569,6 +586,10 @@ impl Repro {
                     Error::Config("repro missing 'scenario'".into())
                 })?,
             )?,
+            trace: match j.get("trace") {
+                Some(Json::Null) | None => None,
+                Some(t) => Some(crate::probe::TraceSeries::from_json(t)?),
+            },
         })
     }
 
@@ -593,10 +614,45 @@ fn run_case_violations(
     rate: f64,
     inject_label: Option<&str>,
 ) -> Result<Vec<Violation>> {
+    run_case_violations_probed(
+        setup,
+        slot,
+        sched,
+        scenario,
+        sim_seed,
+        jobs,
+        rate,
+        inject_label,
+        None,
+    )
+    .map(|(v, _)| v)
+}
+
+/// [`run_case_violations`] plus an optional probe: when `probe` is
+/// given the run records a bounded trace (util / temperature / power /
+/// queue depth) which is returned alongside the verdict.  Probing does
+/// not perturb the verdict — the recorder only observes.
+#[allow(clippy::too_many_arguments)]
+fn run_case_violations_probed(
+    setup: &SimSetup,
+    slot: &mut Option<SimWorker>,
+    sched: &str,
+    scenario: &Scenario,
+    sim_seed: u64,
+    jobs: usize,
+    rate: f64,
+    inject_label: Option<&str>,
+    probe: Option<&crate::probe::ProbeConfig>,
+) -> Result<(Vec<Violation>, Option<crate::probe::TraceSeries>)> {
     let cfg = case_config(sched, scenario, sim_seed, jobs, rate);
     let worker = SimWorker::obtain(slot, setup, &cfg)?;
+    if let Some(pc) = probe {
+        worker.attach_probe(pc.clone());
+    }
     let report = worker.run(setup);
-    Ok(check_cell(report, &cfg, scenario, inject_label))
+    let violations = check_cell(report, &cfg, scenario, inject_label);
+    let trace = worker.take_probe_trace();
+    Ok((violations, trace))
 }
 
 /// Greedy event-deletion shrink: repeatedly drop any event whose
@@ -649,7 +705,9 @@ fn shrink_and_describe(
             break;
         }
     }
-    let verdict = run_case_violations(
+    // Re-run the minimized scenario once more with a small probe
+    // attached so the repro carries a picture of the failing run.
+    let (verdict, trace) = run_case_violations_probed(
         setup,
         slot,
         sched,
@@ -658,6 +716,7 @@ fn shrink_and_describe(
         fuzz.jobs,
         rate,
         inject_label,
+        Some(&crate::probe::ProbeConfig::with_budget(REPRO_TRACE_BUDGET)),
     )?;
     Ok(Repro {
         scheduler: sched.to_string(),
@@ -673,6 +732,7 @@ fn shrink_and_describe(
             .map(|v| (v.oracle, v.detail))
             .collect(),
         scenario: cur,
+        trace,
     })
 }
 

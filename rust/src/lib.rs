@@ -77,6 +77,7 @@ pub mod learn;
 pub mod noc;
 pub mod platform;
 pub mod power;
+pub mod probe;
 pub mod rng;
 pub mod runtime;
 pub mod scenario;

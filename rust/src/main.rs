@@ -16,6 +16,7 @@ fn main() {
         "fuzz" => cli::cmd_fuzz(&args),
         "reproduce" => cli::cmd_reproduce(&args),
         "validate" => cli::cmd_validate(&args),
+        "trace" => cli::cmd_trace(&args),
         "query" => cli::cmd_query(&args),
         "store" => cli::cmd_store(&args),
         "list" => Ok(cli::cmd_list()),

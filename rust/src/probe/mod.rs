@@ -1,0 +1,955 @@
+//! In-simulation time-series probes: bounded, deterministic traces of
+//! power, temperature, utilization, and scheduler activity.
+//!
+//! The paper's pitch is that DS3 makes *temperature and power
+//! evaluation over seconds-to-minutes of workload* tractable; the
+//! scalar aggregates in [`crate::stats::SimReport`] collapse exactly
+//! the trajectories that argument rests on.  A [`ProbeRecorder`]
+//! attaches to a [`crate::sim::SimWorker`] and samples
+//!
+//! * per-PE utilization / effective frequency / availability,
+//!   ready-queue depth, and cumulative scheduler invocations at every
+//!   DTPM epoch boundary, and
+//! * per-thermal-node temperature and SoC power at every integrated
+//!   epoch (riding `account_epoch`, the one accounting point shared by
+//!   the lazy flush lane, the eager lane, and the device lane — so a
+//!   probed lazy run records **bit-identical** samples to an eager
+//!   one),
+//!
+//! plus phase markers from scenario timelines.
+//!
+//! ## Determinism contract
+//!
+//! A trace is a pure function of (config, seed): no wall-clock field
+//! enters [`TraceSeries`], sampling happens at simulated-time points
+//! that exist identically on every lane, and downsampling depends only
+//! on the sample *count*.  A fixed-seed run therefore serializes to a
+//! byte-identical artifact across thread counts and reruns
+//! (`rust/tests/integration_probe.rs`).
+//!
+//! ## Bounded memory: stride-doubling downsampling
+//!
+//! Each channel holds at most `budget` kept samples.  A
+//! [`ProbeSeries`] keeps every raw sample whose index is a multiple of
+//! its current `stride` (initially 1); when the kept buffer reaches
+//! the budget it drops every other kept sample and doubles the stride.
+//! A minute-long simulation thus records a uniformly-spaced sketch at
+//! half-to-full budget resolution, for any run length, allocation-free
+//! after saturation.  [`ProbeSeries::finish`] re-appends the final raw
+//! sample if the stride dropped it, so both endpoints always survive.
+//!
+//! Rendering (`ds3r trace`) and diffing live here too — as pure
+//! string builders; only `cli.rs` prints.
+
+use crate::util::json::{u64_from_json, u64_to_json, Json};
+use crate::{Error, Result};
+
+/// Artifact kind tag (`"kind"` field of the JSON artifact).
+pub const TRACE_KIND: &str = "ds3r-trace";
+/// Bump when the trace JSON layout changes incompatibly.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+/// Default per-channel sample budget.
+pub const DEFAULT_BUDGET: usize = 512;
+
+// ---------------------------------------------------------------------------
+// Probe configuration
+// ---------------------------------------------------------------------------
+
+/// Configuration for one probe attach.
+#[derive(Debug, Clone)]
+pub struct ProbeConfig {
+    /// Maximum kept samples per channel (>= 2; the downsampler needs
+    /// room for both endpoints).
+    pub budget: usize,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig { budget: DEFAULT_BUDGET }
+    }
+}
+
+impl ProbeConfig {
+    pub fn with_budget(budget: usize) -> ProbeConfig {
+        ProbeConfig { budget: budget.max(2) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProbeSeries: one bounded channel
+// ---------------------------------------------------------------------------
+
+/// One bounded (t, v) series with deterministic stride-doubling
+/// downsampling.  Kept samples are exactly the raw samples whose index
+/// is `0 (mod stride)`, plus (after [`ProbeSeries::finish`]) the final
+/// raw sample.
+#[derive(Debug, Clone)]
+pub struct ProbeSeries {
+    budget: usize,
+    stride: u64,
+    /// Raw samples pushed (kept or not).
+    count: u64,
+    t_us: Vec<f64>,
+    v: Vec<f64>,
+    /// Most recent raw sample — the endpoint candidate for `finish`.
+    last: Option<(f64, f64)>,
+}
+
+impl ProbeSeries {
+    pub fn new(budget: usize) -> ProbeSeries {
+        ProbeSeries {
+            budget: budget.max(2),
+            stride: 1,
+            count: 0,
+            t_us: Vec::new(),
+            v: Vec::new(),
+            last: None,
+        }
+    }
+
+    /// Record one raw sample.  O(1) amortized; never exceeds the
+    /// budget.
+    pub fn push(&mut self, t_us: f64, v: f64) {
+        if self.count % self.stride == 0 {
+            if self.t_us.len() == self.budget {
+                self.compact();
+            }
+            // `compact` doubled the stride; the current index may no
+            // longer be a keeper.
+            if self.count % self.stride == 0 {
+                self.t_us.push(t_us);
+                self.v.push(v);
+            }
+        }
+        self.count += 1;
+        self.last = Some((t_us, v));
+    }
+
+    /// Drop every other kept sample and double the stride.  Kept slot
+    /// `i` holds raw index `i * stride`, so retaining even slots
+    /// retains exactly the raw indices `0 (mod 2 * stride)`.
+    fn compact(&mut self) {
+        let mut w = 0;
+        for r in (0..self.t_us.len()).step_by(2) {
+            self.t_us[w] = self.t_us[r];
+            self.v[w] = self.v[r];
+            w += 1;
+        }
+        self.t_us.truncate(w);
+        self.v.truncate(w);
+        self.stride *= 2;
+    }
+
+    /// Seal the series: if the stride dropped the final raw sample,
+    /// append it (compacting once more if the buffer is full), so the
+    /// trace always preserves both endpoints.
+    pub fn finish(&mut self) {
+        if let Some((t, v)) = self.last {
+            if self.count > 0 && (self.count - 1) % self.stride != 0 {
+                if self.t_us.len() == self.budget {
+                    self.compact();
+                }
+                self.t_us.push(t);
+                self.v.push(v);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t_us.is_empty()
+    }
+
+    /// Raw samples observed (kept + downsampled away).
+    pub fn raw_count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn times_us(&self) -> &[f64] {
+        &self.t_us
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.v
+    }
+
+    fn into_channel(self, name: String, unit: &str) -> TraceChannel {
+        TraceChannel {
+            name,
+            unit: unit.to_string(),
+            raw_count: self.count,
+            stride: self.stride,
+            t_us: self.t_us,
+            v: self.v,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProbeRecorder: the in-simulation sampler
+// ---------------------------------------------------------------------------
+
+/// A phase boundary from a scenario timeline, in simulated time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseMark {
+    pub t_us: f64,
+    pub label: String,
+}
+
+/// The live sampler a [`crate::sim::SimWorker`] carries while probed.
+/// Cheap to construct, allocation-free after channel buffers saturate;
+/// the worker holds it as `Option<Box<ProbeRecorder>>` so the unprobed
+/// hot path pays one branch per hook.
+#[derive(Debug)]
+pub struct ProbeRecorder {
+    cfg: ProbeConfig,
+    n_pes: usize,
+    n_nodes: usize,
+    // Epoch-boundary channels (sampled at DTPM epoch ends, identical
+    // on the lazy and eager lanes).
+    pe_util: Vec<ProbeSeries>,
+    pe_mhz: Vec<ProbeSeries>,
+    pe_avail: Vec<ProbeSeries>,
+    ready_depth: ProbeSeries,
+    sched_invocations: ProbeSeries,
+    // Integration channels (sampled in `account_epoch`; the cursor
+    // reconstructs epoch-end times during a deferred batch replay).
+    node_temp: Vec<ProbeSeries>,
+    power_w: ProbeSeries,
+    cursor_us: f64,
+    markers: Vec<PhaseMark>,
+}
+
+impl ProbeRecorder {
+    pub fn new(
+        cfg: ProbeConfig,
+        n_pes: usize,
+        n_nodes: usize,
+    ) -> ProbeRecorder {
+        let b = cfg.budget.max(2);
+        ProbeRecorder {
+            cfg: ProbeConfig { budget: b },
+            n_pes,
+            n_nodes,
+            pe_util: (0..n_pes).map(|_| ProbeSeries::new(b)).collect(),
+            pe_mhz: (0..n_pes).map(|_| ProbeSeries::new(b)).collect(),
+            pe_avail: (0..n_pes).map(|_| ProbeSeries::new(b)).collect(),
+            ready_depth: ProbeSeries::new(b),
+            sched_invocations: ProbeSeries::new(b),
+            node_temp: (0..n_nodes).map(|_| ProbeSeries::new(b)).collect(),
+            power_w: ProbeSeries::new(b),
+            cursor_us: 0.0,
+            markers: Vec::new(),
+        }
+    }
+
+    /// Sample the epoch-boundary channels at simulated time `t_us`.
+    /// Per-PE frequency is reconstructed from the cluster cache
+    /// (`mhz = cluster_mhz[pe_cluster[pe]]`) to stay allocation-free.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_epoch(
+        &mut self,
+        t_us: f64,
+        util: &[f64],
+        avail: &[bool],
+        cluster_mhz: &[f64],
+        pe_cluster: &[usize],
+        ready_depth: usize,
+        sched_invocations: u64,
+    ) {
+        for pe in 0..self.n_pes {
+            self.pe_util[pe].push(t_us, util.get(pe).copied().unwrap_or(0.0));
+            self.pe_mhz[pe].push(
+                t_us,
+                pe_cluster
+                    .get(pe)
+                    .and_then(|&c| cluster_mhz.get(c))
+                    .copied()
+                    .unwrap_or(0.0),
+            );
+            self.pe_avail[pe].push(
+                t_us,
+                if avail.get(pe).copied().unwrap_or(false) { 1.0 } else { 0.0 },
+            );
+        }
+        self.ready_depth.push(t_us, ready_depth as f64);
+        self.sched_invocations.push(t_us, sched_invocations as f64);
+    }
+
+    /// Sample the integration channels for one accounted epoch of
+    /// length `dt_us`.  Epochs tile simulated time from 0 and are
+    /// replayed in order by the lazy flush, so the cumulative cursor
+    /// equals the true epoch-end time on every lane.
+    pub fn sample_thermal(
+        &mut self,
+        dt_us: f64,
+        theta: &[f64],
+        t_ambient_c: f64,
+        power_w: f64,
+    ) {
+        self.cursor_us += dt_us;
+        let t = self.cursor_us;
+        for n in 0..self.n_nodes {
+            self.node_temp[n]
+                .push(t, theta.get(n).copied().unwrap_or(0.0) + t_ambient_c);
+        }
+        self.power_w.push(t, power_w);
+    }
+
+    /// Record a phase boundary (scenario timeline marker).
+    pub fn phase_marker(&mut self, t_us: f64, label: &str) {
+        self.markers.push(PhaseMark { t_us, label: label.to_string() });
+    }
+
+    /// Rewrite the label of the most recent marker — scenario
+    /// timelines may relabel a phase that begins at the same
+    /// timestamp instead of opening a new one.
+    pub fn relabel_last_marker(&mut self, label: &str) {
+        if let Some(m) = self.markers.last_mut() {
+            m.label = label.to_string();
+        }
+    }
+
+    /// Seal every channel and convert into the serializable artifact.
+    pub fn into_trace(
+        mut self,
+        scheduler: &str,
+        scenario: &str,
+        seed: u64,
+    ) -> TraceSeries {
+        let mut channels = Vec::new();
+        for (i, mut s) in self.pe_util.drain(..).enumerate() {
+            s.finish();
+            channels.push(s.into_channel(format!("pe{i}.util"), "frac"));
+        }
+        for (i, mut s) in self.pe_mhz.drain(..).enumerate() {
+            s.finish();
+            channels.push(s.into_channel(format!("pe{i}.mhz"), "MHz"));
+        }
+        for (i, mut s) in self.pe_avail.drain(..).enumerate() {
+            s.finish();
+            channels.push(s.into_channel(format!("pe{i}.avail"), "bool"));
+        }
+        for (i, mut s) in self.node_temp.drain(..).enumerate() {
+            s.finish();
+            channels.push(s.into_channel(format!("node{i}.temp_c"), "C"));
+        }
+        let mut s = std::mem::replace(&mut self.power_w, ProbeSeries::new(2));
+        s.finish();
+        channels.push(s.into_channel("soc.power_w".into(), "W"));
+        let mut s =
+            std::mem::replace(&mut self.ready_depth, ProbeSeries::new(2));
+        s.finish();
+        channels.push(s.into_channel("sched.ready_depth".into(), "tasks"));
+        let mut s = std::mem::replace(
+            &mut self.sched_invocations,
+            ProbeSeries::new(2),
+        );
+        s.finish();
+        channels
+            .push(s.into_channel("sched.invocations".into(), "count"));
+        TraceSeries {
+            schema_version: TRACE_SCHEMA_VERSION,
+            scheduler: scheduler.to_string(),
+            scenario: scenario.to_string(),
+            seed,
+            n_pes: self.n_pes,
+            n_nodes: self.n_nodes,
+            budget: self.cfg.budget,
+            channels,
+            markers: std::mem::take(&mut self.markers),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TraceSeries: the serialized artifact
+// ---------------------------------------------------------------------------
+
+/// One sealed, serializable trace channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceChannel {
+    pub name: String,
+    pub unit: String,
+    /// Raw samples observed before downsampling.
+    pub raw_count: u64,
+    /// Final keep-stride (1 = nothing was downsampled away).
+    pub stride: u64,
+    pub t_us: Vec<f64>,
+    pub v: Vec<f64>,
+}
+
+impl TraceChannel {
+    fn minmax(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &x in &self.v {
+            if x.is_finite() {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if !lo.is_finite() {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        if self.v.is_empty() {
+            return 0.0;
+        }
+        self.v.iter().sum::<f64>() / self.v.len() as f64
+    }
+}
+
+/// The schema-versioned trace artifact a probed run emits — a pure
+/// function of (config, seed); see the module docs for the
+/// determinism contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSeries {
+    pub schema_version: u64,
+    pub scheduler: String,
+    /// Scenario name (empty for static runs).
+    pub scenario: String,
+    pub seed: u64,
+    pub n_pes: usize,
+    pub n_nodes: usize,
+    /// Per-channel sample budget the recorder enforced.
+    pub budget: usize,
+    pub channels: Vec<TraceChannel>,
+    pub markers: Vec<PhaseMark>,
+}
+
+impl TraceSeries {
+    pub fn channel(&self, name: &str) -> Option<&TraceChannel> {
+        self.channels.iter().find(|c| c.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str(TRACE_KIND.into()))
+            .set("schema_version", u64_to_json(self.schema_version))
+            .set("scheduler", Json::Str(self.scheduler.clone()))
+            .set("scenario", Json::Str(self.scenario.clone()))
+            .set("seed", u64_to_json(self.seed))
+            .set("n_pes", Json::Num(self.n_pes as f64))
+            .set("n_nodes", Json::Num(self.n_nodes as f64))
+            .set("budget", Json::Num(self.budget as f64));
+        let mut chans = Vec::with_capacity(self.channels.len());
+        for c in &self.channels {
+            let mut cj = Json::obj();
+            cj.set("name", Json::Str(c.name.clone()))
+                .set("unit", Json::Str(c.unit.clone()))
+                .set("raw_count", u64_to_json(c.raw_count))
+                .set("stride", u64_to_json(c.stride))
+                .set(
+                    "t_us",
+                    Json::Arr(c.t_us.iter().map(|&x| Json::Num(x)).collect()),
+                )
+                .set(
+                    "v",
+                    Json::Arr(c.v.iter().map(|&x| Json::Num(x)).collect()),
+                );
+            chans.push(cj);
+        }
+        j.set("channels", Json::Arr(chans));
+        let mut marks = Vec::with_capacity(self.markers.len());
+        for m in &self.markers {
+            let mut mj = Json::obj();
+            mj.set("t_us", Json::Num(m.t_us))
+                .set("label", Json::Str(m.label.clone()));
+            marks.push(mj);
+        }
+        j.set("markers", Json::Arr(marks));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceSeries> {
+        let kind = j.req_str("kind")?;
+        if kind != TRACE_KIND {
+            return Err(Error::Json(format!(
+                "not a trace artifact: kind '{kind}' (expected '{TRACE_KIND}')"
+            )));
+        }
+        let schema_version = j
+            .get("schema_version")
+            .and_then(u64_from_json)
+            .ok_or_else(|| {
+                Error::Json("trace: missing schema_version".into())
+            })?;
+        if schema_version > TRACE_SCHEMA_VERSION {
+            return Err(Error::Json(format!(
+                "trace schema v{schema_version} is newer than supported \
+                 v{TRACE_SCHEMA_VERSION}"
+            )));
+        }
+        let mut channels = Vec::new();
+        for cj in j.req_arr("channels")? {
+            channels.push(TraceChannel {
+                name: cj.req_str("name")?.to_string(),
+                unit: cj.req_str("unit")?.to_string(),
+                raw_count: cj
+                    .get("raw_count")
+                    .and_then(u64_from_json)
+                    .unwrap_or(0),
+                stride: cj.get("stride").and_then(u64_from_json).unwrap_or(1),
+                t_us: cj
+                    .get("t_us")
+                    .ok_or_else(|| Error::Json("trace: missing t_us".into()))?
+                    .f64_vec()?,
+                v: cj
+                    .get("v")
+                    .ok_or_else(|| Error::Json("trace: missing v".into()))?
+                    .f64_vec()?,
+            });
+        }
+        let mut markers = Vec::new();
+        if let Some(arr) = j.get("markers").and_then(|m| m.as_arr()) {
+            for mj in arr {
+                markers.push(PhaseMark {
+                    t_us: mj.req_f64("t_us")?,
+                    label: mj.req_str("label")?.to_string(),
+                });
+            }
+        }
+        Ok(TraceSeries {
+            schema_version,
+            scheduler: j.req_str("scheduler")?.to_string(),
+            scenario: j.req_str("scenario")?.to_string(),
+            seed: j.get("seed").and_then(u64_from_json).unwrap_or(0),
+            n_pes: j.req_f64("n_pes")? as usize,
+            n_nodes: j.req_f64("n_nodes")? as usize,
+            budget: j.req_f64("budget")? as usize,
+            channels,
+            markers,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TraceSeries> {
+        TraceSeries::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// Artifact kind tag of a multi-trace bundle (one scenario sweep).
+pub const TRACE_SET_KIND: &str = "ds3r-trace-set";
+
+/// Serialize one-or-many traces: a single trace stays a plain
+/// [`TRACE_KIND`] artifact; several bundle into a [`TRACE_SET_KIND`]
+/// with the traces in input (canonical) order.
+pub fn traces_to_json(traces: &[TraceSeries]) -> Json {
+    if traces.len() == 1 {
+        return traces[0].to_json();
+    }
+    let mut j = Json::obj();
+    j.set("kind", Json::Str(TRACE_SET_KIND.into()))
+        .set("schema_version", u64_to_json(TRACE_SCHEMA_VERSION))
+        .set(
+            "traces",
+            Json::Arr(traces.iter().map(|t| t.to_json()).collect()),
+        );
+    j
+}
+
+/// Parse either artifact shape back into a list of traces.
+pub fn traces_from_json(j: &Json) -> Result<Vec<TraceSeries>> {
+    match j.req_str("kind")? {
+        TRACE_KIND => Ok(vec![TraceSeries::from_json(j)?]),
+        TRACE_SET_KIND => j
+            .req_arr("traces")?
+            .iter()
+            .map(TraceSeries::from_json)
+            .collect(),
+        other => Err(Error::Json(format!(
+            "not a trace artifact: kind '{other}'"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendering & diffing (pure string builders; cli.rs prints)
+// ---------------------------------------------------------------------------
+
+const SPARK_RAMP: &[u8] = b" .:-=+*#%@";
+
+/// Resample `values` to `width` columns and render each as one ASCII
+/// ramp character scaled to [lo, hi].
+pub fn sparkline(values: &[f64], lo: f64, hi: f64, width: usize) -> String {
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    let span = if hi > lo { hi - lo } else { 1.0 };
+    let mut out = String::with_capacity(width);
+    let cols = width.min(values.len());
+    for c in 0..cols {
+        // Bucket [c] covers an equal slice of the samples; render its
+        // max so narrow spikes stay visible.
+        let a = c * values.len() / cols;
+        let b = (((c + 1) * values.len()) / cols).max(a + 1);
+        let mut m = f64::NEG_INFINITY;
+        for &x in &values[a..b] {
+            if x.is_finite() {
+                m = m.max(x);
+            }
+        }
+        if !m.is_finite() {
+            out.push(' ');
+            continue;
+        }
+        let frac = ((m - lo) / span).clamp(0.0, 1.0);
+        let idx = (frac * (SPARK_RAMP.len() - 1) as f64).round() as usize;
+        out.push(SPARK_RAMP[idx.min(SPARK_RAMP.len() - 1)] as char);
+    }
+    out
+}
+
+/// Render a trace as the `ds3r trace show` report: metadata, a channel
+/// summary table, per-PE utilization heat rows, the thermal/power
+/// envelopes, and phase markers.
+pub fn render(trace: &TraceSeries, width: usize) -> String {
+    let width = width.max(16);
+    let mut s = String::new();
+    s.push_str(&format!(
+        "trace v{}: scheduler={} scenario={} seed={} pes={} nodes={} \
+         budget={}\n",
+        trace.schema_version,
+        trace.scheduler,
+        if trace.scenario.is_empty() { "-" } else { &trace.scenario },
+        trace.seed,
+        trace.n_pes,
+        trace.n_nodes,
+        trace.budget
+    ));
+    let span = trace
+        .channels
+        .iter()
+        .flat_map(|c| c.t_us.last().copied())
+        .fold(0.0_f64, f64::max);
+    s.push_str(&format!("  span: {:.1} ms simulated\n", span / 1000.0));
+
+    if !trace.markers.is_empty() {
+        s.push_str("  phases:\n");
+        for m in &trace.markers {
+            s.push_str(&format!(
+                "    {:>10.1} ms  {}\n",
+                m.t_us / 1000.0,
+                m.label
+            ));
+        }
+    }
+
+    // Heat rows: one sparkline per PE utilization channel, shared
+    // [0, 1] scale so rows are comparable.
+    let util: Vec<&TraceChannel> = (0..trace.n_pes)
+        .filter_map(|i| trace.channel(&format!("pe{i}.util")))
+        .collect();
+    if !util.is_empty() {
+        s.push_str("  utilization (0..1 per PE):\n");
+        for (i, c) in util.iter().enumerate() {
+            s.push_str(&format!(
+                "    pe{:<3} |{}| mean={:.2}\n",
+                i,
+                sparkline(&c.v, 0.0, 1.0, width),
+                c.mean()
+            ));
+        }
+    }
+
+    // Thermal envelope: hottest node trace, own scale.
+    let temps: Vec<&TraceChannel> = (0..trace.n_nodes)
+        .filter_map(|i| trace.channel(&format!("node{i}.temp_c")))
+        .collect();
+    if !temps.is_empty() {
+        let (lo, hi) = temps.iter().fold(
+            (f64::INFINITY, f64::NEG_INFINITY),
+            |(lo, hi), c| {
+                let (a, b) = c.minmax();
+                (lo.min(a), hi.max(b))
+            },
+        );
+        s.push_str(&format!(
+            "  temperature ({lo:.1}..{hi:.1} C per node):\n"
+        ));
+        for (i, c) in temps.iter().enumerate() {
+            let (_, peak) = c.minmax();
+            s.push_str(&format!(
+                "    node{:<2}|{}| peak={:.1} C\n",
+                i,
+                sparkline(&c.v, lo, hi, width),
+                peak
+            ));
+        }
+    }
+
+    if let Some(p) = trace.channel("soc.power_w") {
+        let (lo, hi) = p.minmax();
+        s.push_str(&format!(
+            "  power ({:.2}..{:.2} W):\n    soc   |{}| mean={:.2} W\n",
+            lo,
+            hi,
+            sparkline(&p.v, lo, hi, width),
+            p.mean()
+        ));
+    }
+    if let Some(r) = trace.channel("sched.ready_depth") {
+        let (lo, hi) = r.minmax();
+        s.push_str(&format!(
+            "  ready queue (0..{:.0} tasks):\n    ready |{}| mean={:.1}\n",
+            hi,
+            sparkline(&r.v, lo, hi, width),
+            r.mean()
+        ));
+    }
+
+    s.push_str("  channels:\n");
+    let rows: Vec<Vec<String>> = trace
+        .channels
+        .iter()
+        .map(|c| {
+            let (lo, hi) = c.minmax();
+            vec![
+                c.name.clone(),
+                c.unit.clone(),
+                format!("{}", c.t_us.len()),
+                format!("{}", c.raw_count),
+                format!("{}", c.stride),
+                format!("{lo:.3}"),
+                format!("{:.3}", c.mean()),
+                format!("{hi:.3}"),
+            ]
+        })
+        .collect();
+    for line in crate::util::plot::ascii_table(
+        &["channel", "unit", "kept", "raw", "stride", "min", "mean", "max"],
+        &rows,
+    )
+    .lines()
+    {
+        s.push_str("  ");
+        s.push_str(line);
+        s.push('\n');
+    }
+    s
+}
+
+/// Compare two traces; returns the human report and the number of
+/// differing channels (0 = byte-equivalent payloads).
+pub fn diff(a: &TraceSeries, b: &TraceSeries) -> (String, usize) {
+    let mut s = String::new();
+    let mut differing = 0;
+    if a.scheduler != b.scheduler
+        || a.scenario != b.scenario
+        || a.seed != b.seed
+    {
+        s.push_str(&format!(
+            "  meta: a=({}, {}, seed {})  b=({}, {}, seed {})\n",
+            a.scheduler, a.scenario, a.seed, b.scheduler, b.scenario, b.seed
+        ));
+    }
+    let names: Vec<&str> = {
+        let mut n: Vec<&str> =
+            a.channels.iter().map(|c| c.name.as_str()).collect();
+        for c in &b.channels {
+            if !n.contains(&c.name.as_str()) {
+                n.push(c.name.as_str());
+            }
+        }
+        n
+    };
+    for name in names {
+        match (a.channel(name), b.channel(name)) {
+            (Some(ca), Some(cb)) => {
+                if ca.t_us == cb.t_us && ca.v == cb.v {
+                    continue;
+                }
+                differing += 1;
+                let n = ca.v.len().min(cb.v.len());
+                let mut max_dv = 0.0_f64;
+                let mut first = None;
+                for i in 0..n {
+                    let dv = (ca.v[i] - cb.v[i]).abs();
+                    if (dv > 0.0 || ca.t_us[i] != cb.t_us[i])
+                        && first.is_none()
+                    {
+                        first = Some(i);
+                    }
+                    max_dv = max_dv.max(dv);
+                }
+                if ca.v.len() != cb.v.len() && first.is_none() {
+                    first = Some(n);
+                }
+                s.push_str(&format!(
+                    "  {name}: {} vs {} samples, max |dv|={max_dv:.6}, \
+                     first divergence at #{}\n",
+                    ca.v.len(),
+                    cb.v.len(),
+                    first.unwrap_or(0)
+                ));
+            }
+            (Some(_), None) => {
+                differing += 1;
+                s.push_str(&format!("  {name}: only in first trace\n"));
+            }
+            (None, Some(_)) => {
+                differing += 1;
+                s.push_str(&format!("  {name}: only in second trace\n"));
+            }
+            (None, None) => {}
+        }
+    }
+    if a.markers != b.markers {
+        s.push_str(&format!(
+            "  markers differ: {} vs {}\n",
+            a.markers.len(),
+            b.markers.len()
+        ));
+    }
+    let header = if differing == 0 && a.markers == b.markers {
+        "traces identical\n".to_string()
+    } else {
+        format!("traces differ in {differing} channel(s)\n")
+    };
+    (header + &s, differing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_keeps_everything_under_budget() {
+        let mut s = ProbeSeries::new(16);
+        for i in 0..10 {
+            s.push(i as f64, (i * 2) as f64);
+        }
+        s.finish();
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.stride(), 1);
+        assert_eq!(s.times_us()[9], 9.0);
+    }
+
+    #[test]
+    fn series_downsamples_within_budget_and_keeps_endpoints() {
+        for n in [1usize, 2, 7, 16, 17, 100, 1000, 4097] {
+            for budget in [2usize, 3, 8, 64] {
+                let mut s = ProbeSeries::new(budget);
+                for i in 0..n {
+                    s.push(i as f64, (i as f64).sin());
+                }
+                s.finish();
+                assert!(s.len() <= budget, "n={n} budget={budget}");
+                assert!(s.len() >= 1.min(n));
+                // Monotonic timestamps.
+                for w in s.times_us().windows(2) {
+                    assert!(w[0] < w[1], "n={n} budget={budget}");
+                }
+                // Endpoints preserved.
+                assert_eq!(s.times_us()[0], 0.0);
+                assert_eq!(
+                    *s.times_us().last().unwrap(),
+                    (n - 1) as f64,
+                    "n={n} budget={budget}"
+                );
+                assert_eq!(s.raw_count(), n as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn series_kept_samples_are_stride_multiples() {
+        let mut s = ProbeSeries::new(8);
+        for i in 0..100 {
+            s.push(i as f64, i as f64);
+        }
+        // Before finish, every kept index is a stride multiple.
+        let stride = s.stride() as usize;
+        for (k, &t) in s.times_us().iter().enumerate() {
+            assert_eq!(t as usize, k * stride);
+        }
+    }
+
+    #[test]
+    fn recorder_roundtrips_through_json() {
+        let mut p = ProbeRecorder::new(ProbeConfig::with_budget(8), 2, 3);
+        let cluster_mhz = [1000.0, 2000.0];
+        let pe_cluster = [0usize, 1];
+        for e in 0..20 {
+            let t = (e + 1) as f64 * 100.0;
+            p.sample_epoch(
+                t,
+                &[0.5, 0.25],
+                &[true, e % 2 == 0],
+                &cluster_mhz,
+                &pe_cluster,
+                e,
+                e as u64,
+            );
+            p.sample_thermal(100.0, &[1.0, 2.0, 3.0], 25.0, 4.5);
+        }
+        p.phase_marker(0.0, "baseline");
+        p.phase_marker(1000.0, "soak");
+        let tr = p.into_trace("etf", "thermal-soak", 42);
+        assert_eq!(tr.channels.len(), 2 * 3 + 3 + 2);
+        let j = tr.to_json().to_string();
+        let back = TraceSeries::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, tr);
+        assert_eq!(back.to_json().to_string(), j);
+    }
+
+    #[test]
+    fn thermal_cursor_tracks_epoch_ends() {
+        let mut p = ProbeRecorder::new(ProbeConfig::with_budget(64), 1, 1);
+        p.sample_thermal(100.0, &[1.0], 25.0, 1.0);
+        p.sample_thermal(250.0, &[2.0], 25.0, 1.0);
+        p.sample_thermal(50.0, &[3.0], 25.0, 1.0);
+        let tr = p.into_trace("etf", "", 1);
+        let c = tr.channel("node0.temp_c").unwrap();
+        assert_eq!(c.t_us, vec![100.0, 350.0, 400.0]);
+        assert_eq!(c.v, vec![26.0, 27.0, 28.0]);
+    }
+
+    #[test]
+    fn render_and_diff_are_nonempty_and_consistent() {
+        let mut p = ProbeRecorder::new(ProbeConfig::with_budget(8), 1, 1);
+        let cm = [1000.0];
+        let pc = [0usize];
+        for e in 0..5 {
+            let t = (e + 1) as f64;
+            p.sample_epoch(t, &[0.5], &[true], &cm, &pc, 1, e as u64);
+            p.sample_thermal(1.0, &[1.0], 25.0, 2.0);
+        }
+        let tr = p.into_trace("etf", "", 7);
+        let r = render(&tr, 40);
+        assert!(r.contains("pe0"));
+        assert!(r.contains("soc.power_w"));
+        let (d, n) = diff(&tr, &tr);
+        assert_eq!(n, 0);
+        assert!(d.contains("identical"));
+        let mut other = tr.clone();
+        other.channels[0].v[0] += 1.0;
+        let (d, n) = diff(&tr, &other);
+        assert_eq!(n, 1);
+        assert!(d.contains("differ"));
+    }
+
+    #[test]
+    fn sparkline_is_width_bounded() {
+        let v: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(sparkline(&v, 0.0, 99.0, 20).len(), 20);
+        assert_eq!(sparkline(&[1.0], 0.0, 1.0, 20), "@");
+        assert_eq!(sparkline(&[], 0.0, 1.0, 20), "");
+    }
+}

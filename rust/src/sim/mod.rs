@@ -277,6 +277,10 @@ pub struct SimWorker {
     arrivals_done: bool,
     report: SimReport,
     sched_dirty: bool,
+    /// Attached time-series probe ([`crate::probe`]); `None` on the
+    /// unprobed hot path, where each hook costs one branch.  Dropped
+    /// by reset — a probe records exactly one run.
+    probe: Option<Box<crate::probe::ProbeRecorder>>,
 
     // --- per-phase accounting (scenario runs) ---
     phase_lats: Vec<f64>,
@@ -696,6 +700,7 @@ impl SimWorker {
             arrivals_done: false,
             report,
             sched_dirty: false,
+            probe: None,
             phase_lats: spares.phase_lats,
             phase_energy0_j: 0.0,
             phase_peak_temp_c: 0.0,
@@ -796,7 +801,13 @@ impl SimWorker {
             }
             match ev {
                 Event::JobArrival { app } => {
-                    self.on_job_arrival(setup, app)
+                    // Arrivals are job-scale (orders of magnitude
+                    // rarer than task events), so one Instant pair
+                    // per arrival prices the jobgen bucket at noise
+                    // level — same rationale as the flush span.
+                    let span = crate::telemetry::SpanTimer::start();
+                    self.on_job_arrival(setup, app);
+                    self.report.jobgen_wall_ns += span.elapsed_ns();
                 }
                 Event::TaskFinish { job, task, pe } => {
                     self.on_task_finish(setup, job, task, pe)
@@ -826,6 +837,32 @@ impl SimWorker {
     /// Borrow the report of the last finished run.
     pub fn report(&self) -> &SimReport {
         &self.report
+    }
+
+    /// Attach a time-series probe recording the next run (see
+    /// [`crate::probe`]).  A probe records exactly one run: `reset`
+    /// drops it, so pooled grids re-attach per point.
+    pub fn attach_probe(&mut self, cfg: crate::probe::ProbeConfig) {
+        self.probe = Some(Box::new(crate::probe::ProbeRecorder::new(
+            cfg,
+            self.pes.len(),
+            self.theta.len(),
+        )));
+    }
+
+    /// Detach the probe of a finished run as a sealed
+    /// [`crate::probe::TraceSeries`] artifact (`None` if no probe was
+    /// attached).
+    pub fn take_probe_trace(
+        &mut self,
+    ) -> Option<crate::probe::TraceSeries> {
+        self.probe.take().map(|p| {
+            p.into_trace(
+                &self.report.scheduler,
+                &self.report.scenario,
+                self.report.seed,
+            )
+        })
     }
 
     /// Move the scheduler out (a [`NullSched`] takes its slot until the
@@ -1283,11 +1320,17 @@ impl SimWorker {
     fn begin_phase(&mut self, setup: &SimSetup, label: String) {
         if let Some(last) = self.report.phases.last_mut() {
             if last.start_us == self.now {
+                if let Some(p) = self.probe.as_deref_mut() {
+                    p.relabel_last_marker(&label);
+                }
                 last.label = label;
                 return;
             }
         }
         self.close_phase(setup);
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.phase_marker(self.now, &label);
+        }
         self.phase_lats.clear();
         self.phase_energy0_j = self.energy.total_energy_j();
         self.phase_peak_temp_c = 0.0;
@@ -1406,6 +1449,14 @@ impl SimWorker {
         if !self.timeline.is_empty() && t_max_abs > self.phase_peak_temp_c
         {
             self.phase_peak_temp_c = t_max_abs;
+        }
+        // Probe hook: integration channels.  `account_epoch` is the
+        // one accounting point shared by the lazy flush, the eager
+        // path, and the device lane, and the lazy flush replays
+        // epochs in order — so the probe's cumulative-dt cursor
+        // reconstructs identical epoch-end timestamps on every lane.
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.sample_thermal(dt, &self.theta, self.t_ambient_c, p_total_w);
         }
     }
 
@@ -1577,6 +1628,20 @@ impl SimWorker {
             self.cluster_opp_idx[c] = idx.min(class.opps.len() - 1);
         }
         self.refresh_cluster_mhz(setup);
+        // Probe hook: epoch-boundary channels.  Nothing here reads
+        // integrated power/thermal state, so the samples are identical
+        // on the lazy and eager lanes.
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.sample_epoch(
+                self.now,
+                &util,
+                &self.pe_available,
+                &self.cluster_mhz,
+                &setup.pe_cluster,
+                self.ready.len(),
+                self.report.sched_invocations,
+            );
+        }
         self.util_scratch = util;
         self.busy_scratch = busy;
 
@@ -1721,6 +1786,15 @@ impl SimWorker {
         self.report.sched_decisions = decisions;
         self.report.sched_fallbacks = fallbacks;
         self.report.wall_s = wall0.elapsed().as_secs_f64();
+        // Event-loop bucket: whatever the instrumented stages
+        // (scheduler, thermal flushes, jobgen) don't account for —
+        // dispatch, queue ops, task bookkeeping.
+        let total_ns = (self.report.wall_s * 1e9) as u64;
+        self.report.loop_wall_ns = total_ns.saturating_sub(
+            self.report.sched_wall_ns
+                + self.report.thermal_wall_ns
+                + self.report.jobgen_wall_ns,
+        );
     }
 }
 
@@ -1840,6 +1914,22 @@ impl<'a> Simulation<'a> {
     pub fn run(mut self) -> SimReport {
         self.worker.run(&self.setup);
         self.worker.take_report()
+    }
+
+    /// Attach a time-series probe ([`crate::probe`]) recorded by
+    /// [`run_with_trace`](Simulation::run_with_trace).
+    pub fn attach_probe(&mut self, cfg: crate::probe::ProbeConfig) {
+        self.worker.attach_probe(cfg);
+    }
+
+    /// Run to completion; returns the report plus the sealed probe
+    /// trace when one was attached.
+    pub fn run_with_trace(
+        mut self,
+    ) -> (SimReport, Option<crate::probe::TraceSeries>) {
+        self.worker.run(&self.setup);
+        let trace = self.worker.take_probe_trace();
+        (self.worker.take_report(), trace)
     }
 }
 

@@ -98,6 +98,14 @@ pub struct SimReport {
     pub sched_fallbacks: u64,
     /// Wall-clock time spent inside `Scheduler::schedule` (ns).
     pub sched_wall_ns: u64,
+    /// Wall-clock time spent injecting jobs (the `JobArrival`
+    /// handler: jobgen sampling + task admission) (ns).
+    pub jobgen_wall_ns: u64,
+    /// Event-loop remainder (ns): run wall time not attributed to the
+    /// scheduler / thermal-flush / jobgen buckets — dispatch, queue
+    /// ops, task bookkeeping.  Derived at finalize, so the four
+    /// buckets plus `build_wall_ns` tile the invocation's wall clock.
+    pub loop_wall_ns: u64,
     /// Total wall-clock for the run (s).
     pub wall_s: f64,
 
@@ -138,10 +146,15 @@ pub struct SimReport {
 impl SimReport {
     /// Recycle this report's heap buffers into a fresh zeroed report,
     /// leaving `self` hollow.  Every scalar of the returned report is
-    /// the `Default` value; every collection is an emptied (`clear`ed,
-    /// capacity-retaining) version of `self`'s — the reusable
-    /// `SimWorker`'s reset path calls this so steady-state grid
-    /// evaluation stops re-allocating report buffers.
+    /// the `Default` value — including the wall-clock profile buckets
+    /// (`sched_wall_ns`, `jobgen_wall_ns`, `loop_wall_ns`,
+    /// `thermal_wall_ns`), so a reused worker's profile never bleeds
+    /// into the next run and fresh-vs-reset stays bit-identical (wall
+    /// fields are excluded from deterministic streams regardless).
+    /// Every collection is an emptied (`clear`ed, capacity-retaining)
+    /// version of `self`'s — the reusable `SimWorker`'s reset path
+    /// calls this so steady-state grid evaluation stops re-allocating
+    /// report buffers.
     pub fn recycle(&mut self) -> SimReport {
         let mut fresh = SimReport::default();
         std::mem::swap(
@@ -254,6 +267,21 @@ impl SimReport {
             "  thermal: {} epochs deferred across {} flushes\n",
             self.deferred_epochs, self.thermal_flushes
         ));
+        let prof_ns = self.sched_wall_ns
+            + self.thermal_wall_ns
+            + self.jobgen_wall_ns
+            + self.loop_wall_ns;
+        if prof_ns > 0 {
+            let pct = |ns: u64| 100.0 * ns as f64 / prof_ns as f64;
+            s.push_str(&format!(
+                "  profile: sched={:.1}%  loop={:.1}%  thermal={:.1}%  jobgen={:.1}%  (+{:.2} ms build)\n",
+                pct(self.sched_wall_ns),
+                pct(self.loop_wall_ns),
+                pct(self.thermal_wall_ns),
+                pct(self.jobgen_wall_ns),
+                self.build_wall_ns as f64 / 1e6,
+            ));
+        }
         if self.sched_decisions > 0 {
             s.push_str(&format!(
                 "  scheduler decisions: {} ({} guard fallbacks)\n",

@@ -145,6 +145,22 @@ pub enum Event {
     Diagnostic { component: String, message: String },
     /// A named wall-clock span (wall-clock event).
     Span { name: String, wall_ns: u64 },
+    /// Cache economics of the experiment store for one invocation.
+    /// Environment-dependent (hit/miss rates reflect prior store
+    /// state, not (config, seed)), so it is excluded from
+    /// deterministic streams — cold and warm reruns must stay
+    /// byte-identical.  The CLI renders it to stderr regardless.
+    StoreStats { cmd: String, hits: u64, misses: u64 },
+    /// Wall-clock self-profile of one simulation run: where the
+    /// runtime went, bucketed by kernel stage (wall-clock event).
+    Profile {
+        cmd: String,
+        build_wall_ns: u64,
+        sched_wall_ns: u64,
+        thermal_wall_ns: u64,
+        jobgen_wall_ns: u64,
+        loop_wall_ns: u64,
+    },
 }
 
 impl Event {
@@ -163,6 +179,8 @@ impl Event {
             Event::ManifestWritten { .. } => "manifest_written",
             Event::Diagnostic { .. } => "diagnostic",
             Event::Span { .. } => "span",
+            Event::StoreStats { .. } => "store_stats",
+            Event::Profile { .. } => "profile",
         }
     }
 
@@ -174,6 +192,8 @@ impl Event {
             Event::SweepProgress { .. }
                 | Event::BenchRecord { .. }
                 | Event::Span { .. }
+                | Event::StoreStats { .. }
+                | Event::Profile { .. }
         )
     }
 
@@ -296,6 +316,27 @@ impl Event {
             Event::Span { name, wall_ns } => {
                 j.set("name", Json::Str(name.clone()))
                     .set("wall_ns", crate::util::json::u64_to_json(*wall_ns));
+            }
+            Event::StoreStats { cmd, hits, misses } => {
+                j.set("cmd", Json::Str(cmd.clone()))
+                    .set("hits", crate::util::json::u64_to_json(*hits))
+                    .set("misses", crate::util::json::u64_to_json(*misses));
+            }
+            Event::Profile {
+                cmd,
+                build_wall_ns,
+                sched_wall_ns,
+                thermal_wall_ns,
+                jobgen_wall_ns,
+                loop_wall_ns,
+            } => {
+                let u = crate::util::json::u64_to_json;
+                j.set("cmd", Json::Str(cmd.clone()))
+                    .set("build_wall_ns", u(*build_wall_ns))
+                    .set("sched_wall_ns", u(*sched_wall_ns))
+                    .set("thermal_wall_ns", u(*thermal_wall_ns))
+                    .set("jobgen_wall_ns", u(*jobgen_wall_ns))
+                    .set("loop_wall_ns", u(*loop_wall_ns));
             }
         }
         j

@@ -1,0 +1,154 @@
+//! Probe-subsystem integration tests: the determinism contract of the
+//! trace artifact (README §Observability) checked end-to-end through
+//! the real simulation kernel.
+//!
+//! * a fixed-seed probed sweep serializes to a **byte-identical**
+//!   artifact for any `--threads` value and across reruns,
+//! * lazy and eager power/thermal integration record identical
+//!   samples (the probe rides `account_epoch`, the one accounting
+//!   point both lanes share),
+//! * stride-doubling downsampling never exceeds the budget, keeps
+//!   timestamps strictly increasing, preserves both endpoints, and
+//!   selects a subset of the raw samples,
+//! * attaching a probe does not perturb the run it observes.
+
+use ds3r::app::suite::{self, WifiParams};
+use ds3r::config::SimConfig;
+use ds3r::coordinator::run_scenario_sweep_probed;
+use ds3r::platform::Platform;
+use ds3r::probe::{traces_to_json, ProbeConfig, TraceSeries};
+use ds3r::scenario::presets;
+use ds3r::sim::Simulation;
+use ds3r::telemetry::Telemetry;
+
+fn cfg(jobs: usize) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.scheduler = "etf".into();
+    c.injection_rate_per_ms = 2.0;
+    c.max_jobs = jobs;
+    c.warmup_jobs = 0;
+    c
+}
+
+fn probed_soak(budget: usize, eager: bool) -> TraceSeries {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg(400);
+    c.eager_integration = eager;
+    c.scenario = Some(presets::thermal_soak());
+    let mut sim = Simulation::build(&p, &apps, &c).unwrap();
+    sim.attach_probe(ProbeConfig::with_budget(budget));
+    let (r, trace) = sim.run_with_trace();
+    assert_eq!(r.completed_jobs, 400);
+    trace.expect("probe was attached")
+}
+
+#[test]
+fn probed_sweep_is_byte_identical_across_threads_and_reruns() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let base = cfg(250);
+    let scenarios = vec![presets::thermal_soak(), presets::pe_failure()];
+    let tel = Telemetry::disabled();
+    let pc = ProbeConfig::default();
+    let artifact = |threads: usize| {
+        let (_, _, traces) = run_scenario_sweep_probed(
+            &p, &apps, &base, &scenarios, threads, &tel, &pc,
+        )
+        .unwrap();
+        assert_eq!(traces.len(), scenarios.len());
+        traces_to_json(&traces).to_string()
+    };
+    let one = artifact(1);
+    assert_eq!(one, artifact(8), "1-thread vs 8-thread artifact");
+    assert_eq!(one, artifact(1), "rerun artifact");
+}
+
+#[test]
+fn lazy_and_eager_integration_record_identical_traces() {
+    let lazy = probed_soak(256, false);
+    let eager = probed_soak(256, true);
+    assert_eq!(
+        lazy.to_json().to_string(),
+        eager.to_json().to_string(),
+        "lazy and eager lanes must sample identically"
+    );
+}
+
+#[test]
+fn downsampling_respects_budget_monotonicity_and_endpoints() {
+    // A budget large enough to keep every raw sample (stride 1) gives
+    // the ground truth the downsampled run must be a subset of.
+    let full = probed_soak(1 << 20, false);
+    let small = probed_soak(16, false);
+    assert_eq!(full.channels.len(), small.channels.len());
+    assert_eq!(
+        full.channels.len(),
+        3 * full.n_pes + full.n_nodes + 3,
+        "per-PE util/mhz/avail + per-node temp + power/depth/invocations"
+    );
+    for (f, s) in full.channels.iter().zip(&small.channels) {
+        assert_eq!(f.name, s.name);
+        assert_eq!(f.stride, 1, "{}: ground truth downsampled", f.name);
+        assert_eq!(f.raw_count, s.raw_count, "{}", s.name);
+        assert!(s.v.len() <= 16, "{}: budget exceeded", s.name);
+        assert!(
+            s.stride.is_power_of_two(),
+            "{}: stride {} not a power of two",
+            s.name,
+            s.stride
+        );
+        assert!(
+            s.t_us.windows(2).all(|w| w[0] < w[1]),
+            "{}: timestamps not strictly increasing",
+            s.name
+        );
+        // Both endpoints survive downsampling.
+        assert_eq!(f.t_us.first(), s.t_us.first(), "{}", s.name);
+        assert_eq!(f.t_us.last(), s.t_us.last(), "{}", s.name);
+        // Every kept sample is one of the raw samples, bit-exact.
+        for (t, v) in s.t_us.iter().zip(&s.v) {
+            assert!(
+                f.t_us
+                    .iter()
+                    .zip(&f.v)
+                    .any(|(ft, fv)| ft == t && fv == v),
+                "{}: kept sample ({t}, {v}) not in the raw series",
+                s.name
+            );
+        }
+    }
+    // The thermal-soak timeline steps ambient three times -> phase
+    // markers, identical at both budgets (markers are never dropped).
+    assert!(!full.markers.is_empty());
+    assert_eq!(full.markers, small.markers);
+    assert!(full
+        .markers
+        .windows(2)
+        .all(|w| w[0].t_us <= w[1].t_us));
+}
+
+#[test]
+fn attaching_a_probe_does_not_perturb_the_run() {
+    let p = Platform::table2_soc();
+    let apps = vec![suite::wifi_tx(WifiParams::default())];
+    let mut c = cfg(300);
+    c.scenario = Some(presets::thermal_soak());
+    let bare = Simulation::build(&p, &apps, &c).unwrap().run();
+    let mut sim = Simulation::build(&p, &apps, &c).unwrap();
+    sim.attach_probe(ProbeConfig::default());
+    let (probed, trace) = sim.run_with_trace();
+    assert_eq!(bare.job_latencies_us, probed.job_latencies_us);
+    assert_eq!(bare.events_processed, probed.events_processed);
+    assert_eq!(bare.total_energy_j, probed.total_energy_j);
+    let trace = trace.unwrap();
+    assert_eq!(trace.scheduler, "etf");
+    assert_eq!(trace.scenario, "thermal-soak");
+    // Artifact JSON roundtrips losslessly.
+    let j = trace.to_json();
+    let back = TraceSeries::from_json(
+        &ds3r::util::json::Json::parse(&j.to_string()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(j.to_string(), back.to_json().to_string());
+}
