@@ -273,6 +273,75 @@ fn main() {
         }
     }
 
+    println!("=== watchdog overhead guard (disabled vs armed budget) ===");
+    // The fault-tolerance contract (README §Fault tolerance): the
+    // deterministic step-budget watchdog must be free when disabled
+    // and near-free when armed.  With `step_budget = 0` the loop pays
+    // one u64 compare; with a budget too large to ever trip it adds an
+    // increment + compare per iteration.  Interleave the two
+    // configurations (same drift treatment as the telemetry guard),
+    // compare medians, and fail the bench when the armed path loses
+    // more than the floor.
+    {
+        let mut cfg = SimConfig::default();
+        cfg.scheduler = "etf".into();
+        cfg.injection_rate_per_ms = 9.0;
+        cfg.max_jobs = jobs;
+        cfg.warmup_jobs = jobs / 20;
+        cfg.max_sim_us = 30_000_000.0;
+        let measure = |cfg: &SimConfig| {
+            let t0 = std::time::Instant::now();
+            let r =
+                Simulation::build(&platform, &apps, cfg).unwrap().run();
+            assert!(
+                !r.timed_out,
+                "guard budget must never trip during the bench"
+            );
+            r.events_processed as f64 / t0.elapsed().as_secs_f64()
+        };
+        let mut armed_cfg = cfg.clone();
+        armed_cfg.step_budget = u64::MAX / 2;
+        std::hint::black_box(measure(&cfg)); // warmup
+        let mut eps_off = Vec::with_capacity(runs);
+        let mut eps_armed = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            eps_off.push(measure(&cfg));
+            eps_armed.push(measure(&armed_cfg));
+        }
+        let median = |v: &mut Vec<f64>| {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let off = median(&mut eps_off);
+        let armed = median(&mut eps_armed);
+        let floor = if smoke { 0.90 } else { 0.99 };
+        println!(
+            "{:>48} {off:>12.0} events/s disabled | {armed:>12.0} \
+             events/s armed ({:+.2}%) — guard: armed within {:.0}%\n",
+            "",
+            (armed / off - 1.0) * 100.0,
+            (1.0 - floor) * 100.0
+        );
+        tel.emit(|| TelEvent::BenchRecord {
+            bench: "perf_hotpath".into(),
+            name: "watchdog.armed_vs_disabled".into(),
+            value: armed / off,
+            unit: "ratio".into(),
+        });
+        tel.flush();
+        if armed < floor * off {
+            eprintln!(
+                "WATCHDOG REGRESSION: an armed (never-tripping) step \
+                 budget delivered {:.1}% fewer events/s than a \
+                 disabled one (allowed: {:.0}%) — the watchdog guard \
+                 is no longer near-free",
+                (1.0 - armed / off) * 100.0,
+                (1.0 - floor) * 100.0
+            );
+            std::process::exit(1);
+        }
+    }
+
     println!("=== event queue ===");
     let mut q = EventQueue::new();
     let mut t = 0.0;

@@ -29,7 +29,11 @@
 //! every campaign writes a manifest there and sweep/fuzz/dse points
 //! are served from its cache on re-runs — and
 //! `--log-format json|text` picks how library diagnostics are rendered.
-//! `ds3r query` and `ds3r store gc|verify` operate on a store offline.
+//! `ds3r query` and `ds3r store gc|verify|fsck` operate on a store
+//! offline.  Grid campaigns additionally share the fault-tolerance
+//! flags `--fail-policy abort|quarantine[:N]`, `--step-budget <n>`
+//! (deterministic watchdog), and `--inject-fault` (test hook); a
+//! campaign that quarantined points exits with code 2.
 //! The CLI is the only layer that turns events into print lines — CI
 //! denies `print_stdout`/`print_stderr` everywhere else in `rust/src/`,
 //! hence the file-level allow below.
@@ -39,6 +43,7 @@
 #![allow(clippy::print_stdout, clippy::print_stderr)]
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::app::{suite, AppGraph};
@@ -226,6 +231,8 @@ pub fn apply_sim_flags(args: &Args, cfg: &mut SimConfig) -> Result<()> {
     cfg.warmup_jobs = args.usize_or("warmup", cfg.warmup_jobs)?;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
     cfg.max_ready = args.usize_or("max-ready", cfg.max_ready)?;
+    cfg.step_budget =
+        args.usize_or("step-budget", cfg.step_budget as usize)? as u64;
     cfg.exec_jitter_frac = args.f64_or("jitter", cfg.exec_jitter_frac)?;
     if args.has("governor") {
         cfg.dtpm.governor = args.str_or("governor", "performance");
@@ -267,6 +274,76 @@ pub fn apply_sim_flags(args: &Args, cfg: &mut SimConfig) -> Result<()> {
         cfg.scenario = Some(crate::scenario::resolve(
             &args.str_or("scenario", ""),
         )?);
+    }
+    Ok(())
+}
+
+/// Parse `--fail-policy abort|quarantine[:N]` (default `abort`) — how
+/// grid campaigns treat a panicking, timed-out, or erroring point
+/// (see [`crate::coordinator::FailPolicy`]).
+fn fail_policy_from_args(args: &Args) -> Result<coordinator::FailPolicy> {
+    coordinator::FailPolicy::parse(&args.str_or("fail-policy", "abort"))
+}
+
+/// Whether the command that just ran quarantined any grid points —
+/// `main` turns this into exit code 2 (partial success) after the
+/// degraded report has printed.  Reset by [`init_telemetry`], so
+/// processes that drive several commands (tests) never leak a stale
+/// verdict into the next campaign.
+static PARTIAL_FAILURE: AtomicBool = AtomicBool::new(false);
+
+/// True when the last campaign completed in degraded mode.
+pub fn partial_failure() -> bool {
+    PARTIAL_FAILURE.load(Ordering::Acquire)
+}
+
+/// Render a campaign's degraded-mode footer and raise the process
+/// partial-failure flag; a clean report renders nothing.
+fn failure_footer(failures: &crate::stats::FailureReport) -> String {
+    if failures.is_clean() {
+        return String::new();
+    }
+    PARTIAL_FAILURE.store(true, Ordering::Release);
+    failures.summary()
+}
+
+/// Arm the process fault-injection registry from `--inject-fault
+/// panic=<label-prefix>|hang=<label-prefix>` — the CLI face of
+/// [`crate::faultpoint`], for exercising quarantine and watchdog
+/// plumbing on a healthy build.  `panic` fires at pooled grid points
+/// whose label (`{scheduler}@{rate}`, `{scheduler}@{scenario}`, or a
+/// design id) starts with the prefix; `hang` pre-charges the
+/// simulation watchdog for matching scheduler names, so it only trips
+/// when `--step-budget` is set.
+fn apply_inject_fault(args: &Args) -> Result<()> {
+    if !args.has("inject-fault") {
+        return Ok(());
+    }
+    let spec = args.str_or("inject-fault", "");
+    let (kind, prefix) = spec.split_once('=').ok_or_else(|| {
+        Error::Config(format!(
+            "--inject-fault: want panic=<label-prefix> or \
+             hang=<label-prefix>, got '{spec}'"
+        ))
+    })?;
+    use crate::faultpoint::{self, sites, Fault};
+    match kind {
+        "panic" => {
+            faultpoint::arm(sites::SWEEP_POINT, prefix, Fault::Panic)
+        }
+        "hang" => faultpoint::arm(
+            sites::SIM_LOOP,
+            prefix,
+            // Large enough to exhaust any sane --step-budget on the
+            // first loop iteration, without risking counter overflow.
+            Fault::SlowLoop { steps: u64::MAX / 2 },
+        ),
+        other => {
+            return Err(Error::Config(format!(
+                "--inject-fault: unknown fault kind '{other}' \
+                 (panic, hang)"
+            )))
+        }
     }
     Ok(())
 }
@@ -378,6 +455,11 @@ impl Sink for StderrRenderSink {
 /// * `--log-format json|text` — diagnostics as JSONL or plain text
 ///   (default `text`, matching the pre-telemetry `eprintln!` output).
 pub fn init_telemetry(args: &Args) -> Result<Telemetry> {
+    // Process campaign state: the partial-failure verdict belongs to
+    // the command about to run, and any requested fault injection must
+    // be armed before the drivers fan out.
+    PARTIAL_FAILURE.store(false, Ordering::Release);
+    apply_inject_fault(args)?;
     let log_format = args.str_or("log-format", "text");
     if log_format != "text" && log_format != "json" {
         return Err(Error::Config(format!(
@@ -673,6 +755,7 @@ pub fn cmd_sweep(args: &Args) -> Result<String> {
     let rates =
         args.rates_or("rates", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])?;
     let threads = args.usize_or("threads", default_threads())?;
+    let policy = fail_policy_from_args(args)?;
 
     let points = coordinator::fig3_points(&sched_refs, &rates, cfg.seed);
     let tel = telemetry::global();
@@ -680,9 +763,11 @@ pub fn cmd_sweep(args: &Args) -> Result<String> {
     let wd = store_digest(&cfg, &apps);
     emit_run_started(&tel, "sweep", &cfg, &wd);
     let ctx = store_ctx(&wd);
-    let (results, counters) = coordinator::run_sweep_stored(
-        &platform, &apps, &cfg, &points, threads, &tel, ctx.as_ref(),
-    )?;
+    let (results, counters, failures) =
+        coordinator::run_sweep_quarantined(
+            &platform, &apps, &cfg, &points, threads, &tel,
+            ctx.as_ref(), policy,
+        )?;
     store_result(&[("points", results.len() as f64)]);
     emit_run_finished(&tel, "sweep", counters, t0);
     finish_store(&tel, "sweep");
@@ -725,6 +810,7 @@ pub fn cmd_sweep(args: &Args) -> Result<String> {
         std::fs::write(&path, plot::to_csv("rate_per_ms", &series))?;
         out.push_str(&format!("wrote {path}\n"));
     }
+    out.push_str(&failure_footer(&failures));
     Ok(out)
 }
 
@@ -861,7 +947,18 @@ fn cmd_scenario_sweep(args: &Args) -> Result<String> {
     let wd = store_digest(&cfg, &apps);
     emit_run_started(&tel, "scenario-sweep", &cfg, &wd);
     let probe_out = probe_target(args);
+    let policy = fail_policy_from_args(args)?;
+    let mut footer = String::new();
     let (results, counters, traces) = if probe_out.is_some() {
+        // The probed path records one trace per scenario; a partially
+        // populated trace set would silently lie about coverage.
+        if policy != coordinator::FailPolicy::Abort {
+            return Err(Error::Config(
+                "--fail-policy quarantine is not supported together \
+                 with --probe (trace sets must cover every scenario)"
+                    .into(),
+            ));
+        }
         coordinator::run_scenario_sweep_probed(
             &platform,
             &apps,
@@ -872,9 +969,12 @@ fn cmd_scenario_sweep(args: &Args) -> Result<String> {
             &probe_config(args)?,
         )?
     } else {
-        let (results, counters) = coordinator::run_scenario_sweep_with(
-            &platform, &apps, &cfg, &scenarios, threads, &tel,
-        )?;
+        let (results, counters, failures) =
+            coordinator::run_scenario_sweep_quarantined(
+                &platform, &apps, &cfg, &scenarios, threads, &tel,
+                policy,
+            )?;
+        footer = failure_footer(&failures);
         (results, counters, Vec::new())
     };
     let mut probe_text = String::new();
@@ -932,6 +1032,7 @@ fn cmd_scenario_sweep(args: &Args) -> Result<String> {
             ));
         }
     }
+    out.push_str(&footer);
     Ok(out)
 }
 
@@ -1127,6 +1228,21 @@ fn dse_front_table(engine: &crate::dse::DseEngine) -> String {
     out
 }
 
+/// Degraded-mode footer for a DSE search that quarantined design
+/// evaluations (raises the process partial-failure flag like
+/// [`failure_footer`]).
+fn dse_failure_footer(engine: &crate::dse::DseEngine) -> String {
+    if engine.quarantined() == 0 {
+        return String::new();
+    }
+    PARTIAL_FAILURE.store(true, Ordering::Release);
+    format!(
+        "quarantined {} design evaluation(s): scored worst-case, \
+         dominated away, never cached\n",
+        engine.quarantined()
+    )
+}
+
 /// Encode the CLI workload flags as checkpoint metadata.
 fn dse_workload_meta(
     names: &[String],
@@ -1162,6 +1278,7 @@ fn cmd_dse_run(args: &Args) -> Result<String> {
     emit_dse_started(&tel, "dse-run", engine.config(), &wd);
     engine.set_telemetry(tel.clone());
     engine.set_store(store_ctx(&wd));
+    engine.set_fail_policy(fail_policy_from_args(args)?);
     let mut out = format!(
         "DSE: {} search, budget {} evaluations ({} x {} designs)\n",
         engine.config().algorithm,
@@ -1187,6 +1304,7 @@ fn cmd_dse_run(args: &Args) -> Result<String> {
     finish_store(&tel, "dse-run");
     out.push('\n');
     out.push_str(&dse_front_table(&engine));
+    out.push_str(&dse_failure_footer(&engine));
     out.push_str(&format!(
         "\ncheckpoint written to {checkpoint} — `ds3r dse front \
          --checkpoint {checkpoint}` to revisit, `ds3r dse resume \
@@ -1282,6 +1400,7 @@ fn cmd_dse_resume(args: &Args) -> Result<String> {
     emit_dse_started(&tel, "dse-resume", engine.config(), &wd);
     engine.set_telemetry(tel.clone());
     engine.set_store(store_ctx(&wd));
+    engine.set_fail_policy(fail_policy_from_args(args)?);
     let resumed_at = engine.completed_generations();
     let mut out = format!(
         "resuming from {checkpoint} at generation {resumed_at} \
@@ -1311,6 +1430,7 @@ fn cmd_dse_resume(args: &Args) -> Result<String> {
     finish_store(&tel, "dse-resume");
     out.push('\n');
     out.push_str(&dse_front_table(&engine));
+    out.push_str(&dse_failure_footer(&engine));
     Ok(out)
 }
 
@@ -1871,8 +1991,11 @@ fn cmd_fuzz_run(args: &Args) -> Result<String> {
     let wd = store_digest(&cfg0, &apps);
     emit_run_started(&tel, "fuzz", &cfg0, &wd);
     opts.store = store_ctx(&wd);
-    let (report, counters) =
-        crate::fuzz::run_tournament(&platform, &apps, &fuzz, &opts)?;
+    let policy = fail_policy_from_args(args)?;
+    let (report, counters, failures) =
+        crate::fuzz::run_tournament_with_policy(
+            &platform, &apps, &fuzz, &opts, &policy,
+        )?;
     let violations: usize =
         report.cells.iter().map(|c| c.violations.len()).sum();
     store_result(&[
@@ -1885,7 +2008,9 @@ fn cmd_fuzz_run(args: &Args) -> Result<String> {
         let out = args.str_or("out", "tournament.json");
         report.save(std::path::Path::new(&out))?;
     }
-    Ok(render_tournament(&report))
+    let mut out = render_tournament(&report);
+    out.push_str(&failure_footer(&failures));
+    Ok(out)
 }
 
 /// Re-execute a minimized repro written by `fuzz run` and compare the
@@ -2065,13 +2190,18 @@ pub fn cmd_query(args: &Args) -> Result<String> {
     }
 }
 
-/// `ds3r store <gc|verify>` — maintain an on-disk experiment store:
-/// `gc` drops dangling index rows and unreferenced points (re-indexing
-/// orphaned manifests), `verify` checks every key against the content
-/// it addresses and fails loudly on a mismatch.
+/// `ds3r store <gc|verify|fsck>` — maintain an on-disk experiment
+/// store: `gc` drops dangling index rows and unreferenced points
+/// (re-indexing orphaned manifests), `verify` checks every key
+/// against the content it addresses and fails loudly on a mismatch,
+/// `fsck` quarantines unparseable manifests/points into
+/// `<store>/quarantine/` and heals the index so the surviving store
+/// passes `verify` again.
 pub fn cmd_store(args: &Args) -> Result<String> {
     let store = crate::store::global().ok_or_else(|| {
-        Error::Config("store gc|verify requires --store <dir>".into())
+        Error::Config(
+            "store gc|verify|fsck requires --store <dir>".into(),
+        )
     })?;
     let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
     match sub {
@@ -2112,8 +2242,35 @@ pub fn cmd_store(args: &Args) -> Result<String> {
                 s.mismatches.len()
             )))
         }
+        "fsck" => {
+            let s = store.fsck()?;
+            if args.has("json") {
+                return Ok(s.to_json().to_string_pretty());
+            }
+            let mut out = format!(
+                "fsck: kept {} manifests, {} points; quarantined {} \
+                 manifests, {} points; dropped {} index rows; \
+                 re-indexed {} manifests\n",
+                s.manifests_kept,
+                s.points_kept,
+                s.manifests_quarantined,
+                s.points_quarantined,
+                s.index_rows_dropped,
+                s.reindexed,
+            );
+            if s.index_tail_salvaged {
+                out.push_str(
+                    "fsck: salvaged a torn trailing index line (crash \
+                     mid-append)\n",
+                );
+            }
+            if s.clean() {
+                out.push_str("fsck: store is clean\n");
+            }
+            Ok(out)
+        }
         other => Err(Error::Config(format!(
-            "unknown store subcommand '{other}' (gc, verify)"
+            "unknown store subcommand '{other}' (gc, verify, fsck)"
         ))),
     }
 }
@@ -2229,7 +2386,7 @@ USAGE:
   ds3r query     --store dir [--sched etf] [--seed 42] [--kind sweep]
                  [--config-hash h] [--format table|jsonl]
                  [--agg count|mean|p95|worst] [--field completed_jobs]
-  ds3r store     gc | verify  --store dir [--json]
+  ds3r store     gc | verify | fsck  --store dir [--json]
   ds3r trace     show <trace.json> [--width 72] |
                  diff <a.json> <b.json>
   ds3r list
@@ -2271,6 +2428,37 @@ OBSERVABILITY (any subcommand):
   --probe-budget <n>     max kept samples per probe channel (default
                          512); longer runs downsample by stride
                          doubling, always preserving both endpoints
+
+FAULT TOLERANCE (sweep, scenario sweep, fuzz run, dse run/resume):
+  --fail-policy abort|quarantine[:N]
+                         abort (default): the first panicking,
+                         timed-out, or erroring grid point fails the
+                         whole campaign (exit 1).  quarantine: failed
+                         points are dropped from the report, each
+                         emits a deterministic point_failed event and
+                         a summary footer, failed points are never
+                         cached, and the process exits 2 (partial
+                         success).  Quarantined sets are identical for
+                         any --threads value.  :N caps the budget —
+                         more than N failures aborts after all.
+  --step-budget <n>      deterministic watchdog: cap every simulation
+                         at n event-loop iterations (never wall
+                         clock); a tripped run reports 'timed out'
+                         bit-identically on every host and counts as
+                         a failed point under --fail-policy
+  --inject-fault panic=<prefix>|hang=<prefix>
+                         test hook: 'panic' panics in pooled grid
+                         points whose label starts with the prefix
+                         ('{scheduler}@{rate}',
+                         '{scheduler}@{scenario}', or a design id);
+                         'hang' pre-charges the watchdog for matching
+                         scheduler names (trips only with
+                         --step-budget).  Exercises the quarantine
+                         machinery on a healthy build.
+  ds3r store fsck        quarantine unparseable manifests/points into
+                         <store>/quarantine/, heal a torn index tail,
+                         drop dangling rows — 'store verify' passes on
+                         what remains
 ";
 
 #[cfg(test)]
@@ -2318,7 +2506,8 @@ mod tests {
     fn config_from_args_applies_flags() {
         let a = args(
             "run --sched met --rate 4 --jobs 80 --warmup 8 --governor \
-             ondemand --throttle 80 --power-cap 5.5 --traces",
+             ondemand --throttle 80 --power-cap 5.5 --traces \
+             --step-budget 5000",
         );
         let c = config_from_args(&a).unwrap();
         assert_eq!(c.scheduler, "met");
@@ -2329,6 +2518,32 @@ mod tests {
         assert_eq!(c.dtpm.throttle_temp_c, 80.0);
         assert_eq!(c.dtpm.power_cap_w, Some(5.5));
         assert!(c.capture_traces);
+        assert_eq!(c.step_budget, 5000);
+    }
+
+    #[test]
+    fn fail_policy_flag_parses() {
+        use coordinator::FailPolicy;
+        assert_eq!(
+            fail_policy_from_args(&args("sweep")).unwrap(),
+            FailPolicy::Abort
+        );
+        assert_eq!(
+            fail_policy_from_args(&args("sweep --fail-policy quarantine"))
+                .unwrap(),
+            FailPolicy::Quarantine { max_failures: None }
+        );
+        assert_eq!(
+            fail_policy_from_args(&args(
+                "sweep --fail-policy quarantine:3"
+            ))
+            .unwrap(),
+            FailPolicy::Quarantine { max_failures: Some(3) }
+        );
+        assert!(
+            fail_policy_from_args(&args("sweep --fail-policy retry"))
+                .is_err()
+        );
     }
 
     /// Serializes the tests that install the process-global telemetry
@@ -2464,6 +2679,12 @@ mod tests {
             cmd_store(&q(&format!("store gc --store {}", dir.display())))
                 .unwrap();
         assert!(gc.contains("dropped 0 unreferenced points"), "{gc}");
+        let fsck = cmd_store(&q(&format!(
+            "store fsck --store {}",
+            dir.display()
+        )))
+        .unwrap();
+        assert!(fsck.contains("store is clean"), "{fsck}");
         telemetry::set_global(Telemetry::disabled());
         crate::store::set_global(None);
         let _ = std::fs::remove_dir_all(&dir);
@@ -2475,6 +2696,47 @@ mod tests {
         assert!(init_telemetry(&args("run --log-format yaml")).is_err());
         assert!(init_telemetry(&args("run --log-format json")).is_ok());
         telemetry::set_global(Telemetry::disabled());
+    }
+
+    #[test]
+    fn bad_inject_fault_specs_are_rejected() {
+        let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+        // No '=' separator, and an unknown fault kind.
+        assert!(init_telemetry(&args("run --inject-fault panic"))
+            .is_err());
+        assert!(init_telemetry(&args("run --inject-fault explode=met"))
+            .is_err());
+        telemetry::set_global(Telemetry::disabled());
+    }
+
+    #[test]
+    fn sweep_quarantine_drops_points_and_flags_partial_success() {
+        let _g = TEL_GLOBAL_LOCK.lock().unwrap();
+        // Unique injection label: no other test sweeps rate 2.75.
+        let a = args(
+            "sweep --scheds met,etf --rates 2.75 --jobs 25 --warmup 3 \
+             --threads 2 --fail-policy quarantine \
+             --inject-fault panic=met@2.75",
+        );
+        init_telemetry(&a).unwrap();
+        let out = cmd_sweep(&a);
+        crate::faultpoint::disarm(
+            crate::faultpoint::sites::SWEEP_POINT,
+            "met@2.75",
+        );
+        telemetry::set_global(Telemetry::disabled());
+        let out = out.unwrap();
+        // The failed point is gone from the table, the footer names
+        // it, and main's exit-2 flag is raised.
+        assert!(partial_failure());
+        assert!(out.contains("quarantined 1/2 points"), "{out}");
+        assert!(out.contains("met@2.75 (panic)"), "{out}");
+        // The surviving scheduler still reports normally.
+        assert!(out.contains("etf"), "{out}");
+        // The next campaign starts with a clean verdict.
+        init_telemetry(&args("run")).unwrap();
+        telemetry::set_global(Telemetry::disabled());
+        assert!(!partial_failure());
     }
 
     #[test]

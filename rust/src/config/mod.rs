@@ -118,6 +118,14 @@ pub struct SimConfig {
     pub capture_traces: bool,
     /// Hard wall on simulated time (µs); guards saturated runs.
     pub max_sim_us: f64,
+    /// Deterministic watchdog: maximum event-loop iterations before a
+    /// run is declared timed out (0 = disabled).  The budget counts
+    /// *simulation steps*, never wall clock, so a "timed out" verdict
+    /// is bit-reproducible across machines and thread counts; a run
+    /// that trips it finalizes normally with
+    /// [`crate::stats::SimReport::timed_out`] set, which grid drivers
+    /// turn into a `PointOutcome::TimedOut` quarantine verdict.
+    pub step_budget: u64,
     /// Replay job arrivals from this JSON trace file instead of the
     /// stochastic generator (see `jobgen::JobGen::from_trace_json`).
     pub trace_file: Option<PathBuf>,
@@ -161,6 +169,7 @@ impl Default for SimConfig {
             gantt_limit: 10_000,
             capture_traces: false,
             max_sim_us: 60_000_000.0, // 60 s simulated
+            step_budget: 0,
             trace_file: None,
             artifacts_dir: None,
             il_policy: None,
@@ -244,6 +253,15 @@ impl SimConfig {
                 "eager_integration",
                 Json::Bool(self.eager_integration),
             );
+        // Emitted only when set, like the other optional knobs — so
+        // config hashes (and store point keys) of budget-less runs are
+        // unchanged by the watchdog's existence.
+        if self.step_budget > 0 {
+            j.set(
+                "step_budget",
+                crate::util::json::u64_to_json(self.step_budget),
+            );
+        }
         if let Some(tf) = &self.trace_file {
             j.set(
                 "trace_file",
@@ -313,6 +331,11 @@ impl SimConfig {
             j.get("eager_integration").and_then(Json::as_bool)
         {
             c.eager_integration = b;
+        }
+        if let Some(x) =
+            j.get("step_budget").and_then(crate::util::json::u64_from_json)
+        {
+            c.step_budget = x;
         }
         if let Some(tf) = j.get("trace_file").and_then(Json::as_str) {
             c.trace_file = Some(PathBuf::from(tf));
@@ -474,6 +497,22 @@ mod tests {
         let mut c = SimConfig::default();
         c.exec_jitter_frac = 0.9;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn step_budget_roundtrips_and_stays_off_budgetless_json() {
+        // Disabled budget leaves the canonical JSON unchanged, so
+        // pre-watchdog config hashes and store point keys survive.
+        let c = SimConfig::default();
+        assert_eq!(c.step_budget, 0);
+        assert!(!c.to_json().to_string().contains("step_budget"));
+
+        let mut c = SimConfig::default();
+        c.step_budget = 250_000;
+        let j = c.to_json();
+        assert!(j.to_string().contains("step_budget"));
+        let c2 = SimConfig::from_json(&j).unwrap();
+        assert_eq!(c2.step_budget, 250_000);
     }
 
     #[test]

@@ -31,20 +31,248 @@
 //! order, preserving both byte-identity contracts (report bytes and
 //! aggregated counters) for warm, partial and cold runs alike.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 
 use crate::app::AppGraph;
 use crate::config::SimConfig;
 use crate::platform::Platform;
 use crate::scenario::Scenario;
 use crate::sim::{SimSetup, SimWorker, Simulation};
-use crate::stats::{PhaseStats, SimReport};
+use crate::stats::{FailureReport, PhaseStats, SimReport};
 use crate::store::{PointEntry, StoreCtx};
 use crate::telemetry::{Counters, Event, SpanTimer, Telemetry};
 use crate::util::json::{u64_from_json, u64_to_json, Json};
 use crate::util::plot::Series;
 use crate::{Error, Result};
+
+/// Verdict of one pooled grid point.  [`parallel_map_pooled_outcomes`]
+/// produces these in input order: a panicking point is contained as
+/// [`PointOutcome::Panicked`] (never a process abort), a point whose
+/// simulation tripped its deterministic step budget comes back
+/// [`PointOutcome::TimedOut`], and ordinary failures stay
+/// [`PointOutcome::Error`].  Campaign drivers either convert failures
+/// to hard errors ([`FailPolicy::Abort`]) or quarantine them into a
+/// [`FailureReport`] and keep the healthy points
+/// ([`FailPolicy::Quarantine`]).
+#[derive(Debug)]
+pub enum PointOutcome<R> {
+    Ok(R),
+    /// The point's closure panicked; the worker that ran it was
+    /// discarded and rebuilt before the pool continued.
+    Panicked { msg: String },
+    /// The simulation exhausted its deterministic step budget
+    /// ([`SimConfig::step_budget`]).
+    TimedOut { steps: u64 },
+    Error(Error),
+}
+
+impl<R> PointOutcome<R> {
+    pub fn from_result(r: Result<R>) -> PointOutcome<R> {
+        match r {
+            Ok(v) => PointOutcome::Ok(v),
+            Err(e) => PointOutcome::Error(e),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, PointOutcome::Ok(_))
+    }
+
+    pub fn ok(self) -> Option<R> {
+        match self {
+            PointOutcome::Ok(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Map the success value, preserving failure verdicts.
+    pub fn map<S>(self, f: impl FnOnce(R) -> S) -> PointOutcome<S> {
+        match self {
+            PointOutcome::Ok(v) => PointOutcome::Ok(f(v)),
+            PointOutcome::Panicked { msg } => {
+                PointOutcome::Panicked { msg }
+            }
+            PointOutcome::TimedOut { steps } => {
+                PointOutcome::TimedOut { steps }
+            }
+            PointOutcome::Error(e) => PointOutcome::Error(e),
+        }
+    }
+
+    /// Collapse to a plain [`Result`] (the abort-policy view).
+    pub fn into_result(self) -> Result<R> {
+        match self {
+            PointOutcome::Ok(v) => Ok(v),
+            PointOutcome::Panicked { msg } => {
+                Err(Error::Sim(format!("worker panicked: {msg}")))
+            }
+            PointOutcome::TimedOut { steps } => Err(Error::Sim(format!(
+                "watchdog: step budget exhausted after {steps} steps"
+            ))),
+            PointOutcome::Error(e) => Err(e),
+        }
+    }
+
+    /// Failure class for [`FailureReport`] rows (`None` for `Ok`).
+    pub fn failure_kind(&self) -> Option<&'static str> {
+        match self {
+            PointOutcome::Ok(_) => None,
+            PointOutcome::Panicked { .. } => Some("panic"),
+            PointOutcome::TimedOut { .. } => Some("timeout"),
+            PointOutcome::Error(_) => Some("error"),
+        }
+    }
+
+    /// Human detail for [`FailureReport`] rows (empty for `Ok`).
+    pub fn failure_detail(&self) -> String {
+        match self {
+            PointOutcome::Ok(_) => String::new(),
+            PointOutcome::Panicked { msg } => msg.clone(),
+            PointOutcome::TimedOut { steps } => {
+                format!("step budget exhausted after {steps} steps")
+            }
+            PointOutcome::Error(e) => e.to_string(),
+        }
+    }
+}
+
+/// What a campaign does with failed grid points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailPolicy {
+    /// The first failure aborts the whole campaign with a hard error
+    /// (the pre-fault-isolation behaviour, and still the default).
+    Abort,
+    /// Failed points are dropped from the results and recorded in a
+    /// [`FailureReport`]; healthy points complete normally.  With
+    /// `max_failures` set, exceeding that budget aborts after all —
+    /// the guard against a systematically broken campaign silently
+    /// quarantining everything.
+    Quarantine { max_failures: Option<usize> },
+}
+
+impl FailPolicy {
+    /// Parse the `--fail-policy` grammar:
+    /// `abort | quarantine | quarantine:N`.
+    pub fn parse(s: &str) -> Result<FailPolicy> {
+        match s {
+            "abort" => Ok(FailPolicy::Abort),
+            "quarantine" => {
+                Ok(FailPolicy::Quarantine { max_failures: None })
+            }
+            _ => s
+                .strip_prefix("quarantine:")
+                .and_then(|n| n.parse::<usize>().ok())
+                .map(|n| FailPolicy::Quarantine {
+                    max_failures: Some(n),
+                })
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "bad fail policy '{s}' (expected abort, \
+                         quarantine or quarantine:N)"
+                    ))
+                }),
+        }
+    }
+
+    pub fn is_quarantine(&self) -> bool {
+        matches!(self, FailPolicy::Quarantine { .. })
+    }
+}
+
+/// Render a caught panic payload (the `&str`/`String` cases cover
+/// `panic!` literals and formatted messages).
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Lock the shared slot table, shrugging off poisoning: panics in `f`
+/// are already contained by `catch_unwind`, and the table is plain
+/// data with no invariant a stray unwind could break — recovering via
+/// [`PoisonError::into_inner`] keeps one panic from cascading into a
+/// second opaque panic at join time.
+fn lock_slots<R>(
+    m: &Mutex<Vec<Option<PointOutcome<R>>>>,
+) -> std::sync::MutexGuard<'_, Vec<Option<PointOutcome<R>>>> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Fault-isolated worker-pool fan-out — the core primitive under
+/// [`parallel_map_pooled`].  Every `f` call runs under
+/// `catch_unwind`: a panicking point is recorded as
+/// [`PointOutcome::Panicked`] in its input slot, the thread's pinned
+/// state is **discarded and rebuilt via `init`** (a panicked
+/// [`SimWorker`] may hold arbitrarily corrupt simulation state and is
+/// never reused), and the pool moves on to the next item — one bad
+/// point can no longer take down a multi-hour campaign.
+///
+/// Determinism contract: outcomes land in input slots, and every
+/// verdict (including which points failed and with what message) is a
+/// function of `(index, item)` alone, so a degraded 1-thread run is
+/// bit-identical to a degraded 8-thread run.
+pub fn parallel_map_pooled_outcomes<T, R, W, I, F>(
+    items: &[T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<PointOutcome<R>>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, usize, &T) -> PointOutcome<R> + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<PointOutcome<R>>>> =
+        Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = match catch_unwind(AssertUnwindSafe(
+                        || f(&mut state, i, &items[i]),
+                    )) {
+                        Ok(out) => out,
+                        Err(payload) => {
+                            // Poisoned-worker replacement: whatever
+                            // the panic left behind is untrusted.
+                            state = init();
+                            PointOutcome::Panicked {
+                                msg: panic_message(payload),
+                            }
+                        }
+                    };
+                    lock_slots(&results)[i] = Some(out);
+                }
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner)
+        .into_iter()
+        .map(|r| {
+            r.unwrap_or_else(|| {
+                PointOutcome::Error(Error::Internal(
+                    "fan-out slot left unfilled".into(),
+                ))
+            })
+        })
+        .collect()
+}
 
 /// Worker-pool fan-out: run `f` over `items` on up to `threads` OS
 /// threads, returning results in input order.  Each spawned thread
@@ -63,6 +291,10 @@ use crate::{Error, Result};
 /// deterministic function of `(index, item)` (asserted for the whole
 /// stack by `rust/tests/integration_worker.rs`).
 ///
+/// Built on [`parallel_map_pooled_outcomes`], so a panicking item
+/// comes back as `Err` (with the panic message) instead of aborting
+/// the process.
+///
 /// The per-thread state needs no `Send`/`Sync`: it is created and
 /// dropped on its owning thread.
 pub fn parallel_map_pooled<T, R, W, I, F>(
@@ -77,31 +309,12 @@ where
     I: Fn() -> W + Sync,
     F: Fn(&mut W, usize, &T) -> Result<R> + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<Result<R>>>> =
-        Mutex::new((0..items.len()).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                let mut state = init();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
-                        break;
-                    }
-                    let r = f(&mut state, i, &items[i]);
-                    results.lock().unwrap()[i] = Some(r);
-                }
-            });
-        }
-    });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("all items filled"))
-        .collect()
+    parallel_map_pooled_outcomes(items, threads, init, |state, i, t| {
+        PointOutcome::from_result(f(state, i, t))
+    })
+    .into_iter()
+    .map(PointOutcome::into_result)
+    .collect()
 }
 
 /// [`parallel_map_pooled`] plus deterministic telemetry counters: `f`
@@ -128,22 +341,53 @@ where
     I: Fn() -> W + Sync,
     F: Fn(&mut W, &mut Counters, usize, &T) -> Result<R> + Sync,
 {
-    let results =
-        parallel_map_pooled(items, threads, init, |state, i, t| {
+    let (outcomes, total) = parallel_map_pooled_counted_outcomes(
+        items,
+        threads,
+        init,
+        |state, c, i, t| {
+            PointOutcome::from_result(f(state, c, i, t))
+        },
+    );
+    (
+        outcomes.into_iter().map(PointOutcome::into_result).collect(),
+        total,
+    )
+}
+
+/// [`parallel_map_pooled_outcomes`] plus deterministic counters (the
+/// outcome-typed sibling of [`parallel_map_pooled_counted`]): failed
+/// points — panicked, timed out or errored — contribute no counters,
+/// so a quarantined degraded run aggregates exactly its healthy
+/// subset, folded in input order.
+pub fn parallel_map_pooled_counted_outcomes<T, R, W, I, F>(
+    items: &[T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> (Vec<PointOutcome<R>>, Counters)
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> W + Sync,
+    F: Fn(&mut W, &mut Counters, usize, &T) -> PointOutcome<R> + Sync,
+{
+    let results = parallel_map_pooled_outcomes(
+        items,
+        threads,
+        init,
+        |state, i, t| {
             let mut c = Counters::new();
-            let r = f(state, &mut c, i, t)?;
-            Ok((r, c))
-        });
+            f(state, &mut c, i, t).map(|v| (v, c))
+        },
+    );
     let mut total = Counters::new();
     let mut out = Vec::with_capacity(results.len());
     for r in results {
-        match r {
-            Ok((v, c)) => {
-                total.merge(&c);
-                out.push(Ok(v));
-            }
-            Err(e) => out.push(Err(e)),
-        }
+        out.push(r.map(|(v, c)| {
+            total.merge(&c);
+            v
+        }));
     }
     (out, total)
 }
@@ -179,28 +423,6 @@ where
     F: Fn(usize, &T) -> Result<R> + Sync,
 {
     parallel_map_pooled(items, threads, || (), |_, i, t| f(i, t))
-}
-
-/// Unwrap a [`parallel_map`] result vector, aggregating failures into a
-/// single error ("<what>: <label>: <cause>; ...").
-fn collect_results<R>(
-    results: Vec<Result<R>>,
-    label: impl Fn(usize) -> String,
-    what: &str,
-) -> Result<Vec<R>> {
-    let mut out = Vec::with_capacity(results.len());
-    let mut errs = Vec::new();
-    for (i, r) in results.into_iter().enumerate() {
-        match r {
-            Ok(v) => out.push(v),
-            Err(e) => errs.push(format!("{}: {e}", label(i))),
-        }
-    }
-    if errs.is_empty() {
-        Ok(out)
-    } else {
-        Err(Error::Sim(format!("{what}: {}", errs.join("; "))))
-    }
 }
 
 /// One sweep point: a scheduler at an injection rate (and seed).
@@ -391,6 +613,77 @@ pub fn run_sweep_stored(
     tel: &Telemetry,
     store: Option<&StoreCtx>,
 ) -> Result<(Vec<SweepResult>, Counters)> {
+    run_sweep_quarantined(
+        platform,
+        apps,
+        base,
+        points,
+        threads,
+        tel,
+        store,
+        FailPolicy::Abort,
+    )
+    .map(|(res, counters, _)| (res, counters))
+}
+
+/// Enforce a quarantine budget: `quarantine:N` aborts once more than
+/// `N` points have failed.  Shared with the fuzz tournament and the
+/// DSE evaluator.
+pub(crate) fn quarantine_guard(
+    policy: &FailPolicy,
+    failures: &FailureReport,
+) -> Result<()> {
+    if let FailPolicy::Quarantine { max_failures: Some(max) } = policy {
+        if failures.quarantined() > *max {
+            return Err(Error::Sim(format!(
+                "quarantine budget exceeded: {}/{} points failed \
+                 (max {max})",
+                failures.quarantined(),
+                failures.total
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Emit one deterministic [`Event::PointFailed`] per quarantined
+/// point — post-collection, in input order, from the calling thread.
+fn emit_point_failures(
+    tel: &Telemetry,
+    what: &str,
+    failures: &FailureReport,
+) {
+    for p in &failures.failed {
+        tel.emit(|| Event::PointFailed {
+            what: what.to_string(),
+            label: p.label.clone(),
+            kind: p.kind.clone(),
+            detail: p.detail.clone(),
+        });
+    }
+}
+
+/// [`run_sweep_stored`] with an explicit [`FailPolicy`] — the full
+/// fault-isolated sweep driver.  Under
+/// [`FailPolicy::Quarantine`], a panicking, timed-out or erroring
+/// point is dropped from the results (and **never** written to the
+/// store), recorded in the returned [`FailureReport`], and reported
+/// through one deterministic [`Event::PointFailed`] per failure; all
+/// healthy points complete normally.  The quarantine set, the
+/// surviving results, the aggregated counters and the telemetry
+/// stream are all byte-identical across thread counts
+/// (`rust/tests/integration_fault.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep_quarantined(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    points: &[SweepPoint],
+    threads: usize,
+    tel: &Telemetry,
+    store: Option<&StoreCtx>,
+    policy: FailPolicy,
+) -> Result<(Vec<SweepResult>, Counters, FailureReport)> {
     // Per-point identity, resolved in canonical input order.
     let keys: Vec<(String, String)> = match store {
         Some(ctx) => points
@@ -429,65 +722,113 @@ pub fn run_sweep_stored(
         }
     }
 
+    let mut failures = FailureReport::new(points.len());
     if !fresh.is_empty() {
         // One immutable setup for the whole grid; one reusable worker
         // per pool thread (reset per point — no per-point rebuild).
         let setup = SimSetup::new(platform, apps, base)?;
         let setup = &setup;
         let progress = GridProgress::start(fresh.len());
-        let results = parallel_map_pooled(
+        let outcomes = parallel_map_pooled_outcomes(
             &fresh,
             threads,
             || None::<SimWorker>,
             |slot, _, (_, p)| {
+                let label =
+                    format!("{}@{}", p.scheduler, p.rate_per_ms);
+                crate::faultpoint::fire_panic(
+                    crate::faultpoint::sites::SWEEP_POINT,
+                    &label,
+                );
                 let cfg = p.resolve(base);
-                let worker = SimWorker::obtain(slot, setup, &cfg)?;
+                let worker = match SimWorker::obtain(slot, setup, &cfg)
+                {
+                    Ok(w) => w,
+                    Err(e) => return PointOutcome::Error(e),
+                };
                 let report = worker.run(setup);
-                let counters = Counters::from_report(report);
                 progress.emit_done(tel);
-                Ok((
+                if report.timed_out {
+                    return PointOutcome::TimedOut {
+                        steps: report.watchdog_steps,
+                    };
+                }
+                let counters = Counters::from_report(report);
+                PointOutcome::Ok((
                     SweepResult::from_report(p.clone(), report),
                     counters,
                 ))
             },
         );
-        let results = collect_results(
-            results,
-            |k| {
-                format!(
-                    "{}@{}",
-                    fresh[k].1.scheduler, fresh[k].1.rate_per_ms
-                )
-            },
-            "sweep failures",
-        )?;
-        // Persist and scatter fresh points — from the calling thread,
-        // in input (filtered) order, never concurrently.
-        for ((i, _), rc) in fresh.iter().zip(results) {
-            if let Some(ctx) = store {
-                ctx.store.put_point(&PointEntry {
-                    kind: "sweep".into(),
-                    key: keys[*i].1.clone(),
-                    config_hash: keys[*i].0.clone(),
-                    workload_digest: ctx.workload_digest.clone(),
-                    result: rc.0.to_json(),
-                    counters: rc.1.clone(),
-                })?;
+        // Triage outcomes from the calling thread, in input (filtered)
+        // order: healthy points persist to the store and land in their
+        // slots; failed points are quarantined — and never cached — or
+        // abort the campaign, per policy.
+        let mut errs = Vec::new();
+        for ((i, p), out) in fresh.iter().zip(outcomes) {
+            let label = format!("{}@{}", p.scheduler, p.rate_per_ms);
+            match out {
+                PointOutcome::Ok(rc) => {
+                    if let Some(ctx) = store {
+                        ctx.store.put_point(&PointEntry {
+                            kind: "sweep".into(),
+                            key: keys[*i].1.clone(),
+                            config_hash: keys[*i].0.clone(),
+                            workload_digest: ctx
+                                .workload_digest
+                                .clone(),
+                            result: rc.0.to_json(),
+                            counters: rc.1.clone(),
+                        })?;
+                    }
+                    slots[*i] = Some(rc);
+                }
+                out => {
+                    let kind = out.failure_kind().unwrap_or("error");
+                    let detail = out.failure_detail();
+                    if policy.is_quarantine() {
+                        failures.record(*i, label, kind, detail);
+                    } else {
+                        errs.push(format!("{label}: {detail}"));
+                    }
+                }
             }
-            slots[*i] = Some(rc);
         }
+        if !errs.is_empty() {
+            return Err(Error::Sim(format!(
+                "sweep failures: {}",
+                errs.join("; ")
+            )));
+        }
+        quarantine_guard(&policy, &failures)?;
     }
 
+    // point_failed events are deterministic: emitted post-collection,
+    // in input order, from the calling thread.
+    emit_point_failures(tel, "sweep", &failures);
+
     // Final merge: walk the full grid in input order, mixing cached
-    // and fresh per-point deltas — byte-identical to a cold run.
+    // and fresh per-point deltas — byte-identical to a cold run.  An
+    // empty slot is legal only for a quarantined point.
+    let failed_idx: std::collections::BTreeSet<usize> =
+        failures.failed.iter().map(|p| p.index).collect();
     let mut results = Vec::with_capacity(points.len());
     let mut counters = Counters::new();
-    for s in slots {
-        let (r, c) = s.expect("every sweep point resolved");
-        counters.merge(&c);
-        results.push(r);
+    for (i, s) in slots.into_iter().enumerate() {
+        match s {
+            Some((r, c)) => {
+                counters.merge(&c);
+                results.push(r);
+            }
+            None if failed_idx.contains(&i) => {}
+            None => {
+                return Err(Error::Internal(format!(
+                    "sweep point {i} neither resolved nor quarantined"
+                )))
+            }
+        }
     }
-    Ok((results, counters))
+    Ok((results, counters, failures))
 }
 
 /// Shared completion tracker behind [`Event::SweepProgress`]: an atomic
@@ -579,9 +920,36 @@ pub fn run_scenario_sweep_with(
     tel: &Telemetry,
 ) -> Result<(Vec<ScenarioResult>, Counters)> {
     run_scenario_sweep_inner(
-        platform, apps, base, scenarios, threads, tel, None,
+        platform,
+        apps,
+        base,
+        scenarios,
+        threads,
+        tel,
+        None,
+        FailPolicy::Abort,
     )
-    .map(|(res, counters, _)| (res, counters))
+    .map(|(res, counters, _, _)| (res, counters))
+}
+
+/// [`run_scenario_sweep_with`] with an explicit [`FailPolicy`]: under
+/// quarantine, failed scenario points are dropped from the results
+/// (which keep input order over the survivors) and recorded in the
+/// returned [`FailureReport`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_scenario_sweep_quarantined(
+    platform: &Platform,
+    apps: &[AppGraph],
+    base: &SimConfig,
+    scenarios: &[Scenario],
+    threads: usize,
+    tel: &Telemetry,
+    policy: FailPolicy,
+) -> Result<(Vec<ScenarioResult>, Counters, FailureReport)> {
+    run_scenario_sweep_inner(
+        platform, apps, base, scenarios, threads, tel, None, policy,
+    )
+    .map(|(res, counters, _, failures)| (res, counters, failures))
 }
 
 /// [`run_scenario_sweep_with`] with a time-series probe attached to
@@ -598,7 +966,7 @@ pub fn run_scenario_sweep_probed(
     probe: &crate::probe::ProbeConfig,
 ) -> Result<(Vec<ScenarioResult>, Counters, Vec<crate::probe::TraceSeries>)>
 {
-    let (res, counters, traces) = run_scenario_sweep_inner(
+    let (res, counters, traces, _) = run_scenario_sweep_inner(
         platform,
         apps,
         base,
@@ -606,10 +974,12 @@ pub fn run_scenario_sweep_probed(
         threads,
         tel,
         Some(probe),
+        FailPolicy::Abort,
     )?;
     Ok((res, counters, traces.into_iter().flatten().collect()))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_scenario_sweep_inner(
     platform: &Platform,
     apps: &[AppGraph],
@@ -618,22 +988,31 @@ fn run_scenario_sweep_inner(
     threads: usize,
     tel: &Telemetry,
     probe: Option<&crate::probe::ProbeConfig>,
+    policy: FailPolicy,
 ) -> Result<(
     Vec<ScenarioResult>,
     Counters,
     Vec<Option<crate::probe::TraceSeries>>,
+    FailureReport,
 )> {
     let setup = SimSetup::new(platform, apps, base)?;
     let setup = &setup;
     let progress = GridProgress::start(scenarios.len());
-    let (results, counters) = parallel_map_pooled_counted(
+    let (outcomes, counters) = parallel_map_pooled_counted_outcomes(
         scenarios,
         threads,
         || None::<SimWorker>,
         |slot, counters, _, sc| {
+            crate::faultpoint::fire_panic(
+                crate::faultpoint::sites::SWEEP_POINT,
+                &sc.name,
+            );
             let mut cfg = base.clone();
             cfg.scenario = Some(sc.clone());
-            let worker = SimWorker::obtain(slot, setup, &cfg)?;
+            let worker = match SimWorker::obtain(slot, setup, &cfg) {
+                Ok(w) => w,
+                Err(e) => return PointOutcome::Error(e),
+            };
             // A probe records exactly one run (reset drops it), so
             // each point re-attaches after obtaining its worker.
             if let Some(pc) = probe {
@@ -644,6 +1023,12 @@ fn run_scenario_sweep_inner(
             // phase list) for capacity-retaining recycle on the next
             // reset, instead of `take_report` stealing them every run.
             let r = worker.run(setup);
+            progress.emit_done(tel);
+            if r.timed_out {
+                return PointOutcome::TimedOut {
+                    steps: r.watchdog_steps,
+                };
+            }
             counters.merge(&Counters::from_report(r));
             let s = r.latency_summary();
             let res = ScenarioResult {
@@ -658,21 +1043,46 @@ fn run_scenario_sweep_inner(
                 phases: r.phases.clone(),
             };
             let trace = worker.take_probe_trace();
-            progress.emit_done(tel);
-            Ok((res, trace))
+            PointOutcome::Ok((res, trace))
         },
     );
-    let pairs = collect_results(
-        results,
-        |i| scenarios[i].name.clone(),
-        "scenario sweep failures",
-    )?;
-    let mut results = Vec::with_capacity(pairs.len());
-    let mut traces = Vec::with_capacity(pairs.len());
-    for (res, trace) in pairs {
-        results.push(res);
-        traces.push(trace);
+    let mut failures = FailureReport::new(scenarios.len());
+    let mut errs = Vec::new();
+    let mut results = Vec::with_capacity(scenarios.len());
+    let mut traces = Vec::with_capacity(scenarios.len());
+    for (i, out) in outcomes.into_iter().enumerate() {
+        match out {
+            PointOutcome::Ok((res, trace)) => {
+                results.push(res);
+                traces.push(trace);
+            }
+            out => {
+                let kind = out.failure_kind().unwrap_or("error");
+                let detail = out.failure_detail();
+                if policy.is_quarantine() {
+                    failures.record(
+                        i,
+                        scenarios[i].name.clone(),
+                        kind,
+                        detail,
+                    );
+                } else {
+                    errs.push(format!(
+                        "{}: {detail}",
+                        scenarios[i].name
+                    ));
+                }
+            }
+        }
     }
+    if !errs.is_empty() {
+        return Err(Error::Sim(format!(
+            "scenario sweep failures: {}",
+            errs.join("; ")
+        )));
+    }
+    quarantine_guard(&policy, &failures)?;
+    emit_point_failures(tel, "scenario", &failures);
     // Per-phase events are deterministic, so they are emitted here —
     // post-collection, in input order, from the calling thread — never
     // concurrently from the pool.
@@ -684,7 +1094,7 @@ fn run_scenario_sweep_inner(
             });
         }
     }
-    Ok((results, counters, traces))
+    Ok((results, counters, traces, failures))
 }
 
 /// Build the Figure-3 point grid: every scheduler at every rate.
@@ -814,26 +1224,16 @@ mod tests {
         assert_eq!(out.len(), 64);
         for (i, r) in out.iter().enumerate() {
             if i % 13 == 5 {
-                assert!(r.is_err(), "item {i}");
+                let msg = r.as_ref().unwrap_err().to_string();
+                assert!(msg.contains(&format!("boom{i}")), "{msg}");
             } else {
                 assert_eq!(*r.as_ref().unwrap(), i * 2);
             }
         }
         let all_ok = parallel_map(&items, 3, |_, &x| Ok(x + 1));
-        let vals =
-            collect_results(all_ok, |i| format!("{i}"), "failures").unwrap();
+        let vals: Vec<usize> =
+            all_ok.into_iter().map(|r| r.unwrap()).collect();
         assert_eq!(vals, (1..=64).collect::<Vec<_>>());
-        let one_bad = parallel_map(&items, 3, |_, &x| {
-            if x == 7 {
-                Err(crate::Error::Sim("seven".into()))
-            } else {
-                Ok(x)
-            }
-        });
-        let err = collect_results(one_bad, |i| format!("item{i}"), "fail")
-            .unwrap_err();
-        let msg = err.to_string();
-        assert!(msg.contains("item7") && msg.contains("seven"), "{msg}");
     }
 
     #[test]
@@ -908,6 +1308,121 @@ mod tests {
         assert_eq!(c1.get("items"), 39);
         assert_eq!(c1.get("sum"), (0..40).sum::<u64>() - 11);
         assert!(res8[11].is_err());
+    }
+
+    #[test]
+    fn pooled_outcomes_contain_panics_and_rebuild_state() {
+        let items: Vec<usize> = (0..24).collect();
+        let built = AtomicUsize::new(0);
+        let out = parallel_map_pooled_outcomes(
+            &items,
+            4,
+            || {
+                built.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |depth, _, &x| {
+                *depth += 1;
+                if x % 7 == 3 {
+                    panic!("boom{x}");
+                }
+                PointOutcome::Ok((x, *depth))
+            },
+        );
+        assert_eq!(out.len(), 24);
+        let mut panics = 0;
+        for (i, o) in out.iter().enumerate() {
+            if i % 7 == 3 {
+                panics += 1;
+                match o {
+                    PointOutcome::Panicked { msg } => {
+                        assert_eq!(msg, &format!("boom{i}"));
+                    }
+                    other => panic!("expected Panicked: {other:?}"),
+                }
+            } else {
+                assert!(o.is_ok(), "item {i}: {o:?}");
+            }
+        }
+        assert_eq!(panics, 3);
+        // Poisoned-state replacement: each panic discarded the pinned
+        // state, so `init` ran once per pool thread (≤ 4) plus once
+        // per panic.
+        let inits = built.load(Ordering::Relaxed);
+        assert!(
+            inits >= 1 + panics && inits <= 4 + panics,
+            "unexpected init count {inits}"
+        );
+    }
+
+    #[test]
+    fn fail_policy_parse_grammar() {
+        assert_eq!(
+            FailPolicy::parse("abort").unwrap(),
+            FailPolicy::Abort
+        );
+        assert_eq!(
+            FailPolicy::parse("quarantine").unwrap(),
+            FailPolicy::Quarantine { max_failures: None }
+        );
+        assert_eq!(
+            FailPolicy::parse("quarantine:5").unwrap(),
+            FailPolicy::Quarantine { max_failures: Some(5) }
+        );
+        assert!(FailPolicy::parse("retry").is_err());
+        assert!(FailPolicy::parse("quarantine:x").is_err());
+        assert!(FailPolicy::parse("quarantine:").is_err());
+    }
+
+    #[test]
+    fn sweep_quarantines_injected_panic() {
+        // Unique rate → unique "met@2.125" label, so the armed fault
+        // cannot leak into concurrently running sweep tests.
+        let p = Platform::table2_soc();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let pts = fig3_points(&["etf", "met"], &[0.5, 2.125], 3);
+        let _g = crate::faultpoint::Armed::new(
+            crate::faultpoint::sites::SWEEP_POINT,
+            "met@2.125",
+            crate::faultpoint::Fault::Panic,
+        );
+        let (res, counters, fr) = run_sweep_quarantined(
+            &p,
+            &apps,
+            &small_base(),
+            &pts,
+            2,
+            &Telemetry::disabled(),
+            None,
+            FailPolicy::Quarantine { max_failures: None },
+        )
+        .unwrap();
+        assert_eq!(res.len(), 3, "healthy points survive");
+        assert_eq!(fr.quarantined(), 1);
+        assert_eq!(fr.failed[0].label, "met@2.125");
+        assert_eq!(fr.failed[0].kind, "panic");
+        assert_eq!(fr.failed[0].index, 3);
+        // Failed point contributes no counters.
+        assert_eq!(counters.get("runs"), 3);
+        // A zero quarantine budget aborts on the same fault…
+        assert!(run_sweep_quarantined(
+            &p,
+            &apps,
+            &small_base(),
+            &pts,
+            2,
+            &Telemetry::disabled(),
+            None,
+            FailPolicy::Quarantine { max_failures: Some(0) },
+        )
+        .is_err());
+        // …and so does the abort policy (as an error, not a crash).
+        let err =
+            run_sweep(&p, &apps, &small_base(), &pts, 2).unwrap_err();
+        assert!(
+            err.to_string().contains("met@2.125"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -30,11 +30,16 @@ use super::genome::{GenomeSpace, PlatformGenome};
 use super::Objective;
 use crate::app::AppGraph;
 use crate::config::SimConfig;
-use crate::coordinator::{parallel_map_pooled, size_ordered_indices};
+use crate::coordinator::{
+    parallel_map_pooled_outcomes, quarantine_guard, size_ordered_indices,
+    FailPolicy, PointOutcome,
+};
+use crate::faultpoint;
 use crate::scenario::Scenario;
 use crate::sim::{SimSetup, SimWorker};
+use crate::stats::FailureReport;
 use crate::store::{point_key, PointEntry, StoreCtx};
-use crate::telemetry::{config_hash, Counters};
+use crate::telemetry::{config_hash, emit_global, Counters, Event};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -122,10 +127,17 @@ pub struct Evaluator {
     cache: BTreeMap<String, EvalMetrics>,
     /// Optional experiment store consulted before simulating.
     store: Option<StoreCtx>,
+    /// What to do when one genome's evaluation panics, times out or
+    /// errors ([`Evaluator::set_fail_policy`]; defaults to abort).
+    fail_policy: FailPolicy,
     /// Genome evaluations requested (cache hits included).
     pub evals_requested: usize,
     /// Evaluations served from the cache.
     pub cache_hits: usize,
+    /// Evaluations quarantined under [`FailPolicy::Quarantine`]: the
+    /// design was scored with a finite worst-case surrogate (so the
+    /// search dominates it away) and never written to the store.
+    pub quarantined: usize,
     /// Evaluations served from the experiment store (counted neither
     /// as cache hits nor as simulations; not checkpointed — the store
     /// itself is the persistent record).
@@ -155,11 +167,20 @@ impl Evaluator {
             genome_owns_power_cap,
             cache: BTreeMap::new(),
             store: None,
+            fail_policy: FailPolicy::Abort,
             evals_requested: 0,
             cache_hits: 0,
+            quarantined: 0,
             store_hits: 0,
             sims_run: 0,
         })
+    }
+
+    /// Choose what a failed genome evaluation does to the batch: abort
+    /// the search (default) or quarantine the design behind a finite
+    /// worst-case surrogate score.
+    pub fn set_fail_policy(&mut self, policy: FailPolicy) {
+        self.fail_policy = policy;
     }
 
     /// Attach (or detach) an experiment store: batch evaluation
@@ -258,20 +279,39 @@ impl Evaluator {
         // across the whole seeds×scenarios grid of each genome AND
         // across the genomes the thread evaluates (the worker re-binds
         // to each genome's decoded-platform setup on reset).
-        let pooled = parallel_map_pooled(
+        let pooled = parallel_map_pooled_outcomes(
             &permuted,
             self.threads,
             || None::<SimWorker>,
-            |slot, _, entry| self.eval_one(space, apps, &entry.1, slot),
+            |slot, _, entry| {
+                faultpoint::fire_panic(
+                    faultpoint::sites::SWEEP_POINT,
+                    &entry.1.id(),
+                );
+                self.eval_one(space, apps, &entry.1, slot)
+            },
         );
-        let mut fresh: Vec<Option<Result<EvalMetrics>>> =
+        let mut fresh: Vec<Option<PointOutcome<EvalMetrics>>> =
             uncached.iter().map(|_| None).collect();
         for (&i, r) in order.iter().zip(pooled) {
             fresh[i] = Some(r);
         }
-        for ((key, g), m) in uncached.iter().zip(fresh) {
-            match m.expect("scatter covers every index") {
-                Ok(m) => {
+        // Canonical-order triage.  A healthy eval enters the store and
+        // the cache; a failed one either aborts the batch or — under
+        // quarantine — is scored with a finite worst-case surrogate
+        // (dominated by any design that actually ran) and is never
+        // written to the store.
+        let mut failures = FailureReport::new(uncached.len());
+        for (i, ((key, g), m)) in
+            uncached.iter().zip(fresh).enumerate()
+        {
+            let out = m.unwrap_or_else(|| {
+                PointOutcome::Error(Error::Internal(format!(
+                    "dse eval {i} not scattered back"
+                )))
+            });
+            match out {
+                PointOutcome::Ok(m) => {
                     if let Some(ctx) = &self.store {
                         let ch = self.eval_config_hash(g);
                         ctx.store.put_point(&PointEntry {
@@ -285,13 +325,37 @@ impl Evaluator {
                     }
                     self.cache.insert(key.clone(), m);
                 }
-                Err(e) => {
-                    return Err(Error::Sim(format!(
-                        "evaluating design {}: {e}",
-                        g.id()
-                    )))
+                failure => {
+                    let kind =
+                        failure.failure_kind().unwrap_or("error");
+                    let detail = failure.failure_detail();
+                    if self.fail_policy.is_quarantine() {
+                        self.quarantined += 1;
+                        failures.record(i, g.id(), kind, detail);
+                        self.cache.insert(
+                            key.clone(),
+                            self.quarantine_surrogate(),
+                        );
+                    } else {
+                        return Err(Error::Sim(format!(
+                            "evaluating design {}: {detail}",
+                            g.id()
+                        )));
+                    }
                 }
             }
+        }
+        quarantine_guard(&self.fail_policy, &failures)?;
+        // Deterministic post-collection emission, canonical order.
+        for p in &failures.failed {
+            let (label, kind, detail) =
+                (p.label.clone(), p.kind.clone(), p.detail.clone());
+            emit_global(|| Event::PointFailed {
+                what: "dse".to_string(),
+                label,
+                kind,
+                detail,
+            });
         }
         Ok(genomes
             .iter()
@@ -299,19 +363,48 @@ impl Evaluator {
             .collect())
     }
 
+    /// Finite worst-case metrics a quarantined design is scored with:
+    /// every objective lands at (or beyond) the penalty a saturated
+    /// design earns, `completed_frac` 0 engages the latency completion
+    /// penalty, and every field survives the JSON checkpoint
+    /// round-trip.  `runs == 0` marks the record as a surrogate.
+    fn quarantine_surrogate(&self) -> EvalMetrics {
+        EvalMetrics {
+            avg_latency_us: self.base_cfg.max_sim_us,
+            p95_latency_us: self.base_cfg.max_sim_us,
+            energy_per_job_mj: 1e6,
+            peak_temp_c: 1e3,
+            throughput_jobs_per_ms: 0.0,
+            avg_power_w: 0.0,
+            completed_frac: 0.0,
+            runs: 0,
+        }
+    }
+
     /// Decode and run the full `seeds × scenarios` grid for one genome
     /// on the calling thread's pinned worker (`slot`) — one setup build
-    /// per genome instead of one per simulation.
+    /// per genome instead of one per simulation.  Returns a
+    /// [`PointOutcome`] so a step-budget timeout keeps its own verdict
+    /// (a panic is caught one level up, in the pool).
     fn eval_one(
         &self,
         space: &GenomeSpace,
         apps: &[AppGraph],
         g: &PlatformGenome,
         slot: &mut Option<SimWorker>,
-    ) -> Result<EvalMetrics> {
-        let (platform, cap) = space.decode(g)?;
-        let setup =
-            SimSetup::with_owned_platform(platform, apps, &self.base_cfg)?;
+    ) -> PointOutcome<EvalMetrics> {
+        let (platform, cap) = match space.decode(g) {
+            Ok(v) => v,
+            Err(e) => return PointOutcome::Error(e),
+        };
+        let setup = match SimSetup::with_owned_platform(
+            platform,
+            apps,
+            &self.base_cfg,
+        ) {
+            Ok(s) => s,
+            Err(e) => return PointOutcome::Error(e),
+        };
         let mut acc = EvalMetrics {
             avg_latency_us: 0.0,
             p95_latency_us: 0.0,
@@ -344,8 +437,17 @@ impl Evaluator {
                     // even when the base config carries a cap.
                     cfg.dtpm.power_cap_w = cap;
                 }
-                let worker = SimWorker::obtain(slot, &setup, &cfg)?;
+                let worker = match SimWorker::obtain(slot, &setup, &cfg)
+                {
+                    Ok(w) => w,
+                    Err(e) => return PointOutcome::Error(e),
+                };
                 let r = worker.run(&setup);
+                if r.timed_out {
+                    return PointOutcome::TimedOut {
+                        steps: r.watchdog_steps,
+                    };
+                }
                 let s = r.latency_summary();
                 // A run with zero (post-warmup) completions would report
                 // 0 latency / 0 energy-per-job and look falsely optimal;
@@ -381,7 +483,7 @@ impl Evaluator {
         acc.throughput_jobs_per_ms /= n;
         acc.avg_power_w /= n;
         acc.completed_frac /= n;
-        Ok(acc)
+        PointOutcome::Ok(acc)
     }
 
     /// Serialize the cache for checkpointing (sorted by canonical key,
@@ -622,6 +724,79 @@ mod tests {
         assert_eq!(warm.sims_run, 0, "warm store must skip all sims");
         assert_eq!(warm.store_hits, unique.len());
         assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantined_eval_scores_worst_case_and_skips_store() {
+        let space = small_space();
+        let apps = vec![suite::wifi_tx(WifiParams { symbols: 2 })];
+        let mut rng = crate::rng::Rng::new(21);
+        let genomes: Vec<_> =
+            (0..3).map(|_| space.random(&mut rng)).collect();
+        // Arm a panic against exactly one design's id — unique enough
+        // that concurrently running tests cannot trip it.
+        let bad = genomes[1].id();
+        let _g = faultpoint::Armed::new(
+            faultpoint::sites::SWEEP_POINT,
+            &bad,
+            faultpoint::Fault::Panic,
+        );
+        let dir =
+            std::env::temp_dir().join("ds3r_dse_quarantine_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = crate::store::ExperimentStore::open(&dir).unwrap();
+        let ctx = StoreCtx {
+            store,
+            workload_digest: "wd-test".into(),
+        };
+
+        // Default (abort) policy: the injected panic fails the batch.
+        let mut ev =
+            Evaluator::new(small_cfg(), vec![1], vec![], 2, true)
+                .unwrap();
+        ev.set_store(Some(ctx.clone()));
+        let err =
+            ev.evaluate_batch(&space, &apps, &genomes).unwrap_err();
+        assert!(
+            err.to_string().contains(&bad),
+            "abort error must name the design: {err}"
+        );
+
+        // Quarantine: the bad design gets the dominated surrogate.
+        let mut ev2 =
+            Evaluator::new(small_cfg(), vec![1], vec![], 2, true)
+                .unwrap();
+        ev2.set_store(Some(ctx.clone()));
+        ev2.set_fail_policy(FailPolicy::Quarantine {
+            max_failures: None,
+        });
+        let m = ev2.evaluate_batch(&space, &apps, &genomes).unwrap();
+        assert_eq!(ev2.quarantined, 1);
+        assert_eq!(m[1].runs, 0, "surrogate marks itself");
+        assert!(
+            m[1].objective(Objective::Latency)
+                > m[0].objective(Objective::Latency),
+            "surrogate must be dominated"
+        );
+
+        // A fresh evaluator over the same store: only the two healthy
+        // designs were recorded, the quarantined one re-simulates (and
+        // — still armed — quarantines again).
+        let mut warm =
+            Evaluator::new(small_cfg(), vec![1], vec![], 2, true)
+                .unwrap();
+        warm.set_store(Some(ctx));
+        warm.set_fail_policy(FailPolicy::Quarantine {
+            max_failures: None,
+        });
+        let m2 = warm.evaluate_batch(&space, &apps, &genomes).unwrap();
+        assert_eq!(
+            warm.store_hits, 2,
+            "failed evals must never be cached"
+        );
+        assert_eq!(warm.quarantined, 1);
+        assert_eq!(m2, m);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -126,6 +126,22 @@ impl DseEngine {
         self.evaluator.store_hits
     }
 
+    /// Route evaluation failures (panics, watchdog trips, per-design
+    /// errors) per `policy` instead of aborting the search (see
+    /// [`Evaluator::set_fail_policy`]).  Quarantined designs score the
+    /// finite worst-case surrogate and are dominated away.
+    pub fn set_fail_policy(
+        &mut self,
+        policy: crate::coordinator::FailPolicy,
+    ) {
+        self.evaluator.set_fail_policy(policy);
+    }
+
+    /// Evaluations quarantined under the active fail policy.
+    pub fn quarantined(&self) -> usize {
+        self.evaluator.quarantined
+    }
+
     /// Attach an opaque workload description persisted with every
     /// checkpoint (see the `workload` field).
     pub fn set_workload_meta(&mut self, meta: Json) {

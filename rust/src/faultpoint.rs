@@ -1,0 +1,258 @@
+//! Fault-injection test hooks — a process-global registry of *armed*
+//! faults that production code consults at named sites.
+//!
+//! This generalizes the fuzz tournament's `inject_label` hook into a
+//! reusable primitive: tests (and the CLI's `--inject-fault` flag) arm
+//! a fault against a `(site, label-prefix)` pair, and the instrumented
+//! code paths — the coordinator's pooled sweep points, the simulation
+//! event loop, and the store's write path — fire it when they process
+//! a matching label.  Three fault kinds cover the failure modes the
+//! quarantine machinery must contain:
+//!
+//! * [`Fault::Panic`] — the site panics, exercising `catch_unwind`
+//!   quarantine and poisoned-worker replacement.
+//! * [`Fault::SlowLoop`] — the simulation's watchdog step counter is
+//!   pre-charged by `steps`, so a configured step budget trips
+//!   deterministically without wall-clock dependence.
+//! * [`Fault::IoError`] — the store's write path sees a synthetic
+//!   transient IO error for the next `times` attempts, exercising the
+//!   bounded retry schedule.
+//!
+//! The registry is **zero-cost when disarmed**: every check starts with
+//! one relaxed atomic load (the same guard discipline as
+//! [`crate::telemetry`]), and the map lock is only taken while a fault
+//! is armed.  Injection is deterministic — whether a fault fires
+//! depends only on the armed table and the label at the site, never on
+//! thread identity or timing — so degraded runs stay bit-reproducible
+//! across thread counts.
+//!
+//! Tests that arm faults share process state; use distinct site names
+//! (or the scoped [`Armed`] guard plus a per-test label prefix) so
+//! parallel tests cannot observe each other's faults.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// One injectable fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic at the site (message carries site + label).
+    Panic,
+    /// Pre-charge the simulation watchdog by this many steps.
+    SlowLoop { steps: u64 },
+    /// Fail the next `times` IO attempts at the site, then succeed.
+    IoError { times: u64 },
+}
+
+/// Armed faults keyed by `(site, label_prefix)`.  A site fires the
+/// first entry (in key order, deterministically) whose site matches
+/// and whose prefix starts the label.
+static ARMED: Mutex<BTreeMap<(String, String), Fault>> =
+    Mutex::new(BTreeMap::new());
+
+/// Fast-path guard: true iff any fault is armed anywhere.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+fn table() -> std::sync::MutexGuard<'static, BTreeMap<(String, String), Fault>>
+{
+    // A panic *while armed* is expected (that is the point of
+    // `Fault::Panic`), so recover from poisoning instead of cascading.
+    ARMED.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Arm `fault` at `site` for labels starting with `label_prefix`.
+/// Re-arming the same `(site, prefix)` replaces the previous fault.
+pub fn arm(site: &str, label_prefix: &str, fault: Fault) {
+    let mut t = table();
+    t.insert((site.to_string(), label_prefix.to_string()), fault);
+    ANY_ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm one `(site, prefix)` entry.
+pub fn disarm(site: &str, label_prefix: &str) {
+    let mut t = table();
+    t.remove(&(site.to_string(), label_prefix.to_string()));
+    ANY_ARMED.store(!t.is_empty(), Ordering::Release);
+}
+
+/// Disarm everything.
+pub fn clear() {
+    let mut t = table();
+    t.clear();
+    ANY_ARMED.store(false, Ordering::Release);
+}
+
+/// True iff any fault is armed (one relaxed load — the hot-path guard).
+#[inline]
+pub fn any_armed() -> bool {
+    ANY_ARMED.load(Ordering::Relaxed)
+}
+
+/// The fault armed at `site` for `label`, if any.
+fn lookup(site: &str, label: &str) -> Option<Fault> {
+    if !any_armed() {
+        return None;
+    }
+    let t = table();
+    t.iter()
+        .find(|((s, prefix), _)| s == site && label.starts_with(prefix.as_str()))
+        .map(|(_, f)| f.clone())
+}
+
+/// Panic iff a [`Fault::Panic`] is armed at `(site, label)`.  Call at
+/// the top of a quarantinable unit of work.
+#[inline]
+pub fn fire_panic(site: &str, label: &str) {
+    if !any_armed() {
+        return;
+    }
+    if let Some(Fault::Panic) = lookup(site, label) {
+        panic!("injected panic at {site}: {label}");
+    }
+}
+
+/// Steps to pre-charge a watchdog counter with, when a
+/// [`Fault::SlowLoop`] is armed at `(site, label)` (0 otherwise).
+#[inline]
+pub fn slow_penalty(site: &str, label: &str) -> u64 {
+    if !any_armed() {
+        return 0;
+    }
+    match lookup(site, label) {
+        Some(Fault::SlowLoop { steps }) => steps,
+        _ => 0,
+    }
+}
+
+/// Take one synthetic IO error if a [`Fault::IoError`] with remaining
+/// charges is armed at `(site, label)`; decrements the charge count.
+#[inline]
+pub fn take_io_error(site: &str, label: &str) -> Option<std::io::Error> {
+    if !any_armed() {
+        return None;
+    }
+    let mut t = table();
+    let hit = t
+        .iter_mut()
+        .find(|((s, prefix), f)| {
+            s == site
+                && label.starts_with(prefix.as_str())
+                && matches!(f, Fault::IoError { times } if *times > 0)
+        })
+        .map(|(_, f)| f);
+    if let Some(Fault::IoError { times }) = hit {
+        *times -= 1;
+        return Some(std::io::Error::new(
+            std::io::ErrorKind::Interrupted,
+            format!("injected io error at {site}: {label}"),
+        ));
+    }
+    None
+}
+
+/// Does any label in `labels` start with `prefix`?  Shared helper for
+/// label-prefix hooks (the fuzz tournament's injected-violation check
+/// uses it against scenario event labels).
+pub fn prefix_hit<'a, I>(prefix: &str, labels: I) -> bool
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    labels.into_iter().any(|l| l.starts_with(prefix))
+}
+
+/// RAII guard: arms a fault on construction, disarms it on drop, so a
+/// panicking test cannot leave the process armed.
+pub struct Armed {
+    site: String,
+    prefix: String,
+}
+
+impl Armed {
+    pub fn new(site: &str, label_prefix: &str, fault: Fault) -> Armed {
+        arm(site, label_prefix, fault);
+        Armed {
+            site: site.to_string(),
+            prefix: label_prefix.to_string(),
+        }
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        disarm(&self.site, &self.prefix);
+    }
+}
+
+/// Instrumented site names (one per consulted code path, so tests and
+/// `--inject-fault` target exactly one layer).
+pub mod sites {
+    /// Pooled sweep points ([`crate::coordinator`]); labels are
+    /// `"{scheduler}@{rate}"`.
+    pub const SWEEP_POINT: &str = "coordinator.sweep_point";
+    /// The simulation event loop's watchdog counter
+    /// ([`crate::sim::SimWorker::run`]); labels are the scheduler name.
+    pub const SIM_LOOP: &str = "sim.run_loop";
+    /// The store's atomic JSON writes ([`crate::store`]); labels are
+    /// the destination file name.
+    pub const STORE_WRITE: &str = "store.write_json";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_registry_is_inert() {
+        // Distinct site: other tests may be armed concurrently.
+        let site = "test.inert";
+        assert_eq!(slow_penalty(site, "anything"), 0);
+        assert!(take_io_error(site, "anything").is_none());
+        fire_panic(site, "anything"); // must not panic
+    }
+
+    #[test]
+    fn panic_fires_only_on_matching_prefix() {
+        let site = "test.panic_site";
+        let _g = Armed::new(site, "bad-", Fault::Panic);
+        fire_panic(site, "good-point"); // no match, no panic
+        let err = std::panic::catch_unwind(|| {
+            fire_panic(site, "bad-point");
+        });
+        assert!(err.is_err(), "matching label must panic");
+    }
+
+    #[test]
+    fn slow_loop_reports_penalty_and_io_error_counts_down() {
+        let site = "test.slow_site";
+        let _g = Armed::new(site, "x", Fault::SlowLoop { steps: 500 });
+        assert_eq!(slow_penalty(site, "x1"), 500);
+        assert_eq!(slow_penalty(site, "y1"), 0);
+
+        let io_site = "test.io_site";
+        let _g2 = Armed::new(io_site, "f", Fault::IoError { times: 2 });
+        assert!(take_io_error(io_site, "file.json").is_some());
+        assert!(take_io_error(io_site, "file.json").is_some());
+        assert!(
+            take_io_error(io_site, "file.json").is_none(),
+            "charges exhausted"
+        );
+    }
+
+    #[test]
+    fn armed_guard_disarms_on_drop() {
+        let site = "test.guard_site";
+        {
+            let _g = Armed::new(site, "", Fault::SlowLoop { steps: 1 });
+            assert_eq!(slow_penalty(site, "any"), 1);
+        }
+        assert_eq!(slow_penalty(site, "any"), 0);
+    }
+
+    #[test]
+    fn prefix_hit_matches_any_label() {
+        assert!(prefix_hit("rate=", ["x", "rate=2"].into_iter()));
+        assert!(!prefix_hit("rate=", ["x", "y"].into_iter()));
+        assert!(!prefix_hit("rate=", std::iter::empty()));
+    }
+}

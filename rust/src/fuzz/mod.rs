@@ -21,4 +21,7 @@ pub mod tournament;
 
 pub use gen::FuzzConfig;
 pub use oracle::{check, Violation, ORACLE_NAMES};
-pub use tournament::{replay, run_tournament, Repro, TournamentOpts};
+pub use tournament::{
+    replay, run_tournament, run_tournament_with_policy, Repro,
+    TournamentOpts,
+};

@@ -30,11 +30,17 @@ use std::path::{Path, PathBuf};
 
 use crate::app::AppGraph;
 use crate::config::SimConfig;
-use crate::coordinator::{parallel_map_pooled, size_ordered_indices};
+use crate::coordinator::{
+    parallel_map_pooled_outcomes, quarantine_guard, size_ordered_indices,
+    FailPolicy, PointOutcome,
+};
+use crate::faultpoint;
 use crate::platform::Platform;
 use crate::scenario::Scenario;
 use crate::sim::{SimSetup, SimWorker};
-use crate::stats::{CellScore, SchedStanding, TournamentReport};
+use crate::stats::{
+    CellScore, FailureReport, SchedStanding, TournamentReport,
+};
 use crate::store::{point_key, PointEntry, StoreCtx};
 use crate::telemetry::{config_hash, emit_global, Counters, Event};
 use crate::util::json::Json;
@@ -136,6 +142,13 @@ pub(crate) fn cell_cost(sched: &str, scenario: &Scenario) -> u64 {
     sched_cost_weight(sched) + scenario.events.len() as u64
 }
 
+/// Fault-injection / quarantine label of one cell — the string the
+/// [`crate::faultpoint::sites::SWEEP_POINT`] site matches against and
+/// the `point_failed` event carries.
+fn cell_label(sched: &str, scenario: &Scenario) -> String {
+    format!("{sched}@{}", scenario.name)
+}
+
 fn check_cell(
     report: &crate::stats::SimReport,
     cfg: &SimConfig,
@@ -144,11 +157,12 @@ fn check_cell(
 ) -> Vec<Violation> {
     let mut v = oracle::check(report, cfg);
     if let Some(prefix) = inject_label {
-        if scenario
-            .events
-            .iter()
-            .any(|e| e.action.label().starts_with(prefix))
-        {
+        let labels: Vec<String> =
+            scenario.events.iter().map(|e| e.action.label()).collect();
+        if faultpoint::prefix_hit(
+            prefix,
+            labels.iter().map(String::as_str),
+        ) {
             v.push(Violation {
                 oracle: INJECTED_ORACLE.to_string(),
                 detail: format!(
@@ -164,13 +178,40 @@ fn check_cell(
 /// `opts.schedulers` policy over each through pooled workers, oracle
 /// every report, shrink and persist any violation, and rank the
 /// roster.  Returns the report plus the aggregated deterministic
-/// counters (for the caller's `run_finished` event).
+/// counters (for the caller's `run_finished` event).  Any failing
+/// cell aborts the whole tournament; see
+/// [`run_tournament_with_policy`] for quarantine semantics.
 pub fn run_tournament(
     platform: &Platform,
     apps: &[AppGraph],
     fuzz: &FuzzConfig,
     opts: &TournamentOpts,
 ) -> Result<(TournamentReport, Counters)> {
+    run_tournament_with_policy(
+        platform,
+        apps,
+        fuzz,
+        opts,
+        &FailPolicy::Abort,
+    )
+    .map(|(report, counters, _)| (report, counters))
+}
+
+/// [`run_tournament`] with an explicit [`FailPolicy`].  Under
+/// [`FailPolicy::Quarantine`], a cell whose simulation panics, trips
+/// the step-budget watchdog, or errors is dropped from the grid:
+/// standings rank only surviving cells, the quarantined cell is never
+/// written to the store, and the failure lands in the returned
+/// [`FailureReport`] plus one deterministic `point_failed` telemetry
+/// event.  Cell labels are `"{scheduler}@{scenario}"` (the
+/// [`crate::faultpoint::sites::SWEEP_POINT`] site fires on them).
+pub fn run_tournament_with_policy(
+    platform: &Platform,
+    apps: &[AppGraph],
+    fuzz: &FuzzConfig,
+    opts: &TournamentOpts,
+    policy: &FailPolicy,
+) -> Result<(TournamentReport, Counters, FailureReport)> {
     fuzz.validate()?;
     if opts.schedulers.is_empty() {
         return Err(Error::Config(
@@ -240,13 +281,17 @@ pub fn run_tournament(
     let ordered: Vec<(usize, (usize, usize))> =
         order.iter().map(|&i| fresh[i]).collect();
 
-    let permuted = parallel_map_pooled(
+    let permuted = parallel_map_pooled_outcomes(
         &ordered,
         opts.threads,
         || None::<SimWorker>,
         |slot, _, &(_, (s, c))| {
             let sched = &opts.schedulers[s];
             let scenario = &scenarios[c];
+            faultpoint::fire_panic(
+                faultpoint::sites::SWEEP_POINT,
+                &cell_label(sched, scenario),
+            );
             let cfg = case_config(
                 sched,
                 scenario,
@@ -254,8 +299,16 @@ pub fn run_tournament(
                 fuzz.jobs,
                 rate,
             );
-            let worker = SimWorker::obtain(slot, &setup, &cfg)?;
+            let worker = match SimWorker::obtain(slot, &setup, &cfg) {
+                Ok(w) => w,
+                Err(e) => return PointOutcome::Error(e),
+            };
             let report = worker.run(&setup);
+            if report.timed_out {
+                return PointOutcome::TimedOut {
+                    steps: report.watchdog_steps,
+                };
+            }
             let cell_counters = Counters::from_report(report);
             let summary = report.latency_summary();
             let deadline_misses = report
@@ -292,20 +345,41 @@ pub fn run_tournament(
                     .map(|v| (v.oracle, v.detail))
                     .collect(),
             };
-            Ok((score, cell_counters))
+            PointOutcome::Ok((score, cell_counters))
         },
     );
 
-    // Scatter back to canonical order, aggregating failures.
-    let mut errs = Vec::new();
+    // Scatter back to canonical slot order, then triage fresh cells
+    // in canonical order: failures either abort the tournament or
+    // land in the quarantine report, depending on policy.
+    let mut outcome_slots: Vec<Option<PointOutcome<(CellScore, Counters)>>> =
+        Vec::new();
+    outcome_slots.resize_with(cells.len(), || None);
     for (k, r) in permuted.into_iter().enumerate() {
-        let (slot_idx, (s, c)) = ordered[k];
-        match r {
-            Ok(pair) => slots[slot_idx] = Some(pair),
-            Err(e) => errs.push(format!(
-                "{}×case{}: {e}",
-                opts.schedulers[s], c
-            )),
+        outcome_slots[ordered[k].0] = Some(r);
+    }
+    let mut errs = Vec::new();
+    let mut failures = FailureReport::new(cells.len());
+    for &(i, (s, c)) in &fresh {
+        let label =
+            cell_label(&opts.schedulers[s], &scenarios[c]);
+        let out = match outcome_slots[i].take() {
+            Some(o) => o,
+            None => PointOutcome::Error(Error::Internal(format!(
+                "tournament cell {i} not scattered back"
+            ))),
+        };
+        match out {
+            PointOutcome::Ok(pair) => slots[i] = Some(pair),
+            failure => {
+                let kind = failure.failure_kind().unwrap_or("error");
+                let detail = failure.failure_detail();
+                if policy.is_quarantine() {
+                    failures.record(i, label, kind, detail);
+                } else {
+                    errs.push(format!("{label}: {detail}"));
+                }
+            }
         }
     }
     if !errs.is_empty() {
@@ -314,13 +388,16 @@ pub fn run_tournament(
             errs.join("; ")
         )));
     }
+    quarantine_guard(policy, &failures)?;
 
     // Record fresh violation-free cells back into the store (serial,
-    // canonical order) before consuming the slots.
+    // canonical order) before consuming the slots.  Quarantined cells
+    // have no slot and are never cached.
     if let Some(ctx) = &opts.store {
         for &(i, _) in &fresh {
-            let (score, cc) =
-                slots[i].as_ref().expect("all cells ok");
+            let Some((score, cc)) = slots[i].as_ref() else {
+                continue;
+            };
             if score.violations.is_empty() {
                 ctx.store.put_point(&PointEntry {
                     kind: "fuzz".into(),
@@ -336,14 +413,26 @@ pub fn run_tournament(
 
     // Canonical-order merge, mixing cached and fresh cells: the
     // aggregate counters and the score list come out byte-identical
-    // for any thread count and any cache state.
+    // for any thread count and any cache state.  Quarantined cells
+    // are dropped; an unresolved *healthy* slot is an internal
+    // invariant breach, not a user error.
     let mut counters = Counters::new();
     let mut cell_scores: Vec<CellScore> =
         Vec::with_capacity(cells.len());
-    for s in slots {
-        let (score, cc) = s.expect("all cells ok");
-        counters.merge(&cc);
-        cell_scores.push(score);
+    for (i, s) in slots.into_iter().enumerate() {
+        match s {
+            Some((score, cc)) => {
+                counters.merge(&cc);
+                cell_scores.push(score);
+            }
+            None if failures.failed.iter().any(|f| f.index == i) => {}
+            None => {
+                return Err(Error::Internal(format!(
+                    "tournament cell {i} neither resolved nor \
+                     quarantined"
+                )))
+            }
+        }
     }
 
     // Shrink + persist every violated cell, in canonical order.
@@ -389,6 +478,18 @@ pub fn run_tournament(
             violations: ev.violations.len(),
         });
     }
+    // Quarantined cells, post-collection in canonical order, from the
+    // calling thread: deterministic for any thread count.
+    for p in &failures.failed {
+        let (label, kind, detail) =
+            (p.label.clone(), p.kind.clone(), p.detail.clone());
+        emit_global(|| Event::PointFailed {
+            what: "fuzz".to_string(),
+            label,
+            kind,
+            detail,
+        });
+    }
     let best = standings
         .first()
         .map(|s| s.scheduler.clone())
@@ -411,7 +512,7 @@ pub fn run_tournament(
         violations,
         repros,
     };
-    Ok((report, counters))
+    Ok((report, counters, failures))
 }
 
 /// Rank the roster: per-metric ascending ranks (1 + number of strictly
@@ -893,6 +994,69 @@ mod tests {
             c2.to_json().to_string(),
             "aggregate counters must merge back byte-identically"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_drops_panicked_cells_and_never_caches_them() {
+        let p = Platform::table2_soc();
+        let apps = workload();
+        let mut fuzz = tiny_fuzz();
+        // Unique seed → unique scenario names ("fuzz-s777-c*"), so the
+        // armed prefix cannot touch concurrently running tests.
+        fuzz.seed = 777;
+        let dir = std::env::temp_dir().join("ds3r_fuzz_quarantine_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = crate::store::ExperimentStore::open(&dir).unwrap();
+        let ctx = StoreCtx {
+            store: store.clone(),
+            workload_digest: "wd".into(),
+        };
+        let opts = TournamentOpts {
+            schedulers: vec!["etf".into(), "rr".into()],
+            threads: 2,
+            repro_dir: None,
+            inject_label: None,
+            store: Some(ctx),
+        };
+        let _g = faultpoint::Armed::new(
+            faultpoint::sites::SWEEP_POINT,
+            "etf@fuzz-s777",
+            faultpoint::Fault::Panic,
+        );
+        // Abort policy: the injected panic fails the whole run.
+        let err =
+            run_tournament(&p, &apps, &fuzz, &opts).unwrap_err();
+        assert!(
+            err.to_string().contains("etf@fuzz-s777"),
+            "abort error must name the failing cell: {err}"
+        );
+        // Quarantine policy: rr survives, etf cells are dropped and
+        // recorded.
+        let quarantine =
+            FailPolicy::Quarantine { max_failures: None };
+        let (report, counters, failures) = run_tournament_with_policy(
+            &p, &apps, &fuzz, &opts, &quarantine,
+        )
+        .unwrap();
+        assert_eq!(report.cells.len(), 2, "{:?}", report.cells);
+        assert!(report.cells.iter().all(|c| c.scheduler == "rr"));
+        assert_eq!(failures.quarantined(), 2);
+        assert!(failures.failed.iter().all(|f| f.kind == "panic"));
+        assert_eq!(counters.get("runs"), 2);
+        // A warm rerun serves the healthy cells from the store and
+        // quarantines the failing ones again — failed cells were
+        // never cached.
+        let (r2, c2, f2) = run_tournament_with_policy(
+            &p, &apps, &fuzz, &opts, &quarantine,
+        )
+        .unwrap();
+        assert_eq!(r2, report);
+        assert_eq!(
+            c2.to_json().to_string(),
+            counters.to_json().to_string()
+        );
+        assert_eq!(f2.quarantined(), 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -5,7 +5,11 @@
 //!   fanned out over reusable per-thread simulation workers via
 //!   [`crate::coordinator::parallel_map_pooled`].
 //!   Results aggregate in input order, so a parallel collection is
-//!   **bit-identical** to a serial one.
+//!   **bit-identical** to a serial one.  Panic containment comes from
+//!   the pooled primitive itself: a panicking grid point surfaces as
+//!   an ordinary per-point error (and its worker is discarded and
+//!   rebuilt), never a process abort — see
+//!   [`crate::coordinator::PointOutcome`].
 //! * [`train_policy`] — DAgger loop: round 0 clones the oracle's
 //!   behaviour; each later round collects under the *current* policy
 //!   (oracle labels), aggregates, and retrains on everything so far.

@@ -71,6 +71,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dse;
 pub mod dtpm;
+pub mod faultpoint;
 pub mod fuzz;
 pub mod jobgen;
 pub mod learn;
@@ -113,6 +114,11 @@ pub enum Error {
     Runtime(String),
     Json(String),
     Io(std::io::Error),
+    /// A broken internal invariant (e.g. a fan-out slot left unfilled).
+    /// Unlike the other variants this never blames user input; it is
+    /// returned instead of panicking so a campaign can quarantine the
+    /// point and keep going.
+    Internal(String),
 }
 
 impl std::fmt::Display for Error {
@@ -126,6 +132,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
         }
     }
 }

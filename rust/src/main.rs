@@ -28,7 +28,15 @@ fn main() {
     });
     ds3r::telemetry::global().flush();
     match result {
-        Ok(text) => print!("{text}"),
+        Ok(text) => {
+            print!("{text}");
+            // Degraded success: the campaign completed but quarantined
+            // failed points (--fail-policy quarantine).  Exit codes:
+            // 0 full success, 1 hard error, 2 partial success.
+            if cli::partial_failure() {
+                std::process::exit(2);
+            }
+        }
         Err(e) => {
             eprintln!("error: {e}");
             std::process::exit(1);

@@ -793,11 +793,35 @@ impl SimWorker {
         self.schedule_next_arrival();
         self.events.push(self.cfg.dtpm.epoch_us, Event::DtpmEpoch);
 
+        // Deterministic watchdog: count event-loop iterations (never
+        // wall clock) against the configured step budget, so an
+        // over-budget verdict is bit-reproducible across machines and
+        // thread counts.  Disabled (budget 0) costs one u64 compare
+        // per iteration.  An armed SlowLoop fault pre-charges the
+        // counter, simulating a runaway point without actually looping.
+        let budget = self.cfg.step_budget;
+        let mut steps: u64 = if budget != 0 {
+            crate::faultpoint::slow_penalty(
+                crate::faultpoint::sites::SIM_LOOP,
+                &self.cfg.scheduler,
+            )
+        } else {
+            0
+        };
+
         while let Some((at, ev)) = self.events.pop() {
             debug_assert!(at + 1e-9 >= self.now, "time went backwards");
             self.now = at;
             if self.now > self.cfg.max_sim_us {
                 break;
+            }
+            if budget != 0 {
+                steps += 1;
+                if steps >= budget {
+                    self.report.timed_out = true;
+                    self.report.watchdog_steps = steps;
+                    break;
+                }
             }
             match ev {
                 Event::JobArrival { app } => {

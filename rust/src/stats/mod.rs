@@ -136,6 +136,14 @@ pub struct SimReport {
     /// affecting simulated behaviour.
     pub build_reused: bool,
 
+    /// Watchdog verdict: true iff the run's deterministic step budget
+    /// (`SimConfig::step_budget`) was exhausted and the event loop
+    /// stopped early.  Depends only on the event sequence, never on
+    /// wall clock, so the verdict is bit-reproducible.
+    pub timed_out: bool,
+    /// Steps the watchdog had counted when it tripped (0 otherwise).
+    pub watchdog_steps: u64,
+
     pub scheduler_report: Vec<String>,
     pub gantt: Vec<GanttEntry>,
     pub trace: Vec<EpochTrace>,
@@ -288,6 +296,12 @@ impl SimReport {
                 self.sched_decisions, self.sched_fallbacks
             ));
         }
+        if self.timed_out {
+            s.push_str(&format!(
+                "  WATCHDOG: step budget exhausted after {} steps\n",
+                self.watchdog_steps
+            ));
+        }
         for line in &self.scheduler_report {
             s.push_str(&format!("  {line}\n"));
         }
@@ -428,6 +442,15 @@ impl SimReport {
                         .collect(),
                 ),
             );
+        // Emitted only when tripped so budget-less reports (and their
+        // golden fixtures) are unchanged.
+        if self.timed_out {
+            j.set("timed_out", Json::Bool(true));
+            j.set(
+                "watchdog_steps",
+                Json::Num(self.watchdog_steps as f64),
+            );
+        }
         if !self.phases.is_empty() {
             j.set("scenario", Json::Str(self.scenario.clone()));
             j.set(
@@ -893,6 +916,165 @@ impl StoreVerifySummary {
     }
 }
 
+/// Outcome of `ds3r store fsck`: crash-damage triage.  Unparseable
+/// manifest/point files are moved (never deleted) into
+/// `<store>/quarantine/`, a torn trailing index append is dropped, and
+/// index rows pointing at quarantined or missing manifests are removed
+/// — so a subsequent `store verify` passes on what remains.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StoreFsckSummary {
+    /// Manifest files that parsed and kept their place.
+    pub manifests_kept: usize,
+    /// Manifest files moved to `quarantine/` (unparseable JSON).
+    pub manifests_quarantined: usize,
+    /// Point files that parsed and kept their place.
+    pub points_kept: usize,
+    /// Point files moved to `quarantine/` (unparseable JSON).
+    pub points_quarantined: usize,
+    /// Index rows dropped (manifest quarantined or file missing).
+    pub index_rows_dropped: usize,
+    /// Orphaned manifest files (written but never indexed) re-indexed.
+    pub reindexed: usize,
+    /// Whether a torn trailing `index.jsonl` line was salvaged away.
+    pub index_tail_salvaged: bool,
+}
+
+impl StoreFsckSummary {
+    /// True when fsck found nothing to repair.
+    pub fn clean(&self) -> bool {
+        self.manifests_quarantined == 0
+            && self.points_quarantined == 0
+            && self.index_rows_dropped == 0
+            && self.reindexed == 0
+            && !self.index_tail_salvaged
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "manifests_kept",
+            Json::Num(self.manifests_kept as f64),
+        )
+        .set(
+            "manifests_quarantined",
+            Json::Num(self.manifests_quarantined as f64),
+        )
+        .set("points_kept", Json::Num(self.points_kept as f64))
+        .set(
+            "points_quarantined",
+            Json::Num(self.points_quarantined as f64),
+        )
+        .set(
+            "index_rows_dropped",
+            Json::Num(self.index_rows_dropped as f64),
+        )
+        .set("reindexed", Json::Num(self.reindexed as f64))
+        .set(
+            "index_tail_salvaged",
+            Json::Bool(self.index_tail_salvaged),
+        )
+        .set("clean", Json::Bool(self.clean()));
+        j
+    }
+}
+
+/// One grid point quarantined under a degraded-mode fail policy.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FailedPoint {
+    /// Canonical input-order index of the point in its grid.
+    pub index: usize,
+    /// Point label (`"{scheduler}@{rate}"`, scenario name, cell id).
+    pub label: String,
+    /// Failure class: `panic`, `timeout` or `error`.
+    pub kind: String,
+    /// Panic message, watchdog step count, or error text.
+    pub detail: String,
+}
+
+/// Degraded-mode summary of a quarantined campaign: how many points
+/// the grid attempted and exactly which ones failed, in canonical
+/// input order — a deterministic function of (config, seed), identical
+/// for any thread count (`rust/tests/integration_fault.rs` pins this).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FailureReport {
+    /// Grid points attempted (healthy + quarantined).
+    pub total: usize,
+    /// Quarantined points, in input order.
+    pub failed: Vec<FailedPoint>,
+}
+
+impl FailureReport {
+    pub fn new(total: usize) -> FailureReport {
+        FailureReport { total, failed: Vec::new() }
+    }
+
+    pub fn record(
+        &mut self,
+        index: usize,
+        label: String,
+        kind: &str,
+        detail: String,
+    ) {
+        self.failed.push(FailedPoint {
+            index,
+            label,
+            kind: kind.to_string(),
+            detail,
+        });
+    }
+
+    /// True when every point succeeded.
+    pub fn is_clean(&self) -> bool {
+        self.failed.is_empty()
+    }
+
+    pub fn quarantined(&self) -> usize {
+        self.failed.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("total", Json::Num(self.total as f64))
+            .set("quarantined", Json::Num(self.quarantined() as f64))
+            .set(
+                "failed",
+                Json::Arr(
+                    self.failed
+                        .iter()
+                        .map(|p| {
+                            let mut jp = Json::obj();
+                            jp.set("index", Json::Num(p.index as f64))
+                                .set("label", Json::Str(p.label.clone()))
+                                .set("kind", Json::Str(p.kind.clone()))
+                                .set(
+                                    "detail",
+                                    Json::Str(p.detail.clone()),
+                                );
+                            jp
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    /// Human rendering for the CLI's degraded-mode footer.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "quarantined {}/{} points:\n",
+            self.quarantined(),
+            self.total
+        );
+        for p in &self.failed {
+            s.push_str(&format!(
+                "  [{}] {} ({}): {}\n",
+                p.index, p.label, p.kind, p.detail
+            ));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1052,5 +1234,41 @@ mod tests {
         let p = Platform::table2_soc();
         let out = r.gantt_ascii(&p, &[], (0.0, 100.0), 60);
         assert!(out.contains("no gantt"));
+    }
+
+    #[test]
+    fn failure_report_records_and_serializes_in_order() {
+        let mut fr = FailureReport::new(10);
+        assert!(fr.is_clean());
+        fr.record(3, "etf@6".into(), "panic", "boom".into());
+        fr.record(7, "met@2".into(), "timeout", "5000 steps".into());
+        assert!(!fr.is_clean());
+        assert_eq!(fr.quarantined(), 2);
+        let j = fr.to_json();
+        assert_eq!(j.get("total").unwrap().as_f64(), Some(10.0));
+        assert_eq!(j.get("quarantined").unwrap().as_f64(), Some(2.0));
+        let failed = j.get("failed").unwrap().as_arr().unwrap();
+        assert_eq!(failed[0].get("index").unwrap().as_f64(), Some(3.0));
+        assert_eq!(
+            failed[1].get("kind").unwrap().as_str(),
+            Some("timeout")
+        );
+        let s = fr.summary();
+        assert!(s.contains("2/10"), "{s}");
+        assert!(s.contains("etf@6"), "{s}");
+    }
+
+    #[test]
+    fn fsck_summary_clean_flag() {
+        let mut f = StoreFsckSummary::default();
+        assert!(f.clean());
+        f.index_tail_salvaged = true;
+        assert!(!f.clean());
+        let j = f.to_json();
+        assert_eq!(j.get("clean"), Some(&Json::Bool(false)));
+        assert_eq!(
+            j.get("index_tail_salvaged"),
+            Some(&Json::Bool(true))
+        );
     }
 }

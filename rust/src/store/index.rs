@@ -72,29 +72,68 @@ pub struct Index {
     path: PathBuf,
     rows: Vec<IndexRow>,
     keys: BTreeSet<String>,
+    /// Whether [`Index::open`] dropped a torn trailing line — the
+    /// signature of a crash mid-append.  `store fsck` reports it.
+    salvaged_tail: bool,
 }
 
 impl Index {
     /// Load the index at `path` (an absent file is an empty index).
+    ///
+    /// Crash-safe: appends are the only non-atomic writes the store
+    /// performs, so a crash can tear exactly one line — the last one.
+    /// An unparseable **final** non-empty line is therefore salvaged
+    /// (dropped, the file rewritten with the intact rows, a
+    /// diagnostic emitted); an unparseable line anywhere *else*
+    /// signals real corruption and still fails hard (`store fsck`
+    /// quarantines such files).
     pub fn open(path: &Path) -> Result<Index> {
         let mut idx = Index {
             path: path.to_path_buf(),
             rows: Vec::new(),
             keys: BTreeSet::new(),
+            salvaged_tail: false,
         };
         if path.exists() {
             let text = std::fs::read_to_string(path)?;
-            for line in text.lines() {
-                let line = line.trim();
-                if line.is_empty() {
-                    continue;
+            let lines: Vec<&str> = text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty())
+                .collect();
+            let last = lines.len().wrapping_sub(1);
+            for (i, line) in lines.iter().enumerate() {
+                let parsed = Json::parse(line)
+                    .and_then(|j| IndexRow::from_json(&j));
+                match parsed {
+                    Ok(row) => {
+                        idx.keys.insert(row.key.clone());
+                        idx.rows.push(row);
+                    }
+                    Err(e) if i == last => {
+                        crate::telemetry::diag("store", || {
+                            format!(
+                                "index: dropped torn trailing line \
+                                 ({e})"
+                            )
+                        });
+                        idx.salvaged_tail = true;
+                    }
+                    Err(e) => return Err(e),
                 }
-                let row = IndexRow::from_json(&Json::parse(line)?)?;
-                idx.keys.insert(row.key.clone());
-                idx.rows.push(row);
+            }
+            if idx.salvaged_tail {
+                // Rewrite without the torn tail so the next append
+                // starts on a clean line.
+                idx.rewrite(|_| true)?;
             }
         }
         Ok(idx)
+    }
+
+    /// Whether opening this index dropped a torn trailing line.
+    pub fn salvaged_tail(&self) -> bool {
+        self.salvaged_tail
     }
 
     pub fn rows(&self) -> &[IndexRow] {
@@ -174,6 +213,61 @@ mod tests {
         assert_eq!(idx2.rows(), idx.rows());
         assert!(idx2.contains("a") && idx2.contains("b"));
 
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_trailing_line_is_salvaged_and_the_file_healed() {
+        let dir =
+            std::env::temp_dir().join("ds3r_store_index_torn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let mut idx = Index::open(&path).unwrap();
+        idx.append(row("a", 1)).unwrap();
+        idx.append(row("b", 2)).unwrap();
+        // Simulate a crash mid-append: a truncated JSON fragment with
+        // no trailing newline.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"key\":\"c\",\"cmd\":\"swe");
+        std::fs::write(&path, &text).unwrap();
+
+        let idx2 = Index::open(&path).unwrap();
+        assert!(idx2.salvaged_tail());
+        assert_eq!(idx2.rows().len(), 2);
+        assert!(idx2.contains("a") && idx2.contains("b"));
+
+        // The salvage rewrote the file: a reopen is clean, and a new
+        // append lands on its own line.
+        let mut idx3 = Index::open(&path).unwrap();
+        assert!(!idx3.salvaged_tail());
+        assert!(idx3.append(row("c", 3)).unwrap());
+        let idx4 = Index::open(&path).unwrap();
+        assert_eq!(idx4.rows().len(), 3);
+        assert!(idx4.contains("c"));
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mid_file_corruption_still_fails_hard() {
+        let dir =
+            std::env::temp_dir().join("ds3r_store_index_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.jsonl");
+        std::fs::write(
+            &path,
+            format!(
+                "not json at all\n{}\n",
+                row("a", 1).to_json().to_string()
+            ),
+        )
+        .unwrap();
+        assert!(
+            Index::open(&path).is_err(),
+            "corruption before the final line must not be salvaged"
+        );
         let _ = std::fs::remove_file(&path);
     }
 

@@ -38,7 +38,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::app::AppGraph;
 use crate::config::SimConfig;
-use crate::stats::{StoreGcSummary, StoreVerifySummary};
+use crate::stats::{
+    StoreFsckSummary, StoreGcSummary, StoreVerifySummary,
+};
 use crate::telemetry::{self, Counters, Event, Sink};
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -269,12 +271,44 @@ impl ExperimentStore {
     }
 
     /// Atomic (write-then-rename) JSON file write, so a killed
-    /// campaign never leaves a truncated entry behind.
+    /// campaign never leaves a truncated entry behind.  Transient IO
+    /// errors get a bounded, jitter-free retry (fixed attempt count,
+    /// deterministic linear backoff): flaky NFS or an interrupted
+    /// syscall doesn't abort a campaign, while a persistently failing
+    /// disk still surfaces the last error.  The
+    /// [`crate::faultpoint::sites::STORE_WRITE`] site (label = file
+    /// name) injects synthetic failures here.
     fn write_json(&self, path: &Path, j: &Json) -> Result<()> {
+        const ATTEMPTS: u32 = 3;
         let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, j.to_string_pretty())?;
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        let text = j.to_string_pretty();
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let mut last = None;
+        for attempt in 0..ATTEMPTS {
+            if attempt > 0 {
+                // Deterministic (jitter-free) linear backoff.
+                std::thread::sleep(std::time::Duration::from_millis(
+                    5 * attempt as u64,
+                ));
+            }
+            let injected = crate::faultpoint::take_io_error(
+                crate::faultpoint::sites::STORE_WRITE,
+                &name,
+            );
+            let res = match injected {
+                Some(e) => Err(e),
+                None => std::fs::write(&tmp, &text)
+                    .and_then(|()| std::fs::rename(&tmp, path)),
+            };
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one write attempt ran").into())
     }
 
     // ---- point cache ------------------------------------------------------
@@ -479,6 +513,100 @@ impl ExperimentStore {
                 Err(e) => summary
                     .mismatches
                     .push(format!("point {stem} unreadable: {e}")),
+            }
+        }
+        Ok(summary)
+    }
+
+    /// Crash/corruption recovery: quarantine every manifest or point
+    /// file that is unparseable — or whose content re-hashes to a
+    /// different key than its filename claims — into
+    /// `<store>/quarantine/`, re-index orphaned manifests, and drop
+    /// index rows whose manifest is gone.  Nothing is deleted: the
+    /// quarantined originals stay on disk for inspection.  After
+    /// `fsck`, [`ExperimentStore::verify`] passes on what remains.
+    ///
+    /// A torn trailing `index.jsonl` line is already salvaged by
+    /// [`ExperimentStore::open`]; the summary reports whether that
+    /// happened for this handle.
+    pub fn fsck(&self) -> Result<StoreFsckSummary> {
+        let mut summary = StoreFsckSummary::default();
+        let qdir = self.root.join("quarantine");
+        let quarantine = |f: &Path| -> Result<()> {
+            std::fs::create_dir_all(&qdir)?;
+            let name = f
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            std::fs::rename(f, qdir.join(name))?;
+            Ok(())
+        };
+
+        // Manifests: quarantine undecodable / key-drifted files,
+        // re-index surviving orphans.
+        let mut manifest_files: Vec<PathBuf> = std::fs::read_dir(
+            self.root.join("manifests"),
+        )?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+        manifest_files.sort();
+        if let Ok(mut idx) = self.index.lock() {
+            summary.index_tail_salvaged = idx.salvaged_tail();
+            for f in &manifest_files {
+                let stem = f
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default();
+                let m = Json::parse_file(f)
+                    .and_then(|j| Manifest::from_json(&j));
+                match m {
+                    Ok(m) if m.key() == stem => {
+                        summary.manifests_kept += 1;
+                        if idx.append(IndexRow::from_manifest(&m))? {
+                            summary.reindexed += 1;
+                        }
+                    }
+                    _ => {
+                        telemetry::diag("store", || {
+                            format!(
+                                "fsck: quarantined manifest {stem}"
+                            )
+                        });
+                        quarantine(f)?;
+                        summary.manifests_quarantined += 1;
+                    }
+                }
+            }
+            // Drop rows whose manifest file is gone (quarantined just
+            // now, or lost to a crash).
+            let manifests_dir = self.root.join("manifests");
+            summary.index_rows_dropped = idx.rewrite(|r| {
+                manifests_dir.join(format!("{}.json", r.key)).exists()
+            })?;
+        }
+
+        // Points: quarantine undecodable / key-drifted entries.
+        for f in self.point_files()? {
+            let stem = f
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            let e = Json::parse_file(&f)
+                .and_then(|j| PointEntry::from_json(&j));
+            let sound = e.is_ok_and(|e| {
+                e.key == stem
+                    && point_key(&e.config_hash, &e.workload_digest)
+                        == e.key
+            });
+            if sound {
+                summary.points_kept += 1;
+            } else {
+                telemetry::diag("store", || {
+                    format!("fsck: quarantined point {stem}")
+                });
+                quarantine(&f)?;
+                summary.points_quarantined += 1;
             }
         }
         Ok(summary)
@@ -794,6 +922,101 @@ mod tests {
         let v = store.verify().unwrap();
         assert!(!v.ok());
         assert_eq!(v.mismatches.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsck_quarantines_corruption_and_verify_passes_after() {
+        let (dir, store) = temp_store("fsck");
+        // One healthy manifest + referenced point.
+        let ch = "deadbeefdeadbeef";
+        let wd = "feedfacefeedface";
+        let pkey = point_key(ch, wd);
+        let mut good = entry(&pkey, "sweep");
+        good.key = pkey.clone();
+        store.put_point(&good).unwrap();
+        let m1 = Manifest {
+            cmd: "sweep".into(),
+            config_hash: ch.into(),
+            workload_digest: wd.into(),
+            seed: 1,
+            scheduler: "etf".into(),
+            git: None,
+            counters: Counters::new(),
+            point_keys: vec![pkey.clone()],
+            result: Json::Null,
+        };
+        store.put_manifest(&m1).unwrap();
+        // A second manifest, then corrupt its file in place (torn
+        // write / bit-rot).
+        let mut m2 = m1.clone();
+        m2.seed = 2;
+        let k2 = store.put_manifest(&m2).unwrap();
+        std::fs::write(
+            dir.join("manifests").join(format!("{k2}.json")),
+            "{ torn",
+        )
+        .unwrap();
+        // And one garbage point file.
+        std::fs::write(
+            dir.join("points").join("0000000000000bad.json"),
+            "not json at all",
+        )
+        .unwrap();
+
+        let s = store.fsck().unwrap();
+        assert!(!s.clean());
+        assert_eq!(s.manifests_kept, 1);
+        assert_eq!(s.manifests_quarantined, 1);
+        assert_eq!(s.points_kept, 1);
+        assert_eq!(s.points_quarantined, 1);
+        assert_eq!(s.index_rows_dropped, 1);
+        // Quarantined originals are preserved, not deleted.
+        assert!(dir
+            .join("quarantine")
+            .join(format!("{k2}.json"))
+            .exists());
+        assert!(dir
+            .join("quarantine")
+            .join("0000000000000bad.json")
+            .exists());
+        // What remains verifies clean.
+        let v = store.verify().unwrap();
+        assert!(v.ok(), "post-fsck verify: {:?}", v.mismatches);
+        assert_eq!(store.manifests().len(), 1);
+        // A second fsck finds nothing left to repair.
+        let s2 = store.fsck().unwrap();
+        assert!(s2.clean(), "{s2:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_writes_retry_through_injected_transient_errors() {
+        let (dir, store) = temp_store("retry");
+        let ch = "0123456789abcdef";
+        let wd = "fedcba9876543210";
+        let key = point_key(ch, wd);
+        let mut e = entry(&key, "sweep");
+        e.key = key.clone();
+        e.config_hash = ch.into();
+        e.workload_digest = wd.into();
+        let fname = format!("{key}.json");
+        // Two transient failures: the third attempt lands the write.
+        let _g = crate::faultpoint::Armed::new(
+            crate::faultpoint::sites::STORE_WRITE,
+            &fname,
+            crate::faultpoint::Fault::IoError { times: 2 },
+        );
+        store.put_point(&e).unwrap();
+        assert_eq!(store.lookup(&key, "sweep"), Some(e.clone()));
+        // More failures than attempts: the write gives up with the
+        // last error.
+        crate::faultpoint::arm(
+            crate::faultpoint::sites::STORE_WRITE,
+            &fname,
+            crate::faultpoint::Fault::IoError { times: 9 },
+        );
+        assert!(store.put_point(&e).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

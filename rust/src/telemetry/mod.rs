@@ -136,6 +136,20 @@ pub enum Event {
         /// Top-ranked scheduler (empty when no standings).
         best: String,
     },
+    /// One grid point quarantined under a degraded-mode fail policy
+    /// (deterministic: emitted post-collection in input order, and the
+    /// verdict — panic message, watchdog step count, error text — is a
+    /// function of (config, seed), never of wall clock or thread
+    /// interleaving).
+    PointFailed {
+        /// Campaign kind (`sweep`, `scenario`, `fuzz`, `dse`).
+        what: String,
+        /// Point label (`"{scheduler}@{rate}"`, scenario name, ...).
+        label: String,
+        /// Failure class: `panic`, `timeout` or `error`.
+        kind: String,
+        detail: String,
+    },
     /// The experiment store finalized a manifest for this invocation
     /// (deterministic: the key hashes only config/workload/seed
     /// identity, so warm and cold reruns emit identical bytes).
@@ -176,6 +190,7 @@ impl Event {
             Event::BenchRecord { .. } => "bench_record",
             Event::FuzzCase { .. } => "fuzz_case",
             Event::TournamentSummary { .. } => "tournament_summary",
+            Event::PointFailed { .. } => "point_failed",
             Event::ManifestWritten { .. } => "manifest_written",
             Event::Diagnostic { .. } => "diagnostic",
             Event::Span { .. } => "span",
@@ -304,6 +319,12 @@ impl Event {
                     .set("cells", Json::Num(*cells as f64))
                     .set("violations", Json::Num(*violations as f64))
                     .set("best", Json::Str(best.clone()));
+            }
+            Event::PointFailed { what, label, kind, detail } => {
+                j.set("what", Json::Str(what.clone()))
+                    .set("label", Json::Str(label.clone()))
+                    .set("kind", Json::Str(kind.clone()))
+                    .set("detail", Json::Str(detail.clone()));
             }
             Event::ManifestWritten { cmd, key } => {
                 j.set("cmd", Json::Str(cmd.clone()))

@@ -1,0 +1,255 @@
+//! Fault-isolated campaign execution, end to end: panic quarantine
+//! through the pooled sweep primitive, the deterministic step-budget
+//! watchdog, never-cache semantics for failed points, and crash-safe
+//! store recovery (torn index tail + `fsck`).
+//!
+//! Every armed fault uses a label no other test sweeps (rates 3.375 /
+//! 4.625) — the faultpoint registry is process-global and cargo runs
+//! tests in parallel threads.
+
+use std::sync::Arc;
+
+use ds3r::app::suite;
+use ds3r::config::SimConfig;
+use ds3r::coordinator::{self, FailPolicy};
+use ds3r::faultpoint::{sites, Armed, Fault};
+use ds3r::platform::Platform;
+use ds3r::sim::Simulation;
+use ds3r::store::{ExperimentStore, Manifest, StoreCtx};
+use ds3r::telemetry::{Counters, MemSink, Telemetry};
+use ds3r::util::json::Json;
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.max_jobs = 25;
+    cfg.warmup_jobs = 3;
+    cfg.seed = 42;
+    cfg
+}
+
+fn small_apps() -> Vec<ds3r::app::AppGraph> {
+    vec![suite::wifi_tx(suite::WifiParams { symbols: 2 })]
+}
+
+#[test]
+fn injected_panic_quarantines_identically_across_thread_counts() {
+    let platform = Platform::table2_soc();
+    let apps = small_apps();
+    let cfg = small_cfg();
+    let points =
+        coordinator::fig3_points(&["met", "etf"], &[3.375], cfg.seed);
+    let _fault =
+        Armed::new(sites::SWEEP_POINT, "met@3.375", Fault::Panic);
+
+    let run = |threads: usize| {
+        let mem = Arc::new(MemSink::new());
+        let tel = Telemetry::new(mem.clone());
+        let (res, _counters, failures) =
+            coordinator::run_sweep_quarantined(
+                &platform,
+                &apps,
+                &cfg,
+                &points,
+                threads,
+                &tel,
+                None,
+                FailPolicy::Quarantine { max_failures: None },
+            )
+            .unwrap();
+        let rendered: Vec<String> =
+            res.iter().map(|r| r.to_json().to_string()).collect();
+        (rendered, failures, mem.dump())
+    };
+
+    let (res1, fail1, stream1) = run(1);
+    let (res8, fail8, stream8) = run(8);
+
+    // Healthy results survive, in input order, byte-identical for any
+    // thread count; the panicked point is quarantined in both runs.
+    assert_eq!(res1.len(), 1, "etf survives, met is quarantined");
+    assert_eq!(res1, res8);
+    assert_eq!(fail1, fail8);
+    assert_eq!(fail1.quarantined(), 1);
+    assert_eq!(fail1.failed[0].label, "met@3.375");
+    assert_eq!(fail1.failed[0].kind, "panic");
+    assert!(
+        fail1.failed[0].detail.contains("injected panic"),
+        "{}",
+        fail1.failed[0].detail
+    );
+
+    // The default telemetry stream — including the point_failed event
+    // — is byte-identical between 1 and 8 worker threads.
+    assert_eq!(stream1, stream8);
+    assert!(stream1.contains("point_failed"), "{stream1}");
+    assert!(stream1.contains("met@3.375"), "{stream1}");
+}
+
+#[test]
+fn watchdog_step_budget_trips_bit_reproducibly() {
+    let platform = Platform::table2_soc();
+    let apps = small_apps();
+    let mut cfg = small_cfg();
+    cfg.max_jobs = 40;
+    cfg.step_budget = 100;
+
+    let r1 = Simulation::build(&platform, &apps, &cfg).unwrap().run();
+    let r2 = Simulation::build(&platform, &apps, &cfg).unwrap().run();
+    assert!(r1.timed_out, "40 jobs cannot finish in 100 loop steps");
+    // The counter is event-loop iterations, never wall clock: it
+    // trips at exactly the budget, on every host, every run.
+    assert_eq!(r1.watchdog_steps, 100);
+    assert_eq!(r1.to_json().to_string(), r2.to_json().to_string());
+    assert!(r1.summary().contains("WATCHDOG"), "{}", r1.summary());
+
+    // Under abort policy a tripped watchdog fails the campaign...
+    let points =
+        coordinator::fig3_points(&["met", "etf"], &[1.5], cfg.seed);
+    let tel = Telemetry::disabled();
+    let err = coordinator::run_sweep_quarantined(
+        &platform,
+        &apps,
+        &cfg,
+        &points,
+        2,
+        &tel,
+        None,
+        FailPolicy::Abort,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("step budget"), "{err}");
+
+    // ...under quarantine both over-budget points are dropped with a
+    // deterministic "timeout" verdict.
+    let (res, _counters, failures) = coordinator::run_sweep_quarantined(
+        &platform,
+        &apps,
+        &cfg,
+        &points,
+        2,
+        &tel,
+        None,
+        FailPolicy::Quarantine { max_failures: None },
+    )
+    .unwrap();
+    assert!(res.is_empty());
+    assert_eq!(failures.quarantined(), 2);
+    assert!(failures.failed.iter().all(|f| f.kind == "timeout"));
+}
+
+#[test]
+fn failed_points_are_never_cached_and_heal_after_disarm() {
+    let platform = Platform::table2_soc();
+    let apps = small_apps();
+    let cfg = small_cfg();
+    let points =
+        coordinator::fig3_points(&["met", "ilp"], &[4.625], cfg.seed);
+    let dir = std::env::temp_dir().join("ds3r_it_fault_store");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let run = |policy: FailPolicy| {
+        // A fresh handle per campaign: session hit/miss counters and
+        // the on-disk cache behave exactly like separate processes.
+        let store = ExperimentStore::open(&dir).unwrap();
+        let ctx = StoreCtx {
+            store: store.clone(),
+            workload_digest: "wd-it-fault".into(),
+        };
+        let tel = Telemetry::disabled();
+        let (res, _counters, failures) =
+            coordinator::run_sweep_quarantined(
+                &platform,
+                &apps,
+                &cfg,
+                &points,
+                2,
+                &tel,
+                Some(&ctx),
+                policy,
+            )
+            .unwrap();
+        let rendered: Vec<String> =
+            res.iter().map(|r| r.to_json().to_string()).collect();
+        (rendered, failures, store.session_hits())
+    };
+    let quarantine = FailPolicy::Quarantine { max_failures: None };
+
+    let fault =
+        Armed::new(sites::SWEEP_POINT, "ilp@4.625", Fault::Panic);
+    let (cold, fail_cold, _) = run(quarantine);
+    assert_eq!(cold.len(), 1);
+    assert_eq!(fail_cold.quarantined(), 1);
+    assert_eq!(fail_cold.failed[0].label, "ilp@4.625");
+
+    // Warm rerun, fault still armed: the healthy point is served from
+    // the cache, the failed one was never written and fails again.
+    let (warm, fail_warm, hits) = run(quarantine);
+    assert_eq!(hits, 1, "only the healthy point was cached");
+    assert_eq!(warm, cold);
+    assert_eq!(fail_warm, fail_cold);
+
+    // Disarmed, the campaign heals: the quarantined point simulates
+    // now and the healthy one still matches the cold run byte for
+    // byte.
+    drop(fault);
+    let (healed, fail_healed, hits) = run(quarantine);
+    assert_eq!(hits, 1);
+    assert!(fail_healed.is_clean());
+    assert_eq!(healed.len(), 2);
+    assert!(healed.contains(&cold[0]));
+}
+
+#[test]
+fn store_open_salvages_torn_index_and_fsck_recovers_corruption() {
+    let dir = std::env::temp_dir().join("ds3r_it_fault_salvage");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ExperimentStore::open(&dir).unwrap();
+    let m1 = Manifest {
+        cmd: "sweep".into(),
+        config_hash: "cafecafecafecafe".into(),
+        workload_digest: "wdwdwdwdwdwdwdwd".into(),
+        seed: 7,
+        scheduler: "etf".into(),
+        git: None,
+        counters: Counters::new(),
+        point_keys: Vec::new(),
+        result: Json::obj(),
+    };
+    let k1 = store.put_manifest(&m1).unwrap();
+    drop(store);
+
+    // Crash mid-append: a truncated JSON fragment ends the index.
+    let idx = dir.join("index.jsonl");
+    let mut text = std::fs::read_to_string(&idx).unwrap();
+    text.push_str("{\"key\":\"zzz\",\"cmd\":\"swe");
+    std::fs::write(&idx, &text).unwrap();
+    // And a corrupt manifest file next to the intact one.
+    std::fs::write(
+        dir.join("manifests").join("feedfeedfeedfeed.json"),
+        "{ torn",
+    )
+    .unwrap();
+
+    // Open salvages the torn tail; the intact manifest is intact.
+    let store = ExperimentStore::open(&dir).unwrap();
+    let manifests = store.manifests();
+    assert_eq!(manifests.len(), 1);
+    assert_eq!(manifests[0].key(), k1);
+
+    // fsck quarantines the unparseable manifest (preserved, not
+    // deleted) and reports the salvaged tail; verify passes on what
+    // remains, and a second fsck is clean.
+    let s = store.fsck().unwrap();
+    assert!(s.index_tail_salvaged);
+    assert_eq!(s.manifests_kept, 1);
+    assert_eq!(s.manifests_quarantined, 1);
+    assert!(dir
+        .join("quarantine")
+        .join("feedfeedfeedfeed.json")
+        .exists());
+    assert!(store.verify().unwrap().ok());
+
+    let store = ExperimentStore::open(&dir).unwrap();
+    assert!(store.fsck().unwrap().clean());
+    let _ = std::fs::remove_dir_all(&dir);
+}
